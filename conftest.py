@@ -1,0 +1,8 @@
+"""Repo-root pytest config: make `python/` importable so
+`pytest python/tests/` works from the repository root (the Makefile runs
+pytest from inside `python/`, where this is a no-op)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

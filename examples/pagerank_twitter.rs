@@ -1,0 +1,64 @@
+//! Distributed PageRank on a synthetic Twitter-followers-like power-law
+//! graph (the paper's headline workload, §VI-E), with the run projected
+//! onto the paper's 64-node EC2 testbed via the simnet cost model.
+//!
+//! Run: `cargo run --release --example pagerank_twitter [scale]`
+
+use sparse_allreduce::apps::pagerank::{serial_pagerank, DistPageRank, PageRankConfig};
+use sparse_allreduce::graph::{DatasetPreset, DatasetSpec};
+use sparse_allreduce::simnet::{simulate_collective, SimParams};
+use sparse_allreduce::util::{human_bytes, human_count};
+
+fn main() {
+    let scale: f64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(0.1);
+    let spec = DatasetSpec::new(DatasetPreset::TwitterFollowers, scale, 42);
+    println!("generating {} at scale {scale}…", spec.name());
+    let graph = spec.generate();
+    println!(
+        "graph: {} vertices, {} edges",
+        human_count(graph.vertices as u64),
+        human_count(graph.num_edges() as u64)
+    );
+
+    // The paper's best 64-node configuration is 16×4; at laptop scale we
+    // run 16 machines as 4×4 and *project* timing to 64 nodes below.
+    let degrees = vec![4, 4];
+    let iters = 10;
+    let mut pr = DistPageRank::new(&graph, degrees.clone(), &PageRankConfig { seed: 42, iters });
+    let t = std::time::Instant::now();
+    pr.run(iters);
+    let wall = t.elapsed();
+    println!(
+        "\n{iters} PageRank iterations on {} machines ({degrees:?}) in {wall:?}",
+        pr.machines()
+    );
+
+    // communication profile of one iteration
+    let trace = &pr.iter_traces[0];
+    println!(
+        "per-iteration communication: {} messages, {}",
+        trace.len(),
+        human_bytes(trace.total_bytes() as u64)
+    );
+
+    // project onto the paper's EC2 testbed (2 Gb/s achieved, 8 ms setup)
+    let sim = simulate_collective(trace, pr.machines(), &SimParams::default());
+    println!(
+        "projected on 2013-EC2 cost model: {:.3}s/iter (comm {:.3}s, merge {:.3}s)",
+        sim.total_secs, sim.comm_secs, sim.compute_secs
+    );
+
+    // sanity: agree with the serial oracle on a few vertices
+    let serial = serial_pagerank(&graph, iters);
+    let mut checked = 0;
+    let mut max_err = 0f32;
+    for v in (0..graph.vertices).step_by(17) {
+        if let Some(score) = pr.score_of(v) {
+            max_err = max_err.max((score - serial[v as usize]).abs());
+            checked += 1;
+        }
+    }
+    println!("\nverified against serial oracle on {checked} vertices, max |err| = {max_err:.2e}");
+    assert!(max_err < 1e-3, "distributed PageRank diverged from the oracle");
+    println!("ok ✓");
+}

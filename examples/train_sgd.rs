@@ -1,0 +1,79 @@
+//! End-to-end three-layer validation: distributed mini-batch SGD on a
+//! 67M-parameter sparse softmax model.
+//!
+//! * **L3 (rust)** — the Sparse Allreduce butterfly with dynamic per-step
+//!   config moves gradients down into owner-sharded model state and fresh
+//!   weights back up (the paper's mini-batch loop, §III-B).
+//! * **L2 (JAX, AOT)** — each worker's dense compute (`softmax-CE loss +
+//!   grad on the gathered sub-model`) executes through the PJRT-compiled
+//!   `artifacts/minibatch_grad.hlo.txt`.
+//! * **L1 (Pallas)** — that artifact's matmuls/softmax are the Pallas
+//!   kernels in `python/compile/kernels/`.
+//!
+//! Model: F = 2²⁰ features × C = 64 classes = **67,108,864 parameters**,
+//! touched sparsely (the whole point of the paper). Run:
+//!
+//!   make artifacts && cargo run --release --example train_sgd [steps]
+//!
+//! Pass `--native` as the 2nd arg to use the pure-Rust engine instead of
+//! the XLA artifact (e.g. when artifacts are not built).
+
+use sparse_allreduce::apps::sgd::{GradEngine, NativeGradEngine, SgdConfig, SynthData, Trainer};
+use sparse_allreduce::runtime::{Runtime, XlaGradEngine};
+use sparse_allreduce::util::human_count;
+
+const FEATURES: i64 = 1 << 20;
+const CLASSES: usize = 64;
+
+fn run<E: GradEngine>(mut trainer: Trainer<E>, steps: usize) {
+    let start = std::time::Instant::now();
+    println!("\n step | loss     | live params | steps/s");
+    println!("------+----------+-------------+--------");
+    for s in 0..steps {
+        let loss = trainer.step();
+        if s < 5 || (s + 1) % 20 == 0 || s + 1 == steps {
+            println!(
+                " {:>4} | {loss:<8.4} | {:>11} | {:.2}",
+                s + 1,
+                human_count(trainer.live_params() as u64),
+                (s + 1) as f64 / start.elapsed().as_secs_f64()
+            );
+        }
+    }
+    let losses = &trainer.losses;
+    let early: f32 = losses[1..6].iter().sum::<f32>() / 5.0;
+    let late: f32 = losses[losses.len() - 5..].iter().sum::<f32>() / 5.0;
+    println!("\nmean loss steps 2-6: {early:.4}  |  last 5 steps: {late:.4}");
+    assert!(late < early, "training failed to reduce the loss");
+    println!("loss decreased ✓  (ln C = {:.4} is the chance floor)", (CLASSES as f32).ln());
+}
+
+fn main() {
+    let steps: usize =
+        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(200);
+    let native = std::env::args().any(|a| a == "--native");
+
+    let degrees = vec![2, 2];
+    let m: usize = degrees.iter().product();
+    let data = SynthData::new(FEATURES, CLASSES, 12, 1.1);
+    let cfg = SgdConfig { classes: CLASSES, batch_per_worker: 64, lr: 0.5, seed: 123 };
+    println!(
+        "model: {} × {} = {} parameters, sharded over {m} workers ({degrees:?} butterfly)",
+        human_count(FEATURES as u64),
+        CLASSES,
+        human_count(FEATURES as u64 * CLASSES as u64)
+    );
+    println!("global batch: {} examples/step, {steps} steps", 64 * m);
+
+    if native {
+        println!("engine: NativeGradEngine (pure rust)");
+        run(Trainer::new(degrees, data, cfg, vec![NativeGradEngine; m]), steps);
+    } else {
+        let rt = Runtime::cpu_default().expect("PJRT CPU client");
+        println!("engine: XlaGradEngine via PJRT ({})", rt.platform());
+        let engines: Vec<XlaGradEngine> = (0..m)
+            .map(|_| XlaGradEngine::new(&rt).expect("load minibatch_grad artifact — run `make artifacts`"))
+            .collect();
+        run(Trainer::new(degrees, data, cfg, engines), steps);
+    }
+}

@@ -1,0 +1,85 @@
+"""AOT lowering: JAX/Pallas (Layers 1–2) -> HLO text -> artifacts/.
+
+HLO *text* is the interchange format (NOT serialized HloModuleProto): jax
+>= 0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Run once via `make artifacts`; the Rust binary is self-contained after.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True: the
+    Rust side unwraps with to_tuple{1,2}())."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_grad_step() -> str:
+    x = jax.ShapeDtypeStruct((model.AOT_B, model.AOT_N), jnp.float32)
+    w = jax.ShapeDtypeStruct((model.AOT_N, model.AOT_C), jnp.float32)
+    y = jax.ShapeDtypeStruct((model.AOT_B, model.AOT_C), jnp.float32)
+
+    def fn(x, w, y):
+        loss, grad = model.grad_step(x, w, y)
+        return loss, grad
+
+    return to_hlo_text(jax.jit(fn).lower(x, w, y))
+
+
+def lower_segment_sum() -> str:
+    idx = jax.ShapeDtypeStruct((model.AOT_SEG_L,), jnp.int32)
+    vals = jax.ShapeDtypeStruct((model.AOT_SEG_L,), jnp.float32)
+
+    def fn(idx, vals):
+        return (model.segment_sum(idx, vals),)
+
+    return to_hlo_text(jax.jit(fn).lower(idx, vals))
+
+
+def lower_pagerank_cell() -> str:
+    q = jax.ShapeDtypeStruct((model.AOT_PR_L,), jnp.float32)
+
+    def fn(q):
+        return (model.pagerank_step(q, float(model.AOT_PR_L)),)
+
+    return to_hlo_text(jax.jit(fn).lower(q))
+
+
+ARTIFACTS = {
+    "minibatch_grad.hlo.txt": lower_grad_step,
+    "segment_sum.hlo.txt": lower_segment_sum,
+    "pagerank_cell.hlo.txt": lower_pagerank_cell,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name, lower in ARTIFACTS.items():
+        path = os.path.join(args.out_dir, name)
+        text = lower()
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {len(text):>9} chars -> {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,144 @@
+"""Layer-1 Pallas kernels for the mini-batch gradient hot-spot.
+
+The SGD compute the paper motivates (§I-A1) has the shape
+``grad = Xᵀ·(softmax(X·W) − Y)``: two matmuls around a row-wise softmax.
+Three kernels, each tiled for VMEM with BlockSpec:
+
+* :func:`matmul` — ``X[B,N] @ W[N,C]`` accumulated over N-tiles. The grid
+  walks (B-tile, N-tile); each step multiplies a ``(bm, bk)`` X tile with a
+  ``(bk, C)`` W tile on the MXU and accumulates into the output block,
+  exactly the HBM↔VMEM schedule a CUDA version would express with
+  threadblock tiles over shared memory (DESIGN.md §Hardware-Adaptation).
+* :func:`softmax_xent` — fused stable-softmax + cross-entropy returning
+  per-example loss and dL/dlogits in one pass over a B-tile.
+* :func:`matmul_at` — ``Xᵀ[N,B] @ dlogits[B,C]`` for the weight gradient,
+  reusing the same accumulation pattern with the N dimension as rows.
+
+All kernels run ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); on a real TPU the same code lowers to MXU ops.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: a (128, 512)x(512, 64) step keeps the working set
+# ≈ (128·512 + 512·64 + 128·64)·4B ≈ 0.4 MB — comfortably inside a TPU
+# core's ~16 MB VMEM with room for double-buffering.
+DEF_BM = 128
+DEF_BK = 512
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One grid step: accumulate an X-tile @ W-tile into the output tile."""
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk"))
+def matmul(x, w, bm=DEF_BM, bk=DEF_BK):
+    """Blocked Pallas matmul: x [B, N] @ w [N, C] -> [B, C]."""
+    b, n = x.shape
+    n2, c = w.shape
+    assert n == n2, f"inner dims mismatch: {n} vs {n2}"
+    bm = min(bm, b)
+    bk = min(bk, n)
+    assert b % bm == 0, f"B={b} not divisible by bm={bm}"
+    assert n % bk == 0, f"N={n} not divisible by bk={bk}"
+    grid = (b // bm, n // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, k: (i, k)),
+            pl.BlockSpec((bk, c), lambda i, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, c), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, c), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def _softmax_xent_kernel(logits_ref, y_ref, loss_ref, dlogits_ref, *, inv_b):
+    """Fused stable softmax + CE for one B-tile."""
+    logits = logits_ref[...]
+    y = y_ref[...]
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    z = jnp.sum(e, axis=-1, keepdims=True)
+    logp = logits - m - jnp.log(z)
+    loss_ref[...] = -jnp.sum(y * logp, axis=-1)
+    dlogits_ref[...] = (e / z - y) * inv_b
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def softmax_xent(logits, y_onehot, bm=DEF_BM):
+    """Per-example CE loss [B] and dL/dlogits [B, C] (mean-loss scaling)."""
+    b, c = logits.shape
+    bm = min(bm, b)
+    assert b % bm == 0
+    grid = (b // bm,)
+    kernel = functools.partial(_softmax_xent_kernel, inv_b=1.0 / b)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, c), lambda i: (i, 0)),
+            pl.BlockSpec((bm, c), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((bm, c), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+            jax.ShapeDtypeStruct((b, c), jnp.float32),
+        ],
+        interpret=True,
+    )(logits, y_onehot)
+
+
+def _matmul_at_kernel(x_ref, d_ref, o_ref):
+    """One grid step of Xᵀ @ dlogits: o[N-tile, C] += x[:, N-tile]ᵀ · d."""
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].T, d_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bb"))
+def matmul_at(x, dlogits, bn=DEF_BK, bb=DEF_BM):
+    """Gradient matmul: xᵀ [N, B] @ dlogits [B, C] -> [N, C], tiled over
+    (N rows, B reduction)."""
+    b, n = x.shape
+    b2, c = dlogits.shape
+    assert b == b2
+    bn = min(bn, n)
+    bb = min(bb, b)
+    assert n % bn == 0 and b % bb == 0
+    grid = (n // bn, b // bb)
+    return pl.pallas_call(
+        _matmul_at_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, bn), lambda i, k: (k, i)),
+            pl.BlockSpec((bb, c), lambda i, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, c), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c), jnp.float32),
+        interpret=True,
+    )(x, dlogits)

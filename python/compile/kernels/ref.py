@@ -1,0 +1,62 @@
+"""Pure-jnp reference oracles for the Pallas kernels (Layer 1 correctness).
+
+Every kernel in this package must agree with its oracle here to float32
+tolerance; `python/tests/test_kernels.py` sweeps shapes with hypothesis.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    """Plain matmul: x [B, N] @ w [N, C] -> [B, C]."""
+    return jnp.matmul(x, w)
+
+
+def softmax_xent_ref(logits, y_onehot):
+    """Softmax cross-entropy.
+
+    Returns (per-example loss [B], dLoss/dlogits [B, C] for MEAN loss,
+    i.e. (softmax(logits) - y) / B).
+    """
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    z = jnp.sum(e, axis=-1, keepdims=True)
+    logp = logits - m - jnp.log(z)
+    loss = -jnp.sum(y_onehot * logp, axis=-1)
+    probs = e / z
+    b = logits.shape[0]
+    dlogits = (probs - y_onehot) / b
+    return loss, dlogits
+
+
+def grad_step_ref(x, w, y_onehot):
+    """Full mini-batch softmax-CE gradient step.
+
+    x [B, N], w [N, C], y_onehot [B, C] ->
+      (mean loss [], grad dL/dw [N, C]).
+    """
+    logits = matmul_ref(x, w)
+    loss, dlogits = softmax_xent_ref(logits, y_onehot)
+    grad = jnp.matmul(x.T, dlogits)
+    return jnp.mean(loss), grad
+
+
+def segment_sum_ref(idx, vals):
+    """Collapse duplicates in a *sorted* index array.
+
+    idx [L] int32 sorted ascending (padding = a large sentinel), vals [L]
+    f32. Returns out [L] where the total of each run of equal indices is
+    stored at the run's FIRST position and all other positions are zero —
+    the collision-compression step of the paper's §III-A tree merge,
+    expressed as a data-parallel kernel.
+    """
+    is_first = jnp.concatenate([jnp.array([True]), idx[1:] != idx[:-1]])
+    run_id = jnp.cumsum(is_first.astype(jnp.int32)) - 1
+    totals = jnp.zeros((idx.shape[0],), vals.dtype).at[run_id].add(vals)
+    return jnp.where(is_first, totals[run_id], jnp.zeros((), vals.dtype))
+
+
+def pagerank_cell_ref(q, n):
+    """Paper eq. 2 teleport update: p' = 1/n + (n-1)/n * q."""
+    n = jnp.asarray(n, q.dtype)
+    return 1.0 / n + (n - 1.0) / n * q

@@ -1,0 +1,89 @@
+"""Layer-1 Pallas kernel: sorted-run segment sum (collision compression).
+
+The inner loop of the paper's §III-A pair-tree merge is "sum values whose
+(sorted) indices collide". On an accelerated node (the single-node-speedup
+future the paper's intro motivates) that step becomes a data-parallel
+kernel: given a sorted index array, produce the per-run totals at each
+run's first position and zeros elsewhere. The output is the same length as
+the input (fixed shapes for AOT), so the caller compacts by dropping
+non-first slots.
+
+The kernel processes the whole array in VMEM in one grid step (L ≤ 64K
+entries ≈ 0.5 MB — fine for VMEM) using vectorized cumulative sums:
+
+  run totals  =  cumsum(vals) at run ends  −  cumsum(vals) before run start
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _segment_sum_kernel(idx_ref, val_ref, out_ref):
+    idx = idx_ref[...]
+    vals = val_ref[...]
+    c = jnp.cumsum(vals)
+    is_first = jnp.concatenate(
+        [jnp.ones((1,), jnp.bool_), idx[1:] != idx[:-1]]
+    )
+    is_last = jnp.concatenate(
+        [idx[1:] != idx[:-1], jnp.ones((1,), jnp.bool_)]
+    )
+    l = idx.shape[0]
+    positions = jax.lax.iota(jnp.int32, l)
+    # For each element, the index of the last element of ITS run: take the
+    # minimum "last position ≥ i". Compute via reverse cummin of positions
+    # masked to run-lasts.
+    last_pos = jnp.where(is_last, positions, l - 1)
+    # reverse cumulative minimum
+    last_of_run = jnp.flip(jax.lax.cummin(jnp.flip(last_pos)))
+    run_end_csum = c[last_of_run]
+    # prefix before the run start = run_end_csum of the PREVIOUS run
+    before = jnp.where(
+        positions == 0, jnp.zeros((), vals.dtype), c[positions - 1]
+    )
+    totals = run_end_csum - jnp.where(is_first, before, c)  # valid at firsts
+    out_ref[...] = jnp.where(is_first, run_end_csum - before, totals * 0.0)
+
+
+@jax.jit
+def segment_sum(idx, vals):
+    """Sorted-run segment sum. idx [L] int32 (sorted), vals [L] f32 ->
+    out [L] f32 with run totals at run firsts, zeros elsewhere."""
+    (l,) = idx.shape
+    assert vals.shape == (l,)
+    return pl.pallas_call(
+        _segment_sum_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((l,), lambda i: (0,)),
+            pl.BlockSpec((l,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((l,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((l,), jnp.float32),
+        interpret=True,
+    )(idx, vals)
+
+
+def _pagerank_cell_kernel(q_ref, o_ref, *, n):
+    q = q_ref[...]
+    o_ref[...] = 1.0 / n + (n - 1.0) / n * q
+
+
+@functools.partial(jax.jit, static_argnames=("n", "block"))
+def pagerank_cell(q, n, block=8192):
+    """Paper eq. 2 teleport update as a tiled elementwise kernel."""
+    (l,) = q.shape
+    block = min(block, l)
+    assert l % block == 0
+    kernel = functools.partial(_pagerank_cell_kernel, n=float(n))
+    return pl.pallas_call(
+        kernel,
+        grid=(l // block,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((l,), jnp.float32),
+        interpret=True,
+    )(q)

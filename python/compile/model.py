@@ -1,0 +1,50 @@
+"""Layer-2 JAX model: the per-worker mini-batch gradient step.
+
+Composes the Layer-1 Pallas kernels into the function the Rust coordinator
+executes through PJRT every training step:
+
+    grad_step(x, w, y_onehot) -> (loss, grad)
+
+with the fixed AOT shapes B=128 examples, N=1024 active (padded) features,
+C=64 classes — the densified view of a sparse power-law mini-batch whose
+active-feature dictionary the coordinator assembles (rust
+`apps::sgd::DenseBatch`). Padding columns carry x=0, so their gradient is
+exactly 0 and the padded weight rows are never touched.
+
+Also exports `pagerank_step`: the teleport update applied to the allreduce
+output in the PageRank app.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels import minibatch_grad as mk
+from compile.kernels import segment_sum as sk
+
+# AOT artifact shapes (keep in sync with rust/src/runtime/mod.rs).
+AOT_B = 128
+AOT_N = 1024
+AOT_C = 64
+AOT_SEG_L = 8192
+AOT_PR_L = 8192
+
+
+def grad_step(x, w, y_onehot):
+    """Mini-batch softmax-CE loss + weight gradient.
+
+    x [B, N] densified batch, w [N, C] gathered sub-model,
+    y_onehot [B, C]. Returns (mean loss [], grad [N, C]).
+    """
+    logits = mk.matmul(x, w)
+    loss_vec, dlogits = mk.softmax_xent(logits, y_onehot)
+    grad = mk.matmul_at(x, dlogits)
+    return jnp.mean(loss_vec), grad
+
+
+def pagerank_step(q, n):
+    """Teleport update p' = 1/n + (n-1)/n * q (paper eq. 2)."""
+    return sk.pagerank_cell(q, n)
+
+
+def segment_sum(idx, vals):
+    """Sorted-run collision compression (see kernels.segment_sum)."""
+    return sk.segment_sum(idx, vals)

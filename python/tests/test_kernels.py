@@ -1,0 +1,178 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and value distributions; fixed seeds keep CI
+deterministic.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import minibatch_grad as mk
+from compile.kernels import ref
+from compile.kernels import segment_sum as sk
+
+RTOL = 1e-5
+ATOL = 1e-5
+
+
+def _assert_close(got, want, rtol=RTOL, atol=ATOL):
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# matmul kernels
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bm_pow=st.integers(0, 3),   # B = 2^bm_pow * 16
+    nk=st.integers(1, 8),       # N = nk * 64
+    c=st.sampled_from([8, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(bm_pow, nk, c, seed):
+    b = 16 * (2 ** bm_pow)
+    n = 64 * nk
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((b, n), dtype=np.float32)
+    w = rng.standard_normal((n, c), dtype=np.float32)
+    got = mk.matmul(x, w, bm=16, bk=64)
+    _assert_close(got, ref.matmul_ref(x, w), rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bn=st.sampled_from([64, 128, 256]),
+    bb=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_at_matches_ref(bn, bb, seed):
+    rng = np.random.default_rng(seed)
+    b, n, c = 32, 256, 16
+    x = rng.standard_normal((b, n), dtype=np.float32)
+    d = rng.standard_normal((b, c), dtype=np.float32)
+    got = mk.matmul_at(x, d, bn=bn, bb=bb)
+    _assert_close(got, jnp.matmul(x.T, d), rtol=1e-4, atol=1e-3)
+
+
+def test_matmul_rejects_mismatched_inner_dims():
+    x = np.zeros((16, 64), np.float32)
+    w = np.zeros((128, 8), np.float32)
+    with pytest.raises(AssertionError):
+        mk.matmul(x, w)
+
+
+def test_matmul_aot_shapes():
+    # the exact shapes frozen in the artifact
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((128, 1024), dtype=np.float32)
+    w = rng.standard_normal((1024, 64), dtype=np.float32)
+    _assert_close(mk.matmul(x, w), ref.matmul_ref(x, w), rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# softmax cross-entropy
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([16, 64, 128]),
+    c=st.sampled_from([4, 16, 64]),
+    scale=st.floats(0.1, 30.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_softmax_xent_matches_ref(b, c, scale, seed):
+    rng = np.random.default_rng(seed)
+    logits = (rng.standard_normal((b, c)) * scale).astype(np.float32)
+    y = np.eye(c, dtype=np.float32)[rng.integers(0, c, b)]
+    loss_g, d_g = mk.softmax_xent(logits, y, bm=16)
+    loss_r, d_r = ref.softmax_xent_ref(logits, y)
+    _assert_close(loss_g, loss_r, rtol=1e-4, atol=1e-4)
+    _assert_close(d_g, d_r, rtol=1e-4, atol=1e-5)
+
+
+def test_softmax_xent_extreme_logits_stable():
+    # stability: huge logits must not produce NaN/inf
+    logits = np.array([[1000.0, -1000.0], [-1000.0, 1000.0]], np.float32)
+    y = np.eye(2, dtype=np.float32)
+    loss, d = mk.softmax_xent(logits, y, bm=2)
+    assert np.all(np.isfinite(np.asarray(loss)))
+    assert np.all(np.isfinite(np.asarray(d)))
+    _assert_close(loss, [0.0, 0.0], atol=1e-5)
+
+
+def test_xent_gradient_sums_to_zero_rows():
+    # each dlogits row sums to 0 (softmax simplex tangent)
+    rng = np.random.default_rng(3)
+    logits = rng.standard_normal((32, 8)).astype(np.float32)
+    y = np.eye(8, dtype=np.float32)[rng.integers(0, 8, 32)]
+    _, d = mk.softmax_xent(logits, y, bm=16)
+    _assert_close(np.asarray(d).sum(axis=1), np.zeros(32), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# segment sum (collision compression)
+# ---------------------------------------------------------------------------
+
+@st.composite
+def sorted_runs(draw):
+    n_runs = draw(st.integers(1, 40))
+    lengths = [draw(st.integers(1, 8)) for _ in range(n_runs)]
+    idx = []
+    cur = 0
+    for ln in lengths:
+        cur += draw(st.integers(1, 5))
+        idx.extend([cur] * ln)
+    return np.array(idx, np.int32)
+
+
+@settings(max_examples=40, deadline=None)
+@given(idx=sorted_runs(), seed=st.integers(0, 2**31 - 1))
+def test_segment_sum_matches_ref(idx, seed):
+    rng = np.random.default_rng(seed)
+    vals = rng.standard_normal(len(idx)).astype(np.float32)
+    got = sk.segment_sum(idx, vals)
+    want = ref.segment_sum_ref(idx, vals)
+    _assert_close(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_segment_sum_preserves_total():
+    rng = np.random.default_rng(7)
+    idx = np.sort(rng.integers(0, 50, 512)).astype(np.int32)
+    vals = rng.standard_normal(512).astype(np.float32)
+    out = np.asarray(sk.segment_sum(idx, vals))
+    assert abs(out.sum() - vals.sum()) < 1e-3
+
+
+def test_segment_sum_all_unique_is_identity():
+    idx = np.arange(64, dtype=np.int32)
+    vals = np.linspace(-1, 1, 64, dtype=np.float32)
+    _assert_close(sk.segment_sum(idx, vals), vals)
+
+
+def test_segment_sum_single_run():
+    idx = np.zeros(32, np.int32)
+    vals = np.ones(32, np.float32)
+    out = np.asarray(sk.segment_sum(idx, vals))
+    assert out[0] == 32.0
+    assert np.all(out[1:] == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# pagerank cell
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    l=st.sampled_from([64, 256, 8192]),
+    n=st.integers(2, 10**9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pagerank_cell_matches_ref(l, n, seed):
+    rng = np.random.default_rng(seed)
+    q = rng.random(l).astype(np.float32)
+    got = sk.pagerank_cell(q, n, block=64)
+    want = ref.pagerank_cell_ref(q, float(n))
+    _assert_close(got, want, rtol=1e-5, atol=1e-7)

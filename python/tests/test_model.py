@@ -1,0 +1,111 @@
+"""Layer-2 correctness: the composed grad_step vs the jnp oracle and
+finite differences; AOT lowering smoke tests."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def _case(b, n, c, seed):
+    rng = np.random.default_rng(seed)
+    x = np.zeros((b, n), np.float32)
+    # sparse power-law-ish batch: a few active columns per row
+    for i in range(b):
+        cols = rng.choice(n, size=min(8, n), replace=False)
+        x[i, cols] = rng.standard_normal(len(cols))
+    w = (rng.standard_normal((n, c)) * 0.1).astype(np.float32)
+    y = np.eye(c, dtype=np.float32)[rng.integers(0, c, b)]
+    return x, w, y
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_grad_step_matches_ref(seed):
+    x, w, y = _case(128, 1024, 64, seed)
+    loss_g, grad_g = model.grad_step(x, w, y)
+    loss_r, grad_r = ref.grad_step_ref(x, w, y)
+    np.testing.assert_allclose(float(loss_g), float(loss_r), rtol=1e-4)
+    np.testing.assert_allclose(
+        np.asarray(grad_g), np.asarray(grad_r), rtol=1e-3, atol=1e-5
+    )
+
+
+def test_grad_step_finite_differences():
+    x, w, y = _case(16, 64, 8, 0)
+    _, grad = model.grad_step(x, w, y)
+    grad = np.asarray(grad)
+    eps = 1e-3
+    rng = np.random.default_rng(1)
+    for _ in range(5):
+        i, j = rng.integers(0, 64), rng.integers(0, 8)
+        wp = w.copy()
+        wp[i, j] += eps
+        lp, _ = model.grad_step(x, wp, y)
+        wm = w.copy()
+        wm[i, j] -= eps
+        lm, _ = model.grad_step(x, wm, y)
+        fd = (float(lp) - float(lm)) / (2 * eps)
+        assert abs(fd - grad[i, j]) < 5e-3 * (1 + abs(fd)), (
+            f"({i},{j}): fd {fd} vs grad {grad[i, j]}"
+        )
+
+
+def test_padding_columns_get_zero_gradient():
+    # columns with all-zero x must produce exactly zero gradient rows
+    x, w, y = _case(32, 128, 8, 2)
+    x[:, 100:] = 0.0
+    _, grad = model.grad_step(x, w, y)
+    grad = np.asarray(grad)
+    assert np.all(grad[100:] == 0.0)
+
+
+def test_grad_step_loss_is_mean_ce():
+    # with w = 0, loss must be exactly ln(C)
+    b, n, c = 32, 64, 16
+    rng = np.random.default_rng(3)
+    x = rng.standard_normal((b, n)).astype(np.float32)
+    w = np.zeros((n, c), np.float32)
+    y = np.eye(c, dtype=np.float32)[rng.integers(0, c, b)]
+    loss, _ = model.grad_step(x, w, y)
+    np.testing.assert_allclose(float(loss), np.log(c), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# AOT lowering
+# ---------------------------------------------------------------------------
+
+def test_aot_lowering_produces_parseable_hlo(tmp_path):
+    from compile import aot
+
+    for name, lower in aot.ARTIFACTS.items():
+        text = lower()
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+        # frozen shapes must appear in the entry layout
+        if name == "minibatch_grad.hlo.txt":
+            assert "f32[128,1024]" in text
+            assert "f32[1024,64]" in text
+
+
+def test_aot_grad_step_shapes_roundtrip():
+    # executing the lowered computation through jax gives the same result
+    # as calling the model directly (sanity for the artifact semantics)
+    x, w, y = _case(model.AOT_B, model.AOT_N, model.AOT_C, 4)
+    loss_direct, grad_direct = model.grad_step(x, w, y)
+
+    lowered = jax.jit(lambda a, b_, c_: model.grad_step(a, b_, c_)).lower(
+        jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        jax.ShapeDtypeStruct(w.shape, jnp.float32),
+        jax.ShapeDtypeStruct(y.shape, jnp.float32),
+    )
+    compiled = lowered.compile()
+    loss_c, grad_c = compiled(x, w, y)
+    np.testing.assert_allclose(float(loss_c), float(loss_direct), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(grad_c), np.asarray(grad_direct), rtol=1e-6, atol=1e-7
+    )

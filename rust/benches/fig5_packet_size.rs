@@ -1,0 +1,94 @@
+//! Figure 5 reproduction: packet size at each level of the butterfly for
+//! different degree configurations (64 machines, twitter-like graph).
+//!
+//! Paper shape: 64 round-robin sends ~0.5 MB packets (below the floor);
+//! the full degree-2 butterfly sends ~17 MB first-round packets but pays
+//! 6 layers of duplication; 16×4 balances the two layers.
+
+use sparse_allreduce::allreduce::Phase;
+use sparse_allreduce::apps::pagerank::{DistPageRank, PageRankConfig};
+use sparse_allreduce::bench::{print_table, section};
+use sparse_allreduce::graph::{DatasetPreset, DatasetSpec};
+use sparse_allreduce::util::human_bytes;
+
+fn main() {
+    let scale = std::env::var("SAR_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.25);
+    section(
+        "Figure 5 — Packet size per butterfly level (M = 64)",
+        &format!(
+            "twitter-like graph at scale {scale}; mean reduce-phase (down) packet per level.\n\
+             Paper shape: packet size decays with depth; round-robin smallest, 2^6 largest."
+        ),
+    );
+
+    let spec = DatasetSpec::new(DatasetPreset::TwitterFollowers, scale, 42);
+    let graph = spec.generate();
+
+    let configs: Vec<(&str, Vec<usize>)> = vec![
+        ("64 (round-robin)", vec![64]),
+        ("16x4", vec![16, 4]),
+        ("8x8", vec![8, 8]),
+        ("4x4x4", vec![4, 4, 4]),
+        ("2x2x2x2x2x2", vec![2; 6]),
+    ];
+
+    let mut rows = Vec::new();
+    let mut first_layer: Vec<f64> = Vec::new();
+    for (name, degrees) in &configs {
+        let mut pr =
+            DistPageRank::new(&graph, degrees.clone(), &PageRankConfig { seed: 42, iters: 1 });
+        pr.step();
+        let trace = &pr.iter_traces[0];
+        let mut cells = Vec::new();
+        for (l, _) in degrees.iter().enumerate() {
+            let mean = trace.mean_packet_bytes(Phase::ReduceDown, l);
+            if l == 0 {
+                first_layer.push(mean);
+            }
+            cells.push(human_bytes(mean as u64));
+        }
+        while cells.len() < 6 {
+            cells.push("—".to_string());
+        }
+        let mut row = vec![name.to_string()];
+        row.extend(cells);
+        row.push(human_bytes(trace.total_bytes() as u64));
+        rows.push(row);
+    }
+    print_table(
+        &["config", "L1", "L2", "L3", "L4", "L5", "L6", "total reduce bytes"],
+        &rows,
+    );
+
+    // shape checks: round-robin packets are the smallest first-layer
+    // packets; the binary butterfly's are the largest.
+    let rr = first_layer[0];
+    let binary = *first_layer.last().unwrap();
+    assert!(rr < binary / 4.0, "round-robin {rr} vs binary {binary}");
+    // packet size decays with depth through the deep binary butterfly
+    // (collision compression, paper Fig. 5's decaying curves)
+    let mut pr =
+        DistPageRank::new(&graph, vec![2; 6], &PageRankConfig { seed: 42, iters: 1 });
+    pr.step();
+    let t = &pr.iter_traces[0];
+    let l: Vec<f64> = (0..6).map(|i| t.mean_packet_bytes(Phase::ReduceDown, i)).collect();
+    assert!(
+        l.windows(2).all(|w| w[1] < w[0]),
+        "binary-butterfly packets must decay with depth: {l:?}"
+    );
+    // 16x4's two layers are near-balanced (paper §VI-B: "communication is
+    // almost evenly distributed across two layers of the network")
+    let mut pr = DistPageRank::new(&graph, vec![16, 4], &PageRankConfig { seed: 42, iters: 1 });
+    pr.step();
+    let t = &pr.iter_traces[0];
+    let (b0, b1) = (
+        t.layer_bytes(Phase::ReduceDown, 0) as f64,
+        t.layer_bytes(Phase::ReduceDown, 1) as f64,
+    );
+    let ratio = b0.max(b1) / b0.min(b1).max(1.0);
+    assert!(ratio < 4.0, "16x4 layers should be near-balanced, got {ratio:.1}x");
+    println!("\nshape check: RR smallest, binary largest + decaying, 16x4 balanced ✓");
+}

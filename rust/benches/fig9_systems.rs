@@ -1,0 +1,146 @@
+//! Figure 9 reproduction: PageRank runtime (first 10 iterations, 64
+//! machines) across systems, log scale.
+//!
+//! Paper (Twitter graph): Sparse Allreduce 6 s ≪ PowerGraph ≪ GraphX ≪
+//! Hadoop/Pegasus, each step roughly half to one order of magnitude.
+//!
+//! The comparators are not shippable here; per DESIGN.md we reproduce
+//! each system's COMMUNICATION STRUCTURE under the same EC2 cost model:
+//!
+//! * **SparseAllreduce (ours)** — real protocol trace of the 16×4
+//!   butterfly replayed on the cost model.
+//! * **PowerGraph-like** — vertex-cut gather/scatter: each of the ~|part.
+//!   vertices| masters exchanges with its mirrors twice per iteration
+//!   (gather + scatter), point-to-point (no aggregation tree), modelled
+//!   as a round-robin exchange of 2× the sparse vertex payload.
+//! * **GraphX-like** — the same gather/scatter volumes through an RDD
+//!   shuffle: every byte is serialized + written + read back at JVM
+//!   shuffle throughput (~100 MB/s effective in 2013 deployments).
+//! * **Hadoop/Pegasus-like** — one MapReduce job per iteration: the FULL
+//!   edge list + vertex vector spills through HDFS (write + shuffle +
+//!   read at ~60 MB/s effective) plus per-job startup (~20 s in 2013).
+
+use sparse_allreduce::apps::pagerank::{DistPageRank, PageRankConfig};
+use sparse_allreduce::bench::{print_table, section};
+use sparse_allreduce::graph::{DatasetPreset, DatasetSpec};
+use sparse_allreduce::simnet::{simulate_collective, CostModel, SimParams};
+
+struct SystemRow {
+    name: &'static str,
+    secs_10_iters: f64,
+}
+
+fn model_systems(graph_edges: usize, part_vertices: f64, m: usize, ours_iter: f64) -> Vec<SystemRow> {
+    let iters = 10.0;
+    let cost = CostModel::ec2_2013();
+    let bytes_per_vertex = 12.0; // id + value
+    // PowerGraph-like: gather+scatter, each partition exchanges its sparse
+    // vertex view point-to-point; volume = 2 × part_vertices × bytes, sent
+    // as M-1 small packets per node per phase (no tree aggregation).
+    let pg_volume = 2.0 * part_vertices * bytes_per_vertex;
+    let pg_packets = 2.0 * (m as f64 - 1.0);
+    let pg_iter = pg_packets * cost.setup_secs + pg_volume / cost.bandwidth_bps;
+    // greedy partitioning gives PowerGraph ~15-20% shorter vertex lists
+    // (paper §VI-E) — credit it.
+    let pg_iter = pg_iter * 0.85 + ours_iter * 0.5; // still pays local compute & sync
+
+    // GraphX-like: same volumes through an RDD shuffle at ~100 MB/s
+    // effective (serialize + spill + fetch), plus task scheduling ~1s.
+    let gx_iter = 1.0 + 2.0 * pg_volume / 100e6 + pg_volume / cost.bandwidth_bps;
+
+    // Hadoop-like: full edge list through HDFS each iteration + job start.
+    let edge_bytes = graph_edges as f64 * 16.0 / m as f64;
+    let hd_iter = 20.0 + 3.0 * edge_bytes / 60e6;
+
+    vec![
+        SystemRow { name: "SparseAllreduce (ours)", secs_10_iters: ours_iter * iters },
+        SystemRow { name: "PowerGraph-like", secs_10_iters: pg_iter * iters },
+        SystemRow { name: "GraphX-like", secs_10_iters: gx_iter * iters },
+        SystemRow { name: "Hadoop/Pegasus-like", secs_10_iters: hd_iter * iters },
+    ]
+}
+
+fn run(name: &str, preset: DatasetPreset, scale: f64, paper_edges: f64) -> Vec<SystemRow> {
+    let spec = DatasetSpec::new(preset, scale, 42);
+    let graph = spec.generate();
+    let m = 64usize;
+    // project every system's volumes to the paper's dataset size with the
+    // same factor (cf. fig8_scaling.rs)
+    let s_factor = paper_edges / graph.num_edges() as f64;
+    let mut pr = DistPageRank::new(&graph, vec![16, 4], &PageRankConfig { seed: 42, iters: 1 });
+    pr.step();
+    let scaled = sparse_allreduce::allreduce::Trace {
+        msgs: pr.iter_traces[0]
+            .msgs
+            .iter()
+            .map(|r| {
+                let mut r = *r;
+                r.bytes = (r.bytes as f64 * s_factor) as usize;
+                r
+            })
+            .collect(),
+    };
+    let sim = simulate_collective(&scaled, m, &SimParams::default());
+    let part_vertices = pr.shards.iter().map(|s| s.cols() + s.rows()).sum::<usize>() as f64
+        / (2.0 * m as f64)
+        * s_factor;
+
+    println!(
+        "\n### {name} — {} vertices, {} edges (projected ×{s_factor:.0} to paper scale)\n",
+        graph.vertices,
+        graph.num_edges()
+    );
+    let rows = model_systems(
+        (graph.num_edges() as f64 * s_factor) as usize,
+        part_vertices,
+        m,
+        sim.total_secs,
+    );
+    let table: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.name.to_string(),
+                format!("{:.1}", r.secs_10_iters),
+                format!("{:.1}x", r.secs_10_iters / rows[0].secs_10_iters),
+            ]
+        })
+        .collect();
+    print_table(&["system", "10-iteration runtime (s)", "vs ours"], &table);
+    rows
+}
+
+fn main() {
+    let scale = std::env::var("SAR_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.25);
+    section(
+        "Figure 9 — PageRank runtime across systems (M = 64, log-scale in the paper)",
+        "Ours: real trace × EC2 cost model. Comparators: communication-structure models\n\
+         (see bench header + DESIGN.md substitution table).",
+    );
+
+    for (name, preset, s, paper_edges) in [
+        ("Twitter followers (synthetic)", DatasetPreset::TwitterFollowers, scale, 1.5e9),
+        ("Yahoo web (synthetic)", DatasetPreset::YahooWeb, scale * 2.0, 6.0e9),
+    ] {
+        let rows = run(name, preset, s, paper_edges);
+        // shape: strictly increasing, each gap ≥ ~2x, total span ≥ 30x
+        for w in rows.windows(2) {
+            assert!(
+                w[1].secs_10_iters > w[0].secs_10_iters * 1.8,
+                "{} ({:.1}s) should be ≥~2x slower than {} ({:.1}s)",
+                w[1].name,
+                w[1].secs_10_iters,
+                w[0].name,
+                w[0].secs_10_iters
+            );
+        }
+        let span = rows.last().unwrap().secs_10_iters / rows[0].secs_10_iters;
+        assert!(span > 30.0, "total span should be orders of magnitude, got {span:.0}x");
+        println!(
+            "shape check: ours < PowerGraph < GraphX < Hadoop, span {span:.0}x ✓"
+        );
+    }
+}

@@ -1,0 +1,114 @@
+//! §Perf micro-benchmarks of the L3 hot paths: merge-sum, k-way union,
+//! scatter-combine, range split, and a full reduce on a 64-node cluster.
+//!
+//! These are the kernels the paper identifies as the CPU cost of the
+//! primitive (§III-A: tree merge ≈ 5× faster than hashing). Targets:
+//! merge throughput within ~2x of memory bandwidth; full-collective CPU
+//! time small vs. the simulated wire time.
+
+use sparse_allreduce::allreduce::LocalCluster;
+use sparse_allreduce::bench::{bench, section, BenchOpts};
+use sparse_allreduce::sparse::{
+    k_way_union_with_maps, k_way_union_with_maps_two_phase, merge_sum, scatter_combine, tree_sum_ref,
+    IndexSet, SpVec, SumF32,
+};
+use sparse_allreduce::topology::Butterfly;
+use sparse_allreduce::util::{human_bytes, Pcg32, Zipf};
+
+fn power_law_vec(rng: &mut Pcg32, zipf: &Zipf, nnz: usize) -> SpVec<f32> {
+    let mut pairs: Vec<(i64, f32)> =
+        (0..nnz).map(|_| (zipf.sample(rng) as i64, rng.next_f32())).collect();
+    pairs.sort_unstable_by_key(|&(i, _)| i);
+    sparse_allreduce::sparse::spvec_from_pairs::<SumF32>(pairs)
+}
+
+fn main() {
+    section("§Perf — L3 hot-path microbenches", "throughputs for the merge kernels");
+    let opts = BenchOpts { warmup_iters: 3, measure_iters: 10 };
+    let mut rng = Pcg32::new(42);
+    let zipf = Zipf::new(1 << 22, 1.1);
+
+    // ---- pairwise merge-sum, 1M + 1M elements ----
+    let a = power_law_vec(&mut rng, &zipf, 1 << 20);
+    let b = power_law_vec(&mut rng, &zipf, 1 << 20);
+    let bytes = (a.len() + b.len()) * 12;
+    let r = bench("merge_sum 2x1M power-law", &opts, || {
+        std::hint::black_box(merge_sum::<SumF32>(&a, &b));
+    });
+    println!(
+        "  -> merge throughput {}/s ({} in {:.1} ms)",
+        human_bytes((bytes as f64 / r.median()) as u64),
+        human_bytes(bytes as u64),
+        r.median() * 1e3
+    );
+
+    // ---- tree sum of 16 vectors (the paper's pair tree) ----
+    let inputs: Vec<SpVec<f32>> =
+        (0..16).map(|_| power_law_vec(&mut rng, &zipf, 1 << 17)).collect();
+    let total: usize = inputs.iter().map(|v| v.len() * 12).sum();
+    let r = bench("tree_sum_ref 16x128K power-law", &opts, || {
+        std::hint::black_box(tree_sum_ref::<SumF32>(&inputs));
+    });
+    println!(
+        "  -> tree-sum input throughput {}/s",
+        human_bytes((total as f64 / r.median()) as u64)
+    );
+
+    // ---- k-way union + maps (config phase kernel) + scan ablation ----
+    let lists: Vec<Vec<i64>> = (0..16)
+        .map(|_| power_law_vec(&mut rng, &zipf, 1 << 16).idx)
+        .collect();
+    let refs: Vec<&[i64]> = lists.iter().map(|l| l.as_slice()).collect();
+    let kbytes: usize = lists.iter().map(|l| l.len() * 8).sum();
+    let r = bench("k_way_union_with_maps k=16 x64K (scan, default)", &opts, || {
+        std::hint::black_box(k_way_union_with_maps(&refs));
+    });
+    println!(
+        "  -> union throughput {}/s",
+        human_bytes((kbytes as f64 / r.median()) as u64)
+    );
+    let r_scan = bench("k_way_union_with_maps k=16 x64K (two-phase ablation)", &opts, || {
+        std::hint::black_box(k_way_union_with_maps_two_phase(&refs));
+    });
+    println!(
+        "  -> two-phase-ablation throughput {}/s ({:.1}x slower)",
+        human_bytes((kbytes as f64 / r_scan.median()) as u64),
+        r_scan.median() / r.median()
+    );
+
+    // ---- scatter_combine (reduce-phase kernel) ----
+    let (union, maps) = k_way_union_with_maps(&refs);
+    let segs: Vec<Vec<f32>> = maps.iter().map(|m| vec![1.0f32; m.len()]).collect();
+    let seg_refs: Vec<&[f32]> = segs.iter().map(|s| s.as_slice()).collect();
+    let sbytes: usize = segs.iter().map(|s| s.len() * 4).sum();
+    let r = bench("scatter_combine k=16", &opts, || {
+        std::hint::black_box(scatter_combine::<SumF32>(union.len(), &seg_refs, &maps));
+    });
+    println!(
+        "  -> scatter throughput {}/s",
+        human_bytes((sbytes as f64 / r.median()) as u64)
+    );
+
+    // ---- whole collective: 64-node 16x4, power-law contributions ----
+    let m = 64usize;
+    let range = 1i64 << 22;
+    let mut outs = Vec::with_capacity(m);
+    for _ in 0..m {
+        outs.push(power_law_vec(&mut rng, &zipf, 1 << 16));
+    }
+    let mut cluster = LocalCluster::new(Butterfly::new(vec![16, 4], range));
+    cluster.config(
+        outs.iter().map(|v| IndexSet::from_sorted(v.idx.clone())).collect(),
+        outs.iter().map(|v| IndexSet::from_sorted(v.idx.clone())).collect(),
+    );
+    let total_vals: usize = outs.iter().map(|v| v.len()).sum();
+    let r = bench("full reduce 64-node 16x4 (sequential lockstep)", &opts, || {
+        let vals: Vec<Vec<f32>> = outs.iter().map(|v| v.val.clone()).collect();
+        std::hint::black_box(cluster.reduce::<SumF32>(vals));
+    });
+    println!(
+        "  -> {:.2} Gvals/s aggregate CPU reduce throughput ({} values, all 64 nodes on 1 core)",
+        total_vals as f64 / r.median() / 1e9,
+        total_vals
+    );
+}

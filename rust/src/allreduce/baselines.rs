@@ -1,0 +1,240 @@
+//! Executable dense-Allreduce baselines (paper §II).
+//!
+//! These are the strategies Sparse Allreduce is compared against:
+//!
+//! * **ring round-robin** (reduce-scatter + allgather over dense vectors) —
+//!   bandwidth-optimal for dense data, used by classic MPI;
+//! * **binary-butterfly dense allreduce** (recursive halving/doubling);
+//! * **tree reduce + broadcast** — lowest message count, serializes the
+//!   whole sum through the root (the paper dismisses it for sparse data).
+//!
+//! All operate on *dense* vectors of the full model length — exactly what
+//! a sparse-oblivious system must ship — so their traces quantify the
+//! volume gap that motivates the paper (orders of magnitude on power-law
+//! data).
+
+use super::protocol::Phase;
+use super::trace::Trace;
+use crate::sparse::ReduceOp;
+
+/// Dense ring allreduce (reduce-scatter + allgather). `values[n]` must all
+/// have identical length. Returns the reduced vector per node + trace.
+pub fn dense_ring_allreduce<R: ReduceOp>(values: &[Vec<R::T>]) -> (Vec<Vec<R::T>>, Trace) {
+    let m = values.len();
+    assert!(m >= 1);
+    let len = values[0].len();
+    assert!(values.iter().all(|v| v.len() == len), "dense vectors must align");
+    let mut trace = Trace::new();
+    if m == 1 {
+        return (vec![values[0].clone()], trace);
+    }
+    // chunk c owned by node c after reduce-scatter; chunk bounds
+    let bounds: Vec<usize> = (0..=m).map(|j| len * j / m).collect();
+    let mut bufs: Vec<Vec<R::T>> = values.to_vec();
+
+    // reduce-scatter: m-1 rounds; node n sends chunk (n - r) to n+1
+    for r in 0..m - 1 {
+        // gather all sends first (lockstep round)
+        let mut sends: Vec<(usize, usize, Vec<R::T>)> = Vec::with_capacity(m);
+        for n in 0..m {
+            let dst = (n + 1) % m;
+            let c = (n + m - r) % m;
+            let seg = bufs[n][bounds[c]..bounds[c + 1]].to_vec();
+            trace.record(Phase::ReduceDown, r, n, dst, 8 + seg.len() * R::WIDTH);
+            sends.push((dst, c, seg));
+        }
+        for (dst, c, seg) in sends {
+            let (a, b) = (bounds[c], bounds[c + 1]);
+            for (slot, v) in bufs[dst][a..b].iter_mut().zip(seg) {
+                *slot = R::combine(*slot, v);
+            }
+        }
+    }
+    // allgather: m-1 rounds; node n sends its completed chunk ring-wise
+    for r in 0..m - 1 {
+        let mut sends: Vec<(usize, usize, Vec<R::T>)> = Vec::with_capacity(m);
+        for n in 0..m {
+            let dst = (n + 1) % m;
+            let c = (n + 1 + m - r) % m;
+            let seg = bufs[n][bounds[c]..bounds[c + 1]].to_vec();
+            trace.record(Phase::ReduceUp, r, n, dst, 8 + seg.len() * R::WIDTH);
+            sends.push((dst, c, seg));
+        }
+        for (dst, c, seg) in sends {
+            let (a, b) = (bounds[c], bounds[c + 1]);
+            bufs[dst][a..b].copy_from_slice(&seg);
+        }
+    }
+    (bufs, trace)
+}
+
+/// Dense recursive-halving/doubling butterfly allreduce (`m` must be a
+/// power of two).
+pub fn dense_butterfly_allreduce<R: ReduceOp>(values: &[Vec<R::T>]) -> (Vec<Vec<R::T>>, Trace) {
+    let m = values.len();
+    assert!(m.is_power_of_two(), "dense butterfly needs power-of-two M");
+    let len = values[0].len();
+    assert!(values.iter().all(|v| v.len() == len));
+    let mut trace = Trace::new();
+    let mut bufs: Vec<Vec<R::T>> = values.to_vec();
+    let rounds = m.trailing_zeros() as usize;
+    for rd in 0..rounds {
+        let bit = 1usize << rd;
+        // full-exchange variant: partners swap entire vectors and combine
+        let mut sends: Vec<(usize, Vec<R::T>)> = Vec::with_capacity(m);
+        for n in 0..m {
+            let partner = n ^ bit;
+            trace.record(Phase::ReduceDown, rd, n, partner, 8 + len * R::WIDTH);
+            sends.push((partner, bufs[n].clone()));
+        }
+        let mut next = bufs.clone();
+        for (dst, seg) in sends {
+            for (slot, v) in next[dst].iter_mut().zip(seg) {
+                *slot = R::combine(*slot, v);
+            }
+        }
+        bufs = next;
+    }
+    (bufs, trace)
+}
+
+/// Dense binary-tree reduce to node 0 followed by a broadcast.
+pub fn dense_tree_allreduce<R: ReduceOp>(values: &[Vec<R::T>]) -> (Vec<Vec<R::T>>, Trace) {
+    let m = values.len();
+    let len = values[0].len();
+    assert!(values.iter().all(|v| v.len() == len));
+    let mut trace = Trace::new();
+    let mut bufs: Vec<Vec<R::T>> = values.to_vec();
+    // reduce up the implicit binary tree: stride doubling
+    let mut stride = 1usize;
+    let mut layer = 0usize;
+    while stride < m {
+        for n in (0..m).step_by(stride * 2) {
+            let src = n + stride;
+            if src < m {
+                trace.record(Phase::ReduceDown, layer, src, n, 8 + len * R::WIDTH);
+                let (head, tail) = bufs.split_at_mut(src);
+                for (slot, &v) in head[n].iter_mut().zip(tail[0].iter()) {
+                    *slot = R::combine(*slot, v);
+                }
+            }
+        }
+        stride *= 2;
+        layer += 1;
+    }
+    // broadcast down
+    while stride > 1 {
+        stride /= 2;
+        for n in (0..m).step_by(stride * 2) {
+            let dst = n + stride;
+            if dst < m {
+                trace.record(Phase::ReduceUp, layer, n, dst, 8 + len * R::WIDTH);
+                bufs[dst] = bufs[n].clone();
+            }
+        }
+    }
+    (bufs, trace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::SumF32;
+    use crate::util::Pcg32;
+
+    fn random_dense(m: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Pcg32::new(seed);
+        (0..m).map(|_| (0..len).map(|_| rng.next_f32() - 0.5).collect()).collect()
+    }
+
+    fn oracle(values: &[Vec<f32>]) -> Vec<f32> {
+        let len = values[0].len();
+        let mut acc = vec![0.0f32; len];
+        for v in values {
+            for (a, x) in acc.iter_mut().zip(v) {
+                *a += x;
+            }
+        }
+        acc
+    }
+
+    fn check_all_equal(got: &[Vec<f32>], want: &[f32]) {
+        for (n, v) in got.iter().enumerate() {
+            assert_eq!(v.len(), want.len());
+            for (g, w) in v.iter().zip(want) {
+                assert!((g - w).abs() < 1e-3, "node {n}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_correct() {
+        for m in [1usize, 2, 3, 5, 8] {
+            let vals = random_dense(m, 67, m as u64);
+            let (got, trace) = dense_ring_allreduce::<SumF32>(&vals);
+            check_all_equal(&got, &oracle(&vals));
+            if m > 1 {
+                assert_eq!(trace.len(), 2 * m * (m - 1));
+            }
+        }
+    }
+
+    #[test]
+    fn butterfly_correct() {
+        for m in [1usize, 2, 4, 8, 16] {
+            let vals = random_dense(m, 33, 100 + m as u64);
+            let (got, trace) = dense_butterfly_allreduce::<SumF32>(&vals);
+            check_all_equal(&got, &oracle(&vals));
+            assert_eq!(trace.len(), m * m.trailing_zeros() as usize);
+        }
+    }
+
+    #[test]
+    fn tree_correct() {
+        for m in [1usize, 2, 3, 4, 7, 8, 13] {
+            let vals = random_dense(m, 29, 200 + m as u64);
+            let (got, _) = dense_tree_allreduce::<SumF32>(&vals);
+            check_all_equal(&got, &oracle(&vals));
+        }
+    }
+
+    #[test]
+    fn dense_volume_dwarfs_sparse() {
+        // The motivating gap: dense baselines ship O(R) per node even when
+        // contributions are sparse.
+        use crate::allreduce::LocalCluster;
+        use crate::sparse::IndexSet;
+        use crate::topology::Butterfly;
+        let m = 8;
+        let range = 10_000i64;
+        let nnz = 100usize;
+        let mut rng = Pcg32::new(9);
+        let idxs: Vec<Vec<i64>> = (0..m)
+            .map(|_| {
+                let mut v: Vec<i64> = rng
+                    .sample_distinct(range as usize, nnz)
+                    .into_iter()
+                    .map(|x| x as i64)
+                    .collect();
+                v.sort_unstable();
+                v
+            })
+            .collect();
+        let mut cluster = LocalCluster::new(Butterfly::new(vec![4, 2], range));
+        cluster.config(
+            idxs.iter().map(|i| IndexSet::from_sorted(i.clone())).collect(),
+            idxs.iter().map(|i| IndexSet::from_sorted(i.clone())).collect(),
+        );
+        let (_, sparse_trace) =
+            cluster.reduce::<SumF32>(idxs.iter().map(|i| vec![1.0f32; i.len()]).collect());
+
+        let dense_vals: Vec<Vec<f32>> = (0..m).map(|_| vec![1.0f32; range as usize]).collect();
+        let (_, dense_trace) = dense_ring_allreduce::<SumF32>(&dense_vals);
+        assert!(
+            dense_trace.total_bytes() > 10 * sparse_trace.total_bytes(),
+            "dense {} should dwarf sparse {}",
+            dense_trace.total_bytes(),
+            sparse_trace.total_bytes()
+        );
+    }
+}

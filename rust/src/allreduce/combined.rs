@@ -1,0 +1,234 @@
+//! Combined config-reduce (paper §IV-A): "We also provide a combined
+//! config-reduce method that performs both operations in a single round
+//! of communication at each layer, i.e. the indices and values during the
+//! down phase are sent with the same messages."
+//!
+//! For dynamic index patterns (mini-batch training, where every step has
+//! fresh active features) this halves the number of down-phase message
+//! rounds versus running `config` then `reduce` back-to-back: the same
+//! bytes move, but each layer costs one latency instead of two — exactly
+//! the trade the paper's packet-floor analysis cares about.
+
+use super::protocol::Phase;
+use super::trace::Trace;
+use crate::sparse::merge::k_way_union_with_maps;
+use crate::sparse::{tree_sum, IndexSet, ReduceOp, SpVec};
+use crate::topology::Butterfly;
+
+/// Result of a combined pass: per-node inbound values plus the trace.
+pub struct CombinedResult<T: Copy> {
+    pub values: Vec<Vec<T>>,
+    pub trace: Trace,
+}
+
+/// Run one combined config-reduce over the whole cluster (sequential
+/// lockstep driver, mirrors `LocalCluster` semantics).
+///
+/// `contributions[n]` is node n's outbound sparse vector; `inbound[n]` the
+/// indices it wants back. Returns values aligned with `inbound[n]`.
+pub fn combined_config_reduce<R: ReduceOp>(
+    topo: &Butterfly,
+    contributions: Vec<SpVec<R::T>>,
+    inbound: Vec<IndexSet>,
+) -> CombinedResult<R::T> {
+    let m = topo.machines();
+    assert_eq!(contributions.len(), m);
+    assert_eq!(inbound.len(), m);
+    let mut trace = Trace::new();
+
+    // Per-node state during the descent.
+    let mut cur: Vec<SpVec<R::T>> = contributions;
+    let mut ups: Vec<IndexSet> = inbound;
+    // Recorded for the ascent: [layer][node] → (send offsets, per-slot maps)
+    let layers = topo.layers();
+    let mut up_offsets: Vec<Vec<Vec<usize>>> = Vec::with_capacity(layers);
+    let mut up_maps: Vec<Vec<Vec<Vec<u32>>>> = Vec::with_capacity(layers);
+
+    // -------- down: indices + values + up-requests in ONE message --------
+    for layer in 0..layers {
+        let k = topo.degree(layer);
+        let mut inbox_vec: Vec<Vec<SpVec<R::T>>> = vec![vec![SpVec::new(); k]; m];
+        let mut inbox_up: Vec<Vec<Vec<i64>>> = vec![vec![Vec::new(); k]; m];
+        let mut layer_up_offsets = vec![Vec::new(); m];
+        for n in 0..m {
+            let bounds = topo.layer_bounds(n, layer);
+            let vec_parts = cur[n].split_by_bounds(&bounds);
+            let up_offs = ups[n].split_offsets(&bounds);
+            let group = topo.group(n, layer);
+            let my_slot = topo.digit(n, layer);
+            for (j, part) in vec_parts.into_iter().enumerate() {
+                let dst = group[j];
+                let up_slice = ups[n].as_slice()[up_offs[j]..up_offs[j + 1]].to_vec();
+                if dst != n {
+                    // one message: indices (8B) + values (R::WIDTH) + up idx (8B)
+                    let bytes = 8 + part.len() * (8 + R::WIDTH) + up_slice.len() * 8;
+                    trace.record(Phase::ConfigDown, layer, n, dst, bytes);
+                }
+                inbox_vec[dst][my_slot] = part;
+                inbox_up[dst][my_slot] = up_slice;
+            }
+            layer_up_offsets[n] = up_offs;
+        }
+        let mut layer_up_maps = vec![Vec::new(); m];
+        for n in 0..m {
+            // values: the paper's pair-tree merge of the received vectors
+            let vecs = std::mem::take(&mut inbox_vec[n]);
+            cur[n] = tree_sum::<R>(vecs);
+            // up-requests: union + per-slot maps for the ascent
+            let up_parts = std::mem::take(&mut inbox_up[n]);
+            let refs: Vec<&[i64]> = up_parts.iter().map(|p| p.as_slice()).collect();
+            let (union, maps) = k_way_union_with_maps(&refs);
+            ups[n] = IndexSet::from_sorted(union);
+            layer_up_maps[n] = maps;
+        }
+        up_offsets.push(layer_up_offsets);
+        up_maps.push(layer_up_maps);
+    }
+
+    // -------- bottom: project requested indices onto the reduced sums ----
+    let mut vals: Vec<Vec<R::T>> = (0..m)
+        .map(|n| {
+            let down_set = cur[n].index_set();
+            ups[n]
+                .map_into(&down_set)
+                .iter()
+                .map(|&p| if p == u32::MAX { R::zero() } else { cur[n].val[p as usize] })
+                .collect()
+        })
+        .collect();
+
+    // -------- up: identical to the separated reduce's allgather ----------
+    // Reconstruct each node's layer-ℓ up set length from the recorded
+    // offsets (the ascent shrinks the up vector back to the original).
+    for layer in (0..layers).rev() {
+        let k = topo.degree(layer);
+        let mut inbox: Vec<Vec<Vec<R::T>>> = vec![vec![Vec::new(); k]; m];
+        for n in 0..m {
+            let group = topo.group(n, layer);
+            let my_slot = topo.digit(n, layer);
+            for (j, map) in up_maps[layer][n].iter().enumerate() {
+                let seg: Vec<R::T> = map.iter().map(|&p| vals[n][p as usize]).collect();
+                let dst = group[j];
+                if dst != n {
+                    trace.record(Phase::ReduceUp, layer, n, dst, 8 + seg.len() * R::WIDTH);
+                }
+                inbox[dst][my_slot] = seg;
+            }
+        }
+        for n in 0..m {
+            let offs = &up_offsets[layer][n];
+            let total = *offs.last().unwrap();
+            let mut out = vec![R::zero(); total];
+            let segs = std::mem::take(&mut inbox[n]);
+            for (j, seg) in segs.into_iter().enumerate() {
+                let (a, b) = (offs[j], offs[j + 1]);
+                debug_assert_eq!(seg.len(), b - a);
+                out[a..b].copy_from_slice(&seg);
+            }
+            vals[n] = out;
+        }
+    }
+
+    CombinedResult { values: vals, trace }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allreduce::LocalCluster;
+    use crate::sparse::{spvec_from_pairs, SumF32};
+    use crate::util::Pcg32;
+
+    fn random_case(
+        m: usize,
+        range: i64,
+        seed: u64,
+    ) -> (Vec<SpVec<f32>>, Vec<IndexSet>) {
+        let mut rng = Pcg32::new(seed);
+        let vecs = (0..m)
+            .map(|_| {
+                let k = rng.gen_range(0, 80);
+                spvec_from_pairs::<SumF32>(
+                    rng.sample_distinct(range as usize, k)
+                        .into_iter()
+                        .map(|x| (x as i64, rng.next_f32()))
+                        .collect(),
+                )
+            })
+            .collect();
+        let ins = (0..m)
+            .map(|_| {
+                let k = rng.gen_range(0, 50);
+                IndexSet::from_unsorted(
+                    rng.sample_distinct(range as usize, k).into_iter().map(|x| x as i64).collect(),
+                )
+            })
+            .collect();
+        (vecs, ins)
+    }
+
+    fn check_matches_separated(degrees: Vec<usize>, seed: u64) {
+        let topo = Butterfly::new(degrees.clone(), 700);
+        let m = topo.machines();
+        let (vecs, ins) = random_case(m, 700, seed);
+
+        // separated reference
+        let mut cluster = LocalCluster::new(topo.clone());
+        cluster.config(
+            vecs.iter().map(|v| v.index_set()).collect(),
+            ins.clone(),
+        );
+        let (want, _) = cluster.reduce::<SumF32>(vecs.iter().map(|v| v.val.clone()).collect());
+
+        let got = combined_config_reduce::<SumF32>(&topo, vecs, ins);
+        for n in 0..m {
+            assert_eq!(got.values[n].len(), want[n].len(), "degrees {degrees:?} node {n}");
+            for (a, b) in got.values[n].iter().zip(&want[n]) {
+                assert!((a - b).abs() < 1e-4, "degrees {degrees:?} node {n}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_separated_various_topologies() {
+        check_matches_separated(vec![1], 1);
+        check_matches_separated(vec![4], 2);
+        check_matches_separated(vec![2, 2], 3);
+        check_matches_separated(vec![4, 2], 4);
+        check_matches_separated(vec![2, 3, 2], 5);
+    }
+
+    #[test]
+    fn matches_separated_many_seeds() {
+        for seed in 10..25 {
+            check_matches_separated(vec![3, 2], seed);
+        }
+    }
+
+    #[test]
+    fn halves_down_phase_rounds() {
+        // combined sends ONE down message per (node, slot, layer) where
+        // separated config+reduce sends TWO.
+        let topo = Butterfly::new(vec![4, 2], 500);
+        let (vecs, ins) = random_case(8, 500, 42);
+
+        let mut cluster = LocalCluster::new(topo.clone());
+        let config_trace = cluster.config(
+            vecs.iter().map(|v| v.index_set()).collect(),
+            ins.clone(),
+        );
+        let (_, reduce_trace) =
+            cluster.reduce::<SumF32>(vecs.iter().map(|v| v.val.clone()).collect());
+        let separated_down = config_trace.len()
+            + reduce_trace
+                .msgs
+                .iter()
+                .filter(|r| r.phase == Phase::ReduceDown)
+                .count();
+
+        let got = combined_config_reduce::<SumF32>(&topo, vecs, ins);
+        let combined_down =
+            got.trace.msgs.iter().filter(|r| r.phase == Phase::ConfigDown).count();
+        assert_eq!(combined_down * 2, separated_down, "one round instead of two");
+    }
+}

@@ -1,0 +1,387 @@
+//! Sequential in-process driver: runs the whole cluster's protocol
+//! lockstep in one thread.
+//!
+//! This is the reference driver — no concurrency, deterministic, easy to
+//! test — and the producer of message [`Trace`]s for the packet-size study
+//! (Figure 5) and the discrete-event simulator (Figures 3/6/8/9). The
+//! threaded and replicated drivers must be observationally equivalent to
+//! it (asserted in the integration tests).
+
+use super::protocol::{ConfigPart, NodeProtocol, Phase};
+use super::trace::Trace;
+use crate::sparse::{IndexSet, ReduceOp};
+use crate::topology::Butterfly;
+
+/// Per-message wire overhead in bytes (frame header: phase, layer, src,
+/// seq, length) — matches `transport::wire`.
+pub const MSG_HEADER_BYTES: usize = 8;
+
+/// A full cluster of [`NodeProtocol`]s driven sequentially.
+pub struct LocalCluster {
+    topo: Butterfly,
+    nodes: Vec<NodeProtocol>,
+}
+
+impl LocalCluster {
+    pub fn new(topo: Butterfly) -> Self {
+        let nodes = (0..topo.machines()).map(|n| NodeProtocol::new(topo.clone(), n)).collect();
+        Self { topo, nodes }
+    }
+
+    pub fn machines(&self) -> usize {
+        self.topo.machines()
+    }
+
+    pub fn topology(&self) -> &Butterfly {
+        &self.topo
+    }
+
+    pub fn node(&self, n: usize) -> &NodeProtocol {
+        &self.nodes[n]
+    }
+
+    /// Run the config phase for all nodes. `outbound[n]` / `inbound[n]`
+    /// are node `n`'s contributed / requested index sets. Returns the
+    /// config message trace.
+    pub fn config(&mut self, outbound: Vec<IndexSet>, inbound: Vec<IndexSet>) -> Trace {
+        let m = self.machines();
+        assert_eq!(outbound.len(), m);
+        assert_eq!(inbound.len(), m);
+        for (n, (o, i)) in outbound.into_iter().zip(inbound).enumerate() {
+            self.nodes[n].begin_config(o, i);
+        }
+        let mut trace = Trace::new();
+        for layer in 0..self.topo.layers() {
+            let k = self.topo.degree(layer);
+            let mut inbox: Vec<Vec<ConfigPart>> = vec![vec![ConfigPart::default(); k]; m];
+            for n in 0..m {
+                let parts = self.nodes[n].config_outgoing(layer);
+                let group = self.topo.group(n, layer);
+                let my_slot = self.topo.digit(n, layer);
+                for (j, part) in parts.into_iter().enumerate() {
+                    let dst = group[j];
+                    if dst != n {
+                        trace.record(Phase::ConfigDown, layer, n, dst, part.wire_bytes());
+                    }
+                    inbox[dst][my_slot] = part;
+                }
+            }
+            for n in 0..m {
+                let parts = std::mem::take(&mut inbox[n]);
+                self.nodes[n].config_absorb(layer, &parts);
+            }
+        }
+        trace
+    }
+
+    /// Run one reduce: `values[n]` are node `n`'s outbound values (aligned
+    /// with its outbound index set). Returns per-node inbound values
+    /// (aligned with each node's inbound index set) and the message trace.
+    pub fn reduce<R: ReduceOp>(&self, values: Vec<Vec<R::T>>) -> (Vec<Vec<R::T>>, Trace) {
+        self.reduce_with_bottom::<R, _>(values, |node, bottom| {
+            self.nodes[node].apply_final_map::<R>(bottom)
+        })
+    }
+
+    /// Like [`Self::reduce`], but with a custom bottom-of-butterfly
+    /// transform: after the scatter-reduce completes, `bottom_fn(node,
+    /// reduced)` receives the fully-reduced values for `node`'s bottom
+    /// range (aligned with `node(n).bottom_down_set()`) and must return
+    /// values aligned with `node(n).bottom_up_set()` to be allgathered.
+    ///
+    /// This is the *parameter-server mode* that implements the paper's
+    /// mini-batch loop (`in.values = reduce(out.values)` where the values
+    /// flowing up are fresh model weights, not gradient sums): the bottom
+    /// owner folds the reduced gradient into its persistent model shard
+    /// and serves current weights for the requested indices.
+    pub fn reduce_with_bottom<R: ReduceOp, F>(
+        &self,
+        values: Vec<Vec<R::T>>,
+        mut bottom_fn: F,
+    ) -> (Vec<Vec<R::T>>, Trace)
+    where
+        F: FnMut(usize, &[R::T]) -> Vec<R::T>,
+    {
+        let m = self.machines();
+        assert_eq!(values.len(), m);
+        let mut trace = Trace::new();
+        let mut current = values;
+
+        // -------- scatter-reduce (down) --------
+        for layer in 0..self.topo.layers() {
+            let k = self.topo.degree(layer);
+            let mut inbox: Vec<Vec<Vec<R::T>>> = vec![vec![Vec::new(); k]; m];
+            for n in 0..m {
+                let segs = self.nodes[n].reduce_down_outgoing::<R>(layer, &current[n]);
+                let group = self.topo.group(n, layer);
+                let my_slot = self.topo.digit(n, layer);
+                for (j, seg) in segs.into_iter().enumerate() {
+                    let dst = group[j];
+                    if dst != n {
+                        trace.record(
+                            Phase::ReduceDown,
+                            layer,
+                            n,
+                            dst,
+                            MSG_HEADER_BYTES + seg.len() * R::WIDTH,
+                        );
+                    }
+                    inbox[dst][my_slot] = seg.to_vec();
+                }
+            }
+            for n in 0..m {
+                let segs = std::mem::take(&mut inbox[n]);
+                let refs: Vec<&[R::T]> = segs.iter().map(|s| s.as_slice()).collect();
+                current[n] = self.nodes[n].reduce_down_absorb::<R>(layer, &refs);
+            }
+        }
+
+        // -------- bottom of the butterfly --------
+        for n in 0..m {
+            let out = bottom_fn(n, &current[n]);
+            assert_eq!(
+                out.len(),
+                self.nodes[n].bottom_up_set().len(),
+                "bottom_fn must return one value per requested bottom index"
+            );
+            current[n] = out;
+        }
+
+        // -------- allgather (up, through the same nodes) --------
+        for layer in (0..self.topo.layers()).rev() {
+            let k = self.topo.degree(layer);
+            let mut inbox: Vec<Vec<Vec<R::T>>> = vec![vec![Vec::new(); k]; m];
+            for n in 0..m {
+                let segs = self.nodes[n].reduce_up_outgoing::<R>(layer, &current[n]);
+                let group = self.topo.group(n, layer);
+                let my_slot = self.topo.digit(n, layer);
+                for (j, seg) in segs.into_iter().enumerate() {
+                    let dst = group[j];
+                    if dst != n {
+                        trace.record(
+                            Phase::ReduceUp,
+                            layer,
+                            n,
+                            dst,
+                            MSG_HEADER_BYTES + seg.len() * R::WIDTH,
+                        );
+                    }
+                    inbox[dst][my_slot] = seg;
+                }
+            }
+            for n in 0..m {
+                let segs = std::mem::take(&mut inbox[n]);
+                current[n] = self.nodes[n].reduce_up_absorb::<R>(layer, &segs);
+            }
+        }
+        (current, trace)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{OrU32, SumF32};
+    use crate::util::Pcg32;
+    use std::collections::HashMap;
+
+    /// Dense oracle: the global sum over all nodes' sparse contributions,
+    /// then projected on each node's inbound set.
+    fn oracle_f32(
+        range: i64,
+        outs: &[(Vec<i64>, Vec<f32>)],
+        ins: &[Vec<i64>],
+    ) -> Vec<Vec<f32>> {
+        let mut sum: HashMap<i64, f32> = HashMap::new();
+        for (idx, val) in outs {
+            for (&i, &v) in idx.iter().zip(val) {
+                *sum.entry(i).or_insert(0.0) += v;
+            }
+        }
+        let _ = range;
+        ins.iter()
+            .map(|req| req.iter().map(|i| *sum.get(i).unwrap_or(&0.0)).collect())
+            .collect()
+    }
+
+    fn random_case(
+        rng: &mut Pcg32,
+        m: usize,
+        range: i64,
+        out_n: usize,
+        in_n: usize,
+    ) -> (Vec<(Vec<i64>, Vec<f32>)>, Vec<Vec<i64>>) {
+        let outs: Vec<(Vec<i64>, Vec<f32>)> = (0..m)
+            .map(|_| {
+                let k = rng.gen_range(0, out_n + 1);
+                let idx: Vec<i64> = {
+                    let mut s = rng.sample_distinct(range as usize, k)
+                        .into_iter().map(|x| x as i64).collect::<Vec<_>>();
+                    s.sort_unstable();
+                    s
+                };
+                let val: Vec<f32> = idx.iter().map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+                (idx, val)
+            })
+            .collect();
+        let ins: Vec<Vec<i64>> = (0..m)
+            .map(|_| {
+                let k = rng.gen_range(0, in_n + 1);
+                let mut s = rng.sample_distinct(range as usize, k)
+                    .into_iter().map(|x| x as i64).collect::<Vec<_>>();
+                s.sort_unstable();
+                s
+            })
+            .collect();
+        (outs, ins)
+    }
+
+    fn run_and_check(degrees: Vec<usize>, range: i64, seed: u64) {
+        let topo = Butterfly::new(degrees.clone(), range);
+        let m = topo.machines();
+        let mut rng = Pcg32::new(seed);
+        let (outs, ins) = random_case(&mut rng, m, range, 60, 40);
+        let mut cluster = LocalCluster::new(topo);
+        cluster.config(
+            outs.iter().map(|(i, _)| IndexSet::from_sorted(i.clone())).collect(),
+            ins.iter().map(|i| IndexSet::from_sorted(i.clone())).collect(),
+        );
+        let (got, _trace) =
+            cluster.reduce::<SumF32>(outs.iter().map(|(_, v)| v.clone()).collect());
+        let want = oracle_f32(range, &outs, &ins);
+        for n in 0..m {
+            assert_eq!(got[n].len(), want[n].len(), "node {n} length");
+            for (g, w) in got[n].iter().zip(&want[n]) {
+                assert!(
+                    (g - w).abs() < 1e-4,
+                    "degrees {degrees:?} node {n}: got {g} want {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn correct_on_single_node() {
+        run_and_check(vec![1], 50, 1);
+    }
+
+    #[test]
+    fn correct_on_round_robin() {
+        run_and_check(vec![8], 300, 2);
+    }
+
+    #[test]
+    fn correct_on_binary_butterfly() {
+        run_and_check(vec![2, 2, 2], 300, 3);
+    }
+
+    #[test]
+    fn correct_on_heterogeneous() {
+        run_and_check(vec![4, 2], 500, 4);
+        run_and_check(vec![2, 4], 500, 5);
+        run_and_check(vec![3, 2], 333, 6);
+        run_and_check(vec![2, 3, 2], 640, 7);
+    }
+
+    #[test]
+    fn correct_on_paper_config_16x4() {
+        run_and_check(vec![16, 4], 4096, 8);
+    }
+
+    #[test]
+    fn correct_many_seeds() {
+        for seed in 10..30 {
+            run_and_check(vec![2, 2], 128, seed);
+        }
+    }
+
+    #[test]
+    fn or_reduce_semantics() {
+        let topo = Butterfly::new(vec![2, 2], 64);
+        let mut rng = Pcg32::new(77);
+        let m = 4;
+        let outs: Vec<(Vec<i64>, Vec<u32>)> = (0..m)
+            .map(|_| {
+                let mut idx: Vec<i64> =
+                    rng.sample_distinct(64, 10).into_iter().map(|x| x as i64).collect();
+                idx.sort_unstable();
+                let val: Vec<u32> = idx.iter().map(|_| rng.next_u32()).collect();
+                (idx, val)
+            })
+            .collect();
+        let ins: Vec<Vec<i64>> = (0..m).map(|_| (0..64).collect()).collect();
+        let mut cluster = LocalCluster::new(topo);
+        cluster.config(
+            outs.iter().map(|(i, _)| IndexSet::from_sorted(i.clone())).collect(),
+            ins.iter().map(|i| IndexSet::from_sorted(i.clone())).collect(),
+        );
+        let (got, _) = cluster.reduce::<OrU32>(outs.iter().map(|(_, v)| v.clone()).collect());
+        // oracle
+        let mut acc = vec![0u32; 64];
+        for (idx, val) in &outs {
+            for (&i, &v) in idx.iter().zip(val) {
+                acc[i as usize] |= v;
+            }
+        }
+        for n in 0..m {
+            assert_eq!(got[n], acc, "node {n}");
+        }
+    }
+
+    #[test]
+    fn empty_contributions_ok() {
+        let topo = Butterfly::new(vec![2, 2], 100);
+        let mut cluster = LocalCluster::new(topo);
+        let outs: Vec<IndexSet> = (0..4).map(|_| IndexSet::new()).collect();
+        let ins: Vec<IndexSet> =
+            (0..4).map(|n| IndexSet::from_unsorted(vec![n as i64 * 10])).collect();
+        cluster.config(outs, ins);
+        let (got, _) = cluster.reduce::<SumF32>(vec![vec![]; 4]);
+        for n in 0..4 {
+            assert_eq!(got[n], vec![0.0]);
+        }
+    }
+
+    #[test]
+    fn trace_has_no_self_messages_and_expected_count() {
+        let topo = Butterfly::new(vec![4, 2], 512);
+        let m = topo.machines();
+        let mut rng = Pcg32::new(42);
+        let (outs, ins) = random_case(&mut rng, m, 512, 100, 50);
+        let mut cluster = LocalCluster::new(topo);
+        let ct = cluster.config(
+            outs.iter().map(|(i, _)| IndexSet::from_sorted(i.clone())).collect(),
+            ins.iter().map(|i| IndexSet::from_sorted(i.clone())).collect(),
+        );
+        assert!(ct.msgs.iter().all(|r| r.src != r.dst));
+        // per layer: every node sends k-1 wire messages
+        assert_eq!(ct.len(), m * (4 - 1) + m * (2 - 1));
+        let (_, rt) = cluster.reduce::<SumF32>(outs.iter().map(|(_, v)| v.clone()).collect());
+        // down + up each have the same message count as config
+        assert_eq!(rt.len(), 2 * (m * 3 + m));
+        assert!(rt.msgs.iter().all(|r| r.src != r.dst));
+    }
+
+    #[test]
+    fn reduce_reusable_after_one_config() {
+        // config once, reduce twice with different values (PageRank mode)
+        let topo = Butterfly::new(vec![2, 2], 64);
+        let mut rng = Pcg32::new(88);
+        let (outs, ins) = random_case(&mut rng, 4, 64, 20, 10);
+        let mut cluster = LocalCluster::new(topo);
+        cluster.config(
+            outs.iter().map(|(i, _)| IndexSet::from_sorted(i.clone())).collect(),
+            ins.iter().map(|i| IndexSet::from_sorted(i.clone())).collect(),
+        );
+        let vals1: Vec<Vec<f32>> = outs.iter().map(|(_, v)| v.clone()).collect();
+        let vals2: Vec<Vec<f32>> =
+            outs.iter().map(|(_, v)| v.iter().map(|x| x * 3.0).collect()).collect();
+        let (got1, _) = cluster.reduce::<SumF32>(vals1);
+        let (got2, _) = cluster.reduce::<SumF32>(vals2);
+        for n in 0..4 {
+            for (a, b) in got1[n].iter().zip(&got2[n]) {
+                assert!((b - a * 3.0).abs() < 1e-3);
+            }
+        }
+    }
+}

@@ -1,0 +1,35 @@
+//! The Sparse Allreduce primitive (paper §III–§IV).
+//!
+//! Each machine contributes a sorted sparse vector (*outbound*: indices +
+//! values to be reduced) and requests a set of *inbound* indices whose
+//! reduced values it wants back. The protocol runs in two phases over a
+//! nested, heterogeneous-degree butterfly:
+//!
+//! * **config** — index plumbing only. Each layer splits the machine's
+//!   current index sets into contiguous range shards, exchanges them
+//!   within the layer group, unions what it receives, and records
+//!   position maps. For static graphs (PageRank) this runs once.
+//! * **reduce** — values only. A scatter-reduce flows *down* the layers
+//!   (split → exchange → scatter-combine via the recorded maps), the
+//!   final map projects the reduced bottom vector onto the requested
+//!   indices, and an allgather flows back *up through the same nodes*
+//!   (nested, not cascaded).
+//!
+//! The per-node state machine lives in [`protocol::NodeProtocol`]; it is
+//! pure (no I/O), so the same logic is driven by the sequential
+//! [`local::LocalCluster`] (tests, tracing, discrete-event simulation),
+//! the threaded cluster (real wall-clock runs), and the fault-tolerant
+//! replicated driver.
+
+pub mod baselines;
+pub mod combined;
+pub mod local;
+pub mod protocol;
+pub mod threaded;
+pub mod trace;
+
+pub use combined::{combined_config_reduce, CombinedResult};
+pub use local::LocalCluster;
+pub use protocol::{ConfigPart, ConfigState, NodeProtocol, Phase};
+pub use threaded::{run_cluster, NodeHandle};
+pub use trace::{MsgRecord, Trace};

@@ -1,0 +1,311 @@
+//! Threaded cluster driver: one OS thread per node over a shared
+//! [`Transport`], with opportunistic multi-threaded sends (paper §IV-C).
+//!
+//! Unlike the lockstep [`super::LocalCluster`], nodes here run truly
+//! concurrently: each node sends all its layer messages through a
+//! [`SenderPool`] (the Figure 7 thread-level knob) and absorbs whatever
+//! arrives, buffering out-of-order messages by `(tag, sender)` — nodes in
+//! different groups may legitimately be a layer apart.
+
+use super::protocol::{ConfigPart, NodeProtocol, Phase};
+use crate::sparse::{IndexSet, ReduceOp};
+use crate::topology::{Butterfly, NodeId};
+use crate::transport::{wire, Envelope, SenderPool, Tag, Transport, TransportError};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Per-node endpoint for running collectives over a transport.
+pub struct NodeHandle<T: Transport> {
+    proto: NodeProtocol,
+    transport: Arc<T>,
+    pool: SenderPool,
+    pending: HashMap<(Tag, NodeId), Vec<u8>>,
+    seq: u32,
+    timeout: Duration,
+}
+
+impl<T: Transport + 'static> NodeHandle<T> {
+    pub fn new(topo: Butterfly, node: NodeId, transport: Arc<T>, send_threads: usize) -> Self {
+        Self {
+            proto: NodeProtocol::new(topo, node),
+            transport,
+            pool: SenderPool::new(send_threads),
+            pending: HashMap::new(),
+            seq: 0,
+            timeout: Duration::from_secs(30),
+        }
+    }
+
+    pub fn node(&self) -> NodeId {
+        self.proto.node()
+    }
+
+    pub fn protocol(&self) -> &NodeProtocol {
+        &self.proto
+    }
+
+    pub fn set_timeout(&mut self, timeout: Duration) {
+        self.timeout = timeout;
+    }
+
+    /// Wait for the message `(tag, src)`, pulling from the pending buffer
+    /// or the transport.
+    fn await_msg(&mut self, tag: Tag, src: NodeId) -> Result<Vec<u8>, TransportError> {
+        if let Some(p) = self.pending.remove(&(tag, src)) {
+            return Ok(p);
+        }
+        loop {
+            let env = self.transport.recv(self.proto.node(), self.timeout)?;
+            if env.tag == tag && env.src == src {
+                return Ok(env.payload);
+            }
+            self.pending.insert((env.tag, env.src), env.payload);
+        }
+    }
+
+    /// One layer's group exchange: send `outgoing[j]` to slot `j` (self
+    /// slot skipped), await one payload from every other slot.
+    /// Returns slot-indexed payloads with `own` in our slot.
+    fn exchange(
+        &mut self,
+        phase: Phase,
+        layer: usize,
+        outgoing: Vec<Vec<u8>>,
+        own: Vec<u8>,
+    ) -> Result<Vec<Vec<u8>>, TransportError> {
+        let tag = Tag::new(self.seq, phase, layer);
+        let group = self.proto.group(layer);
+        let my_slot = self.proto.slot(layer);
+        debug_assert_eq!(outgoing.len(), group.len());
+        for (j, payload) in outgoing.into_iter().enumerate() {
+            if j == my_slot {
+                continue;
+            }
+            let env = Envelope { src: self.proto.node(), tag, payload };
+            self.pool.send(&self.transport, group[j], env);
+        }
+        let mut got: Vec<Vec<u8>> = vec![Vec::new(); group.len()];
+        for (j, &src) in group.iter().enumerate() {
+            if j == my_slot {
+                got[j] = own.clone();
+            } else {
+                got[j] = self.await_msg(tag, src)?;
+            }
+        }
+        let errs = self.pool.wait();
+        if let Some(e) = errs.into_iter().next() {
+            return Err(e);
+        }
+        Ok(got)
+    }
+
+    /// Run the config phase for this node.
+    pub fn config(
+        &mut self,
+        outbound: IndexSet,
+        inbound: IndexSet,
+    ) -> Result<(), TransportError> {
+        self.seq += 1;
+        self.proto.begin_config(outbound, inbound);
+        for layer in 0..self.proto.topology().layers() {
+            let parts = self.proto.config_outgoing(layer);
+            let my_slot = self.proto.slot(layer);
+            let own = wire::encode_config_part(&parts[my_slot]);
+            let outgoing: Vec<Vec<u8>> =
+                parts.iter().map(wire::encode_config_part).collect();
+            let got = self.exchange(Phase::ConfigDown, layer, outgoing, own)?;
+            let decoded: Vec<ConfigPart> =
+                got.iter().map(|b| wire::decode_config_part(b)).collect();
+            self.proto.config_absorb(layer, &decoded);
+        }
+        Ok(())
+    }
+
+    /// Run one reduce for this node: `values` aligned with the outbound
+    /// index set; returns values aligned with the inbound set.
+    pub fn reduce<R: ReduceOp>(&mut self, values: Vec<R::T>) -> Result<Vec<R::T>, TransportError> {
+        self.seq += 1;
+        let layers = self.proto.topology().layers();
+        let mut current = values;
+
+        for layer in 0..layers {
+            let segs = self.proto.reduce_down_outgoing::<R>(layer, &current);
+            let my_slot = self.proto.slot(layer);
+            let own = wire::encode_values::<R>(segs[my_slot]);
+            let outgoing: Vec<Vec<u8>> =
+                segs.iter().map(|s| wire::encode_values::<R>(s)).collect();
+            let got = self.exchange(Phase::ReduceDown, layer, outgoing, own)?;
+            let decoded: Vec<Vec<R::T>> =
+                got.iter().map(|b| wire::decode_values::<R>(b)).collect();
+            let refs: Vec<&[R::T]> = decoded.iter().map(|v| v.as_slice()).collect();
+            current = self.proto.reduce_down_absorb::<R>(layer, &refs);
+        }
+
+        current = self.proto.apply_final_map::<R>(&current);
+
+        for layer in (0..layers).rev() {
+            let segs = self.proto.reduce_up_outgoing::<R>(layer, &current);
+            let my_slot = self.proto.slot(layer);
+            let own = wire::encode_values::<R>(&segs[my_slot]);
+            let outgoing: Vec<Vec<u8>> =
+                segs.iter().map(|s| wire::encode_values::<R>(s)).collect();
+            let got = self.exchange(Phase::ReduceUp, layer, outgoing, own)?;
+            let decoded: Vec<Vec<R::T>> =
+                got.iter().map(|b| wire::decode_values::<R>(b)).collect();
+            current = self.proto.reduce_up_absorb::<R>(layer, &decoded);
+        }
+        Ok(current)
+    }
+}
+
+/// Spawn one thread per node, run `worker` on each, join, and return the
+/// per-node results in node order. Panics in workers are propagated.
+pub fn run_cluster<T, F, O>(topo: &Butterfly, transport: Arc<T>, send_threads: usize, worker: F) -> Vec<O>
+where
+    T: Transport + 'static,
+    O: Send + 'static,
+    F: Fn(NodeHandle<T>) -> O + Send + Sync + 'static,
+{
+    let worker = Arc::new(worker);
+    let mut handles = Vec::with_capacity(topo.machines());
+    for node in 0..topo.machines() {
+        let topo = topo.clone();
+        let transport = transport.clone();
+        let worker = worker.clone();
+        handles.push(std::thread::spawn(move || {
+            let h = NodeHandle::new(topo, node, transport, send_threads);
+            worker(h)
+        }));
+    }
+    handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allreduce::LocalCluster;
+    use crate::sparse::SumF32;
+    use crate::transport::{MemTransport, TcpNet};
+    use crate::util::Pcg32;
+
+    fn random_inputs(
+        m: usize,
+        range: i64,
+        seed: u64,
+    ) -> (Vec<(Vec<i64>, Vec<f32>)>, Vec<Vec<i64>>) {
+        let mut rng = Pcg32::new(seed);
+        let outs = (0..m)
+            .map(|_| {
+                let k = rng.gen_range(1, 60);
+                let mut idx: Vec<i64> = rng
+                    .sample_distinct(range as usize, k)
+                    .into_iter()
+                    .map(|x| x as i64)
+                    .collect();
+                idx.sort_unstable();
+                let val: Vec<f32> = idx.iter().map(|_| rng.next_f32()).collect();
+                (idx, val)
+            })
+            .collect();
+        let ins = (0..m)
+            .map(|_| {
+                let k = rng.gen_range(1, 40);
+                let mut idx: Vec<i64> = rng
+                    .sample_distinct(range as usize, k)
+                    .into_iter()
+                    .map(|x| x as i64)
+                    .collect();
+                idx.sort_unstable();
+                idx
+            })
+            .collect();
+        (outs, ins)
+    }
+
+    fn check_threaded_matches_local<T: Transport + 'static>(
+        topo: Butterfly,
+        transport: Arc<T>,
+        seed: u64,
+    ) {
+        let m = topo.machines();
+        let range = topo.index_range();
+        let (outs, ins) = random_inputs(m, range, seed);
+
+        // reference
+        let mut local = LocalCluster::new(topo.clone());
+        local.config(
+            outs.iter().map(|(i, _)| IndexSet::from_sorted(i.clone())).collect(),
+            ins.iter().map(|i| IndexSet::from_sorted(i.clone())).collect(),
+        );
+        let (want, _) = local.reduce::<SumF32>(outs.iter().map(|(_, v)| v.clone()).collect());
+
+        // threaded
+        let outs2 = outs.clone();
+        let ins2 = ins.clone();
+        let got = run_cluster(&topo, transport, 4, move |mut h: NodeHandle<T>| {
+            let n = h.node();
+            h.config(
+                IndexSet::from_sorted(outs2[n].0.clone()),
+                IndexSet::from_sorted(ins2[n].clone()),
+            )
+            .unwrap();
+            h.reduce::<SumF32>(outs2[n].1.clone()).unwrap()
+        });
+
+        for n in 0..m {
+            assert_eq!(got[n].len(), want[n].len());
+            for (g, w) in got[n].iter().zip(&want[n]) {
+                assert!((g - w).abs() < 1e-4, "node {n}");
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_mem_matches_local_4x2() {
+        let topo = Butterfly::new(vec![4, 2], 512);
+        let transport = Arc::new(MemTransport::new(topo.machines()));
+        check_threaded_matches_local(topo, transport, 11);
+    }
+
+    #[test]
+    fn threaded_mem_matches_local_2x2x2() {
+        let topo = Butterfly::new(vec![2, 2, 2], 1024);
+        let transport = Arc::new(MemTransport::new(topo.machines()));
+        check_threaded_matches_local(topo, transport, 12);
+    }
+
+    #[test]
+    fn threaded_tcp_matches_local() {
+        let topo = Butterfly::new(vec![2, 2], 256);
+        let transport = TcpNet::local(topo.machines()).unwrap();
+        check_threaded_matches_local(topo, transport, 13);
+    }
+
+    #[test]
+    fn repeated_reduces_same_config() {
+        let topo = Butterfly::new(vec![3, 2], 300);
+        let transport = Arc::new(MemTransport::new(topo.machines()));
+        let (outs, ins) = random_inputs(6, 300, 21);
+        let outs = Arc::new(outs);
+        let ins = Arc::new(ins);
+        let o2 = outs.clone();
+        let i2 = ins.clone();
+        let results = run_cluster(&topo, transport, 2, move |mut h| {
+            let n = h.node();
+            h.config(
+                IndexSet::from_sorted(o2[n].0.clone()),
+                IndexSet::from_sorted(i2[n].clone()),
+            )
+            .unwrap();
+            let r1 = h.reduce::<SumF32>(o2[n].1.clone()).unwrap();
+            let r2 = h.reduce::<SumF32>(o2[n].1.iter().map(|x| x * 2.0).collect()).unwrap();
+            (r1, r2)
+        });
+        for (r1, r2) in results {
+            for (a, b) in r1.iter().zip(&r2) {
+                assert!((b - a * 2.0).abs() < 1e-3);
+            }
+        }
+    }
+}

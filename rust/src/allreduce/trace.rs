@@ -1,0 +1,93 @@
+//! Message traces: every wire message (phase, layer, src, dst, bytes).
+//!
+//! Traces feed two consumers: the packet-size study (paper Figure 5) and
+//! the discrete-event network simulator (`simnet`), which replays a trace
+//! under a latency/bandwidth cost model to predict cluster-scale timing
+//! from a laptop run.
+
+use super::protocol::Phase;
+use crate::topology::NodeId;
+
+/// One wire message (self-deliveries are never recorded).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MsgRecord {
+    pub phase: Phase,
+    pub layer: usize,
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub bytes: usize,
+}
+
+/// An ordered message trace for one collective operation.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub msgs: Vec<MsgRecord>,
+}
+
+impl Trace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, phase: Phase, layer: usize, src: NodeId, dst: NodeId, bytes: usize) {
+        self.msgs.push(MsgRecord { phase, layer, src, dst, bytes });
+    }
+
+    pub fn len(&self) -> usize {
+        self.msgs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.msgs.is_empty()
+    }
+
+    /// Total bytes across all messages.
+    pub fn total_bytes(&self) -> usize {
+        self.msgs.iter().map(|m| m.bytes).sum()
+    }
+
+    /// Total bytes sent during a given phase+layer.
+    pub fn layer_bytes(&self, phase: Phase, layer: usize) -> usize {
+        self.msgs
+            .iter()
+            .filter(|m| m.phase == phase && m.layer == layer)
+            .map(|m| m.bytes)
+            .sum()
+    }
+
+    /// Mean per-message size at a phase+layer (the paper's Figure 5
+    /// "packet size at level" metric), in bytes.
+    pub fn mean_packet_bytes(&self, phase: Phase, layer: usize) -> f64 {
+        let msgs: Vec<&MsgRecord> =
+            self.msgs.iter().filter(|m| m.phase == phase && m.layer == layer).collect();
+        if msgs.is_empty() {
+            return 0.0;
+        }
+        msgs.iter().map(|m| m.bytes as f64).sum::<f64>() / msgs.len() as f64
+    }
+
+    /// Messages sent by one node.
+    pub fn sent_by(&self, node: NodeId) -> impl Iterator<Item = &MsgRecord> {
+        self.msgs.iter().filter(move |m| m.src == node)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting() {
+        let mut t = Trace::new();
+        t.record(Phase::ReduceDown, 0, 0, 1, 100);
+        t.record(Phase::ReduceDown, 0, 1, 0, 200);
+        t.record(Phase::ReduceDown, 1, 0, 2, 50);
+        t.record(Phase::ReduceUp, 1, 2, 0, 70);
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.total_bytes(), 420);
+        assert_eq!(t.layer_bytes(Phase::ReduceDown, 0), 300);
+        assert_eq!(t.mean_packet_bytes(Phase::ReduceDown, 0), 150.0);
+        assert_eq!(t.mean_packet_bytes(Phase::ReduceUp, 0), 0.0);
+        assert_eq!(t.sent_by(0).count(), 2);
+    }
+}

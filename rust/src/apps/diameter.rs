@@ -1,0 +1,331 @@
+//! HADI-style diameter estimation (paper §I-A2, eq. 3).
+//!
+//! Each vertex carries a neighbourhood sketch; one iteration replaces the
+//! sketch with the OR of its in-neighbours' sketches (plus its own), i.e.
+//! `b^{h+1} = G ×_or b^h` — implemented with the *same* Sparse Allreduce
+//! machinery as PageRank, just with the [`OrU32`] reduce operator.
+//!
+//! Two sketch modes:
+//! * **Exact** (graphs ≤ 32 vertices): sketch = one-hot vertex bitmask, so
+//!   the iteration computes exact reachability sets — used to validate the
+//!   OR-allreduce end to end against a BFS oracle.
+//! * **Flajolet–Martin** (any size): `K` 32-bit FM sketches per vertex;
+//!   the neighbourhood function `N(h)` is estimated as
+//!   `2^{b̄}/0.77351` where `b̄` is the mean position of the lowest zero
+//!   bit; the effective diameter is the smallest `h` with
+//!   `N(h) ≥ 0.9·N(h_max)`.
+
+use crate::allreduce::LocalCluster;
+use crate::graph::{Csr, EdgeList};
+use crate::partition::random_edge_partition;
+use crate::sparse::{spvec_from_pairs, IndexSet, OrU32};
+use crate::topology::Butterfly;
+use crate::util::Pcg32;
+
+/// Diameter estimation parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct DiameterConfig {
+    /// FM sketches per vertex (ignored in exact mode).
+    pub k_sketches: usize,
+    /// Maximum hops to run.
+    pub max_h: usize,
+    /// Exact one-hot mode (requires vertices ≤ 32).
+    pub exact: bool,
+    pub seed: u64,
+}
+
+impl Default for DiameterConfig {
+    fn default() -> Self {
+        Self { k_sketches: 8, max_h: 32, exact: false, seed: 7 }
+    }
+}
+
+/// Result of a diameter run.
+#[derive(Clone, Debug)]
+pub struct DiameterResult {
+    /// Estimated neighbourhood function N(h) for h = 1..=H.
+    pub neighbourhood: Vec<f64>,
+    /// Effective diameter (90th-percentile saturation).
+    pub effective_diameter: usize,
+    /// Hops actually executed (stops early on saturation).
+    pub hops_run: usize,
+}
+
+/// FM magic constant.
+const FM_PHI: f64 = 0.77351;
+
+fn fm_sketch(rng: &mut Pcg32) -> u32 {
+    // set bit i with probability 2^-(i+1): geometric position of the first
+    // success in a fair-coin sequence.
+    let r = rng.next_u32();
+    let pos = r.trailing_ones(); // P(pos = i) = 2^-(i+1)
+    1u32 << pos.min(31)
+}
+
+fn lowest_zero_bit(x: u32) -> u32 {
+    (!x).trailing_zeros()
+}
+
+/// Estimate N from K sketches: 2^mean(lowest-zero) / phi.
+fn estimate_count(sketches: &[u32]) -> f64 {
+    let mean: f64 =
+        sketches.iter().map(|&s| lowest_zero_bit(s) as f64).sum::<f64>() / sketches.len() as f64;
+    2f64.powf(mean) / FM_PHI
+}
+
+/// Run distributed HADI. Vertex `v`'s `K` sketches live at allreduce
+/// indices `v·K + k`.
+pub fn estimate_diameter(
+    graph: &EdgeList,
+    degrees: Vec<usize>,
+    cfg: &DiameterConfig,
+) -> DiameterResult {
+    let n = graph.vertices;
+    let k = if cfg.exact { 1 } else { cfg.k_sketches };
+    assert!(!cfg.exact || n <= 32, "exact mode needs ≤ 32 vertices");
+    let m: usize = degrees.iter().product();
+    let shards_edges = random_edge_partition(&graph.edges, m, cfg.seed);
+    let shards: Vec<Csr> =
+        shards_edges.iter().map(|es| Csr::from_edges(es, |_| 1.0)).collect();
+
+    // initial sketches for every vertex
+    let mut rng = Pcg32::new(cfg.seed ^ 0xD1A);
+    let init: Vec<Vec<u32>> = (0..n)
+        .map(|v| {
+            (0..k)
+                .map(|_| if cfg.exact { 1u32 << (v as u32) } else { fm_sketch(&mut rng) })
+                .collect()
+        })
+        .collect();
+
+    // Expanded index space: v*K + j. Every node tracks (inbound) and
+    // re-contributes (outbound) the sketches of ALL vertices its shard
+    // touches — rows ∪ cols. Contributing a vertex's old sketch keeps b^h
+    // monotone (self-retention) and is free under idempotent OR; rows
+    // additionally contribute the OR-SpMV of their in-neighbours. Node 0
+    // additionally monitors every vertex to evaluate N(h).
+    let expand = |verts: &[i64]| -> Vec<i64> {
+        let mut out = Vec::with_capacity(verts.len() * k);
+        for &v in verts {
+            for j in 0..k as i64 {
+                out.push(v * k as i64 + j);
+            }
+        }
+        out
+    };
+
+    let topo = Butterfly::new(degrees, n * k as i64);
+    let mut cluster = LocalCluster::new(topo);
+    // per-node tracked vertex list: rows ∪ cols (node 0: all vertices)
+    let tracked: Vec<Vec<i64>> = shards
+        .iter()
+        .enumerate()
+        .map(|(node, shard)| {
+            if node == 0 {
+                (0..n).collect()
+            } else {
+                let mut v = shard.row_globals.clone();
+                v.extend_from_slice(&shard.col_globals);
+                v.sort_unstable();
+                v.dedup();
+                v
+            }
+        })
+        .collect();
+    let outbound: Vec<IndexSet> =
+        tracked.iter().map(|t| IndexSet::from_sorted(expand(t))).collect();
+    let inbound = outbound.clone();
+    cluster.config(outbound, inbound);
+
+    // current sketches per node, aligned with `tracked[node] × K`
+    let mut cur: Vec<Vec<u32>> = tracked
+        .iter()
+        .map(|t| t.iter().flat_map(|&v| init[v as usize].clone()).collect())
+        .collect();
+
+    let mut neighbourhood = Vec::new();
+    let mut hops = 0usize;
+    for _h in 1..=cfg.max_h {
+        // build outbound contributions
+        let contributions: Vec<Vec<u32>> = shards
+            .iter()
+            .enumerate()
+            .map(|(node, shard)| {
+                let t = &tracked[node];
+                let pos_of = |v: i64| t.binary_search(&v).expect("tracked vertex") * k;
+                // cols slice of the node's current sketches
+                let cols: Vec<u32> = shard
+                    .col_globals
+                    .iter()
+                    .flat_map(|&v| {
+                        let p = pos_of(v);
+                        cur[node][p..p + k].to_vec()
+                    })
+                    .collect();
+                // sketch-wise OR-SpMV: for slot j, input = cols of slot j
+                let mut qs: Vec<Vec<u32>> = Vec::with_capacity(k);
+                for j in 0..k {
+                    let slice: Vec<u32> =
+                        (0..shard.cols()).map(|c| cols[c * k + j]).collect();
+                    qs.push(shard.spmv_or(&slice));
+                }
+                // contribution pairs: old sketch for every tracked vertex
+                // (self-retention) + OR-SpMV results for rows
+                let mut pairs: Vec<(i64, u32)> = Vec::new();
+                for (p, &v) in t.iter().enumerate() {
+                    for j in 0..k {
+                        pairs.push((v * k as i64 + j as i64, cur[node][p * k + j]));
+                    }
+                }
+                for (r, &v) in shard.row_globals.iter().enumerate() {
+                    for j in 0..k {
+                        pairs.push((v * k as i64 + j as i64, qs[j][r]));
+                    }
+                }
+                spvec_from_pairs::<OrU32>(pairs).val
+            })
+            .collect();
+
+        let (results, _trace) = cluster.reduce::<OrU32>(contributions);
+        cur = results;
+        hops += 1;
+
+        // node 0 evaluates N(h) over all vertices
+        let mut total = 0f64;
+        for v in 0..n as usize {
+            let sk = &cur[0][v * k..(v + 1) * k];
+            total += if cfg.exact {
+                sk[0].count_ones() as f64
+            } else {
+                estimate_count(sk)
+            };
+        }
+        neighbourhood.push(total);
+        // saturation: stop when N stops growing
+        if neighbourhood.len() >= 2 {
+            let prev = neighbourhood[neighbourhood.len() - 2];
+            if (total - prev).abs() < 1e-9 {
+                break;
+            }
+        }
+    }
+
+    let n_max = *neighbourhood.last().unwrap();
+    let effective = neighbourhood
+        .iter()
+        .position(|&x| x >= 0.9 * n_max)
+        .map(|i| i + 1)
+        .unwrap_or(hops);
+    DiameterResult { neighbourhood, effective_diameter: effective, hops_run: hops }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path_graph(n: i64) -> EdgeList {
+        EdgeList { vertices: n, edges: (0..n - 1).map(|i| (i, i + 1)).collect() }
+    }
+
+    #[test]
+    fn fm_sketch_bit_distribution() {
+        let mut rng = Pcg32::new(3);
+        let mut bit0 = 0usize;
+        let trials = 100_000;
+        for _ in 0..trials {
+            if fm_sketch(&mut rng) & 1 != 0 {
+                bit0 += 1;
+            }
+        }
+        let frac = bit0 as f64 / trials as f64;
+        assert!((frac - 0.5).abs() < 0.01, "P(bit0) = {frac}, want 0.5");
+    }
+
+    #[test]
+    fn estimate_count_scales() {
+        // a sketch with low bits set up to position p estimates ~2^p
+        let small = estimate_count(&[0b1]);
+        let large = estimate_count(&[0b1111_1111]);
+        assert!(large > 50.0 * small);
+    }
+
+    #[test]
+    fn exact_path_graph_diameter() {
+        // path 0→1→…→9: in-neighbourhood of vertex 9 saturates after 9
+        // hops; the exact neighbourhood function must grow for 9 rounds.
+        let g = path_graph(10);
+        let res = estimate_diameter(
+            &g,
+            vec![2],
+            &DiameterConfig { exact: true, max_h: 20, seed: 1, k_sketches: 1 },
+        );
+        // N(h) for a path: sum over v of min(h, v)+1 … saturates at h = 9.
+        assert_eq!(res.hops_run, 10, "should saturate exactly after the 9-hop diameter");
+        // exact N(h_max) = sum over v of (v+1) = 55
+        assert_eq!(*res.neighbourhood.last().unwrap() as i64, 55);
+        let mono = res.neighbourhood.windows(2).all(|w| w[1] >= w[0]);
+        assert!(mono, "neighbourhood function must be monotone");
+    }
+
+    #[test]
+    fn exact_matches_bfs_oracle_random_digraph() {
+        let mut rng = Pcg32::new(5);
+        let n = 20i64;
+        let edges: Vec<(i64, i64)> = (0..60)
+            .map(|_| {
+                loop {
+                    let u = rng.gen_range(0, n as usize) as i64;
+                    let v = rng.gen_range(0, n as usize) as i64;
+                    if u != v {
+                        return (u, v);
+                    }
+                }
+            })
+            .collect();
+        let g = EdgeList { vertices: n, edges };
+        let res = estimate_diameter(
+            &g,
+            vec![2, 2],
+            &DiameterConfig { exact: true, max_h: 30, seed: 2, k_sketches: 1 },
+        );
+        // BFS oracle: N(h) = Σ_v |{u : u reaches v within h hops}| over
+        // in-edges (including v itself).
+        let mut reach: Vec<u32> = (0..n).map(|v| 1u32 << v).collect();
+        let mut oracle = Vec::new();
+        for _h in 0..res.hops_run {
+            let mut next = reach.clone();
+            for &(u, v) in &g.edges {
+                next[v as usize] |= reach[u as usize];
+            }
+            reach = next;
+            oracle.push(reach.iter().map(|r| r.count_ones() as f64).sum::<f64>());
+        }
+        assert_eq!(res.neighbourhood.len(), oracle.len());
+        for (got, want) in res.neighbourhood.iter().zip(&oracle) {
+            assert_eq!(*got as i64, *want as i64);
+        }
+    }
+
+    #[test]
+    fn fm_mode_reasonable_on_star() {
+        // star: all vertices point at 0 → everyone is within 1 hop of 0;
+        // effective diameter should be small.
+        let n = 200i64;
+        let edges: Vec<(i64, i64)> = (1..n).map(|v| (v, 0)).collect();
+        let g = EdgeList { vertices: n, edges };
+        let res = estimate_diameter(
+            &g,
+            vec![2, 2],
+            &DiameterConfig { exact: false, k_sketches: 16, max_h: 10, seed: 3 },
+        );
+        assert!(res.effective_diameter <= 2, "star diameter {}", res.effective_diameter);
+        // FM estimate of the saturated neighbourhood should be within 3x
+        // of the truth (N_true = 2n - 1 = 399: vertex 0 sees everyone,
+        // others see themselves).
+        let n_est = *res.neighbourhood.last().unwrap();
+        assert!(
+            (100.0..1600.0).contains(&n_est),
+            "FM estimate {n_est} too far from 399"
+        );
+    }
+}

@@ -1,0 +1,19 @@
+//! Applications driven by Sparse Allreduce (paper §I-A, §III-B, §VI-E).
+//!
+//! * [`pagerank`] — the paper's headline benchmark: distributed PageRank
+//!   where each iteration's matrix-vector product is assembled with one
+//!   sparse (sum) allreduce; config runs once (static graph).
+//! * [`diameter`] — HADI diameter estimation: Flajolet–Martin
+//!   neighbourhood sketches combined with a bitwise-OR allreduce.
+//! * [`sgd`] — mini-batch sub-gradient training over a sharded sparse
+//!   model: dynamic config every step, gradients scatter-reduced into
+//!   per-owner model shards at the bottom of the butterfly, fresh model
+//!   values allgathered back (the paper's mini-batch use case).
+
+pub mod diameter;
+pub mod pagerank;
+pub mod sgd;
+
+pub use diameter::{DiameterConfig, DiameterResult};
+pub use pagerank::{serial_pagerank, DistPageRank, PageRankConfig, PageRankShards};
+pub use sgd::{GradEngine, NativeGradEngine, SgdConfig, Trainer};

@@ -1,0 +1,500 @@
+//! Mini-batch sub-gradient training over Sparse Allreduce (paper §I-A1,
+//! §III-B "Mini-Batch Algorithm").
+//!
+//! The model is a multi-class linear classifier `W ∈ R^{F×C}` over a huge
+//! sparse feature space, sharded across the cluster by the butterfly's
+//! bottom-layer owner ranges (allreduce index = `hash(feature)·C + class`).
+//! Every step, each worker:
+//!
+//! 1. samples a mini-batch whose active features follow the data's
+//!    power-law;
+//! 2. `config(out = previous batch's features, in = this batch's
+//!    features)` — configs are dynamic, re-run every step exactly as in
+//!    the paper's mini-batch pseudo-code;
+//! 3. one `reduce` pushes the *previous* step's gradient down the
+//!    butterfly (scatter-reduced into the persistent owner shards — the
+//!    parameter-server bottom) and gathers fresh weights for the current
+//!    batch back up (the paper's `in.values = reduce(out.values)`);
+//! 4. computes loss and gradient on the gathered sub-model with a
+//!    [`GradEngine`] — natively in Rust for tests, or through the AOT
+//!    JAX/Pallas artifact via PJRT in production (`runtime::XlaGradEngine`).
+//!
+//! The one-step gradient delay is the paper's own semantics (push happens
+//! before the next model fetch on the same indices).
+
+use crate::allreduce::LocalCluster;
+use crate::partition::IndexHasher;
+use crate::sparse::{IndexSet, SumF32};
+use crate::topology::Butterfly;
+use crate::util::{Pcg32, Zipf};
+use std::collections::HashMap;
+
+/// One sparse training example.
+#[derive(Clone, Debug)]
+pub struct Example {
+    /// (feature id, value) pairs; feature ids are raw (un-hashed).
+    pub feats: Vec<(i64, f32)>,
+    pub label: u32,
+}
+
+/// Synthetic power-law classification data with a planted linear model.
+#[derive(Clone, Debug)]
+pub struct SynthData {
+    pub features: i64,
+    pub classes: usize,
+    pub feats_per_example: usize,
+    pub zipf_alpha: f64,
+    zipf: Zipf,
+}
+
+impl SynthData {
+    pub fn new(features: i64, classes: usize, feats_per_example: usize, zipf_alpha: f64) -> Self {
+        Self {
+            features,
+            classes,
+            feats_per_example,
+            zipf_alpha,
+            zipf: Zipf::new(features as u64, zipf_alpha),
+        }
+    }
+
+    /// Planted ground-truth weight for (feature, class) — procedural, so
+    /// the full `F×C` matrix is never materialized.
+    pub fn true_weight(&self, feat: i64, class: usize) -> f32 {
+        let mut z = (feat as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ (class as u64) << 32;
+        z ^= z >> 29;
+        z = z.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z ^= z >> 32;
+        ((z as f64 / u64::MAX as f64) as f32 - 0.5) * 2.0
+    }
+
+    /// Sample one example: Zipf features, label = argmax of the planted
+    /// model's logits (so the task is realizable).
+    pub fn example(&self, rng: &mut Pcg32) -> Example {
+        let mut feats: Vec<(i64, f32)> = Vec::with_capacity(self.feats_per_example);
+        let mut seen = std::collections::HashSet::new();
+        while feats.len() < self.feats_per_example {
+            let f = self.zipf.sample(rng) as i64;
+            if seen.insert(f) {
+                feats.push((f, 1.0));
+            }
+        }
+        feats.sort_unstable_by_key(|&(f, _)| f);
+        let mut logits = vec![0f32; self.classes];
+        for &(f, x) in &feats {
+            for (c, l) in logits.iter_mut().enumerate() {
+                *l += x * self.true_weight(f, c);
+            }
+        }
+        let label = logits
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0 as u32;
+        Example { feats, label }
+    }
+
+    pub fn batch(&self, rng: &mut Pcg32, size: usize) -> Vec<Example> {
+        (0..size).map(|_| self.example(rng)).collect()
+    }
+}
+
+/// A mini-batch densified against its active-feature dictionary.
+#[derive(Clone, Debug)]
+pub struct DenseBatch {
+    /// Sorted distinct raw feature ids active in the batch.
+    pub active: Vec<i64>,
+    /// Row-major `[batch × active.len()]` feature values.
+    pub x: Vec<f32>,
+    pub labels: Vec<u32>,
+}
+
+impl DenseBatch {
+    pub fn from_examples(examples: &[Example]) -> DenseBatch {
+        let mut active: Vec<i64> =
+            examples.iter().flat_map(|e| e.feats.iter().map(|&(f, _)| f)).collect();
+        active.sort_unstable();
+        active.dedup();
+        let n = active.len();
+        let mut x = vec![0f32; examples.len() * n];
+        for (b, e) in examples.iter().enumerate() {
+            for &(f, v) in &e.feats {
+                let j = active.binary_search(&f).unwrap();
+                x[b * n + j] = v;
+            }
+        }
+        DenseBatch { active, x, labels: examples.iter().map(|e| e.label).collect() }
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.labels.len()
+    }
+}
+
+/// Computes loss and gradient of softmax cross-entropy for a densified
+/// mini-batch against the gathered sub-model.
+pub trait GradEngine {
+    /// `w_sub` is row-major `[active × classes]`. Returns (mean loss,
+    /// gradient of the same shape as `w_sub`).
+    fn grad(&mut self, batch: &DenseBatch, w_sub: &[f32], classes: usize) -> (f32, Vec<f32>);
+}
+
+/// Pure-Rust reference engine (the test oracle; production uses the
+/// JAX/Pallas AOT artifact through `runtime::XlaGradEngine`, which must
+/// agree with this to 1e-4).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeGradEngine;
+
+impl GradEngine for NativeGradEngine {
+    fn grad(&mut self, batch: &DenseBatch, w_sub: &[f32], classes: usize) -> (f32, Vec<f32>) {
+        let n = batch.active.len();
+        let bsz = batch.batch_size();
+        assert_eq!(w_sub.len(), n * classes);
+        let mut loss = 0f32;
+        let mut grad = vec![0f32; n * classes];
+        let mut logits = vec![0f32; classes];
+        let mut probs = vec![0f32; classes];
+        for b in 0..bsz {
+            let xrow = &batch.x[b * n..(b + 1) * n];
+            // logits = x · W
+            logits.iter_mut().for_each(|l| *l = 0.0);
+            for (j, &xv) in xrow.iter().enumerate() {
+                if xv != 0.0 {
+                    let wrow = &w_sub[j * classes..(j + 1) * classes];
+                    for (l, &w) in logits.iter_mut().zip(wrow) {
+                        *l += xv * w;
+                    }
+                }
+            }
+            // stable softmax
+            let maxl = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut z = 0f32;
+            for (p, &l) in probs.iter_mut().zip(&logits) {
+                *p = (l - maxl).exp();
+                z += *p;
+            }
+            probs.iter_mut().for_each(|p| *p /= z);
+            let y = batch.labels[b] as usize;
+            loss += -(probs[y].max(1e-12)).ln();
+            // grad += x^T (p - onehot(y))
+            for (j, &xv) in xrow.iter().enumerate() {
+                if xv != 0.0 {
+                    let grow = &mut grad[j * classes..(j + 1) * classes];
+                    for (c, g) in grow.iter_mut().enumerate() {
+                        let ind = if c == y { 1.0 } else { 0.0 };
+                        *g += xv * (probs[c] - ind);
+                    }
+                }
+            }
+        }
+        let inv = 1.0 / bsz as f32;
+        grad.iter_mut().for_each(|g| *g *= inv);
+        (loss * inv, grad)
+    }
+}
+
+/// Trainer configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SgdConfig {
+    pub classes: usize,
+    pub batch_per_worker: usize,
+    pub lr: f32,
+    pub seed: u64,
+}
+
+impl Default for SgdConfig {
+    fn default() -> Self {
+        Self { classes: 8, batch_per_worker: 32, lr: 0.5, seed: 123 }
+    }
+}
+
+/// Alignment between a raw active-feature dictionary and the sorted,
+/// hash-permuted allreduce index space.
+#[derive(Clone, Debug, Default)]
+struct ExpandMap {
+    /// Sorted expanded allreduce indices (`hash(feat)·C + class`).
+    indices: Vec<i64>,
+    /// `order[jj]` = raw-dictionary position of the jj-th hashed feature.
+    order: Vec<usize>,
+    classes: usize,
+}
+
+impl ExpandMap {
+    /// Reorder row-major `[active × classes]` values into expanded-index
+    /// order (for pushing gradients).
+    fn scatter(&self, row_major: &[f32]) -> Vec<f32> {
+        let c = self.classes;
+        let mut out = Vec::with_capacity(self.indices.len());
+        for &j in &self.order {
+            out.extend_from_slice(&row_major[j * c..(j + 1) * c]);
+        }
+        out
+    }
+
+    /// Inverse of [`Self::scatter`]: expanded-order values back to
+    /// row-major `[active × classes]` (for gathered weights).
+    fn gather(&self, expanded: &[f32]) -> Vec<f32> {
+        let c = self.classes;
+        let mut out = vec![0f32; expanded.len()];
+        for (jj, &j) in self.order.iter().enumerate() {
+            out[j * c..(j + 1) * c].copy_from_slice(&expanded[jj * c..(jj + 1) * c]);
+        }
+        out
+    }
+}
+
+/// Distributed mini-batch SGD trainer (sequential lockstep driver).
+pub struct Trainer<E: GradEngine> {
+    cluster: LocalCluster,
+    engines: Vec<E>,
+    data: SynthData,
+    cfg: SgdConfig,
+    hasher: IndexHasher,
+    rngs: Vec<Pcg32>,
+    /// Persistent model shards: bottom owner → (allreduce index → weight).
+    shards: Vec<HashMap<i64, f32>>,
+    /// Per worker: previous step's (expanded indices, expanded-order grad).
+    pending_push: Vec<(Vec<i64>, Vec<f32>)>,
+    pub losses: Vec<f32>,
+    pub step_count: usize,
+}
+
+impl<E: GradEngine> Trainer<E> {
+    /// `features` is the raw feature-space size; allreduce index range is
+    /// `features · classes`.
+    pub fn new(degrees: Vec<usize>, data: SynthData, cfg: SgdConfig, engines: Vec<E>) -> Self {
+        let m: usize = degrees.iter().product();
+        assert_eq!(engines.len(), m);
+        let range = data.features * data.classes as i64;
+        let topo = Butterfly::new(degrees, range);
+        let cluster = LocalCluster::new(topo);
+        let hasher = IndexHasher::new(data.features as u64, cfg.seed ^ 0xFEA7);
+        let mut root = Pcg32::new(cfg.seed);
+        let rngs = (0..m).map(|i| root.fork(i as u64)).collect();
+        Self {
+            cluster,
+            engines,
+            data,
+            cfg,
+            hasher,
+            rngs,
+            shards: (0..m).map(|_| HashMap::new()).collect(),
+            pending_push: (0..m).map(|_| (Vec::new(), Vec::new())).collect(),
+            losses: Vec::new(),
+            step_count: 0,
+        }
+    }
+
+    pub fn machines(&self) -> usize {
+        self.engines.len()
+    }
+
+    /// Expansion of a sorted raw active-feature list into sorted hashed
+    /// per-class allreduce indices, plus the permutation needed to align
+    /// row-major `[active × classes]` values with that sorted index list.
+    fn expand(&self, feats: &[i64]) -> ExpandMap {
+        let c = self.cfg.classes;
+        let hashed: Vec<i64> = feats.iter().map(|&f| self.hasher.hash(f)).collect();
+        let mut order: Vec<usize> = (0..feats.len()).collect();
+        order.sort_unstable_by_key(|&j| hashed[j]);
+        let mut indices = Vec::with_capacity(feats.len() * c);
+        for &j in &order {
+            for cls in 0..c as i64 {
+                indices.push(hashed[j] * c as i64 + cls);
+            }
+        }
+        ExpandMap { indices, order, classes: c }
+    }
+
+    /// Run one global training step. Returns mean loss across workers.
+    pub fn step(&mut self) -> f32 {
+        let m = self.machines();
+        // 1. sample batches + densify
+        let batches: Vec<DenseBatch> = (0..m)
+            .map(|w| {
+                let exs = self.data.batch(&mut self.rngs[w], self.cfg.batch_per_worker);
+                DenseBatch::from_examples(&exs)
+            })
+            .collect();
+
+        // 2. dynamic config: outbound = last step's gradient indices,
+        //    inbound = this step's active features (both class-expanded).
+        let maps: Vec<ExpandMap> = batches.iter().map(|b| self.expand(&b.active)).collect();
+        let outbound: Vec<IndexSet> = self
+            .pending_push
+            .iter()
+            .map(|(idx, _)| IndexSet::from_sorted(idx.clone()))
+            .collect();
+        let inbound: Vec<IndexSet> =
+            maps.iter().map(|m| IndexSet::from_sorted(m.indices.clone())).collect();
+        self.cluster.config(outbound, inbound);
+
+        // 3. one reduce: push pending gradients into the owner shards,
+        //    pull fresh weights for the current batches.
+        let push_values: Vec<Vec<f32>> =
+            self.pending_push.iter().map(|(_, v)| v.clone()).collect();
+        let shards = &mut self.shards;
+        let lr = self.cfg.lr;
+        let cluster = &self.cluster;
+        let (weights, _trace) = cluster.reduce_with_bottom::<SumF32, _>(push_values, |node, reduced| {
+            let down = cluster.node(node).bottom_down_set();
+            let up = cluster.node(node).bottom_up_set();
+            let shard = &mut shards[node];
+            for (&idx, &g) in down.as_slice().iter().zip(reduced) {
+                *shard.entry(idx).or_insert(0.0) -= lr * g;
+            }
+            up.as_slice().iter().map(|i| *shard.get(i).unwrap_or(&0.0)).collect()
+        });
+
+        // 4. compute gradients on the gathered sub-models
+        let mut mean_loss = 0f32;
+        for w in 0..m {
+            let w_sub = maps[w].gather(&weights[w]);
+            let (loss, grad) = self.engines[w].grad(&batches[w], &w_sub, self.cfg.classes);
+            mean_loss += loss;
+            self.pending_push[w] = (maps[w].indices.clone(), maps[w].scatter(&grad));
+        }
+        mean_loss /= m as f32;
+        self.losses.push(mean_loss);
+        self.step_count += 1;
+        mean_loss
+    }
+
+    /// Current weight of a (feature, class) pair, reading the owner shard.
+    pub fn weight(&self, feat: i64, class: usize) -> f32 {
+        let idx = self.hasher.hash(feat) * self.cfg.classes as i64 + class as i64;
+        for shard in &self.shards {
+            if let Some(&w) = shard.get(&idx) {
+                return w;
+            }
+        }
+        0.0
+    }
+
+    /// Total parameters touched so far (live entries across shards).
+    pub fn live_params(&self) -> usize {
+        self.shards.iter().map(|s| s.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mean(xs: &[f32]) -> f32 {
+        xs.iter().sum::<f32>() / xs.len() as f32
+    }
+
+    #[test]
+    fn dense_batch_construction() {
+        let exs = vec![
+            Example { feats: vec![(3, 1.0), (7, 2.0)], label: 0 },
+            Example { feats: vec![(7, 1.0)], label: 1 },
+        ];
+        let b = DenseBatch::from_examples(&exs);
+        assert_eq!(b.active, vec![3, 7]);
+        assert_eq!(b.x, vec![1.0, 2.0, 0.0, 1.0]);
+        assert_eq!(b.labels, vec![0, 1]);
+    }
+
+    #[test]
+    fn native_grad_matches_finite_differences() {
+        let mut rng = Pcg32::new(2);
+        let data = SynthData::new(50, 4, 5, 1.1);
+        let exs = data.batch(&mut rng, 6);
+        let batch = DenseBatch::from_examples(&exs);
+        let n = batch.active.len();
+        let c = 4usize;
+        let w: Vec<f32> = (0..n * c).map(|_| rng.next_f32() - 0.5).collect();
+        let mut engine = NativeGradEngine;
+        let (_, grad) = engine.grad(&batch, &w, c);
+        let eps = 1e-3f32;
+        for probe in [0usize, n * c / 2, n * c - 1] {
+            let mut wp = w.clone();
+            wp[probe] += eps;
+            let (lp, _) = engine.grad(&batch, &wp, c);
+            let mut wm = w.clone();
+            wm[probe] -= eps;
+            let (lm, _) = engine.grad(&batch, &wm, c);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - grad[probe]).abs() < 2e-2 * (1.0 + fd.abs()),
+                "param {probe}: fd {fd} vs grad {}",
+                grad[probe]
+            );
+        }
+    }
+
+    #[test]
+    fn loss_decreases_single_machine() {
+        let data = SynthData::new(200, 4, 6, 1.05);
+        let cfg = SgdConfig { classes: 4, batch_per_worker: 64, lr: 1.5, seed: 7 };
+        let mut t = Trainer::new(vec![1], data, cfg, vec![NativeGradEngine]);
+        for _ in 0..200 {
+            t.step();
+        }
+        let early = mean(&t.losses[1..6]);
+        let late = mean(&t.losses[195..200]);
+        assert!(
+            late < early * 0.7,
+            "loss did not decrease: early {early:.4} late {late:.4}"
+        );
+    }
+
+    #[test]
+    fn loss_decreases_distributed() {
+        let data = SynthData::new(200, 4, 6, 1.05);
+        let cfg = SgdConfig { classes: 4, batch_per_worker: 32, lr: 1.0, seed: 8 };
+        let mut t = Trainer::new(
+            vec![2, 2],
+            data,
+            cfg,
+            vec![NativeGradEngine; 4],
+        );
+        for _ in 0..200 {
+            t.step();
+        }
+        let early = mean(&t.losses[1..6]);
+        let late = mean(&t.losses[195..200]);
+        assert!(
+            late < early * 0.7,
+            "distributed loss did not decrease: early {early:.4} late {late:.4}"
+        );
+        assert!(t.live_params() > 0);
+    }
+
+    #[test]
+    fn model_shards_are_disjoint() {
+        let data = SynthData::new(300, 4, 6, 1.1);
+        let cfg = SgdConfig { classes: 4, batch_per_worker: 8, lr: 0.2, seed: 9 };
+        let mut t = Trainer::new(vec![4], data, cfg, vec![NativeGradEngine; 4]);
+        for _ in 0..5 {
+            t.step();
+        }
+        let mut seen = std::collections::HashSet::new();
+        for shard in &t.shards {
+            for &k in shard.keys() {
+                assert!(seen.insert(k), "index {k} owned by two shards");
+            }
+        }
+    }
+
+    #[test]
+    fn synth_labels_are_realizable() {
+        // the planted model classifies its own samples consistently
+        let data = SynthData::new(200, 4, 5, 1.2);
+        let mut rng = Pcg32::new(4);
+        let e1 = data.example(&mut rng);
+        // recompute label from true weights
+        let mut logits = vec![0f32; 4];
+        for &(f, x) in &e1.feats {
+            for (c, l) in logits.iter_mut().enumerate() {
+                *l += x * data.true_weight(f, c);
+            }
+        }
+        let argmax =
+            logits.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        assert_eq!(argmax as u32, e1.label);
+    }
+}

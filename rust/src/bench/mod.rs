@@ -1,0 +1,105 @@
+//! Bench harness (the vendor set has no criterion, so `cargo bench`
+//! targets are `harness = false` binaries built on this module).
+//!
+//! Provides warmup + repeated measurement with order statistics, and the
+//! experiment-table printer used by every `benches/*.rs` target to emit
+//! the paper-style rows recorded in EXPERIMENTS.md.
+
+use crate::util::{human_duration, Summary};
+use std::time::Instant;
+
+/// Measurement options.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchOpts {
+    pub warmup_iters: usize,
+    pub measure_iters: usize,
+}
+
+impl Default for BenchOpts {
+    fn default() -> Self {
+        Self { warmup_iters: 2, measure_iters: 7 }
+    }
+}
+
+/// Timing result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub secs: Summary,
+}
+
+impl BenchResult {
+    pub fn median(&self) -> f64 {
+        self.secs.p50
+    }
+}
+
+/// Run `f` with warmup and return timing stats. `f` should perform one
+/// complete operation per call.
+pub fn bench<F: FnMut()>(name: &str, opts: &BenchOpts, mut f: F) -> BenchResult {
+    for _ in 0..opts.warmup_iters {
+        f();
+    }
+    let mut samples = Vec::with_capacity(opts.measure_iters);
+    for _ in 0..opts.measure_iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    let r = BenchResult { name: name.to_string(), secs: Summary::of(&samples) };
+    eprintln!(
+        "  bench {:<40} p50 {:>12}  p90 {:>12}  (n={})",
+        r.name,
+        human_duration(r.secs.p50),
+        human_duration(r.secs.p90),
+        r.secs.n
+    );
+    r
+}
+
+/// Print a section header for a paper experiment.
+pub fn section(experiment: &str, description: &str) {
+    println!("\n## {experiment}");
+    println!("{description}\n");
+}
+
+/// Print a markdown table (convenience wrapper over `metrics::Table`).
+pub fn print_table(header: &[&str], rows: &[Vec<String>]) {
+    let mut t = crate::metrics::Table::new(header);
+    for r in rows {
+        t.row(r.clone());
+    }
+    print!("{}", t.to_markdown());
+}
+
+/// Throughput in the paper's unit: billions of input values reduced per
+/// second (§VI-B).
+pub fn throughput_bvals_per_sec(total_values: usize, secs: f64) -> f64 {
+    if secs <= 0.0 {
+        return 0.0;
+    }
+    total_values as f64 / secs / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_requested_iterations() {
+        let mut count = 0usize;
+        let opts = BenchOpts { warmup_iters: 3, measure_iters: 5 };
+        let r = bench("noop", &opts, || {
+            count += 1;
+        });
+        assert_eq!(count, 8);
+        assert_eq!(r.secs.n, 5);
+        assert!(r.median() >= 0.0);
+    }
+
+    #[test]
+    fn throughput_math() {
+        assert!((throughput_bvals_per_sec(2_000_000_000, 2.0) - 1.0).abs() < 1e-9);
+        assert_eq!(throughput_bvals_per_sec(100, 0.0), 0.0);
+    }
+}

@@ -1,0 +1,165 @@
+//! Hand-rolled CLI argument parsing (no clap in the offline vendor set).
+//!
+//! Grammar: `sar <subcommand> [--flag value]... [--switch]...`
+//! Flags may also be written `--flag=value`.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        let subcommand = it.next().unwrap_or_default();
+        let mut flags = BTreeMap::new();
+        let mut switches = Vec::new();
+        while let Some(arg) = it.next() {
+            let Some(name) = arg.strip_prefix("--") else {
+                bail!("unexpected positional argument `{arg}`");
+            };
+            if name.is_empty() {
+                bail!("empty flag name");
+            }
+            if let Some((k, v)) = name.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
+            } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                flags.insert(name.to_string(), it.next().unwrap());
+            } else {
+                switches.push(name.to_string());
+            }
+        }
+        Ok(Args { subcommand, flags, switches })
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn has_switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    pub fn usize_flag(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name} expects an integer, got `{v}`")),
+        }
+    }
+
+    pub fn u64_flag(&self, name: &str, default: u64) -> Result<u64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name} expects an integer, got `{v}`")),
+        }
+    }
+
+    pub fn f64_flag(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{name} expects a number, got `{v}`")),
+        }
+    }
+
+    /// Parse `--degrees 16x4` (or `16,4`) into a degree schedule.
+    pub fn degrees_flag(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.flag(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => parse_degrees(v),
+        }
+    }
+}
+
+/// Parse a degree schedule like `16x4`, `8x4x2` or `16,4`.
+pub fn parse_degrees(s: &str) -> Result<Vec<usize>> {
+    let parts: Vec<&str> = s.split(['x', ',', 'X']).collect();
+    let mut out = Vec::with_capacity(parts.len());
+    for p in parts {
+        let k: usize = p.trim().parse().map_err(|_| anyhow::anyhow!("bad degree `{p}` in `{s}`"))?;
+        if k == 0 {
+            bail!("degree 0 in `{s}`");
+        }
+        out.push(k);
+    }
+    if out.is_empty() {
+        bail!("empty degree schedule");
+    }
+    Ok(out)
+}
+
+/// Top-level usage text.
+pub const USAGE: &str = "\
+sparse-allreduce (sar) — Sparse Allreduce for power-law data (Zhao & Canny 2013)
+
+USAGE: sar <command> [flags]
+
+COMMANDS:
+  info                         show build/runtime info (PJRT platform, artifacts)
+  plan      --mbytes <f> --machines <m> [--floor-mb <f>]
+                               pick a butterfly degree schedule (paper §IV-B)
+  pagerank  [--dataset twitter|yahoo|docterm] [--scale f] [--degrees 16x4]
+            [--iters n] [--threads t] [--seed s]
+                               distributed PageRank on a synthetic power-law graph
+  diameter  [--scale f] [--degrees 4x2] [--sketches k] [--seed s]
+                               HADI effective-diameter estimation (OR-allreduce)
+  train     [--features n] [--classes c] [--steps n] [--degrees 2x2]
+            [--batch b] [--lr f] [--native] [--seed s]
+                               distributed mini-batch SGD (XLA engine by default)
+  config-check --file <path>   validate a cluster config file
+
+Set SAR_LOG=debug for verbose logging.";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = args(&["pagerank", "--iters", "10", "--degrees=16x4", "--verbose"]);
+        assert_eq!(a.subcommand, "pagerank");
+        assert_eq!(a.flag("iters"), Some("10"));
+        assert_eq!(a.flag("degrees"), Some("16x4"));
+        assert!(a.has_switch("verbose"));
+        assert!(!a.has_switch("quiet"));
+    }
+
+    #[test]
+    fn typed_flags() {
+        let a = args(&["x", "--n", "5", "--f", "2.5"]);
+        assert_eq!(a.usize_flag("n", 1).unwrap(), 5);
+        assert_eq!(a.usize_flag("missing", 7).unwrap(), 7);
+        assert!((a.f64_flag("f", 0.0).unwrap() - 2.5).abs() < 1e-12);
+        assert!(a.usize_flag("f", 0).is_err());
+    }
+
+    #[test]
+    fn degrees_formats() {
+        assert_eq!(parse_degrees("16x4").unwrap(), vec![16, 4]);
+        assert_eq!(parse_degrees("8,4,2").unwrap(), vec![8, 4, 2]);
+        assert_eq!(parse_degrees("64").unwrap(), vec![64]);
+        assert!(parse_degrees("0x4").is_err());
+        assert!(parse_degrees("ax4").is_err());
+    }
+
+    #[test]
+    fn positional_rejected() {
+        assert!(Args::parse(vec!["cmd".to_string(), "stray".to_string()]).is_err());
+    }
+
+    #[test]
+    fn empty_argv() {
+        let a = Args::parse(Vec::<String>::new()).unwrap();
+        assert_eq!(a.subcommand, "");
+    }
+}

@@ -1,0 +1,12 @@
+//! Run-configuration system: a minimal TOML-subset parser + typed schema.
+//!
+//! The offline vendor set has no `serde`/`toml`, so this module implements
+//! the subset the launcher needs: `[section]` headers, `key = value` with
+//! string / integer / float / bool / array-of-integer values, `#`
+//! comments. See `examples/cluster.toml` for the reference file.
+
+pub mod schema;
+pub mod toml;
+
+pub use schema::RunConfig;
+pub use toml::{parse_toml, TomlValue};

@@ -1,0 +1,176 @@
+//! Typed run configuration: the launcher's view of a cluster config file,
+//! with defaults matching the paper's tuned 64-node setup.
+
+use super::toml::{parse_toml, TomlValue};
+use crate::simnet::CostModel;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Fully-resolved run configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunConfig {
+    /// Butterfly degree schedule (paper's best 64-node config: 16×4).
+    pub degrees: Vec<usize>,
+    /// Replication factor (1 = none).
+    pub replication: usize,
+    /// Sender threads per node (paper Figure 7 plateaus at ~8).
+    pub send_threads: usize,
+    /// Network cost model for simulated runs.
+    pub cost: CostModel,
+    /// Dataset preset name (twitter | yahoo | docterm).
+    pub dataset: String,
+    /// Dataset scale multiplier.
+    pub scale: f64,
+    /// Iterations to run.
+    pub iters: usize,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            degrees: vec![16, 4],
+            replication: 1,
+            send_threads: 8,
+            cost: CostModel::ec2_2013(),
+            dataset: "twitter".to_string(),
+            scale: 0.1,
+            iters: 10,
+            seed: 42,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse from TOML-subset text; unspecified keys keep defaults.
+    pub fn from_toml(text: &str) -> Result<RunConfig> {
+        let map = parse_toml(text).context("parsing config")?;
+        Self::from_map(&map)
+    }
+
+    fn from_map(map: &BTreeMap<String, TomlValue>) -> Result<RunConfig> {
+        let mut cfg = RunConfig::default();
+        for (key, val) in map {
+            match key.as_str() {
+                "topology.degrees" => {
+                    let arr = val.as_int_array().context("degrees must be an int array")?;
+                    if arr.is_empty() || arr.iter().any(|&k| k < 1) {
+                        bail!("degrees must be non-empty positive ints");
+                    }
+                    cfg.degrees = arr.iter().map(|&k| k as usize).collect();
+                }
+                "topology.replication" => {
+                    cfg.replication = val.as_int().context("replication must be int")? as usize;
+                    if cfg.replication < 1 {
+                        bail!("replication must be >= 1");
+                    }
+                }
+                "net.send_threads" => {
+                    cfg.send_threads =
+                        val.as_int().context("send_threads must be int")?.max(1) as usize;
+                }
+                "net.setup_ms" => {
+                    cfg.cost.setup_secs =
+                        val.as_float().context("setup_ms must be numeric")? / 1e3;
+                }
+                "net.bandwidth_gbps" => {
+                    // gigaBITS per second, like the paper's "2 Gb/s achieved"
+                    cfg.cost.bandwidth_bps =
+                        val.as_float().context("bandwidth_gbps must be numeric")? * 1e9 / 8.0;
+                }
+                "net.outlier_prob" => {
+                    cfg.cost.outlier_prob = val.as_float().context("outlier_prob")?;
+                }
+                "net.outlier_ms" => {
+                    cfg.cost.outlier_mean_secs = val.as_float().context("outlier_ms")? / 1e3;
+                }
+                "data.dataset" => {
+                    let s = val.as_str().context("dataset must be a string")?;
+                    match s {
+                        "twitter" | "yahoo" | "docterm" => cfg.dataset = s.to_string(),
+                        other => bail!("unknown dataset `{other}` (twitter|yahoo|docterm)"),
+                    }
+                }
+                "data.scale" => cfg.scale = val.as_float().context("scale must be numeric")?,
+                "run.iters" => cfg.iters = val.as_int().context("iters must be int")? as usize,
+                "run.seed" => cfg.seed = val.as_int().context("seed must be int")? as u64,
+                other => bail!("unknown config key `{other}`"),
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn machines(&self) -> usize {
+        self.degrees.iter().product::<usize>() * self.replication
+    }
+
+    pub fn dataset_preset(&self) -> crate::graph::DatasetPreset {
+        match self.dataset.as_str() {
+            "yahoo" => crate::graph::DatasetPreset::YahooWeb,
+            "docterm" => crate::graph::DatasetPreset::TwitterDocTerm,
+            _ => crate::graph::DatasetPreset::TwitterFollowers,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paper_tuned() {
+        let cfg = RunConfig::default();
+        assert_eq!(cfg.degrees, vec![16, 4]);
+        assert_eq!(cfg.machines(), 64);
+        assert_eq!(cfg.send_threads, 8);
+    }
+
+    #[test]
+    fn full_file_parses() {
+        let cfg = RunConfig::from_toml(
+            r#"
+[topology]
+degrees = [8, 4]
+replication = 2
+[net]
+send_threads = 4
+bandwidth_gbps = 2.0
+setup_ms = 8
+[data]
+dataset = "yahoo"
+scale = 0.5
+[run]
+iters = 20
+seed = 7
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.degrees, vec![8, 4]);
+        assert_eq!(cfg.replication, 2);
+        assert_eq!(cfg.machines(), 64);
+        assert_eq!(cfg.dataset, "yahoo");
+        assert_eq!(cfg.iters, 20);
+        assert!((cfg.cost.bandwidth_bps - 2e9 / 8.0).abs() < 1.0);
+        assert!((cfg.cost.setup_secs - 0.008).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(RunConfig::from_toml("nope = 1").is_err());
+    }
+
+    #[test]
+    fn bad_values_rejected() {
+        assert!(RunConfig::from_toml("[topology]\ndegrees = []").is_err());
+        assert!(RunConfig::from_toml("[topology]\nreplication = 0").is_err());
+        assert!(RunConfig::from_toml("[data]\ndataset = \"bogus\"").is_err());
+    }
+
+    #[test]
+    fn partial_file_keeps_defaults() {
+        let cfg = RunConfig::from_toml("[run]\niters = 3").unwrap();
+        assert_eq!(cfg.iters, 3);
+        assert_eq!(cfg.degrees, vec![16, 4]);
+    }
+}

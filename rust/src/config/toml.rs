@@ -1,0 +1,210 @@
+//! Minimal TOML-subset parser (see module docs in `config`).
+
+use std::collections::BTreeMap;
+use thiserror::Error;
+
+/// Parsed value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    IntArray(Vec<i64>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_int_array(&self) -> Option<&[i64]> {
+        match self {
+            TomlValue::IntArray(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+/// Parse error with line number.
+#[derive(Debug, Error, PartialEq)]
+#[error("config line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+fn err(line: usize, msg: impl Into<String>) -> TomlError {
+    TomlError { line, msg: msg.into() }
+}
+
+/// Parse a TOML-subset document into `section.key → value` (keys outside
+/// any section use an empty section name, i.e. plain `key`).
+pub fn parse_toml(text: &str) -> Result<BTreeMap<String, TomlValue>, TomlError> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (i, raw) in text.lines().enumerate() {
+        let lineno = i + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name
+                .strip_suffix(']')
+                .ok_or_else(|| err(lineno, "unterminated section header"))?
+                .trim();
+            if name.is_empty() {
+                return Err(err(lineno, "empty section name"));
+            }
+            section = name.to_string();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| err(lineno, "expected `key = value`"))?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(err(lineno, "empty key"));
+        }
+        let full_key =
+            if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        let parsed = parse_value(value.trim()).map_err(|m| err(lineno, m))?;
+        out.insert(full_key, parsed);
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a `#` outside quotes starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(v: &str) -> Result<TomlValue, String> {
+    if v.is_empty() {
+        return Err("missing value".to_string());
+    }
+    if let Some(s) = v.strip_prefix('"') {
+        let s = s.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(s.to_string()));
+    }
+    if v == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if v == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = v.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        for part in inner.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            items.push(part.parse::<i64>().map_err(|_| format!("bad array int `{part}`"))?);
+        }
+        return Ok(TomlValue::IntArray(items));
+    }
+    if let Ok(i) = v.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = v.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value `{v}`"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_document() {
+        let doc = r#"
+# cluster layout
+name = "demo"
+[topology]
+degrees = [16, 4]
+replication = 1
+[net]
+bandwidth_gbps = 2.0   # achieved, not rated
+enabled = true
+"#;
+        let m = parse_toml(doc).unwrap();
+        assert_eq!(m["name"], TomlValue::Str("demo".into()));
+        assert_eq!(m["topology.degrees"], TomlValue::IntArray(vec![16, 4]));
+        assert_eq!(m["topology.replication"], TomlValue::Int(1));
+        assert_eq!(m["net.bandwidth_gbps"], TomlValue::Float(2.0));
+        assert_eq!(m["net.enabled"], TomlValue::Bool(true));
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let m = parse_toml("# hi\n\na = 1 # trailing\n").unwrap();
+        assert_eq!(m["a"], TomlValue::Int(1));
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let m = parse_toml("s = \"a#b\"").unwrap();
+        assert_eq!(m["s"], TomlValue::Str("a#b".into()));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse_toml("a = 1\nbogus line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = parse_toml("[unterminated\n").unwrap_err();
+        assert_eq!(e.line, 1);
+        let e = parse_toml("x = [1, 2\n").unwrap_err();
+        assert_eq!(e.line, 1);
+    }
+
+    #[test]
+    fn value_coercions() {
+        assert_eq!(TomlValue::Int(3).as_float(), Some(3.0));
+        assert_eq!(TomlValue::Float(2.5).as_int(), None);
+        assert_eq!(TomlValue::Bool(true).as_bool(), Some(true));
+        assert_eq!(TomlValue::Str("x".into()).as_str(), Some("x"));
+    }
+
+    #[test]
+    fn empty_array() {
+        let m = parse_toml("a = []").unwrap();
+        assert_eq!(m["a"], TomlValue::IntArray(vec![]));
+    }
+}

@@ -1,0 +1,74 @@
+//! Fault tolerance via data replication and packet racing (paper §V).
+//!
+//! With replication factor `r`, the butterfly runs over `L` *logical*
+//! nodes, each hosted by `r` physical machines: logical `i` lives on
+//! physical `i, i+L, …, i+(r−1)·L`. Every config/reduce message addressed
+//! to logical `j` is fanned out to all of `j`'s replicas, and a receiver
+//! expecting a message from logical `j` accepts the **first** copy that
+//! arrives from any replica (remaining copies are discarded — "packet
+//! racing", which also turns latency-outlier straggling into a race the
+//! fastest path wins).
+//!
+//! The protocol completes unless *every* replica of some logical node is
+//! dead; with `r = 2` and random failures that takes ≈ √M failures
+//! (birthday paradox), verified empirically by [`expected_failures_to_kill`].
+
+pub mod replicated;
+
+pub use replicated::{run_replicated_cluster, ReplicaMap, ReplicatedHandle};
+
+use crate::util::Pcg32;
+
+/// Monte-Carlo estimate of how many uniformly-random machine failures it
+/// takes before some logical node loses all `r` replicas, on `logical`
+/// logical nodes (physical machines = `logical * r`).
+pub fn expected_failures_to_kill(logical: usize, r: usize, trials: usize, seed: u64) -> f64 {
+    let mut rng = Pcg32::new(seed);
+    let mut total = 0usize;
+    for _ in 0..trials {
+        let m = logical * r;
+        let mut dead = vec![0usize; logical];
+        let mut order: Vec<usize> = (0..m).collect();
+        rng.shuffle(&mut order);
+        for (count, &phys) in order.iter().enumerate() {
+            let l = phys % logical;
+            dead[l] += 1;
+            if dead[l] == r {
+                total += count + 1;
+                break;
+            }
+        }
+    }
+    total as f64 / trials as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tolerance_scales_like_sqrt_m_for_r2() {
+        // Paper §V-A: with r=2, ~√M random failures kill a replica group.
+        for &logical in &[16usize, 64, 256] {
+            let est = expected_failures_to_kill(logical, 2, 400, 7);
+            let sqrt_m = ((logical * 2) as f64).sqrt();
+            assert!(
+                est > 0.8 * sqrt_m && est < 3.0 * sqrt_m,
+                "logical={logical}: est {est:.1} vs sqrt(M) {sqrt_m:.1}"
+            );
+        }
+    }
+
+    #[test]
+    fn no_replication_dies_immediately() {
+        let est = expected_failures_to_kill(64, 1, 200, 9);
+        assert_eq!(est, 1.0);
+    }
+
+    #[test]
+    fn higher_replication_tolerates_more() {
+        let r2 = expected_failures_to_kill(32, 2, 300, 11);
+        let r3 = expected_failures_to_kill(32, 3, 300, 11);
+        assert!(r3 > r2, "r=3 ({r3:.1}) should beat r=2 ({r2:.1})");
+    }
+}

@@ -1,0 +1,409 @@
+//! Replicated cluster driver: the threaded driver with message fan-out
+//! and first-wins racing (paper §V).
+
+use crate::allreduce::protocol::{ConfigPart, NodeProtocol, Phase};
+use crate::sparse::{IndexSet, ReduceOp};
+use crate::topology::{Butterfly, NodeId};
+use crate::transport::{wire, Envelope, SenderPool, Tag, Transport, TransportError};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Mapping between logical protocol nodes and physical machines.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplicaMap {
+    pub logical: usize,
+    pub r: usize,
+}
+
+impl ReplicaMap {
+    pub fn new(logical: usize, r: usize) -> Self {
+        assert!(logical >= 1 && r >= 1);
+        Self { logical, r }
+    }
+
+    pub fn physical(&self) -> usize {
+        self.logical * self.r
+    }
+
+    /// Physical machines hosting logical node `l`.
+    pub fn replicas(&self, l: usize) -> impl Iterator<Item = usize> + '_ {
+        let logical = self.logical;
+        (0..self.r).map(move |rho| l + rho * logical)
+    }
+
+    /// Logical node hosted by physical machine `p`.
+    pub fn logical_of(&self, p: usize) -> usize {
+        p % self.logical
+    }
+
+    /// Replica ordinal of physical machine `p`.
+    pub fn replica_of(&self, p: usize) -> usize {
+        p / self.logical
+    }
+}
+
+/// A physical machine's endpoint in a replicated cluster. It executes the
+/// protocol of its *logical* node; messages fan out to all replicas of the
+/// destination and receives race across all replicas of the source.
+pub struct ReplicatedHandle<T: Transport> {
+    proto: NodeProtocol,
+    map: ReplicaMap,
+    /// This machine's physical id (inbox address).
+    phys: NodeId,
+    transport: Arc<T>,
+    pool: SenderPool,
+    /// First-wins buffer: (tag, logical src) → payload. Duplicate replica
+    /// copies are dropped on arrival.
+    pending: HashMap<(Tag, usize), Vec<u8>>,
+    /// Tags already consumed, to discard late replica duplicates.
+    consumed: HashMap<(Tag, usize), ()>,
+    seq: u32,
+    timeout: Duration,
+}
+
+impl<T: Transport + 'static> ReplicatedHandle<T> {
+    pub fn new(
+        topo: Butterfly,
+        map: ReplicaMap,
+        phys: NodeId,
+        transport: Arc<T>,
+        send_threads: usize,
+    ) -> Self {
+        assert_eq!(topo.machines(), map.logical, "topology runs over logical nodes");
+        assert!(phys < map.physical());
+        let logical = map.logical_of(phys);
+        Self {
+            proto: NodeProtocol::new(topo, logical),
+            map,
+            phys,
+            transport,
+            pool: SenderPool::new(send_threads),
+            pending: HashMap::new(),
+            consumed: HashMap::new(),
+            seq: 0,
+            timeout: Duration::from_secs(30),
+        }
+    }
+
+    pub fn physical(&self) -> NodeId {
+        self.phys
+    }
+
+    pub fn logical(&self) -> NodeId {
+        self.proto.node()
+    }
+
+    pub fn set_timeout(&mut self, timeout: Duration) {
+        self.timeout = timeout;
+    }
+
+    /// Wait for the first copy of `(tag, logical src)` from any replica.
+    fn await_race(&mut self, tag: Tag, lsrc: usize) -> Result<Vec<u8>, TransportError> {
+        if let Some(p) = self.pending.remove(&(tag, lsrc)) {
+            self.consumed.insert((tag, lsrc), ());
+            return Ok(p);
+        }
+        loop {
+            let env = self.transport.recv(self.phys, self.timeout)?;
+            let got_lsrc = self.map.logical_of(env.src);
+            let key = (env.tag, got_lsrc);
+            if self.consumed.contains_key(&key) || self.pending.contains_key(&key) {
+                continue; // late duplicate from a slower replica: discard
+            }
+            if env.tag == tag && got_lsrc == lsrc {
+                self.consumed.insert(key, ());
+                return Ok(env.payload);
+            }
+            self.pending.insert(key, env.payload);
+        }
+    }
+
+    /// Group exchange with fan-out to every replica of each destination.
+    fn exchange(
+        &mut self,
+        phase: Phase,
+        layer: usize,
+        outgoing: Vec<Vec<u8>>,
+        own: Vec<u8>,
+    ) -> Result<Vec<Vec<u8>>, TransportError> {
+        let tag = Tag::new(self.seq, phase, layer);
+        let group = self.proto.group(layer); // logical ids
+        let my_slot = self.proto.slot(layer);
+        for (j, payload) in outgoing.into_iter().enumerate() {
+            if j == my_slot {
+                continue;
+            }
+            for pdst in self.map.replicas(group[j]) {
+                let env = Envelope { src: self.phys, tag, payload: payload.clone() };
+                self.pool.send(&self.transport, pdst, env);
+            }
+        }
+        let mut got: Vec<Vec<u8>> = vec![Vec::new(); group.len()];
+        for (j, &lsrc) in group.iter().enumerate() {
+            if j == my_slot {
+                got[j] = own.clone();
+            } else {
+                got[j] = self.await_race(tag, lsrc)?;
+            }
+        }
+        // Note: unlike the non-replicated driver we neither propagate send
+        // errors (a dead replica must not fail the protocol) nor BARRIER
+        // on our own sends: the duplicate copy racing to each receiver
+        // already covers a slow/outlier send, so waiting for the slow copy
+        // would re-import exactly the tail latency replication is meant to
+        // mask (paper §V-B "packets racing"). In-flight sends drain in the
+        // pool's worker threads; tags keep later layers unambiguous.
+        Ok(got)
+    }
+
+    /// Run the config phase (replica-consistent: all replicas of a logical
+    /// node must pass identical outbound/inbound sets).
+    pub fn config(
+        &mut self,
+        outbound: IndexSet,
+        inbound: IndexSet,
+    ) -> Result<(), TransportError> {
+        self.seq += 1;
+        self.consumed.clear();
+        self.proto.begin_config(outbound, inbound);
+        for layer in 0..self.proto.topology().layers() {
+            let parts = self.proto.config_outgoing(layer);
+            let my_slot = self.proto.slot(layer);
+            let own = wire::encode_config_part(&parts[my_slot]);
+            let outgoing: Vec<Vec<u8>> = parts.iter().map(wire::encode_config_part).collect();
+            let got = self.exchange(Phase::ConfigDown, layer, outgoing, own)?;
+            let decoded: Vec<ConfigPart> =
+                got.iter().map(|b| wire::decode_config_part(b)).collect();
+            self.proto.config_absorb(layer, &decoded);
+        }
+        Ok(())
+    }
+
+    /// Run one reduce.
+    pub fn reduce<R: ReduceOp>(&mut self, values: Vec<R::T>) -> Result<Vec<R::T>, TransportError> {
+        self.seq += 1;
+        let layers = self.proto.topology().layers();
+        let mut current = values;
+        for layer in 0..layers {
+            let segs = self.proto.reduce_down_outgoing::<R>(layer, &current);
+            let my_slot = self.proto.slot(layer);
+            let own = wire::encode_values::<R>(segs[my_slot]);
+            let outgoing: Vec<Vec<u8>> = segs.iter().map(|s| wire::encode_values::<R>(s)).collect();
+            let got = self.exchange(Phase::ReduceDown, layer, outgoing, own)?;
+            let decoded: Vec<Vec<R::T>> = got.iter().map(|b| wire::decode_values::<R>(b)).collect();
+            let refs: Vec<&[R::T]> = decoded.iter().map(|v| v.as_slice()).collect();
+            current = self.proto.reduce_down_absorb::<R>(layer, &refs);
+        }
+        current = self.proto.apply_final_map::<R>(&current);
+        for layer in (0..layers).rev() {
+            let segs = self.proto.reduce_up_outgoing::<R>(layer, &current);
+            let my_slot = self.proto.slot(layer);
+            let own = wire::encode_values::<R>(&segs[my_slot]);
+            let outgoing: Vec<Vec<u8>> = segs.iter().map(|s| wire::encode_values::<R>(s)).collect();
+            let got = self.exchange(Phase::ReduceUp, layer, outgoing, own)?;
+            let decoded: Vec<Vec<R::T>> = got.iter().map(|b| wire::decode_values::<R>(b)).collect();
+            current = self.proto.reduce_up_absorb::<R>(layer, &decoded);
+        }
+        Ok(current)
+    }
+}
+
+/// Spawn worker threads for every *alive* physical machine (machines in
+/// `dead` never start — simulating fail-stop before the collective) and
+/// collect per-physical-machine results (`None` for dead machines).
+pub fn run_replicated_cluster<T, F, O>(
+    topo: &Butterfly,
+    map: ReplicaMap,
+    transport: Arc<T>,
+    send_threads: usize,
+    dead: &[NodeId],
+    worker: F,
+) -> Vec<Option<O>>
+where
+    T: Transport + 'static,
+    O: Send + 'static,
+    F: Fn(ReplicatedHandle<T>) -> O + Send + Sync + 'static,
+{
+    assert_eq!(transport.machines(), map.physical());
+    let worker = Arc::new(worker);
+    let mut handles: Vec<Option<std::thread::JoinHandle<O>>> = Vec::new();
+    for phys in 0..map.physical() {
+        if dead.contains(&phys) {
+            handles.push(None);
+            continue;
+        }
+        let topo = topo.clone();
+        let transport = transport.clone();
+        let worker = worker.clone();
+        handles.push(Some(std::thread::spawn(move || {
+            let h = ReplicatedHandle::new(topo, map, phys, transport, send_threads);
+            worker(h)
+        })));
+    }
+    handles
+        .into_iter()
+        .map(|h| h.map(|h| h.join().expect("replica worker panicked")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allreduce::LocalCluster;
+    use crate::sparse::SumF32;
+    use crate::transport::MemTransport;
+    use crate::util::Pcg32;
+
+    fn random_inputs(
+        m: usize,
+        range: i64,
+        seed: u64,
+    ) -> (Vec<(Vec<i64>, Vec<f32>)>, Vec<Vec<i64>>) {
+        let mut rng = Pcg32::new(seed);
+        let outs = (0..m)
+            .map(|_| {
+                let k = rng.gen_range(1, 50);
+                let mut idx: Vec<i64> = rng
+                    .sample_distinct(range as usize, k)
+                    .into_iter()
+                    .map(|x| x as i64)
+                    .collect();
+                idx.sort_unstable();
+                let val: Vec<f32> = idx.iter().map(|_| rng.next_f32()).collect();
+                (idx, val)
+            })
+            .collect();
+        let ins = (0..m)
+            .map(|_| {
+                let k = rng.gen_range(1, 30);
+                let mut idx: Vec<i64> = rng
+                    .sample_distinct(range as usize, k)
+                    .into_iter()
+                    .map(|x| x as i64)
+                    .collect();
+                idx.sort_unstable();
+                idx
+            })
+            .collect();
+        (outs, ins)
+    }
+
+    fn reference(topo: &Butterfly, outs: &[(Vec<i64>, Vec<f32>)], ins: &[Vec<i64>]) -> Vec<Vec<f32>> {
+        let mut local = LocalCluster::new(topo.clone());
+        local.config(
+            outs.iter().map(|(i, _)| IndexSet::from_sorted(i.clone())).collect(),
+            ins.iter().map(|i| IndexSet::from_sorted(i.clone())).collect(),
+        );
+        local.reduce::<SumF32>(outs.iter().map(|(_, v)| v.clone()).collect()).0
+    }
+
+    fn run_with_dead(topo: Butterfly, r: usize, dead: Vec<usize>, seed: u64) {
+        let logical = topo.machines();
+        let map = ReplicaMap::new(logical, r);
+        let (outs, ins) = random_inputs(logical, topo.index_range(), seed);
+        let want = reference(&topo, &outs, &ins);
+        let transport = Arc::new(MemTransport::new(map.physical()));
+        let outs = Arc::new(outs);
+        let ins = Arc::new(ins);
+        let (o2, i2) = (outs.clone(), ins.clone());
+        let results = run_replicated_cluster(
+            &topo,
+            map,
+            transport,
+            4,
+            &dead,
+            move |mut h: ReplicatedHandle<MemTransport>| {
+                let l = h.logical();
+                h.config(
+                    IndexSet::from_sorted(o2[l].0.clone()),
+                    IndexSet::from_sorted(i2[l].clone()),
+                )
+                .unwrap();
+                h.reduce::<SumF32>(o2[l].1.clone()).unwrap()
+            },
+        );
+        // every alive machine must hold its logical node's correct result
+        let mut checked = 0;
+        for (phys, res) in results.iter().enumerate() {
+            if let Some(got) = res {
+                let l = map.logical_of(phys);
+                assert_eq!(got.len(), want[l].len());
+                for (g, w) in got.iter().zip(&want[l]) {
+                    assert!((g - w).abs() < 1e-4, "phys {phys} logical {l}");
+                }
+                checked += 1;
+            }
+        }
+        assert_eq!(checked, map.physical() - dead.len());
+    }
+
+    #[test]
+    fn replicated_no_failures_matches_reference() {
+        run_with_dead(Butterfly::new(vec![2, 2], 256), 2, vec![], 31);
+    }
+
+    #[test]
+    fn survives_one_dead_node() {
+        // kill physical 5 (replica 1 of logical 1 in a 4-logical r=2 map)
+        run_with_dead(Butterfly::new(vec![2, 2], 256), 2, vec![5], 32);
+    }
+
+    #[test]
+    fn survives_multiple_dead_nodes_distinct_groups() {
+        // 8 logical × 2 replicas = 16 physical; kill 3 machines hosting
+        // three different logical nodes.
+        run_with_dead(Butterfly::new(vec![4, 2], 512), 2, vec![8, 1, 14], 33);
+    }
+
+    #[test]
+    fn survives_with_r3_two_dead_same_logical() {
+        // r=3: two replicas of the same logical node may die.
+        run_with_dead(Butterfly::new(vec![2, 2], 128), 3, vec![4, 8], 34);
+    }
+
+    #[test]
+    fn replica_map_arithmetic() {
+        let map = ReplicaMap::new(8, 2);
+        assert_eq!(map.physical(), 16);
+        assert_eq!(map.replicas(3).collect::<Vec<_>>(), vec![3, 11]);
+        assert_eq!(map.logical_of(11), 3);
+        assert_eq!(map.replica_of(11), 1);
+    }
+
+    #[test]
+    fn all_replicas_dead_times_out() {
+        // Killing both replicas of logical 0 must stall the others, which
+        // then observe a Timeout instead of wrong results.
+        let topo = Butterfly::new(vec![2], 64);
+        let map = ReplicaMap::new(2, 2);
+        let transport = Arc::new(MemTransport::new(4));
+        let (outs, ins) = random_inputs(2, 64, 35);
+        let outs = Arc::new(outs);
+        let ins = Arc::new(ins);
+        let (o2, i2) = (outs.clone(), ins.clone());
+        let results = run_replicated_cluster(
+            &topo,
+            map,
+            transport,
+            2,
+            &[0, 2], // both replicas of logical 0
+            move |mut h: ReplicatedHandle<MemTransport>| {
+                h.set_timeout(Duration::from_millis(300));
+                let l = h.logical();
+                h.config(
+                    IndexSet::from_sorted(o2[l].0.clone()),
+                    IndexSet::from_sorted(i2[l].clone()),
+                )
+            },
+        );
+        for (phys, res) in results.iter().enumerate() {
+            if let Some(r) = res {
+                assert!(
+                    matches!(r, Err(TransportError::Timeout(_))),
+                    "phys {phys}: expected timeout, got {r:?}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! Compressed sparse row storage for local shard compute.
+//!
+//! Rows are *destination* vertices and columns are *source* vertices, so a
+//! PageRank step `Q = G·P` is a row-wise gather: `Q[v] = Σ_{(u→v)} w·P[u]`.
+//! Shards store only the vertices they touch, remapped to a compact local
+//! id space (the global↔local maps are exactly the outbound/inbound index
+//! sets handed to Sparse Allreduce).
+
+/// CSR over compacted local vertex ids.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    /// Sorted global ids of local rows (destinations) — the *outbound* set.
+    pub row_globals: Vec<i64>,
+    /// Sorted global ids of local columns (sources) — the *inbound* set.
+    pub col_globals: Vec<i64>,
+    /// Row pointer (len = rows + 1).
+    pub row_ptr: Vec<usize>,
+    /// Column index (local) per edge.
+    pub col: Vec<u32>,
+    /// Edge weight (for PageRank: 1 / global out-degree of the source).
+    pub weight: Vec<f32>,
+}
+
+impl Csr {
+    /// Build a shard CSR from its edge list. `edge_weight(u)` supplies the
+    /// per-source weight (e.g. 1/outdeg for PageRank; 1.0 for HADI).
+    pub fn from_edges(edges: &[(i64, i64)], edge_weight: impl Fn(i64) -> f32) -> Csr {
+        // Collect and sort the distinct endpoints.
+        let mut row_globals: Vec<i64> = edges.iter().map(|&(_, v)| v).collect();
+        row_globals.sort_unstable();
+        row_globals.dedup();
+        let mut col_globals: Vec<i64> = edges.iter().map(|&(u, _)| u).collect();
+        col_globals.sort_unstable();
+        col_globals.dedup();
+
+        let rows = row_globals.len();
+        // Count per-row degree, then prefix sum.
+        let mut row_ptr = vec![0usize; rows + 1];
+        let rloc = |v: i64| row_globals.binary_search(&v).expect("row missing");
+        let cloc = |u: i64| col_globals.binary_search(&u).expect("col missing") as u32;
+        for &(_, v) in edges {
+            row_ptr[rloc(v) + 1] += 1;
+        }
+        for i in 0..rows {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        let mut col = vec![0u32; edges.len()];
+        let mut weight = vec![0f32; edges.len()];
+        let mut cursor = row_ptr.clone();
+        for &(u, v) in edges {
+            let r = rloc(v);
+            let slot = cursor[r];
+            cursor[r] += 1;
+            col[slot] = cloc(u);
+            weight[slot] = edge_weight(u);
+        }
+        Csr { row_globals, col_globals, row_ptr, col, weight }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.row_globals.len()
+    }
+
+    pub fn cols(&self) -> usize {
+        self.col_globals.len()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.col.len()
+    }
+
+    /// Weighted SpMV: `q[r] = Σ w[e]·p_local[col[e]]` for this shard.
+    /// `p_local` is aligned with `col_globals`.
+    pub fn spmv(&self, p_local: &[f32]) -> Vec<f32> {
+        assert_eq!(p_local.len(), self.cols());
+        let mut q = vec![0f32; self.rows()];
+        for r in 0..self.rows() {
+            let mut acc = 0f32;
+            for e in self.row_ptr[r]..self.row_ptr[r + 1] {
+                acc += self.weight[e] * p_local[self.col[e] as usize];
+            }
+            q[r] = acc;
+        }
+        q
+    }
+
+    /// Bitwise-OR "SpMV" over u32 sketches (HADI, paper eq. 3):
+    /// `q[r] = OR over edges of b_local[col[e]]`.
+    pub fn spmv_or(&self, b_local: &[u32]) -> Vec<u32> {
+        assert_eq!(b_local.len(), self.cols());
+        let mut q = vec![0u32; self.rows()];
+        for r in 0..self.rows() {
+            let mut acc = 0u32;
+            for e in self.row_ptr[r]..self.row_ptr[r + 1] {
+                acc |= b_local[self.col[e] as usize];
+            }
+            q[r] = acc;
+        }
+        q
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Graph: 0→1, 0→2, 1→2, 3→2  (weights 1/outdeg)
+    fn toy() -> Csr {
+        let outdeg = [2f32, 1.0, 0.0, 1.0];
+        Csr::from_edges(&[(0, 1), (0, 2), (1, 2), (3, 2)], |u| 1.0 / outdeg[u as usize])
+    }
+
+    #[test]
+    fn structure() {
+        let c = toy();
+        assert_eq!(c.row_globals, vec![1, 2]); // destinations
+        assert_eq!(c.col_globals, vec![0, 1, 3]); // sources
+        assert_eq!(c.rows(), 2);
+        assert_eq!(c.cols(), 3);
+        assert_eq!(c.nnz(), 4);
+    }
+
+    #[test]
+    fn spmv_matches_manual() {
+        let c = toy();
+        // p over sources [0,1,3]
+        let p = vec![1.0f32, 2.0, 4.0];
+        let q = c.spmv(&p);
+        // q[1] = 0.5*p(0) = 0.5 ; q[2] = 0.5*p(0) + 1*p(1) + 1*p(3) = 6.5
+        assert!((q[0] - 0.5).abs() < 1e-6);
+        assert!((q[1] - 6.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn spmv_or_unions_sources() {
+        let c = Csr::from_edges(&[(0, 1), (2, 1), (2, 3)], |_| 1.0);
+        // sources [0,2], dests [1,3]
+        let b = vec![0b001u32, 0b100];
+        let q = c.spmv_or(&b);
+        assert_eq!(q, vec![0b101, 0b100]);
+    }
+
+    #[test]
+    fn empty_rows_are_absent() {
+        // vertices with no incoming edges never appear as rows
+        let c = Csr::from_edges(&[(5, 9)], |_| 1.0);
+        assert_eq!(c.row_globals, vec![9]);
+        assert_eq!(c.col_globals, vec![5]);
+        assert_eq!(c.spmv(&[3.0]), vec![3.0]);
+    }
+
+    #[test]
+    fn multi_edges_accumulate() {
+        let c = Csr::from_edges(&[(0, 1), (0, 1)], |_| 0.5);
+        assert_eq!(c.nnz(), 2);
+        assert_eq!(c.spmv(&[2.0]), vec![2.0]); // 0.5*2 + 0.5*2
+    }
+}

@@ -1,0 +1,164 @@
+//! Synthetic power-law graph generation.
+//!
+//! Edges are sampled with both endpoints drawn from (independently
+//! permuted) Zipf distributions, giving power-law in- and out-degree
+//! distributions per the paper's eq. (1): `p ∝ d^{−α}`. Self-loops are
+//! re-rolled; duplicate edges are allowed (natural multi-edges, as in raw
+//! follower/click logs).
+
+use super::EdgeList;
+use crate::util::{Pcg32, Zipf};
+
+/// Generator parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct GraphGenParams {
+    pub vertices: i64,
+    pub edges: usize,
+    /// Zipf exponent of the source (out-degree) distribution.
+    pub alpha_out: f64,
+    /// Zipf exponent of the destination (in-degree) distribution.
+    pub alpha_in: f64,
+    pub seed: u64,
+}
+
+impl Default for GraphGenParams {
+    fn default() -> Self {
+        Self { vertices: 1 << 16, edges: 1 << 20, alpha_out: 1.1, alpha_in: 1.1, seed: 42 }
+    }
+}
+
+/// Generate a power-law directed multigraph.
+pub fn generate_power_law(p: &GraphGenParams) -> EdgeList {
+    assert!(p.vertices >= 2);
+    let mut rng = Pcg32::new(p.seed);
+    let zout = Zipf::new(p.vertices as u64, p.alpha_out);
+    let zin = Zipf::new(p.vertices as u64, p.alpha_in);
+    // Independent rank→vertex permutations decouple hub identities of the
+    // two distributions (the top tweeter is not necessarily the top
+    // followee). Affine multiplicative shuffles are cheap and adequate.
+    let perm = |x: u64, a: u64, b: u64, n: u64| -> i64 {
+        ((x.wrapping_mul(a).wrapping_add(b)) % n) as i64
+    };
+    let n = p.vertices as u64;
+    // odd multipliers co-prime with powers of two; for general n use a
+    // multiplier co-prime with n by construction (gcd check loop).
+    let pick_mult = |rng: &mut Pcg32| -> u64 {
+        loop {
+            let a = rng.next_u64() % n;
+            if a > 1 && gcd(a, n) == 1 {
+                return a;
+            }
+        }
+    };
+    let (a1, b1) = (pick_mult(&mut rng), rng.next_u64() % n);
+    let (a2, b2) = (pick_mult(&mut rng), rng.next_u64() % n);
+
+    let mut edges = Vec::with_capacity(p.edges);
+    while edges.len() < p.edges {
+        let u = perm(zout.sample(&mut rng), a1, b1, n);
+        let v = perm(zin.sample(&mut rng), a2, b2, n);
+        if u != v {
+            edges.push((u, v));
+        }
+    }
+    EdgeList { vertices: p.vertices, edges }
+}
+
+fn gcd(a: u64, b: u64) -> u64 {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+/// Fit a Zipf exponent to a degree sequence by least-squares regression of
+/// `log(freq)` on `log(rank)` over the head of the rank-ordered degrees.
+/// Returns the fitted α (positive for power-law-like data).
+pub fn zipf_alpha_fit(degrees: &[u32]) -> f64 {
+    let mut sorted: Vec<u32> = degrees.iter().copied().filter(|&d| d > 0).collect();
+    sorted.sort_unstable_by(|a, b| b.cmp(a));
+    // Use the top half of ranks (the tail is noisy and often truncated).
+    let take = (sorted.len() / 2).clamp(2, 10_000);
+    let pts: Vec<(f64, f64)> = sorted
+        .iter()
+        .take(take)
+        .enumerate()
+        .map(|(i, &d)| (((i + 1) as f64).ln(), (d as f64).ln()))
+        .collect();
+    let n = pts.len() as f64;
+    let sx: f64 = pts.iter().map(|p| p.0).sum();
+    let sy: f64 = pts.iter().map(|p| p.1).sum();
+    let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+    let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+    let slope = (n * sxy - sx * sy) / (n * sxx - sx * sx);
+    -slope
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_requested_size() {
+        let p = GraphGenParams { vertices: 1000, edges: 5000, ..Default::default() };
+        let g = generate_power_law(&p);
+        assert_eq!(g.vertices, 1000);
+        assert_eq!(g.num_edges(), 5000);
+        assert!(g.edges.iter().all(|&(u, v)| u != v && u < 1000 && v < 1000));
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let p = GraphGenParams { vertices: 500, edges: 2000, seed: 5, ..Default::default() };
+        let a = generate_power_law(&p);
+        let b = generate_power_law(&p);
+        assert_eq!(a.edges, b.edges);
+        let c = generate_power_law(&GraphGenParams { seed: 6, ..p });
+        assert_ne!(a.edges, c.edges);
+    }
+
+    #[test]
+    fn degree_distribution_is_skewed() {
+        let p = GraphGenParams {
+            vertices: 10_000,
+            edges: 100_000,
+            alpha_out: 1.3,
+            alpha_in: 1.3,
+            seed: 3,
+        };
+        let g = generate_power_law(&p);
+        let mut deg = g.in_degrees();
+        deg.sort_unstable_by(|a, b| b.cmp(a));
+        // hub dominance: top vertex should have far more than mean degree
+        let mean = 100_000.0 / 10_000.0;
+        assert!(deg[0] as f64 > 20.0 * mean, "no hub: top degree {}", deg[0]);
+        // and a long tail of low-degree vertices
+        let low = deg.iter().filter(|&&d| d <= 2).count();
+        assert!(low > 2_000, "tail too small: {low}");
+    }
+
+    #[test]
+    fn alpha_fit_recovers_exponent_roughly() {
+        let p = GraphGenParams {
+            vertices: 20_000,
+            edges: 400_000,
+            alpha_out: 1.5,
+            alpha_in: 1.5,
+            seed: 8,
+        };
+        let g = generate_power_law(&p);
+        let alpha = zipf_alpha_fit(&g.in_degrees());
+        assert!(
+            (0.8..2.5).contains(&alpha),
+            "fitted alpha {alpha} wildly off (wanted ≈1.5-ish power law)"
+        );
+    }
+
+    #[test]
+    fn alpha_fit_flat_data_near_zero() {
+        let flat = vec![10u32; 1000];
+        let alpha = zipf_alpha_fit(&flat);
+        assert!(alpha.abs() < 0.05, "flat data should fit alpha≈0, got {alpha}");
+    }
+}

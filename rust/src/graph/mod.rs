@@ -1,0 +1,79 @@
+//! Power-law graph substrate (paper §I, §VI).
+//!
+//! The paper evaluates on the Twitter followers' graph (60M vertices,
+//! 1.5B edges), the Yahoo Altavista web graph (1.4B vertices, 6B edges)
+//! and a Twitter document-term matrix (40M features). None of those are
+//! shippable here, so [`gen`] synthesizes Zipf-degree-distributed graphs
+//! with the same α shape, and [`datasets`] provides scaled presets whose
+//! *partition sparsity* (Table I's headline statistic) matches the paper's
+//! ratios. [`csr`] is the compressed sparse row structure used by the
+//! local compute in PageRank / HADI.
+
+pub mod csr;
+pub mod datasets;
+pub mod gen;
+
+pub use csr::Csr;
+pub use datasets::{DatasetPreset, DatasetSpec};
+pub use gen::{generate_power_law, zipf_alpha_fit, GraphGenParams};
+
+/// An edge list graph over vertices `0..vertices`.
+#[derive(Clone, Debug)]
+pub struct EdgeList {
+    pub vertices: i64,
+    pub edges: Vec<(i64, i64)>,
+}
+
+impl EdgeList {
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Global out-degrees (number of edges leaving each vertex).
+    pub fn out_degrees(&self) -> Vec<u32> {
+        let mut deg = vec![0u32; self.vertices as usize];
+        for &(u, _) in &self.edges {
+            deg[u as usize] += 1;
+        }
+        deg
+    }
+
+    /// Global in-degrees.
+    pub fn in_degrees(&self) -> Vec<u32> {
+        let mut deg = vec![0u32; self.vertices as usize];
+        for &(_, v) in &self.edges {
+            deg[v as usize] += 1;
+        }
+        deg
+    }
+
+    /// Apply a vertex permutation (e.g. `partition::IndexHasher`) to both
+    /// endpoints.
+    pub fn permute(&self, f: impl Fn(i64) -> i64) -> EdgeList {
+        EdgeList {
+            vertices: self.vertices,
+            edges: self.edges.iter().map(|&(u, v)| (f(u), f(v))).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn degrees_sum_to_edges() {
+        let g = EdgeList { vertices: 4, edges: vec![(0, 1), (0, 2), (1, 2), (3, 0)] };
+        assert_eq!(g.out_degrees(), vec![2, 1, 0, 1]);
+        assert_eq!(g.in_degrees(), vec![1, 1, 2, 0]);
+        assert_eq!(g.out_degrees().iter().sum::<u32>() as usize, g.num_edges());
+    }
+
+    #[test]
+    fn permute_preserves_structure() {
+        let g = EdgeList { vertices: 4, edges: vec![(0, 1), (2, 3)] };
+        let p = g.permute(|x| 3 - x);
+        assert_eq!(p.edges, vec![(3, 2), (1, 0)]);
+        assert_eq!(p.vertices, 4);
+    }
+}

@@ -1,0 +1,39 @@
+//! # sparse-allreduce
+//!
+//! A production-grade reproduction of *Sparse Allreduce: Efficient
+//! Scalable Communication for Power-Law Data* (Zhao & Canny, 2013) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the Sparse Allreduce engine: a nested,
+//!   heterogeneous-degree butterfly network with separated config/reduce
+//!   phases, sorted-sparse-vector merge machinery, replication-based fault
+//!   tolerance with packet racing, multi-threaded transports, and the
+//!   applications the paper motivates (PageRank, HADI diameter, mini-batch
+//!   SGD).
+//! * **Layer 2 (build-time JAX)** — the per-worker dense compute
+//!   (mini-batch gradient step) AOT-lowered to HLO text.
+//! * **Layer 1 (build-time Pallas)** — the compute hot-spot kernels,
+//!   verified against pure-jnp oracles, lowered inside the L2 module.
+//!
+//! The Rust binary loads `artifacts/*.hlo.txt` via PJRT (the `xla` crate)
+//! at startup; Python never runs on the iteration path.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index
+//! mapping every table/figure of the paper to a bench target.
+
+pub mod allreduce;
+pub mod apps;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod fault;
+pub mod graph;
+pub mod metrics;
+pub mod partition;
+pub mod runtime;
+pub mod simnet;
+pub mod sparse;
+pub mod topology;
+pub mod transport;
+pub mod util;

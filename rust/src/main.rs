@@ -1,0 +1,198 @@
+//! `sar` — the Sparse Allreduce launcher (Layer-3 coordinator binary).
+
+use anyhow::{bail, Result};
+use sparse_allreduce::apps::diameter::{estimate_diameter, DiameterConfig};
+use sparse_allreduce::apps::sgd::{NativeGradEngine, SgdConfig, SynthData, Trainer};
+use sparse_allreduce::cli::{Args, USAGE};
+use sparse_allreduce::config::RunConfig;
+use sparse_allreduce::coordinator::run_pagerank_config;
+use sparse_allreduce::graph::{DatasetPreset, DatasetSpec};
+use sparse_allreduce::runtime::{Runtime, XlaGradEngine};
+use sparse_allreduce::topology::{plan_degrees, PlannerParams};
+use sparse_allreduce::util::{human_bytes, human_duration, logging};
+
+fn main() {
+    logging::init();
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_str() {
+        "" | "help" | "--help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        "info" => cmd_info(),
+        "plan" => cmd_plan(args),
+        "pagerank" => cmd_pagerank(args),
+        "diameter" => cmd_diameter(args),
+        "train" => cmd_train(args),
+        "config-check" => cmd_config_check(args),
+        other => bail!("unknown command `{other}`\n\n{USAGE}"),
+    }
+}
+
+fn dataset_from(args: &Args) -> Result<DatasetSpec> {
+    let name = args.flag("dataset").unwrap_or("twitter");
+    let preset = match name {
+        "twitter" => DatasetPreset::TwitterFollowers,
+        "yahoo" => DatasetPreset::YahooWeb,
+        "docterm" => DatasetPreset::TwitterDocTerm,
+        other => bail!("unknown dataset `{other}`"),
+    };
+    let scale = args.f64_flag("scale", 0.05)?;
+    let seed = args.u64_flag("seed", 42)?;
+    Ok(DatasetSpec::new(preset, scale, seed))
+}
+
+fn cmd_info() -> Result<()> {
+    println!("sparse-allreduce {}", env!("CARGO_PKG_VERSION"));
+    match Runtime::cpu_default() {
+        Ok(rt) => {
+            println!("PJRT platform : {}", rt.platform());
+            for f in ["minibatch_grad.hlo.txt", "segment_sum.hlo.txt", "pagerank_cell.hlo.txt"] {
+                match rt.load(f) {
+                    Ok(_) => println!("artifact      : {f} — OK"),
+                    Err(_) => println!("artifact      : {f} — MISSING (run `make artifacts`)"),
+                }
+            }
+        }
+        Err(e) => println!("PJRT          : unavailable ({e})"),
+    }
+    Ok(())
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    let mbytes = args.f64_flag("mbytes", 16.0)?;
+    let machines = args.usize_flag("machines", 64)?;
+    let floor = args.f64_flag("floor-mb", 2.0)?;
+    let params = PlannerParams {
+        bytes_per_node: mbytes * 1024.0 * 1024.0,
+        packet_floor: floor * 1024.0 * 1024.0,
+        compression: args.f64_flag("compression", 0.7)?,
+    };
+    let degrees = plan_degrees(machines, &params);
+    let sched = degrees.iter().map(|k| k.to_string()).collect::<Vec<_>>().join("x");
+    println!(
+        "planned schedule for M={machines}, {mbytes:.1} MiB/node, floor {floor:.1} MiB: {sched}"
+    );
+    Ok(())
+}
+
+fn cmd_pagerank(args: &Args) -> Result<()> {
+    let spec = dataset_from(args)?;
+    let mut cfg = RunConfig {
+        degrees: args.degrees_flag("degrees", &[4, 2])?,
+        iters: args.usize_flag("iters", 10)?,
+        send_threads: args.usize_flag("threads", 8)?,
+        seed: args.u64_flag("seed", 42)?,
+        ..RunConfig::default()
+    };
+    cfg.scale = args.f64_flag("scale", 0.05)?;
+    log::info!("generating {} (scale {})", spec.name(), cfg.scale);
+    let graph = spec.generate();
+    log::info!("graph: {} vertices, {} edges", graph.vertices, graph.num_edges());
+    let run = run_pagerank_config(&graph, &cfg, 0.0);
+    println!(
+        "pagerank: {} iters on {} machines ({:?}) in {}",
+        cfg.iters,
+        cfg.machines(),
+        cfg.degrees,
+        human_duration(run.wall_secs)
+    );
+    println!(
+        "  config {} | comm fraction {:.0}% | checksum {:.6}",
+        human_duration(run.config_secs),
+        run.comm_fraction() * 100.0,
+        run.checksum
+    );
+    Ok(())
+}
+
+fn cmd_diameter(args: &Args) -> Result<()> {
+    let spec = dataset_from(args)?;
+    let graph = spec.generate();
+    let degrees = args.degrees_flag("degrees", &[4, 2])?;
+    let cfg = DiameterConfig {
+        k_sketches: args.usize_flag("sketches", 8)?,
+        max_h: args.usize_flag("max-h", 24)?,
+        exact: false,
+        seed: args.u64_flag("seed", 7)?,
+    };
+    let res = estimate_diameter(&graph, degrees, &cfg);
+    println!(
+        "effective diameter ≈ {} ({} hops run) on {} vertices",
+        res.effective_diameter, res.hops_run, graph.vertices
+    );
+    for (h, n) in res.neighbourhood.iter().enumerate() {
+        println!("  N({}) ≈ {:.0}", h + 1, n);
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let features = args.usize_flag("features", 1 << 20)? as i64;
+    let classes = args.usize_flag("classes", 64)?;
+    let steps = args.usize_flag("steps", 50)?;
+    let degrees = args.degrees_flag("degrees", &[2, 2])?;
+    let m: usize = degrees.iter().product();
+    let cfg = SgdConfig {
+        classes,
+        batch_per_worker: args.usize_flag("batch", 64)?,
+        lr: args.f64_flag("lr", 0.5)? as f32,
+        seed: args.u64_flag("seed", 123)?,
+    };
+    let data = SynthData::new(features, classes, args.usize_flag("feats-per-ex", 12)?, 1.1);
+    let model_bytes = features as usize * classes * 4;
+    println!(
+        "training {features}x{classes} model ({} params, {}) on {m} workers, {steps} steps",
+        features as usize * classes,
+        human_bytes(model_bytes as u64)
+    );
+
+    if args.has_switch("native") {
+        let mut t = Trainer::new(degrees, data, cfg, vec![NativeGradEngine; m]);
+        run_train_loop(&mut t, steps);
+    } else {
+        let rt = Runtime::cpu_default()?;
+        let engines: Result<Vec<XlaGradEngine>> =
+            (0..m).map(|_| XlaGradEngine::new(&rt)).collect();
+        let mut t = Trainer::new(degrees, data, cfg, engines?);
+        run_train_loop(&mut t, steps);
+    }
+    Ok(())
+}
+
+fn run_train_loop<E: sparse_allreduce::apps::sgd::GradEngine>(t: &mut Trainer<E>, steps: usize) {
+    let start = std::time::Instant::now();
+    for s in 0..steps {
+        let loss = t.step();
+        if s < 3 || (s + 1) % 10 == 0 || s + 1 == steps {
+            println!(
+                "step {:>5}  loss {:.4}  live params {}  ({:.2} steps/s)",
+                s + 1,
+                loss,
+                t.live_params(),
+                (s + 1) as f64 / start.elapsed().as_secs_f64()
+            );
+        }
+    }
+}
+
+fn cmd_config_check(args: &Args) -> Result<()> {
+    let path = args.flag("file").ok_or_else(|| anyhow::anyhow!("--file required"))?;
+    let text = std::fs::read_to_string(path)?;
+    let cfg = RunConfig::from_toml(&text)?;
+    println!("config OK: {cfg:#?}");
+    Ok(())
+}

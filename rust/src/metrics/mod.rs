@@ -1,0 +1,150 @@
+//! Iteration metrics: timing breakdowns (compute vs communication) and
+//! table emitters for the experiment harness.
+
+use crate::util::{human_duration, Summary};
+use std::time::Duration;
+
+/// Per-iteration timing record for a distributed computation.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IterTiming {
+    /// Local compute (SpMV / gradient / sketch OR) seconds.
+    pub compute_secs: f64,
+    /// Allreduce (communication + merge) seconds.
+    pub comm_secs: f64,
+}
+
+impl IterTiming {
+    pub fn total(&self) -> f64 {
+        self.compute_secs + self.comm_secs
+    }
+}
+
+/// Accumulated run metrics.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub config_secs: f64,
+    pub iters: Vec<IterTiming>,
+}
+
+impl RunMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, compute: Duration, comm: Duration) {
+        self.iters.push(IterTiming {
+            compute_secs: compute.as_secs_f64(),
+            comm_secs: comm.as_secs_f64(),
+        });
+    }
+
+    pub fn total_compute(&self) -> f64 {
+        self.iters.iter().map(|i| i.compute_secs).sum()
+    }
+
+    pub fn total_comm(&self) -> f64 {
+        self.iters.iter().map(|i| i.comm_secs).sum()
+    }
+
+    pub fn total(&self) -> f64 {
+        self.total_compute() + self.total_comm()
+    }
+
+    /// Fraction of runtime spent communicating (paper Fig. 8's breakdown).
+    pub fn comm_fraction(&self) -> f64 {
+        let t = self.total();
+        if t == 0.0 {
+            0.0
+        } else {
+            self.total_comm() / t
+        }
+    }
+
+    pub fn comm_summary(&self) -> Summary {
+        Summary::of(&self.iters.iter().map(|i| i.comm_secs).collect::<Vec<_>>())
+    }
+
+    /// Render a one-line human summary.
+    pub fn describe(&self) -> String {
+        format!(
+            "config {} | {} iters | compute {} | comm {} ({:.0}%)",
+            human_duration(self.config_secs),
+            self.iters.len(),
+            human_duration(self.total_compute()),
+            human_duration(self.total_comm()),
+            self.comm_fraction() * 100.0
+        )
+    }
+}
+
+/// Markdown table builder used by the bench harness to print paper-style
+/// tables.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render as GitHub-flavoured markdown.
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("| {} |\n", self.header.join(" | ")));
+        out.push_str(&format!(
+            "|{}|\n",
+            self.header.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        ));
+        for r in &self.rows {
+            out.push_str(&format!("| {} |\n", r.join(" | ")));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comm_fraction() {
+        let mut m = RunMetrics::new();
+        m.push(Duration::from_millis(20), Duration::from_millis(80));
+        m.push(Duration::from_millis(20), Duration::from_millis(80));
+        assert!((m.comm_fraction() - 0.8).abs() < 1e-9);
+        assert!((m.total() - 0.2).abs() < 1e-9);
+        assert!(m.describe().contains("80%"));
+    }
+
+    #[test]
+    fn empty_metrics() {
+        let m = RunMetrics::new();
+        assert_eq!(m.comm_fraction(), 0.0);
+        assert_eq!(m.total(), 0.0);
+    }
+
+    #[test]
+    fn table_renders_markdown() {
+        let mut t = Table::new(&["config", "time (s)"]);
+        t.row(vec!["16x4".into(), "0.44".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("| config | time (s) |"));
+        assert!(md.contains("| 16x4 | 0.44 |"));
+        assert!(md.lines().count() == 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

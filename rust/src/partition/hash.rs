@@ -1,0 +1,152 @@
+//! Invertible pseudo-random permutation of vertex indices.
+//!
+//! Paper §III-A: "To avoid clustering of high-degree vertices with similar
+//! indices, we first apply a random hash to the vertex indices (which will
+//! effect a random permutation). We then sort and thereafter maintain
+//! indices in sorted order."
+//!
+//! We implement the permutation as a keyed 4-round Feistel network over
+//! the smallest even-bit-width domain covering `range`, with cycle-walking
+//! to stay inside `[0, range)`. This gives an exact bijection (no
+//! collisions — essential, or two distinct vertices would alias) that is
+//! cheaply invertible for debugging and result readback.
+
+/// Bijective keyed permutation on `[0, range)`.
+#[derive(Clone, Debug)]
+pub struct IndexHasher {
+    range: u64,
+    half_bits: u32,
+    half_mask: u64,
+    keys: [u64; 4],
+}
+
+impl IndexHasher {
+    pub fn new(range: u64, seed: u64) -> Self {
+        assert!(range >= 1, "empty index range");
+        // domain = smallest power of 4 >= range (so both Feistel halves
+        // have equal width)
+        let bits = 64 - (range - 1).leading_zeros().max(0);
+        let half_bits = bits.div_ceil(2).max(1);
+        let mut sm = crate::util::SplitMix64::new(seed ^ 0xC0FF_EE00_D15E_A5E5);
+        let keys = [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()];
+        Self { range, half_bits, half_mask: (1u64 << half_bits) - 1, keys }
+    }
+
+    #[inline]
+    fn round(&self, x: u64, key: u64) -> u64 {
+        // xorshift-multiply round function, truncated to half width
+        let mut z = x.wrapping_add(key);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        (z ^ (z >> 31)) & self.half_mask
+    }
+
+    #[inline]
+    fn feistel(&self, v: u64) -> u64 {
+        let mut l = v >> self.half_bits;
+        let mut r = v & self.half_mask;
+        for &k in &self.keys {
+            let nl = r;
+            let nr = l ^ self.round(r, k);
+            l = nl;
+            r = nr;
+        }
+        (l << self.half_bits) | r
+    }
+
+    #[inline]
+    fn feistel_inv(&self, v: u64) -> u64 {
+        let mut l = v >> self.half_bits;
+        let mut r = v & self.half_mask;
+        for &k in self.keys.iter().rev() {
+            let nr = l;
+            let nl = r ^ self.round(l, k);
+            l = nl;
+            r = nr;
+        }
+        (l << self.half_bits) | r
+    }
+
+    /// Permute an index (cycle-walk until back inside the range).
+    #[inline]
+    pub fn hash(&self, idx: i64) -> i64 {
+        debug_assert!(idx >= 0 && (idx as u64) < self.range);
+        let mut v = idx as u64;
+        loop {
+            v = self.feistel(v);
+            if v < self.range {
+                return v as i64;
+            }
+        }
+    }
+
+    /// Invert the permutation.
+    #[inline]
+    pub fn unhash(&self, idx: i64) -> i64 {
+        debug_assert!(idx >= 0 && (idx as u64) < self.range);
+        let mut v = idx as u64;
+        loop {
+            v = self.feistel_inv(v);
+            if v < self.range {
+                return v as i64;
+            }
+        }
+    }
+
+    pub fn range(&self) -> u64 {
+        self.range
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn is_bijection_small() {
+        for range in [1u64, 2, 7, 64, 100, 257] {
+            let h = IndexHasher::new(range, 42);
+            let mut seen = vec![false; range as usize];
+            for i in 0..range {
+                let y = h.hash(i as i64) as usize;
+                assert!(y < range as usize);
+                assert!(!seen[y], "collision at {i} -> {y} (range {range})");
+                seen[y] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        let h = IndexHasher::new(1_000_003, 7);
+        for i in (0..1_000_003).step_by(971) {
+            assert_eq!(h.unhash(h.hash(i)), i);
+        }
+    }
+
+    #[test]
+    fn seeds_give_different_permutations() {
+        let a = IndexHasher::new(10_000, 1);
+        let b = IndexHasher::new(10_000, 2);
+        let same = (0..1000).filter(|&i| a.hash(i) == b.hash(i)).count();
+        assert!(same < 10, "permutations too similar: {same}");
+    }
+
+    #[test]
+    fn spreads_clustered_indices() {
+        // consecutive hot indices should land far apart: check that the
+        // hashes of 0..100 do NOT occupy a narrow band.
+        let h = IndexHasher::new(1_000_000, 3);
+        let hashes: Vec<i64> = (0..100).map(|i| h.hash(i)).collect();
+        let min = *hashes.iter().min().unwrap();
+        let max = *hashes.iter().max().unwrap();
+        assert!(max - min > 500_000, "permutation did not spread indices");
+    }
+
+    #[test]
+    fn uniformity_across_halves() {
+        let h = IndexHasher::new(100_000, 11);
+        let lower = (0..10_000).filter(|&i| h.hash(i) < 50_000).count();
+        assert!((lower as i64 - 5_000).abs() < 500, "lower-half count {lower}");
+    }
+}

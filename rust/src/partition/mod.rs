@@ -1,0 +1,17 @@
+//! Data partitioning (paper §II-B, §III-A).
+//!
+//! * [`hash::IndexHasher`] — the invertible random permutation applied to
+//!   vertex indices before everything else, so that contiguous range
+//!   splits behave like random vertex partitions.
+//! * [`edge::random_edge_partition`] — random edge partitioning, the
+//!   scheme the paper uses for natural graphs (vertex partitioning is
+//!   known to be ineffective for power-law data).
+//! * [`range`] — contiguous range covers used by the butterfly layers.
+
+pub mod edge;
+pub mod hash;
+pub mod range;
+
+pub use edge::{greedy_edge_partition, random_edge_partition, shard_stats, ShardStats};
+pub use hash::IndexHasher;
+pub use range::RangeCover;

@@ -1,0 +1,98 @@
+//! Contiguous range covers: the hierarchical interval refinement used by
+//! the butterfly layers.
+//!
+//! Because indices are hash-permuted, splitting `[0, R)` into equal
+//! contiguous intervals is statistically a random partition, but is
+//! computable with binary searches instead of shuffles (paper §III-A).
+
+/// An interval `[lo, hi)` split into `k` near-equal sub-intervals.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RangeCover {
+    pub lo: i64,
+    pub hi: i64,
+    pub bounds: Vec<i64>, // k+1 entries, bounds[0]=lo, bounds[k]=hi
+}
+
+impl RangeCover {
+    /// Split `[lo, hi)` into `k` near-equal parts. Sub-interval `j` is
+    /// `[bounds[j], bounds[j+1])`; sizes differ by at most 1.
+    pub fn split(lo: i64, hi: i64, k: usize) -> RangeCover {
+        assert!(hi >= lo, "inverted range");
+        assert!(k >= 1, "k must be positive");
+        let n = (hi - lo) as u128;
+        let mut bounds = Vec::with_capacity(k + 1);
+        for j in 0..=k as u128 {
+            bounds.push(lo + (n * j / k as u128) as i64);
+        }
+        RangeCover { lo, hi, bounds }
+    }
+
+    pub fn k(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    /// Sub-interval `j` as `(lo, hi)`.
+    pub fn part(&self, j: usize) -> (i64, i64) {
+        (self.bounds[j], self.bounds[j + 1])
+    }
+
+    /// Which sub-interval an index falls into.
+    pub fn locate(&self, idx: i64) -> usize {
+        assert!(idx >= self.lo && idx < self.hi, "index outside cover");
+        // partition_point over bounds[1..k]
+        let inner = &self.bounds[1..self.bounds.len() - 1];
+        inner.partition_point(|&b| b <= idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_even() {
+        let c = RangeCover::split(0, 12, 4);
+        assert_eq!(c.bounds, vec![0, 3, 6, 9, 12]);
+        assert_eq!(c.k(), 4);
+        assert_eq!(c.part(2), (6, 9));
+    }
+
+    #[test]
+    fn split_uneven_sizes_differ_by_one() {
+        let c = RangeCover::split(0, 10, 3);
+        let sizes: Vec<i64> = (0..3).map(|j| c.part(j).1 - c.part(j).0).collect();
+        assert_eq!(sizes.iter().sum::<i64>(), 10);
+        assert!(sizes.iter().all(|&s| s == 3 || s == 4));
+    }
+
+    #[test]
+    fn split_large_range_no_overflow() {
+        let c = RangeCover::split(0, i64::MAX / 2, 7);
+        assert_eq!(c.bounds[0], 0);
+        assert_eq!(*c.bounds.last().unwrap(), i64::MAX / 2);
+        assert!(c.bounds.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn locate_matches_part() {
+        let c = RangeCover::split(100, 200, 6);
+        for idx in 100..200 {
+            let j = c.locate(idx);
+            let (lo, hi) = c.part(j);
+            assert!(idx >= lo && idx < hi, "{idx} misplaced into part {j}");
+        }
+    }
+
+    #[test]
+    fn k_one_identity() {
+        let c = RangeCover::split(5, 25, 1);
+        assert_eq!(c.bounds, vec![5, 25]);
+        assert_eq!(c.locate(24), 0);
+    }
+
+    #[test]
+    fn empty_range() {
+        let c = RangeCover::split(7, 7, 3);
+        assert_eq!(c.bounds, vec![7, 7, 7, 7]);
+    }
+}

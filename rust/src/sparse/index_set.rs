@@ -1,0 +1,243 @@
+//! Sorted, deduplicated index sets (the paper's `IVec`).
+//!
+//! Vertex indices are hashed (random-permuted) once at dataset creation and
+//! kept sorted thereafter; every config-phase operation is then a linear
+//! merge or a binary-searched range split over these sets.
+
+/// A sorted vector of unique `i64` indices.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct IndexSet {
+    inds: Vec<i64>,
+}
+
+impl IndexSet {
+    pub fn new() -> Self {
+        Self { inds: Vec::new() }
+    }
+
+    /// Build from arbitrary input: sorts and dedups.
+    pub fn from_unsorted(mut inds: Vec<i64>) -> Self {
+        inds.sort_unstable();
+        inds.dedup();
+        Self { inds }
+    }
+
+    /// Build from input known to be sorted and unique (checked in debug).
+    pub fn from_sorted(inds: Vec<i64>) -> Self {
+        debug_assert!(inds.windows(2).all(|w| w[0] < w[1]), "indices not sorted/unique");
+        Self { inds }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inds.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[i64] {
+        &self.inds
+    }
+
+    pub fn into_vec(self) -> Vec<i64> {
+        self.inds
+    }
+
+    pub fn contains(&self, idx: i64) -> bool {
+        self.inds.binary_search(&idx).is_ok()
+    }
+
+    /// Position of `idx` within the set, if present.
+    pub fn position(&self, idx: i64) -> Option<usize> {
+        self.inds.binary_search(&idx).ok()
+    }
+
+    /// Split positions for contiguous sub-ranges: returns `k+1` offsets
+    /// `o_0=0 ≤ o_1 ≤ … ≤ o_k=len` such that elements in
+    /// `[o_j, o_{j+1})` fall in `[bounds[j], bounds[j+1])`.
+    ///
+    /// `bounds` must have `k+1` entries covering all indices present.
+    /// This is the linear/memory-streaming partition of §III-A: because the
+    /// set is sorted, partitioning into k range shards is just finding k−1
+    /// boundaries.
+    pub fn split_offsets(&self, bounds: &[i64]) -> Vec<usize> {
+        assert!(bounds.len() >= 2, "need at least one range");
+        debug_assert!(bounds.windows(2).all(|w| w[0] <= w[1]));
+        if let (Some(&first), Some(&last)) = (self.inds.first(), self.inds.last()) {
+            assert!(
+                first >= bounds[0] && last < *bounds.last().unwrap(),
+                "index outside range cover: [{first}, {last}] vs bounds {:?}",
+                (bounds[0], bounds.last().unwrap())
+            );
+        }
+        let mut offs = Vec::with_capacity(bounds.len());
+        offs.push(0usize);
+        // partition_point is a branchless binary search; sets are large so
+        // per-boundary binary search beats a linear sweep for big k.
+        for &b in &bounds[1..bounds.len() - 1] {
+            offs.push(self.inds.partition_point(|&x| x < b));
+        }
+        offs.push(self.inds.len());
+        offs
+    }
+
+    /// Merge-union of two sorted sets.
+    pub fn union(&self, other: &IndexSet) -> IndexSet {
+        let (a, b) = (&self.inds, &other.inds);
+        let mut out = Vec::with_capacity(a.len() + b.len());
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < a.len() && j < b.len() {
+            match a[i].cmp(&b[j]) {
+                std::cmp::Ordering::Less => {
+                    out.push(a[i]);
+                    i += 1;
+                }
+                std::cmp::Ordering::Greater => {
+                    out.push(b[j]);
+                    j += 1;
+                }
+                std::cmp::Ordering::Equal => {
+                    out.push(a[i]);
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        out.extend_from_slice(&a[i..]);
+        out.extend_from_slice(&b[j..]);
+        IndexSet { inds: out }
+    }
+
+    /// Merge-intersection of two sorted sets.
+    pub fn intersect(&self, other: &IndexSet) -> IndexSet {
+        let (a, b) = (&self.inds, &other.inds);
+        let mut out = Vec::with_capacity(a.len().min(b.len()));
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < a.len() && j < b.len() {
+            match a[i].cmp(&b[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => {
+                    out.push(a[i]);
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        IndexSet { inds: out }
+    }
+
+    /// For each element of `self`, its position in `universe` —
+    /// `u32::MAX` when absent. This is the paper's `mapInds(upi, downi)`:
+    /// the final map from requested (inbound) indices into the reduced
+    /// bottom-layer vector.
+    pub fn map_into(&self, universe: &IndexSet) -> Vec<u32> {
+        let u = &universe.inds;
+        let mut out = Vec::with_capacity(self.inds.len());
+        let mut j = 0usize;
+        for &x in &self.inds {
+            while j < u.len() && u[j] < x {
+                j += 1;
+            }
+            if j < u.len() && u[j] == x {
+                out.push(j as u32);
+            } else {
+                out.push(u32::MAX);
+            }
+        }
+        out
+    }
+
+    /// Slice of the set with indices in `[lo, hi)` (by value).
+    pub fn range(&self, lo: i64, hi: i64) -> &[i64] {
+        let a = self.inds.partition_point(|&x| x < lo);
+        let b = self.inds.partition_point(|&x| x < hi);
+        &self.inds[a..b]
+    }
+}
+
+impl From<Vec<i64>> for IndexSet {
+    fn from(v: Vec<i64>) -> Self {
+        IndexSet::from_unsorted(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_unsorted_dedups() {
+        let s = IndexSet::from_unsorted(vec![5, 1, 3, 1, 5, 2]);
+        assert_eq!(s.as_slice(), &[1, 2, 3, 5]);
+    }
+
+    #[test]
+    fn union_basic() {
+        let a = IndexSet::from_unsorted(vec![1, 3, 5]);
+        let b = IndexSet::from_unsorted(vec![2, 3, 6]);
+        assert_eq!(a.union(&b).as_slice(), &[1, 2, 3, 5, 6]);
+        assert_eq!(a.union(&IndexSet::new()).as_slice(), a.as_slice());
+    }
+
+    #[test]
+    fn intersect_basic() {
+        let a = IndexSet::from_unsorted(vec![1, 3, 5, 7]);
+        let b = IndexSet::from_unsorted(vec![3, 4, 7, 9]);
+        assert_eq!(a.intersect(&b).as_slice(), &[3, 7]);
+    }
+
+    #[test]
+    fn split_offsets_cover() {
+        let s = IndexSet::from_unsorted(vec![0, 2, 5, 9, 10, 14]);
+        // ranges [0,5), [5,10), [10,15)
+        let offs = s.split_offsets(&[0, 5, 10, 15]);
+        assert_eq!(offs, vec![0, 2, 4, 6]);
+        // empty middle range
+        let s2 = IndexSet::from_unsorted(vec![1, 12]);
+        assert_eq!(s2.split_offsets(&[0, 5, 10, 15]), vec![0, 1, 1, 2]);
+    }
+
+    #[test]
+    fn split_offsets_empty_set() {
+        let s = IndexSet::new();
+        assert_eq!(s.split_offsets(&[0, 10, 20]), vec![0, 0, 0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside range cover")]
+    fn split_offsets_out_of_cover() {
+        let s = IndexSet::from_unsorted(vec![99]);
+        s.split_offsets(&[0, 5, 10]);
+    }
+
+    #[test]
+    fn map_into_with_missing() {
+        let u = IndexSet::from_unsorted(vec![1, 3, 5, 7]);
+        let q = IndexSet::from_unsorted(vec![3, 4, 7]);
+        assert_eq!(q.map_into(&u), vec![1, u32::MAX, 3]);
+    }
+
+    #[test]
+    fn map_into_identity() {
+        let u = IndexSet::from_unsorted(vec![2, 4, 6]);
+        assert_eq!(u.map_into(&u), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn range_by_value() {
+        let s = IndexSet::from_unsorted(vec![1, 4, 6, 9, 12]);
+        assert_eq!(s.range(4, 10), &[4, 6, 9]);
+        assert_eq!(s.range(5, 6), &[] as &[i64]);
+    }
+
+    #[test]
+    fn position_and_contains() {
+        let s = IndexSet::from_unsorted(vec![10, 20, 30]);
+        assert!(s.contains(20));
+        assert!(!s.contains(25));
+        assert_eq!(s.position(30), Some(2));
+        assert_eq!(s.position(5), None);
+    }
+}

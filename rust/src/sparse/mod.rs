@@ -1,0 +1,21 @@
+//! Sorted-index sparse vectors and the merge machinery behind Sparse
+//! Allreduce (paper §III-A).
+//!
+//! The paper keeps vertex indices *hashed then sorted* and implements all
+//! aggregation as merges of sorted index lists: pairwise merge-sum, a pair
+//! tree for k-way sums (O(N·log k) worst case, ~O(N) for power-law data
+//! thanks to index collisions, measured ~5× faster than hash tables), and
+//! contiguous range splits for butterfly scatter. This module implements
+//! those data structures generically over the reduction value type so the
+//! same engine serves f32 sums (PageRank, SGD), u32 bitwise-OR (HADI
+//! diameter sketches) and max-reductions.
+
+pub mod index_set;
+pub mod merge;
+pub mod ops;
+pub mod vec;
+
+pub use index_set::IndexSet;
+pub use merge::{k_way_union_with_maps, k_way_union_with_maps_scan, k_way_union_with_maps_two_phase, merge_sum, scatter_combine, tree_sum, tree_sum_ref};
+pub use ops::{MaxF32, OrU32, ReduceOp, SumF32};
+pub use vec::{spvec_from_pairs, SpVec};

@@ -1,0 +1,175 @@
+//! Reduction operators.
+//!
+//! Sparse Allreduce is parametric in the combine operation: the paper uses
+//! floating sums (PageRank, gradients) and bitwise OR (HADI diameter,
+//! eq. 3). Operators are zero-sized types implementing [`ReduceOp`]; the
+//! value type must be `Copy + Send` and byte-serializable for the TCP
+//! transport.
+
+/// A commutative, associative reduction over a fixed-width value type.
+pub trait ReduceOp: 'static + Send + Sync + Copy + Default {
+    /// Element type flowing through the reduce.
+    type T: Copy + Send + Sync + PartialEq + std::fmt::Debug + 'static;
+
+    /// Identity element (`combine(zero, x) == x`).
+    fn zero() -> Self::T;
+
+    /// The combine operation.
+    fn combine(a: Self::T, b: Self::T) -> Self::T;
+
+    /// Serialize one element into little-endian bytes.
+    fn to_bytes(v: Self::T, out: &mut Vec<u8>);
+
+    /// Deserialize one element; `buf.len() >= Self::WIDTH`.
+    fn from_bytes(buf: &[u8]) -> Self::T;
+
+    /// Serialized width in bytes.
+    const WIDTH: usize;
+}
+
+/// f32 addition — PageRank scores, gradient accumulation.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SumF32;
+
+impl ReduceOp for SumF32 {
+    type T = f32;
+    const WIDTH: usize = 4;
+
+    #[inline]
+    fn zero() -> f32 {
+        0.0
+    }
+
+    #[inline]
+    fn combine(a: f32, b: f32) -> f32 {
+        a + b
+    }
+
+    #[inline]
+    fn to_bytes(v: f32, out: &mut Vec<u8>) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    fn from_bytes(buf: &[u8]) -> f32 {
+        f32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]])
+    }
+}
+
+/// u32 bitwise OR — Flajolet–Martin bitstrings in HADI (paper eq. 3).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct OrU32;
+
+impl ReduceOp for OrU32 {
+    type T = u32;
+    const WIDTH: usize = 4;
+
+    #[inline]
+    fn zero() -> u32 {
+        0
+    }
+
+    #[inline]
+    fn combine(a: u32, b: u32) -> u32 {
+        a | b
+    }
+
+    #[inline]
+    fn to_bytes(v: u32, out: &mut Vec<u8>) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    fn from_bytes(buf: &[u8]) -> u32 {
+        u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]])
+    }
+}
+
+/// f32 max — useful for residual/err allreduces in iterative solvers.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MaxF32;
+
+impl ReduceOp for MaxF32 {
+    type T = f32;
+    const WIDTH: usize = 4;
+
+    #[inline]
+    fn zero() -> f32 {
+        f32::NEG_INFINITY
+    }
+
+    #[inline]
+    fn combine(a: f32, b: f32) -> f32 {
+        a.max(b)
+    }
+
+    #[inline]
+    fn to_bytes(v: f32, out: &mut Vec<u8>) {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+
+    #[inline]
+    fn from_bytes(buf: &[u8]) -> f32 {
+        f32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]])
+    }
+}
+
+/// Serialize a slice of elements.
+pub fn values_to_bytes<R: ReduceOp>(vals: &[R::T]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(vals.len() * R::WIDTH);
+    for &v in vals {
+        R::to_bytes(v, &mut out);
+    }
+    out
+}
+
+/// Deserialize a byte buffer into elements; `buf.len()` must be a multiple
+/// of `R::WIDTH`.
+pub fn values_from_bytes<R: ReduceOp>(buf: &[u8]) -> Vec<R::T> {
+    assert!(buf.len() % R::WIDTH == 0, "ragged value buffer");
+    buf.chunks_exact(R::WIDTH).map(R::from_bytes).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sum_identity_and_combine() {
+        assert_eq!(SumF32::combine(SumF32::zero(), 3.5), 3.5);
+        assert_eq!(SumF32::combine(1.5, 2.0), 3.5);
+    }
+
+    #[test]
+    fn or_identity_and_combine() {
+        assert_eq!(OrU32::combine(OrU32::zero(), 0b1010), 0b1010);
+        assert_eq!(OrU32::combine(0b1010, 0b0110), 0b1110);
+    }
+
+    #[test]
+    fn max_identity() {
+        assert_eq!(MaxF32::combine(MaxF32::zero(), -5.0), -5.0);
+        assert_eq!(MaxF32::combine(2.0, 7.0), 7.0);
+    }
+
+    #[test]
+    fn roundtrip_bytes_sum() {
+        let vals = vec![1.0f32, -2.5, 3.25, f32::MAX];
+        let bytes = values_to_bytes::<SumF32>(&vals);
+        assert_eq!(bytes.len(), 16);
+        assert_eq!(values_from_bytes::<SumF32>(&bytes), vals);
+    }
+
+    #[test]
+    fn roundtrip_bytes_or() {
+        let vals = vec![0u32, 1, 0xDEAD_BEEF, u32::MAX];
+        let bytes = values_to_bytes::<OrU32>(&vals);
+        assert_eq!(values_from_bytes::<OrU32>(&bytes), vals);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn ragged_buffer_panics() {
+        values_from_bytes::<SumF32>(&[1, 2, 3]);
+    }
+}

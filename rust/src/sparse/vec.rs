@@ -1,0 +1,180 @@
+//! Sorted-index sparse vectors (`SpVec`): the unit of data flowing through
+//! Sparse Allreduce.
+
+use super::ops::ReduceOp;
+use super::IndexSet;
+
+/// A sparse vector with sorted unique indices and parallel values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpVec<T: Copy> {
+    pub idx: Vec<i64>,
+    pub val: Vec<T>,
+}
+
+impl<T: Copy> Default for SpVec<T> {
+    fn default() -> Self {
+        Self { idx: Vec::new(), val: Vec::new() }
+    }
+}
+
+impl<T: Copy> SpVec<T> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Self { idx: Vec::with_capacity(n), val: Vec::with_capacity(n) }
+    }
+
+    /// Build from parallel arrays known to be sorted & unique (debug-checked).
+    pub fn from_sorted(idx: Vec<i64>, val: Vec<T>) -> Self {
+        assert_eq!(idx.len(), val.len(), "index/value length mismatch");
+        debug_assert!(idx.windows(2).all(|w| w[0] < w[1]), "indices not sorted/unique");
+        Self { idx, val }
+    }
+
+    pub fn len(&self) -> usize {
+        self.idx.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+
+    pub fn indices(&self) -> &[i64] {
+        &self.idx
+    }
+
+    pub fn values(&self) -> &[T] {
+        &self.val
+    }
+
+    /// The index set of this vector (copies the indices).
+    pub fn index_set(&self) -> IndexSet {
+        IndexSet::from_sorted(self.idx.clone())
+    }
+
+    /// Value at `index` if present.
+    pub fn get(&self, index: i64) -> Option<T> {
+        self.idx.binary_search(&index).ok().map(|p| self.val[p])
+    }
+
+    /// Split into `k` vectors by contiguous index ranges given `k+1`
+    /// bounds. Cheap: memcpy of contiguous slices (paper §III-A: linear,
+    /// memory-streaming partition).
+    pub fn split_by_bounds(&self, bounds: &[i64]) -> Vec<SpVec<T>> {
+        let iset = IndexSet::from_sorted(self.idx.clone());
+        let offs = iset.split_offsets(bounds);
+        let mut out = Vec::with_capacity(bounds.len() - 1);
+        for w in offs.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            out.push(SpVec {
+                idx: self.idx[a..b].to_vec(),
+                val: self.val[a..b].to_vec(),
+            });
+        }
+        out
+    }
+}
+
+impl<T: Copy> SpVec<T> {
+    /// Build from possibly-unsorted, possibly-duplicated (index, value)
+    /// pairs, combining duplicates with `combine`.
+    pub fn from_pairs_with(
+        mut pairs: Vec<(i64, T)>,
+        combine: impl Fn(T, T) -> T,
+    ) -> Self {
+        pairs.sort_unstable_by_key(|&(i, _)| i);
+        let mut idx = Vec::with_capacity(pairs.len());
+        let mut val: Vec<T> = Vec::with_capacity(pairs.len());
+        for (i, v) in pairs {
+            if idx.last() == Some(&i) {
+                let last = val.last_mut().unwrap();
+                *last = combine(*last, v);
+            } else {
+                idx.push(i);
+                val.push(v);
+            }
+        }
+        Self { idx, val }
+    }
+}
+
+/// Reduce-typed helpers.
+impl<T: Copy> SpVec<T> {
+    /// Dense materialization into a slice indexed 0..n (for small-n tests
+    /// and serial oracles).
+    pub fn to_dense_with(&self, n: usize, zero: T, combine: impl Fn(T, T) -> T) -> Vec<T> {
+        let mut out = vec![zero; n];
+        for (&i, &v) in self.idx.iter().zip(&self.val) {
+            let i = i as usize;
+            out[i] = combine(out[i], v);
+        }
+        out
+    }
+}
+
+/// Convenience constructor for a reduce op's typed vector from pairs.
+pub fn spvec_from_pairs<R: ReduceOp>(pairs: Vec<(i64, R::T)>) -> SpVec<R::T> {
+    SpVec::from_pairs_with(pairs, R::combine)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::ops::{OrU32, SumF32};
+
+    #[test]
+    fn from_pairs_combines_duplicates() {
+        let v = spvec_from_pairs::<SumF32>(vec![(3, 1.0), (1, 2.0), (3, 4.0), (1, 0.5)]);
+        assert_eq!(v.idx, vec![1, 3]);
+        assert_eq!(v.val, vec![2.5, 5.0]);
+    }
+
+    #[test]
+    fn from_pairs_or_semantics() {
+        let v = spvec_from_pairs::<OrU32>(vec![(7, 0b01), (7, 0b10), (2, 0b100)]);
+        assert_eq!(v.idx, vec![2, 7]);
+        assert_eq!(v.val, vec![0b100, 0b11]);
+    }
+
+    #[test]
+    fn get_present_and_absent() {
+        let v = SpVec::from_sorted(vec![1, 5, 9], vec![10.0f32, 50.0, 90.0]);
+        assert_eq!(v.get(5), Some(50.0));
+        assert_eq!(v.get(4), None);
+    }
+
+    #[test]
+    fn split_by_bounds_roundtrip() {
+        let v = SpVec::from_sorted(vec![0, 3, 5, 8, 11], vec![1.0f32, 2.0, 3.0, 4.0, 5.0]);
+        let parts = v.split_by_bounds(&[0, 4, 8, 12]);
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts[0].idx, vec![0, 3]);
+        assert_eq!(parts[1].idx, vec![5]);
+        assert_eq!(parts[2].idx, vec![8, 11]);
+        // concatenation restores the original
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        for p in &parts {
+            idx.extend_from_slice(&p.idx);
+            val.extend_from_slice(&p.val);
+        }
+        assert_eq!(idx, v.idx);
+        assert_eq!(val, v.val);
+    }
+
+    #[test]
+    fn to_dense() {
+        let v = spvec_from_pairs::<SumF32>(vec![(0, 1.0), (3, 2.0)]);
+        assert_eq!(v.to_dense_with(5, 0.0, |a, b| a + b), vec![1.0, 0.0, 0.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn empty_vec_ops() {
+        let v: SpVec<f32> = SpVec::new();
+        assert!(v.is_empty());
+        assert_eq!(v.split_by_bounds(&[0, 10]).len(), 1);
+        assert_eq!(v.get(0), None);
+    }
+}

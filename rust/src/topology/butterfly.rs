@@ -1,0 +1,263 @@
+//! Mixed-radix (heterogeneous-degree) butterfly topology.
+//!
+//! Machines are numbered `0..M` with `M = k₀·k₁·…·k_{d−1}`. Machine `n`
+//! has a mixed-radix digit expansion `(j₀, …, j_{d−1})`; at layer `ℓ` it
+//! exchanges messages with the `k_ℓ` machines whose expansions agree with
+//! its own everywhere *except* digit `ℓ` (its layer-ℓ *group*). The index
+//! range `[0, R)` is refined layer by layer: the layer-ℓ group splits its
+//! current interval into `k_ℓ` near-equal parts and member `j` takes part
+//! `j`, so after all layers each machine owns a distinct interval of width
+//! ~`R/M`.
+//!
+//! Degree schedules: `[M]` is round-robin; `[2; log₂M]` is the classic
+//! binary butterfly; anything in between is the paper's hybrid.
+
+use crate::partition::RangeCover;
+
+/// Machine identifier within a butterfly network.
+pub type NodeId = usize;
+
+/// A heterogeneous-degree butterfly over `M = ∏ degrees` machines.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Butterfly {
+    degrees: Vec<usize>,
+    /// strides[ℓ] = ∏_{i>ℓ} degrees[i]; digit ℓ of node n is
+    /// (n / strides[ℓ]) % degrees[ℓ]. Digit 0 is most significant so that
+    /// the final owned intervals are ordered by node id.
+    strides: Vec<usize>,
+    m: usize,
+    range: i64,
+}
+
+impl Butterfly {
+    /// Build a butterfly with the given per-layer degrees over the index
+    /// range `[0, range)`.
+    pub fn new(degrees: Vec<usize>, range: i64) -> Self {
+        assert!(!degrees.is_empty(), "need at least one layer");
+        assert!(degrees.iter().all(|&k| k >= 1), "degrees must be >= 1");
+        assert!(range >= 0);
+        let m: usize = degrees.iter().product();
+        let mut strides = vec![1usize; degrees.len()];
+        for l in (0..degrees.len().saturating_sub(1)).rev() {
+            strides[l] = strides[l + 1] * degrees[l + 1];
+        }
+        Self { degrees, strides, m, range }
+    }
+
+    /// Round-robin topology: a single layer of degree `m`.
+    pub fn round_robin(m: usize, range: i64) -> Self {
+        Self::new(vec![m], range)
+    }
+
+    /// Binary butterfly: `log₂ m` layers of degree 2 (`m` must be a power
+    /// of two).
+    pub fn binary(m: usize, range: i64) -> Self {
+        assert!(m.is_power_of_two(), "binary butterfly needs power-of-two M");
+        let d = m.trailing_zeros() as usize;
+        Self::new(vec![2; d.max(1)], range)
+    }
+
+    pub fn machines(&self) -> usize {
+        self.m
+    }
+
+    pub fn layers(&self) -> usize {
+        self.degrees.len()
+    }
+
+    pub fn degrees(&self) -> &[usize] {
+        &self.degrees
+    }
+
+    pub fn degree(&self, layer: usize) -> usize {
+        self.degrees[layer]
+    }
+
+    pub fn index_range(&self) -> i64 {
+        self.range
+    }
+
+    /// Digit `layer` of `node`'s mixed-radix expansion — equivalently, its
+    /// slot within its layer-`layer` group.
+    #[inline]
+    pub fn digit(&self, node: NodeId, layer: usize) -> usize {
+        (node / self.strides[layer]) % self.degrees[layer]
+    }
+
+    /// The group member of `node` at `layer` whose slot is `j`
+    /// (`group_member(n, ℓ, digit(n, ℓ)) == n`).
+    #[inline]
+    pub fn group_member(&self, node: NodeId, layer: usize, j: usize) -> NodeId {
+        debug_assert!(j < self.degrees[layer]);
+        let cur = self.digit(node, layer);
+        node - cur * self.strides[layer] + j * self.strides[layer]
+    }
+
+    /// All members of `node`'s layer-`layer` group, in slot order.
+    pub fn group(&self, node: NodeId, layer: usize) -> Vec<NodeId> {
+        (0..self.degrees[layer]).map(|j| self.group_member(node, layer, j)).collect()
+    }
+
+    /// The interval of the index range owned by `node` *entering* `layer`
+    /// (layer 0 → the whole range; layer d → the node's final interval).
+    pub fn range_at(&self, node: NodeId, layer: usize) -> (i64, i64) {
+        let (mut lo, mut hi) = (0i64, self.range);
+        for l in 0..layer {
+            let cover = RangeCover::split(lo, hi, self.degrees[l]);
+            let j = self.digit(node, l);
+            let (nlo, nhi) = cover.part(j);
+            lo = nlo;
+            hi = nhi;
+        }
+        (lo, hi)
+    }
+
+    /// The `k_ℓ+1`-entry bounds splitting `node`'s layer-ℓ interval.
+    pub fn layer_bounds(&self, node: NodeId, layer: usize) -> Vec<i64> {
+        let (lo, hi) = self.range_at(node, layer);
+        RangeCover::split(lo, hi, self.degrees[layer]).bounds
+    }
+
+    /// Final interval owned by `node` after all layers.
+    pub fn final_range(&self, node: NodeId) -> (i64, i64) {
+        self.range_at(node, self.layers())
+    }
+
+    /// Which node finally owns index `idx`.
+    pub fn owner_of(&self, idx: i64) -> NodeId {
+        assert!(idx >= 0 && idx < self.range);
+        let mut node = 0usize;
+        let (mut lo, mut hi) = (0i64, self.range);
+        for l in 0..self.layers() {
+            let cover = RangeCover::split(lo, hi, self.degrees[l]);
+            let j = cover.locate(idx);
+            node += j * self.strides[l];
+            let (nlo, nhi) = cover.part(j);
+            lo = nlo;
+            hi = nhi;
+        }
+        node
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digits_roundtrip() {
+        let b = Butterfly::new(vec![3, 2, 4], 1000);
+        assert_eq!(b.machines(), 24);
+        for n in 0..24 {
+            let reconstructed: usize =
+                (0..3).map(|l| b.digit(n, l) * b.strides[l]).sum();
+            assert_eq!(reconstructed, n);
+        }
+    }
+
+    #[test]
+    fn group_members_share_other_digits() {
+        let b = Butterfly::new(vec![3, 2, 4], 1000);
+        for n in 0..24 {
+            for l in 0..3 {
+                let g = b.group(n, l);
+                assert_eq!(g.len(), b.degree(l));
+                assert!(g.contains(&n));
+                for (j, &gm) in g.iter().enumerate() {
+                    assert_eq!(b.digit(gm, l), j);
+                    for other in 0..3 {
+                        if other != l {
+                            assert_eq!(b.digit(gm, other), b.digit(n, other));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn group_member_self_identity() {
+        let b = Butterfly::new(vec![4, 4], 100);
+        for n in 0..16 {
+            for l in 0..2 {
+                assert_eq!(b.group_member(n, l, b.digit(n, l)), n);
+            }
+        }
+    }
+
+    #[test]
+    fn final_ranges_partition_the_index_space() {
+        let b = Butterfly::new(vec![3, 4], 997); // uneven split
+        let mut covered = vec![false; 997];
+        for n in 0..12 {
+            let (lo, hi) = b.final_range(n);
+            assert!(lo <= hi);
+            for i in lo..hi {
+                assert!(!covered[i as usize], "index {i} owned twice");
+                covered[i as usize] = true;
+            }
+        }
+        assert!(covered.iter().all(|&c| c), "index space not fully covered");
+    }
+
+    #[test]
+    fn final_ranges_ordered_by_node_id() {
+        let b = Butterfly::new(vec![4, 2, 2], 1 << 20);
+        let mut prev_hi = 0i64;
+        for n in 0..16 {
+            let (lo, hi) = b.final_range(n);
+            assert_eq!(lo, prev_hi, "intervals must be contiguous in node order");
+            prev_hi = hi;
+        }
+        assert_eq!(prev_hi, 1 << 20);
+    }
+
+    #[test]
+    fn owner_of_agrees_with_final_range() {
+        let b = Butterfly::new(vec![3, 5], 1234);
+        for idx in (0..1234).step_by(7) {
+            let owner = b.owner_of(idx);
+            let (lo, hi) = b.final_range(owner);
+            assert!(idx >= lo && idx < hi);
+        }
+    }
+
+    #[test]
+    fn round_robin_single_layer() {
+        let b = Butterfly::round_robin(8, 100);
+        assert_eq!(b.layers(), 1);
+        assert_eq!(b.degree(0), 8);
+        assert_eq!(b.group(3, 0), (0..8).collect::<Vec<_>>());
+        let (lo, hi) = b.final_range(3);
+        assert_eq!((lo, hi), (37, 50));
+    }
+
+    #[test]
+    fn binary_butterfly_shape() {
+        let b = Butterfly::binary(16, 1 << 16);
+        assert_eq!(b.layers(), 4);
+        assert!(b.degrees().iter().all(|&k| k == 2));
+        assert_eq!(b.machines(), 16);
+    }
+
+    #[test]
+    fn range_refinement_is_nested() {
+        let b = Butterfly::new(vec![2, 3], 60);
+        for n in 0..6 {
+            let (l0, h0) = b.range_at(n, 0);
+            let (l1, h1) = b.range_at(n, 1);
+            let (l2, h2) = b.range_at(n, 2);
+            assert!(l0 <= l1 && h1 <= h0);
+            assert!(l1 <= l2 && h2 <= h1);
+            assert_eq!((l0, h0), (0, 60));
+        }
+    }
+
+    #[test]
+    fn single_machine_degenerate() {
+        let b = Butterfly::new(vec![1], 50);
+        assert_eq!(b.machines(), 1);
+        assert_eq!(b.final_range(0), (0, 50));
+        assert_eq!(b.owner_of(49), 0);
+    }
+}

@@ -1,0 +1,15 @@
+//! Allreduce network topologies (paper §II, §IV-B).
+//!
+//! The paper's contribution is the *heterogeneous-degree butterfly*: a
+//! `d`-layer network with per-layer degrees `k₁ × k₂ × … × k_d`,
+//! `M = ∏ kᵢ`, hybridizing round-robin (one layer, degree `M`) and the
+//! binary butterfly (`log₂M` layers of degree 2). The degree schedule is
+//! chosen so that per-round packet sizes stay above the cluster's
+//! effective packet floor; since index collisions shrink the data at each
+//! layer, optimal degrees decrease with depth.
+
+pub mod butterfly;
+pub mod planner;
+
+pub use butterfly::{Butterfly, NodeId};
+pub use planner::{factorizations, plan_degrees, PlannerParams};

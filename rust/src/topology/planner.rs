@@ -1,0 +1,204 @@
+//! Degree-schedule planner (paper §IV-B).
+//!
+//! "We adjust kᵢ for each layer to the largest value that avoids
+//! saturation (packet sizes below the practical minimum)… Because the sum
+//! of message lengths decreases as we go down layers of the network, the
+//! optimal k-values will also typically decrease."
+//!
+//! The planner takes the per-node data volume, the packet-size floor and
+//! the expected per-layer collision compression factor, and emits a
+//! decreasing degree schedule whose product is `M`. It also enumerates all
+//! ordered factorizations of `M` for exhaustive sweeps (Figure 6).
+
+/// Parameters guiding degree selection.
+#[derive(Clone, Copy, Debug)]
+pub struct PlannerParams {
+    /// Bytes of sparse payload held by one node entering layer 0
+    /// (≈ total data / M).
+    pub bytes_per_node: f64,
+    /// Effective packet floor in bytes (paper: 2–4 MB on 2013 EC2).
+    pub packet_floor: f64,
+    /// Multiplicative shrink of per-node payload from one layer to the
+    /// next due to index collisions (≤ 1.0; power-law data gives ~0.5–0.8
+    /// at high degrees).
+    pub compression: f64,
+}
+
+impl Default for PlannerParams {
+    fn default() -> Self {
+        Self { bytes_per_node: 16.0 * 1024.0 * 1024.0, packet_floor: 2.0 * 1024.0 * 1024.0, compression: 0.7 }
+    }
+}
+
+/// All ordered factorizations of `m` into factors ≥ 2 (plus `[m]` itself
+/// and, for m == 1, `[1]`). Order matters: `[16, 4]` ≠ `[4, 16]`.
+pub fn factorizations(m: usize) -> Vec<Vec<usize>> {
+    fn rec(m: usize, acc: &mut Vec<usize>, out: &mut Vec<Vec<usize>>) {
+        if m == 1 {
+            if !acc.is_empty() {
+                out.push(acc.clone());
+            }
+            return;
+        }
+        let mut f = 2;
+        while f <= m {
+            if m % f == 0 {
+                acc.push(f);
+                rec(m / f, acc, out);
+                acc.pop();
+            }
+            f += 1;
+        }
+    }
+    if m == 1 {
+        return vec![vec![1]];
+    }
+    let mut out = Vec::new();
+    rec(m, &mut Vec::new(), &mut out);
+    out
+}
+
+/// Greedy degree schedule: at each layer pick the largest divisor `k` of
+/// the remaining machine count such that the per-packet size
+/// `bytes/k` stays at or above the floor; if even `k = 2` violates the
+/// floor, fall back to the smallest prime factor (we must still cover M).
+pub fn plan_degrees(m: usize, params: &PlannerParams) -> Vec<usize> {
+    assert!(m >= 1);
+    if m == 1 {
+        return vec![1];
+    }
+    let mut rem = m;
+    let mut bytes = params.bytes_per_node;
+    let mut degrees = Vec::new();
+    while rem > 1 {
+        let divisors = divisors_desc(rem);
+        // Largest k with bytes/k >= floor; fallback smallest prime factor.
+        let k = divisors
+            .iter()
+            .copied()
+            .filter(|&k| k > 1)
+            .find(|&k| bytes / k as f64 >= params.packet_floor)
+            .unwrap_or_else(|| smallest_prime_factor(rem));
+        degrees.push(k);
+        rem /= k;
+        // Per-node volume entering the next layer: the node received k
+        // packets of bytes/k each and the k-way sum compressed their union
+        // by the collision factor.
+        bytes *= params.compression;
+    }
+    degrees
+}
+
+fn divisors_desc(n: usize) -> Vec<usize> {
+    let mut ds = Vec::new();
+    let mut i = 1;
+    while i * i <= n {
+        if n % i == 0 {
+            ds.push(i);
+            if i != n / i {
+                ds.push(n / i);
+            }
+        }
+        i += 1;
+    }
+    ds.sort_unstable_by(|a, b| b.cmp(a));
+    ds
+}
+
+fn smallest_prime_factor(n: usize) -> usize {
+    let mut f = 2;
+    while f * f <= n {
+        if n % f == 0 {
+            return f;
+        }
+        f += 1;
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factorizations_of_8() {
+        let mut fs = factorizations(8);
+        fs.sort();
+        assert_eq!(fs, vec![vec![2, 2, 2], vec![2, 4], vec![4, 2], vec![8]]);
+    }
+
+    #[test]
+    fn factorizations_of_64_contains_paper_configs() {
+        let fs = factorizations(64);
+        for want in [vec![64usize], vec![16, 4], vec![8, 8], vec![4, 4, 4], vec![2; 6]] {
+            assert!(fs.contains(&want), "missing {want:?}");
+        }
+        // products all equal 64
+        for f in &fs {
+            assert_eq!(f.iter().product::<usize>(), 64);
+        }
+    }
+
+    #[test]
+    fn factorization_of_one() {
+        assert_eq!(factorizations(1), vec![vec![1]]);
+    }
+
+    #[test]
+    fn plan_covers_m() {
+        for m in [1usize, 2, 6, 12, 64, 128, 60] {
+            let p = PlannerParams::default();
+            let d = plan_degrees(m, &p);
+            assert_eq!(d.iter().product::<usize>(), m, "schedule {d:?} for m={m}");
+        }
+    }
+
+    #[test]
+    fn plan_prefers_large_first_layer_with_big_data() {
+        // Lots of data per node: the planner should pick k as large as
+        // possible first (round-robin-like head).
+        let p = PlannerParams {
+            bytes_per_node: 256.0 * 1024.0 * 1024.0,
+            packet_floor: 2.0 * 1024.0 * 1024.0,
+            compression: 0.7,
+        };
+        let d = plan_degrees(64, &p);
+        assert_eq!(d[0], 64, "plenty of data → single round-robin layer, got {d:?}");
+    }
+
+    #[test]
+    fn plan_degrades_to_binary_with_tiny_data() {
+        // Tiny data: every split violates the floor → smallest prime
+        // factors, i.e. a binary butterfly.
+        let p = PlannerParams {
+            bytes_per_node: 1024.0,
+            packet_floor: 2.0 * 1024.0 * 1024.0,
+            compression: 0.7,
+        };
+        let d = plan_degrees(64, &p);
+        assert_eq!(d, vec![2, 2, 2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn plan_mid_case_decreasing_degrees() {
+        // The paper's 16×4 shape: enough data for a 16-way first layer,
+        // compressed remainder only supports 4.
+        let p = PlannerParams {
+            bytes_per_node: 33.0 * 1024.0 * 1024.0,
+            packet_floor: 2.0 * 1024.0 * 1024.0,
+            compression: 0.6,
+        };
+        let d = plan_degrees(64, &p);
+        assert!(d.len() >= 2, "expected multi-layer schedule, got {d:?}");
+        assert!(d.windows(2).all(|w| w[0] >= w[1]), "degrees should decrease: {d:?}");
+        assert_eq!(d.iter().product::<usize>(), 64);
+    }
+
+    #[test]
+    fn divisors_and_spf() {
+        assert_eq!(divisors_desc(12), vec![12, 6, 4, 3, 2, 1]);
+        assert_eq!(smallest_prime_factor(12), 2);
+        assert_eq!(smallest_prime_factor(35), 5);
+        assert_eq!(smallest_prime_factor(13), 13);
+    }
+}

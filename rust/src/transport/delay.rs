@@ -1,0 +1,99 @@
+//! Latency-injecting transport wrapper.
+//!
+//! Wraps an inner transport and blocks the *sending* thread for the time
+//! the `simnet` cost model assigns to the message (setup + size/bandwidth
+//! + latency outliers). Combined with a [`super::SenderPool`] of `t`
+//! threads, `t` message delays overlap — reproducing the latency-hiding
+//! effect the paper measures in Figure 7 without needing 64 real hosts.
+
+use super::{Envelope, Transport, TransportError};
+use crate::simnet::CostModel;
+use crate::topology::NodeId;
+use crate::util::Pcg32;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Transport decorator adding per-message simulated wire time.
+pub struct DelayTransport<T: Transport> {
+    inner: T,
+    cost: CostModel,
+    rng: Mutex<Pcg32>,
+    /// Scale factor applied to simulated delays (shrink for fast tests).
+    pub time_scale: f64,
+}
+
+impl<T: Transport> DelayTransport<T> {
+    pub fn new(inner: T, cost: CostModel, seed: u64) -> Self {
+        Self { inner, cost, rng: Mutex::new(Pcg32::new(seed)), time_scale: 1.0 }
+    }
+
+    pub fn with_time_scale(mut self, scale: f64) -> Self {
+        self.time_scale = scale;
+        self
+    }
+
+    pub fn inner(&self) -> &T {
+        &self.inner
+    }
+}
+
+impl<T: Transport> Transport for DelayTransport<T> {
+    fn machines(&self) -> usize {
+        self.inner.machines()
+    }
+
+    fn send(&self, dst: NodeId, env: Envelope) -> Result<(), TransportError> {
+        let bytes = self.wire_bytes(&env);
+        let secs = {
+            let mut rng = self.rng.lock().expect("rng poisoned");
+            self.cost.message_time(bytes, &mut rng)
+        };
+        let scaled = secs * self.time_scale;
+        if scaled > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(scaled));
+        }
+        self.inner.send(dst, env)
+    }
+
+    fn recv(&self, node: NodeId, timeout: Duration) -> Result<Envelope, TransportError> {
+        self.inner.recv(node, timeout)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allreduce::Phase;
+    use crate::simnet::CostModel;
+    use crate::transport::{MemTransport, Tag};
+    use std::time::Instant;
+
+    #[test]
+    fn injects_delay() {
+        let cost = CostModel { setup_secs: 0.005, ..CostModel::ideal(1e9) };
+        let t = DelayTransport::new(MemTransport::new(2), cost, 1);
+        let env = Envelope {
+            src: 0,
+            tag: Tag::new(0, Phase::ReduceDown, 0),
+            payload: vec![0; 16],
+        };
+        let start = Instant::now();
+        t.send(1, env).unwrap();
+        assert!(start.elapsed() >= Duration::from_millis(4), "delay not applied");
+        assert!(t.recv(1, Duration::from_millis(50)).is_ok());
+    }
+
+    #[test]
+    fn time_scale_shrinks_delay() {
+        let cost = CostModel { setup_secs: 0.1, ..CostModel::ideal(1e9) };
+        let t = DelayTransport::new(MemTransport::new(2), cost, 1).with_time_scale(0.01);
+        let env = Envelope {
+            src: 0,
+            tag: Tag::new(0, Phase::ReduceDown, 0),
+            payload: vec![],
+        };
+        let start = Instant::now();
+        t.send(1, env).unwrap();
+        assert!(start.elapsed() < Duration::from_millis(50));
+    }
+}

@@ -1,0 +1,112 @@
+//! In-process channel transport: one mpsc inbox per node.
+
+use super::{Envelope, Transport, TransportError};
+use crate::topology::NodeId;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Shared-memory transport for single-process clusters.
+pub struct MemTransport {
+    senders: Vec<Sender<Envelope>>,
+    inboxes: Vec<Mutex<Receiver<Envelope>>>,
+}
+
+impl MemTransport {
+    pub fn new(machines: usize) -> Self {
+        let mut senders = Vec::with_capacity(machines);
+        let mut inboxes = Vec::with_capacity(machines);
+        for _ in 0..machines {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            inboxes.push(Mutex::new(rx));
+        }
+        Self { senders, inboxes }
+    }
+}
+
+impl Transport for MemTransport {
+    fn machines(&self) -> usize {
+        self.senders.len()
+    }
+
+    fn send(&self, dst: NodeId, env: Envelope) -> Result<(), TransportError> {
+        self.senders
+            .get(dst)
+            .ok_or(TransportError::Closed(dst))?
+            .send(env)
+            .map_err(|_| TransportError::Closed(dst))
+    }
+
+    fn recv(&self, node: NodeId, timeout: Duration) -> Result<Envelope, TransportError> {
+        let rx = self.inboxes.get(node).ok_or(TransportError::Closed(node))?;
+        let rx = rx.lock().expect("inbox poisoned");
+        rx.recv_timeout(timeout).map_err(|e| match e {
+            RecvTimeoutError::Timeout => TransportError::Timeout(timeout),
+            RecvTimeoutError::Disconnected => TransportError::Closed(node),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allreduce::Phase;
+    use crate::transport::Tag;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn env(src: usize, seq: u32) -> Envelope {
+        Envelope { src, tag: Tag::new(seq, Phase::ReduceDown, 0), payload: vec![1, 2, 3] }
+    }
+
+    #[test]
+    fn send_recv_roundtrip() {
+        let t = MemTransport::new(3);
+        t.send(2, env(0, 1)).unwrap();
+        let got = t.recv(2, Duration::from_millis(100)).unwrap();
+        assert_eq!(got.src, 0);
+        assert_eq!(got.tag.seq, 1);
+        assert_eq!(got.payload, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn recv_timeout() {
+        let t = MemTransport::new(1);
+        match t.recv(0, Duration::from_millis(10)) {
+            Err(TransportError::Timeout(_)) => {}
+            other => panic!("expected timeout, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_destination() {
+        let t = MemTransport::new(1);
+        assert!(matches!(t.send(5, env(0, 0)), Err(TransportError::Closed(5))));
+    }
+
+    #[test]
+    fn cross_thread_delivery() {
+        let t = Arc::new(MemTransport::new(2));
+        let t2 = t.clone();
+        let h = std::thread::spawn(move || {
+            for i in 0..100 {
+                t2.send(1, env(0, i)).unwrap();
+            }
+        });
+        let mut seqs = Vec::new();
+        for _ in 0..100 {
+            seqs.push(t.recv(1, Duration::from_secs(1)).unwrap().tag.seq);
+        }
+        h.join().unwrap();
+        seqs.sort_unstable();
+        assert_eq!(seqs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn wire_bytes_includes_header() {
+        let t = MemTransport::new(1);
+        let e = env(0, 0);
+        assert_eq!(t.wire_bytes(&e), super::super::wire::HEADER_BYTES + 3);
+    }
+}

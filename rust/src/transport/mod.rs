@@ -1,0 +1,104 @@
+//! Cluster transports (paper §IV-C/D).
+//!
+//! The paper implements messaging with raw Java sockets plus aggressive
+//! multi-threading ("we start threads to send all messages concurrently,
+//! and spawn a thread to process each message that is received"). The
+//! Rust analog here:
+//!
+//! * [`Transport`] — the send/recv abstraction all drivers use.
+//! * [`mem::MemTransport`] — in-process mpsc channels (one inbox per
+//!   node); the default for single-host clusters and tests.
+//! * [`tcp::TcpNet`] — length-prefix-framed `std::net` sockets over
+//!   loopback/LAN, with a connection cache and reader threads.
+//! * [`delay::DelayTransport`] — wraps any transport and injects the
+//!   `simnet` cost model's latency (setup + size/bandwidth + outliers) in
+//!   the *sending* thread, so sender-pool threading hides latency exactly
+//!   as in the paper (Figure 7).
+//! * [`pool::SenderPool`] — bounded pool of sender threads per node; the
+//!   thread-level knob of Figure 7.
+
+pub mod delay;
+pub mod mem;
+pub mod pool;
+pub mod tcp;
+pub mod wire;
+
+pub use delay::DelayTransport;
+pub use mem::MemTransport;
+pub use pool::SenderPool;
+pub use tcp::TcpNet;
+
+use crate::allreduce::Phase;
+use crate::topology::NodeId;
+use std::time::Duration;
+
+/// Message tag: collective sequence number + phase + layer disambiguate
+/// out-of-order arrivals across successive reduces.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Tag {
+    pub seq: u32,
+    pub phase_code: u8,
+    pub layer: u16,
+}
+
+impl Tag {
+    pub fn new(seq: u32, phase: Phase, layer: usize) -> Self {
+        Self { seq, phase_code: phase_code(phase), layer: layer as u16 }
+    }
+
+    pub fn phase(&self) -> Phase {
+        match self.phase_code {
+            0 => Phase::ConfigDown,
+            1 => Phase::ReduceDown,
+            2 => Phase::ReduceUp,
+            c => panic!("bad phase code {c}"),
+        }
+    }
+}
+
+pub fn phase_code(p: Phase) -> u8 {
+    match p {
+        Phase::ConfigDown => 0,
+        Phase::ReduceDown => 1,
+        Phase::ReduceUp => 2,
+    }
+}
+
+/// A routed message.
+#[derive(Clone, Debug)]
+pub struct Envelope {
+    pub src: NodeId,
+    pub tag: Tag,
+    pub payload: Vec<u8>,
+}
+
+/// Transport errors.
+#[derive(Debug, thiserror::Error)]
+pub enum TransportError {
+    #[error("receive timed out after {0:?}")]
+    Timeout(Duration),
+    #[error("node {0} is shut down")]
+    Closed(NodeId),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Cluster message fabric: every node can send to and receive from every
+/// other. Implementations must be safe to share across node threads.
+pub trait Transport: Send + Sync {
+    /// Number of endpoints.
+    fn machines(&self) -> usize;
+
+    /// Deliver `env` to `dst`'s inbox. Blocking (may apply simulated or
+    /// real wire delay in the calling thread).
+    fn send(&self, dst: NodeId, env: Envelope) -> Result<(), TransportError>;
+
+    /// Take the next message addressed to `node` (any tag), waiting up to
+    /// `timeout`.
+    fn recv(&self, node: NodeId, timeout: Duration) -> Result<Envelope, TransportError>;
+
+    /// Bytes placed on the wire for an envelope (header + payload).
+    fn wire_bytes(&self, env: &Envelope) -> usize {
+        wire::HEADER_BYTES + env.payload.len()
+    }
+}

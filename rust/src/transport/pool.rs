@@ -1,0 +1,202 @@
+//! Bounded sender-thread pool (the paper's thread-level knob, Figure 7).
+//!
+//! "We start threads to send all messages concurrently … excessive
+//! threading can hurt performance through switching of the active message
+//! thread." The pool keeps `threads` PERSISTENT worker threads fed by a
+//! job queue (spawning an OS thread per message — the naive reading of
+//! the paper — costs ~50 µs per spawn and dominated the reduce at high
+//! fan-out; see EXPERIMENTS.md §Perf). `threads = 1` models fully
+//! synchronous sending; the paper finds gains up to ~8 threads on 8-core
+//! machines and a plateau beyond.
+
+use super::{Envelope, Transport, TransportError};
+use crate::topology::NodeId;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+
+type Job = Box<dyn FnOnce() -> Result<(), TransportError> + Send>;
+
+struct Shared {
+    errors: Mutex<Vec<TransportError>>,
+    pending: AtomicUsize,
+    done: Condvar,
+    done_lock: Mutex<()>,
+}
+
+/// A pool of persistent worker threads performing `transport.send` calls;
+/// the caller can block until all sends it issued have completed.
+pub struct SenderPool {
+    threads: usize,
+    queue: Sender<Job>,
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl SenderPool {
+    pub fn new(threads: usize) -> Self {
+        assert!(threads >= 1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let shared = Arc::new(Shared {
+            errors: Mutex::new(Vec::new()),
+            pending: AtomicUsize::new(0),
+            done: Condvar::new(),
+            done_lock: Mutex::new(()),
+        });
+        let mut workers = Vec::with_capacity(threads);
+        for _ in 0..threads {
+            let rx = rx.clone();
+            let shared = shared.clone();
+            workers.push(std::thread::spawn(move || Self::worker_loop(&rx, &shared)));
+        }
+        Self { threads, queue: tx, shared, workers }
+    }
+
+    fn worker_loop(rx: &Arc<Mutex<Receiver<Job>>>, shared: &Arc<Shared>) {
+        loop {
+            let job = {
+                let guard = rx.lock().expect("pool queue poisoned");
+                guard.recv()
+            };
+            let Ok(job) = job else { return }; // pool dropped
+            if let Err(e) = job() {
+                shared.errors.lock().expect("err poisoned").push(e);
+            }
+            if shared.pending.fetch_sub(1, Ordering::SeqCst) == 1 {
+                let _g = shared.done_lock.lock().expect("done poisoned");
+                shared.done.notify_all();
+            }
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Issue an asynchronous send; never blocks the caller (backpressure
+    /// is provided by [`Self::wait`] at the layer barrier).
+    pub fn send<T: Transport + 'static>(&self, transport: &Arc<T>, dst: NodeId, env: Envelope) {
+        let transport = transport.clone();
+        self.shared.pending.fetch_add(1, Ordering::SeqCst);
+        self.queue
+            .send(Box::new(move || transport.send(dst, env)))
+            .expect("sender pool shut down");
+    }
+
+    /// Block until every send issued so far has completed; returns the
+    /// errors collected (and clears them).
+    pub fn wait(&self) -> Vec<TransportError> {
+        let mut g = self.shared.done_lock.lock().expect("done poisoned");
+        while self.shared.pending.load(Ordering::SeqCst) != 0 {
+            g = self.shared.done.wait(g).expect("done poisoned");
+        }
+        drop(g);
+        std::mem::take(&mut *self.shared.errors.lock().expect("err poisoned"))
+    }
+}
+
+impl Drop for SenderPool {
+    fn drop(&mut self) {
+        // Closing the queue ends the worker loops.
+        let (tx, _rx) = channel();
+        let _closed = std::mem::replace(&mut self.queue, tx);
+        drop(_closed);
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allreduce::Phase;
+    use crate::simnet::CostModel;
+    use crate::transport::{DelayTransport, MemTransport, Tag};
+    use std::time::{Duration, Instant};
+
+    fn env(seq: u32) -> Envelope {
+        Envelope { src: 0, tag: Tag::new(seq, Phase::ReduceDown, 0), payload: vec![] }
+    }
+
+    #[test]
+    fn all_sends_delivered() {
+        let t = Arc::new(MemTransport::new(2));
+        let pool = SenderPool::new(4);
+        for i in 0..50 {
+            pool.send(&t, 1, env(i));
+        }
+        let errs = pool.wait();
+        assert!(errs.is_empty());
+        let mut got = Vec::new();
+        for _ in 0..50 {
+            got.push(t.recv(1, Duration::from_secs(1)).unwrap().tag.seq);
+        }
+        got.sort_unstable();
+        assert_eq!(got, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn multithreading_hides_latency() {
+        // 8 messages × 20ms delay: 1 thread ≈ 160ms, 8 threads ≈ 20ms.
+        let cost = CostModel { setup_secs: 0.02, ..CostModel::ideal(1e12) };
+        let t = Arc::new(DelayTransport::new(MemTransport::new(2), cost, 3));
+
+        let serial = {
+            let pool = SenderPool::new(1);
+            let start = Instant::now();
+            for i in 0..8 {
+                pool.send(&t, 1, env(i));
+            }
+            pool.wait();
+            start.elapsed()
+        };
+        let parallel = {
+            let pool = SenderPool::new(8);
+            let start = Instant::now();
+            for i in 0..8 {
+                pool.send(&t, 1, env(100 + i));
+            }
+            pool.wait();
+            start.elapsed()
+        };
+        assert!(
+            parallel < serial / 3,
+            "8 threads ({parallel:?}) should be ≫ faster than 1 ({serial:?})"
+        );
+    }
+
+    #[test]
+    fn errors_surface_in_wait() {
+        let t = Arc::new(MemTransport::new(1));
+        let pool = SenderPool::new(2);
+        pool.send(&t, 9, env(0)); // bad destination
+        let errs = pool.wait();
+        assert_eq!(errs.len(), 1);
+    }
+
+    #[test]
+    fn wait_is_reusable() {
+        let t = Arc::new(MemTransport::new(2));
+        let pool = SenderPool::new(2);
+        for round in 0..5u32 {
+            for i in 0..10 {
+                pool.send(&t, 1, env(round * 10 + i));
+            }
+            assert!(pool.wait().is_empty());
+        }
+        for _ in 0..50 {
+            t.recv(1, Duration::from_secs(1)).unwrap();
+        }
+    }
+
+    #[test]
+    fn drop_shuts_down_workers() {
+        let t = Arc::new(MemTransport::new(2));
+        let pool = SenderPool::new(3);
+        pool.send(&t, 1, env(0));
+        pool.wait();
+        drop(pool); // must not hang
+    }
+}

@@ -1,0 +1,219 @@
+//! TCP socket transport (the paper's Java-sockets analog, §IV-D).
+//!
+//! Each node binds a listener (loopback by default); a background acceptor
+//! thread spawns one reader thread per inbound connection which decodes
+//! frames (see [`super::wire`]) into the node's inbox. Outbound
+//! connections are cached per (src, dst) pair and guarded by a mutex so
+//! multiple sender threads can share the fabric.
+
+use super::wire::{decode_header, encode_header, HEADER_BYTES};
+use super::{Envelope, Transport, TransportError};
+use crate::topology::NodeId;
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// A TCP fabric hosting all `m` node endpoints in this process (multi-host
+/// deployments construct one `TcpNet` per host with the full address map).
+pub struct TcpNet {
+    addrs: Vec<SocketAddr>,
+    inbox_rx: Vec<Mutex<Receiver<Envelope>>>,
+    // One mutex per (src, dst) connection: frames must not interleave when
+    // several sender threads share a link.
+    conns: Mutex<HashMap<(NodeId, NodeId), Arc<Mutex<TcpStream>>>>,
+    _listeners: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl TcpNet {
+    /// Bind `m` listeners on ephemeral loopback ports and start acceptor
+    /// threads.
+    pub fn local(machines: usize) -> std::io::Result<Arc<Self>> {
+        let mut addrs = Vec::with_capacity(machines);
+        let mut listeners = Vec::with_capacity(machines);
+        let mut inbox_tx: Vec<Sender<Envelope>> = Vec::with_capacity(machines);
+        let mut inbox_rx = Vec::with_capacity(machines);
+        for _ in 0..machines {
+            let l = TcpListener::bind("127.0.0.1:0")?;
+            addrs.push(l.local_addr()?);
+            listeners.push(l);
+            let (tx, rx) = channel();
+            inbox_tx.push(tx);
+            inbox_rx.push(Mutex::new(rx));
+        }
+        let mut handles = Vec::with_capacity(machines);
+        for (l, tx) in listeners.into_iter().zip(inbox_tx) {
+            let tx = tx.clone();
+            handles.push(std::thread::spawn(move || Self::acceptor_loop(l, tx)));
+        }
+        Ok(Arc::new(Self {
+            addrs,
+            inbox_rx,
+            conns: Mutex::new(HashMap::new()),
+            _listeners: handles,
+        }))
+    }
+
+    fn acceptor_loop(listener: TcpListener, inbox: Sender<Envelope>) {
+        // The acceptor exits when the TcpNet (and thus all senders) is
+        // dropped and accept() starts failing, or the process ends.
+        for stream in listener.incoming() {
+            let Ok(stream) = stream else { break };
+            let inbox = inbox.clone();
+            std::thread::spawn(move || Self::reader_loop(stream, inbox));
+        }
+    }
+
+    fn reader_loop(mut stream: TcpStream, inbox: Sender<Envelope>) {
+        loop {
+            let mut header = [0u8; HEADER_BYTES];
+            if stream.read_exact(&mut header).is_err() {
+                return; // peer closed
+            }
+            let (src, tag, len) = decode_header(&header);
+            let mut payload = vec![0u8; len];
+            if stream.read_exact(&mut payload).is_err() {
+                return;
+            }
+            if inbox.send(Envelope { src, tag, payload }).is_err() {
+                return; // inbox dropped
+            }
+        }
+    }
+
+    fn connection(
+        &self,
+        src: NodeId,
+        dst: NodeId,
+    ) -> Result<Arc<Mutex<TcpStream>>, TransportError> {
+        let mut conns = self.conns.lock().expect("conn cache poisoned");
+        if let Some(s) = conns.get(&(src, dst)) {
+            return Ok(s.clone());
+        }
+        let stream = TcpStream::connect(self.addrs[dst])?;
+        stream.set_nodelay(true)?;
+        let link = Arc::new(Mutex::new(stream));
+        conns.insert((src, dst), link.clone());
+        Ok(link)
+    }
+
+    pub fn addr(&self, node: NodeId) -> SocketAddr {
+        self.addrs[node]
+    }
+}
+
+impl Transport for TcpNet {
+    fn machines(&self) -> usize {
+        self.addrs.len()
+    }
+
+    fn send(&self, dst: NodeId, env: Envelope) -> Result<(), TransportError> {
+        if dst >= self.addrs.len() {
+            return Err(TransportError::Closed(dst));
+        }
+        let link = self.connection(env.src, dst)?;
+        let header = encode_header(env.src, env.tag, env.payload.len());
+        let mut buf = Vec::with_capacity(HEADER_BYTES + env.payload.len());
+        buf.extend_from_slice(&header);
+        buf.extend_from_slice(&env.payload);
+        // Hold the link lock across the whole frame so frames from
+        // concurrent sender threads never interleave.
+        let mut stream = link.lock().expect("link poisoned");
+        stream.write_all(&buf)?;
+        Ok(())
+    }
+
+    fn recv(&self, node: NodeId, timeout: Duration) -> Result<Envelope, TransportError> {
+        let rx = self.inbox_rx.get(node).ok_or(TransportError::Closed(node))?;
+        let rx = rx.lock().expect("inbox poisoned");
+        rx.recv_timeout(timeout).map_err(|e| match e {
+            RecvTimeoutError::Timeout => TransportError::Timeout(timeout),
+            RecvTimeoutError::Disconnected => TransportError::Closed(node),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allreduce::Phase;
+    use crate::transport::Tag;
+
+    #[test]
+    fn tcp_roundtrip() {
+        let net = TcpNet::local(2).unwrap();
+        let env = Envelope {
+            src: 0,
+            tag: Tag::new(3, Phase::ConfigDown, 1),
+            payload: vec![9, 8, 7, 6],
+        };
+        net.send(1, env).unwrap();
+        let got = net.recv(1, Duration::from_secs(2)).unwrap();
+        assert_eq!(got.src, 0);
+        assert_eq!(got.tag, Tag::new(3, Phase::ConfigDown, 1));
+        assert_eq!(got.payload, vec![9, 8, 7, 6]);
+    }
+
+    #[test]
+    fn tcp_many_messages_many_nodes() {
+        let net = TcpNet::local(4).unwrap();
+        for src in 0..4usize {
+            for dst in 0..4usize {
+                if src != dst {
+                    let env = Envelope {
+                        src,
+                        tag: Tag::new((src * 4 + dst) as u32, Phase::ReduceDown, 0),
+                        payload: vec![src as u8; 64],
+                    };
+                    net.send(dst, env).unwrap();
+                }
+            }
+        }
+        for dst in 0..4usize {
+            let mut got = 0;
+            while got < 3 {
+                let e = net.recv(dst, Duration::from_secs(2)).unwrap();
+                assert_eq!(e.payload, vec![e.src as u8; 64]);
+                got += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn tcp_large_payload() {
+        let net = TcpNet::local(2).unwrap();
+        let payload: Vec<u8> = (0..1_000_000u32).map(|x| x as u8).collect();
+        let env = Envelope { src: 0, tag: Tag::new(0, Phase::ReduceUp, 0), payload: payload.clone() };
+        net.send(1, env).unwrap();
+        let got = net.recv(1, Duration::from_secs(5)).unwrap();
+        assert_eq!(got.payload, payload);
+    }
+
+    #[test]
+    fn tcp_concurrent_senders() {
+        let net = TcpNet::local(2).unwrap();
+        let mut handles = Vec::new();
+        for t in 0..4 {
+            let net = net.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..25u32 {
+                    let env = Envelope {
+                        src: 0,
+                        tag: Tag::new(t * 100 + i, Phase::ReduceDown, 0),
+                        payload: vec![0u8; 128],
+                    };
+                    net.send(1, env).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        for _ in 0..100 {
+            let e = net.recv(1, Duration::from_secs(2)).unwrap();
+            assert_eq!(e.payload.len(), 128);
+        }
+    }
+}

@@ -1,0 +1,135 @@
+//! Wire format: framing and payload codecs shared by the TCP transport
+//! and the message-size accounting.
+//!
+//! Frame layout (little-endian):
+//! ```text
+//! [ src:u32 | seq:u32 | phase:u8 | layer:u16 | pad:u8 | len:u32 ] payload…
+//! ```
+
+use super::{Envelope, Tag};
+use crate::allreduce::ConfigPart;
+use crate::sparse::ops::{values_from_bytes, values_to_bytes, ReduceOp};
+use crate::topology::NodeId;
+
+/// Frame header size in bytes.
+pub const HEADER_BYTES: usize = 16;
+
+/// Encode a frame header.
+pub fn encode_header(src: NodeId, tag: Tag, payload_len: usize) -> [u8; HEADER_BYTES] {
+    let mut h = [0u8; HEADER_BYTES];
+    h[0..4].copy_from_slice(&(src as u32).to_le_bytes());
+    h[4..8].copy_from_slice(&tag.seq.to_le_bytes());
+    h[8] = tag.phase_code;
+    h[9..11].copy_from_slice(&tag.layer.to_le_bytes());
+    h[11] = 0;
+    h[12..16].copy_from_slice(&(payload_len as u32).to_le_bytes());
+    h
+}
+
+/// Decode a frame header → (src, tag, payload_len).
+pub fn decode_header(h: &[u8; HEADER_BYTES]) -> (NodeId, Tag, usize) {
+    let src = u32::from_le_bytes([h[0], h[1], h[2], h[3]]) as NodeId;
+    let seq = u32::from_le_bytes([h[4], h[5], h[6], h[7]]);
+    let phase_code = h[8];
+    let layer = u16::from_le_bytes([h[9], h[10]]);
+    let len = u32::from_le_bytes([h[12], h[13], h[14], h[15]]) as usize;
+    (src, Tag { seq, phase_code, layer }, len)
+}
+
+/// Serialize a config part: `[down_len:u32 | up_len:u32 | down:i64… | up:i64…]`.
+pub fn encode_config_part(part: &ConfigPart) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + (part.down_idx.len() + part.up_idx.len()) * 8);
+    out.extend_from_slice(&(part.down_idx.len() as u32).to_le_bytes());
+    out.extend_from_slice(&(part.up_idx.len() as u32).to_le_bytes());
+    for &i in &part.down_idx {
+        out.extend_from_slice(&i.to_le_bytes());
+    }
+    for &i in &part.up_idx {
+        out.extend_from_slice(&i.to_le_bytes());
+    }
+    out
+}
+
+/// Deserialize a config part.
+pub fn decode_config_part(buf: &[u8]) -> ConfigPart {
+    assert!(buf.len() >= 8, "short config part");
+    let dn = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
+    let un = u32::from_le_bytes([buf[4], buf[5], buf[6], buf[7]]) as usize;
+    assert_eq!(buf.len(), 8 + (dn + un) * 8, "config part length mismatch");
+    let mut off = 8usize;
+    let read_i64 = |off: &mut usize| -> i64 {
+        let v = i64::from_le_bytes(buf[*off..*off + 8].try_into().unwrap());
+        *off += 8;
+        v
+    };
+    let down_idx: Vec<i64> = (0..dn).map(|_| read_i64(&mut off)).collect();
+    let up_idx: Vec<i64> = (0..un).map(|_| read_i64(&mut off)).collect();
+    ConfigPart { down_idx, up_idx }
+}
+
+/// Serialize a value segment.
+pub fn encode_values<R: ReduceOp>(vals: &[R::T]) -> Vec<u8> {
+    values_to_bytes::<R>(vals)
+}
+
+/// Deserialize a value segment.
+pub fn decode_values<R: ReduceOp>(buf: &[u8]) -> Vec<R::T> {
+    values_from_bytes::<R>(buf)
+}
+
+/// Build an envelope for a config part.
+pub fn config_envelope(src: NodeId, tag: Tag, part: &ConfigPart) -> Envelope {
+    Envelope { src, tag, payload: encode_config_part(part) }
+}
+
+/// Build an envelope for a value segment.
+pub fn values_envelope<R: ReduceOp>(src: NodeId, tag: Tag, vals: &[R::T]) -> Envelope {
+    Envelope { src, tag, payload: encode_values::<R>(vals) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allreduce::Phase;
+    use crate::sparse::SumF32;
+
+    #[test]
+    fn header_roundtrip() {
+        let tag = Tag::new(7, Phase::ReduceUp, 3);
+        let h = encode_header(42, tag, 1234);
+        let (src, t2, len) = decode_header(&h);
+        assert_eq!(src, 42);
+        assert_eq!(t2, tag);
+        assert_eq!(t2.phase(), Phase::ReduceUp);
+        assert_eq!(len, 1234);
+    }
+
+    #[test]
+    fn config_part_roundtrip() {
+        let p = ConfigPart { down_idx: vec![1, -5, 1 << 40], up_idx: vec![7] };
+        let enc = encode_config_part(&p);
+        assert_eq!(decode_config_part(&enc), p);
+    }
+
+    #[test]
+    fn empty_config_part_roundtrip() {
+        let p = ConfigPart::default();
+        assert_eq!(decode_config_part(&encode_config_part(&p)), p);
+    }
+
+    #[test]
+    fn values_roundtrip() {
+        let vals = vec![1.5f32, -2.25, 0.0];
+        let enc = encode_values::<SumF32>(&vals);
+        assert_eq!(decode_values::<SumF32>(&enc), vals);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn corrupt_config_part_panics() {
+        let p = ConfigPart { down_idx: vec![1, 2], up_idx: vec![] };
+        let mut enc = encode_config_part(&p);
+        enc.pop();
+        decode_config_part(&enc);
+    }
+}

@@ -1,0 +1,71 @@
+//! Human-readable formatting helpers for metrics and bench tables.
+
+/// Format a byte count with binary units: `17301504 → "16.5 MiB"`.
+pub fn human_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.1} {}", UNITS[u])
+    }
+}
+
+/// Format a count with decimal suffixes: `1500000000 → "1.50B"`.
+pub fn human_count(n: u64) -> String {
+    const UNITS: [(&str, u64); 4] =
+        [("T", 1_000_000_000_000), ("B", 1_000_000_000), ("M", 1_000_000), ("K", 1_000)];
+    for (suffix, scale) in UNITS {
+        if n >= scale {
+            return format!("{:.2}{suffix}", n as f64 / scale as f64);
+        }
+    }
+    n.to_string()
+}
+
+/// Format a duration in adaptive units.
+pub fn human_duration(seconds: f64) -> String {
+    if seconds >= 1.0 {
+        format!("{seconds:.3} s")
+    } else if seconds >= 1e-3 {
+        format!("{:.3} ms", seconds * 1e3)
+    } else if seconds >= 1e-6 {
+        format!("{:.3} µs", seconds * 1e6)
+    } else {
+        format!("{:.1} ns", seconds * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.0 KiB");
+        assert_eq!(human_bytes(17_301_504), "16.5 MiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024 * 1024), "3.0 GiB");
+    }
+
+    #[test]
+    fn count_units() {
+        assert_eq!(human_count(7), "7");
+        assert_eq!(human_count(1_500), "1.50K");
+        assert_eq!(human_count(60_000_000), "60.00M");
+        assert_eq!(human_count(1_500_000_000), "1.50B");
+    }
+
+    #[test]
+    fn duration_units() {
+        assert_eq!(human_duration(2.5), "2.500 s");
+        assert_eq!(human_duration(0.0025), "2.500 ms");
+        assert_eq!(human_duration(2.5e-6), "2.500 µs");
+        assert_eq!(human_duration(2.5e-8), "25.0 ns");
+    }
+}

@@ -1,0 +1,70 @@
+//! Minimal `log` facade backend (the vendor set has `log` but no
+//! `env_logger`). Verbosity is controlled by `SAR_LOG` (error|warn|info|
+//! debug|trace) or programmatically via [`init_with_level`].
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::sync::Once;
+use std::time::Instant;
+
+struct StderrLogger {
+    start: Instant,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{t:9.3}s {lvl} {}] {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+static INIT: Once = Once::new();
+
+/// Install the stderr logger once; level from `SAR_LOG` (default `info`).
+pub fn init() {
+    let level = match std::env::var("SAR_LOG").as_deref() {
+        Ok("error") => LevelFilter::Error,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("trace") => LevelFilter::Trace,
+        Ok("off") => LevelFilter::Off,
+        _ => LevelFilter::Info,
+    };
+    init_with_level(level);
+}
+
+/// Install the stderr logger with an explicit level (first call wins).
+pub fn init_with_level(level: LevelFilter) {
+    INIT.call_once(|| {
+        let logger = Box::leak(Box::new(StderrLogger { start: Instant::now() }));
+        let _ = log::set_logger(logger);
+        log::set_max_level(level);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_is_idempotent() {
+        init_with_level(LevelFilter::Warn);
+        init(); // second call must not panic
+        log::warn!("logging smoke test");
+    }
+}

@@ -1,0 +1,16 @@
+//! Small shared substrates: deterministic RNG + Zipf sampling, logging,
+//! timing, and human-readable formatting.
+//!
+//! The offline build has no `rand`, `env_logger` or `humansize`, so these
+//! are implemented in-repo.
+
+pub mod fmt;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use fmt::{human_bytes, human_count, human_duration};
+pub use rng::{Pcg32, SplitMix64, Zipf};
+pub use stats::Summary;
+pub use timer::{ScopedTimer, Stopwatch};

@@ -1,0 +1,417 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The offline vendor set does not include the `rand` crate, so we implement
+//! the small set of generators the library needs from scratch:
+//!
+//! * [`SplitMix64`] — seed expander / fast 64-bit stream (Steele et al.).
+//! * [`Pcg32`] — PCG-XSH-RR 64/32 (O'Neill), the workhorse generator.
+//! * Distribution helpers: uniform ranges, `f64`/`f32` in `[0,1)`,
+//!   exponential, log-normal-ish outliers, and shuffling.
+//!
+//! All generators are deterministic given a seed, which the test suite and
+//! the benchmark harness rely on for reproducibility.
+
+/// SplitMix64: used to expand user seeds into full generator state.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG-XSH-RR 64/32: small, fast, statistically solid PRNG.
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+impl Pcg32 {
+    /// Create a generator from a seed; the stream id is derived from the
+    /// seed so distinct seeds give decorrelated streams.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self::from_state(sm.next_u64(), sm.next_u64())
+    }
+
+    /// Derive a child generator (e.g. one per worker thread) that is
+    /// decorrelated from `self` and from other children.
+    pub fn fork(&mut self, salt: u64) -> Pcg32 {
+        let a = self.next_u64() ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        Pcg32::new(a)
+    }
+
+    pub fn from_state(state: u64, stream: u64) -> Self {
+        let mut rng = Self { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(state);
+        rng.next_u32();
+        rng
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(6_364_136_223_846_793_005).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform integer in `[0, bound)` using Lemire's multiply-shift with
+    /// rejection to remove modulo bias.
+    #[inline]
+    pub fn gen_range_u32(&mut self, bound: u32) -> u32 {
+        debug_assert!(bound > 0);
+        let mut x = self.next_u32();
+        let mut m = (x as u64) * (bound as u64);
+        let mut l = m as u32;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u32();
+                m = (x as u64) * (bound as u64);
+                l = m as u32;
+            }
+        }
+        (m >> 32) as u32
+    }
+
+    /// Uniform integer in `[0, bound)` for 64-bit bounds.
+    #[inline]
+    pub fn gen_range_u64(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        // 128-bit Lemire reduction.
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (bound as u128);
+        let mut l = m as u64;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (bound as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform usize in `[lo, hi)`.
+    #[inline]
+    pub fn gen_range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi > lo);
+        lo + self.gen_range_u64((hi - lo) as u64) as usize
+    }
+
+    /// Uniform f64 in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Standard exponential variate (mean 1).
+    #[inline]
+    pub fn next_exp(&mut self) -> f64 {
+        // Inverse CDF; clamp away from 0 to avoid ln(0).
+        let u = self.next_f64().max(1e-18);
+        -u.ln()
+    }
+
+    /// Standard normal via Box–Muller (one sample per call; the sibling is
+    /// discarded — simplicity over throughput, this is not a hot path).
+    pub fn next_normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-18);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        if xs.len() < 2 {
+            return;
+        }
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range_u64((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `[0, n)` (k << n assumed; uses a
+    /// retry set for small k, partial shuffle otherwise).
+    pub fn sample_distinct(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        if k * 4 < n {
+            let mut seen = std::collections::HashSet::with_capacity(k * 2);
+            let mut out = Vec::with_capacity(k);
+            while out.len() < k {
+                let x = self.gen_range(0, n);
+                if seen.insert(x) {
+                    out.push(x);
+                }
+            }
+            out
+        } else {
+            let mut all: Vec<usize> = (0..n).collect();
+            self.shuffle(&mut all);
+            all.truncate(k);
+            all
+        }
+    }
+}
+
+/// Bounded Zipf(α) sampler over `{0, 1, …, n−1}` (element `i` has weight
+/// `(i+1)^−α`), using Hörmann & Derflinger rejection-inversion. Valid for
+/// `α > 0`, `n ≥ 1`. This is the degree distribution generator behind the
+/// synthetic power-law datasets (paper §I, eq. 1).
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    n: u64,
+    alpha: f64,
+    // Precomputed constants for rejection-inversion.
+    h_x1: f64,
+    h_n: f64,
+    s: f64,
+}
+
+impl Zipf {
+    pub fn new(n: u64, alpha: f64) -> Self {
+        assert!(n >= 1, "Zipf support must be non-empty");
+        assert!(alpha > 0.0, "Zipf exponent must be positive");
+        let h = |x: f64| -> f64 {
+            // H(x) = integral of x^-alpha
+            if (alpha - 1.0).abs() < 1e-12 {
+                x.ln()
+            } else {
+                (x.powf(1.0 - alpha) - 1.0) / (1.0 - alpha)
+            }
+        };
+        let h_x1 = h(1.5) - 1.0;
+        let h_n = h(n as f64 + 0.5);
+        let s = 2.0 - Self::h_inv_static(alpha, h(2.5) - (2.0f64).powf(-alpha));
+        Zipf { n, alpha, h_x1, h_n, s }
+    }
+
+    fn h_inv_static(alpha: f64, x: f64) -> f64 {
+        if (alpha - 1.0).abs() < 1e-12 {
+            x.exp()
+        } else {
+            (1.0 + x * (1.0 - alpha)).powf(1.0 / (1.0 - alpha))
+        }
+    }
+
+    fn h(&self, x: f64) -> f64 {
+        if (self.alpha - 1.0).abs() < 1e-12 {
+            x.ln()
+        } else {
+            (x.powf(1.0 - self.alpha) - 1.0) / (1.0 - self.alpha)
+        }
+    }
+
+    fn h_inv(&self, x: f64) -> f64 {
+        Self::h_inv_static(self.alpha, x)
+    }
+
+    /// Draw a sample in `[0, n)`. Rank 0 is the most frequent element.
+    pub fn sample(&self, rng: &mut Pcg32) -> u64 {
+        loop {
+            let u = self.h_x1 + rng.next_f64() * (self.h_n - self.h_x1);
+            let x = self.h_inv(u);
+            let k = (x + 0.5).floor().max(1.0).min(self.n as f64);
+            if k - x <= self.s || u >= self.h(k + 0.5) - k.powf(-self.alpha) {
+                return k as u64 - 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pcg_deterministic() {
+        let mut a = Pcg32::new(42);
+        let mut b = Pcg32::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn pcg_seed_sensitivity() {
+        let mut a = Pcg32::new(1);
+        let mut b = Pcg32::new(2);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4, "streams from different seeds should diverge");
+    }
+
+    #[test]
+    fn gen_range_bounds() {
+        let mut rng = Pcg32::new(7);
+        for _ in 0..10_000 {
+            let x = rng.gen_range(3, 17);
+            assert!((3..17).contains(&x));
+        }
+        for _ in 0..10_000 {
+            assert!(rng.gen_range_u32(1) == 0);
+            assert!(rng.gen_range_u64(1) == 0);
+        }
+    }
+
+    #[test]
+    fn uniform_f64_mean() {
+        let mut rng = Pcg32::new(11);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| rng.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn gen_range_u32_uniformity() {
+        let mut rng = Pcg32::new(5);
+        let mut counts = [0usize; 10];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[rng.gen_range_u32(10) as usize] += 1;
+        }
+        for &c in &counts {
+            let expected = n / 10;
+            assert!(
+                (c as i64 - expected as i64).abs() < (expected as i64) / 10,
+                "bucket count {c} too far from {expected}"
+            );
+        }
+    }
+
+    #[test]
+    fn exp_mean_one() {
+        let mut rng = Pcg32::new(13);
+        let n = 200_000;
+        let mean: f64 = (0..n).map(|_| rng.next_exp()).sum::<f64>() / n as f64;
+        assert!((mean - 1.0).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg32::new(17);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.next_normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg32::new(23);
+        let mut xs: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>(), "shuffle should move things");
+    }
+
+    #[test]
+    fn sample_distinct_properties() {
+        let mut rng = Pcg32::new(29);
+        let s = rng.sample_distinct(1000, 50);
+        assert_eq!(s.len(), 50);
+        let mut dedup = s.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), 50);
+        assert!(s.iter().all(|&x| x < 1000));
+        // Dense case path
+        let s2 = rng.sample_distinct(10, 9);
+        assert_eq!(s2.len(), 9);
+    }
+
+    #[test]
+    fn zipf_in_range_and_skewed() {
+        let mut rng = Pcg32::new(31);
+        let z = Zipf::new(1000, 1.2);
+        let n = 100_000;
+        let mut count0 = 0usize;
+        let mut count_tail = 0usize;
+        for _ in 0..n {
+            let x = z.sample(&mut rng);
+            assert!(x < 1000);
+            if x == 0 {
+                count0 += 1;
+            }
+            if x >= 500 {
+                count_tail += 1;
+            }
+        }
+        // Rank 0 must dominate any individual tail rank by a lot.
+        assert!(count0 > n / 100, "head rank too rare: {count0}");
+        assert!(count0 > count_tail / 20, "distribution not skewed enough");
+    }
+
+    #[test]
+    fn zipf_alpha_one_edge() {
+        let mut rng = Pcg32::new(37);
+        let z = Zipf::new(100, 1.0);
+        for _ in 0..10_000 {
+            assert!(z.sample(&mut rng) < 100);
+        }
+    }
+
+    #[test]
+    fn zipf_ratio_matches_power_law() {
+        // P(0)/P(1) should be close to 2^alpha.
+        let mut rng = Pcg32::new(41);
+        let alpha = 2.0;
+        let z = Zipf::new(10_000, alpha);
+        let n = 400_000;
+        let (mut c0, mut c1) = (0f64, 0f64);
+        for _ in 0..n {
+            match z.sample(&mut rng) {
+                0 => c0 += 1.0,
+                1 => c1 += 1.0,
+                _ => {}
+            }
+        }
+        let ratio = c0 / c1;
+        let expect = 2f64.powf(alpha);
+        assert!(
+            (ratio - expect).abs() / expect < 0.1,
+            "ratio={ratio} expect={expect}"
+        );
+    }
+
+    #[test]
+    fn fork_decorrelated() {
+        let mut root = Pcg32::new(55);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        let same = (0..64).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+}

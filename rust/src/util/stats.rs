@@ -1,0 +1,101 @@
+//! Summary statistics over f64 samples (median / percentiles / mean),
+//! shared by the metrics module and the bench harness.
+
+/// Order statistics summary of a sample set.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p10: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Compute the summary; returns a zeroed summary for empty input.
+    pub fn of(samples: &[f64]) -> Summary {
+        if samples.is_empty() {
+            return Summary {
+                n: 0,
+                mean: 0.0,
+                std: 0.0,
+                min: 0.0,
+                p10: 0.0,
+                p50: 0.0,
+                p90: 0.0,
+                p99: 0.0,
+                max: 0.0,
+            };
+        }
+        let mut xs: Vec<f64> = samples.to_vec();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let pct = |p: f64| -> f64 {
+            // Nearest-rank with linear interpolation.
+            if n == 1 {
+                return xs[0];
+            }
+            let rank = p * (n - 1) as f64;
+            let lo = rank.floor() as usize;
+            let hi = rank.ceil() as usize;
+            let frac = rank - lo as f64;
+            xs[lo] * (1.0 - frac) + xs[hi] * frac
+        };
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: xs[0],
+            p10: pct(0.10),
+            p50: pct(0.50),
+            p90: pct(0.90),
+            p99: pct(0.99),
+            max: xs[n - 1],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_zero() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+    }
+
+    #[test]
+    fn single_sample() {
+        let s = Summary::of(&[3.5]);
+        assert_eq!(s.p50, 3.5);
+        assert_eq!(s.min, 3.5);
+        assert_eq!(s.max, 3.5);
+        assert_eq!(s.std, 0.0);
+    }
+
+    #[test]
+    fn known_percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        let s = Summary::of(&xs);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert!((s.p50 - 50.5).abs() < 1e-9);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+        assert!(s.p10 < s.p50 && s.p50 < s.p90 && s.p90 <= s.p99);
+    }
+
+    #[test]
+    fn order_invariant() {
+        let a = Summary::of(&[3.0, 1.0, 2.0]);
+        let b = Summary::of(&[1.0, 2.0, 3.0]);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,95 @@
+//! Wall-clock timing helpers used by the metrics module and the bench
+//! harness.
+
+use std::time::{Duration, Instant};
+
+/// A resettable stopwatch accumulating named phases.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+    laps: Vec<(String, Duration)>,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self { start: Instant::now(), laps: Vec::new() }
+    }
+
+    /// Record the time since the last lap (or construction) under `name`
+    /// and restart the lap clock.
+    pub fn lap(&mut self, name: &str) -> Duration {
+        let now = Instant::now();
+        let d = now - self.start;
+        self.laps.push((name.to_string(), d));
+        self.start = now;
+        d
+    }
+
+    pub fn laps(&self) -> &[(String, Duration)] {
+        &self.laps
+    }
+
+    /// Total of all recorded laps.
+    pub fn total(&self) -> Duration {
+        self.laps.iter().map(|(_, d)| *d).sum()
+    }
+
+    /// Sum of laps whose name matches `name`.
+    pub fn total_of(&self, name: &str) -> Duration {
+        self.laps.iter().filter(|(n, _)| n == name).map(|(_, d)| *d).sum()
+    }
+}
+
+/// RAII timer: logs the elapsed time at `debug` level on drop.
+pub struct ScopedTimer {
+    label: String,
+    start: Instant,
+}
+
+impl ScopedTimer {
+    pub fn new(label: impl Into<String>) -> Self {
+        Self { label: label.into(), start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+}
+
+impl Drop for ScopedTimer {
+    fn drop(&mut self) {
+        log::debug!("{}: {:?}", self.label, self.start.elapsed());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        std::thread::sleep(Duration::from_millis(2));
+        sw.lap("a");
+        std::thread::sleep(Duration::from_millis(2));
+        sw.lap("b");
+        std::thread::sleep(Duration::from_millis(2));
+        sw.lap("a");
+        assert_eq!(sw.laps().len(), 3);
+        assert!(sw.total_of("a") >= Duration::from_millis(3));
+        assert!(sw.total() >= sw.total_of("a") + sw.total_of("b"));
+    }
+
+    #[test]
+    fn scoped_timer_elapsed_monotone() {
+        let t = ScopedTimer::new("x");
+        std::thread::sleep(Duration::from_millis(1));
+        assert!(t.elapsed() >= Duration::from_millis(1));
+    }
+}

@@ -1,0 +1,228 @@
+//! Property-based tests over the allreduce invariants (hand-rolled
+//! generator loop — proptest is not in the offline vendor set; the seeded
+//! PCG makes every case reproducible from the printed seed).
+//!
+//! Invariants:
+//!  1. Correctness: result == dense oracle for random topologies/inputs.
+//!  2. Conservation: sum of reduced bottom values == sum of all inputs.
+//!  3. Permutation invariance: hash-permuting indices permutes results.
+//!  4. Linearity: reduce(a·x) == a·reduce(x) for fixed config.
+//!  5. Idempotent ops: OR-reduce twice == OR-reduce once.
+
+use sparse_allreduce::allreduce::LocalCluster;
+use sparse_allreduce::partition::IndexHasher;
+use sparse_allreduce::sparse::{IndexSet, OrU32, SumF32};
+use sparse_allreduce::topology::Butterfly;
+use sparse_allreduce::util::Pcg32;
+use std::collections::HashMap;
+
+const CASES: u64 = 60;
+
+/// Random degree schedule with product ≤ 24.
+fn random_degrees(rng: &mut Pcg32) -> Vec<usize> {
+    let options: Vec<Vec<usize>> = vec![
+        vec![1],
+        vec![2],
+        vec![3],
+        vec![4],
+        vec![8],
+        vec![2, 2],
+        vec![3, 2],
+        vec![2, 3],
+        vec![4, 2],
+        vec![2, 2, 2],
+        vec![4, 4],
+        vec![3, 2, 2],
+        vec![6, 4],
+    ];
+    options[rng.gen_range(0, options.len())].clone()
+}
+
+struct Case {
+    topo: Butterfly,
+    outs: Vec<(Vec<i64>, Vec<f32>)>,
+    ins: Vec<Vec<i64>>,
+}
+
+fn random_case(seed: u64) -> Case {
+    let mut rng = Pcg32::new(seed);
+    let degrees = random_degrees(&mut rng);
+    let m: usize = degrees.iter().product();
+    let range = rng.gen_range(m.max(4), 3000) as i64;
+    let topo = Butterfly::new(degrees, range);
+    let outs = (0..m)
+        .map(|_| {
+            let k = rng.gen_range(0, (range as usize).min(120));
+            let mut idx: Vec<i64> = rng
+                .sample_distinct(range as usize, k)
+                .into_iter()
+                .map(|x| x as i64)
+                .collect();
+            idx.sort_unstable();
+            let val: Vec<f32> = idx.iter().map(|_| rng.next_f32() * 4.0 - 2.0).collect();
+            (idx, val)
+        })
+        .collect();
+    let ins = (0..m)
+        .map(|_| {
+            let k = rng.gen_range(0, (range as usize).min(80));
+            let mut idx: Vec<i64> = rng
+                .sample_distinct(range as usize, k)
+                .into_iter()
+                .map(|x| x as i64)
+                .collect();
+            idx.sort_unstable();
+            idx
+        })
+        .collect();
+    Case { topo, outs, ins }
+}
+
+fn run(case: &Case) -> Vec<Vec<f32>> {
+    let mut cluster = LocalCluster::new(case.topo.clone());
+    cluster.config(
+        case.outs.iter().map(|(i, _)| IndexSet::from_sorted(i.clone())).collect(),
+        case.ins.iter().map(|i| IndexSet::from_sorted(i.clone())).collect(),
+    );
+    cluster.reduce::<SumF32>(case.outs.iter().map(|(_, v)| v.clone()).collect()).0
+}
+
+fn oracle(case: &Case) -> Vec<Vec<f32>> {
+    let mut sum: HashMap<i64, f32> = HashMap::new();
+    for (idx, val) in &case.outs {
+        for (&i, &v) in idx.iter().zip(val) {
+            *sum.entry(i).or_insert(0.0) += v;
+        }
+    }
+    case.ins
+        .iter()
+        .map(|req| req.iter().map(|i| *sum.get(i).unwrap_or(&0.0)).collect())
+        .collect()
+}
+
+#[test]
+fn prop_correct_vs_oracle() {
+    for seed in 0..CASES {
+        let case = random_case(seed);
+        let got = run(&case);
+        let want = oracle(&case);
+        for (n, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g.len(), w.len(), "seed {seed} node {n}");
+            for (a, b) in g.iter().zip(w) {
+                assert!((a - b).abs() < 1e-3, "seed {seed} node {n}: {a} vs {b}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_conservation_of_mass() {
+    // requesting EVERY contributed index exactly recovers the total mass
+    for seed in 100..100 + CASES {
+        let mut case = random_case(seed);
+        let mut all: Vec<i64> = case.outs.iter().flat_map(|(i, _)| i.clone()).collect();
+        all.sort_unstable();
+        all.dedup();
+        case.ins = vec![all.clone(); case.outs.len()];
+        if all.is_empty() {
+            continue;
+        }
+        let got = run(&case);
+        let total_in: f64 =
+            case.outs.iter().flat_map(|(_, v)| v).map(|&x| x as f64).sum();
+        for (n, g) in got.iter().enumerate() {
+            let total_out: f64 = g.iter().map(|&x| x as f64).sum();
+            assert!(
+                (total_in - total_out).abs() < 1e-2 * (1.0 + total_in.abs()),
+                "seed {seed} node {n}: mass {total_in} vs {total_out}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_permutation_invariance() {
+    for seed in 200..200 + CASES / 3 {
+        let case = random_case(seed);
+        let range = case.topo.index_range();
+        if range < 2 {
+            continue;
+        }
+        let hasher = IndexHasher::new(range as u64, seed ^ 0xABCD);
+        // permuted copy (results align because value order follows the
+        // sorted permuted indices — compare as maps)
+        let permute_sorted = |idx: &[i64], val: &[f32]| -> (Vec<i64>, Vec<f32>) {
+            let mut pairs: Vec<(i64, f32)> =
+                idx.iter().zip(val).map(|(&i, &v)| (hasher.hash(i), v)).collect();
+            pairs.sort_unstable_by_key(|&(i, _)| i);
+            (pairs.iter().map(|&(i, _)| i).collect(), pairs.iter().map(|&(_, v)| v).collect())
+        };
+        let mut permuted = Case {
+            topo: case.topo.clone(),
+            outs: Vec::new(),
+            ins: Vec::new(),
+        };
+        for (idx, val) in &case.outs {
+            let (i, v) = permute_sorted(idx, val);
+            permuted.outs.push((i, v));
+        }
+        for idx in &case.ins {
+            let mut h: Vec<i64> = idx.iter().map(|&i| hasher.hash(i)).collect();
+            h.sort_unstable();
+            permuted.ins.push(h);
+        }
+        let got_raw = run(&case);
+        let got_perm = run(&permuted);
+        // compare as (requested index → value) maps per node
+        for n in 0..case.ins.len() {
+            let map_raw: HashMap<i64, f32> =
+                case.ins[n].iter().copied().zip(got_raw[n].iter().copied()).collect();
+            let map_perm: HashMap<i64, f32> =
+                permuted.ins[n].iter().copied().zip(got_perm[n].iter().copied()).collect();
+            for (&i, &v) in &map_raw {
+                let pv = map_perm[&hasher.hash(i)];
+                assert!((v - pv).abs() < 1e-3, "seed {seed} node {n} idx {i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_linearity() {
+    for seed in 300..300 + CASES / 3 {
+        let case = random_case(seed);
+        let mut cluster = LocalCluster::new(case.topo.clone());
+        cluster.config(
+            case.outs.iter().map(|(i, _)| IndexSet::from_sorted(i.clone())).collect(),
+            case.ins.iter().map(|i| IndexSet::from_sorted(i.clone())).collect(),
+        );
+        let (r1, _) =
+            cluster.reduce::<SumF32>(case.outs.iter().map(|(_, v)| v.clone()).collect());
+        let (r3, _) = cluster.reduce::<SumF32>(
+            case.outs.iter().map(|(_, v)| v.iter().map(|x| x * 3.0).collect()).collect(),
+        );
+        for (a, b) in r1.iter().flatten().zip(r3.iter().flatten()) {
+            assert!((b - a * 3.0).abs() < 1e-2 * (1.0 + a.abs()), "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_or_idempotent() {
+    for seed in 400..400 + CASES / 3 {
+        let case = random_case(seed);
+        let mut cluster = LocalCluster::new(case.topo.clone());
+        cluster.config(
+            case.outs.iter().map(|(i, _)| IndexSet::from_sorted(i.clone())).collect(),
+            case.ins.iter().map(|i| IndexSet::from_sorted(i.clone())).collect(),
+        );
+        let bits: Vec<Vec<u32>> = case
+            .outs
+            .iter()
+            .map(|(_, v)| v.iter().map(|x| x.to_bits()).collect())
+            .collect();
+        let (r1, _) = cluster.reduce::<OrU32>(bits.clone());
+        let (r2, _) = cluster.reduce::<OrU32>(bits);
+        assert_eq!(r1, r2, "seed {seed}: OR-reduce must be deterministic & idempotent");
+    }
+}

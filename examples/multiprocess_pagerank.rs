@@ -1,0 +1,74 @@
+//! Multi-process PageRank: fork 4 `sar worker` OS processes, coordinate
+//! them over the control protocol, and cross-check the checksum against
+//! the single-process lockstep oracle.
+//!
+//! Run with: `cargo run --release --example multiprocess_pagerank`
+//! (needs the `sar` binary built too: `cargo build --release`).
+
+use sparse_allreduce::apps::pagerank::{DistPageRank, PageRankConfig};
+use sparse_allreduce::cluster::{launch_local, LaunchOpts};
+use sparse_allreduce::graph::{DatasetPreset, DatasetSpec};
+use std::path::PathBuf;
+
+/// Examples are their own binaries, so `current_exe` is *not* `sar`;
+/// look for it next to this example in the target directory (or take
+/// `$SAR_BIN`).
+fn find_sar() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("SAR_BIN") {
+        return Some(PathBuf::from(p));
+    }
+    let exe = std::env::current_exe().ok()?;
+    // target/<profile>/examples/multiprocess_pagerank → target/<profile>/sar
+    let profile_dir = exe.parent()?.parent()?;
+    let candidate = profile_dir.join("sar");
+    candidate.exists().then_some(candidate)
+}
+
+fn main() {
+    let Some(sar) = find_sar() else {
+        eprintln!(
+            "sar binary not found next to this example; run `cargo build` first \
+             or set SAR_BIN=/path/to/sar"
+        );
+        std::process::exit(1);
+    };
+
+    let opts = LaunchOpts {
+        degrees: vec![2, 2],
+        iters: 5,
+        scale: 0.01,
+        ..LaunchOpts::default()
+    };
+
+    println!("== lockstep oracle (1 process, {} logical nodes) ==", opts.logical());
+    let preset = DatasetPreset::by_name(&opts.dataset).unwrap();
+    let graph = DatasetSpec::new(preset, opts.scale, opts.seed).generate();
+    let mut dist = DistPageRank::new(
+        &graph,
+        opts.degrees.clone(),
+        &PageRankConfig { seed: opts.seed, iters: opts.iters },
+    );
+    dist.run(opts.iters);
+    let want = dist.checksum();
+    println!("checksum {want:.9}");
+
+    println!("\n== multi-process ({} worker processes over TCP) ==", opts.world());
+    match launch_local(&sar, opts) {
+        Ok(run) => {
+            println!(
+                "checksum {:.9} | wall {:.3}s | config {:.3}s | dead {:?}",
+                run.checksum, run.wall_secs, run.config_secs, run.dead
+            );
+            if (run.checksum - want).abs() < 1e-9 {
+                println!("MATCH: multi-process run reproduces the lockstep oracle");
+            } else {
+                println!("MISMATCH: {} vs {}", run.checksum, want);
+                std::process::exit(1);
+            }
+        }
+        Err(e) => {
+            eprintln!("launch failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -153,6 +153,13 @@ impl DistPageRank {
         }
     }
 
+    /// Sum of each node's `p[0]` — the determinism probe every driver
+    /// (threaded coordinator, multi-process cluster) also reports, so
+    /// runs over different transports can be checked for equality.
+    pub fn checksum(&self) -> f64 {
+        self.p_local.iter().map(|p| p.first().copied().unwrap_or(0.0) as f64).sum()
+    }
+
     /// Current score of an *original* (pre-permutation) vertex id, if some
     /// shard tracks it (its hashed id appears as a source vertex).
     pub fn score_of(&self, orig_vertex: i64) -> Option<f32> {

@@ -12,17 +12,27 @@ pub struct Args {
     pub subcommand: String,
     flags: BTreeMap<String, String>,
     switches: Vec<String>,
+    positionals: Vec<String>,
 }
 
 impl Args {
     /// Parse from an iterator of argument strings (excluding argv[0]).
+    /// Positional arguments are only accepted by `help` (topic name);
+    /// everywhere else they indicate a typo and error out.
     pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
         let mut it = argv.into_iter().peekable();
         let subcommand = it.next().unwrap_or_default();
         let mut flags = BTreeMap::new();
         let mut switches = Vec::new();
+        let mut positionals = Vec::new();
         while let Some(arg) = it.next() {
             let Some(name) = arg.strip_prefix("--") else {
+                // Both help spellings dispatch to the help command and
+                // take a topic positional.
+                if subcommand == "help" || subcommand == "--help" {
+                    positionals.push(arg);
+                    continue;
+                }
                 bail!("unexpected positional argument `{arg}`");
             };
             if name.is_empty() {
@@ -36,7 +46,7 @@ impl Args {
                 switches.push(name.to_string());
             }
         }
-        Ok(Args { subcommand, flags, switches })
+        Ok(Args { subcommand, flags, switches, positionals })
     }
 
     pub fn flag(&self, name: &str) -> Option<&str> {
@@ -45,6 +55,28 @@ impl Args {
 
     pub fn has_switch(&self, name: &str) -> bool {
         self.switches.iter().any(|s| s == name)
+    }
+
+    pub fn positional(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(|s| s.as_str())
+    }
+
+    /// Reject flags/switches outside `allowed`, pointing at the
+    /// subcommand's usage instead of bailing with no guidance.
+    pub fn expect_known(&self, cmd: &str, allowed: &[&str]) -> Result<()> {
+        let unknown = self
+            .flags
+            .keys()
+            .map(|k| k.as_str())
+            .chain(self.switches.iter().map(|s| s.as_str()))
+            .find(|name| !allowed.contains(name));
+        if let Some(name) = unknown {
+            bail!(
+                "unknown flag `--{name}` for `{cmd}`\n\n{}",
+                usage_for(cmd).unwrap_or(USAGE)
+            );
+        }
+        Ok(())
     }
 
     pub fn usize_flag(&self, name: &str, default: usize) -> Result<usize> {
@@ -101,20 +133,92 @@ sparse-allreduce (sar) — Sparse Allreduce for power-law data (Zhao & Canny 201
 USAGE: sar <command> [flags]
 
 COMMANDS:
-  info                         show build/runtime info (PJRT platform, artifacts)
-  plan      --mbytes <f> --machines <m> [--floor-mb <f>]
-                               pick a butterfly degree schedule (paper §IV-B)
-  pagerank  [--dataset twitter|yahoo|docterm] [--scale f] [--degrees 16x4]
-            [--iters n] [--threads t] [--seed s]
-                               distributed PageRank on a synthetic power-law graph
-  diameter  [--scale f] [--degrees 4x2] [--sketches k] [--seed s]
-                               HADI effective-diameter estimation (OR-allreduce)
-  train     [--features n] [--classes c] [--steps n] [--degrees 2x2]
-            [--batch b] [--lr f] [--native] [--seed s]
-                               distributed mini-batch SGD (XLA engine by default)
-  config-check --file <path>   validate a cluster config file
+  info          show build/runtime info (PJRT platform, artifacts)
+  plan          pick a butterfly degree schedule (paper §IV-B)
+  pagerank      distributed PageRank on a synthetic power-law graph
+  diameter      HADI effective-diameter estimation (OR-allreduce)
+  train         distributed mini-batch SGD (XLA engine by default)
+  worker        join a multi-process cluster as a worker daemon
+  launch        coordinate a multi-process cluster run
+  config-check  validate a cluster config file
+  help          show usage (`sar help <command>` for one command)
 
+Run `sar help <command>` for per-command flags.
 Set SAR_LOG=debug for verbose logging.";
+
+/// Per-subcommand usage strings (`sar help <command>`).
+pub fn usage_for(cmd: &str) -> Option<&'static str> {
+    Some(match cmd {
+        "info" => "USAGE: sar info\n\nShow build/runtime info (PJRT platform, artifacts).",
+        "plan" => "\
+USAGE: sar plan [--mbytes f] [--machines m] [--floor-mb f] [--compression f]
+
+Pick a butterfly degree schedule (paper §IV-B).
+  --mbytes f       per-node sparse payload in MiB        [16]
+  --machines m     cluster size                          [64]
+  --floor-mb f     effective packet floor in MiB         [2]
+  --compression f  per-layer collision shrink factor     [0.7]",
+        "pagerank" => "\
+USAGE: sar pagerank [--mode lockstep|threaded|distributed] [--distributed]
+                    [--dataset twitter|yahoo|docterm] [--scale f]
+                    [--degrees 16x4] [--replication r] [--iters n]
+                    [--threads t] [--seed s] [--bin path]
+
+Distributed PageRank on a synthetic power-law graph.
+  --mode m         execution mode                        [threaded]
+                   lockstep: single-thread oracle
+                   threaded: one thread per node, shared transport
+                   distributed: one OS process per node over TCP
+  --distributed    shorthand for --mode distributed
+  --dataset d      synthetic dataset preset              [twitter]
+  --scale f        dataset scale multiplier              [0.05]
+  --degrees kxk    butterfly degree schedule             [4x2]
+  --replication r  replicas per logical node (mode=distributed) [1]
+  --iters n        PageRank iterations                   [10]
+  --threads t      sender threads per node               [8]
+  --seed s         RNG seed                              [42]
+  --bin path       sar binary to spawn workers from (mode=distributed)",
+        "diameter" => "\
+USAGE: sar diameter [--dataset d] [--scale f] [--degrees 4x2] [--sketches k]
+                    [--max-h n] [--seed s]
+
+HADI effective-diameter estimation (OR-allreduce).",
+        "train" => "\
+USAGE: sar train [--features n] [--classes c] [--steps n] [--degrees 2x2]
+                 [--batch b] [--lr f] [--feats-per-ex k] [--native] [--seed s]
+
+Distributed mini-batch SGD (XLA engine by default; --native for pure Rust).",
+        "worker" => "\
+USAGE: sar worker --coordinator host:port [--listen addr] [--advertise addr]
+                  [--heartbeat-ms n]
+
+Join a multi-process cluster: JOIN the coordinator, receive the plan,
+run the config phase and reduce iterations, report metrics.
+  --coordinator a  control-plane address (required)
+  --listen a       data-plane bind address               [127.0.0.1:0]
+  --advertise a    data-plane address peers should dial  [derived]
+  --heartbeat-ms n control heartbeat interval            [100]",
+        "launch" => "\
+USAGE: sar launch [--workers n] [--degrees 2x2] [--replication r] [--iters n]
+                  [--dataset d] [--scale f] [--seed s] [--threads t]
+                  [--bind addr] [--file cfg.toml] [--no-spawn] [--bin path]
+
+Coordinate a multi-process PageRank run: gather worker JOINs, ship plans,
+barrier the config phase, start, and aggregate reports.
+  --workers n      expected worker count (must equal degrees × replication)
+  --no-spawn       wait for externally-started workers instead of
+                   forking them locally
+  --bind a         control-plane bind address            [127.0.0.1:0]
+  --bin path       sar binary to spawn local workers from [current exe]
+  --file path      take topology/dataset settings from a config file",
+        "config-check" => "\
+USAGE: sar config-check --file <path>
+
+Validate a cluster config file (TOML subset).",
+        "help" => "USAGE: sar help [command]",
+        _ => return None,
+    })
+}
 
 #[cfg(test)]
 mod tests {
@@ -155,6 +259,39 @@ mod tests {
     #[test]
     fn positional_rejected() {
         assert!(Args::parse(vec!["cmd".to_string(), "stray".to_string()]).is_err());
+    }
+
+    #[test]
+    fn help_takes_a_topic_positional() {
+        let a = args(&["help", "pagerank"]);
+        assert_eq!(a.subcommand, "help");
+        assert_eq!(a.positional(0), Some("pagerank"));
+        assert_eq!(a.positional(1), None);
+        // both help spellings accept the topic
+        let a = args(&["--help", "launch"]);
+        assert_eq!(a.positional(0), Some("launch"));
+    }
+
+    #[test]
+    fn every_command_has_usage() {
+        for cmd in [
+            "info", "plan", "pagerank", "diameter", "train", "worker", "launch",
+            "config-check", "help",
+        ] {
+            assert!(usage_for(cmd).is_some(), "missing usage for {cmd}");
+            assert!(USAGE.contains(cmd), "top-level usage missing {cmd}");
+        }
+        assert!(usage_for("bogus").is_none());
+    }
+
+    #[test]
+    fn unknown_flags_point_at_usage() {
+        let a = args(&["pagerank", "--itres", "10"]);
+        let err = a.expect_known("pagerank", &["iters", "seed"]).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("--itres"), "should name the bad flag: {msg}");
+        assert!(msg.contains("USAGE: sar pagerank"), "should include usage: {msg}");
+        assert!(a.expect_known("pagerank", &["itres"]).is_ok());
     }
 
     #[test]

@@ -1,0 +1,532 @@
+//! Control plane: gather workers, plan, barrier, start, collect.
+//!
+//! The [`Coordinator`] binds the control listener; [`Coordinator::accept`]
+//! collects one JOIN per expected worker (arrival order assigns physical
+//! node ids), ships every worker its [`WorkerPlan`] (degree schedule from
+//! the config/planner plus the gathered address map), and returns a
+//! [`Session`]. The session then walks the run's state machine:
+//! [`Session::barrier_config`] (all live workers voted CONFIG_DONE),
+//! [`Session::start`], and [`Session::collect`] (one REPORT per logical
+//! node, tolerating dead replicas per the §V fault model). Heartbeats
+//! feed a [`FailureDetector`] the whole time, so a killed worker turns
+//! into replica failover — or a readable quorum error — instead of a
+//! hang.
+
+use super::proto::{recv_ctrl, send_ctrl, CtrlMsg, WorkerPlan, WorkerReport, COORD};
+use crate::config::{validate_world, RunConfig};
+use crate::fault::{FailureDetector, ReplicaMap};
+use crate::metrics::{IterTiming, RunMetrics};
+use anyhow::{bail, Context, Result};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Everything `sar launch` needs to run one distributed job.
+#[derive(Clone, Debug)]
+pub struct LaunchOpts {
+    /// Butterfly degree schedule over logical nodes.
+    pub degrees: Vec<usize>,
+    /// Replication factor (1 = none; 2 gives the paper's §V failover).
+    pub replication: usize,
+    pub iters: usize,
+    /// Dataset preset key (twitter | yahoo | docterm).
+    pub dataset: String,
+    pub scale: f64,
+    pub seed: u64,
+    pub send_threads: usize,
+    /// Control-plane bind address.
+    pub bind: String,
+    /// A worker silent for longer than this is presumed dead.
+    pub heartbeat_timeout: Duration,
+    /// Worker-side data-plane receive timeout (bounds how long a worker
+    /// blocks on a dead peer before reporting failure).
+    pub data_timeout: Duration,
+    /// Overall deadline for each control phase (join/barrier/collect).
+    pub phase_deadline: Duration,
+}
+
+impl Default for LaunchOpts {
+    fn default() -> Self {
+        Self {
+            degrees: vec![2, 2],
+            replication: 1,
+            iters: 5,
+            dataset: "twitter".to_string(),
+            scale: 0.002,
+            seed: 42,
+            send_threads: 4,
+            bind: "127.0.0.1:0".to_string(),
+            heartbeat_timeout: Duration::from_secs(2),
+            data_timeout: Duration::from_secs(20),
+            phase_deadline: Duration::from_secs(120),
+        }
+    }
+}
+
+impl LaunchOpts {
+    /// Options from a [`RunConfig`] (the `--file` path of `sar launch`).
+    pub fn from_run_config(cfg: &RunConfig) -> LaunchOpts {
+        LaunchOpts {
+            degrees: cfg.degrees.clone(),
+            replication: cfg.replication,
+            iters: cfg.iters,
+            dataset: cfg.dataset.clone(),
+            scale: cfg.scale,
+            seed: cfg.seed,
+            send_threads: cfg.send_threads,
+            ..LaunchOpts::default()
+        }
+    }
+
+    /// Logical (protocol) node count.
+    pub fn logical(&self) -> usize {
+        self.degrees.iter().product()
+    }
+
+    /// Physical worker count.
+    pub fn world(&self) -> usize {
+        self.logical() * self.replication
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        validate_world(&self.degrees, self.replication, self.world())?;
+        if self.iters == 0 {
+            bail!("iters must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+/// Aggregated outcome of a distributed run.
+#[derive(Clone, Debug)]
+pub struct ClusterRun {
+    pub world: usize,
+    pub replication: usize,
+    /// Per *physical* worker metrics (`None` for dead/unreported workers).
+    pub per_node: Vec<Option<RunMetrics>>,
+    /// Sum over logical nodes of the first replica's `p[0]` probe —
+    /// comparable with `LocalCluster` / `DistPageRank::checksum()`.
+    pub checksum: f64,
+    /// START → last required REPORT.
+    pub wall_secs: f64,
+    /// Max config-phase seconds over reporting workers.
+    pub config_secs: f64,
+    /// Workers that died or failed during the run.
+    pub dead: Vec<usize>,
+}
+
+/// Control listener, pre-join.
+pub struct Coordinator {
+    listener: TcpListener,
+}
+
+enum Event {
+    Msg(CtrlMsg),
+    Eof,
+}
+
+/// A planned cluster run (all workers joined and hold their plans).
+pub struct Session {
+    opts: LaunchOpts,
+    map: ReplicaMap,
+    writers: Vec<Arc<Mutex<TcpStream>>>,
+    events: Receiver<(usize, Event)>,
+    detector: Arc<FailureDetector>,
+    config_done: Vec<bool>,
+    reports: Vec<Option<WorkerReport>>,
+    failures: Vec<(usize, String)>,
+    started_at: Option<Instant>,
+    shutdown_sent: bool,
+}
+
+impl Coordinator {
+    pub fn bind(addr: &str) -> Result<Coordinator> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding control listener on {addr}"))?;
+        Ok(Coordinator { listener })
+    }
+
+    /// The address *same-host* workers should dial (`--coordinator`
+    /// value for local spawning; unspecified binds rewritten to
+    /// loopback). For cross-host instructions use
+    /// [`Coordinator::local_addr`] and substitute a routable host.
+    pub fn addr(&self) -> Result<SocketAddr> {
+        Ok(crate::transport::advertised_addr(&self.listener)?)
+    }
+
+    /// The raw bound address (no loopback rewrite).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Accept `opts.world()` JOINs, assign node ids in arrival order,
+    /// and ship each worker its plan.
+    pub fn accept(self, opts: LaunchOpts) -> Result<Session> {
+        opts.validate()?;
+        let world = opts.world();
+        let mut conns = Vec::with_capacity(world);
+        let mut data_addrs = Vec::with_capacity(world);
+        // Poll accepts under ONE shared phase deadline: a worker that
+        // died before joining must surface as an error, not an infinite
+        // wait, and total bring-up time is bounded regardless of world
+        // size. A connection that fails to produce a JOIN (port
+        // scanner, health probe, crashed worker) is dropped and its
+        // slot re-accepted rather than failing the run.
+        self.listener.set_nonblocking(true)?;
+        let join_deadline = Instant::now() + opts.phase_deadline;
+        while conns.len() < world {
+            let joined = conns.len();
+            let (mut stream, peer) = loop {
+                match self.listener.accept() {
+                    Ok(accepted) => break accepted,
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        if Instant::now() > join_deadline {
+                            bail!("timed out waiting for workers ({joined}/{world} joined)");
+                        }
+                        std::thread::sleep(Duration::from_millis(20));
+                    }
+                    Err(e) => return Err(e).context("accepting worker"),
+                }
+            };
+            stream.set_nonblocking(false)?;
+            stream.set_nodelay(true)?;
+            // Bound the JOIN read by the remaining shared deadline.
+            let remaining = join_deadline
+                .saturating_duration_since(Instant::now())
+                .max(Duration::from_millis(1));
+            stream.set_read_timeout(Some(remaining))?;
+            match recv_ctrl(&mut stream) {
+                Ok((_, CtrlMsg::Join { data_addr })) => {
+                    stream.set_read_timeout(None)?;
+                    log::info!(
+                        "worker {}/{world} joined from {peer} (data plane {data_addr})",
+                        joined + 1
+                    );
+                    conns.push(stream);
+                    data_addrs.push(data_addr);
+                }
+                Ok((_, other)) => {
+                    log::warn!("connection from {peer} sent {other:?} before JOIN — dropping");
+                }
+                Err(e) => {
+                    log::warn!("failed reading JOIN from {peer}: {e} — dropping connection");
+                }
+            }
+        }
+
+        let detector = Arc::new(FailureDetector::new(world, opts.heartbeat_timeout));
+        let (tx, events) = channel();
+        let mut writers = Vec::with_capacity(world);
+        for (w, stream) in conns.into_iter().enumerate() {
+            let wr = stream.try_clone().context("cloning control stream")?;
+            writers.push(Arc::new(Mutex::new(wr)));
+            let tx = tx.clone();
+            let detector = detector.clone();
+            std::thread::spawn(move || {
+                let mut stream = stream;
+                loop {
+                    match recv_ctrl(&mut stream) {
+                        Ok((_, msg)) => {
+                            detector.beat(w);
+                            if !matches!(msg, CtrlMsg::Heartbeat) && tx.send((w, Event::Msg(msg))).is_err() {
+                                return;
+                            }
+                        }
+                        Err(_) => {
+                            // Process death closes the control socket:
+                            // hard evidence, no need to wait out the
+                            // heartbeat window.
+                            detector.mark_dead(w);
+                            let _ = tx.send((w, Event::Eof));
+                            return;
+                        }
+                    }
+                }
+            });
+        }
+
+        let plan_template = WorkerPlan {
+            node: 0,
+            world: world as u32,
+            replication: opts.replication as u32,
+            degrees: opts.degrees.iter().map(|&k| k as u32).collect(),
+            addrs: data_addrs,
+            dataset: opts.dataset.clone(),
+            scale: opts.scale,
+            seed: opts.seed,
+            iters: opts.iters as u32,
+            send_threads: opts.send_threads as u32,
+            data_timeout_ms: opts.data_timeout.as_millis() as u64,
+        };
+        for (w, writer) in writers.iter().enumerate() {
+            let plan = WorkerPlan { node: w as u32, ..plan_template.clone() };
+            send_ctrl(writer, COORD, &CtrlMsg::Plan(plan))
+                .with_context(|| format!("sending PLAN to worker {w}"))?;
+        }
+
+        let map = ReplicaMap::new(opts.logical(), opts.replication);
+        Ok(Session {
+            map,
+            writers,
+            events,
+            detector,
+            config_done: vec![false; world],
+            reports: (0..world).map(|_| None).collect(),
+            failures: Vec::new(),
+            started_at: None,
+            shutdown_sent: false,
+            opts,
+        })
+    }
+}
+
+impl Session {
+    pub fn world(&self) -> usize {
+        self.opts.world()
+    }
+
+    /// Liveness view (heartbeat timeouts + control-connection EOFs).
+    pub fn detector(&self) -> &FailureDetector {
+        &self.detector
+    }
+
+    /// Drain one pending control event (if any) into session state.
+    fn pump(&mut self, wait: Duration) {
+        match self.events.recv_timeout(wait) {
+            Ok((w, Event::Msg(CtrlMsg::ConfigDone))) => self.config_done[w] = true,
+            Ok((w, Event::Msg(CtrlMsg::Report(r)))) => self.reports[w] = Some(r),
+            Ok((w, Event::Msg(CtrlMsg::Failed { error }))) => {
+                log::warn!("worker {w} failed: {error}");
+                self.detector.mark_dead(w);
+                self.failures.push((w, error));
+            }
+            Ok((_, Event::Eof)) => {}
+            Ok((w, Event::Msg(other))) => {
+                log::warn!("unexpected control message from worker {w}: {other:?}")
+            }
+            Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => {}
+        }
+    }
+
+    fn failure_summary(&self) -> String {
+        if self.failures.is_empty() {
+            String::new()
+        } else {
+            let list = self
+                .failures
+                .iter()
+                .map(|(w, e)| format!("worker {w}: {e}"))
+                .collect::<Vec<_>>()
+                .join("; ");
+            format!(" ({list})")
+        }
+    }
+
+    /// Wait until every live worker finished the config phase; verifies
+    /// that each logical node still has a live, configured replica.
+    pub fn barrier_config(&mut self) -> Result<()> {
+        let deadline = Instant::now() + self.opts.phase_deadline;
+        loop {
+            self.pump(Duration::from_millis(50));
+            let world = self.world();
+            let settled =
+                (0..world).all(|w| self.config_done[w] || self.detector.is_hard_dead(w));
+            if settled {
+                for l in 0..self.map.logical {
+                    let covered = self
+                        .map
+                        .replicas(l)
+                        .any(|p| self.config_done[p] && !self.detector.is_hard_dead(p));
+                    if !covered {
+                        self.shutdown_all();
+                        bail!(
+                            "config barrier failed: logical node {l} has no live configured \
+                             replica{}",
+                            self.failure_summary()
+                        );
+                    }
+                }
+                return Ok(());
+            }
+            if Instant::now() > deadline {
+                self.shutdown_all();
+                bail!("config barrier timed out{}", self.failure_summary());
+            }
+        }
+    }
+
+    /// Release every live worker into the reduce iterations.
+    pub fn start(&mut self) -> Result<()> {
+        if self.started_at.is_some() {
+            bail!("start() called twice");
+        }
+        self.started_at = Some(Instant::now());
+        for (w, writer) in self.writers.iter().enumerate() {
+            // Skip only on hard evidence: heartbeat staleness is
+            // transient, and a worker never sent START deadlocks.
+            if self.detector.is_hard_dead(w) {
+                continue;
+            }
+            if let Err(e) = send_ctrl(writer, COORD, &CtrlMsg::Start) {
+                log::warn!("START to worker {w} failed: {e}");
+                self.detector.mark_dead(w);
+            }
+        }
+        Ok(())
+    }
+
+    /// Wait for one REPORT per logical node (any live replica), then
+    /// release the cluster and aggregate.
+    pub fn collect(mut self) -> Result<ClusterRun> {
+        let Some(started_at) = self.started_at else {
+            bail!("collect() before start()");
+        };
+        let deadline = Instant::now() + self.opts.phase_deadline;
+        loop {
+            self.pump(Duration::from_millis(50));
+            let done = (0..self.map.logical)
+                .all(|l| self.map.replicas(l).any(|p| self.reports[p].is_some()));
+            if done {
+                break;
+            }
+            // Replication exhausted for a node we are still waiting on →
+            // abort with the §V story instead of waiting out the
+            // deadline. A logical node whose REPORT already arrived is
+            // complete even if its workers die afterwards (e.g. killed
+            // while idling for SHUTDOWN), so only unreported nodes count.
+            for l in 0..self.map.logical {
+                let reported = self.map.replicas(l).any(|p| self.reports[p].is_some());
+                let extinct = self.detector.group_extinct_hard(&self.map, l);
+                if !reported && extinct {
+                    self.shutdown_all();
+                    bail!(
+                        "logical node {l} lost all {} replica(s) before reporting — §V \
+                         tolerance exceeded, run cannot complete{}",
+                        self.map.r,
+                        self.failure_summary()
+                    );
+                }
+            }
+            if Instant::now() > deadline {
+                self.shutdown_all();
+                bail!("collect timed out waiting for worker reports{}", self.failure_summary());
+            }
+        }
+        let wall_secs = started_at.elapsed().as_secs_f64();
+        // Snapshot liveness BEFORE releasing the cluster: workers exit
+        // on SHUTDOWN and their control EOFs must not read as deaths.
+        let dead = self.detector.hard_dead();
+        self.shutdown_all();
+
+        let mut checksum = 0f64;
+        for l in 0..self.map.logical {
+            let p0 = self
+                .map
+                .replicas(l)
+                .find_map(|p| self.reports[p].as_ref())
+                .map(|r| r.checksum_p0)
+                .unwrap_or(0.0);
+            checksum += p0;
+        }
+        let per_node: Vec<Option<RunMetrics>> = self
+            .reports
+            .iter()
+            .map(|r| r.as_ref().map(report_metrics))
+            .collect();
+        let config_secs = per_node
+            .iter()
+            .flatten()
+            .map(|m| m.config_secs)
+            .fold(0.0, f64::max);
+        Ok(ClusterRun {
+            world: self.world(),
+            replication: self.opts.replication,
+            per_node,
+            checksum,
+            wall_secs,
+            config_secs,
+            dead,
+        })
+    }
+
+    fn shutdown_all(&mut self) {
+        if self.shutdown_sent {
+            return;
+        }
+        self.shutdown_sent = true;
+        for (w, writer) in self.writers.iter().enumerate() {
+            if self.detector.is_hard_dead(w) {
+                continue;
+            }
+            let _ = send_ctrl(writer, COORD, &CtrlMsg::Shutdown);
+        }
+    }
+}
+
+impl Drop for Session {
+    fn drop(&mut self) {
+        // Error paths must not leave worker processes waiting forever.
+        self.shutdown_all();
+    }
+}
+
+fn report_metrics(r: &WorkerReport) -> RunMetrics {
+    RunMetrics {
+        config_secs: r.config_secs,
+        iters: r
+            .iter_compute_secs
+            .iter()
+            .zip(&r.iter_comm_secs)
+            .map(|(&compute_secs, &comm_secs)| IterTiming { compute_secs, comm_secs })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn launch_opts_world_arithmetic() {
+        let mut opts = LaunchOpts::default();
+        assert_eq!(opts.logical(), 4);
+        assert_eq!(opts.world(), 4);
+        opts.replication = 2;
+        assert_eq!(opts.world(), 8);
+        assert!(opts.validate().is_ok());
+        opts.iters = 0;
+        assert!(opts.validate().is_err());
+    }
+
+    #[test]
+    fn from_run_config_carries_topology() {
+        let cfg = RunConfig {
+            degrees: vec![4, 2],
+            replication: 2,
+            iters: 7,
+            dataset: "yahoo".into(),
+            ..RunConfig::default()
+        };
+        let opts = LaunchOpts::from_run_config(&cfg);
+        assert_eq!(opts.degrees, vec![4, 2]);
+        assert_eq!(opts.world(), 16);
+        assert_eq!(opts.iters, 7);
+        assert_eq!(opts.dataset, "yahoo");
+    }
+
+    #[test]
+    fn report_metrics_roundtrip() {
+        let r = WorkerReport {
+            node: 0,
+            config_secs: 0.5,
+            iter_compute_secs: vec![0.1, 0.2],
+            iter_comm_secs: vec![0.3, 0.4],
+            checksum_p0: 1.0,
+        };
+        let m = report_metrics(&r);
+        assert_eq!(m.iters.len(), 2);
+        assert!((m.total_comm() - 0.7).abs() < 1e-12);
+        assert!((m.total_compute() - 0.3).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,67 @@
+//! Multi-process deployment plane: worker daemon, control protocol, and
+//! process launcher.
+//!
+//! The paper measured Sparse Allreduce on 64 real EC2 nodes; the
+//! in-process drivers (`allreduce::LocalCluster` lockstep,
+//! `coordinator` threads over `MemTransport`/`TcpNet::local`) simulate
+//! that cluster inside one process. This module is the third execution
+//! mode: one `NodeProtocol` worker per **OS process**, wired up by a
+//! real control plane, with the existing `TcpNet` as the data plane
+//! (constructed from an explicit `NodeId → SocketAddr` map with
+//! connect-retry, since cross-process bring-up races).
+//!
+//! # Control-protocol state machine
+//!
+//! One TCP connection per worker carries length-prefixed frames (the
+//! data plane's [`crate::transport::wire`] framing; opcode in the `seq`
+//! field — see [`proto`]):
+//!
+//! ```text
+//!  worker                         coordinator
+//!    | ---- JOIN {data_addr} ---------> |   arrival order = node id
+//!    | <--- PLAN {node, degrees,        |   after all M workers joined
+//!    |           addrs[M], dataset,     |
+//!    |           iters, …} ------------ |
+//!    |  (build TcpNet, shard, run       |
+//!    |   config phase over data plane)  |
+//!    | ---- CONFIG_DONE --------------> |   barrier over live workers
+//!    | <--- START --------------------- |
+//!    |  (reduce iterations…)            |
+//!    | ---- REPORT {metrics, p0} -----> |   one per logical node needed
+//!    | <--- SHUTDOWN ------------------ |
+//!    |                                  |
+//!    | ---- HEARTBEAT (100ms) --------> |   entire lifetime, background
+//! ```
+//!
+//! Failure handling: heartbeats and control-connection EOFs feed a
+//! [`crate::fault::FailureDetector`]. With `replication > 1` a dead
+//! worker is masked by the replicated driver's packet racing (paper §V)
+//! and the coordinator simply accepts the surviving replica's REPORT;
+//! the run aborts with a readable error — instead of hanging — only
+//! when some still-unreported logical node loses *all* replicas to
+//! hard-evidence death (`group_extinct_hard`; heartbeat staleness is
+//! reversible and never drives an irreversible decision).
+//! Workers bound their own exposure with the plan's
+//! data-plane timeout and REPORT a failure rather than blocking forever
+//! on a dead peer.
+//!
+//! # Entry points
+//!
+//! * [`run_worker`] — the `sar worker --listen … --coordinator …` daemon.
+//! * [`Coordinator`]/[`Session`] — the `sar launch` control plane, also
+//!   driveable phase-by-phase for fault-injection tests.
+//! * [`spawn_local`]/[`launch_local`] — fork N workers of the current
+//!   binary for true multi-process runs on one machine.
+
+pub mod launch;
+pub mod proto;
+pub mod spawn;
+pub mod worker;
+
+pub use launch::{ClusterRun, Coordinator, LaunchOpts, Session};
+pub use proto::{CtrlMsg, WorkerPlan, WorkerReport};
+pub use spawn::{
+    default_degrees, launch_local, sar_binary, spawn_local, spawn_session, spawn_workers,
+    LocalProcs, MAX_LOCAL_WORKERS,
+};
+pub use worker::{run_worker, WorkerOpts};

@@ -1,0 +1,372 @@
+//! Control-protocol messages and codec.
+//!
+//! Control frames reuse the data plane's wire framing
+//! ([`crate::transport::wire`]): the 16-byte header's `seq` field
+//! carries the opcode, `src` carries the sender's physical node id
+//! ([`COORD`] for the coordinator), and the payload is the message body
+//! in the little-endian scalar/string encoding below. Reusing the
+//! framing keeps one frame reader for both planes and gives control
+//! messages the same size accounting as data messages.
+//!
+//! See [`super`] for the JOIN → PLAN → CONFIG_DONE → START →
+//! HEARTBEAT/REPORT → SHUTDOWN state machine these messages drive.
+
+use crate::topology::NodeId;
+use crate::transport::wire::{decode_header, encode_header, HEADER_BYTES};
+use crate::transport::Tag;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Mutex;
+
+/// `src` value identifying the coordinator on control frames.
+pub const COORD: NodeId = u32::MAX as NodeId;
+
+/// Largest accepted control payload (corrupt-header guard).
+const MAX_CTRL_PAYLOAD: usize = 64 << 20;
+
+/// A control-plane message.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CtrlMsg {
+    /// worker → coordinator: first message on the connection; the
+    /// worker's data-plane listener address.
+    Join { data_addr: String },
+    /// coordinator → worker: identity, topology, address map, workload.
+    Plan(WorkerPlan),
+    /// worker → coordinator: config phase finished (barrier vote).
+    ConfigDone,
+    /// coordinator → worker: all workers configured; run the iterations.
+    Start,
+    /// worker → coordinator: liveness (sent on an interval by a
+    /// background thread for the whole worker lifetime).
+    Heartbeat,
+    /// worker → coordinator: run finished; metrics and checksum.
+    Report(WorkerReport),
+    /// worker → coordinator: run failed; human-readable cause.
+    Failed { error: String },
+    /// coordinator → worker: release the worker process.
+    Shutdown,
+}
+
+/// Everything a worker needs to run its share of the job.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkerPlan {
+    /// This worker's physical node id (index into `addrs`).
+    pub node: u32,
+    /// Total physical workers (`logical × replication`).
+    pub world: u32,
+    /// Replication factor (1 = none; >1 enables §V failover).
+    pub replication: u32,
+    /// Butterfly degree schedule over the *logical* nodes.
+    pub degrees: Vec<u32>,
+    /// Data-plane address of every physical node, indexed by node id.
+    pub addrs: Vec<String>,
+    /// Dataset preset key (see `graph::DatasetPreset::by_name`).
+    pub dataset: String,
+    pub scale: f64,
+    pub seed: u64,
+    pub iters: u32,
+    pub send_threads: u32,
+    /// Data-plane receive timeout; bounds how long a worker waits on a
+    /// dead peer before reporting failure instead of hanging.
+    pub data_timeout_ms: u64,
+}
+
+/// Per-worker run outcome shipped back on REPORT.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkerReport {
+    pub node: u32,
+    pub config_secs: f64,
+    pub iter_compute_secs: Vec<f64>,
+    pub iter_comm_secs: Vec<f64>,
+    /// First entry of the node's final P vector (determinism probe; the
+    /// coordinator sums one per logical node into the run checksum).
+    pub checksum_p0: f64,
+}
+
+// --- opcodes -------------------------------------------------------------
+
+const OP_JOIN: u32 = 1;
+const OP_PLAN: u32 = 2;
+const OP_CONFIG_DONE: u32 = 3;
+const OP_START: u32 = 4;
+const OP_HEARTBEAT: u32 = 5;
+const OP_REPORT: u32 = 6;
+const OP_FAILED: u32 = 7;
+const OP_SHUTDOWN: u32 = 8;
+
+// --- body codec ----------------------------------------------------------
+
+#[derive(Default)]
+struct Enc(Vec<u8>);
+
+impl Enc {
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.0.extend_from_slice(s.as_bytes());
+    }
+    fn u32s(&mut self, vs: &[u32]) {
+        self.u32(vs.len() as u32);
+        for &v in vs {
+            self.u32(v);
+        }
+    }
+    fn strs(&mut self, vs: &[String]) {
+        self.u32(vs.len() as u32);
+        for v in vs {
+            self.str(v);
+        }
+    }
+    fn f64s(&mut self, vs: &[f64]) {
+        self.u32(vs.len() as u32);
+        for &v in vs {
+            self.f64(v);
+        }
+    }
+}
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+fn bad(msg: impl Into<String>) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg.into())
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, off: 0 }
+    }
+    fn take(&mut self, n: usize) -> std::io::Result<&'a [u8]> {
+        if self.off + n > self.buf.len() {
+            return Err(bad("truncated control message"));
+        }
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+    fn u32(&mut self) -> std::io::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> std::io::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> std::io::Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn str(&mut self) -> std::io::Result<String> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n)?;
+        String::from_utf8(raw.to_vec()).map_err(|_| bad("non-utf8 string"))
+    }
+    fn u32s(&mut self) -> std::io::Result<Vec<u32>> {
+        let n = self.u32()? as usize;
+        (0..n).map(|_| self.u32()).collect()
+    }
+    fn strs(&mut self) -> std::io::Result<Vec<String>> {
+        let n = self.u32()? as usize;
+        (0..n).map(|_| self.str()).collect()
+    }
+    fn f64s(&mut self) -> std::io::Result<Vec<f64>> {
+        let n = self.u32()? as usize;
+        (0..n).map(|_| self.f64()).collect()
+    }
+    fn finish(self) -> std::io::Result<()> {
+        if self.off != self.buf.len() {
+            return Err(bad("trailing bytes in control message"));
+        }
+        Ok(())
+    }
+}
+
+/// Encode a message body; returns `(opcode, payload)`.
+pub fn encode(msg: &CtrlMsg) -> (u32, Vec<u8>) {
+    let mut e = Enc::default();
+    let op = match msg {
+        CtrlMsg::Join { data_addr } => {
+            e.str(data_addr);
+            OP_JOIN
+        }
+        CtrlMsg::Plan(p) => {
+            e.u32(p.node);
+            e.u32(p.world);
+            e.u32(p.replication);
+            e.u32s(&p.degrees);
+            e.strs(&p.addrs);
+            e.str(&p.dataset);
+            e.f64(p.scale);
+            e.u64(p.seed);
+            e.u32(p.iters);
+            e.u32(p.send_threads);
+            e.u64(p.data_timeout_ms);
+            OP_PLAN
+        }
+        CtrlMsg::ConfigDone => OP_CONFIG_DONE,
+        CtrlMsg::Start => OP_START,
+        CtrlMsg::Heartbeat => OP_HEARTBEAT,
+        CtrlMsg::Report(r) => {
+            e.u32(r.node);
+            e.f64(r.config_secs);
+            e.f64s(&r.iter_compute_secs);
+            e.f64s(&r.iter_comm_secs);
+            e.f64(r.checksum_p0);
+            OP_REPORT
+        }
+        CtrlMsg::Failed { error } => {
+            e.str(error);
+            OP_FAILED
+        }
+        CtrlMsg::Shutdown => OP_SHUTDOWN,
+    };
+    (op, e.0)
+}
+
+/// Decode a message body received with `opcode`.
+pub fn decode(opcode: u32, payload: &[u8]) -> std::io::Result<CtrlMsg> {
+    let mut d = Dec::new(payload);
+    let msg = match opcode {
+        OP_JOIN => CtrlMsg::Join { data_addr: d.str()? },
+        OP_PLAN => CtrlMsg::Plan(WorkerPlan {
+            node: d.u32()?,
+            world: d.u32()?,
+            replication: d.u32()?,
+            degrees: d.u32s()?,
+            addrs: d.strs()?,
+            dataset: d.str()?,
+            scale: d.f64()?,
+            seed: d.u64()?,
+            iters: d.u32()?,
+            send_threads: d.u32()?,
+            data_timeout_ms: d.u64()?,
+        }),
+        OP_CONFIG_DONE => CtrlMsg::ConfigDone,
+        OP_START => CtrlMsg::Start,
+        OP_HEARTBEAT => CtrlMsg::Heartbeat,
+        OP_REPORT => CtrlMsg::Report(WorkerReport {
+            node: d.u32()?,
+            config_secs: d.f64()?,
+            iter_compute_secs: d.f64s()?,
+            iter_comm_secs: d.f64s()?,
+            checksum_p0: d.f64()?,
+        }),
+        OP_FAILED => CtrlMsg::Failed { error: d.str()? },
+        OP_SHUTDOWN => CtrlMsg::Shutdown,
+        other => return Err(bad(format!("unknown control opcode {other}"))),
+    };
+    d.finish()?;
+    Ok(msg)
+}
+
+// --- stream I/O ----------------------------------------------------------
+
+/// Write one control frame. The stream is mutex-wrapped because workers
+/// share it between the main thread (JOIN/CONFIG_DONE/REPORT) and the
+/// heartbeat thread; holding the lock across the whole frame keeps
+/// frames atomic.
+pub fn send_ctrl(stream: &Mutex<TcpStream>, src: NodeId, msg: &CtrlMsg) -> std::io::Result<()> {
+    let (op, payload) = encode(msg);
+    let header = encode_header(src, Tag { seq: op, phase_code: 0, layer: 0 }, payload.len());
+    let mut s = stream.lock().expect("control stream poisoned");
+    s.write_all(&header)?;
+    s.write_all(&payload)?;
+    s.flush()
+}
+
+/// Read one control frame → `(sender, message)`.
+pub fn recv_ctrl(stream: &mut TcpStream) -> std::io::Result<(NodeId, CtrlMsg)> {
+    let mut header = [0u8; HEADER_BYTES];
+    stream.read_exact(&mut header)?;
+    let (src, tag, len) = decode_header(&header);
+    if len > MAX_CTRL_PAYLOAD {
+        return Err(bad(format!("oversized control payload ({len} bytes)")));
+    }
+    let mut payload = vec![0u8; len];
+    stream.read_exact(&mut payload)?;
+    Ok((src, decode(tag.seq, &payload)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_plan() -> WorkerPlan {
+        WorkerPlan {
+            node: 3,
+            world: 8,
+            replication: 2,
+            degrees: vec![2, 2],
+            addrs: (0..8).map(|i| format!("127.0.0.1:{}", 9000 + i)).collect(),
+            dataset: "twitter".into(),
+            scale: 0.01,
+            seed: 42,
+            iters: 5,
+            send_threads: 4,
+            data_timeout_ms: 10_000,
+        }
+    }
+
+    #[test]
+    fn every_message_roundtrips() {
+        let msgs = vec![
+            CtrlMsg::Join { data_addr: "10.0.0.7:41234".into() },
+            CtrlMsg::Plan(sample_plan()),
+            CtrlMsg::ConfigDone,
+            CtrlMsg::Start,
+            CtrlMsg::Heartbeat,
+            CtrlMsg::Report(WorkerReport {
+                node: 1,
+                config_secs: 0.25,
+                iter_compute_secs: vec![0.1, 0.2],
+                iter_comm_secs: vec![0.3, 0.4],
+                checksum_p0: 0.001953,
+            }),
+            CtrlMsg::Failed { error: "peer 3 timed out".into() },
+            CtrlMsg::Shutdown,
+        ];
+        for msg in msgs {
+            let (op, payload) = encode(&msg);
+            assert_eq!(decode(op, &payload).unwrap(), msg, "opcode {op}");
+        }
+    }
+
+    #[test]
+    fn truncated_and_trailing_rejected() {
+        let (op, payload) = encode(&CtrlMsg::Plan(sample_plan()));
+        assert!(decode(op, &payload[..payload.len() - 1]).is_err());
+        let mut extra = payload.clone();
+        extra.push(0);
+        assert!(decode(op, &extra).is_err());
+        assert!(decode(99, &[]).is_err());
+    }
+
+    #[test]
+    fn frames_cross_a_real_socket() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let (src, msg) = recv_ctrl(&mut s).unwrap();
+            assert_eq!(src, 5);
+            assert_eq!(msg, CtrlMsg::Join { data_addr: "127.0.0.1:1".into() });
+            let s = Mutex::new(s);
+            send_ctrl(&s, COORD, &CtrlMsg::Plan(sample_plan())).unwrap();
+        });
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut rd = stream.try_clone().unwrap();
+        let wr = Mutex::new(stream);
+        send_ctrl(&wr, 5, &CtrlMsg::Join { data_addr: "127.0.0.1:1".into() }).unwrap();
+        let (src, msg) = recv_ctrl(&mut rd).unwrap();
+        assert_eq!(src, COORD);
+        assert_eq!(msg, CtrlMsg::Plan(sample_plan()));
+        server.join().unwrap();
+    }
+}

@@ -1,0 +1,169 @@
+//! Local process launcher: fork N `sar worker` subprocesses so tests,
+//! examples and benches can exercise true multi-process runs on one
+//! machine (the third execution mode next to lockstep and threaded).
+
+use super::launch::{ClusterRun, Coordinator, LaunchOpts, Session};
+use crate::topology::{plan_degrees, PlannerParams};
+use anyhow::{Context, Result};
+use std::net::SocketAddr;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+
+/// Handles on the spawned worker subprocesses. Dropping the set kills
+/// any worker still running, so failed runs don't leak processes.
+pub struct LocalProcs {
+    children: Vec<Option<Child>>,
+}
+
+impl LocalProcs {
+    pub fn len(&self) -> usize {
+        self.children.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.children.is_empty()
+    }
+
+    /// OS pid of worker `i` (None once killed/reaped).
+    pub fn pid(&self, i: usize) -> Option<u32> {
+        self.children[i].as_ref().map(|c| c.id())
+    }
+
+    /// Fail-stop worker `i` (the paper's §V fault injection).
+    pub fn kill(&mut self, i: usize) -> Result<()> {
+        if let Some(mut child) = self.children[i].take() {
+            child.kill().with_context(|| format!("killing worker {i}"))?;
+            child.wait().with_context(|| format!("reaping worker {i}"))?;
+        }
+        Ok(())
+    }
+
+    /// Reap every remaining worker, returning exit codes (None = killed
+    /// by signal or already reaped).
+    pub fn wait_all(&mut self) -> Vec<Option<i32>> {
+        self.children
+            .iter_mut()
+            .map(|slot| {
+                slot.take().and_then(|mut c| c.wait().ok()).and_then(|status| status.code())
+            })
+            .collect()
+    }
+}
+
+impl Drop for LocalProcs {
+    fn drop(&mut self) {
+        for slot in &mut self.children {
+            if let Some(mut child) = slot.take() {
+                match child.try_wait() {
+                    Ok(Some(_)) => {}
+                    _ => {
+                        let _ = child.kill();
+                        let _ = child.wait();
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The `sar` binary to spawn workers from: `$SAR_BIN` if set, else the
+/// current executable (correct when the caller *is* `sar`; tests pass
+/// `CARGO_BIN_EXE_sar` explicitly instead).
+pub fn sar_binary() -> Result<PathBuf> {
+    if let Ok(p) = std::env::var("SAR_BIN") {
+        return Ok(PathBuf::from(p));
+    }
+    std::env::current_exe().context("locating current executable (set SAR_BIN to override)")
+}
+
+/// Cap on locally-forked workers: a config inheriting the paper's
+/// 16×4(×r) topology must not silently swamp one machine — real
+/// paper-scale runs use `sar launch --no-spawn` with one worker per
+/// host.
+pub const MAX_LOCAL_WORKERS: usize = 64;
+
+/// Spawn `world` worker subprocesses of `bin` pointed at `coordinator`.
+pub fn spawn_workers(bin: &Path, coordinator: SocketAddr, world: usize) -> Result<LocalProcs> {
+    if world > MAX_LOCAL_WORKERS {
+        anyhow::bail!(
+            "refusing to fork {world} local worker processes (cap {MAX_LOCAL_WORKERS}); \
+             use `sar launch --no-spawn` with externally-started workers, or a smaller \
+             --degrees/--replication"
+        );
+    }
+    let level = std::env::var("SAR_LOG").unwrap_or_else(|_| "warn".to_string());
+    let mut children = Vec::with_capacity(world);
+    for w in 0..world {
+        let child = Command::new(bin)
+            .arg("worker")
+            .arg("--coordinator")
+            .arg(coordinator.to_string())
+            .arg("--listen")
+            .arg("127.0.0.1:0")
+            .env("SAR_LOG", &level)
+            .stdin(Stdio::null())
+            .spawn()
+            .with_context(|| format!("spawning worker {w} from {}", bin.display()))?;
+        children.push(Some(child));
+    }
+    Ok(LocalProcs { children })
+}
+
+/// Bind the coordinator, spawn local workers, and return the planned
+/// session plus the process handles — the manual-phase entry point used
+/// by fault-injection tests (kill a worker between phases).
+pub fn spawn_session(bin: &Path, opts: LaunchOpts) -> Result<(Session, LocalProcs)> {
+    // Validate BEFORE forking: a bad schedule must not cost a fleet of
+    // subprocesses that immediately has to be reaped.
+    opts.validate()?;
+    let world = opts.world();
+    let coord = Coordinator::bind(&opts.bind)?;
+    let addr = coord.addr()?;
+    let procs = spawn_workers(bin, addr, world)?;
+    let session = coord.accept(opts)?;
+    Ok((session, procs))
+}
+
+/// Run one full distributed PageRank job on `world` local worker
+/// processes of `bin`: bind → spawn → plan → config barrier → start →
+/// collect → reap.
+pub fn launch_local(bin: &Path, opts: LaunchOpts) -> Result<ClusterRun> {
+    let (mut session, mut procs) = spawn_session(bin, opts)?;
+    session.barrier_config()?;
+    session.start()?;
+    let run = session.collect()?;
+    procs.wait_all();
+    Ok(run)
+}
+
+/// Default degree schedule for an ad-hoc `n`-process cluster.
+pub fn default_degrees(machines: usize) -> Vec<usize> {
+    plan_degrees(machines, &PlannerParams::default())
+}
+
+/// The acceptance-path convenience: run PageRank (config + 5 reduce
+/// iterations on the default tiny twitter graph) across `workers` OS
+/// processes over TCP, returning the aggregated [`ClusterRun`] whose
+/// `checksum` matches `LocalCluster` on the same graph.
+pub fn spawn_local(workers: usize) -> Result<ClusterRun> {
+    let opts = LaunchOpts { degrees: default_degrees(workers), ..LaunchOpts::default() };
+    launch_local(&sar_binary()?, opts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_degrees_cover_the_machine_count() {
+        for m in [1usize, 2, 4, 6, 8, 64] {
+            assert_eq!(default_degrees(m).iter().product::<usize>(), m);
+        }
+    }
+
+    #[test]
+    fn sar_binary_resolves() {
+        // Either SAR_BIN or current_exe must produce something.
+        assert!(sar_binary().is_ok());
+    }
+}

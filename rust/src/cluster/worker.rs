@@ -1,0 +1,295 @@
+//! Worker daemon: one `NodeProtocol` endpoint per OS process.
+//!
+//! `sar worker --listen <addr> --coordinator <addr>` runs
+//! [`run_worker`]: bind the data-plane listener, dial the coordinator,
+//! JOIN with the advertised data address, receive the [`WorkerPlan`]
+//! (identity + topology + address map + workload), build the shard and
+//! the [`TcpNet`] fabric, run the config phase, vote CONFIG_DONE, wait
+//! for START, run the reduce iterations, and REPORT metrics plus the
+//! determinism checksum. A background thread heartbeats the control
+//! connection for the whole run so the coordinator's
+//! [`crate::fault::FailureDetector`] can distinguish slow from dead.
+//!
+//! Every worker deterministically regenerates the full synthetic graph
+//! from the plan's `(dataset, scale, seed)` and takes its own shard —
+//! the same scheme the in-process drivers use — so no graph bytes cross
+//! the control plane.
+
+use super::proto::{recv_ctrl, send_ctrl, CtrlMsg, WorkerPlan, WorkerReport};
+use crate::allreduce::NodeHandle;
+use crate::apps::pagerank::PageRankShards;
+use crate::config::validate_world;
+use crate::fault::{ReplicaMap, ReplicatedHandle};
+use crate::graph::{Csr, DatasetPreset, DatasetSpec};
+use crate::metrics::RunMetrics;
+use crate::sparse::{IndexSet, SumF32};
+use crate::topology::Butterfly;
+use crate::transport::{
+    advertised_addr, connect_with_retry, RetryPolicy, TcpNet, Transport, TransportError,
+};
+use anyhow::{bail, Context, Result};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Worker daemon options (the `sar worker` flags).
+#[derive(Clone, Debug)]
+pub struct WorkerOpts {
+    /// Coordinator control address (`host:port`).
+    pub coordinator: String,
+    /// Data-plane bind address; `0.0.0.0:0` for all interfaces.
+    pub listen: String,
+    /// Address to advertise for the data plane (defaults to the bound
+    /// address, with unspecified IPs rewritten to loopback).
+    pub advertise: Option<String>,
+    /// Heartbeat interval on the control connection.
+    pub heartbeat: Duration,
+}
+
+impl WorkerOpts {
+    pub fn new(coordinator: impl Into<String>) -> Self {
+        Self {
+            coordinator: coordinator.into(),
+            listen: "127.0.0.1:0".to_string(),
+            advertise: None,
+            heartbeat: Duration::from_millis(100),
+        }
+    }
+}
+
+fn resolve(addr: &str) -> Result<SocketAddr> {
+    addr.to_socket_addrs()
+        .with_context(|| format!("resolving `{addr}`"))?
+        .next()
+        .with_context(|| format!("`{addr}` resolved to no address"))
+}
+
+/// Run the worker daemon to completion (one job, then exit).
+pub fn run_worker(opts: &WorkerOpts) -> Result<()> {
+    let listener = TcpListener::bind(&opts.listen)
+        .with_context(|| format!("binding data listener on {}", opts.listen))?;
+    let advertise = match &opts.advertise {
+        Some(a) => a.clone(),
+        None => {
+            // Refuse to guess: rewriting 0.0.0.0 to loopback would make
+            // every remote peer dial ITSELF and silently misroute the
+            // reduce. All-interfaces binds must advertise explicitly.
+            if listener.local_addr()?.ip().is_unspecified() {
+                bail!(
+                    "--listen {} binds all interfaces; pass --advertise \
+                     <routable host:port> so peers can dial this worker",
+                    opts.listen
+                );
+            }
+            advertised_addr(&listener).context("deriving advertised address")?.to_string()
+        }
+    };
+
+    let coord = resolve(&opts.coordinator)?;
+    let ctrl = connect_with_retry(&coord, &RetryPolicy::default())
+        .with_context(|| format!("connecting to coordinator {coord}"))?;
+    ctrl.set_nodelay(true)?;
+    let mut ctrl_rd = ctrl.try_clone().context("cloning control stream")?;
+    let ctrl_wr = Arc::new(Mutex::new(ctrl));
+
+    send_ctrl(&ctrl_wr, 0, &CtrlMsg::Join { data_addr: advertise.clone() })
+        .context("sending JOIN")?;
+    log::info!("joined coordinator {coord}, data plane at {advertise}");
+
+    let (_, msg) = recv_ctrl(&mut ctrl_rd).context("waiting for PLAN")?;
+    let plan = match msg {
+        CtrlMsg::Plan(p) => p,
+        other => bail!("expected PLAN, got {other:?}"),
+    };
+    let node = plan.node as usize;
+    log::info!(
+        "plan: node {node}/{} degrees {:?} replication {} dataset {} scale {}",
+        plan.world,
+        plan.degrees,
+        plan.replication,
+        plan.dataset,
+        plan.scale
+    );
+
+    // Heartbeat for the rest of the process lifetime; a send failure
+    // means the coordinator is gone and the beat thread just stops.
+    let stop = Arc::new(AtomicBool::new(false));
+    let beat_handle = {
+        let stop = stop.clone();
+        let wr = ctrl_wr.clone();
+        let interval = opts.heartbeat;
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                if send_ctrl(&wr, node, &CtrlMsg::Heartbeat).is_err() {
+                    return;
+                }
+                std::thread::sleep(interval);
+            }
+        })
+    };
+
+    let outcome = execute_plan(node, &plan, listener, &ctrl_wr, &mut ctrl_rd);
+    let result = match outcome {
+        Ok(report) => {
+            send_ctrl(&ctrl_wr, node, &CtrlMsg::Report(report)).context("sending REPORT")?;
+            // Stay up until the coordinator releases us (or disappears),
+            // so our data listener keeps serving replica peers that are
+            // still reducing.
+            loop {
+                match recv_ctrl(&mut ctrl_rd) {
+                    Ok((_, CtrlMsg::Shutdown)) | Err(_) => break,
+                    Ok(_) => continue,
+                }
+            }
+            log::info!("worker {node} done");
+            Ok(())
+        }
+        Err(e) => {
+            let _ = send_ctrl(&ctrl_wr, node, &CtrlMsg::Failed { error: format!("{e:#}") });
+            Err(e)
+        }
+    };
+    stop.store(true, Ordering::Relaxed);
+    let _ = beat_handle.join();
+    result
+}
+
+/// The two in-process protocol drivers behind one object-safe face, so
+/// the worker body is written once for both the plain and the
+/// replicated (§V failover) modes.
+trait Collective {
+    fn run_config(&mut self, outbound: IndexSet, inbound: IndexSet)
+        -> Result<(), TransportError>;
+    fn reduce_sum(&mut self, values: Vec<f32>) -> Result<Vec<f32>, TransportError>;
+}
+
+impl<T: Transport + 'static> Collective for NodeHandle<T> {
+    fn run_config(
+        &mut self,
+        outbound: IndexSet,
+        inbound: IndexSet,
+    ) -> Result<(), TransportError> {
+        self.config(outbound, inbound)
+    }
+
+    fn reduce_sum(&mut self, values: Vec<f32>) -> Result<Vec<f32>, TransportError> {
+        self.reduce::<SumF32>(values)
+    }
+}
+
+impl<T: Transport + 'static> Collective for ReplicatedHandle<T> {
+    fn run_config(
+        &mut self,
+        outbound: IndexSet,
+        inbound: IndexSet,
+    ) -> Result<(), TransportError> {
+        self.config(outbound, inbound)
+    }
+
+    fn reduce_sum(&mut self, values: Vec<f32>) -> Result<Vec<f32>, TransportError> {
+        self.reduce::<SumF32>(values)
+    }
+}
+
+fn execute_plan(
+    node: usize,
+    plan: &WorkerPlan,
+    listener: TcpListener,
+    ctrl_wr: &Mutex<TcpStream>,
+    ctrl_rd: &mut TcpStream,
+) -> Result<WorkerReport> {
+    let world = plan.world as usize;
+    if plan.addrs.len() != world || node >= world {
+        bail!("bad plan: node {node}, world {world}, {} addresses", plan.addrs.len());
+    }
+    let replication = (plan.replication.max(1)) as usize;
+    let degrees: Vec<usize> = plan.degrees.iter().map(|&k| k as usize).collect();
+    validate_world(&degrees, replication, world)?;
+    let logical = world / replication;
+
+    let addrs: Vec<SocketAddr> =
+        plan.addrs.iter().map(|a| resolve(a)).collect::<Result<Vec<_>>>()?;
+    let net = TcpNet::from_addrs(node, listener, addrs).context("building data fabric")?;
+
+    let preset = DatasetPreset::by_name(&plan.dataset)
+        .with_context(|| format!("unknown dataset `{}`", plan.dataset))?;
+    let spec = DatasetSpec::new(preset, plan.scale, plan.seed);
+    let graph = spec.generate();
+    let shards = PageRankShards::build(&graph, logical, plan.seed);
+    let lnode = node % logical;
+    let shard = &shards.shards[lnode];
+    let topo = Butterfly::new(degrees, graph.vertices);
+    let timeout = Duration::from_millis(plan.data_timeout_ms.max(1));
+    let send_threads = plan.send_threads.max(1) as usize;
+
+    let mut handle: Box<dyn Collective> = if replication == 1 {
+        let mut h = NodeHandle::new(topo, node, net, send_threads);
+        h.set_timeout(timeout);
+        Box::new(h)
+    } else {
+        let map = ReplicaMap::new(logical, replication);
+        let mut h = ReplicatedHandle::new(topo, map, node, net, send_threads);
+        h.set_timeout(timeout);
+        Box::new(h)
+    };
+
+    let mut metrics = RunMetrics::new();
+    let t0 = Instant::now();
+    handle
+        .run_config(
+            IndexSet::from_sorted(shard.row_globals.clone()),
+            IndexSet::from_sorted(shard.col_globals.clone()),
+        )
+        .context("config phase")?;
+    metrics.config_secs = t0.elapsed().as_secs_f64();
+
+    send_ctrl(ctrl_wr, node, &CtrlMsg::ConfigDone).context("sending CONFIG_DONE")?;
+    loop {
+        let (_, msg) = recv_ctrl(ctrl_rd).context("waiting for START")?;
+        match msg {
+            CtrlMsg::Start => break,
+            CtrlMsg::Shutdown => bail!("coordinator shut the run down before START"),
+            _ => continue,
+        }
+    }
+
+    let p0 = run_pagerank_iters(handle.as_mut(), shard, graph.vertices, plan.iters as usize, &mut metrics)?;
+
+    Ok(WorkerReport {
+        node: node as u32,
+        config_secs: metrics.config_secs,
+        iter_compute_secs: metrics.iters.iter().map(|i| i.compute_secs).collect(),
+        iter_comm_secs: metrics.iters.iter().map(|i| i.comm_secs).collect(),
+        checksum_p0: p0 as f64,
+    })
+}
+
+/// The PageRank iteration loop (identical math to
+/// `coordinator::run_pagerank_threaded`); returns the node's `p[0]`
+/// determinism probe.
+fn run_pagerank_iters(
+    handle: &mut dyn Collective,
+    shard: &Csr,
+    vertices: i64,
+    iters: usize,
+    metrics: &mut RunMetrics,
+) -> Result<f32> {
+    let teleport = 1.0f32 / vertices as f32;
+    let damp = (vertices as f32 - 1.0) / vertices as f32;
+    let mut p = vec![teleport; shard.cols()];
+    for it in 0..iters {
+        let tc = Instant::now();
+        let q = shard.spmv(&p);
+        let compute = tc.elapsed();
+        let tm = Instant::now();
+        let sums = handle.reduce_sum(q).with_context(|| format!("reduce iteration {it}"))?;
+        let comm = tm.elapsed();
+        let t2 = Instant::now();
+        for (pv, s) in p.iter_mut().zip(sums) {
+            *pv = teleport + damp * s;
+        }
+        metrics.push(compute + t2.elapsed(), comm);
+    }
+    Ok(p.first().copied().unwrap_or(0.0))
+}

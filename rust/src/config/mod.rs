@@ -8,5 +8,5 @@
 pub mod schema;
 pub mod toml;
 
-pub use schema::RunConfig;
+pub use schema::{validate_world, RunConfig};
 pub use toml::{parse_toml, TomlValue};

@@ -25,6 +25,11 @@ pub struct RunConfig {
     pub iters: usize,
     /// RNG seed.
     pub seed: u64,
+    /// Expected physical worker count for multi-process runs. `None`
+    /// derives it from `degrees × replication`; when set it must agree
+    /// with the degree schedule (validated at load time — mismatches
+    /// used to surface only deep inside the reduce protocol).
+    pub workers: Option<usize>,
 }
 
 impl Default for RunConfig {
@@ -38,8 +43,33 @@ impl Default for RunConfig {
             scale: 0.1,
             iters: 10,
             seed: 42,
+            workers: None,
         }
     }
+}
+
+/// Check that a degree schedule, replication factor and physical worker
+/// count agree: `∏ degrees × replication == workers`. The error spells
+/// out the arithmetic, since this mismatch previously surfaced only as
+/// an index panic deep inside the reduce protocol.
+pub fn validate_world(degrees: &[usize], replication: usize, workers: usize) -> Result<()> {
+    if degrees.is_empty() || degrees.iter().any(|&k| k == 0) {
+        bail!("degree schedule must be non-empty positive ints, got {degrees:?}");
+    }
+    if replication == 0 {
+        bail!("replication must be >= 1");
+    }
+    let logical: usize = degrees.iter().product();
+    let expect = logical * replication;
+    if expect != workers {
+        let sched = degrees.iter().map(|k| k.to_string()).collect::<Vec<_>>().join("x");
+        bail!(
+            "degree schedule {sched} covers {logical} logical nodes × replication \
+             {replication} = {expect} machines, but {workers} workers were given \
+             (adjust --degrees/--replication/--workers so they agree)"
+        );
+    }
+    Ok(())
 }
 
 impl RunConfig {
@@ -95,8 +125,18 @@ impl RunConfig {
                 "data.scale" => cfg.scale = val.as_float().context("scale must be numeric")?,
                 "run.iters" => cfg.iters = val.as_int().context("iters must be int")? as usize,
                 "run.seed" => cfg.seed = val.as_int().context("seed must be int")? as u64,
+                "cluster.workers" => {
+                    let w = val.as_int().context("workers must be int")?;
+                    if w < 1 {
+                        bail!("workers must be >= 1");
+                    }
+                    cfg.workers = Some(w as usize);
+                }
                 other => bail!("unknown config key `{other}`"),
             }
+        }
+        if let Some(w) = cfg.workers {
+            validate_world(&cfg.degrees, cfg.replication, w)?;
         }
         Ok(cfg)
     }
@@ -172,5 +212,34 @@ seed = 7
         let cfg = RunConfig::from_toml("[run]\niters = 3").unwrap();
         assert_eq!(cfg.iters, 3);
         assert_eq!(cfg.degrees, vec![16, 4]);
+    }
+
+    #[test]
+    fn workers_matching_schedule_accepted() {
+        let cfg = RunConfig::from_toml(
+            "[topology]\ndegrees = [4, 2]\nreplication = 2\n[cluster]\nworkers = 16",
+        )
+        .unwrap();
+        assert_eq!(cfg.workers, Some(16));
+        assert_eq!(cfg.machines(), 16);
+    }
+
+    #[test]
+    fn workers_mismatch_is_a_readable_error() {
+        let err = RunConfig::from_toml("[topology]\ndegrees = [4, 2]\n[cluster]\nworkers = 12")
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("4x2"), "error should show the schedule: {msg}");
+        assert!(msg.contains("12 workers"), "error should show the given count: {msg}");
+    }
+
+    #[test]
+    fn validate_world_arithmetic() {
+        assert!(validate_world(&[4, 2], 1, 8).is_ok());
+        assert!(validate_world(&[4, 2], 2, 16).is_ok());
+        assert!(validate_world(&[4, 2], 2, 8).is_err());
+        assert!(validate_world(&[], 1, 1).is_err());
+        assert!(validate_world(&[4, 0], 1, 0).is_err());
+        assert!(validate_world(&[4], 0, 4).is_err());
     }
 }

@@ -1,7 +1,6 @@
 //! Minimal TOML-subset parser (see module docs in `config`).
 
 use std::collections::BTreeMap;
-use thiserror::Error;
 
 /// Parsed value.
 #[derive(Clone, Debug, PartialEq)]
@@ -52,12 +51,19 @@ impl TomlValue {
 }
 
 /// Parse error with line number.
-#[derive(Debug, Error, PartialEq)]
-#[error("config line {line}: {msg}")]
+#[derive(Debug, PartialEq)]
 pub struct TomlError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
 
 fn err(line: usize, msg: impl Into<String>) -> TomlError {
     TomlError { line, msg: msg.into() }

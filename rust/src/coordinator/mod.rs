@@ -1,14 +1,24 @@
-//! Cluster coordinator: real-threads bring-up and iteration driving.
+//! Cluster coordinator: execution modes and iteration driving.
 //!
-//! Where `allreduce::LocalCluster` is the deterministic lockstep oracle,
-//! the coordinator launches one worker thread per (physical) node over a
-//! shared transport and drives the application loop with wall-clock
-//! metrics — the layer the paper's §VI-C/E timing experiments run on.
-//! Supports plain and delay-injected (simnet cost model) transports and
-//! the Figure 7 sender-thread knob.
+//! Every PageRank driver in the repo is reachable through one of three
+//! interchangeable execution modes ([`ExecMode`]):
+//!
+//! * **Lockstep** — `allreduce::LocalCluster`, the deterministic
+//!   single-thread oracle ([`run_pagerank_lockstep`]).
+//! * **Threaded** — one worker thread per node over a shared in-process
+//!   transport ([`run_pagerank_threaded`]), the layer the paper's
+//!   §VI-C/E timing experiments run on; supports plain and
+//!   delay-injected (simnet cost model) transports and the Figure 7
+//!   sender-thread knob.
+//! * **Multi-process** — one worker OS process per node over TCP via the
+//!   `cluster` deployment plane ([`run_pagerank_distributed`]).
+//!
+//! All three report the same [`PageRankRun`] shape with the same
+//! determinism checksum, so modes can be cross-checked for equality.
 
 use crate::allreduce::threaded::{run_cluster, NodeHandle};
-use crate::apps::pagerank::PageRankShards;
+use crate::apps::pagerank::{DistPageRank, PageRankConfig, PageRankShards};
+use crate::cluster::{self, ClusterRun};
 use crate::config::RunConfig;
 use crate::graph::EdgeList;
 use crate::metrics::RunMetrics;
@@ -16,8 +26,32 @@ use crate::simnet::CostModel;
 use crate::sparse::SumF32;
 use crate::topology::Butterfly;
 use crate::transport::{DelayTransport, MemTransport, Transport};
+use anyhow::{bail, Result};
+use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
+
+/// How a cluster run is executed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Sequential lockstep in one thread (`LocalCluster`).
+    Lockstep,
+    /// One thread per node, shared in-process transport.
+    Threaded,
+    /// One OS process per node over TCP (`cluster::` control plane).
+    MultiProcess,
+}
+
+impl ExecMode {
+    pub fn parse(s: &str) -> Result<ExecMode> {
+        match s {
+            "lockstep" | "local" => Ok(ExecMode::Lockstep),
+            "threaded" | "threads" => Ok(ExecMode::Threaded),
+            "distributed" | "multiprocess" | "cluster" => Ok(ExecMode::MultiProcess),
+            other => bail!("unknown exec mode `{other}` (lockstep|threaded|distributed)"),
+        }
+    }
+}
 
 /// Outcome of a threaded PageRank run.
 #[derive(Clone, Debug)]
@@ -121,6 +155,51 @@ pub fn run_pagerank_config(graph: &EdgeList, cfg: &RunConfig, time_scale: f64) -
     }
 }
 
+/// Run PageRank on the lockstep oracle, reporting the same run shape
+/// (no per-node breakdown: there is only one thread).
+pub fn run_pagerank_lockstep(graph: &EdgeList, cfg: &RunConfig) -> PageRankRun {
+    let t0 = Instant::now();
+    let mut dist = DistPageRank::new(
+        graph,
+        cfg.degrees.clone(),
+        &PageRankConfig { seed: cfg.seed, iters: cfg.iters },
+    );
+    let config_secs = t0.elapsed().as_secs_f64();
+    let wall = Instant::now();
+    dist.run(cfg.iters);
+    PageRankRun {
+        per_node: Vec::new(),
+        wall_secs: wall.elapsed().as_secs_f64(),
+        config_secs,
+        checksum: dist.checksum(),
+    }
+}
+
+/// View a multi-process [`ClusterRun`] as a [`PageRankRun`] (dead
+/// workers' missing metrics are dropped from the per-node list).
+pub fn cluster_pagerank_run(run: &ClusterRun) -> PageRankRun {
+    PageRankRun {
+        per_node: run.per_node.iter().flatten().cloned().collect(),
+        wall_secs: run.wall_secs,
+        config_secs: run.config_secs,
+        checksum: run.checksum,
+    }
+}
+
+/// Run PageRank as one worker OS process per node over TCP, spawning
+/// workers from `bin` (defaults to the current `sar` binary). The graph
+/// is regenerated worker-side from the config's dataset spec, so the
+/// config must describe a synthetic dataset preset.
+pub fn run_pagerank_distributed(cfg: &RunConfig, bin: Option<&Path>) -> Result<PageRankRun> {
+    let opts = cluster::LaunchOpts::from_run_config(cfg);
+    let bin = match bin {
+        Some(b) => b.to_path_buf(),
+        None => cluster::sar_binary()?,
+    };
+    let run = cluster::launch_local(&bin, opts)?;
+    Ok(cluster_pagerank_run(&run))
+}
+
 /// Sweep sender-thread counts (Figure 7) on a delay-injected transport.
 /// Returns (threads, median reduce seconds per iteration).
 pub fn thread_sweep(
@@ -205,6 +284,36 @@ mod tests {
         assert!(run.config_secs > 0.0);
         let f = run.comm_fraction();
         assert!((0.0..=1.0).contains(&f));
+    }
+
+    #[test]
+    fn exec_mode_parses() {
+        assert_eq!(ExecMode::parse("lockstep").unwrap(), ExecMode::Lockstep);
+        assert_eq!(ExecMode::parse("threaded").unwrap(), ExecMode::Threaded);
+        assert_eq!(ExecMode::parse("distributed").unwrap(), ExecMode::MultiProcess);
+        assert_eq!(ExecMode::parse("multiprocess").unwrap(), ExecMode::MultiProcess);
+        assert!(ExecMode::parse("quantum").is_err());
+    }
+
+    #[test]
+    fn lockstep_and_threaded_modes_agree_on_checksum() {
+        let g = graph(23);
+        let cfg = RunConfig {
+            degrees: vec![2, 2],
+            iters: 4,
+            send_threads: 4,
+            seed: 23,
+            ..RunConfig::default()
+        };
+        let lockstep = run_pagerank_lockstep(&g, &cfg);
+        let threaded = run_pagerank_config(&g, &cfg, 0.0);
+        assert!(
+            (lockstep.checksum - threaded.checksum).abs() < 1e-12,
+            "lockstep {} vs threaded {}",
+            lockstep.checksum,
+            threaded.checksum
+        );
+        assert!(lockstep.checksum > 0.0);
     }
 
     #[test]

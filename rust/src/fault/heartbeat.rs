@@ -1,0 +1,183 @@
+//! Heartbeat-based failure detection for the deployment plane.
+//!
+//! The paper's fault model (§V) is fail-stop machines masked by data
+//! replication and packet racing. In-process drivers observe failure as
+//! a transport timeout; across OS processes the control plane needs an
+//! explicit detector: every worker heartbeats its control connection,
+//! and the coordinator combines *liveness timeouts* (no beat within the
+//! window) with *hard evidence* (control-connection EOF when the process
+//! dies). Only hard evidence drives irreversible decisions — staleness
+//! can reverse when a stalled worker resumes beating.
+//! [`FailureDetector::group_extinct_hard`] answers the question
+//! replication poses: has some logical node lost every replica, i.e.
+//! must the run be aborted instead of left to hang, or can the
+//! collective still complete via failover?
+
+use super::ReplicaMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+struct WorkerState {
+    last_beat: Instant,
+    dead: bool,
+}
+
+/// Tracks per-worker liveness from heartbeats and connection EOFs.
+pub struct FailureDetector {
+    timeout: Duration,
+    workers: Mutex<Vec<WorkerState>>,
+}
+
+impl FailureDetector {
+    /// All workers start alive with a fresh beat.
+    pub fn new(workers: usize, timeout: Duration) -> Self {
+        let now = Instant::now();
+        Self {
+            timeout,
+            workers: Mutex::new(
+                (0..workers).map(|_| WorkerState { last_beat: now, dead: false }).collect(),
+            ),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers.lock().expect("detector poisoned").len()
+    }
+
+    /// Record a heartbeat (any control-plane traffic counts).
+    pub fn beat(&self, worker: usize) {
+        let mut w = self.workers.lock().expect("detector poisoned");
+        w[worker].last_beat = Instant::now();
+    }
+
+    /// Record hard evidence of death (control connection EOF/error).
+    pub fn mark_dead(&self, worker: usize) {
+        let mut w = self.workers.lock().expect("detector poisoned");
+        w[worker].dead = true;
+    }
+
+    /// Dead by evidence, or silent past the heartbeat window.
+    pub fn is_dead(&self, worker: usize) -> bool {
+        let w = self.workers.lock().expect("detector poisoned");
+        w[worker].dead || w[worker].last_beat.elapsed() > self.timeout
+    }
+
+    /// Dead by hard evidence only (EOF / reported failure) — never by
+    /// heartbeat staleness. Staleness is *reversible* (a stalled worker
+    /// may resume beating), so irreversible control-plane decisions
+    /// (skipping START, aborting a run) must use this instead of
+    /// [`FailureDetector::is_dead`].
+    pub fn is_hard_dead(&self, worker: usize) -> bool {
+        let w = self.workers.lock().expect("detector poisoned");
+        w[worker].dead
+    }
+
+    /// All hard-dead workers (see [`FailureDetector::is_hard_dead`]).
+    pub fn hard_dead(&self) -> Vec<usize> {
+        let w = self.workers.lock().expect("detector poisoned");
+        w.iter().enumerate().filter(|(_, s)| s.dead).map(|(i, _)| i).collect()
+    }
+
+    pub fn dead(&self) -> Vec<usize> {
+        let w = self.workers.lock().expect("detector poisoned");
+        w.iter()
+            .enumerate()
+            .filter(|(_, s)| s.dead || s.last_beat.elapsed() > self.timeout)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    pub fn alive(&self) -> Vec<usize> {
+        let dead = self.dead();
+        (0..self.workers()).filter(|i| !dead.contains(i)).collect()
+    }
+
+    /// Whether logical node `logical` has lost *every* replica to
+    /// hard-evidence death — the §V condition under which the protocol
+    /// cannot complete for that node. This is the check the cluster
+    /// coordinator's collect phase uses to abort (for nodes still
+    /// missing a report) instead of hanging.
+    pub fn group_extinct_hard(&self, map: &ReplicaMap, logical: usize) -> bool {
+        map.replicas(logical).all(|p| self.is_hard_dead(p))
+    }
+
+    /// Whether the collective can still complete under `map`: every
+    /// logical node must retain at least one live replica (paper §V —
+    /// the protocol fails only when a whole replica group dies). Uses
+    /// the timeout-inclusive [`FailureDetector::is_dead`] view; returns
+    /// the first extinct logical node on failure.
+    pub fn check_quorum(&self, map: &ReplicaMap) -> Result<(), usize> {
+        let dead = self.dead();
+        for logical in 0..map.logical {
+            if map.replicas(logical).all(|p| dead.contains(&p)) {
+                return Err(logical);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn beats_keep_workers_alive() {
+        let d = FailureDetector::new(3, Duration::from_millis(80));
+        std::thread::sleep(Duration::from_millis(50));
+        d.beat(0);
+        d.beat(2);
+        std::thread::sleep(Duration::from_millis(50));
+        // 1 never beat after construction → stale; 0 and 2 fresh
+        assert!(!d.is_dead(0));
+        assert!(d.is_dead(1));
+        assert!(!d.is_dead(2));
+        assert_eq!(d.dead(), vec![1]);
+        assert_eq!(d.alive(), vec![0, 2]);
+    }
+
+    #[test]
+    fn eof_evidence_is_immediate() {
+        let d = FailureDetector::new(2, Duration::from_secs(60));
+        assert!(!d.is_dead(1));
+        d.mark_dead(1);
+        assert!(d.is_dead(1));
+        assert_eq!(d.dead(), vec![1]);
+    }
+
+    #[test]
+    fn quorum_follows_replica_groups() {
+        // 2 logical × 2 replicas: logical 0 on {0, 2}, logical 1 on {1, 3}
+        let map = ReplicaMap::new(2, 2);
+        let d = FailureDetector::new(4, Duration::from_secs(60));
+        assert_eq!(d.check_quorum(&map), Ok(()));
+        d.mark_dead(0);
+        assert_eq!(d.check_quorum(&map), Ok(()), "replica 2 still covers logical 0");
+        d.mark_dead(2);
+        assert_eq!(d.check_quorum(&map), Err(0), "logical 0 extinct");
+    }
+
+    #[test]
+    fn group_extinct_needs_hard_evidence() {
+        let map = ReplicaMap::new(2, 2);
+        // Tiny timeout: both replicas of logical 0 go heartbeat-stale…
+        let d = FailureDetector::new(4, Duration::from_millis(1));
+        std::thread::sleep(Duration::from_millis(10));
+        assert!(d.is_dead(0) && d.is_dead(2), "stale by timeout");
+        // …but staleness is reversible, so the group is NOT extinct.
+        assert!(!d.group_extinct_hard(&map, 0));
+        d.mark_dead(0);
+        assert!(!d.group_extinct_hard(&map, 0), "one replica still only stale");
+        d.mark_dead(2);
+        assert!(d.group_extinct_hard(&map, 0));
+        assert!(!d.group_extinct_hard(&map, 1));
+    }
+
+    #[test]
+    fn no_replication_quorum_is_every_worker() {
+        let map = ReplicaMap::new(4, 1);
+        let d = FailureDetector::new(4, Duration::from_secs(60));
+        d.mark_dead(3);
+        assert_eq!(d.check_quorum(&map), Err(3));
+    }
+}

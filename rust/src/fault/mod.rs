@@ -13,8 +13,10 @@
 //! dead; with `r = 2` and random failures that takes ≈ √M failures
 //! (birthday paradox), verified empirically by [`expected_failures_to_kill`].
 
+pub mod heartbeat;
 pub mod replicated;
 
+pub use heartbeat::FailureDetector;
 pub use replicated::{run_replicated_cluster, ReplicaMap, ReplicatedHandle};
 
 use crate::util::Pcg32;

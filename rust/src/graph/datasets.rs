@@ -28,6 +28,27 @@ pub enum DatasetPreset {
     TwitterDocTerm,
 }
 
+impl DatasetPreset {
+    /// Preset from its CLI/config/control-plane key.
+    pub fn by_name(name: &str) -> Option<DatasetPreset> {
+        match name {
+            "twitter" => Some(DatasetPreset::TwitterFollowers),
+            "yahoo" => Some(DatasetPreset::YahooWeb),
+            "docterm" => Some(DatasetPreset::TwitterDocTerm),
+            _ => None,
+        }
+    }
+
+    /// The key accepted by [`DatasetPreset::by_name`].
+    pub fn key(&self) -> &'static str {
+        match self {
+            DatasetPreset::TwitterFollowers => "twitter",
+            DatasetPreset::YahooWeb => "yahoo",
+            DatasetPreset::TwitterDocTerm => "docterm",
+        }
+    }
+}
+
 /// A concrete generation spec derived from a preset and scale.
 #[derive(Clone, Copy, Debug)]
 pub struct DatasetSpec {

@@ -25,6 +25,7 @@ pub mod allreduce;
 pub mod apps;
 pub mod bench;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod fault;

@@ -3,13 +3,17 @@
 use anyhow::{bail, Result};
 use sparse_allreduce::apps::diameter::{estimate_diameter, DiameterConfig};
 use sparse_allreduce::apps::sgd::{NativeGradEngine, SgdConfig, SynthData, Trainer};
-use sparse_allreduce::cli::{Args, USAGE};
-use sparse_allreduce::config::RunConfig;
-use sparse_allreduce::coordinator::run_pagerank_config;
+use sparse_allreduce::cli::{usage_for, Args, USAGE};
+use sparse_allreduce::cluster::{self, LaunchOpts, WorkerOpts};
+use sparse_allreduce::config::{validate_world, RunConfig};
+use sparse_allreduce::coordinator::{
+    run_pagerank_config, run_pagerank_distributed, run_pagerank_lockstep, ExecMode, PageRankRun,
+};
 use sparse_allreduce::graph::{DatasetPreset, DatasetSpec};
 use sparse_allreduce::runtime::{Runtime, XlaGradEngine};
 use sparse_allreduce::topology::{plan_degrees, PlannerParams};
 use sparse_allreduce::util::{human_bytes, human_duration, logging};
+use std::path::PathBuf;
 
 fn main() {
     logging::init();
@@ -28,34 +32,41 @@ fn main() {
 
 fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand.as_str() {
-        "" | "help" | "--help" => {
-            println!("{USAGE}");
-            Ok(())
-        }
-        "info" => cmd_info(),
+        "" | "help" | "--help" => cmd_help(args),
+        "info" => cmd_info(args),
         "plan" => cmd_plan(args),
         "pagerank" => cmd_pagerank(args),
         "diameter" => cmd_diameter(args),
         "train" => cmd_train(args),
+        "worker" => cmd_worker(args),
+        "launch" => cmd_launch(args),
         "config-check" => cmd_config_check(args),
         other => bail!("unknown command `{other}`\n\n{USAGE}"),
     }
 }
 
+fn cmd_help(args: &Args) -> Result<()> {
+    match args.positional(0) {
+        None => println!("{USAGE}"),
+        Some(topic) => match usage_for(topic) {
+            Some(text) => println!("{text}"),
+            None => bail!("no such command `{topic}`\n\n{USAGE}"),
+        },
+    }
+    Ok(())
+}
+
 fn dataset_from(args: &Args) -> Result<DatasetSpec> {
     let name = args.flag("dataset").unwrap_or("twitter");
-    let preset = match name {
-        "twitter" => DatasetPreset::TwitterFollowers,
-        "yahoo" => DatasetPreset::YahooWeb,
-        "docterm" => DatasetPreset::TwitterDocTerm,
-        other => bail!("unknown dataset `{other}`"),
-    };
+    let preset = DatasetPreset::by_name(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset `{name}` (twitter|yahoo|docterm)"))?;
     let scale = args.f64_flag("scale", 0.05)?;
     let seed = args.u64_flag("seed", 42)?;
     Ok(DatasetSpec::new(preset, scale, seed))
 }
 
-fn cmd_info() -> Result<()> {
+fn cmd_info(args: &Args) -> Result<()> {
+    args.expect_known("info", &[])?;
     println!("sparse-allreduce {}", env!("CARGO_PKG_VERSION"));
     match Runtime::cpu_default() {
         Ok(rt) => {
@@ -73,6 +84,7 @@ fn cmd_info() -> Result<()> {
 }
 
 fn cmd_plan(args: &Args) -> Result<()> {
+    args.expect_known("plan", &["mbytes", "machines", "floor-mb", "compression"])?;
     let mbytes = args.f64_flag("mbytes", 16.0)?;
     let machines = args.usize_flag("machines", 64)?;
     let floor = args.f64_flag("floor-mb", 2.0)?;
@@ -90,21 +102,66 @@ fn cmd_plan(args: &Args) -> Result<()> {
 }
 
 fn cmd_pagerank(args: &Args) -> Result<()> {
-    let spec = dataset_from(args)?;
+    args.expect_known(
+        "pagerank",
+        &[
+            "mode", "distributed", "dataset", "scale", "degrees", "replication", "iters",
+            "threads", "seed", "bin",
+        ],
+    )?;
+    let mode = if args.has_switch("distributed") {
+        ExecMode::MultiProcess
+    } else {
+        ExecMode::parse(args.flag("mode").unwrap_or("threaded"))?
+    };
+    let replication = args.usize_flag("replication", 1)?;
+    if replication > 1 && mode != ExecMode::MultiProcess {
+        bail!(
+            "--replication only applies to --mode distributed (the in-process \
+             modes run the plain protocol; see `sar help pagerank`)"
+        );
+    }
     let mut cfg = RunConfig {
         degrees: args.degrees_flag("degrees", &[4, 2])?,
+        replication,
         iters: args.usize_flag("iters", 10)?,
         send_threads: args.usize_flag("threads", 8)?,
         seed: args.u64_flag("seed", 42)?,
+        dataset: args.flag("dataset").unwrap_or("twitter").to_string(),
         ..RunConfig::default()
     };
     cfg.scale = args.f64_flag("scale", 0.05)?;
-    log::info!("generating {} (scale {})", spec.name(), cfg.scale);
-    let graph = spec.generate();
-    log::info!("graph: {} vertices, {} edges", graph.vertices, graph.num_edges());
-    let run = run_pagerank_config(&graph, &cfg, 0.0);
+    // ONE source of truth for the graph: distributed workers regenerate
+    // it from cfg's (dataset, scale, seed), so the in-process modes must
+    // derive their spec from the same fields or the advertised
+    // cross-mode checksum equality silently breaks.
+    let preset = DatasetPreset::by_name(&cfg.dataset).ok_or_else(|| {
+        anyhow::anyhow!("unknown dataset `{}` (twitter|yahoo|docterm)", cfg.dataset)
+    })?;
+
+    let run = match mode {
+        ExecMode::MultiProcess => {
+            let bin = args.flag("bin").map(PathBuf::from);
+            run_pagerank_distributed(&cfg, bin.as_deref())?
+        }
+        _ => {
+            let spec = DatasetSpec::new(preset, cfg.scale, cfg.seed);
+            log::info!("generating {} (scale {})", spec.name(), cfg.scale);
+            let graph = spec.generate();
+            log::info!("graph: {} vertices, {} edges", graph.vertices, graph.num_edges());
+            match mode {
+                ExecMode::Lockstep => run_pagerank_lockstep(&graph, &cfg),
+                _ => run_pagerank_config(&graph, &cfg, 0.0),
+            }
+        }
+    };
+    print_pagerank_run(&cfg, mode, &run);
+    Ok(())
+}
+
+fn print_pagerank_run(cfg: &RunConfig, mode: ExecMode, run: &PageRankRun) {
     println!(
-        "pagerank: {} iters on {} machines ({:?}) in {}",
+        "pagerank[{mode:?}]: {} iters on {} machines ({:?}) in {}",
         cfg.iters,
         cfg.machines(),
         cfg.degrees,
@@ -116,10 +173,10 @@ fn cmd_pagerank(args: &Args) -> Result<()> {
         run.comm_fraction() * 100.0,
         run.checksum
     );
-    Ok(())
 }
 
 fn cmd_diameter(args: &Args) -> Result<()> {
+    args.expect_known("diameter", &["dataset", "scale", "degrees", "sketches", "max-h", "seed"])?;
     let spec = dataset_from(args)?;
     let graph = spec.generate();
     let degrees = args.degrees_flag("degrees", &[4, 2])?;
@@ -141,6 +198,10 @@ fn cmd_diameter(args: &Args) -> Result<()> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    args.expect_known(
+        "train",
+        &["features", "classes", "steps", "degrees", "batch", "lr", "feats-per-ex", "native", "seed"],
+    )?;
     let features = args.usize_flag("features", 1 << 20)? as i64;
     let classes = args.usize_flag("classes", 64)?;
     let steps = args.usize_flag("steps", 50)?;
@@ -189,7 +250,115 @@ fn run_train_loop<E: sparse_allreduce::apps::sgd::GradEngine>(t: &mut Trainer<E>
     }
 }
 
+fn cmd_worker(args: &Args) -> Result<()> {
+    args.expect_known("worker", &["coordinator", "listen", "advertise", "heartbeat-ms"])?;
+    let coordinator = args
+        .flag("coordinator")
+        .ok_or_else(|| anyhow::anyhow!("--coordinator required\n\n{}", usage_for("worker").unwrap()))?;
+    let mut opts = WorkerOpts::new(coordinator);
+    if let Some(listen) = args.flag("listen") {
+        opts.listen = listen.to_string();
+    }
+    opts.advertise = args.flag("advertise").map(|s| s.to_string());
+    opts.heartbeat = std::time::Duration::from_millis(args.u64_flag("heartbeat-ms", 100)?.max(1));
+    cluster::run_worker(&opts)
+}
+
+fn cmd_launch(args: &Args) -> Result<()> {
+    args.expect_known(
+        "launch",
+        &[
+            "workers", "degrees", "replication", "iters", "dataset", "scale", "seed", "threads",
+            "bind", "file", "no-spawn", "bin",
+        ],
+    )?;
+    let mut cfg = match args.flag("file") {
+        Some(path) => RunConfig::from_toml(&std::fs::read_to_string(path)?)?,
+        None => RunConfig { degrees: vec![2, 2], ..RunConfig::default() },
+    };
+    cfg.degrees = args.degrees_flag("degrees", &cfg.degrees.clone())?;
+    cfg.replication = args.usize_flag("replication", cfg.replication)?;
+    cfg.iters = args.usize_flag("iters", cfg.iters)?;
+    cfg.send_threads = args.usize_flag("threads", cfg.send_threads)?;
+    cfg.seed = args.u64_flag("seed", cfg.seed)?;
+    cfg.scale = args.f64_flag("scale", cfg.scale)?;
+    if let Some(d) = args.flag("dataset") {
+        if DatasetPreset::by_name(d).is_none() {
+            bail!("unknown dataset `{d}` (twitter|yahoo|docterm)");
+        }
+        cfg.dataset = d.to_string();
+    }
+
+    // CLI overrides may contradict a worker count pinned in the file;
+    // re-validate the final topology, not just the parse-time one.
+    if let Some(w) = cfg.workers {
+        validate_world(&cfg.degrees, cfg.replication, w)?;
+    }
+
+    let mut opts = LaunchOpts::from_run_config(&cfg);
+    if let Some(bind) = args.flag("bind") {
+        opts.bind = bind.to_string();
+    }
+    if let Some(w) = args.flag("workers") {
+        let w: usize = w.parse().map_err(|_| anyhow::anyhow!("--workers expects an integer"))?;
+        validate_world(&opts.degrees, opts.replication, w)?;
+    }
+    let world = opts.world();
+    println!(
+        "launching {world} workers (degrees {:?}, replication {})",
+        opts.degrees, opts.replication
+    );
+
+    let run = if args.has_switch("no-spawn") {
+        let coord = cluster::Coordinator::bind(&opts.bind)?;
+        // Print an address a REMOTE worker can actually dial: for an
+        // all-interfaces bind the operator must substitute this host's
+        // routable name, so say that instead of a loopback rewrite.
+        let raw = coord.local_addr()?;
+        let shown = if raw.ip().is_unspecified() {
+            format!("<this-host>:{}", raw.port())
+        } else {
+            raw.to_string()
+        };
+        println!("waiting for {world} workers; start each with:");
+        println!("  sar worker --coordinator {shown}");
+        let mut session = coord.accept(opts)?;
+        session.barrier_config()?;
+        session.start()?;
+        session.collect()?
+    } else {
+        // (Oversized local forks are rejected inside spawn_workers —
+        // the same cap covers `sar pagerank --distributed`.)
+        let bin = match args.flag("bin") {
+            Some(b) => PathBuf::from(b),
+            None => cluster::sar_binary()?,
+        };
+        cluster::launch_local(&bin, opts)?
+    };
+
+    println!(
+        "launch: {} iters on {} workers ({:?}, replication {}) in {}",
+        cfg.iters,
+        run.world,
+        cfg.degrees,
+        run.replication,
+        human_duration(run.wall_secs)
+    );
+    let pr = sparse_allreduce::coordinator::cluster_pagerank_run(&run);
+    println!(
+        "  config {} | comm fraction {:.0}% | checksum {:.6}",
+        human_duration(run.config_secs),
+        pr.comm_fraction() * 100.0,
+        run.checksum
+    );
+    if !run.dead.is_empty() {
+        println!("  dead workers (masked by replication): {:?}", run.dead);
+    }
+    Ok(())
+}
+
 fn cmd_config_check(args: &Args) -> Result<()> {
+    args.expect_known("config-check", &["file"])?;
     let path = args.flag("file").ok_or_else(|| anyhow::anyhow!("--file required"))?;
     let text = std::fs::read_to_string(path)?;
     let cfg = RunConfig::from_toml(&text)?;

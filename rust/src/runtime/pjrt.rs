@@ -1,0 +1,287 @@
+//! PJRT runtime: load and execute the AOT JAX/Pallas artifacts.
+//!
+//! `make artifacts` runs `python -m compile.aot` ONCE, writing HLO text to
+//! `artifacts/*.hlo.txt`; this module loads the text through the `xla`
+//! crate (`PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `compile` → `execute`). Python never runs on the iteration path — the
+//! Rust binary is self-contained after the artifacts exist.
+//!
+//! [`XlaGradEngine`] adapts the `minibatch_grad` artifact to the trainer's
+//! [`GradEngine`](crate::apps::sgd::GradEngine) interface, handling the
+//! fixed-shape padding (pad rows contribute exactly `ln(C)` loss and zero
+//! gradient, both corrected here).
+
+use super::{AOT_B, AOT_C, AOT_N, AOT_PR_L, AOT_SEG_L};
+use crate::apps::sgd::{DenseBatch, GradEngine};
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// A PJRT CPU client plus the artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifact_dir: PathBuf,
+}
+
+/// One compiled executable.
+pub struct LoadedFn {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at `artifact_dir`.
+    pub fn cpu(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime { client, artifact_dir: artifact_dir.as_ref().to_path_buf() })
+    }
+
+    /// Default artifact dir: `$SAR_ARTIFACTS` or `./artifacts`.
+    pub fn cpu_default() -> Result<Runtime> {
+        let dir = std::env::var("SAR_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::cpu(dir)
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact.
+    pub fn load(&self, file: &str) -> Result<LoadedFn> {
+        let path = self.artifact_dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))
+        .with_context(|| format!("run `make artifacts` first — missing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+        Ok(LoadedFn { exe, name: file.to_string() })
+    }
+}
+
+impl LoadedFn {
+    /// Execute with literal inputs; returns the flattened output tuple.
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+        let first = result
+            .into_iter()
+            .next()
+            .and_then(|d| d.into_iter().next())
+            .ok_or_else(|| anyhow!("no output from {}", self.name))?;
+        let lit = first
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result of {}: {e:?}", self.name))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple {}: {e:?}", self.name))
+    }
+}
+
+/// f32 matrix literal from a flat row-major slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let n: i64 = dims.iter().product();
+    anyhow::ensure!(n as usize == data.len(), "literal shape/data mismatch");
+    xla::Literal::vec1(data).reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// i32 vector literal.
+pub fn literal_i32(data: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+// ---------------------------------------------------------------------------
+// GradEngine over the minibatch_grad artifact
+// ---------------------------------------------------------------------------
+
+/// Executes the AOT `minibatch_grad` artifact for the SGD trainer.
+pub struct XlaGradEngine {
+    f: LoadedFn,
+}
+
+impl XlaGradEngine {
+    pub fn new(rt: &Runtime) -> Result<XlaGradEngine> {
+        Ok(XlaGradEngine { f: rt.load("minibatch_grad.hlo.txt")? })
+    }
+
+    /// Run the artifact on a padded batch. Returns (mean loss over real
+    /// rows, grad rows for the real active features).
+    fn run_padded(
+        &mut self,
+        batch: &DenseBatch,
+        w_sub: &[f32],
+        classes: usize,
+    ) -> Result<(f32, Vec<f32>)> {
+        let n_act = batch.active.len();
+        let bsz = batch.batch_size();
+        anyhow::ensure!(n_act <= AOT_N, "active features {n_act} exceed AOT_N {AOT_N}");
+        anyhow::ensure!(bsz <= AOT_B, "batch {bsz} exceeds AOT_B {AOT_B}");
+        anyhow::ensure!(classes <= AOT_C, "classes {classes} exceed AOT_C {AOT_C}");
+
+        // pad x to [AOT_B, AOT_N]
+        let mut x = vec![0f32; AOT_B * AOT_N];
+        for b in 0..bsz {
+            x[b * AOT_N..b * AOT_N + n_act]
+                .copy_from_slice(&batch.x[b * n_act..(b + 1) * n_act]);
+        }
+        // pad w to [AOT_N, AOT_C]
+        let mut w = vec![0f32; AOT_N * AOT_C];
+        for j in 0..n_act {
+            w[j * AOT_C..j * AOT_C + classes]
+                .copy_from_slice(&w_sub[j * classes..(j + 1) * classes]);
+        }
+        // one-hot labels [AOT_B, AOT_C]; padded rows use class 0 (their
+        // x row is zero → logits zero → loss exactly ln(AOT_C), no grad)
+        let mut y = vec![0f32; AOT_B * AOT_C];
+        for b in 0..AOT_B {
+            let cls = if b < bsz { batch.labels[b] as usize } else { 0 };
+            y[b * AOT_C + cls] = 1.0;
+        }
+
+        let lx = literal_f32(&x, &[AOT_B as i64, AOT_N as i64])?;
+        let lw = literal_f32(&w, &[AOT_N as i64, AOT_C as i64])?;
+        let ly = literal_f32(&y, &[AOT_B as i64, AOT_C as i64])?;
+        let out = self.f.execute(&[lx, lw, ly])?;
+        anyhow::ensure!(out.len() == 2, "expected (loss, grad) tuple");
+        let loss_mean_padded =
+            out[0].to_vec::<f32>().map_err(|e| anyhow!("loss readback: {e:?}"))?[0];
+        let grad_full =
+            out[1].to_vec::<f32>().map_err(|e| anyhow!("grad readback: {e:?}"))?;
+
+        // Padding corrections (see module docs): padded rows contribute
+        // exactly ln(AOT_C) each to the mean loss, and the artifact's grad
+        // is scaled by 1/AOT_B instead of 1/bsz. NOTE: padded CLASS slots
+        // make the softmax run over AOT_C classes — exact when
+        // classes == AOT_C (the production setting); otherwise a
+        // documented approximation guarded by the tests below.
+        let n_pad = (AOT_B - bsz) as f32;
+        let ln_c = (AOT_C as f32).ln();
+        let loss = (loss_mean_padded * AOT_B as f32 - n_pad * ln_c) / bsz as f32;
+        let scale = AOT_B as f32 / bsz as f32;
+        let mut grad = vec![0f32; n_act * classes];
+        for j in 0..n_act {
+            for c in 0..classes {
+                grad[j * classes + c] = grad_full[j * AOT_C + c] * scale;
+            }
+        }
+        Ok((loss, grad))
+    }
+}
+
+impl GradEngine for XlaGradEngine {
+    fn grad(&mut self, batch: &DenseBatch, w_sub: &[f32], classes: usize) -> (f32, Vec<f32>) {
+        self.run_padded(batch, w_sub, classes)
+            .expect("XLA grad step failed (run `make artifacts`?)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::sgd::{DenseBatch, Example, NativeGradEngine, SynthData};
+    use crate::util::Pcg32;
+
+    fn artifacts_available() -> bool {
+        Path::new("artifacts/minibatch_grad.hlo.txt").exists()
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn literal_shape_mismatch_rejected() {
+        assert!(literal_f32(&[1.0, 2.0], &[3, 1]).is_err());
+    }
+
+    #[test]
+    fn pjrt_client_boots() {
+        let rt = Runtime::cpu("artifacts").expect("cpu client");
+        assert!(!rt.platform().is_empty());
+    }
+
+    #[test]
+    fn load_and_run_pagerank_cell() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts missing (run `make artifacts`)");
+            return;
+        }
+        let rt = Runtime::cpu("artifacts").unwrap();
+        let f = rt.load("pagerank_cell.hlo.txt").unwrap();
+        let q = vec![0.5f32; AOT_PR_L];
+        let out = f.execute(&[literal_f32(&q, &[AOT_PR_L as i64]).unwrap()]).unwrap();
+        let p = out[0].to_vec::<f32>().unwrap();
+        let n = AOT_PR_L as f32;
+        let want = 1.0 / n + (n - 1.0) / n * 0.5;
+        assert!(p.iter().all(|&v| (v - want).abs() < 1e-6));
+    }
+
+    #[test]
+    fn load_and_run_segment_sum() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts missing (run `make artifacts`)");
+            return;
+        }
+        let rt = Runtime::cpu("artifacts").unwrap();
+        let f = rt.load("segment_sum.hlo.txt").unwrap();
+        // idx: runs [0,0,1,2,2,2, pad...]; pad with distinct ints
+        let mut idx = vec![0i32; AOT_SEG_L];
+        let mut vals = vec![0f32; AOT_SEG_L];
+        idx[..6].copy_from_slice(&[0, 0, 1, 2, 2, 2]);
+        vals[..6].copy_from_slice(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        for (i, slot) in idx.iter_mut().enumerate().skip(6) {
+            *slot = i as i32 + 100;
+        }
+        let out = f
+            .execute(&[literal_i32(&idx), literal_f32(&vals, &[AOT_SEG_L as i64]).unwrap()])
+            .unwrap();
+        let o = out[0].to_vec::<f32>().unwrap();
+        assert_eq!(&o[..6], &[3.0, 0.0, 3.0, 15.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn xla_grad_engine_matches_native() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts missing (run `make artifacts`)");
+            return;
+        }
+        let rt = Runtime::cpu("artifacts").unwrap();
+        let mut xla_engine = XlaGradEngine::new(&rt).unwrap();
+        let mut native = NativeGradEngine;
+
+        let mut rng = Pcg32::new(17);
+        let data = SynthData::new(5000, AOT_C, 12, 1.1);
+        let exs: Vec<Example> = data.batch(&mut rng, 64);
+        let batch = DenseBatch::from_examples(&exs);
+        let n = batch.active.len();
+        assert!(n <= AOT_N);
+        let w: Vec<f32> = (0..n * AOT_C).map(|_| rng.next_f32() * 0.2 - 0.1).collect();
+
+        let (loss_x, grad_x) = GradEngine::grad(&mut xla_engine, &batch, &w, AOT_C);
+        let (loss_n, grad_n) = native.grad(&batch, &w, AOT_C);
+        assert!(
+            (loss_x - loss_n).abs() < 1e-3 * (1.0 + loss_n.abs()),
+            "loss: xla {loss_x} native {loss_n}"
+        );
+        assert_eq!(grad_x.len(), grad_n.len());
+        for (i, (a, b)) in grad_x.iter().zip(&grad_n).enumerate() {
+            assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "grad[{i}]: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clear_error() {
+        let rt = Runtime::cpu("artifacts").unwrap();
+        let err = match rt.load("nonexistent.hlo.txt") {
+            Err(e) => e,
+            Ok(_) => panic!("expected load failure"),
+        };
+        let msg = format!("{err:#}");
+        assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+    }
+}

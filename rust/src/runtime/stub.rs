@@ -1,0 +1,72 @@
+//! Offline stand-in for the PJRT runtime (compiled without `--features
+//! xla`). Constructors fail with a descriptive error instead of linking
+//! the `xla` crate; the types can never be instantiated, so the method
+//! bodies on `&self` are unreachable.
+
+use crate::apps::sgd::{DenseBatch, GradEngine};
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// Unavailable PJRT client (build with `--features xla` for the real one).
+pub struct Runtime {
+    _unconstructible: std::convert::Infallible,
+}
+
+/// Unavailable compiled executable.
+pub struct LoadedFn {
+    _unconstructible: std::convert::Infallible,
+}
+
+impl Runtime {
+    pub fn cpu(_artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        bail!(
+            "PJRT runtime unavailable: this binary was built without the \
+             `xla` feature. Enabling it needs the external `xla` crate: add \
+             it to rust/Cargo.toml [dependencies] (e.g. from a vendor set), \
+             then `cargo build --features xla` — or use the pure-Rust \
+             engines (`sar train --native`)"
+        )
+    }
+
+    pub fn cpu_default() -> Result<Runtime> {
+        let dir = std::env::var("SAR_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::cpu(dir)
+    }
+
+    pub fn platform(&self) -> String {
+        match self._unconstructible {}
+    }
+
+    pub fn load(&self, _file: &str) -> Result<LoadedFn> {
+        match self._unconstructible {}
+    }
+}
+
+/// Unavailable XLA gradient engine; `sar train --native` and
+/// [`crate::apps::sgd::NativeGradEngine`] cover the stub build.
+pub struct XlaGradEngine {
+    _unconstructible: std::convert::Infallible,
+}
+
+impl XlaGradEngine {
+    pub fn new(_rt: &Runtime) -> Result<XlaGradEngine> {
+        bail!("XlaGradEngine unavailable: built without the `xla` feature")
+    }
+}
+
+impl GradEngine for XlaGradEngine {
+    fn grad(&mut self, _batch: &DenseBatch, _w_sub: &[f32], _classes: usize) -> (f32, Vec<f32>) {
+        match self._unconstructible {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_constructors_fail_with_guidance() {
+        let err = Runtime::cpu_default().err().expect("stub must not construct");
+        assert!(format!("{err}").contains("xla"), "unhelpful error: {err}");
+    }
+}

@@ -26,7 +26,7 @@ pub mod wire;
 pub use delay::DelayTransport;
 pub use mem::MemTransport;
 pub use pool::SenderPool;
-pub use tcp::TcpNet;
+pub use tcp::{advertised_addr, connect_with_retry, RetryPolicy, TcpNet};
 
 use crate::allreduce::Phase;
 use crate::topology::NodeId;
@@ -73,14 +73,36 @@ pub struct Envelope {
 }
 
 /// Transport errors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum TransportError {
-    #[error("receive timed out after {0:?}")]
     Timeout(Duration),
-    #[error("node {0} is shut down")]
     Closed(NodeId),
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::Timeout(d) => write!(f, "receive timed out after {d:?}"),
+            TransportError::Closed(n) => write!(f, "node {n} is shut down"),
+            TransportError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            TransportError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for TransportError {
+    fn from(e: std::io::Error) -> Self {
+        TransportError::Io(e)
+    }
 }
 
 /// Cluster message fabric: every node can send to and receive from every

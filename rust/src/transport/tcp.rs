@@ -1,57 +1,172 @@
 //! TCP socket transport (the paper's Java-sockets analog, §IV-D).
 //!
-//! Each node binds a listener (loopback by default); a background acceptor
-//! thread spawns one reader thread per inbound connection which decodes
-//! frames (see [`super::wire`]) into the node's inbox. Outbound
-//! connections are cached per (src, dst) pair and guarded by a mutex so
-//! multiple sender threads can share the fabric.
+//! Each *local* node binds a listener; a background acceptor thread
+//! spawns one reader thread per inbound connection which decodes frames
+//! (see [`super::wire`]) into the node's inbox. Outbound connections are
+//! cached per (src, dst) pair and guarded by a mutex so multiple sender
+//! threads can share the fabric.
+//!
+//! Two deployment shapes share this type:
+//!
+//! * [`TcpNet::local`] — all `m` endpoints hosted in this process on
+//!   ephemeral loopback ports (tests, single-host benches).
+//! * [`TcpNet::from_addrs`] — this process hosts exactly one node of a
+//!   multi-process cluster and reaches peers through an explicit
+//!   `NodeId → SocketAddr` map distributed by the `cluster` control
+//!   plane. Because workers race through bring-up, outbound connects
+//!   retry with capped exponential backoff ([`RetryPolicy`]); a peer
+//!   that exhausts every attempt is remembered as dead so later sends
+//!   fail fast instead of re-paying the backoff (the replicated driver
+//!   ignores those errors and lets packet racing cover the loss,
+//!   paper §V).
 
 use super::wire::{decode_header, encode_header, HEADER_BYTES};
 use super::{Envelope, Transport, TransportError};
 use crate::topology::NodeId;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-/// A TCP fabric hosting all `m` node endpoints in this process (multi-host
-/// deployments construct one `TcpNet` per host with the full address map).
+/// Capped exponential backoff for outbound connects during cluster
+/// bring-up (workers start in arbitrary order, so the first connect to a
+/// peer routinely races its listener).
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Total connect attempts (≥ 1).
+    pub attempts: u32,
+    /// Delay after the first failed attempt.
+    pub initial: Duration,
+    /// Backoff cap: delay doubles per attempt up to this bound.
+    pub max: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        // 20ms, 40, 80, …, capped at 1s: ~4.5s of patience overall.
+        Self { attempts: 10, initial: Duration::from_millis(20), max: Duration::from_secs(1) }
+    }
+}
+
+impl RetryPolicy {
+    /// A single attempt, no waiting (the seed's old behavior).
+    pub fn none() -> Self {
+        Self { attempts: 1, initial: Duration::ZERO, max: Duration::ZERO }
+    }
+}
+
+/// Connect to `addr`, retrying per `retry`. Used for both the data plane
+/// and the `cluster` control plane.
+pub fn connect_with_retry(addr: &SocketAddr, retry: &RetryPolicy) -> std::io::Result<TcpStream> {
+    let mut delay = retry.initial;
+    let mut last_err = None;
+    for attempt in 0..retry.attempts.max(1) {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => last_err = Some(e),
+        }
+        if attempt + 1 < retry.attempts {
+            std::thread::sleep(delay);
+            delay = (delay * 2).min(retry.max);
+        }
+    }
+    Err(last_err.unwrap_or_else(|| {
+        std::io::Error::new(std::io::ErrorKind::Other, "no connect attempts made")
+    }))
+}
+
+/// The address a *same-host* peer should dial to reach `listener`: its
+/// local address, with an unspecified IP (a `0.0.0.0` / `::` bind)
+/// rewritten to the loopback of the same family. ONLY valid for
+/// same-host dialing — a worker advertising itself across hosts must
+/// use an explicit routable `--advertise` instead (the cluster worker
+/// refuses to derive one from an unspecified bind).
+pub fn advertised_addr(listener: &TcpListener) -> std::io::Result<SocketAddr> {
+    let mut addr = listener.local_addr()?;
+    if addr.ip().is_unspecified() {
+        let loopback = match addr.ip() {
+            std::net::IpAddr::V4(_) => std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
+            std::net::IpAddr::V6(_) => std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST),
+        };
+        addr.set_ip(loopback);
+    }
+    Ok(addr)
+}
+
+/// A TCP fabric: the full `NodeId → SocketAddr` map plus inboxes for the
+/// locally-hosted node(s).
 pub struct TcpNet {
     addrs: Vec<SocketAddr>,
-    inbox_rx: Vec<Mutex<Receiver<Envelope>>>,
+    /// Inbox per node; `None` for nodes hosted by other processes.
+    inbox_rx: Vec<Option<Mutex<Receiver<Envelope>>>>,
     // One mutex per (src, dst) connection: frames must not interleave when
     // several sender threads share a link.
     conns: Mutex<HashMap<(NodeId, NodeId), Arc<Mutex<TcpStream>>>>,
+    /// Peers that exhausted every connect attempt: fail fast afterwards.
+    dead: Mutex<HashSet<NodeId>>,
+    retry: RetryPolicy,
     _listeners: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl TcpNet {
     /// Bind `m` listeners on ephemeral loopback ports and start acceptor
-    /// threads.
+    /// threads (all nodes hosted in this process).
     pub fn local(machines: usize) -> std::io::Result<Arc<Self>> {
-        let mut addrs = Vec::with_capacity(machines);
         let mut listeners = Vec::with_capacity(machines);
-        let mut inbox_tx: Vec<Sender<Envelope>> = Vec::with_capacity(machines);
-        let mut inbox_rx = Vec::with_capacity(machines);
-        for _ in 0..machines {
+        let mut addrs = Vec::with_capacity(machines);
+        for node in 0..machines {
             let l = TcpListener::bind("127.0.0.1:0")?;
             addrs.push(l.local_addr()?);
-            listeners.push(l);
-            let (tx, rx) = channel();
-            inbox_tx.push(tx);
-            inbox_rx.push(Mutex::new(rx));
+            listeners.push((node, l));
         }
-        let mut handles = Vec::with_capacity(machines);
-        for (l, tx) in listeners.into_iter().zip(inbox_tx) {
-            let tx = tx.clone();
+        Self::build(addrs, listeners, RetryPolicy::none())
+    }
+
+    /// Host exactly node `local` of a multi-process cluster: `listener`
+    /// is this worker's already-bound data socket (so its address could
+    /// be advertised to the control plane *before* the full map existed)
+    /// and `addrs[i]` is where node `i` listens.
+    pub fn from_addrs(
+        local: NodeId,
+        listener: TcpListener,
+        addrs: Vec<SocketAddr>,
+    ) -> std::io::Result<Arc<Self>> {
+        Self::from_addrs_with_retry(local, listener, addrs, RetryPolicy::default())
+    }
+
+    /// [`TcpNet::from_addrs`] with an explicit connect-retry policy
+    /// (tests shrink the backoff; impatient deployments can too).
+    pub fn from_addrs_with_retry(
+        local: NodeId,
+        listener: TcpListener,
+        addrs: Vec<SocketAddr>,
+        retry: RetryPolicy,
+    ) -> std::io::Result<Arc<Self>> {
+        assert!(local < addrs.len(), "local node {local} outside address map");
+        Self::build(addrs, vec![(local, listener)], retry)
+    }
+
+    fn build(
+        addrs: Vec<SocketAddr>,
+        listeners: Vec<(NodeId, TcpListener)>,
+        retry: RetryPolicy,
+    ) -> std::io::Result<Arc<Self>> {
+        let mut inbox_rx: Vec<Option<Mutex<Receiver<Envelope>>>> =
+            (0..addrs.len()).map(|_| None).collect();
+        let mut handles = Vec::with_capacity(listeners.len());
+        for (node, l) in listeners {
+            let (tx, rx) = channel();
+            inbox_rx[node] = Some(Mutex::new(rx));
             handles.push(std::thread::spawn(move || Self::acceptor_loop(l, tx)));
         }
         Ok(Arc::new(Self {
             addrs,
             inbox_rx,
             conns: Mutex::new(HashMap::new()),
+            dead: Mutex::new(HashSet::new()),
+            retry,
             _listeners: handles,
         }))
     }
@@ -88,19 +203,43 @@ impl TcpNet {
         src: NodeId,
         dst: NodeId,
     ) -> Result<Arc<Mutex<TcpStream>>, TransportError> {
-        let mut conns = self.conns.lock().expect("conn cache poisoned");
-        if let Some(s) = conns.get(&(src, dst)) {
+        if let Some(s) = self.conns.lock().expect("conn cache poisoned").get(&(src, dst)) {
             return Ok(s.clone());
         }
-        let stream = TcpStream::connect(self.addrs[dst])?;
+        // Dial WITHOUT holding the cache lock: the retry backoff can
+        // last seconds and must not stall sends on unrelated links. Two
+        // threads may race the same dial; the loser's stream is dropped
+        // below (harmless: no frames were written on it).
+        let stream = match connect_with_retry(&self.addrs[dst], &self.retry) {
+            Ok(s) => s,
+            Err(e) => {
+                // Only a peer that survived a REAL backoff schedule is
+                // presumed dead; under a single-attempt policy (the
+                // in-process `local()` fabric) a lone ECONNREFUSED is a
+                // transient — surface the error and let the next send
+                // re-dial, as the pre-retry transport did.
+                if self.retry.attempts > 1 {
+                    self.dead.lock().expect("dead set poisoned").insert(dst);
+                }
+                return Err(TransportError::Io(e));
+            }
+        };
         stream.set_nodelay(true)?;
-        let link = Arc::new(Mutex::new(stream));
-        conns.insert((src, dst), link.clone());
+        let mut conns = self.conns.lock().expect("conn cache poisoned");
+        let link = conns
+            .entry((src, dst))
+            .or_insert_with(|| Arc::new(Mutex::new(stream)))
+            .clone();
         Ok(link)
     }
 
     pub fn addr(&self, node: NodeId) -> SocketAddr {
         self.addrs[node]
+    }
+
+    /// Whether `node` exhausted every connect attempt at some point.
+    pub fn is_dead(&self, node: NodeId) -> bool {
+        self.dead.lock().expect("dead set poisoned").contains(&node)
     }
 }
 
@@ -113,6 +252,9 @@ impl Transport for TcpNet {
         if dst >= self.addrs.len() {
             return Err(TransportError::Closed(dst));
         }
+        if self.is_dead(dst) {
+            return Err(TransportError::Closed(dst));
+        }
         let link = self.connection(env.src, dst)?;
         let header = encode_header(env.src, env.tag, env.payload.len());
         let mut buf = Vec::with_capacity(HEADER_BYTES + env.payload.len());
@@ -121,12 +263,23 @@ impl Transport for TcpNet {
         // Hold the link lock across the whole frame so frames from
         // concurrent sender threads never interleave.
         let mut stream = link.lock().expect("link poisoned");
-        stream.write_all(&buf)?;
+        if let Err(e) = stream.write_all(&buf) {
+            // A broken link (peer died mid-run) must not poison the
+            // cache: evict so the next send re-dials (and marks the peer
+            // dead if the listener is really gone).
+            drop(stream);
+            self.conns.lock().expect("conn cache poisoned").remove(&(env.src, dst));
+            return Err(TransportError::Io(e));
+        }
         Ok(())
     }
 
     fn recv(&self, node: NodeId, timeout: Duration) -> Result<Envelope, TransportError> {
-        let rx = self.inbox_rx.get(node).ok_or(TransportError::Closed(node))?;
+        let rx = self
+            .inbox_rx
+            .get(node)
+            .and_then(|o| o.as_ref())
+            .ok_or(TransportError::Closed(node))?;
         let rx = rx.lock().expect("inbox poisoned");
         rx.recv_timeout(timeout).map_err(|e| match e {
             RecvTimeoutError::Timeout => TransportError::Timeout(timeout),
@@ -215,5 +368,90 @@ mod tests {
             let e = net.recv(1, Duration::from_secs(2)).unwrap();
             assert_eq!(e.payload.len(), 128);
         }
+    }
+
+    /// Two `TcpNet` instances sharing one address map — exactly the
+    /// multi-process shape, in one process for testability.
+    #[test]
+    fn from_addrs_pair_talks_both_ways() {
+        let l0 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let l1 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addrs = vec![l0.local_addr().unwrap(), l1.local_addr().unwrap()];
+        let a = TcpNet::from_addrs(0, l0, addrs.clone()).unwrap();
+        let b = TcpNet::from_addrs(1, l1, addrs).unwrap();
+
+        let tag = Tag::new(1, Phase::ReduceDown, 0);
+        a.send(1, Envelope { src: 0, tag, payload: vec![1, 2] }).unwrap();
+        let got = b.recv(1, Duration::from_secs(2)).unwrap();
+        assert_eq!((got.src, got.payload), (0, vec![1, 2]));
+
+        b.send(0, Envelope { src: 1, tag, payload: vec![3] }).unwrap();
+        let got = a.recv(0, Duration::from_secs(2)).unwrap();
+        assert_eq!((got.src, got.payload), (1, vec![3]));
+
+        // receiving for a non-local node is a Closed error, not a hang
+        assert!(matches!(a.recv(1, Duration::from_millis(10)), Err(TransportError::Closed(1))));
+    }
+
+    /// Bring-up race: the peer's listener appears *after* the first send.
+    #[test]
+    fn connect_retries_until_listener_appears() {
+        // Reserve a port, free it, and re-bind it shortly after the
+        // sender has started dialing. The window is kept to tens of
+        // milliseconds (fast retry policy) to shrink the reuse race.
+        let placeholder = TcpListener::bind("127.0.0.1:0").unwrap();
+        let late_addr = placeholder.local_addr().unwrap();
+        drop(placeholder);
+
+        let retry = RetryPolicy {
+            attempts: 60,
+            initial: Duration::from_millis(5),
+            max: Duration::from_millis(20),
+        };
+        let l0 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addrs = vec![l0.local_addr().unwrap(), late_addr];
+        let a = TcpNet::from_addrs_with_retry(0, l0, addrs.clone(), retry).unwrap();
+
+        let binder = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(60));
+            let l1 = TcpListener::bind(late_addr).unwrap();
+            let b = TcpNet::from_addrs(1, l1, addrs).unwrap();
+            b.recv(1, Duration::from_secs(5)).unwrap()
+        });
+
+        let tag = Tag::new(9, Phase::ReduceUp, 2);
+        a.send(1, Envelope { src: 0, tag, payload: vec![42] }).unwrap();
+        let got = binder.join().unwrap();
+        assert_eq!((got.src, got.tag, got.payload), (0, tag, vec![42]));
+    }
+
+    /// A peer that never appears fails after the attempts cap — and
+    /// fails *fast* on subsequent sends.
+    #[test]
+    fn dead_peer_fails_fast_after_retry_exhaustion() {
+        let reserved = TcpListener::bind("127.0.0.1:0").unwrap();
+        let dead_addr = reserved.local_addr().unwrap();
+        drop(reserved);
+
+        let retry = RetryPolicy {
+            attempts: 3,
+            initial: Duration::from_millis(5),
+            max: Duration::from_millis(20),
+        };
+        let l0 = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addrs = vec![l0.local_addr().unwrap(), dead_addr];
+        let a = TcpNet::from_addrs_with_retry(0, l0, addrs, retry).unwrap();
+        let tag = Tag::new(0, Phase::ReduceDown, 0);
+        assert!(a.send(1, Envelope { src: 0, tag, payload: vec![] }).is_err());
+        let t1 = std::time::Instant::now();
+        assert!(matches!(
+            a.send(1, Envelope { src: 0, tag, payload: vec![] }),
+            Err(TransportError::Closed(1))
+        ));
+        assert!(a.is_dead(1));
+        assert!(
+            t1.elapsed() < Duration::from_millis(50),
+            "second send should skip the backoff entirely"
+        );
     }
 }

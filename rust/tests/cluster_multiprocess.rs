@@ -1,0 +1,162 @@
+//! Multi-process deployment-plane tests: wire framing across real
+//! sockets, `spawn_local` end-to-end equality against the lockstep
+//! oracle, and §V replica failover with a worker killed mid-run.
+//!
+//! The process-spawning tests locate the `sar` binary through
+//! `CARGO_BIN_EXE_sar` (cargo builds it for integration tests) and are
+//! tagged `mp_` so CI can gate them into a tier-2 job with
+//! `cargo test --test cluster_multiprocess mp_`.
+
+use sparse_allreduce::allreduce::Phase;
+use sparse_allreduce::apps::pagerank::{DistPageRank, PageRankConfig};
+use sparse_allreduce::cluster::{launch_local, spawn_session, LaunchOpts};
+use sparse_allreduce::graph::{DatasetPreset, DatasetSpec};
+use sparse_allreduce::transport::wire::{decode_header, encode_header, HEADER_BYTES};
+use sparse_allreduce::transport::Tag;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::Path;
+use std::time::Duration;
+
+fn sar_bin() -> &'static Path {
+    Path::new(env!("CARGO_BIN_EXE_sar"))
+}
+
+/// Satellite: wire framing round-trips across a real socket pair,
+/// including an empty payload and back-to-back frames.
+#[test]
+fn wire_framing_roundtrips_over_a_socket_pair() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    let server = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        let mut frames = Vec::new();
+        for _ in 0..3 {
+            let mut header = [0u8; HEADER_BYTES];
+            s.read_exact(&mut header).unwrap();
+            let (src, tag, len) = decode_header(&header);
+            let mut payload = vec![0u8; len];
+            s.read_exact(&mut payload).unwrap();
+            frames.push((src, tag, payload));
+        }
+        frames
+    });
+
+    let mut client = TcpStream::connect(addr).unwrap();
+    let sent = [
+        (7usize, Tag::new(1, Phase::ConfigDown, 0), vec![1u8, 2, 3]),
+        (0usize, Tag::new(2, Phase::ReduceDown, 5), Vec::new()),
+        (63usize, Tag::new(u32::MAX, Phase::ReduceUp, 9), vec![0xAB; 4096]),
+    ];
+    for (src, tag, payload) in &sent {
+        client.write_all(&encode_header(*src, *tag, payload.len())).unwrap();
+        client.write_all(payload).unwrap();
+    }
+    client.flush().unwrap();
+
+    let got = server.join().unwrap();
+    for ((src, tag, payload), (gsrc, gtag, gpayload)) in sent.iter().zip(&got) {
+        assert_eq!(src, gsrc);
+        assert_eq!(tag, gtag);
+        assert_eq!(payload, gpayload);
+    }
+}
+
+fn tiny_opts() -> LaunchOpts {
+    LaunchOpts {
+        degrees: vec![2, 2],
+        replication: 1,
+        iters: 5,
+        dataset: "twitter".to_string(),
+        scale: 0.002,
+        seed: 42,
+        send_threads: 2,
+        heartbeat_timeout: Duration::from_secs(2),
+        data_timeout: Duration::from_secs(15),
+        phase_deadline: Duration::from_secs(60),
+        ..LaunchOpts::default()
+    }
+}
+
+/// Lockstep-oracle checksum for the same graph/partition an opts-driven
+/// cluster run works on.
+fn reference_checksum(opts: &LaunchOpts) -> f64 {
+    let preset = DatasetPreset::by_name(&opts.dataset).unwrap();
+    let graph = DatasetSpec::new(preset, opts.scale, opts.seed).generate();
+    let mut dist = DistPageRank::new(
+        &graph,
+        opts.degrees.clone(),
+        &PageRankConfig { seed: opts.seed, iters: opts.iters },
+    );
+    dist.run(opts.iters);
+    dist.checksum()
+}
+
+/// Acceptance: 4 OS processes over TCP run config + 5 reduce iterations
+/// and land on the lockstep oracle's checksum.
+#[test]
+fn mp_spawn_local_4_matches_local_cluster() {
+    let opts = tiny_opts();
+    let want = reference_checksum(&opts);
+    let run = launch_local(sar_bin(), opts).expect("distributed run failed");
+    assert_eq!(run.world, 4);
+    assert_eq!(run.dead, Vec::<usize>::new());
+    assert_eq!(run.per_node.iter().filter(|m| m.is_some()).count(), 4);
+    for m in run.per_node.iter().flatten() {
+        assert_eq!(m.iters.len(), 5, "every worker must run 5 iterations");
+    }
+    assert!(
+        (run.checksum - want).abs() < 1e-9,
+        "multi-process checksum {} != lockstep {}",
+        run.checksum,
+        want
+    );
+    assert!(run.wall_secs > 0.0 && run.config_secs > 0.0);
+}
+
+/// Acceptance: killing one worker mid-run (after the config barrier,
+/// before START) completes via §V replica failover instead of hanging,
+/// with the checksum still matching the oracle.
+#[test]
+fn mp_killing_one_replica_fails_over() {
+    let opts = LaunchOpts { replication: 2, ..tiny_opts() };
+    let want = reference_checksum(&opts);
+    assert_eq!(opts.world(), 8);
+
+    let (mut session, mut procs) = spawn_session(sar_bin(), opts).expect("bring-up failed");
+    session.barrier_config().expect("config barrier failed");
+    // Fail-stop one worker process. Node ids are assigned by JOIN
+    // arrival order, so process #5's node id is arbitrary — but with
+    // r=2 every logical node has two replicas, so killing any single
+    // worker must be masked by its partner.
+    procs.kill(5).expect("kill worker process 5");
+    session.start().expect("start failed");
+    let run = session.collect().expect("run should fail over, not hang");
+    procs.wait_all();
+
+    assert!(!run.dead.is_empty(), "coordinator must notice the kill");
+    assert!(
+        (run.checksum - want).abs() < 1e-9,
+        "failover checksum {} != lockstep {}",
+        run.checksum,
+        want
+    );
+    // The dead worker reported nothing; collect() needs at least one
+    // report per logical node (4 logical nodes here).
+    for &d in &run.dead {
+        assert!(run.per_node[d].is_none(), "dead worker {d} cannot have reported");
+    }
+    assert!(run.per_node.iter().filter(|m| m.is_some()).count() >= 4);
+}
+
+/// Bring-up validation: a worker count that contradicts the degree
+/// schedule is rejected up front with a readable error (satellite:
+/// config/schema validation), not deep in the protocol.
+#[test]
+fn mismatched_world_is_rejected_before_spawning() {
+    let opts = LaunchOpts { degrees: vec![3], replication: 0, ..tiny_opts() };
+    let err = launch_local(sar_bin(), opts).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("replication"), "unreadable error: {msg}");
+}

@@ -115,8 +115,11 @@ impl<T: Transport + 'static> NodeHandle<T> {
             let outgoing: Vec<Vec<u8>> =
                 parts.iter().map(wire::encode_config_part).collect();
             let got = self.exchange(Phase::ConfigDown, layer, outgoing, own)?;
-            let decoded: Vec<ConfigPart> =
-                got.iter().map(|b| wire::decode_config_part(b)).collect();
+            let decoded: Vec<ConfigPart> = got
+                .iter()
+                .map(|b| wire::decode_config_part(b))
+                .collect::<std::io::Result<_>>()
+                .map_err(TransportError::Io)?;
             self.proto.config_absorb(layer, &decoded);
         }
         Ok(())
@@ -136,8 +139,11 @@ impl<T: Transport + 'static> NodeHandle<T> {
             let outgoing: Vec<Vec<u8>> =
                 segs.iter().map(|s| wire::encode_values::<R>(s)).collect();
             let got = self.exchange(Phase::ReduceDown, layer, outgoing, own)?;
-            let decoded: Vec<Vec<R::T>> =
-                got.iter().map(|b| wire::decode_values::<R>(b)).collect();
+            let decoded: Vec<Vec<R::T>> = got
+                .iter()
+                .map(|b| wire::decode_values::<R>(b))
+                .collect::<std::io::Result<_>>()
+                .map_err(TransportError::Io)?;
             let refs: Vec<&[R::T]> = decoded.iter().map(|v| v.as_slice()).collect();
             current = self.proto.reduce_down_absorb::<R>(layer, &refs);
         }
@@ -151,8 +157,11 @@ impl<T: Transport + 'static> NodeHandle<T> {
             let outgoing: Vec<Vec<u8>> =
                 segs.iter().map(|s| wire::encode_values::<R>(s)).collect();
             let got = self.exchange(Phase::ReduceUp, layer, outgoing, own)?;
-            let decoded: Vec<Vec<R::T>> =
-                got.iter().map(|b| wire::decode_values::<R>(b)).collect();
+            let decoded: Vec<Vec<R::T>> = got
+                .iter()
+                .map(|b| wire::decode_values::<R>(b))
+                .collect::<std::io::Result<_>>()
+                .map_err(TransportError::Io)?;
             current = self.proto.reduce_up_absorb::<R>(layer, &decoded);
         }
         Ok(current)

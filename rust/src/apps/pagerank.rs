@@ -58,7 +58,7 @@ pub struct PageRankShards {
 
 impl PageRankShards {
     pub fn build(graph: &EdgeList, machines: usize, seed: u64) -> PageRankShards {
-        let hasher = IndexHasher::new(graph.vertices as u64, seed ^ 0x5EED);
+        let hasher = IndexHasher::pagerank(graph.vertices as u64, seed);
         let permuted = graph.permute(|v| hasher.hash(v));
         let outdeg = permuted.out_degrees();
         let shards_edges = random_edge_partition(&permuted.edges, machines, seed);
@@ -119,6 +119,46 @@ impl DistPageRank {
             iter_traces: Vec::new(),
             iters_done: 0,
         }
+    }
+
+    /// Lockstep driver over pre-built shard CSRs — e.g. streamed from a
+    /// `sar shard` directory ([`crate::graph::load_all_shards`]) — so the
+    /// lockstep oracle can anchor the cross-mode determinism checksum for
+    /// on-disk shard sets too. `hasher` must be the permutation the
+    /// shards were written under ([`IndexHasher::pagerank`]) for
+    /// [`DistPageRank::score_of`] lookups to resolve.
+    pub fn from_shards(
+        shards: Vec<Csr>,
+        vertices: i64,
+        degrees: Vec<usize>,
+        hasher: IndexHasher,
+    ) -> anyhow::Result<DistPageRank> {
+        let m: usize = degrees.iter().product();
+        if shards.len() != m {
+            anyhow::bail!(
+                "degree schedule {degrees:?} covers {m} machines but {} shards were given",
+                shards.len()
+            );
+        }
+        let topo = Butterfly::new(degrees, vertices);
+        let mut cluster = LocalCluster::new(topo);
+        let outbound: Vec<IndexSet> =
+            shards.iter().map(|s| IndexSet::from_sorted(s.row_globals.clone())).collect();
+        let inbound: Vec<IndexSet> =
+            shards.iter().map(|s| IndexSet::from_sorted(s.col_globals.clone())).collect();
+        let config_trace = cluster.config(outbound, inbound);
+        let teleport = 1.0f32 / vertices as f32;
+        let p_local: Vec<Vec<f32>> = shards.iter().map(|s| vec![teleport; s.cols()]).collect();
+        Ok(DistPageRank {
+            shards,
+            cluster,
+            p_local,
+            n: vertices,
+            hasher,
+            config_trace,
+            iter_traces: Vec::new(),
+            iters_done: 0,
+        })
     }
 
     pub fn machines(&self) -> usize {
@@ -242,6 +282,25 @@ mod tests {
     #[test]
     fn single_machine_degenerate() {
         check_dist_matches_serial(vec![1], 3, 17);
+    }
+
+    #[test]
+    fn from_shards_matches_new_bit_exactly() {
+        let g = small_graph(29);
+        let iters = 4;
+        let mut a = DistPageRank::new(&g, vec![2, 2], &PageRankConfig { seed: 29, iters });
+        a.run(iters);
+        let built = PageRankShards::build(&g, 4, 29);
+        let mut b =
+            DistPageRank::from_shards(built.shards, g.vertices, vec![2, 2], built.hasher)
+                .unwrap();
+        b.run(iters);
+        assert_eq!(a.checksum(), b.checksum(), "same shards must give the same checksum");
+        assert!(
+            DistPageRank::from_shards(Vec::new(), 10, vec![2, 2], IndexHasher::pagerank(10, 1))
+                .is_err(),
+            "shard count must match the degree schedule"
+        );
     }
 
     #[test]

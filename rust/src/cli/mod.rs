@@ -135,6 +135,7 @@ USAGE: sar <command> [flags]
 COMMANDS:
   info          show build/runtime info (PJRT platform, artifacts)
   plan          pick a butterfly degree schedule (paper §IV-B)
+  shard         partition a dataset into on-disk worker shards
   pagerank      distributed PageRank on a synthetic power-law graph
   diameter      HADI effective-diameter estimation (OR-allreduce)
   train         distributed mini-batch SGD (XLA engine by default)
@@ -158,11 +159,32 @@ Pick a butterfly degree schedule (paper §IV-B).
   --machines m     cluster size                          [64]
   --floor-mb f     effective packet floor in MiB         [2]
   --compression f  per-layer collision shrink factor     [0.7]",
+        "shard" => "\
+USAGE: sar shard --out <dir> [--workers m] [--dataset twitter|yahoo|docterm]
+                 [--scale f] [--seed s] [--partition random|greedy]
+                 [--edges path]
+
+Partition a dataset into on-disk worker shards: hash-permute the vertex
+ids (the same permutation every PageRank driver applies), split the
+edges across m shards, and write one CRC-protected binary shard file
+per logical node plus a digest-protected manifest.toml. A later
+`sar launch --shards <dir>` (or `sar pagerank --shards <dir>`) makes
+each worker load only its own shard — no per-worker regeneration of the
+global graph — and still land on the lockstep oracle's checksum.
+  --out dir        output shard directory (required)
+  --workers m      shard count = logical nodes of the later run  [4]
+  --dataset d      synthetic dataset preset                      [twitter]
+  --scale f        dataset scale multiplier                      [0.05]
+  --seed s         permutation/partition seed — must match the
+                   later run's --seed                            [42]
+  --partition p    edge-partition strategy (random|greedy)       [random]
+  --edges path     shard a `src dst` edge-list text file instead
+                   of a synthetic preset",
         "pagerank" => "\
 USAGE: sar pagerank [--mode lockstep|threaded|distributed] [--distributed]
                     [--dataset twitter|yahoo|docterm] [--scale f]
                     [--degrees 16x4] [--replication r] [--iters n]
-                    [--threads t] [--seed s] [--bin path]
+                    [--threads t] [--seed s] [--bin path] [--shards dir]
 
 Distributed PageRank on a synthetic power-law graph.
   --mode m         execution mode                        [threaded]
@@ -177,7 +199,10 @@ Distributed PageRank on a synthetic power-law graph.
   --iters n        PageRank iterations                   [10]
   --threads t      sender threads per node               [8]
   --seed s         RNG seed                              [42]
-  --bin path       sar binary to spawn workers from (mode=distributed)",
+  --bin path       sar binary to spawn workers from (mode=distributed)
+  --shards dir     load worker shards from a `sar shard` directory
+                   (mode=lockstep or distributed) instead of
+                   regenerating the dataset",
         "diameter" => "\
 USAGE: sar diameter [--dataset d] [--scale f] [--degrees 4x2] [--sketches k]
                     [--max-h n] [--seed s]
@@ -202,6 +227,7 @@ run the config phase and reduce iterations, report metrics.
 USAGE: sar launch [--workers n] [--degrees 2x2] [--replication r] [--iters n]
                   [--dataset d] [--scale f] [--seed s] [--threads t]
                   [--bind addr] [--file cfg.toml] [--no-spawn] [--bin path]
+                  [--shards dir]
 
 Coordinate a multi-process PageRank run: gather worker JOINs, ship plans,
 barrier the config phase, start, and aggregate reports.
@@ -210,7 +236,11 @@ barrier the config phase, start, and aggregate reports.
                    forking them locally
   --bind a         control-plane bind address            [127.0.0.1:0]
   --bin path       sar binary to spawn local workers from [current exe]
-  --file path      take topology/dataset settings from a config file",
+  --file path      take topology/dataset settings from a config file
+  --shards dir     `sar shard` directory: workers load + verify only
+                   their own shard (no per-worker regeneration); the
+                   dir must be readable at the same path on every
+                   worker host",
         "config-check" => "\
 USAGE: sar config-check --file <path>
 
@@ -275,7 +305,7 @@ mod tests {
     #[test]
     fn every_command_has_usage() {
         for cmd in [
-            "info", "plan", "pagerank", "diameter", "train", "worker", "launch",
+            "info", "plan", "shard", "pagerank", "diameter", "train", "worker", "launch",
             "config-check", "help",
         ] {
             assert!(usage_for(cmd).is_some(), "missing usage for {cmd}");

@@ -15,9 +15,11 @@
 use super::proto::{recv_ctrl, send_ctrl, CtrlMsg, WorkerPlan, WorkerReport, COORD};
 use crate::config::{validate_world, RunConfig};
 use crate::fault::{FailureDetector, ReplicaMap};
+use crate::graph::ShardManifest;
 use crate::metrics::{IterTiming, RunMetrics};
 use anyhow::{bail, Context, Result};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -44,6 +46,10 @@ pub struct LaunchOpts {
     pub data_timeout: Duration,
     /// Overall deadline for each control phase (join/barrier/collect).
     pub phase_deadline: Duration,
+    /// `sar shard` output directory: workers load (and verify) only
+    /// their own shard instead of regenerating the dataset. The path
+    /// must be readable on every worker host. `None` = regenerate.
+    pub shards: Option<PathBuf>,
 }
 
 impl Default for LaunchOpts {
@@ -60,6 +66,7 @@ impl Default for LaunchOpts {
             heartbeat_timeout: Duration::from_secs(2),
             data_timeout: Duration::from_secs(20),
             phase_deadline: Duration::from_secs(120),
+            shards: None,
         }
     }
 }
@@ -75,6 +82,7 @@ impl LaunchOpts {
             scale: cfg.scale,
             seed: cfg.seed,
             send_threads: cfg.send_threads,
+            shards: cfg.shards.as_ref().map(PathBuf::from),
             ..LaunchOpts::default()
         }
     }
@@ -96,6 +104,48 @@ impl LaunchOpts {
         }
         Ok(())
     }
+}
+
+/// Resolve the launch's shard directory (if any) into the
+/// `(shard_dir, manifest_digest)` pair planned to every worker.
+/// Loading the manifest here — before a single JOIN is gathered, let
+/// alone START — front-loads every rejectable mismatch: a corrupt or
+/// hand-edited manifest (digest check inside [`ShardManifest::load`]),
+/// a shard count that disagrees with the degree schedule, and shards
+/// built under a different dataset, scale or partition seed than the
+/// launch asks for (which would silently break the advertised
+/// cross-mode checksum equality).
+pub(super) fn resolve_shards(opts: &LaunchOpts) -> Result<(String, u64)> {
+    let Some(dir) = &opts.shards else {
+        return Ok((String::new(), 0));
+    };
+    let manifest = ShardManifest::load(dir)
+        .with_context(|| format!("loading shard manifest from {}", dir.display()))?;
+    let logical = opts.logical();
+    if manifest.shards.len() != logical {
+        bail!(
+            "shard dir {} holds {} shards but --degrees {:?} needs one per logical \
+             node ({logical}); re-run `sar shard --workers {logical}`",
+            dir.display(),
+            manifest.shards.len(),
+            opts.degrees
+        );
+    }
+    manifest
+        .check_run_identity(&opts.dataset, opts.scale, opts.seed)
+        .with_context(|| format!("shard dir {} contradicts the launch flags", dir.display()))?;
+    // Ship an absolute path: locally-spawned workers inherit an
+    // arbitrary cwd. Join against the coordinator's cwd WITHOUT
+    // resolving symlinks — multi-host runs only promise the dir is
+    // readable at the same *user-visible* path on every host (see
+    // README), and canonicalizing a coordinator-local symlink (e.g. an
+    // NFS mount alias) would plan a path no worker has.
+    let abs = if dir.is_absolute() {
+        dir.clone()
+    } else {
+        std::env::current_dir().map(|cwd| cwd.join(dir)).unwrap_or_else(|_| dir.clone())
+    };
+    Ok((abs.to_string_lossy().into_owned(), manifest.digest()))
 }
 
 /// Aggregated outcome of a distributed run.
@@ -164,6 +214,7 @@ impl Coordinator {
     /// and ship each worker its plan.
     pub fn accept(self, opts: LaunchOpts) -> Result<Session> {
         opts.validate()?;
+        let (shard_dir, manifest_digest) = resolve_shards(&opts)?;
         let world = opts.world();
         let mut conns = Vec::with_capacity(world);
         let mut data_addrs = Vec::with_capacity(world);
@@ -258,6 +309,8 @@ impl Coordinator {
             iters: opts.iters as u32,
             send_threads: opts.send_threads as u32,
             data_timeout_ms: opts.data_timeout.as_millis() as u64,
+            shard_dir,
+            manifest_digest,
         };
         for (w, writer) in writers.iter().enumerate() {
             let plan = WorkerPlan { node: w as u32, ..plan_template.clone() };

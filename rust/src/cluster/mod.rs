@@ -64,4 +64,4 @@ pub use spawn::{
     default_degrees, launch_local, sar_binary, spawn_local, spawn_session, spawn_workers,
     LocalProcs, MAX_LOCAL_WORKERS,
 };
-pub use worker::{run_worker, WorkerOpts};
+pub use worker::{load_worker_data, run_worker, WorkerData, WorkerOpts};

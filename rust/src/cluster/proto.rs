@@ -69,6 +69,15 @@ pub struct WorkerPlan {
     /// Data-plane receive timeout; bounds how long a worker waits on a
     /// dead peer before reporting failure instead of hanging.
     pub data_timeout_ms: u64,
+    /// Shard directory for on-disk dataset ingestion (`sar shard`
+    /// output, readable at this path on the worker's host). Empty = no
+    /// shards: regenerate the synthetic dataset deterministically.
+    pub shard_dir: String,
+    /// Digest of the shard manifest the coordinator planned against;
+    /// workers verify their local manifest hashes to exactly this
+    /// before touching shard data (stale/foreign shard dirs are
+    /// rejected before CONFIG_DONE, hence before START).
+    pub manifest_digest: u64,
 }
 
 /// Per-worker run outcome shipped back on REPORT.
@@ -208,6 +217,8 @@ pub fn encode(msg: &CtrlMsg) -> (u32, Vec<u8>) {
             e.u32(p.iters);
             e.u32(p.send_threads);
             e.u64(p.data_timeout_ms);
+            e.str(&p.shard_dir);
+            e.u64(p.manifest_digest);
             OP_PLAN
         }
         CtrlMsg::ConfigDone => OP_CONFIG_DONE,
@@ -247,6 +258,8 @@ pub fn decode(opcode: u32, payload: &[u8]) -> std::io::Result<CtrlMsg> {
             iters: d.u32()?,
             send_threads: d.u32()?,
             data_timeout_ms: d.u64()?,
+            shard_dir: d.str()?,
+            manifest_digest: d.u64()?,
         }),
         OP_CONFIG_DONE => CtrlMsg::ConfigDone,
         OP_START => CtrlMsg::Start,
@@ -297,6 +310,7 @@ pub fn recv_ctrl(stream: &mut TcpStream) -> std::io::Result<(NodeId, CtrlMsg)> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::io::{Read, Write};
 
     fn sample_plan() -> WorkerPlan {
         WorkerPlan {
@@ -311,6 +325,8 @@ mod tests {
             iters: 5,
             send_threads: 4,
             data_timeout_ms: 10_000,
+            shard_dir: "/data/shards/twitter-4".into(),
+            manifest_digest: 0xDEAD_BEEF_0BAD_F00D,
         }
     }
 
@@ -346,6 +362,109 @@ mod tests {
         extra.push(0);
         assert!(decode(op, &extra).is_err());
         assert!(decode(99, &[]).is_err());
+    }
+
+    fn all_variants() -> Vec<CtrlMsg> {
+        vec![
+            CtrlMsg::Join { data_addr: "10.0.0.7:41234".into() },
+            CtrlMsg::Plan(sample_plan()),
+            CtrlMsg::ConfigDone,
+            CtrlMsg::Start,
+            CtrlMsg::Heartbeat,
+            CtrlMsg::Report(WorkerReport {
+                node: 2,
+                config_secs: 0.5,
+                iter_compute_secs: vec![0.1],
+                iter_comm_secs: vec![0.2],
+                checksum_p0: 0.125,
+            }),
+            CtrlMsg::Failed { error: "worker 1 exploded".into() },
+            CtrlMsg::Shutdown,
+        ]
+    }
+
+    /// Satellite: every `CtrlMsg` variant survives encode → TCP → decode
+    /// on a real socket pair, echoed both directions.
+    #[test]
+    fn every_variant_crosses_a_real_socket() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let n = all_variants().len();
+        let server = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let mut rd = s.try_clone().unwrap();
+            let wr = Mutex::new(s);
+            for _ in 0..n {
+                let (src, msg) = recv_ctrl(&mut rd).unwrap();
+                assert_eq!(src, 3);
+                send_ctrl(&wr, COORD, &msg).unwrap();
+            }
+        });
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut rd = stream.try_clone().unwrap();
+        let wr = Mutex::new(stream);
+        for msg in all_variants() {
+            send_ctrl(&wr, 3, &msg).unwrap();
+            let (src, echoed) = recv_ctrl(&mut rd).unwrap();
+            assert_eq!(src, COORD);
+            assert_eq!(echoed, msg);
+        }
+        server.join().unwrap();
+    }
+
+    /// Satellite: a frame cut off mid-payload (peer death) is an error —
+    /// `recv_ctrl` must not hang or panic.
+    #[test]
+    fn truncated_frame_is_an_error_not_a_hang() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            // Header promises 100 bytes; send 10 and die.
+            let header =
+                encode_header(1, Tag { seq: OP_JOIN, phase_code: 0, layer: 0 }, 100);
+            s.write_all(&header).unwrap();
+            s.write_all(&[0u8; 10]).unwrap();
+            // drop closes the socket
+        });
+        let (mut s, _) = listener.accept().unwrap();
+        assert!(recv_ctrl(&mut s).is_err(), "truncated frame must error");
+        client.join().unwrap();
+        // A bare EOF (no bytes at all) is also a clean error.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let _ = TcpStream::connect(addr).unwrap();
+        });
+        let (mut s, _) = listener.accept().unwrap();
+        assert!(recv_ctrl(&mut s).is_err());
+        client.join().unwrap();
+    }
+
+    /// Satellite: a header advertising an absurd payload length is
+    /// rejected before any allocation/read of that size.
+    #[test]
+    fn oversized_payload_length_is_rejected() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let header = encode_header(
+                1,
+                Tag { seq: OP_HEARTBEAT, phase_code: 0, layer: 0 },
+                MAX_CTRL_PAYLOAD + 1,
+            );
+            s.write_all(&header).unwrap();
+            // Keep the socket open: the reader must reject from the
+            // header alone, without waiting for payload bytes.
+            let mut buf = [0u8; 1];
+            let _ = s.read(&mut buf);
+        });
+        let (mut s, _) = listener.accept().unwrap();
+        let err = recv_ctrl(&mut s).unwrap_err();
+        assert!(err.to_string().contains("oversized"), "got: {err}");
+        drop(s);
+        client.join().unwrap();
     }
 
     #[test]

@@ -113,9 +113,13 @@ pub fn spawn_workers(bin: &Path, coordinator: SocketAddr, world: usize) -> Resul
 /// session plus the process handles — the manual-phase entry point used
 /// by fault-injection tests (kill a worker between phases).
 pub fn spawn_session(bin: &Path, opts: LaunchOpts) -> Result<(Session, LocalProcs)> {
-    // Validate BEFORE forking: a bad schedule must not cost a fleet of
-    // subprocesses that immediately has to be reaped.
+    // Validate BEFORE forking: a bad schedule — or a missing/corrupt/
+    // mismatched shard directory — must not cost a fleet of
+    // subprocesses that immediately has to be reaped. (`accept` runs
+    // the same shard resolution again for the `--no-spawn` path; it is
+    // a cheap manifest re-read.)
     opts.validate()?;
+    super::launch::resolve_shards(&opts)?;
     let world = opts.world();
     let coord = Coordinator::bind(&opts.bind)?;
     let addr = coord.addr()?;

@@ -10,17 +10,24 @@
 //! connection for the whole run so the coordinator's
 //! [`crate::fault::FailureDetector`] can distinguish slow from dead.
 //!
-//! Every worker deterministically regenerates the full synthetic graph
-//! from the plan's `(dataset, scale, seed)` and takes its own shard —
-//! the same scheme the in-process drivers use — so no graph bytes cross
-//! the control plane.
+//! Dataset acquisition ([`load_worker_data`]) has two paths. When the
+//! plan names a shard directory (`sar shard` output), the worker streams
+//! *only its own shard* into a CSR — after verifying the local manifest
+//! hashes to exactly the digest the coordinator planned against, and the
+//! shard file's CRC matches the manifest — so no worker ever
+//! materializes the global edge list and a stale or foreign shard dir is
+//! rejected before CONFIG_DONE (hence before START). With no shard
+//! directory the worker falls back to deterministically regenerating the
+//! full synthetic graph from the plan's `(dataset, scale, seed)` and
+//! taking its own partition — the same scheme the in-process drivers
+//! use — so no graph bytes cross the control plane in either path.
 
 use super::proto::{recv_ctrl, send_ctrl, CtrlMsg, WorkerPlan, WorkerReport};
 use crate::allreduce::NodeHandle;
 use crate::apps::pagerank::PageRankShards;
 use crate::config::validate_world;
 use crate::fault::{ReplicaMap, ReplicatedHandle};
-use crate::graph::{Csr, DatasetPreset, DatasetSpec};
+use crate::graph::{load_shard, Csr, DatasetPreset, DatasetSpec, ShardManifest};
 use crate::metrics::RunMetrics;
 use crate::sparse::{IndexSet, SumF32};
 use crate::topology::Butterfly;
@@ -192,6 +199,61 @@ impl<T: Transport + 'static> Collective for ReplicatedHandle<T> {
     }
 }
 
+/// One worker's slice of the dataset.
+pub struct WorkerData {
+    /// This worker's shard CSR (local compute input).
+    pub shard: Csr,
+    /// Global vertex count (sizes the butterfly's index domain).
+    pub vertices: i64,
+}
+
+/// Acquire the worker's dataset slice: stream it from the plan's shard
+/// directory when one is given (manifest digest + shard CRC verified,
+/// no graph generation at all), else deterministically regenerate the
+/// synthetic dataset and take shard `lnode` of `logical`.
+pub fn load_worker_data(plan: &WorkerPlan, lnode: usize, logical: usize) -> Result<WorkerData> {
+    if !plan.shard_dir.is_empty() {
+        let dir = std::path::Path::new(&plan.shard_dir);
+        let manifest = ShardManifest::load(dir)
+            .with_context(|| format!("loading shard manifest from {}", plan.shard_dir))?;
+        let digest = manifest.digest();
+        if digest != plan.manifest_digest {
+            bail!(
+                "shard manifest digest mismatch: the plan was made against \
+                 {:016x} but {} holds {digest:016x} — this host's shard dir is \
+                 stale or from a different `sar shard` run",
+                plan.manifest_digest,
+                plan.shard_dir
+            );
+        }
+        if manifest.shards.len() != logical {
+            bail!(
+                "shard dir {} holds {} shards but the plan needs one per logical \
+                 node ({logical})",
+                plan.shard_dir,
+                manifest.shards.len()
+            );
+        }
+        let shard = load_shard(dir, &manifest, lnode)
+            .with_context(|| format!("loading shard {lnode} from {}", plan.shard_dir))?;
+        log::info!(
+            "loaded shard {lnode}/{logical} from {} ({} edges, {} rows × {} cols)",
+            plan.shard_dir,
+            shard.nnz(),
+            shard.rows(),
+            shard.cols()
+        );
+        return Ok(WorkerData { shard, vertices: manifest.vertices });
+    }
+    let preset = DatasetPreset::by_name(&plan.dataset)
+        .with_context(|| format!("unknown dataset `{}`", plan.dataset))?;
+    let spec = DatasetSpec::new(preset, plan.scale, plan.seed);
+    let graph = spec.generate();
+    let mut shards = PageRankShards::build(&graph, logical, plan.seed);
+    let shard = shards.shards.swap_remove(lnode);
+    Ok(WorkerData { shard, vertices: graph.vertices })
+}
+
 fn execute_plan(
     node: usize,
     plan: &WorkerPlan,
@@ -212,14 +274,9 @@ fn execute_plan(
         plan.addrs.iter().map(|a| resolve(a)).collect::<Result<Vec<_>>>()?;
     let net = TcpNet::from_addrs(node, listener, addrs).context("building data fabric")?;
 
-    let preset = DatasetPreset::by_name(&plan.dataset)
-        .with_context(|| format!("unknown dataset `{}`", plan.dataset))?;
-    let spec = DatasetSpec::new(preset, plan.scale, plan.seed);
-    let graph = spec.generate();
-    let shards = PageRankShards::build(&graph, logical, plan.seed);
     let lnode = node % logical;
-    let shard = &shards.shards[lnode];
-    let topo = Butterfly::new(degrees, graph.vertices);
+    let data = load_worker_data(plan, lnode, logical)?;
+    let topo = Butterfly::new(degrees, data.vertices);
     let timeout = Duration::from_millis(plan.data_timeout_ms.max(1));
     let send_threads = plan.send_threads.max(1) as usize;
 
@@ -238,8 +295,8 @@ fn execute_plan(
     let t0 = Instant::now();
     handle
         .run_config(
-            IndexSet::from_sorted(shard.row_globals.clone()),
-            IndexSet::from_sorted(shard.col_globals.clone()),
+            IndexSet::from_sorted(data.shard.row_globals.clone()),
+            IndexSet::from_sorted(data.shard.col_globals.clone()),
         )
         .context("config phase")?;
     metrics.config_secs = t0.elapsed().as_secs_f64();
@@ -254,7 +311,13 @@ fn execute_plan(
         }
     }
 
-    let p0 = run_pagerank_iters(handle.as_mut(), shard, graph.vertices, plan.iters as usize, &mut metrics)?;
+    let p0 = run_pagerank_iters(
+        handle.as_mut(),
+        &data.shard,
+        data.vertices,
+        plan.iters as usize,
+        &mut metrics,
+    )?;
 
     Ok(WorkerReport {
         node: node as u32,

@@ -21,6 +21,10 @@ pub struct RunConfig {
     pub dataset: String,
     /// Dataset scale multiplier.
     pub scale: f64,
+    /// `sar shard` output directory: distributed workers load their
+    /// shard from here instead of regenerating the dataset (must be
+    /// readable at this path on every worker host). `None` = regenerate.
+    pub shards: Option<String>,
     /// Iterations to run.
     pub iters: usize,
     /// RNG seed.
@@ -41,6 +45,7 @@ impl Default for RunConfig {
             cost: CostModel::ec2_2013(),
             dataset: "twitter".to_string(),
             scale: 0.1,
+            shards: None,
             iters: 10,
             seed: 42,
             workers: None,
@@ -123,6 +128,13 @@ impl RunConfig {
                     }
                 }
                 "data.scale" => cfg.scale = val.as_float().context("scale must be numeric")?,
+                "data.shards" => {
+                    let s = val.as_str().context("shards must be a path string")?;
+                    if s.is_empty() {
+                        bail!("shards path must be non-empty (omit the key to regenerate)");
+                    }
+                    cfg.shards = Some(s.to_string());
+                }
                 "run.iters" => cfg.iters = val.as_int().context("iters must be int")? as usize,
                 "run.seed" => cfg.seed = val.as_int().context("seed must be int")? as u64,
                 "cluster.workers" => {
@@ -212,6 +224,14 @@ seed = 7
         let cfg = RunConfig::from_toml("[run]\niters = 3").unwrap();
         assert_eq!(cfg.iters, 3);
         assert_eq!(cfg.degrees, vec![16, 4]);
+    }
+
+    #[test]
+    fn shards_path_parses() {
+        let cfg = RunConfig::from_toml("[data]\nshards = \"/data/shards/tw4\"").unwrap();
+        assert_eq!(cfg.shards.as_deref(), Some("/data/shards/tw4"));
+        assert!(RunConfig::from_toml("[data]\nshards = \"\"").is_err());
+        assert_eq!(RunConfig::default().shards, None);
     }
 
     #[test]

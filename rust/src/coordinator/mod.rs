@@ -175,6 +175,33 @@ pub fn run_pagerank_lockstep(graph: &EdgeList, cfg: &RunConfig) -> PageRankRun {
     }
 }
 
+/// Run the lockstep oracle over an on-disk `sar shard` directory — the
+/// same shard CSRs a distributed `--shards` run streams — so the
+/// cross-mode determinism checksum can be anchored without regenerating
+/// (or even being able to hold) the global edge list. The config's
+/// degree schedule must cover exactly the manifest's shard count, and
+/// its (dataset, scale, seed) must agree with the manifest — the same
+/// rejection the cluster coordinator applies, so a mislabeled oracle
+/// run errors instead of silently using the shard set's identity.
+pub fn run_pagerank_lockstep_sharded(dir: &Path, cfg: &RunConfig) -> Result<PageRankRun> {
+    let t0 = Instant::now();
+    let (manifest, shards) = crate::graph::load_all_shards(dir)?;
+    manifest.check_run_identity(&cfg.dataset, cfg.scale, cfg.seed)?;
+    let hasher =
+        crate::partition::IndexHasher::pagerank(manifest.vertices as u64, manifest.seed);
+    let mut dist =
+        DistPageRank::from_shards(shards, manifest.vertices, cfg.degrees.clone(), hasher)?;
+    let config_secs = t0.elapsed().as_secs_f64();
+    let wall = Instant::now();
+    dist.run(cfg.iters);
+    Ok(PageRankRun {
+        per_node: Vec::new(),
+        wall_secs: wall.elapsed().as_secs_f64(),
+        config_secs,
+        checksum: dist.checksum(),
+    })
+}
+
 /// View a multi-process [`ClusterRun`] as a [`PageRankRun`] (dead
 /// workers' missing metrics are dropped from the per-node list).
 pub fn cluster_pagerank_run(run: &ClusterRun) -> PageRankRun {
@@ -314,6 +341,47 @@ mod tests {
             threaded.checksum
         );
         assert!(lockstep.checksum > 0.0);
+    }
+
+    #[test]
+    fn sharded_lockstep_matches_in_memory_lockstep() {
+        let g = graph(31);
+        let cfg = RunConfig {
+            degrees: vec![2, 2],
+            iters: 4,
+            seed: 31,
+            ..RunConfig::default()
+        };
+        let dir = std::env::temp_dir()
+            .join(format!("sar-coord-shard-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        crate::graph::shard_graph(
+            &dir,
+            &g,
+            4,
+            crate::partition::Strategy::Random,
+            &cfg.dataset,
+            cfg.scale,
+            31,
+        )
+        .unwrap();
+        let lockstep = run_pagerank_lockstep(&g, &cfg);
+        let sharded = run_pagerank_lockstep_sharded(&dir, &cfg).unwrap();
+        // Same shards, same float-op order → bit-identical checksum.
+        assert_eq!(lockstep.checksum, sharded.checksum);
+        // A schedule that doesn't cover the shard count is an error.
+        let bad = RunConfig { degrees: vec![2], ..cfg.clone() };
+        assert!(run_pagerank_lockstep_sharded(&dir, &bad).is_err());
+        // A run identity that contradicts the manifest is rejected just
+        // like the cluster coordinator rejects it — not silently run
+        // under the shard set's identity.
+        let wrong_seed = RunConfig { seed: 99, ..cfg.clone() };
+        let err = run_pagerank_lockstep_sharded(&dir, &wrong_seed).unwrap_err();
+        assert!(format!("{err:#}").contains("seed"), "got: {err:#}");
+        let wrong_scale = RunConfig { scale: cfg.scale * 2.0, ..cfg };
+        let err = run_pagerank_lockstep_sharded(&dir, &wrong_scale).unwrap_err();
+        assert!(format!("{err:#}").contains("scale"), "got: {err:#}");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

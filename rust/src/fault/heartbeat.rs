@@ -173,6 +173,62 @@ mod tests {
         assert!(!d.group_extinct_hard(&map, 1));
     }
 
+    /// Satellite: the staleness → recovery path. A worker that goes
+    /// heartbeat-stale and then beats again must come back to life, and
+    /// staleness alone must never read as hard death — so a late
+    /// heartbeat can never be turned into an irreversible failover
+    /// decision by the control plane.
+    #[test]
+    fn late_heartbeat_recovers_a_stale_worker() {
+        // Generous window: the revived-worker assertions below re-check
+        // elapsed time at call site, so the window must comfortably
+        // exceed any plausible CI scheduling stall.
+        let d = FailureDetector::new(2, Duration::from_millis(400));
+        std::thread::sleep(Duration::from_millis(600));
+        // Both stale by timeout…
+        assert!(d.is_dead(0) && d.is_dead(1), "workers should be stale");
+        // …but neither is hard-dead: staleness is reversible evidence.
+        assert!(!d.is_hard_dead(0) && !d.is_hard_dead(1));
+        assert!(d.hard_dead().is_empty());
+        // The late heartbeat arrives: worker 0 is alive again.
+        d.beat(0);
+        assert!(!d.is_dead(0), "a late heartbeat must revive a stale worker");
+        assert!(d.is_dead(1), "worker 1 is still stale");
+        assert_eq!(d.alive(), vec![0]);
+        // Even a whole stale replica group is not extinct.
+        let map = ReplicaMap::new(1, 2);
+        assert!(!d.group_extinct_hard(&map, 0));
+    }
+
+    /// Satellite: the hard-evidence path. Control-connection EOF
+    /// (mark_dead) is sticky — a heartbeat arriving after it must NOT
+    /// resurrect the worker (the failover decision already happened and
+    /// must fire exactly once), and repeated evidence for the same
+    /// worker collapses into one dead entry, not one failover per EOF.
+    #[test]
+    fn hard_evidence_is_sticky_and_counted_once() {
+        let d = FailureDetector::new(3, Duration::from_secs(60));
+        d.mark_dead(1);
+        assert!(d.is_hard_dead(1));
+        // A racing heartbeat (the beat thread can still be draining)
+        // must not undo hard evidence.
+        d.beat(1);
+        assert!(d.is_hard_dead(1), "a beat after EOF must not resurrect the worker");
+        assert!(d.is_dead(1));
+        // Duplicate evidence (EOF + FAILED message) is one death, so the
+        // coordinator's failover/masking logic triggers exactly once.
+        d.mark_dead(1);
+        d.mark_dead(1);
+        assert_eq!(d.hard_dead(), vec![1]);
+        assert_eq!(d.dead(), vec![1]);
+        let map = ReplicaMap::new(1, 3);
+        assert!(!d.group_extinct_hard(&map, 0), "replicas 0 and 2 still cover");
+        d.mark_dead(0);
+        d.mark_dead(2);
+        assert!(d.group_extinct_hard(&map, 0));
+        assert_eq!(d.hard_dead(), vec![0, 1, 2]);
+    }
+
     #[test]
     fn no_replication_quorum_is_every_worker() {
         let map = ReplicaMap::new(4, 1);

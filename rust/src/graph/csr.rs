@@ -25,6 +25,17 @@ impl Csr {
     /// Build a shard CSR from its edge list. `edge_weight(u)` supplies the
     /// per-source weight (e.g. 1/outdeg for PageRank; 1.0 for HADI).
     pub fn from_edges(edges: &[(i64, i64)], edge_weight: impl Fn(i64) -> f32) -> Csr {
+        let weights: Vec<f32> = edges.iter().map(|&(u, _)| edge_weight(u)).collect();
+        Csr::from_edge_weights(edges, &weights)
+    }
+
+    /// Like [`Csr::from_edges`] but with a pre-resolved weight per edge,
+    /// aligned with `edges` — the streaming shard reader resolves each
+    /// weight once during its validated read pass instead of re-searching
+    /// its source table per edge. Equivalent to `from_edges` whenever
+    /// `weights[e] == edge_weight(edges[e].0)`.
+    pub fn from_edge_weights(edges: &[(i64, i64)], weights: &[f32]) -> Csr {
+        assert_eq!(edges.len(), weights.len(), "edge/weight length mismatch");
         // Collect and sort the distinct endpoints.
         let mut row_globals: Vec<i64> = edges.iter().map(|&(_, v)| v).collect();
         row_globals.sort_unstable();
@@ -47,12 +58,12 @@ impl Csr {
         let mut col = vec![0u32; edges.len()];
         let mut weight = vec![0f32; edges.len()];
         let mut cursor = row_ptr.clone();
-        for &(u, v) in edges {
+        for (e, &(u, v)) in edges.iter().enumerate() {
             let r = rloc(v);
             let slot = cursor[r];
             cursor[r] += 1;
             col[slot] = cloc(u);
-            weight[slot] = edge_weight(u);
+            weight[slot] = weights[e];
         }
         Csr { row_globals, col_globals, row_ptr, col, weight }
     }
@@ -147,6 +158,20 @@ mod tests {
         assert_eq!(c.row_globals, vec![9]);
         assert_eq!(c.col_globals, vec![5]);
         assert_eq!(c.spmv(&[3.0]), vec![3.0]);
+    }
+
+    #[test]
+    fn from_edge_weights_matches_from_edges() {
+        let edges = [(0i64, 1i64), (0, 2), (1, 2), (3, 2)];
+        let outdeg = [2f32, 1.0, 0.0, 1.0];
+        let a = Csr::from_edges(&edges, |u| 1.0 / outdeg[u as usize]);
+        let w: Vec<f32> = edges.iter().map(|&(u, _)| 1.0 / outdeg[u as usize]).collect();
+        let b = Csr::from_edge_weights(&edges, &w);
+        assert_eq!(a.row_globals, b.row_globals);
+        assert_eq!(a.col_globals, b.col_globals);
+        assert_eq!(a.row_ptr, b.row_ptr);
+        assert_eq!(a.col, b.col);
+        assert_eq!(a.weight, b.weight);
     }
 
     #[test]

@@ -8,6 +8,17 @@
 
 use super::EdgeList;
 use crate::util::{Pcg32, Zipf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide count of [`generate_power_law`] invocations. Tests use
+/// it to prove the sharded ingestion path never regenerates the graph
+/// (the whole point of `sar shard`); not meant for production logic.
+static GENERATE_CALLS: AtomicU64 = AtomicU64::new(0);
+
+/// How many times this process has synthesized a graph.
+pub fn generation_count() -> u64 {
+    GENERATE_CALLS.load(Ordering::Relaxed)
+}
 
 /// Generator parameters.
 #[derive(Clone, Copy, Debug)]
@@ -29,6 +40,7 @@ impl Default for GraphGenParams {
 
 /// Generate a power-law directed multigraph.
 pub fn generate_power_law(p: &GraphGenParams) -> EdgeList {
+    GENERATE_CALLS.fetch_add(1, Ordering::Relaxed);
     assert!(p.vertices >= 2);
     let mut rng = Pcg32::new(p.seed);
     let zout = Zipf::new(p.vertices as u64, p.alpha_out);

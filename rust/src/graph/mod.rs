@@ -7,15 +7,22 @@
 //! with the same α shape, and [`datasets`] provides scaled presets whose
 //! *partition sparsity* (Table I's headline statistic) matches the paper's
 //! ratios. [`csr`] is the compressed sparse row structure used by the
-//! local compute in PageRank / HADI.
+//! local compute in PageRank / HADI, and [`shard`] is the versioned
+//! on-disk shard format (`sar shard`) that lets each worker load only its
+//! own partition instead of regenerating the global graph.
 
 pub mod csr;
 pub mod datasets;
 pub mod gen;
+pub mod shard;
 
 pub use csr::Csr;
 pub use datasets::{DatasetPreset, DatasetSpec};
-pub use gen::{generate_power_law, zipf_alpha_fit, GraphGenParams};
+pub use gen::{generate_power_law, generation_count, zipf_alpha_fit, GraphGenParams};
+pub use shard::{
+    load_all_shards, load_edge_list, load_shard, shard_graph, ShardManifest, ShardMeta,
+    ShardReader, MANIFEST_FILE,
+};
 
 /// An edge list graph over vertices `0..vertices`.
 #[derive(Clone, Debug)]

@@ -1,0 +1,818 @@
+//! Versioned on-disk shard format + manifest: the `sar shard` pipeline.
+//!
+//! The paper's experiments (§VI) run over pre-partitioned real graphs;
+//! regenerating the full synthetic edge list in every worker pays the
+//! partitioning cost N times and caps the graph at what one process can
+//! hold. This module moves partitioning offline: `sar shard` hash-permutes
+//! the graph with the same [`IndexHasher::pagerank`] permutation every
+//! in-memory driver uses, partitions the edges with a
+//! [`crate::partition::Strategy`], and writes one binary shard file per
+//! logical node plus a digest-protected manifest. Workers then stream
+//! *only their shard* into a [`Csr`] — no global edge list is ever
+//! materialized worker-side, and because each shard preserves partition
+//! edge order the resulting CSR (and therefore every float summation
+//! order and the cross-mode determinism checksum) is bit-identical to the
+//! regenerate-and-partition path.
+//!
+//! # Shard file layout (little-endian)
+//!
+//! ```text
+//! magic    8B   b"SARSHRD1" (version baked into the magic)
+//! index    u32  this shard's id
+//! count    u32  total shards in the set
+//! vertices i64  global vertex count (permuted id space)
+//! srcs     u32  S — distinct source vertices in this shard
+//! edges    u64  E — edge records in this shard
+//! table    S × (i64 src, u32 global_outdeg)   sorted by src
+//! edges    E × (i64 u, i64 v)                 partition order preserved
+//! crc      u32  CRC-32 over every preceding byte
+//! ```
+//!
+//! The per-source *global* out-degree table is what lets a worker build
+//! PageRank edge weights (`1/outdeg`) from its shard alone. The manifest
+//! (`manifest.toml`, parsed by the in-repo TOML subset) records per-shard
+//! edge counts, CRCs and vertex ranges, and carries an FNV-1a/64 digest
+//! over all of it — the digest travels in the control-plane `WorkerPlan`
+//! so a worker holding a different shard set is rejected before START.
+
+use super::csr::Csr;
+use super::EdgeList;
+use crate::config::{parse_toml, TomlValue};
+use crate::partition::{IndexHasher, Strategy};
+use crate::util::{fnv1a64, Crc32};
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+
+/// Shard-file magic; the trailing `1` is the format version.
+pub const SHARD_MAGIC: &[u8; 8] = b"SARSHRD1";
+
+/// Manifest format version.
+pub const SHARD_FORMAT: u32 = 1;
+
+/// Manifest file name inside a shard directory.
+pub const MANIFEST_FILE: &str = "manifest.toml";
+
+/// Largest accepted shard count — a corrupt-manifest guard (the
+/// butterfly worlds this repo runs are orders of magnitude smaller),
+/// checked before any count-sized allocation.
+pub const MAX_SHARDS: i64 = 1 << 16;
+
+/// Fixed-size shard header bytes (magic..edge count, before the tables).
+const SHARD_HEADER_BYTES: u64 = 8 + 4 + 4 + 8 + 4 + 8;
+
+/// Per-shard manifest entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardMeta {
+    /// Edge records in the shard file.
+    pub edges: u64,
+    /// CRC-32 of the shard file payload (everything before the trailer).
+    pub crc: u32,
+    /// Destination (row) vertex id range, `-1/-1` for an empty shard.
+    pub row_min: i64,
+    pub row_max: i64,
+    /// Source (column) vertex id range, `-1/-1` for an empty shard.
+    pub col_min: i64,
+    pub col_max: i64,
+}
+
+/// The shard-set manifest: dataset identity + per-shard integrity data.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardManifest {
+    pub format: u32,
+    /// Dataset identity: a preset key (`twitter`…) or `file:<name>` for
+    /// sharded edge-list files.
+    pub source: String,
+    pub scale: f64,
+    /// Run seed the permutation/partition were derived from.
+    pub seed: u64,
+    /// Global vertex count (permuted id space).
+    pub vertices: i64,
+    /// Total edges across all shards.
+    pub edges: u64,
+    /// Partition strategy key (`random` | `greedy`).
+    pub partition: String,
+    pub shards: Vec<ShardMeta>,
+}
+
+impl ShardManifest {
+    /// Canonical byte string the digest is computed over. Covers every
+    /// field, so any edit to the manifest (or a shard swap) changes it.
+    fn canonical(&self) -> String {
+        let mut s = format!(
+            "sar-shard-manifest|format={}|source={}|scale={}|seed={}|vertices={}|edges={}\
+             |partition={}|shards={}",
+            self.format,
+            self.source,
+            self.scale,
+            self.seed,
+            self.vertices,
+            self.edges,
+            self.partition,
+            self.shards.len()
+        );
+        for (i, m) in self.shards.iter().enumerate() {
+            let _ = write!(
+                s,
+                "|{}:{}:{:08x}:{}:{}:{}:{}",
+                i, m.edges, m.crc, m.row_min, m.row_max, m.col_min, m.col_max
+            );
+        }
+        s
+    }
+
+    /// The manifest digest — the cross-mode determinism anchor carried in
+    /// the control-plane `WorkerPlan` and verified worker-side.
+    pub fn digest(&self) -> u64 {
+        fnv1a64(self.canonical().as_bytes())
+    }
+
+    /// Shard file path for shard `i` under `dir`.
+    pub fn shard_path(dir: &Path, i: usize) -> PathBuf {
+        dir.join(format!("shard_{i:05}.sar"))
+    }
+
+    /// Serialize to the manifest TOML (subset) text, digest included.
+    pub fn to_toml(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "# generated by `sar shard` — do not edit (digest-protected)");
+        let _ = writeln!(out, "[dataset]");
+        let _ = writeln!(out, "source = \"{}\"", self.source);
+        let _ = writeln!(out, "scale = {}", self.scale);
+        let _ = writeln!(out, "seed = \"{}\"", self.seed);
+        let _ = writeln!(out, "vertices = {}", self.vertices);
+        let _ = writeln!(out, "edges = {}", self.edges);
+        let _ = writeln!(out, "partition = \"{}\"", self.partition);
+        let _ = writeln!(out, "[shards]");
+        let _ = writeln!(out, "format = {}", self.format);
+        let _ = writeln!(out, "count = {}", self.shards.len());
+        for (i, m) in self.shards.iter().enumerate() {
+            let _ = writeln!(out, "[shard_{i}]");
+            let _ = writeln!(out, "edges = {}", m.edges);
+            let _ = writeln!(out, "crc = {}", m.crc);
+            let _ = writeln!(out, "row_min = {}", m.row_min);
+            let _ = writeln!(out, "row_max = {}", m.row_max);
+            let _ = writeln!(out, "col_min = {}", m.col_min);
+            let _ = writeln!(out, "col_max = {}", m.col_max);
+        }
+        let _ = writeln!(out, "[digest]");
+        let _ = writeln!(out, "fnv = \"{:016x}\"", self.digest());
+        out
+    }
+
+    /// Parse manifest text and verify its embedded digest.
+    pub fn from_toml(text: &str) -> Result<ShardManifest> {
+        let map = parse_toml(text).context("parsing shard manifest")?;
+        let format = get_int(&map, "shards.format")? as u32;
+        if format != SHARD_FORMAT {
+            bail!("shard manifest format {format} unsupported (this build reads {SHARD_FORMAT})");
+        }
+        // Bound BEFORE the count-sized allocation below: an unverified
+        // count must not be able to abort the process (capacity
+        // overflow / OOM) ahead of the digest check's readable error.
+        let count = get_int(&map, "shards.count")?;
+        if !(1..=MAX_SHARDS).contains(&count) {
+            bail!("shard manifest declares {count} shards (supported: 1..={MAX_SHARDS})");
+        }
+        let seed_str = get_str(&map, "dataset.seed")?;
+        let seed: u64 = seed_str
+            .parse()
+            .with_context(|| format!("manifest seed `{seed_str}` is not a u64"))?;
+        let mut shards = Vec::with_capacity(count as usize);
+        for i in 0..count {
+            shards.push(ShardMeta {
+                edges: get_int(&map, &format!("shard_{i}.edges"))? as u64,
+                crc: get_int(&map, &format!("shard_{i}.crc"))? as u32,
+                row_min: get_int(&map, &format!("shard_{i}.row_min"))?,
+                row_max: get_int(&map, &format!("shard_{i}.row_max"))?,
+                col_min: get_int(&map, &format!("shard_{i}.col_min"))?,
+                col_max: get_int(&map, &format!("shard_{i}.col_max"))?,
+            });
+        }
+        let manifest = ShardManifest {
+            format,
+            source: get_str(&map, "dataset.source")?.to_string(),
+            scale: get_float(&map, "dataset.scale")?,
+            seed,
+            vertices: get_int(&map, "dataset.vertices")?,
+            edges: get_int(&map, "dataset.edges")? as u64,
+            partition: get_str(&map, "dataset.partition")?.to_string(),
+            shards,
+        };
+        let per_shard: u64 = manifest.shards.iter().map(|m| m.edges).sum();
+        if per_shard != manifest.edges {
+            bail!(
+                "shard manifest is inconsistent: shards hold {per_shard} edges but the \
+                 dataset section says {}",
+                manifest.edges
+            );
+        }
+        let stored = get_str(&map, "digest.fnv")?;
+        let want = format!("{:016x}", manifest.digest());
+        if stored != want {
+            bail!(
+                "shard manifest digest mismatch: file says {stored}, contents hash to {want} \
+                 (manifest corrupt or hand-edited — re-run `sar shard`)"
+            );
+        }
+        Ok(manifest)
+    }
+
+    /// Load + verify `dir/manifest.toml`.
+    pub fn load(dir: &Path) -> Result<ShardManifest> {
+        let path = dir.join(MANIFEST_FILE);
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading shard manifest {}", path.display()))?;
+        ShardManifest::from_toml(&text)
+    }
+
+    /// Write `dir/manifest.toml`.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        let path = dir.join(MANIFEST_FILE);
+        std::fs::write(&path, self.to_toml())
+            .with_context(|| format!("writing shard manifest {}", path.display()))
+    }
+
+    /// Check that a run's `(dataset, scale, seed)` agree with what this
+    /// shard set was built from — the guard both the cluster
+    /// coordinator and the sharded lockstep oracle apply, so every mode
+    /// rejects the same mismatches instead of silently comparing
+    /// checksums of different graphs. File-sourced sets (`file:`…) skip
+    /// the dataset/scale checks: there is no preset to regenerate.
+    pub fn check_run_identity(&self, dataset: &str, scale: f64, seed: u64) -> Result<()> {
+        if self.seed != seed {
+            bail!(
+                "shard set was partitioned with seed {} but the run says seed {seed} \
+                 (the partition would no longer match the lockstep oracle)",
+                self.seed
+            );
+        }
+        if !self.source.starts_with("file:") {
+            if self.source != dataset {
+                bail!(
+                    "shard set holds `{}` but the run asked for dataset `{dataset}` \
+                     (pass the matching dataset or re-shard)",
+                    self.source
+                );
+            }
+            if self.scale != scale {
+                bail!(
+                    "shard set was built at scale {} but the run says scale {scale} \
+                     (the graph would differ from the non-sharded oracle)",
+                    self.scale
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+fn get<'a>(map: &'a BTreeMap<String, TomlValue>, key: &str) -> Result<&'a TomlValue> {
+    map.get(key).with_context(|| format!("shard manifest missing `{key}`"))
+}
+
+fn get_int(map: &BTreeMap<String, TomlValue>, key: &str) -> Result<i64> {
+    get(map, key)?.as_int().with_context(|| format!("manifest `{key}` must be an integer"))
+}
+
+fn get_float(map: &BTreeMap<String, TomlValue>, key: &str) -> Result<f64> {
+    get(map, key)?.as_float().with_context(|| format!("manifest `{key}` must be numeric"))
+}
+
+fn get_str<'a>(map: &'a BTreeMap<String, TomlValue>, key: &str) -> Result<&'a str> {
+    get(map, key)?.as_str().with_context(|| format!("manifest `{key}` must be a string"))
+}
+
+// --- writing -------------------------------------------------------------
+
+struct CrcWriter<W: Write> {
+    w: W,
+    crc: Crc32,
+}
+
+impl<W: Write> CrcWriter<W> {
+    fn put(&mut self, bytes: &[u8]) -> std::io::Result<()> {
+        self.crc.update(bytes);
+        self.w.write_all(bytes)
+    }
+}
+
+/// Write one shard file; returns its manifest entry.
+fn write_shard_file(
+    path: &Path,
+    index: u32,
+    count: u32,
+    vertices: i64,
+    edges: &[(i64, i64)],
+    outdeg: &[u32],
+) -> Result<ShardMeta> {
+    // Distinct sources, sorted — the reader rebuilds PageRank weights
+    // (1/global-outdeg) from this table without the global graph.
+    let mut srcs: Vec<i64> = edges.iter().map(|&(u, _)| u).collect();
+    srcs.sort_unstable();
+    srcs.dedup();
+
+    let (mut row_min, mut row_max) = (i64::MAX, i64::MIN);
+    let (mut col_min, mut col_max) = (i64::MAX, i64::MIN);
+    for &(u, v) in edges {
+        col_min = col_min.min(u);
+        col_max = col_max.max(u);
+        row_min = row_min.min(v);
+        row_max = row_max.max(v);
+    }
+    if edges.is_empty() {
+        (row_min, row_max, col_min, col_max) = (-1, -1, -1, -1);
+    }
+
+    let file = File::create(path).with_context(|| format!("creating {}", path.display()))?;
+    let mut w = CrcWriter { w: BufWriter::new(file), crc: Crc32::new() };
+    w.put(SHARD_MAGIC)?;
+    w.put(&index.to_le_bytes())?;
+    w.put(&count.to_le_bytes())?;
+    w.put(&vertices.to_le_bytes())?;
+    w.put(&(srcs.len() as u32).to_le_bytes())?;
+    w.put(&(edges.len() as u64).to_le_bytes())?;
+    for &u in &srcs {
+        w.put(&u.to_le_bytes())?;
+        w.put(&outdeg[u as usize].to_le_bytes())?;
+    }
+    for &(u, v) in edges {
+        w.put(&u.to_le_bytes())?;
+        w.put(&v.to_le_bytes())?;
+    }
+    let crc = w.crc.finish();
+    w.w.write_all(&crc.to_le_bytes())?;
+    w.w.flush().with_context(|| format!("flushing {}", path.display()))?;
+    Ok(ShardMeta { edges: edges.len() as u64, crc, row_min, row_max, col_min, col_max })
+}
+
+/// The `sar shard` pipeline: hash-permute `graph` with the shared
+/// PageRank permutation, partition into `machines` shards with
+/// `strategy`, and write shard files + manifest into `dir`.
+///
+/// `source`/`scale`/`seed` record dataset identity in the manifest;
+/// `seed` also drives the permutation and (random) partition, exactly as
+/// in the in-memory drivers — so a distributed run over these shards
+/// lands on the same checksum as `--mode lockstep` with the same spec.
+pub fn shard_graph(
+    dir: &Path,
+    graph: &EdgeList,
+    machines: usize,
+    strategy: Strategy,
+    source: &str,
+    scale: f64,
+    seed: u64,
+) -> Result<ShardManifest> {
+    if machines == 0 {
+        bail!("cannot shard into 0 pieces");
+    }
+    // The source label is embedded in quoted TOML and in the `|`-joined
+    // digest-canonical form; neither escapes, so labels that would
+    // corrupt them (e.g. a filename with a quote) are rejected at write
+    // time instead of producing a manifest that can never be reloaded.
+    if source.contains(['"', '\\', '|']) || source.chars().any(|c| c.is_control()) {
+        bail!(
+            "shard source label `{source}` contains characters the manifest cannot \
+             carry (quotes, backslashes, `|` or control characters) — rename the input"
+        );
+    }
+    let hasher = IndexHasher::pagerank(graph.vertices as u64, seed);
+    let permuted = graph.permute(|v| hasher.hash(v));
+    let outdeg = permuted.out_degrees();
+    let parts = strategy.partition(&permuted.edges, machines, permuted.vertices, seed)?;
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating shard dir {}", dir.display()))?;
+
+    let mut metas = Vec::with_capacity(machines);
+    for (i, part) in parts.iter().enumerate() {
+        let path = ShardManifest::shard_path(dir, i);
+        let meta = write_shard_file(
+            &path,
+            i as u32,
+            machines as u32,
+            permuted.vertices,
+            part,
+            &outdeg,
+        )?;
+        metas.push(meta);
+    }
+    let manifest = ShardManifest {
+        format: SHARD_FORMAT,
+        source: source.to_string(),
+        scale,
+        seed,
+        vertices: permuted.vertices,
+        edges: permuted.edges.len() as u64,
+        partition: strategy.key().to_string(),
+        shards: metas,
+    };
+    manifest.save(dir)?;
+    Ok(manifest)
+}
+
+// --- reading -------------------------------------------------------------
+
+fn take<const N: usize>(rd: &mut impl Read, crc: &mut Crc32) -> Result<[u8; N]> {
+    let mut buf = [0u8; N];
+    rd.read_exact(&mut buf).context("truncated shard file")?;
+    crc.update(&buf);
+    Ok(buf)
+}
+
+/// Streaming shard reader: validates magic, header arithmetic against the
+/// real file size, source-table ordering, and (at end of stream) the
+/// CRC-32 trailer. Holds only the source-degree table in memory while
+/// edges stream past.
+pub struct ShardReader {
+    rd: BufReader<File>,
+    crc: Crc32,
+    pub index: u32,
+    pub count: u32,
+    pub vertices: i64,
+    pub edge_count: u64,
+    src_ids: Vec<i64>,
+    src_outdeg: Vec<u32>,
+}
+
+impl ShardReader {
+    pub fn open(path: &Path) -> Result<ShardReader> {
+        let file = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+        let file_len = file.metadata()?.len();
+        let mut rd = BufReader::new(file);
+        let mut crc = Crc32::new();
+
+        let magic: [u8; 8] = take(&mut rd, &mut crc)?;
+        if &magic != SHARD_MAGIC {
+            bail!(
+                "{} is not a sar shard file (bad magic {:02x?})",
+                path.display(),
+                &magic[..4]
+            );
+        }
+        let index = u32::from_le_bytes(take(&mut rd, &mut crc)?);
+        let count = u32::from_le_bytes(take(&mut rd, &mut crc)?);
+        let vertices = i64::from_le_bytes(take(&mut rd, &mut crc)?);
+        let srcs = u32::from_le_bytes(take(&mut rd, &mut crc)?) as u64;
+        let edge_count = u64::from_le_bytes(take(&mut rd, &mut crc)?);
+        if vertices < 1 || count == 0 || index >= count {
+            bail!(
+                "corrupt shard header in {}: index {index}/{count}, {vertices} vertices",
+                path.display()
+            );
+        }
+        // The header must account for the file byte-for-byte; this turns
+        // truncation, padding and absurd counts into immediate errors
+        // (and makes downstream `with_capacity` safe).
+        let want_len = srcs
+            .checked_mul(12)
+            .and_then(|t| edge_count.checked_mul(16).map(|e| (t, e)))
+            .and_then(|(t, e)| SHARD_HEADER_BYTES.checked_add(t)?.checked_add(e)?.checked_add(4))
+            .with_context(|| format!("absurd shard header in {}", path.display()))?;
+        if want_len != file_len {
+            bail!(
+                "shard {} is {file_len} bytes but its header describes {want_len} \
+                 (truncated or corrupt)",
+                path.display()
+            );
+        }
+
+        let mut src_ids = Vec::with_capacity(srcs as usize);
+        let mut src_outdeg = Vec::with_capacity(srcs as usize);
+        for _ in 0..srcs {
+            let entry: [u8; 12] = take(&mut rd, &mut crc)?;
+            let id = i64::from_le_bytes(entry[0..8].try_into().unwrap());
+            let deg = u32::from_le_bytes(entry[8..12].try_into().unwrap());
+            if let Some(&last) = src_ids.last() {
+                if id <= last {
+                    bail!("shard {} source table not strictly sorted", path.display());
+                }
+            }
+            src_ids.push(id);
+            src_outdeg.push(deg);
+        }
+        Ok(ShardReader { rd, crc, index, count, vertices, edge_count, src_ids, src_outdeg })
+    }
+
+    /// Stream every edge through `f` as `(src, dst, src_table_index)` —
+    /// the source's position in the degree table, resolved once per
+    /// edge during validation — then verify the CRC trailer. Returns
+    /// the verified payload CRC.
+    pub fn for_each_edge(&mut self, mut f: impl FnMut(i64, i64, usize)) -> Result<u32> {
+        for _ in 0..self.edge_count {
+            let rec: [u8; 16] = take(&mut self.rd, &mut self.crc)?;
+            let u = i64::from_le_bytes(rec[0..8].try_into().unwrap());
+            let v = i64::from_le_bytes(rec[8..16].try_into().unwrap());
+            let si = match self.src_ids.binary_search(&u) {
+                Ok(i) => i,
+                Err(_) => {
+                    bail!("shard edge source {u} missing from the degree table (corrupt shard)")
+                }
+            };
+            f(u, v, si);
+        }
+        let computed = self.crc.finish();
+        let mut trailer = [0u8; 4];
+        self.rd.read_exact(&mut trailer).context("truncated shard file (missing CRC)")?;
+        let stored = u32::from_le_bytes(trailer);
+        if stored != computed {
+            bail!(
+                "shard CRC mismatch: trailer says {stored:08x}, payload hashes to \
+                 {computed:08x} (corrupt shard file)"
+            );
+        }
+        Ok(computed)
+    }
+
+    /// Stream the edges into this shard's [`Csr`] (PageRank weights
+    /// `1/global-outdeg` from the embedded table, resolved during the
+    /// single validated pass). Only this shard is ever materialized.
+    /// Returns the CSR and the verified CRC.
+    pub fn into_csr(mut self) -> Result<(Csr, u32)> {
+        let recip: Vec<f32> =
+            self.src_outdeg.iter().map(|&d| 1.0 / d.max(1) as f32).collect();
+        let mut edges = Vec::with_capacity(self.edge_count as usize);
+        let mut weights = Vec::with_capacity(self.edge_count as usize);
+        let crc = self.for_each_edge(|u, v, si| {
+            edges.push((u, v));
+            weights.push(recip[si]);
+        })?;
+        Ok((Csr::from_edge_weights(&edges, &weights), crc))
+    }
+}
+
+/// Load shard `index` of a manifest-described set, cross-checking the
+/// shard header and CRC against the manifest.
+pub fn load_shard(dir: &Path, manifest: &ShardManifest, index: usize) -> Result<Csr> {
+    let meta = manifest
+        .shards
+        .get(index)
+        .with_context(|| format!("manifest has no shard {index}"))?;
+    let path = ShardManifest::shard_path(dir, index);
+    let reader = ShardReader::open(&path)?;
+    if reader.index as usize != index
+        || reader.count as usize != manifest.shards.len()
+        || reader.vertices != manifest.vertices
+        || reader.edge_count != meta.edges
+    {
+        bail!(
+            "shard {} disagrees with the manifest (shard {}/{} over {} vertices, {} edges; \
+             manifest expects {}/{} over {} vertices, {} edges)",
+            path.display(),
+            reader.index,
+            reader.count,
+            reader.vertices,
+            reader.edge_count,
+            index,
+            manifest.shards.len(),
+            manifest.vertices,
+            meta.edges
+        );
+    }
+    let (csr, crc) = reader.into_csr()?;
+    if crc != meta.crc {
+        bail!(
+            "shard {} CRC {crc:08x} does not match the manifest's {:08x} — the shard \
+             dir mixes files from different `sar shard` runs",
+            path.display(),
+            meta.crc
+        );
+    }
+    Ok(csr)
+}
+
+/// Load the whole shard set (manifest + every CSR) — the sharded lockstep
+/// oracle's entry point; workers load only their own shard via
+/// [`load_shard`].
+pub fn load_all_shards(dir: &Path) -> Result<(ShardManifest, Vec<Csr>)> {
+    let manifest = ShardManifest::load(dir)?;
+    let shards: Vec<Csr> = (0..manifest.shards.len())
+        .map(|i| load_shard(dir, &manifest, i))
+        .collect::<Result<_>>()?;
+    Ok((manifest, shards))
+}
+
+/// Parse a whitespace-separated `src dst` edge-list text file (`#`
+/// comments and blank lines skipped). Vertex count = max id + 1.
+pub fn load_edge_list(path: &Path) -> Result<EdgeList> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading edge list {}", path.display()))?;
+    let mut edges = Vec::new();
+    let mut max_id: i64 = -1;
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let (u, v) = match (it.next(), it.next(), it.next()) {
+            (Some(u), Some(v), None) => (u, v),
+            _ => bail!("{}:{}: expected `src dst`", path.display(), lineno + 1),
+        };
+        let u: i64 = u
+            .parse()
+            .with_context(|| format!("{}:{}: bad vertex `{u}`", path.display(), lineno + 1))?;
+        let v: i64 = v
+            .parse()
+            .with_context(|| format!("{}:{}: bad vertex `{v}`", path.display(), lineno + 1))?;
+        if u < 0 || v < 0 {
+            bail!("{}:{}: negative vertex id", path.display(), lineno + 1);
+        }
+        max_id = max_id.max(u).max(v);
+        edges.push((u, v));
+    }
+    if edges.is_empty() {
+        bail!("edge list {} holds no edges", path.display());
+    }
+    Ok(EdgeList { vertices: max_id + 1, edges })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gen::{generate_power_law, GraphGenParams};
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("sar-shard-test-{}-{}", std::process::id(), tag));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn small_graph(seed: u64) -> EdgeList {
+        generate_power_law(&GraphGenParams {
+            vertices: 300,
+            edges: 2_000,
+            alpha_out: 1.2,
+            alpha_in: 1.2,
+            seed,
+        })
+    }
+
+    #[test]
+    fn shard_roundtrip_matches_in_memory_partition() {
+        let dir = tmp_dir("roundtrip");
+        let g = small_graph(7);
+        let seed = 7u64;
+        let manifest = shard_graph(&dir, &g, 4, Strategy::Random, "twitter", 0.01, seed).unwrap();
+        assert_eq!(manifest.shards.len(), 4);
+        assert_eq!(manifest.edges, g.edges.len() as u64);
+
+        // Oracle: the in-memory permute+partition+CSR path.
+        let hasher = IndexHasher::pagerank(g.vertices as u64, seed);
+        let permuted = g.permute(|v| hasher.hash(v));
+        let outdeg = permuted.out_degrees();
+        let parts = crate::partition::random_edge_partition(&permuted.edges, 4, seed);
+        for i in 0..4 {
+            let want = Csr::from_edges(&parts[i], |u| 1.0 / outdeg[u as usize].max(1) as f32);
+            let got = load_shard(&dir, &manifest, i).unwrap();
+            assert_eq!(got.row_globals, want.row_globals, "shard {i} rows");
+            assert_eq!(got.col_globals, want.col_globals, "shard {i} cols");
+            assert_eq!(got.row_ptr, want.row_ptr, "shard {i} row_ptr");
+            assert_eq!(got.col, want.col, "shard {i} col");
+            assert_eq!(got.weight, want.weight, "shard {i} weights (bit-exact)");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn manifest_text_roundtrips_and_digest_is_stable() {
+        let dir = tmp_dir("manifest");
+        let g = small_graph(3);
+        let manifest = shard_graph(&dir, &g, 2, Strategy::Random, "yahoo", 0.5, 99).unwrap();
+        let parsed = ShardManifest::from_toml(&manifest.to_toml()).unwrap();
+        assert_eq!(parsed, manifest);
+        assert_eq!(parsed.digest(), manifest.digest());
+        let loaded = ShardManifest::load(&dir).unwrap();
+        assert_eq!(loaded, manifest);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn edited_manifest_is_rejected() {
+        let dir = tmp_dir("edited");
+        let g = small_graph(5);
+        let manifest = shard_graph(&dir, &g, 2, Strategy::Random, "twitter", 0.01, 5).unwrap();
+        // Flip one shard's recorded edge count AND the total so the
+        // cheap sum check passes — the digest must still catch it.
+        // (Needles are full lines so a count that happens to be a
+        // decimal prefix of another can't mis-target the replace.)
+        let text = manifest.to_toml();
+        let doctored = text
+            .replacen(
+                &format!("\nedges = {}\n", manifest.shards[0].edges),
+                &format!("\nedges = {}\n", manifest.shards[0].edges + 1),
+                1,
+            )
+            .replacen(
+                &format!("\nedges = {}\n", manifest.edges),
+                &format!("\nedges = {}\n", manifest.edges + 1),
+                1,
+            );
+        assert_ne!(text, doctored);
+        let err = ShardManifest::from_toml(&doctored).unwrap_err();
+        assert!(format!("{err:#}").contains("digest"), "got: {err:#}");
+
+        // An absurd shard count is rejected (readably) before any
+        // count-sized allocation could abort the process.
+        let big = text.replacen(
+            &format!("count = {}", manifest.shards.len()),
+            "count = 99999999999",
+            1,
+        );
+        let err = ShardManifest::from_toml(&big).unwrap_err();
+        assert!(format!("{err:#}").contains("shards"), "got: {err:#}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn unescapable_source_labels_are_rejected_at_write_time() {
+        let dir = tmp_dir("badsource");
+        let g = EdgeList { vertices: 8, edges: vec![(0, 1), (2, 3)] };
+        for bad in ["file:my \"graph\".txt", "a|b", "back\\slash", "ctrl\nchar"] {
+            let err = shard_graph(&dir, &g, 2, Strategy::Random, bad, 1.0, 1).unwrap_err();
+            assert!(format!("{err:#}").contains("source label"), "got: {err:#}");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_shard_payload_is_rejected() {
+        let dir = tmp_dir("corrupt");
+        let g = small_graph(11);
+        let manifest = shard_graph(&dir, &g, 2, Strategy::Random, "twitter", 0.01, 11).unwrap();
+        let path = ShardManifest::shard_path(&dir, 1);
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Flip one bit mid-payload (keep the length intact).
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_shard(&dir, &manifest, 1).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("CRC") || msg.contains("sorted") || msg.contains("degree table"),
+            "corruption must surface as an integrity error, got: {msg}"
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn truncated_shard_is_rejected_not_hung() {
+        let dir = tmp_dir("truncated");
+        let g = small_graph(13);
+        let manifest = shard_graph(&dir, &g, 2, Strategy::Random, "twitter", 0.01, 13).unwrap();
+        let path = ShardManifest::shard_path(&dir, 0);
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 9]).unwrap();
+        let err = load_shard(&dir, &manifest, 0).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated"), "got: {err:#}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn empty_and_tiny_shards_are_valid() {
+        let dir = tmp_dir("tiny");
+        // 2 edges over 8 shards: most shards end up empty.
+        let g = EdgeList { vertices: 64, edges: vec![(0, 1), (2, 3)] };
+        let manifest = shard_graph(&dir, &g, 8, Strategy::Random, "twitter", 1.0, 1).unwrap();
+        let mut total = 0usize;
+        for i in 0..8 {
+            let csr = load_shard(&dir, &manifest, i).unwrap();
+            total += csr.nnz();
+        }
+        assert_eq!(total, 2);
+        let empty = manifest.shards.iter().find(|m| m.edges == 0).expect("an empty shard");
+        assert_eq!((empty.row_min, empty.row_max), (-1, -1));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn greedy_strategy_shards_and_loads() {
+        let dir = tmp_dir("greedy");
+        let g = small_graph(17);
+        let manifest = shard_graph(&dir, &g, 4, Strategy::Greedy, "twitter", 0.01, 17).unwrap();
+        assert_eq!(manifest.partition, "greedy");
+        let (loaded, shards) = load_all_shards(&dir).unwrap();
+        assert_eq!(loaded, manifest);
+        let total: usize = shards.iter().map(|s| s.nnz()).sum();
+        assert_eq!(total, g.edges.len());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn edge_list_file_parses() {
+        let dir = tmp_dir("edgefile");
+        let path = dir.join("edges.txt");
+        std::fs::write(&path, "# comment\n0 1\n1 2\n\n5 0\n").unwrap();
+        let g = load_edge_list(&path).unwrap();
+        assert_eq!(g.vertices, 6);
+        assert_eq!(g.edges, vec![(0, 1), (1, 2), (5, 0)]);
+        assert!(load_edge_list(&dir.join("missing.txt")).is_err());
+        std::fs::write(&path, "0 1 2\n").unwrap();
+        assert!(load_edge_list(&path).is_err(), "3 columns must be rejected");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -7,13 +7,17 @@ use sparse_allreduce::cli::{usage_for, Args, USAGE};
 use sparse_allreduce::cluster::{self, LaunchOpts, WorkerOpts};
 use sparse_allreduce::config::{validate_world, RunConfig};
 use sparse_allreduce::coordinator::{
-    run_pagerank_config, run_pagerank_distributed, run_pagerank_lockstep, ExecMode, PageRankRun,
+    run_pagerank_config, run_pagerank_distributed, run_pagerank_lockstep,
+    run_pagerank_lockstep_sharded, ExecMode, PageRankRun,
 };
-use sparse_allreduce::graph::{DatasetPreset, DatasetSpec};
+use sparse_allreduce::graph::{
+    load_edge_list, shard_graph, DatasetPreset, DatasetSpec, ShardManifest,
+};
+use sparse_allreduce::partition::Strategy;
 use sparse_allreduce::runtime::{Runtime, XlaGradEngine};
 use sparse_allreduce::topology::{plan_degrees, PlannerParams};
 use sparse_allreduce::util::{human_bytes, human_duration, logging};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 fn main() {
     logging::init();
@@ -35,6 +39,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "" | "help" | "--help" => cmd_help(args),
         "info" => cmd_info(args),
         "plan" => cmd_plan(args),
+        "shard" => cmd_shard(args),
         "pagerank" => cmd_pagerank(args),
         "diameter" => cmd_diameter(args),
         "train" => cmd_train(args),
@@ -101,12 +106,86 @@ fn cmd_plan(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_shard(args: &Args) -> Result<()> {
+    args.expect_known(
+        "shard",
+        &["out", "workers", "dataset", "scale", "seed", "partition", "edges"],
+    )?;
+    let out = PathBuf::from(
+        args.flag("out")
+            .ok_or_else(|| anyhow::anyhow!("--out required\n\n{}", usage_for("shard").unwrap()))?,
+    );
+    let workers = args.usize_flag("workers", 4)?;
+    let seed = args.u64_flag("seed", 42)?;
+    let strategy = Strategy::parse(args.flag("partition").unwrap_or("random"))?;
+
+    let (graph, source, scale) = match args.flag("edges") {
+        Some(path) => {
+            // An edge-list file is sharded as-is; silently dropping
+            // preset flags would mislabel the run.
+            if args.flag("dataset").is_some() || args.flag("scale").is_some() {
+                bail!(
+                    "--edges shards the file as-is; --dataset/--scale only apply to \
+                     synthetic presets (drop them or shard a preset instead)"
+                );
+            }
+            let path = PathBuf::from(path);
+            let graph = load_edge_list(&path)?;
+            let name = path
+                .file_name()
+                .map(|n| n.to_string_lossy().into_owned())
+                .unwrap_or_else(|| path.display().to_string());
+            (graph, format!("file:{name}"), 1.0)
+        }
+        None => {
+            let spec = dataset_from(args)?;
+            let scale = args.f64_flag("scale", 0.05)?;
+            log::info!("generating {} (scale {scale})", spec.name());
+            (spec.generate(), spec.preset.key().to_string(), scale)
+        }
+    };
+    println!(
+        "sharding {} vertices / {} edges into {workers} shards ({}) under {}",
+        graph.vertices,
+        graph.num_edges(),
+        strategy.key(),
+        out.display()
+    );
+    let manifest = shard_graph(&out, &graph, workers, strategy, &source, scale, seed)?;
+    let bytes: u64 = (0..workers)
+        .map(|i| {
+            std::fs::metadata(ShardManifest::shard_path(&out, i)).map(|m| m.len()).unwrap_or(0)
+        })
+        .sum();
+    for (i, m) in manifest.shards.iter().enumerate() {
+        println!(
+            "  shard {i}: {} edges, rows [{}..{}], cols [{}..{}], crc {:08x}",
+            m.edges, m.row_min, m.row_max, m.col_min, m.col_max, m.crc
+        );
+    }
+    // The hint must carry every flag check_run_identity compares, or
+    // running it verbatim would be rejected for using the defaults.
+    let identity_flags = if source.starts_with("file:") {
+        String::new()
+    } else {
+        format!(" --dataset {source} --scale {scale}")
+    };
+    println!(
+        "manifest digest {:016x} ({} total on disk); run with:\n  sar launch --degrees \
+         <schedule covering {workers}>{identity_flags} --seed {seed} --shards {}",
+        manifest.digest(),
+        human_bytes(bytes),
+        out.display()
+    );
+    Ok(())
+}
+
 fn cmd_pagerank(args: &Args) -> Result<()> {
     args.expect_known(
         "pagerank",
         &[
             "mode", "distributed", "dataset", "scale", "degrees", "replication", "iters",
-            "threads", "seed", "bin",
+            "threads", "seed", "bin", "shards",
         ],
     )?;
     let mode = if args.has_switch("distributed") {
@@ -131,19 +210,28 @@ fn cmd_pagerank(args: &Args) -> Result<()> {
         ..RunConfig::default()
     };
     cfg.scale = args.f64_flag("scale", 0.05)?;
+    cfg.shards = args.flag("shards").map(|s| s.to_string());
+    if cfg.shards.is_some() && matches!(mode, ExecMode::Threaded) {
+        bail!(
+            "--shards supports --mode lockstep and --mode distributed (the threaded \
+             driver shares one in-memory graph; see `sar help pagerank`)"
+        );
+    }
     // ONE source of truth for the graph: distributed workers regenerate
     // it from cfg's (dataset, scale, seed), so the in-process modes must
     // derive their spec from the same fields or the advertised
-    // cross-mode checksum equality silently breaks.
+    // cross-mode checksum equality silently breaks. (With --shards the
+    // on-disk shard set is that source of truth instead, for every mode.)
     let preset = DatasetPreset::by_name(&cfg.dataset).ok_or_else(|| {
         anyhow::anyhow!("unknown dataset `{}` (twitter|yahoo|docterm)", cfg.dataset)
     })?;
 
-    let run = match mode {
-        ExecMode::MultiProcess => {
+    let run = match (mode, cfg.shards.clone()) {
+        (ExecMode::MultiProcess, _) => {
             let bin = args.flag("bin").map(PathBuf::from);
             run_pagerank_distributed(&cfg, bin.as_deref())?
         }
+        (ExecMode::Lockstep, Some(dir)) => run_pagerank_lockstep_sharded(Path::new(&dir), &cfg)?,
         _ => {
             let spec = DatasetSpec::new(preset, cfg.scale, cfg.seed);
             log::info!("generating {} (scale {})", spec.name(), cfg.scale);
@@ -269,7 +357,7 @@ fn cmd_launch(args: &Args) -> Result<()> {
         "launch",
         &[
             "workers", "degrees", "replication", "iters", "dataset", "scale", "seed", "threads",
-            "bind", "file", "no-spawn", "bin",
+            "bind", "file", "no-spawn", "bin", "shards",
         ],
     )?;
     let mut cfg = match args.flag("file") {
@@ -287,6 +375,9 @@ fn cmd_launch(args: &Args) -> Result<()> {
             bail!("unknown dataset `{d}` (twitter|yahoo|docterm)");
         }
         cfg.dataset = d.to_string();
+    }
+    if let Some(dir) = args.flag("shards") {
+        cfg.shards = Some(dir.to_string());
     }
 
     // CLI overrides may contradict a worker count pinned in the file;

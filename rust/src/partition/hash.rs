@@ -32,6 +32,16 @@ impl IndexHasher {
         Self { range, half_bits, half_mask: (1u64 << half_bits) - 1, keys }
     }
 
+    /// The permutation every PageRank driver applies before edge
+    /// partitioning (run seed salted so the permutation decorrelates
+    /// from the partition RNG). The lockstep/threaded drivers, the
+    /// multi-process workers, and the `sar shard` writer MUST all use
+    /// this constructor — a divergent permutation silently breaks the
+    /// cross-mode checksum equality the test suite relies on.
+    pub fn pagerank(vertices: u64, run_seed: u64) -> IndexHasher {
+        IndexHasher::new(vertices, run_seed ^ 0x5EED)
+    }
+
     #[inline]
     fn round(&self, x: u64, key: u64) -> u64 {
         // xorshift-multiply round function, truncated to half width

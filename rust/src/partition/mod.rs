@@ -15,3 +15,56 @@ pub mod range;
 pub use edge::{greedy_edge_partition, random_edge_partition, shard_stats, ShardStats};
 pub use hash::IndexHasher;
 pub use range::RangeCover;
+
+use anyhow::{bail, Result};
+
+/// Which edge-partitioning scheme to use (the `sar shard --partition`
+/// knob; the in-memory PageRank drivers always use [`Strategy::Random`],
+/// the paper's choice for data "sitting in the network").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// Uniform random edge assignment (paper §II-B default).
+    Random,
+    /// PowerGraph's greedy heuristic (~15-20% shorter vertex lists).
+    Greedy,
+}
+
+impl Strategy {
+    pub fn parse(s: &str) -> Result<Strategy> {
+        match s {
+            "random" => Ok(Strategy::Random),
+            "greedy" => Ok(Strategy::Greedy),
+            other => bail!("unknown partition strategy `{other}` (random|greedy)"),
+        }
+    }
+
+    pub fn key(&self) -> &'static str {
+        match self {
+            Strategy::Random => "random",
+            Strategy::Greedy => "greedy",
+        }
+    }
+
+    /// Partition `edges` into `m` shards. `vertices` and `seed` feed the
+    /// greedy and random schemes respectively.
+    pub fn partition(
+        &self,
+        edges: &[(i64, i64)],
+        m: usize,
+        vertices: i64,
+        seed: u64,
+    ) -> Result<Vec<Vec<(i64, i64)>>> {
+        if m == 0 {
+            bail!("cannot partition into 0 shards");
+        }
+        match self {
+            Strategy::Random => Ok(random_edge_partition(edges, m, seed)),
+            Strategy::Greedy => {
+                if m > 64 {
+                    bail!("greedy partitioning supports at most 64 shards, got {m}");
+                }
+                Ok(greedy_edge_partition(edges, m, vertices))
+            }
+        }
+    }
+}

@@ -50,12 +50,28 @@ pub fn encode_config_part(part: &ConfigPart) -> Vec<u8> {
     out
 }
 
-/// Deserialize a config part.
-pub fn decode_config_part(buf: &[u8]) -> ConfigPart {
-    assert!(buf.len() >= 8, "short config part");
+fn corrupt(msg: &str) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
+}
+
+/// Deserialize a config part. A truncated or length-inconsistent buffer
+/// is an error, not a panic: payloads cross process boundaries on the
+/// TCP data plane, so corruption must fail the reduce (and surface as a
+/// worker FAILED report), not abort the worker process.
+pub fn decode_config_part(buf: &[u8]) -> std::io::Result<ConfigPart> {
+    if buf.len() < 8 {
+        return Err(corrupt("short config part"));
+    }
     let dn = u32::from_le_bytes([buf[0], buf[1], buf[2], buf[3]]) as usize;
     let un = u32::from_le_bytes([buf[4], buf[5], buf[6], buf[7]]) as usize;
-    assert_eq!(buf.len(), 8 + (dn + un) * 8, "config part length mismatch");
+    let want = dn
+        .checked_add(un)
+        .and_then(|n| n.checked_mul(8))
+        .and_then(|n| n.checked_add(8))
+        .ok_or_else(|| corrupt("config part lengths overflow"))?;
+    if buf.len() != want {
+        return Err(corrupt("config part length mismatch"));
+    }
     let mut off = 8usize;
     let read_i64 = |off: &mut usize| -> i64 {
         let v = i64::from_le_bytes(buf[*off..*off + 8].try_into().unwrap());
@@ -64,7 +80,7 @@ pub fn decode_config_part(buf: &[u8]) -> ConfigPart {
     };
     let down_idx: Vec<i64> = (0..dn).map(|_| read_i64(&mut off)).collect();
     let up_idx: Vec<i64> = (0..un).map(|_| read_i64(&mut off)).collect();
-    ConfigPart { down_idx, up_idx }
+    Ok(ConfigPart { down_idx, up_idx })
 }
 
 /// Serialize a value segment.
@@ -72,9 +88,13 @@ pub fn encode_values<R: ReduceOp>(vals: &[R::T]) -> Vec<u8> {
     values_to_bytes::<R>(vals)
 }
 
-/// Deserialize a value segment.
-pub fn decode_values<R: ReduceOp>(buf: &[u8]) -> Vec<R::T> {
-    values_from_bytes::<R>(buf)
+/// Deserialize a value segment; a buffer that is not a whole number of
+/// elements is an error (see [`decode_config_part`] on why not a panic).
+pub fn decode_values<R: ReduceOp>(buf: &[u8]) -> std::io::Result<Vec<R::T>> {
+    if buf.len() % R::WIDTH != 0 {
+        return Err(corrupt("ragged value buffer"));
+    }
+    Ok(values_from_bytes::<R>(buf))
 }
 
 /// Build an envelope for a config part.
@@ -108,28 +128,46 @@ mod tests {
     fn config_part_roundtrip() {
         let p = ConfigPart { down_idx: vec![1, -5, 1 << 40], up_idx: vec![7] };
         let enc = encode_config_part(&p);
-        assert_eq!(decode_config_part(&enc), p);
+        assert_eq!(decode_config_part(&enc).unwrap(), p);
     }
 
     #[test]
     fn empty_config_part_roundtrip() {
         let p = ConfigPart::default();
-        assert_eq!(decode_config_part(&encode_config_part(&p)), p);
+        assert_eq!(decode_config_part(&encode_config_part(&p)).unwrap(), p);
     }
 
     #[test]
     fn values_roundtrip() {
         let vals = vec![1.5f32, -2.25, 0.0];
         let enc = encode_values::<SumF32>(&vals);
-        assert_eq!(decode_values::<SumF32>(&enc), vals);
+        assert_eq!(decode_values::<SumF32>(&enc).unwrap(), vals);
     }
 
     #[test]
-    #[should_panic(expected = "length mismatch")]
-    fn corrupt_config_part_panics() {
-        let p = ConfigPart { down_idx: vec![1, 2], up_idx: vec![] };
-        let mut enc = encode_config_part(&p);
-        enc.pop();
-        decode_config_part(&enc);
+    fn corrupt_config_part_is_an_error_not_a_panic() {
+        let p = ConfigPart { down_idx: vec![1, 2], up_idx: vec![3] };
+        let enc = encode_config_part(&p);
+        // truncated payload
+        assert!(decode_config_part(&enc[..enc.len() - 1]).is_err());
+        // trailing garbage
+        let mut long = enc.clone();
+        long.push(0xFF);
+        assert!(decode_config_part(&long).is_err());
+        // shorter than the length prefix itself
+        assert!(decode_config_part(&enc[..7]).is_err());
+        // length prefix lying about the element counts
+        let mut lying = enc.clone();
+        lying[0] = 0xFF;
+        lying[1] = 0xFF;
+        lying[2] = 0xFF;
+        lying[3] = 0xFF;
+        assert!(decode_config_part(&lying).is_err());
+    }
+
+    #[test]
+    fn ragged_value_buffer_is_an_error() {
+        assert!(decode_values::<SumF32>(&[1, 2, 3]).is_err());
+        assert_eq!(decode_values::<SumF32>(&[]).unwrap(), Vec::<f32>::new());
     }
 }

@@ -4,12 +4,14 @@
 //! The offline build has no `rand`, `env_logger` or `humansize`, so these
 //! are implemented in-repo.
 
+pub mod crc;
 pub mod fmt;
 pub mod logging;
 pub mod rng;
 pub mod stats;
 pub mod timer;
 
+pub use crc::{crc32, fnv1a64, Crc32};
 pub use fmt::{human_bytes, human_count, human_duration};
 pub use rng::{Pcg32, SplitMix64, Zipf};
 pub use stats::Summary;

@@ -1,6 +1,13 @@
 //! Multi-process deployment-plane tests: wire framing across real
 //! sockets, `spawn_local` end-to-end equality against the lockstep
-//! oracle, and §V replica failover with a worker killed mid-run.
+//! oracle, §V replica failover with a worker killed mid-run, and the
+//! shard-ingestion smoke test (`sar shard` dir → 4-process launch →
+//! lockstep checksum).
+//!
+//! Every socket in this suite — coordinator control listener, worker
+//! data listeners — binds port 0 and discovers the advertised address
+//! from the kernel, so parallel `cargo test` runs (and the two tests in
+//! `mp_parallel_launches_do_not_collide`) never race on a fixed port.
 //!
 //! The process-spawning tests locate the `sar` binary through
 //! `CARGO_BIN_EXE_sar` (cargo builds it for integration tests) and are
@@ -10,7 +17,8 @@
 use sparse_allreduce::allreduce::Phase;
 use sparse_allreduce::apps::pagerank::{DistPageRank, PageRankConfig};
 use sparse_allreduce::cluster::{launch_local, spawn_session, LaunchOpts};
-use sparse_allreduce::graph::{DatasetPreset, DatasetSpec};
+use sparse_allreduce::graph::{shard_graph, DatasetPreset, DatasetSpec};
+use sparse_allreduce::partition::Strategy;
 use sparse_allreduce::transport::wire::{decode_header, encode_header, HEADER_BYTES};
 use sparse_allreduce::transport::Tag;
 use std::io::{Read, Write};
@@ -148,6 +156,79 @@ fn mp_killing_one_replica_fails_over() {
         assert!(run.per_node[d].is_none(), "dead worker {d} cannot have reported");
     }
     assert!(run.per_node.iter().filter(|m| m.is_some()).count() >= 4);
+}
+
+/// Acceptance: the full shard pipeline — `sar shard`-equivalent output
+/// on disk, then a 4-process launch whose workers load (and CRC/digest
+/// verify) only their own shard — lands on the lockstep oracle's
+/// checksum. The no-regeneration property is asserted in-process in
+/// `tests/shard.rs`; here the same loader runs inside real workers.
+#[test]
+fn mp_shard_launch_matches_lockstep() {
+    let opts = tiny_opts();
+    let dir = std::env::temp_dir()
+        .join(format!("sar-mp-shard-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let preset = DatasetPreset::by_name(&opts.dataset).unwrap();
+    let graph = DatasetSpec::new(preset, opts.scale, opts.seed).generate();
+    let manifest = shard_graph(
+        &dir,
+        &graph,
+        opts.logical(),
+        Strategy::Random,
+        &opts.dataset,
+        opts.scale,
+        opts.seed,
+    )
+    .expect("sharding failed");
+    assert_eq!(manifest.shards.len(), 4);
+
+    let want = reference_checksum(&opts);
+    let sharded = LaunchOpts { shards: Some(dir.clone()), ..opts };
+    let run = launch_local(sar_bin(), sharded).expect("sharded distributed run failed");
+    assert_eq!(run.dead, Vec::<usize>::new());
+    assert!(
+        (run.checksum - want).abs() < 1e-9,
+        "sharded multi-process checksum {} != lockstep {}",
+        run.checksum,
+        want
+    );
+
+    // A launch whose seed contradicts the manifest is rejected before
+    // the run starts (coordinator-side; the worker-side digest check is
+    // covered in tests/shard.rs).
+    let mismatched =
+        LaunchOpts { shards: Some(dir.clone()), seed: 43, ..tiny_opts() };
+    let err = launch_local(sar_bin(), mismatched).unwrap_err();
+    assert!(format!("{err:#}").contains("seed"), "got: {err:#}");
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Satellite regression: everything binds port 0 (ephemeral) and
+/// discovers addresses from the kernel, so two whole cluster launches
+/// running at the same time — as under parallel `cargo test` — must
+/// both succeed instead of flaking on `AddrInUse`.
+#[test]
+fn mp_parallel_launches_do_not_collide() {
+    let runs: Vec<_> = (0..2)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let opts = LaunchOpts {
+                    degrees: vec![2],
+                    iters: 2,
+                    seed: 42 + i,
+                    ..tiny_opts()
+                };
+                launch_local(sar_bin(), opts)
+            })
+        })
+        .collect();
+    for (i, h) in runs.into_iter().enumerate() {
+        let run = h.join().unwrap().unwrap_or_else(|e| panic!("launch {i} failed: {e:#}"));
+        assert_eq!(run.world, 2);
+        assert!(run.checksum.is_finite() && run.checksum > 0.0);
+    }
 }
 
 /// Bring-up validation: a worker count that contradicts the degree

@@ -226,3 +226,175 @@ fn prop_or_idempotent() {
         assert_eq!(r1, r2, "seed {seed}: OR-reduce must be deterministic & idempotent");
     }
 }
+
+// ---------------------------------------------------------------------------
+// Merge-machinery properties (satellite: `sparse/merge.rs` vs a naive
+// sort-and-fold oracle over randomized Zipf index sets).
+//
+// The paper's whole aggregation engine reduces to merging sorted sparse
+// vectors; these properties pin the k-way pair tree and the config-phase
+// union/scatter pipeline to the dumbest possible oracle: concatenate all
+// (index, value) pairs, sort by index, fold equal runs.
+
+use sparse_allreduce::sparse::{
+    k_way_union_with_maps, k_way_union_with_maps_two_phase, scatter_combine, spvec_from_pairs,
+    tree_sum, tree_sum_ref, SpVec,
+};
+use sparse_allreduce::util::Zipf;
+
+/// Naive oracle: sort-and-fold every (index, value) pair of every input.
+fn fold_oracle(inputs: &[SpVec<f32>]) -> (Vec<i64>, Vec<f64>) {
+    let mut pairs: Vec<(i64, f64)> = inputs
+        .iter()
+        .flat_map(|v| v.idx.iter().zip(&v.val).map(|(&i, &x)| (i, x as f64)))
+        .collect();
+    pairs.sort_unstable_by_key(|&(i, _)| i);
+    let mut idx = Vec::new();
+    let mut val: Vec<f64> = Vec::new();
+    for (i, x) in pairs {
+        if idx.last() == Some(&i) {
+            *val.last_mut().unwrap() += x;
+        } else {
+            idx.push(i);
+            val.push(x);
+        }
+    }
+    (idx, val)
+}
+
+/// Check both merge pipelines (pair tree; k-way union + scatter-add)
+/// against the fold oracle.
+fn check_against_oracle(inputs: &[SpVec<f32>], label: &str) {
+    let (oidx, oval) = fold_oracle(inputs);
+
+    let tree = tree_sum::<SumF32>(inputs.to_vec());
+    assert_eq!(tree.idx, oidx, "{label}: tree_sum index set");
+    for (k, (a, &b)) in tree.val.iter().zip(&oval).enumerate() {
+        assert!(
+            (*a as f64 - b).abs() < 1e-3 * (1.0 + b.abs()),
+            "{label}: tree_sum value at {k}: {a} vs {b}"
+        );
+    }
+    let tref = tree_sum_ref::<SumF32>(inputs);
+    assert_eq!(tref.idx, tree.idx, "{label}: tree_sum_ref diverged");
+
+    // Config-phase pipeline: union with maps, then scatter-add values.
+    let lists: Vec<&[i64]> = inputs.iter().map(|v| v.idx.as_slice()).collect();
+    let (union, maps) = k_way_union_with_maps(&lists);
+    assert_eq!(union, oidx, "{label}: union index set");
+    assert_eq!(
+        k_way_union_with_maps_two_phase(&lists),
+        (union.clone(), maps.clone()),
+        "{label}: two-phase union diverged from scan"
+    );
+    let segs: Vec<&[f32]> = inputs.iter().map(|v| v.val.as_slice()).collect();
+    let scattered = scatter_combine::<SumF32>(union.len(), &segs, &maps);
+    for (k, (a, &b)) in scattered.iter().zip(&oval).enumerate() {
+        assert!(
+            (*a as f64 - b).abs() < 1e-3 * (1.0 + b.abs()),
+            "{label}: scatter value at {k}: {a} vs {b}"
+        );
+    }
+}
+
+/// One randomized Zipf input set: k vectors, Zipf-distributed indices
+/// (heavy index collisions, like power-law vertex data), some empty.
+fn zipf_inputs(seed: u64) -> Vec<SpVec<f32>> {
+    let mut rng = Pcg32::new(seed);
+    let k = rng.gen_range(0, 9);
+    let range = rng.gen_range(8, 500) as u64;
+    let alpha = 1.05 + rng.next_f64() * 0.5;
+    let zipf = Zipf::new(range, alpha);
+    (0..k)
+        .map(|_| {
+            let n = rng.gen_range(0, 120); // 0 → empty input
+            spvec_from_pairs::<SumF32>(
+                (0..n)
+                    .map(|_| (zipf.sample(&mut rng) as i64, rng.next_f32() * 4.0 - 2.0))
+                    .collect(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn prop_merge_matches_fold_oracle_on_zipf_sets() {
+    for seed in 500..500 + CASES {
+        let inputs = zipf_inputs(seed);
+        check_against_oracle(&inputs, &format!("seed {seed}"));
+    }
+}
+
+#[test]
+fn prop_merge_single_partition_is_identity() {
+    for seed in 600..610 {
+        let mut inputs = zipf_inputs(seed);
+        inputs.truncate(1);
+        if inputs.is_empty() {
+            inputs = vec![spvec_from_pairs::<SumF32>(vec![(3, 1.0), (9, 2.0)])];
+        }
+        let out = tree_sum::<SumF32>(inputs.clone());
+        assert_eq!(out.idx, inputs[0].idx, "single input must pass through");
+        assert_eq!(out.val, inputs[0].val);
+        check_against_oracle(&inputs, &format!("single seed {seed}"));
+    }
+}
+
+#[test]
+fn prop_merge_empty_inputs() {
+    // no inputs at all
+    check_against_oracle(&[], "zero inputs");
+    assert!(tree_sum::<SumF32>(vec![]).is_empty());
+    // all-empty inputs
+    let empties = vec![SpVec::new(), SpVec::new(), SpVec::new()];
+    check_against_oracle(&empties, "all empty");
+    // empties mixed between non-empties
+    let mixed = vec![
+        SpVec::new(),
+        spvec_from_pairs::<SumF32>(vec![(1, 1.0), (5, 5.0)]),
+        SpVec::new(),
+        spvec_from_pairs::<SumF32>(vec![(5, 0.5)]),
+        SpVec::new(),
+    ];
+    check_against_oracle(&mixed, "mixed empties");
+}
+
+#[test]
+fn prop_merge_disjoint_supports() {
+    // input j owns indices ≡ j (mod k): no collisions anywhere, so the
+    // merged support is the concatenation and every value is untouched.
+    for k in [2usize, 3, 5, 8] {
+        let mut rng = Pcg32::new(1000 + k as u64);
+        let inputs: Vec<SpVec<f32>> = (0..k)
+            .map(|j| {
+                let n = rng.gen_range(1, 40);
+                spvec_from_pairs::<SumF32>(
+                    (0..n)
+                        .map(|t| ((t * k + j) as i64, rng.next_f32()))
+                        .collect(),
+                )
+            })
+            .collect();
+        let (oidx, _) = fold_oracle(&inputs);
+        let total: usize = inputs.iter().map(|v| v.idx.len()).sum();
+        assert_eq!(oidx.len(), total, "disjoint supports must not collide");
+        check_against_oracle(&inputs, &format!("disjoint k={k}"));
+    }
+}
+
+#[test]
+fn prop_merge_fully_overlapping_supports() {
+    // every input shares the same support: the union is one support's
+    // worth of indices and every value is the k-way sum.
+    let mut rng = Pcg32::new(77);
+    let idx: Vec<i64> = vec![2, 3, 8, 13, 21, 34, 55];
+    let k = 6;
+    let inputs: Vec<SpVec<f32>> = (0..k)
+        .map(|_| {
+            spvec_from_pairs::<SumF32>(idx.iter().map(|&i| (i, rng.next_f32())).collect())
+        })
+        .collect();
+    let merged = tree_sum::<SumF32>(inputs.clone());
+    assert_eq!(merged.idx, idx, "fully-overlapping union is the shared support");
+    check_against_oracle(&inputs, "fully overlapping");
+}

@@ -1,0 +1,124 @@
+//! Sharded-ingestion acceptance tests (tier-1: no subprocesses).
+//!
+//! The pipeline under test: `sar shard` writes CRC-protected shard files
+//! + a digest-protected manifest; a worker handed a `WorkerPlan` with a
+//! shard dir loads and verifies ONLY its shard — it must never call the
+//! graph generator — and a digest/CRC mismatch is rejected during the
+//! config phase, i.e. before the worker could ever vote CONFIG_DONE or
+//! see START.
+//!
+//! Everything lives in one sequential `#[test]` because the
+//! no-regeneration proof reads the process-global
+//! [`generation_count`] counter: parallel test threads generating their
+//! own graphs would race it.
+
+use sparse_allreduce::apps::pagerank::{DistPageRank, PageRankConfig};
+use sparse_allreduce::cluster::{load_worker_data, WorkerPlan};
+use sparse_allreduce::graph::{
+    generation_count, shard_graph, DatasetPreset, DatasetSpec, ShardManifest,
+};
+use sparse_allreduce::partition::Strategy;
+use std::path::{Path, PathBuf};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sar-ingest-test-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn plan(shard_dir: &Path, digest: u64) -> WorkerPlan {
+    WorkerPlan {
+        node: 0,
+        world: 4,
+        replication: 1,
+        degrees: vec![2, 2],
+        addrs: (0..4).map(|_| "127.0.0.1:1".to_string()).collect(),
+        dataset: "twitter".into(),
+        scale: 0.002,
+        seed: 42,
+        iters: 5,
+        send_threads: 1,
+        data_timeout_ms: 1_000,
+        shard_dir: shard_dir.to_string_lossy().into_owned(),
+        manifest_digest: digest,
+    }
+}
+
+/// Acceptance: `sar shard` output feeds workers without regeneration,
+/// reproduces the lockstep oracle's checksum inputs bit-exactly, and
+/// every integrity violation (wrong digest, wrong shard count, corrupt
+/// shard payload) is rejected at load time.
+#[test]
+fn shard_ingestion_end_to_end() {
+    let dir = tmp_dir("e2e");
+    let spec = DatasetSpec::new(DatasetPreset::TwitterFollowers, 0.002, 42);
+    let graph = spec.generate();
+    let manifest =
+        shard_graph(&dir, &graph, 4, Strategy::Random, "twitter", 0.002, 42).unwrap();
+    let digest = manifest.digest();
+
+    // The lockstep oracle over the same (graph, seed) — its shards are
+    // the ground truth the on-disk ones must reproduce.
+    let mut oracle =
+        DistPageRank::new(&graph, vec![2, 2], &PageRankConfig { seed: 42, iters: 5 });
+    oracle.run(5);
+
+    // --- shard-supplied workers never generate -------------------------
+    let before = generation_count();
+    for node in 0..4usize {
+        let p = WorkerPlan { node: node as u32, ..plan(&dir, digest) };
+        let data = load_worker_data(&p, node, 4).unwrap();
+        assert_eq!(data.vertices, graph.vertices);
+        let want = &oracle.shards[node];
+        assert_eq!(data.shard.row_globals, want.row_globals, "worker {node} rows");
+        assert_eq!(data.shard.col_globals, want.col_globals, "worker {node} cols");
+        assert_eq!(data.shard.row_ptr, want.row_ptr, "worker {node} row_ptr");
+        assert_eq!(data.shard.col, want.col, "worker {node} col");
+        assert_eq!(data.shard.weight, want.weight, "worker {node} weights (bit-exact)");
+    }
+    assert_eq!(
+        generation_count(),
+        before,
+        "a worker given shards must NOT regenerate the graph"
+    );
+
+    // --- the no-shards fallback DOES regenerate ------------------------
+    let fallback = load_worker_data(&plan(Path::new(""), 0), 0, 4).unwrap();
+    assert_eq!(fallback.vertices, graph.vertices);
+    assert_eq!(
+        generation_count(),
+        before + 1,
+        "without shards the worker deterministically regenerates"
+    );
+    assert_eq!(fallback.shard.row_globals, oracle.shards[0].row_globals);
+
+    // --- a manifest-digest mismatch is rejected before any data use ----
+    let err = load_worker_data(&plan(&dir, digest ^ 1), 0, 4).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("digest mismatch"),
+        "stale/foreign shard dir must be rejected readably, got: {err:#}"
+    );
+
+    // --- a shard count that can't cover the logical nodes is rejected --
+    let err = load_worker_data(&plan(&dir, digest), 0, 8).unwrap_err();
+    assert!(format!("{err:#}").contains("shards"), "got: {err:#}");
+
+    // --- a corrupted shard payload is rejected by CRC ------------------
+    let victim = ShardManifest::shard_path(&dir, 2);
+    let mut bytes = std::fs::read(&victim).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x10;
+    std::fs::write(&victim, &bytes).unwrap();
+    let p = WorkerPlan { node: 2, ..plan(&dir, digest) };
+    let err = load_worker_data(&p, 2, 4).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(
+        msg.contains("CRC") || msg.contains("sorted") || msg.contains("degree table"),
+        "corrupt shard must fail integrity checks, got: {msg}"
+    );
+    // …while an uncorrupted sibling still loads.
+    load_worker_data(&plan(&dir, digest), 0, 4).unwrap();
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}

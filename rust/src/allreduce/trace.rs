@@ -70,6 +70,34 @@ impl Trace {
     pub fn sent_by(&self, node: NodeId) -> impl Iterator<Item = &MsgRecord> {
         self.msgs.iter().filter(move |m| m.src == node)
     }
+
+    /// Message count at a phase+layer.
+    pub fn layer_msgs(&self, phase: Phase, layer: usize) -> usize {
+        self.msgs.iter().filter(|m| m.phase == phase && m.layer == layer).count()
+    }
+
+    /// Estimated per-node payload (bytes) *entering* `layer`, inverted
+    /// from the recorded layer totals: in a degree-`k` exchange each of
+    /// the `machines` nodes splits its payload into `k` near-equal parts
+    /// and wires `k − 1` of them (the self-delivery is never recorded),
+    /// so `layer_total = machines · (k−1)/k · payload`. This is what the
+    /// autotuner feeds back into [`crate::topology::PlannerParams`]:
+    /// the ratio of successive layers' payloads is the measured
+    /// index-collision compression factor. Returns 0 for degenerate
+    /// inputs (`k < 2` exchanges nothing).
+    pub fn per_node_payload(
+        &self,
+        phase: Phase,
+        layer: usize,
+        machines: usize,
+        degree: usize,
+    ) -> f64 {
+        if machines == 0 || degree < 2 {
+            return 0.0;
+        }
+        let total = self.layer_bytes(phase, layer) as f64;
+        total * degree as f64 / (machines as f64 * (degree as f64 - 1.0))
+    }
 }
 
 #[cfg(test)]
@@ -89,5 +117,23 @@ mod tests {
         assert_eq!(t.mean_packet_bytes(Phase::ReduceDown, 0), 150.0);
         assert_eq!(t.mean_packet_bytes(Phase::ReduceUp, 0), 0.0);
         assert_eq!(t.sent_by(0).count(), 2);
+        assert_eq!(t.layer_msgs(Phase::ReduceDown, 0), 2);
+        assert_eq!(t.layer_msgs(Phase::ReduceUp, 1), 1);
+    }
+
+    #[test]
+    fn per_node_payload_inverts_layer_totals() {
+        // 4 nodes, degree 2: each sends 1 of its 2 halves → layer total
+        // is 4 · (1/2) · payload. With payload 100 per node the total is
+        // 200; invert it back.
+        let mut t = Trace::new();
+        for (src, dst) in [(0usize, 1usize), (1, 0), (2, 3), (3, 2)] {
+            t.record(Phase::ReduceDown, 0, src, dst, 50);
+        }
+        let p = t.per_node_payload(Phase::ReduceDown, 0, 4, 2);
+        assert!((p - 100.0).abs() < 1e-9, "{p}");
+        // degenerate inputs
+        assert_eq!(t.per_node_payload(Phase::ReduceDown, 0, 0, 2), 0.0);
+        assert_eq!(t.per_node_payload(Phase::ReduceDown, 0, 4, 1), 0.0);
     }
 }

@@ -21,6 +21,13 @@ impl Default for BenchOpts {
     }
 }
 
+impl BenchOpts {
+    /// Quick mode for CI smoke runs (`sar tune --fast`).
+    pub fn fast() -> Self {
+        Self { warmup_iters: 1, measure_iters: 3 }
+    }
+}
+
 /// Timing result of one benchmark case.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
@@ -48,13 +55,69 @@ pub fn bench<F: FnMut()>(name: &str, opts: &BenchOpts, mut f: F) -> BenchResult 
     }
     let r = BenchResult { name: name.to_string(), secs: Summary::of(&samples) };
     eprintln!(
-        "  bench {:<40} p50 {:>12}  p90 {:>12}  (n={})",
+        "  bench {:<40} p10 {:>12}  p50 {:>12}  p90 {:>12}  (n={})",
         r.name,
+        human_duration(r.secs.p10),
         human_duration(r.secs.p50),
         human_duration(r.secs.p90),
         r.secs.n
     );
     r
+}
+
+// --- machine-readable output (BENCH_*.json rows) -------------------------
+//
+// The vendor set has no serde; these helpers emit the small, fixed-shape
+// JSON the bench trajectory files need. Rows always carry p10/p50/p90 so
+// the recorded trajectory captures spread, not just a point estimate.
+
+/// A JSON number literal (JSON has no NaN/Inf: those serialize as 0).
+pub fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        let s = format!("{v}");
+        // `{}` prints integral floats without a dot; keep them valid
+        // JSON numbers either way (they are), but normalize -0.
+        if s == "-0" {
+            "0".to_string()
+        } else {
+            s
+        }
+    } else {
+        "0".to_string()
+    }
+}
+
+/// A JSON string literal with the required escapes.
+pub fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// A [`Summary`] as a JSON object with the spread percentiles.
+pub fn summary_json(s: &Summary) -> String {
+    format!(
+        "{{\"n\":{},\"mean\":{},\"min\":{},\"p10\":{},\"p50\":{},\"p90\":{},\"max\":{}}}",
+        s.n,
+        json_f64(s.mean),
+        json_f64(s.min),
+        json_f64(s.p10),
+        json_f64(s.p50),
+        json_f64(s.p90),
+        json_f64(s.max)
+    )
 }
 
 /// Print a section header for a paper experiment.
@@ -101,5 +164,26 @@ mod tests {
     fn throughput_math() {
         assert!((throughput_bvals_per_sec(2_000_000_000, 2.0) - 1.0).abs() < 1e-9);
         assert_eq!(throughput_bvals_per_sec(100, 0.0), 0.0);
+    }
+
+    #[test]
+    fn json_emission_is_wellformed() {
+        assert_eq!(json_f64(1.5), "1.5");
+        assert_eq!(json_f64(f64::NAN), "0");
+        assert_eq!(json_f64(f64::INFINITY), "0");
+        assert_eq!(json_str("a\"b\\c\nd"), "\"a\\\"b\\\\c\\nd\"");
+        let s = Summary::of(&[1.0, 2.0, 3.0]);
+        let j = summary_json(&s);
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        for key in ["\"n\":3", "\"p10\":", "\"p50\":2", "\"p90\":", "\"min\":1", "\"max\":3"] {
+            assert!(j.contains(key), "{j} missing {key}");
+        }
+    }
+
+    #[test]
+    fn fast_opts_are_smaller() {
+        let f = BenchOpts::fast();
+        let d = BenchOpts::default();
+        assert!(f.warmup_iters < d.warmup_iters && f.measure_iters < d.measure_iters);
     }
 }

@@ -135,6 +135,7 @@ USAGE: sar <command> [flags]
 COMMANDS:
   info          show build/runtime info (PJRT platform, artifacts)
   plan          pick a butterfly degree schedule (paper §IV-B)
+  tune          measure this machine + dataset and pick the schedule
   shard         partition a dataset into on-disk worker shards
   pagerank      distributed PageRank on a synthetic power-law graph
   diameter      HADI effective-diameter estimation (OR-allreduce)
@@ -159,6 +160,33 @@ Pick a butterfly degree schedule (paper §IV-B).
   --machines m     cluster size                          [64]
   --floor-mb f     effective packet floor in MiB         [2]
   --compression f  per-layer collision shrink factor     [0.7]",
+        "tune" => "\
+USAGE: sar tune [--dataset twitter|yahoo|docterm] [--scale f] [--seed s]
+                [--world m] [--shards dir] [--out tune.toml]
+                [--bench-json BENCH_3.json] [--warmup n] [--iters n]
+                [--threads t] [--max-schedules n] [--fast]
+
+Measurement-driven topology autotuning: microbenchmark the real
+transports to fit the cost model (setup, bandwidth, packet floor), run
+one real allreduce per candidate degree schedule on the actual dataset
+to measure per-layer collision compression, rank the schedules under
+the fitted model (paper Fig. 6), and persist the winner as a
+digest-protected tuning profile that `sar launch --tune-profile` /
+`sar pagerank --tune-profile` consume. Also emits a machine-readable
+bench trajectory row (BENCH_*.json).
+  --dataset d        synthetic dataset preset             [twitter]
+  --scale f          dataset scale multiplier             [0.01]
+  --seed s           RNG seed                             [42]
+  --world m          machines to plan for                 [4]
+  --shards dir       tune against a `sar shard` directory (shard count
+                     fixes the world; overrides --world)
+  --out path         tuning profile output                [tune.toml]
+  --bench-json path  bench trajectory output              [BENCH_3.json]
+  --warmup n         warmup iterations per measurement    [2; 1 with --fast]
+  --iters n          measured iterations per measurement  [7; 3 with --fast]
+  --threads t        sender threads assumed by the model  [8]
+  --max-schedules n  cap on enumerated schedules          [64]
+  --fast             CI smoke mode: fewer sizes/iterations",
         "shard" => "\
 USAGE: sar shard --out <dir> [--workers m] [--dataset twitter|yahoo|docterm]
                  [--scale f] [--seed s] [--partition random|greedy]
@@ -183,7 +211,8 @@ global graph — and still land on the lockstep oracle's checksum.
         "pagerank" => "\
 USAGE: sar pagerank [--mode lockstep|threaded|distributed] [--distributed]
                     [--dataset twitter|yahoo|docterm] [--scale f]
-                    [--degrees 16x4] [--replication r] [--iters n]
+                    [--degrees 16x4] [--tune-profile tune.toml]
+                    [--replication r] [--iters n]
                     [--threads t] [--seed s] [--bin path] [--shards dir]
 
 Distributed PageRank on a synthetic power-law graph.
@@ -202,7 +231,10 @@ Distributed PageRank on a synthetic power-law graph.
   --bin path       sar binary to spawn workers from (mode=distributed)
   --shards dir     load worker shards from a `sar shard` directory
                    (mode=lockstep or distributed) instead of
-                   regenerating the dataset",
+                   regenerating the dataset
+  --tune-profile p use the degree schedule + cost model from a
+                   digest-verified `sar tune` profile (conflicts
+                   with --degrees)",
         "diameter" => "\
 USAGE: sar diameter [--dataset d] [--scale f] [--degrees 4x2] [--sketches k]
                     [--max-h n] [--seed s]
@@ -224,7 +256,8 @@ run the config phase and reduce iterations, report metrics.
   --advertise a    data-plane address peers should dial  [derived]
   --heartbeat-ms n control heartbeat interval            [100]",
         "launch" => "\
-USAGE: sar launch [--workers n] [--degrees 2x2] [--replication r] [--iters n]
+USAGE: sar launch [--workers n] [--degrees 2x2] [--tune-profile tune.toml]
+                  [--replication r] [--iters n]
                   [--dataset d] [--scale f] [--seed s] [--threads t]
                   [--bind addr] [--file cfg.toml] [--no-spawn] [--bin path]
                   [--shards dir]
@@ -240,7 +273,11 @@ barrier the config phase, start, and aggregate reports.
   --shards dir     `sar shard` directory: workers load + verify only
                    their own shard (no per-worker regeneration); the
                    dir must be readable at the same path on every
-                   worker host",
+                   worker host
+  --tune-profile p use the degree schedule + cost model from a
+                   digest-verified `sar tune` profile (conflicts
+                   with --degrees; also settable as `[tune] profile`
+                   in --file configs)",
         "config-check" => "\
 USAGE: sar config-check --file <path>
 
@@ -305,7 +342,7 @@ mod tests {
     #[test]
     fn every_command_has_usage() {
         for cmd in [
-            "info", "plan", "shard", "pagerank", "diameter", "train", "worker", "launch",
+            "info", "plan", "tune", "shard", "pagerank", "diameter", "train", "worker", "launch",
             "config-check", "help",
         ] {
             assert!(usage_for(cmd).is_some(), "missing usage for {cmd}");

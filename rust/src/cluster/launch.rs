@@ -17,6 +17,7 @@ use crate::config::{validate_world, RunConfig};
 use crate::fault::{FailureDetector, ReplicaMap};
 use crate::graph::ShardManifest;
 use crate::metrics::{IterTiming, RunMetrics};
+use crate::util::Summary;
 use anyhow::{bail, Context, Result};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
@@ -148,6 +149,90 @@ pub(super) fn resolve_shards(opts: &LaunchOpts) -> Result<(String, u64)> {
     Ok((abs.to_string_lossy().into_owned(), manifest.digest()))
 }
 
+/// Per-worker control-plane round-trip-time accumulator — the
+/// coordinator's straggler signal (ROADMAP PR 1 follow-up). Workers
+/// measure the HEARTBEAT → HEARTBEAT_ACK round trip and report it on
+/// their next beat; the coordinator records the samples here. A worker
+/// whose RTT distribution sits far above its peers' is straggling
+/// (overloaded host, congested link) even while its heartbeats still
+/// arrive inside the liveness window.
+pub struct RttTracker {
+    samples: Mutex<Vec<RttRing>>,
+}
+
+/// Per-worker ring buffer: heartbeats at the default 100 ms interval
+/// wrap this in ~7 minutes, so the straggler signal always reflects the
+/// most recent window rather than freezing on the run's first samples.
+const RTT_SAMPLE_CAP: usize = 4096;
+
+#[derive(Clone, Default)]
+struct RttRing {
+    buf: Vec<f64>,
+    /// Overwrite cursor once `buf` is full (oldest-first).
+    next: usize,
+}
+
+impl RttRing {
+    fn push(&mut self, secs: f64) {
+        if self.buf.len() < RTT_SAMPLE_CAP {
+            self.buf.push(secs);
+        } else {
+            self.buf[self.next] = secs;
+            self.next = (self.next + 1) % RTT_SAMPLE_CAP;
+        }
+    }
+}
+
+impl RttTracker {
+    pub fn new(workers: usize) -> Self {
+        Self { samples: Mutex::new(vec![RttRing::default(); workers]) }
+    }
+
+    /// Record one round-trip measurement (seconds) for `worker`.
+    pub fn record(&self, worker: usize, secs: f64) {
+        if !(secs.is_finite() && secs >= 0.0) {
+            return;
+        }
+        let mut s = self.samples.lock().expect("rtt tracker poisoned");
+        if let Some(w) = s.get_mut(worker) {
+            w.push(secs);
+        }
+    }
+
+    /// Per-worker order statistics over the retained window (empty
+    /// summaries for silent workers).
+    pub fn summaries(&self) -> Vec<Summary> {
+        let s = self.samples.lock().expect("rtt tracker poisoned");
+        s.iter().map(|w| Summary::of(&w.buf)).collect()
+    }
+
+    /// All retained samples across workers, as one distribution (the
+    /// REPORT summary's min/p50/max).
+    pub fn aggregate(&self) -> Summary {
+        let s = self.samples.lock().expect("rtt tracker poisoned");
+        let all: Vec<f64> = s.iter().flat_map(|w| w.buf.iter().copied()).collect();
+        Summary::of(&all)
+    }
+
+    /// The worker with the highest median RTT, with that median —
+    /// `None` until at least one worker has samples.
+    pub fn straggler(&self) -> Option<(usize, f64)> {
+        let per_worker = self.summaries();
+        rtt_straggler(&per_worker).map(|(w, s)| (w, s.p50))
+    }
+}
+
+/// The worker with the highest median RTT among workers that have any
+/// samples — shared by the live [`RttTracker`] view and post-run
+/// [`ClusterRun::rtt_per_worker`] reporting.
+pub fn rtt_straggler(per_worker: &[Summary]) -> Option<(usize, &Summary)> {
+    per_worker
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.n > 0)
+        .max_by(|a, b| a.1.p50.partial_cmp(&b.1.p50).expect("rtt p50 comparable"))
+}
+
 /// Aggregated outcome of a distributed run.
 #[derive(Clone, Debug)]
 pub struct ClusterRun {
@@ -164,6 +249,11 @@ pub struct ClusterRun {
     pub config_secs: f64,
     /// Workers that died or failed during the run.
     pub dead: Vec<usize>,
+    /// Per-worker control heartbeat round-trip summaries (straggler
+    /// signal; empty summary = no measurements from that worker).
+    pub rtt_per_worker: Vec<Summary>,
+    /// All RTT samples pooled across workers.
+    pub rtt: Summary,
 }
 
 /// Control listener, pre-join.
@@ -183,6 +273,7 @@ pub struct Session {
     writers: Vec<Arc<Mutex<TcpStream>>>,
     events: Receiver<(usize, Event)>,
     detector: Arc<FailureDetector>,
+    rtt: Arc<RttTracker>,
     config_done: Vec<bool>,
     reports: Vec<Option<WorkerReport>>,
     failures: Vec<(usize, String)>,
@@ -267,21 +358,42 @@ impl Coordinator {
         }
 
         let detector = Arc::new(FailureDetector::new(world, opts.heartbeat_timeout));
+        let rtt = Arc::new(RttTracker::new(world));
         let (tx, events) = channel();
         let mut writers = Vec::with_capacity(world);
         for (w, stream) in conns.into_iter().enumerate() {
             let wr = stream.try_clone().context("cloning control stream")?;
-            writers.push(Arc::new(Mutex::new(wr)));
+            let writer = Arc::new(Mutex::new(wr));
+            writers.push(writer.clone());
             let tx = tx.clone();
             let detector = detector.clone();
+            let rtt = rtt.clone();
             std::thread::spawn(move || {
                 let mut stream = stream;
                 loop {
                     match recv_ctrl(&mut stream) {
                         Ok((_, msg)) => {
                             detector.beat(w);
-                            if !matches!(msg, CtrlMsg::Heartbeat) && tx.send((w, Event::Msg(msg))).is_err() {
-                                return;
+                            match msg {
+                                CtrlMsg::Heartbeat { nonce, rtt_us } => {
+                                    // The beat carries the RTT the worker
+                                    // measured on its previous beat (0 =
+                                    // none yet); echo the nonce so it can
+                                    // measure this one.
+                                    if rtt_us > 0 {
+                                        rtt.record(w, rtt_us as f64 / 1e6);
+                                    }
+                                    let _ = send_ctrl(
+                                        &writer,
+                                        COORD,
+                                        &CtrlMsg::HeartbeatAck { nonce },
+                                    );
+                                }
+                                msg => {
+                                    if tx.send((w, Event::Msg(msg))).is_err() {
+                                        return;
+                                    }
+                                }
                             }
                         }
                         Err(_) => {
@@ -324,6 +436,7 @@ impl Coordinator {
             writers,
             events,
             detector,
+            rtt,
             config_done: vec![false; world],
             reports: (0..world).map(|_| None).collect(),
             failures: Vec::new(),
@@ -342,6 +455,11 @@ impl Session {
     /// Liveness view (heartbeat timeouts + control-connection EOFs).
     pub fn detector(&self) -> &FailureDetector {
         &self.detector
+    }
+
+    /// Control-plane RTT accumulator (straggler signal).
+    pub fn rtt(&self) -> &RttTracker {
+        &self.rtt
     }
 
     /// Drain one pending control event (if any) into session state.
@@ -500,6 +618,8 @@ impl Session {
             wall_secs,
             config_secs,
             dead,
+            rtt_per_worker: self.rtt.summaries(),
+            rtt: self.rtt.aggregate(),
         })
     }
 
@@ -566,6 +686,63 @@ mod tests {
         assert_eq!(opts.world(), 16);
         assert_eq!(opts.iters, 7);
         assert_eq!(opts.dataset, "yahoo");
+    }
+
+    /// Satellite: a synthetic slow worker must surface through the RTT
+    /// tracker — its median sits above its peers', the straggler query
+    /// names it, and the pooled summary's max reflects it.
+    #[test]
+    fn rtt_tracker_flags_a_synthetic_slow_worker() {
+        let rtt = RttTracker::new(4);
+        for i in 0..20 {
+            for w in 0..3 {
+                // healthy workers: ~200–250 µs
+                rtt.record(w, 200e-6 + (i % 5) as f64 * 10e-6);
+            }
+            // worker 3 straggles: ~20 ms
+            rtt.record(3, 20e-3 + (i % 3) as f64 * 1e-3);
+        }
+        let per = rtt.summaries();
+        assert_eq!(per.len(), 4);
+        assert!(per[3].p50 > 50.0 * per[0].p50, "straggler median must stand out");
+        let (w, p50) = rtt.straggler().expect("samples recorded");
+        assert_eq!(w, 3);
+        assert!(p50 >= 20e-3);
+        let all = rtt.aggregate();
+        assert_eq!(all.n, 80);
+        assert!(all.max >= 20e-3 && all.min <= 300e-6);
+    }
+
+    #[test]
+    fn rtt_tracker_edge_cases() {
+        let rtt = RttTracker::new(2);
+        assert!(rtt.straggler().is_none(), "no samples yet");
+        assert_eq!(rtt.aggregate().n, 0);
+        // junk samples are dropped, out-of-range workers ignored
+        rtt.record(0, f64::NAN);
+        rtt.record(0, -1.0);
+        rtt.record(7, 1.0);
+        assert!(rtt.straggler().is_none());
+        rtt.record(1, 0.5e-3);
+        assert_eq!(rtt.straggler(), Some((1, 0.5e-3)));
+    }
+
+    /// Satellite: the sample window is a ring — a worker that turns slow
+    /// AFTER filling its buffer must still surface, instead of the
+    /// tracker freezing on the run's first (healthy) samples.
+    #[test]
+    fn rtt_window_slides_past_the_cap() {
+        let rtt = RttTracker::new(1);
+        for _ in 0..RTT_SAMPLE_CAP {
+            rtt.record(0, 1e-4); // healthy for the whole first window
+        }
+        assert!(rtt.aggregate().p50 < 1e-3);
+        for _ in 0..RTT_SAMPLE_CAP {
+            rtt.record(0, 50e-3); // then the host degrades
+        }
+        let s = rtt.aggregate();
+        assert_eq!(s.n, RTT_SAMPLE_CAP, "window stays bounded");
+        assert!(s.p50 >= 50e-3, "recent degradation must dominate, got p50 {}", s.p50);
     }
 
     #[test]

@@ -58,7 +58,7 @@ pub mod proto;
 pub mod spawn;
 pub mod worker;
 
-pub use launch::{ClusterRun, Coordinator, LaunchOpts, Session};
+pub use launch::{rtt_straggler, ClusterRun, Coordinator, LaunchOpts, RttTracker, Session};
 pub use proto::{CtrlMsg, WorkerPlan, WorkerReport};
 pub use spawn::{
     default_degrees, launch_local, sar_binary, spawn_local, spawn_session, spawn_workers,

@@ -37,8 +37,17 @@ pub enum CtrlMsg {
     /// coordinator → worker: all workers configured; run the iterations.
     Start,
     /// worker → coordinator: liveness (sent on an interval by a
-    /// background thread for the whole worker lifetime).
-    Heartbeat,
+    /// background thread for the whole worker lifetime). `nonce`
+    /// identifies this beat so the coordinator's [`CtrlMsg::HeartbeatAck`]
+    /// can be matched to it; `rtt_us` reports the round-trip time the
+    /// worker measured on its *previous* beat (0 = not yet measured), so
+    /// the coordinator accumulates a per-worker control-plane RTT
+    /// distribution — the straggler signal in the final REPORT summary.
+    Heartbeat { nonce: u64, rtt_us: u64 },
+    /// coordinator → worker: echo of a heartbeat's nonce, sent
+    /// immediately on receipt; the worker timestamps the pair to measure
+    /// RTT.
+    HeartbeatAck { nonce: u64 },
     /// worker → coordinator: run finished; metrics and checksum.
     Report(WorkerReport),
     /// worker → coordinator: run failed; human-readable cause.
@@ -102,6 +111,7 @@ const OP_HEARTBEAT: u32 = 5;
 const OP_REPORT: u32 = 6;
 const OP_FAILED: u32 = 7;
 const OP_SHUTDOWN: u32 = 8;
+const OP_HEARTBEAT_ACK: u32 = 9;
 
 // --- body codec ----------------------------------------------------------
 
@@ -223,7 +233,15 @@ pub fn encode(msg: &CtrlMsg) -> (u32, Vec<u8>) {
         }
         CtrlMsg::ConfigDone => OP_CONFIG_DONE,
         CtrlMsg::Start => OP_START,
-        CtrlMsg::Heartbeat => OP_HEARTBEAT,
+        CtrlMsg::Heartbeat { nonce, rtt_us } => {
+            e.u64(*nonce);
+            e.u64(*rtt_us);
+            OP_HEARTBEAT
+        }
+        CtrlMsg::HeartbeatAck { nonce } => {
+            e.u64(*nonce);
+            OP_HEARTBEAT_ACK
+        }
         CtrlMsg::Report(r) => {
             e.u32(r.node);
             e.f64(r.config_secs);
@@ -263,7 +281,8 @@ pub fn decode(opcode: u32, payload: &[u8]) -> std::io::Result<CtrlMsg> {
         }),
         OP_CONFIG_DONE => CtrlMsg::ConfigDone,
         OP_START => CtrlMsg::Start,
-        OP_HEARTBEAT => CtrlMsg::Heartbeat,
+        OP_HEARTBEAT => CtrlMsg::Heartbeat { nonce: d.u64()?, rtt_us: d.u64()? },
+        OP_HEARTBEAT_ACK => CtrlMsg::HeartbeatAck { nonce: d.u64()? },
         OP_REPORT => CtrlMsg::Report(WorkerReport {
             node: d.u32()?,
             config_secs: d.f64()?,
@@ -337,7 +356,8 @@ mod tests {
             CtrlMsg::Plan(sample_plan()),
             CtrlMsg::ConfigDone,
             CtrlMsg::Start,
-            CtrlMsg::Heartbeat,
+            CtrlMsg::Heartbeat { nonce: 7, rtt_us: 350 },
+            CtrlMsg::HeartbeatAck { nonce: 7 },
             CtrlMsg::Report(WorkerReport {
                 node: 1,
                 config_secs: 0.25,
@@ -370,7 +390,8 @@ mod tests {
             CtrlMsg::Plan(sample_plan()),
             CtrlMsg::ConfigDone,
             CtrlMsg::Start,
-            CtrlMsg::Heartbeat,
+            CtrlMsg::Heartbeat { nonce: 1, rtt_us: 0 },
+            CtrlMsg::HeartbeatAck { nonce: 1 },
             CtrlMsg::Report(WorkerReport {
                 node: 2,
                 config_secs: 0.5,

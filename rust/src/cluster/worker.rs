@@ -10,6 +10,15 @@
 //! connection for the whole run so the coordinator's
 //! [`crate::fault::FailureDetector`] can distinguish slow from dead.
 //!
+//! Control-plane reading is split across two threads: a router thread
+//! owns the read half of the control connection, answers
+//! HEARTBEAT_ACKs by timestamping them against the pending-beat table
+//! (that round trip is the coordinator's straggler signal), and
+//! forwards every other message to the main thread's channel. The
+//! heartbeat thread stamps each beat with a nonce and reports the
+//! previously measured RTT, so the coordinator accumulates a
+//! per-worker RTT distribution without a second socket.
+//!
 //! Dataset acquisition ([`load_worker_data`]) has two paths. When the
 //! plan names a shard directory (`sar shard` output), the worker streams
 //! *only its own shard* into a CSR — after verifying the local manifest
@@ -35,8 +44,10 @@ use crate::transport::{
     advertised_addr, connect_with_retry, RetryPolicy, TcpNet, Transport, TransportError,
 };
 use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -104,8 +115,38 @@ pub fn run_worker(opts: &WorkerOpts) -> Result<()> {
         .context("sending JOIN")?;
     log::info!("joined coordinator {coord}, data plane at {advertise}");
 
-    let (_, msg) = recv_ctrl(&mut ctrl_rd).context("waiting for PLAN")?;
-    let plan = match msg {
+    // Router thread: owns the read half, resolves HEARTBEAT_ACKs into
+    // RTT measurements, forwards everything else to the main thread.
+    let pending: Arc<Mutex<HashMap<u64, Instant>>> = Arc::new(Mutex::new(HashMap::new()));
+    let last_rtt_us = Arc::new(AtomicU64::new(0));
+    let (ctrl_tx, ctrl_msgs) = channel::<std::io::Result<CtrlMsg>>();
+    {
+        let pending = pending.clone();
+        let last_rtt_us = last_rtt_us.clone();
+        std::thread::spawn(move || loop {
+            match recv_ctrl(&mut ctrl_rd) {
+                Ok((_, CtrlMsg::HeartbeatAck { nonce })) => {
+                    let sent = pending.lock().expect("pending beats poisoned").remove(&nonce);
+                    if let Some(t0) = sent {
+                        let us = t0.elapsed().as_micros().min(u64::MAX as u128) as u64;
+                        // 0 means "not measured yet" on the wire.
+                        last_rtt_us.store(us.max(1), Ordering::Relaxed);
+                    }
+                }
+                Ok((_, msg)) => {
+                    if ctrl_tx.send(Ok(msg)).is_err() {
+                        return;
+                    }
+                }
+                Err(e) => {
+                    let _ = ctrl_tx.send(Err(e));
+                    return;
+                }
+            }
+        });
+    }
+
+    let plan = match next_ctrl(&ctrl_msgs).context("waiting for PLAN")? {
         CtrlMsg::Plan(p) => p,
         other => bail!("expected PLAN, got {other:?}"),
     };
@@ -121,14 +162,31 @@ pub fn run_worker(opts: &WorkerOpts) -> Result<()> {
 
     // Heartbeat for the rest of the process lifetime; a send failure
     // means the coordinator is gone and the beat thread just stops.
+    // Each beat is nonce-stamped into the pending table (timestamped
+    // against the coordinator's ack by the router thread) and reports
+    // the previously measured round trip.
     let stop = Arc::new(AtomicBool::new(false));
     let beat_handle = {
         let stop = stop.clone();
         let wr = ctrl_wr.clone();
         let interval = opts.heartbeat;
+        let pending = pending.clone();
+        let last_rtt_us = last_rtt_us.clone();
         std::thread::spawn(move || {
+            let mut nonce = 0u64;
             while !stop.load(Ordering::Relaxed) {
-                if send_ctrl(&wr, node, &CtrlMsg::Heartbeat).is_err() {
+                nonce += 1;
+                {
+                    let mut p = pending.lock().expect("pending beats poisoned");
+                    // Unacked beats (coordinator busy, ack lost to a
+                    // rebooted link) must not accumulate forever.
+                    if p.len() > 64 {
+                        p.clear();
+                    }
+                    p.insert(nonce, Instant::now());
+                }
+                let rtt_us = last_rtt_us.load(Ordering::Relaxed);
+                if send_ctrl(&wr, node, &CtrlMsg::Heartbeat { nonce, rtt_us }).is_err() {
                     return;
                 }
                 std::thread::sleep(interval);
@@ -136,7 +194,7 @@ pub fn run_worker(opts: &WorkerOpts) -> Result<()> {
         })
     };
 
-    let outcome = execute_plan(node, &plan, listener, &ctrl_wr, &mut ctrl_rd);
+    let outcome = execute_plan(node, &plan, listener, &ctrl_wr, &ctrl_msgs);
     let result = match outcome {
         Ok(report) => {
             send_ctrl(&ctrl_wr, node, &CtrlMsg::Report(report)).context("sending REPORT")?;
@@ -144,9 +202,9 @@ pub fn run_worker(opts: &WorkerOpts) -> Result<()> {
             // so our data listener keeps serving replica peers that are
             // still reducing.
             loop {
-                match recv_ctrl(&mut ctrl_rd) {
-                    Ok((_, CtrlMsg::Shutdown)) | Err(_) => break,
-                    Ok(_) => continue,
+                match ctrl_msgs.recv() {
+                    Ok(Ok(CtrlMsg::Shutdown)) | Ok(Err(_)) | Err(_) => break,
+                    Ok(Ok(_)) => continue,
                 }
             }
             log::info!("worker {node} done");
@@ -160,6 +218,16 @@ pub fn run_worker(opts: &WorkerOpts) -> Result<()> {
     stop.store(true, Ordering::Relaxed);
     let _ = beat_handle.join();
     result
+}
+
+/// Next control message routed to the main thread (heartbeat acks are
+/// consumed by the router); connection loss surfaces as an error.
+fn next_ctrl(rx: &Receiver<std::io::Result<CtrlMsg>>) -> Result<CtrlMsg> {
+    match rx.recv() {
+        Ok(Ok(msg)) => Ok(msg),
+        Ok(Err(e)) => Err(anyhow::anyhow!("control connection failed: {e}")),
+        Err(_) => bail!("control router thread exited"),
+    }
 }
 
 /// The two in-process protocol drivers behind one object-safe face, so
@@ -259,7 +327,7 @@ fn execute_plan(
     plan: &WorkerPlan,
     listener: TcpListener,
     ctrl_wr: &Mutex<TcpStream>,
-    ctrl_rd: &mut TcpStream,
+    ctrl_msgs: &Receiver<std::io::Result<CtrlMsg>>,
 ) -> Result<WorkerReport> {
     let world = plan.world as usize;
     if plan.addrs.len() != world || node >= world {
@@ -303,8 +371,7 @@ fn execute_plan(
 
     send_ctrl(ctrl_wr, node, &CtrlMsg::ConfigDone).context("sending CONFIG_DONE")?;
     loop {
-        let (_, msg) = recv_ctrl(ctrl_rd).context("waiting for START")?;
-        match msg {
+        match next_ctrl(ctrl_msgs).context("waiting for START")? {
             CtrlMsg::Start => break,
             CtrlMsg::Shutdown => bail!("coordinator shut the run down before START"),
             _ => continue,

@@ -34,6 +34,11 @@ pub struct RunConfig {
     /// with the degree schedule (validated at load time — mismatches
     /// used to surface only deep inside the reduce protocol).
     pub workers: Option<usize>,
+    /// Path to a `sar tune` profile (`tune.toml`). When set (here or
+    /// via `--tune-profile`), the launcher loads and digest-verifies
+    /// the profile and replaces `degrees` and `cost` with the tuned
+    /// values before planning (`crate::tune::apply_profile`).
+    pub tune_profile: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -49,6 +54,7 @@ impl Default for RunConfig {
             iters: 10,
             seed: 42,
             workers: None,
+            tune_profile: None,
         }
     }
 }
@@ -137,6 +143,13 @@ impl RunConfig {
                 }
                 "run.iters" => cfg.iters = val.as_int().context("iters must be int")? as usize,
                 "run.seed" => cfg.seed = val.as_int().context("seed must be int")? as u64,
+                "tune.profile" => {
+                    let s = val.as_str().context("tune.profile must be a path string")?;
+                    if s.is_empty() {
+                        bail!("tune.profile path must be non-empty (omit the key to skip tuning)");
+                    }
+                    cfg.tune_profile = Some(s.to_string());
+                }
                 "cluster.workers" => {
                     let w = val.as_int().context("workers must be int")?;
                     if w < 1 {
@@ -232,6 +245,14 @@ seed = 7
         assert_eq!(cfg.shards.as_deref(), Some("/data/shards/tw4"));
         assert!(RunConfig::from_toml("[data]\nshards = \"\"").is_err());
         assert_eq!(RunConfig::default().shards, None);
+    }
+
+    #[test]
+    fn tune_profile_key_parses() {
+        let cfg = RunConfig::from_toml("[tune]\nprofile = \"out/tune.toml\"").unwrap();
+        assert_eq!(cfg.tune_profile.as_deref(), Some("out/tune.toml"));
+        assert!(RunConfig::from_toml("[tune]\nprofile = \"\"").is_err());
+        assert_eq!(RunConfig::default().tune_profile, None);
     }
 
     #[test]

@@ -10,6 +10,8 @@ pub enum TomlValue {
     Float(f64),
     Bool(bool),
     IntArray(Vec<i64>),
+    /// Array with at least one non-integer element (ints are coerced).
+    FloatArray(Vec<f64>),
 }
 
 impl TomlValue {
@@ -45,6 +47,15 @@ impl TomlValue {
     pub fn as_int_array(&self) -> Option<&[i64]> {
         match self {
             TomlValue::IntArray(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    /// Numeric array view: all-int arrays coerce element-wise.
+    pub fn as_float_array(&self) -> Option<Vec<f64>> {
+        match self {
+            TomlValue::FloatArray(a) => Some(a.clone()),
+            TomlValue::IntArray(a) => Some(a.iter().map(|&i| i as f64).collect()),
             _ => None,
         }
     }
@@ -135,15 +146,29 @@ fn parse_value(v: &str) -> Result<TomlValue, String> {
     }
     if let Some(inner) = v.strip_prefix('[') {
         let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
-        let mut items = Vec::new();
+        let mut ints = Vec::new();
+        let mut floats = Vec::new();
+        let mut all_ints = true;
         for part in inner.split(',') {
             let part = part.trim();
             if part.is_empty() {
                 continue;
             }
-            items.push(part.parse::<i64>().map_err(|_| format!("bad array int `{part}`"))?);
+            if let Ok(i) = part.parse::<i64>() {
+                ints.push(i);
+                floats.push(i as f64);
+            } else if let Ok(f) = part.parse::<f64>() {
+                all_ints = false;
+                floats.push(f);
+            } else {
+                return Err(format!("bad array number `{part}`"));
+            }
         }
-        return Ok(TomlValue::IntArray(items));
+        return Ok(if all_ints {
+            TomlValue::IntArray(ints)
+        } else {
+            TomlValue::FloatArray(floats)
+        });
     }
     if let Ok(i) = v.parse::<i64>() {
         return Ok(TomlValue::Int(i));
@@ -212,5 +237,18 @@ enabled = true
     fn empty_array() {
         let m = parse_toml("a = []").unwrap();
         assert_eq!(m["a"], TomlValue::IntArray(vec![]));
+    }
+
+    #[test]
+    fn float_arrays_parse_and_coerce() {
+        let m = parse_toml("c = [0.5, 1, 0.25]").unwrap();
+        assert_eq!(m["c"], TomlValue::FloatArray(vec![0.5, 1.0, 0.25]));
+        assert_eq!(m["c"].as_float_array(), Some(vec![0.5, 1.0, 0.25]));
+        assert_eq!(m["c"].as_int_array(), None);
+        // all-int arrays stay IntArray but still coerce to floats
+        let m = parse_toml("d = [2, 4]").unwrap();
+        assert_eq!(m["d"].as_int_array(), Some(&[2i64, 4][..]));
+        assert_eq!(m["d"].as_float_array(), Some(vec![2.0, 4.0]));
+        assert!(parse_toml("e = [1, nope]").is_err());
     }
 }

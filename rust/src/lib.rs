@@ -37,4 +37,5 @@ pub mod simnet;
 pub mod sparse;
 pub mod topology;
 pub mod transport;
+pub mod tune;
 pub mod util;

@@ -3,9 +3,11 @@
 use anyhow::{bail, Result};
 use sparse_allreduce::apps::diameter::{estimate_diameter, DiameterConfig};
 use sparse_allreduce::apps::sgd::{NativeGradEngine, SgdConfig, SynthData, Trainer};
+use sparse_allreduce::bench::{print_table, BenchOpts};
 use sparse_allreduce::cli::{usage_for, Args, USAGE};
 use sparse_allreduce::cluster::{self, LaunchOpts, WorkerOpts};
 use sparse_allreduce::config::{validate_world, RunConfig};
+use sparse_allreduce::tune::{self, TuneOpts};
 use sparse_allreduce::coordinator::{
     run_pagerank_config, run_pagerank_distributed, run_pagerank_lockstep,
     run_pagerank_lockstep_sharded, ExecMode, PageRankRun,
@@ -39,6 +41,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "" | "help" | "--help" => cmd_help(args),
         "info" => cmd_info(args),
         "plan" => cmd_plan(args),
+        "tune" => cmd_tune(args),
         "shard" => cmd_shard(args),
         "pagerank" => cmd_pagerank(args),
         "diameter" => cmd_diameter(args),
@@ -102,6 +105,96 @@ fn cmd_plan(args: &Args) -> Result<()> {
     let sched = degrees.iter().map(|k| k.to_string()).collect::<Vec<_>>().join("x");
     println!(
         "planned schedule for M={machines}, {mbytes:.1} MiB/node, floor {floor:.1} MiB: {sched}"
+    );
+    Ok(())
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    args.expect_known(
+        "tune",
+        &[
+            "dataset", "scale", "seed", "world", "shards", "out", "bench-json", "warmup",
+            "iters", "threads", "max-schedules", "fast",
+        ],
+    )?;
+    let fast = args.has_switch("fast");
+    let defaults = if fast { BenchOpts::fast() } else { BenchOpts::default() };
+    let bench = BenchOpts {
+        warmup_iters: args.usize_flag("warmup", defaults.warmup_iters)?,
+        measure_iters: args.usize_flag("iters", defaults.measure_iters)?.max(1),
+    };
+    let opts = TuneOpts {
+        dataset: args.flag("dataset").unwrap_or("twitter").to_string(),
+        scale: args.f64_flag("scale", 0.01)?,
+        seed: args.u64_flag("seed", 42)?,
+        world: args.usize_flag("world", 4)?,
+        shards: args.flag("shards").map(PathBuf::from),
+        out: PathBuf::from(args.flag("out").unwrap_or("tune.toml")),
+        bench_json: PathBuf::from(args.flag("bench-json").unwrap_or("BENCH_3.json")),
+        bench,
+        threads: args.usize_flag("threads", 8)?,
+        fast,
+        max_schedules: args.usize_flag("max-schedules", 64)?.max(1),
+    };
+    let outcome = tune::run_tune(&opts)?;
+
+    println!(
+        "fitted model ({}): setup {}, bandwidth {}/s, packet floor {}",
+        outcome.model_source,
+        human_duration(outcome.model.setup_secs),
+        human_bytes(outcome.model.bandwidth_bps as u64),
+        human_bytes(outcome.model.floor_bytes(0.6) as u64)
+    );
+    if !outcome.degree_compression.is_empty() {
+        let curve = outcome
+            .degree_compression
+            .iter()
+            .map(|(k, c)| format!("{k}-way {c:.2}"))
+            .collect::<Vec<_>>()
+            .join(", ");
+        println!("measured merge compression: {curve}");
+    }
+    let rows: Vec<Vec<String>> = outcome
+        .evals
+        .iter()
+        .map(|e| {
+            let sched = e.degrees.iter().map(|k| k.to_string()).collect::<Vec<_>>().join("x");
+            vec![
+                e.rank.to_string(),
+                sched,
+                human_duration(e.predicted_secs),
+                human_duration(e.measured.p10),
+                human_duration(e.measured.p50),
+                human_duration(e.measured.p90),
+                if e.degrees == outcome.profile.degrees {
+                    "chosen".to_string()
+                } else {
+                    String::new()
+                },
+            ]
+        })
+        .collect();
+    print_table(
+        &["rank", "schedule", "predicted", "meas p10", "meas p50", "meas p90", ""],
+        &rows,
+    );
+    let sched = outcome
+        .profile
+        .degrees
+        .iter()
+        .map(|k| k.to_string())
+        .collect::<Vec<_>>()
+        .join("x");
+    println!(
+        "profile {} (digest {:016x}, schedule {sched}); bench row {}",
+        opts.out.display(),
+        outcome.profile.digest(),
+        opts.bench_json.display()
+    );
+    println!(
+        "consume it with:\n  sar launch --tune-profile {0}\n  sar pagerank --mode lockstep \
+         --tune-profile {0}",
+        opts.out.display()
     );
     Ok(())
 }
@@ -185,7 +278,7 @@ fn cmd_pagerank(args: &Args) -> Result<()> {
         "pagerank",
         &[
             "mode", "distributed", "dataset", "scale", "degrees", "replication", "iters",
-            "threads", "seed", "bin", "shards",
+            "threads", "seed", "bin", "shards", "tune-profile",
         ],
     )?;
     let mode = if args.has_switch("distributed") {
@@ -211,6 +304,16 @@ fn cmd_pagerank(args: &Args) -> Result<()> {
     };
     cfg.scale = args.f64_flag("scale", 0.05)?;
     cfg.shards = args.flag("shards").map(|s| s.to_string());
+    if let Some(p) = args.flag("tune-profile") {
+        if args.flag("degrees").is_some() {
+            bail!("--degrees and --tune-profile both choose the schedule; pass only one");
+        }
+        cfg.tune_profile = Some(p.to_string());
+    }
+    if let Some(p) = cfg.tune_profile.clone() {
+        let prof = tune::apply_profile(&mut cfg, Path::new(&p))?;
+        log::info!("applied tuning profile {p}: schedule {:?}", prof.degrees);
+    }
     if cfg.shards.is_some() && matches!(mode, ExecMode::Threaded) {
         bail!(
             "--shards supports --mode lockstep and --mode distributed (the threaded \
@@ -357,7 +460,7 @@ fn cmd_launch(args: &Args) -> Result<()> {
         "launch",
         &[
             "workers", "degrees", "replication", "iters", "dataset", "scale", "seed", "threads",
-            "bind", "file", "no-spawn", "bin", "shards",
+            "bind", "file", "no-spawn", "bin", "shards", "tune-profile",
         ],
     )?;
     let mut cfg = match args.flag("file") {
@@ -378,6 +481,29 @@ fn cmd_launch(args: &Args) -> Result<()> {
     }
     if let Some(dir) = args.flag("shards") {
         cfg.shards = Some(dir.to_string());
+    }
+    if let Some(p) = args.flag("tune-profile") {
+        cfg.tune_profile = Some(p.to_string());
+    }
+    // Checked against the MERGED config: a `[tune] profile` key in the
+    // --file config conflicts with an explicit --degrees flag exactly
+    // like the --tune-profile flag does (one source of truth for the
+    // schedule either way).
+    if cfg.tune_profile.is_some() && args.flag("degrees").is_some() {
+        bail!(
+            "--degrees and a tuning profile (--tune-profile or the config's [tune] \
+             profile key) both choose the schedule; pass only one"
+        );
+    }
+    // Applied after every CLI override so the digest-verified profile's
+    // schedule + cost model are what actually reach the WorkerPlan.
+    if let Some(p) = cfg.tune_profile.clone() {
+        let prof = tune::apply_profile(&mut cfg, Path::new(&p))?;
+        println!(
+            "tuned schedule {:?} from {p} (digest {:016x})",
+            prof.degrees,
+            prof.digest()
+        );
     }
 
     // CLI overrides may contradict a worker count pinned in the file;
@@ -442,6 +568,39 @@ fn cmd_launch(args: &Args) -> Result<()> {
         pr.comm_fraction() * 100.0,
         run.checksum
     );
+    // Heartbeat round-trip distribution: the straggler signal. A worker
+    // whose median RTT towers over its peers' is overloaded/congested
+    // even while its heartbeats still arrive in time.
+    if run.rtt.n > 0 {
+        println!(
+            "  heartbeat rtt min {} | p50 {} | max {} ({} samples)",
+            human_duration(run.rtt.min),
+            human_duration(run.rtt.p50),
+            human_duration(run.rtt.max),
+            run.rtt.n
+        );
+        // Compare against the PEERS' median, not the pooled one — in a
+        // small world the straggler's own samples would drag the pooled
+        // median toward itself and mask the outlier.
+        if let Some((w, s)) = cluster::rtt_straggler(&run.rtt_per_worker) {
+            let mut peers: Vec<f64> = run
+                .rtt_per_worker
+                .iter()
+                .enumerate()
+                .filter(|(i, p)| *i != w && p.n > 0)
+                .map(|(_, p)| p.p50)
+                .collect();
+            peers.sort_by(|a, b| a.partial_cmp(b).expect("rtt p50 comparable"));
+            let peer_median = peers.get(peers.len() / 2).copied().unwrap_or(0.0);
+            if peer_median > 0.0 && s.p50 > 3.0 * peer_median {
+                println!(
+                    "  straggler: worker {w} rtt p50 {} ({}x peer median)",
+                    human_duration(s.p50),
+                    (s.p50 / peer_median).round()
+                );
+            }
+        }
+    }
     if !run.dead.is_empty() {
         println!("  dead workers (masked by replication): {:?}", run.dead);
     }

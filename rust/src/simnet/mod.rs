@@ -56,6 +56,45 @@ impl CostModel {
         }
     }
 
+    /// Least-squares fit of `time(bytes) = setup + bytes / bandwidth` to
+    /// measured `(bytes, seconds)` samples — the calibration path that
+    /// replaces the 2013-EC2 constants with numbers from the machine the
+    /// tuner actually runs on. Returns `None` when the samples cannot
+    /// support a fit: fewer than two distinct sizes, or a non-positive
+    /// slope (timer noise dominating the transfer term), in which case
+    /// the caller should keep its prior model.
+    pub fn fit(samples: &[(usize, f64)]) -> Option<CostModel> {
+        if samples.len() < 2 {
+            return None;
+        }
+        let n = samples.len() as f64;
+        let mean_x = samples.iter().map(|&(b, _)| b as f64).sum::<f64>() / n;
+        let mean_y = samples.iter().map(|&(_, t)| t).sum::<f64>() / n;
+        let mut cov = 0.0;
+        let mut var = 0.0;
+        for &(b, t) in samples {
+            let dx = b as f64 - mean_x;
+            cov += dx * (t - mean_y);
+            var += dx * dx;
+        }
+        if var == 0.0 {
+            return None;
+        }
+        let slope = cov / var; // seconds per byte = 1 / bandwidth
+        if slope <= 0.0 || !slope.is_finite() {
+            return None;
+        }
+        // Setup can fit slightly negative on noisy samples; clamp to a
+        // floor that keeps efficiency()/floor_bytes() well-defined.
+        let setup = (mean_y - slope * mean_x).max(1e-9);
+        Some(CostModel {
+            setup_secs: setup,
+            bandwidth_bps: 1.0 / slope,
+            outlier_prob: 0.0,
+            outlier_mean_secs: 0.0,
+        })
+    }
+
     /// Deterministic expected time (no outlier sampling).
     pub fn expected_time(&self, bytes: usize) -> f64 {
         self.setup_secs
@@ -121,6 +160,29 @@ mod tests {
         assert_eq!(c.expected_time(1_000_000_000), 1.0);
         let mut rng = Pcg32::new(1);
         assert_eq!(c.message_time(500_000_000, &mut rng), 0.5);
+    }
+
+    #[test]
+    fn fit_recovers_a_synthetic_model() {
+        let truth = CostModel { setup_secs: 2e-3, bandwidth_bps: 5e8, ..CostModel::ideal(5e8) };
+        let samples: Vec<(usize, f64)> = [1usize << 10, 1 << 14, 1 << 18, 1 << 22]
+            .iter()
+            .map(|&b| (b, truth.expected_time(b)))
+            .collect();
+        let fit = CostModel::fit(&samples).expect("clean samples must fit");
+        assert!((fit.setup_secs - truth.setup_secs).abs() / truth.setup_secs < 1e-6);
+        assert!((fit.bandwidth_bps - truth.bandwidth_bps).abs() / truth.bandwidth_bps < 1e-6);
+        assert_eq!(fit.outlier_prob, 0.0);
+    }
+
+    #[test]
+    fn fit_rejects_degenerate_samples() {
+        assert!(CostModel::fit(&[]).is_none());
+        assert!(CostModel::fit(&[(1024, 0.01)]).is_none());
+        // identical sizes → zero variance
+        assert!(CostModel::fit(&[(1024, 0.01), (1024, 0.02)]).is_none());
+        // negative slope (smaller messages slower) → timer noise
+        assert!(CostModel::fit(&[(1024, 0.05), (1 << 20, 0.01)]).is_none());
     }
 
     #[test]

@@ -12,4 +12,6 @@ pub mod butterfly;
 pub mod planner;
 
 pub use butterfly::{Butterfly, NodeId};
-pub use planner::{factorizations, plan_degrees, PlannerParams};
+pub use planner::{
+    factorizations, factorizations_bounded, plan_degrees, PlannerParams, MAX_FACTORIZATIONS,
+};

@@ -30,31 +30,62 @@ impl Default for PlannerParams {
     }
 }
 
+/// Default cap on enumerated ordered factorizations (see
+/// [`factorizations_bounded`]).
+pub const MAX_FACTORIZATIONS: usize = 4096;
+
 /// All ordered factorizations of `m` into factors ≥ 2 (plus `[m]` itself
 /// and, for m == 1, `[1]`). Order matters: `[16, 4]` ≠ `[4, 16]`.
+///
+/// Capped at [`MAX_FACTORIZATIONS`] schedules: the count of ordered
+/// factorizations grows superpolynomially with the factor count of `m`
+/// (already 512 for `m = 1024`, and highly composite `m` explode far
+/// faster), so an exhaustive sweep over `sar tune --world 1024`-sized
+/// inputs must be bounded. Use [`factorizations_bounded`] for an
+/// explicit cap.
 pub fn factorizations(m: usize) -> Vec<Vec<usize>> {
-    fn rec(m: usize, acc: &mut Vec<usize>, out: &mut Vec<Vec<usize>>) {
+    factorizations_bounded(m, MAX_FACTORIZATIONS)
+}
+
+/// [`factorizations`] with an explicit cap: enumeration is depth-first
+/// with *larger* leading factors first and stops as soon as `cap`
+/// schedules have been emitted. Largest-first matters under a cap: the
+/// paper's optimum puts the widest fan-out at the top (§IV-B), so a
+/// truncated sweep must keep the wide-first head of the space — a
+/// smallest-first order would spend the whole cap on binary-prefixed
+/// schedules. The output size is at most `cap` and the work is bounded
+/// by `O(cap · m)` trial divisions regardless of how composite `m` is
+/// (without the cap the schedule *count* itself grows
+/// superpolynomially). The emitted prefix is deterministic — always
+/// the same `cap` schedules for a given `m`.
+pub fn factorizations_bounded(m: usize, cap: usize) -> Vec<Vec<usize>> {
+    fn rec(m: usize, cap: usize, acc: &mut Vec<usize>, out: &mut Vec<Vec<usize>>) {
+        if out.len() >= cap {
+            return;
+        }
         if m == 1 {
             if !acc.is_empty() {
                 out.push(acc.clone());
             }
             return;
         }
-        let mut f = 2;
-        while f <= m {
-            if m % f == 0 {
-                acc.push(f);
-                rec(m / f, acc, out);
-                acc.pop();
+        for f in divisors_desc(m) {
+            if f < 2 {
+                continue;
             }
-            f += 1;
+            acc.push(f);
+            rec(m / f, cap, acc, out);
+            acc.pop();
+            if out.len() >= cap {
+                return;
+            }
         }
     }
     if m == 1 {
         return vec![vec![1]];
     }
     let mut out = Vec::new();
-    rec(m, &mut Vec::new(), &mut out);
+    rec(m, cap, &mut Vec::new(), &mut out);
     out
 }
 
@@ -62,6 +93,14 @@ pub fn factorizations(m: usize) -> Vec<Vec<usize>> {
 /// the remaining machine count such that the per-packet size
 /// `bytes/k` stays at or above the floor; if even `k = 2` violates the
 /// floor, fall back to the smallest prime factor (we must still cover M).
+///
+/// The returned schedule is always non-increasing: data volume only
+/// shrinks layer over layer (compression ≤ 1), so the paper's optimum
+/// puts the widest fan-out where the data is largest (§IV-B). The
+/// greedy choice itself can emit an inversion when the prime-factor
+/// fallback fires (e.g. a forced trailing 3 after a floor-limited 2),
+/// so the chosen factor multiset is ordered descending before
+/// returning — this maximizes the minimum packet size across layers.
 pub fn plan_degrees(m: usize, params: &PlannerParams) -> Vec<usize> {
     assert!(m >= 1);
     if m == 1 {
@@ -86,6 +125,7 @@ pub fn plan_degrees(m: usize, params: &PlannerParams) -> Vec<usize> {
         // by the collision factor.
         bytes *= params.compression;
     }
+    degrees.sort_unstable_by(|a, b| b.cmp(a));
     degrees
 }
 
@@ -192,6 +232,77 @@ mod tests {
         assert!(d.len() >= 2, "expected multi-layer schedule, got {d:?}");
         assert!(d.windows(2).all(|w| w[0] >= w[1]), "degrees should decrease: {d:?}");
         assert_eq!(d.iter().product::<usize>(), 64);
+    }
+
+    #[test]
+    fn bounded_enumeration_respects_cap() {
+        // 1024 = 2^10 has 512 ordered factorizations; the default cap
+        // admits all of them, an explicit cap truncates deterministically.
+        let all = factorizations(1024);
+        assert_eq!(all.len(), 512);
+        for f in &all {
+            assert_eq!(f.iter().product::<usize>(), 1024);
+        }
+        let capped = factorizations_bounded(1024, 10);
+        assert_eq!(capped.len(), 10);
+        assert_eq!(capped, all[..10].to_vec(), "cap must keep the enumeration prefix");
+        // Highly composite worlds stay bounded too.
+        let big = factorizations_bounded(720_720, 64);
+        assert_eq!(big.len(), 64);
+        for f in &big {
+            assert_eq!(f.iter().product::<usize>(), 720_720);
+        }
+    }
+
+    /// Property: across a spread of worlds, (a) every enumerated
+    /// schedule multiplies back to `m`, and (b) the planner's chosen
+    /// schedule is non-increasing and covers `m` — for packet-floor
+    /// regimes that exercise the greedy path AND the prime-factor
+    /// fallback (which used to emit inversions like `[2, 3]`).
+    #[test]
+    fn factorization_and_plan_properties() {
+        let floors = [0.5e6, 2e6, 8e6];
+        let byte_levels = [64.0 * 1024.0, 4e6, 33e6, 256e6];
+        for m in [2usize, 3, 6, 12, 30, 60, 64, 100, 128, 210, 1024] {
+            for f in factorizations_bounded(m, 256) {
+                assert_eq!(f.iter().product::<usize>(), m, "{f:?} for m={m}");
+                assert!(f.iter().all(|&k| k >= 2), "factors must be >= 2: {f:?}");
+            }
+            for &floor in &floors {
+                for &bytes in &byte_levels {
+                    let p = PlannerParams {
+                        bytes_per_node: bytes,
+                        packet_floor: floor,
+                        compression: 0.7,
+                    };
+                    let d = plan_degrees(m, &p);
+                    assert_eq!(
+                        d.iter().product::<usize>(),
+                        m,
+                        "schedule {d:?} must cover m={m}"
+                    );
+                    assert!(
+                        d.windows(2).all(|w| w[0] >= w[1]),
+                        "schedule {d:?} for m={m} (floor {floor}, bytes {bytes}) \
+                         must be non-increasing"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fallback_inversion_is_reordered() {
+        // 4 MB data, 2 MB floor, m=6: greedy takes 2 (6→0.67 MB and
+        // 3→1.33 MB violate the floor), then the forced trailing 3 must
+        // be hoisted ahead of the 2.
+        let p = PlannerParams {
+            bytes_per_node: 4.0 * 1024.0 * 1024.0,
+            packet_floor: 2.0 * 1024.0 * 1024.0,
+            compression: 0.7,
+        };
+        let d = plan_degrees(6, &p);
+        assert_eq!(d, vec![3, 2]);
     }
 
     #[test]

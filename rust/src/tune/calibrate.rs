@@ -1,0 +1,170 @@
+//! Transport calibration: fit the cost model from measurements.
+//!
+//! An echo peer (node 1) returns every message to node 0; node 0 times
+//! the round trip per message size and halves it into a one-way
+//! estimate. Least-squares over the per-size medians
+//! ([`CostModel::fit`]) yields the machine's actual `setup` and
+//! `bandwidth` constants — and therefore its packet floor
+//! ([`CostModel::floor_bytes`]) — replacing the hard-coded 2013-EC2
+//! numbers everywhere a `CostModel` is consumed (the discrete-event
+//! simulator, the degree planner, delay-injected transports).
+
+use crate::allreduce::Phase;
+use crate::bench::BenchOpts;
+use crate::simnet::CostModel;
+use crate::transport::{Envelope, MemTransport, Tag, TcpNet, Transport};
+use crate::util::{human_duration, Summary};
+use anyhow::{Context, Result};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// One message size's timing distribution (one-way seconds).
+#[derive(Clone, Debug)]
+pub struct CalSample {
+    pub bytes: usize,
+    pub secs: Summary,
+}
+
+/// A calibrated transport: raw samples plus the fitted model (`None`
+/// when the samples could not support a fit — see [`CostModel::fit`]).
+#[derive(Clone, Debug)]
+pub struct Calibration {
+    pub transport: String,
+    pub samples: Vec<CalSample>,
+    pub fitted: Option<CostModel>,
+}
+
+/// Sequence number that tells the echo peer to exit.
+const STOP_SEQ: u32 = u32::MAX;
+
+/// Generous bound on a single echo; a loopback message taking longer
+/// means the transport is wedged and calibration should give up.
+const ECHO_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Calibrate the in-process channel transport (upper bound on what any
+/// wire can do on this machine; the fitted "bandwidth" is effectively
+/// memcpy throughput).
+pub fn calibrate_mem(sizes: &[usize], opts: &BenchOpts) -> Calibration {
+    let t = Arc::new(MemTransport::new(2));
+    echo_calibrate(t, "mem", sizes, opts)
+}
+
+/// Calibrate real TCP sockets over loopback — the transport
+/// multi-process runs on a single host actually use.
+pub fn calibrate_tcp_loopback(sizes: &[usize], opts: &BenchOpts) -> Result<Calibration> {
+    let t = TcpNet::local(2).context("binding loopback calibration sockets")?;
+    Ok(echo_calibrate(t, "tcp-loopback", sizes, opts))
+}
+
+fn echo_calibrate<T: Transport + 'static>(
+    t: Arc<T>,
+    name: &str,
+    sizes: &[usize],
+    opts: &BenchOpts,
+) -> Calibration {
+    let peer = {
+        let t = t.clone();
+        std::thread::spawn(move || loop {
+            match t.recv(1, ECHO_TIMEOUT) {
+                Ok(env) => {
+                    if env.tag.seq == STOP_SEQ {
+                        return;
+                    }
+                    let reply = Envelope { src: 1, tag: env.tag, payload: env.payload };
+                    if t.send(0, reply).is_err() {
+                        return;
+                    }
+                }
+                Err(_) => return,
+            }
+        })
+    };
+
+    let mut samples = Vec::with_capacity(sizes.len());
+    let mut seq = 0u32;
+    let roundtrip = |bytes: usize, seq: u32| -> bool {
+        let env =
+            Envelope { src: 0, tag: Tag::new(seq, Phase::ReduceDown, 0), payload: vec![0u8; bytes] };
+        if t.send(1, env).is_err() {
+            return false;
+        }
+        t.recv(0, ECHO_TIMEOUT).is_ok()
+    };
+    'sizes: for &bytes in sizes {
+        for _ in 0..opts.warmup_iters {
+            seq += 1;
+            if !roundtrip(bytes, seq) {
+                log::warn!("{name} calibration: echo failed at {bytes} bytes (warmup)");
+                break 'sizes;
+            }
+        }
+        let mut xs = Vec::with_capacity(opts.measure_iters);
+        for _ in 0..opts.measure_iters {
+            seq += 1;
+            let t0 = Instant::now();
+            if !roundtrip(bytes, seq) {
+                log::warn!("{name} calibration: echo failed at {bytes} bytes");
+                break 'sizes;
+            }
+            // Half the round trip ≈ one-way wire time.
+            xs.push(t0.elapsed().as_secs_f64() / 2.0);
+        }
+        let secs = Summary::of(&xs);
+        log::info!(
+            "  calib {name} {bytes:>8} B: p10 {} p50 {} p90 {} (n={})",
+            human_duration(secs.p10),
+            human_duration(secs.p50),
+            human_duration(secs.p90),
+            secs.n
+        );
+        samples.push(CalSample { bytes, secs });
+    }
+    // Release the echo peer (ignore failures: it also exits on timeout).
+    let _ = t.send(
+        1,
+        Envelope { src: 0, tag: Tag::new(STOP_SEQ, Phase::ReduceDown, 0), payload: Vec::new() },
+    );
+    let _ = peer.join();
+
+    let points: Vec<(usize, f64)> = samples.iter().map(|s| (s.bytes, s.secs.p50)).collect();
+    let fitted = CostModel::fit(&points);
+    Calibration { transport: name.to_string(), samples, fitted }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mem_calibration_produces_samples() {
+        let opts = BenchOpts { warmup_iters: 1, measure_iters: 3 };
+        let cal = calibrate_mem(&[1 << 10, 64 << 10, 1 << 20], &opts);
+        assert_eq!(cal.transport, "mem");
+        assert_eq!(cal.samples.len(), 3);
+        for s in &cal.samples {
+            assert_eq!(s.secs.n, 3);
+            assert!(s.secs.p50 >= 0.0);
+        }
+        // A fit may legitimately fail on a fast machine (timer noise),
+        // but when it succeeds it must be physical.
+        if let Some(m) = cal.fitted {
+            assert!(m.setup_secs > 0.0 && m.bandwidth_bps > 0.0);
+        }
+    }
+
+    #[test]
+    fn tcp_loopback_calibration_fits_a_model() {
+        let opts = BenchOpts { warmup_iters: 1, measure_iters: 5 };
+        let cal = calibrate_tcp_loopback(&[4 << 10, 256 << 10, 2 << 20], &opts).unwrap();
+        assert_eq!(cal.samples.len(), 3, "all sizes must calibrate");
+        // Larger messages must not be faster in the medians by a wide
+        // margin (sanity on the harness, not the machine).
+        let first = cal.samples.first().unwrap().secs.p50;
+        let last = cal.samples.last().unwrap().secs.p50;
+        assert!(last > first * 0.5, "2 MB ({last}s) vs 4 KB ({first}s)");
+        if let Some(m) = cal.fitted {
+            assert!(m.bandwidth_bps > 1e6, "loopback slower than 1 MB/s is a harness bug");
+            assert!(m.setup_secs < 1.0);
+        }
+    }
+}

@@ -1,0 +1,284 @@
+//! Measurement-driven topology autotuner (`sar tune`).
+//!
+//! The paper's central result is that the optimal Sparse Allreduce
+//! network is a nested butterfly of *heterogeneous* degree, and that the
+//! optimum depends on two families of constants the rest of the repo
+//! only hard-codes as 2013-EC2 defaults: machine constants (per-message
+//! setup cost and the packet floor it induces — `simnet::CostModel`) and
+//! data constants (the per-layer index-collision compression of the
+//! actual dataset — `topology::PlannerParams::compression`). This module
+//! measures both on the machine and data at hand and sweeps the degree
+//! schedules against them:
+//!
+//! 1. **Calibration** ([`calibrate`]): microbenchmark the real
+//!    transports (in-process channels, TCP loopback) across message
+//!    sizes and least-squares fit `time = setup + bytes/bandwidth`
+//!    ([`CostModel::fit`]).
+//! 2. **Data profiling + sweep** ([`sweep`]): run one real allreduce per
+//!    candidate degree schedule on the actual dataset (synthetic preset
+//!    or `sar shard` directory), extract per-layer compression factors
+//!    from the recorded [`crate::allreduce::Trace`], and rank the
+//!    schedules by replaying each trace through
+//!    [`crate::simnet::simulate_collective`] under the fitted model
+//!    (paper Figure 6), with wall-clock measurements alongside.
+//! 3. **Persistence** ([`profile`]): the winning schedule plus the
+//!    fitted constants become a digest-protected `tune.toml`
+//!    ([`TuneProfile`]) that `sar launch` / `sar pagerank` consume via
+//!    `RunConfig`'s `[tune] profile` key (or `--tune-profile`), flowing
+//!    the tuned schedule into the `WorkerPlan` all workers execute.
+//! 4. **Trajectory** ([`report`]): every run emits a machine-readable
+//!    `BENCH_<n>.json` (fitted constants, ranked schedules with
+//!    predicted and measured times) so the repo records a perf
+//!    trajectory across PRs.
+
+pub mod calibrate;
+pub mod profile;
+pub mod report;
+pub mod sweep;
+
+pub use calibrate::{calibrate_mem, calibrate_tcp_loopback, CalSample, Calibration};
+pub use profile::TuneProfile;
+pub use sweep::{candidate_schedules, ScheduleEval};
+
+use crate::apps::pagerank::PageRankShards;
+use crate::bench::BenchOpts;
+use crate::graph::{load_all_shards, Csr, DatasetPreset, DatasetSpec};
+use crate::partition::IndexHasher;
+use crate::simnet::CostModel;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Everything `sar tune` needs for one tuning run.
+#[derive(Clone, Debug)]
+pub struct TuneOpts {
+    /// Dataset preset key (twitter | yahoo | docterm).
+    pub dataset: String,
+    pub scale: f64,
+    pub seed: u64,
+    /// Machines to plan for (ignored with `shards`: the shard count
+    /// fixes the world).
+    pub world: usize,
+    /// Tune against a `sar shard` directory instead of a preset.
+    pub shards: Option<PathBuf>,
+    /// Where the digest-protected tuning profile is written.
+    pub out: PathBuf,
+    /// Where the machine-readable bench trajectory row is written.
+    pub bench_json: PathBuf,
+    /// Warmup/measure iteration counts (`--warmup` / `--iters`).
+    pub bench: BenchOpts,
+    /// Sender threads assumed by the simulator (Figure 7 knob).
+    pub threads: usize,
+    /// Trim calibration sizes and iterations for CI smoke runs.
+    pub fast: bool,
+    /// Cap on enumerated candidate schedules.
+    pub max_schedules: usize,
+}
+
+impl Default for TuneOpts {
+    fn default() -> Self {
+        Self {
+            dataset: "twitter".to_string(),
+            scale: 0.01,
+            seed: 42,
+            world: 4,
+            shards: None,
+            out: PathBuf::from("tune.toml"),
+            bench_json: PathBuf::from("BENCH_3.json"),
+            bench: BenchOpts::default(),
+            threads: 8,
+            fast: false,
+            max_schedules: 64,
+        }
+    }
+}
+
+/// The dataset a tuning run profiles against, partitioned exactly once
+/// (the hash partition depends only on the world size, not on the
+/// schedule): every candidate schedule sees the identical shard CSRs,
+/// so measured differences are purely topological — and a sweep of N
+/// schedules pays the O(edges) partitioning cost once, not N times.
+pub struct TuneData {
+    pub shards: Vec<Csr>,
+    pub vertices: i64,
+    pub hasher: IndexHasher,
+    /// Dataset identity (preset key or the shard manifest's source).
+    pub source: String,
+}
+
+impl TuneData {
+    /// Logical machine count the schedules must cover.
+    pub fn world(&self) -> usize {
+        self.shards.len()
+    }
+}
+
+/// Outcome of a tuning run (everything the report serializes).
+pub struct TuneOutcome {
+    pub profile: TuneProfile,
+    pub calibrations: Vec<Calibration>,
+    /// The model the sweep ranked under (best fitted, else the 2013-EC2
+    /// fallback).
+    pub model: CostModel,
+    pub model_source: String,
+    /// Candidate schedules, best (rank 1) first.
+    pub evals: Vec<ScheduleEval>,
+    /// Measured compression after a k-way merge, per probed first-layer
+    /// degree (the planner's data constant as a curve).
+    pub degree_compression: Vec<(usize, f64)>,
+}
+
+/// Run the full tune pipeline and write `tune.toml` + `BENCH_*.json`.
+pub fn run_tune(opts: &TuneOpts) -> Result<TuneOutcome> {
+    // --- stage 1: acquire + partition the dataset --------------------
+    // Before the (seconds-long) calibration so an invalid world or a
+    // bad shard directory fails fast.
+    let data = load_tune_data(opts)?;
+    let world = data.world();
+    if world < 2 {
+        bail!("tuning needs a world of at least 2 machines, got {world}");
+    }
+
+    // --- stage 2: transport calibration ------------------------------
+    let sizes: &[usize] = if opts.fast {
+        &[4 << 10, 64 << 10, 512 << 10]
+    } else {
+        &[4 << 10, 32 << 10, 128 << 10, 512 << 10, 2 << 20, 4 << 20]
+    };
+    log::info!("calibrating transports over {} message sizes", sizes.len());
+    let cal_mem = calibrate_mem(sizes, &opts.bench);
+    // A sandbox that denies loopback sockets must degrade down the
+    // fallback ladder (mem fit → ec2-2013), not abort the tune run.
+    let cal_tcp = match calibrate_tcp_loopback(sizes, &opts.bench) {
+        Ok(c) => c,
+        Err(e) => {
+            log::warn!("tcp loopback calibration unavailable ({e:#}); using mem fit only");
+            Calibration { transport: "tcp-loopback".to_string(), samples: Vec::new(), fitted: None }
+        }
+    };
+    let (model, model_source) = match (&cal_tcp.fitted, &cal_mem.fitted) {
+        (Some(m), _) => (*m, "tcp-loopback".to_string()),
+        (None, Some(m)) => (*m, "mem".to_string()),
+        (None, None) => {
+            log::warn!("calibration could not fit a model; keeping the 2013-EC2 constants");
+            (CostModel::ec2_2013(), "ec2-2013-fallback".to_string())
+        }
+    };
+    log::info!(
+        "fitted model ({model_source}): setup {:.1} µs, bandwidth {:.1} MB/s, floor {:.0} bytes",
+        model.setup_secs * 1e6,
+        model.bandwidth_bps / 1e6,
+        model.floor_bytes(0.6)
+    );
+
+    // --- stage 3: sweep schedules ------------------------------------
+    let candidates = candidate_schedules(world, opts.max_schedules);
+    log::info!("sweeping {} candidate schedules over world {world}", candidates.len());
+    let mut evals = Vec::with_capacity(candidates.len());
+    for degrees in candidates {
+        let eval = sweep::eval_schedule(&data, &degrees, &model, opts, world)
+            .with_context(|| format!("evaluating schedule {degrees:?}"))?;
+        evals.push(eval);
+    }
+    // Rank by model-predicted time (the paper's Figure 6 axis);
+    // wall-clock medians break ties.
+    evals.sort_by(|a, b| {
+        (a.predicted_secs, a.measured.p50)
+            .partial_cmp(&(b.predicted_secs, b.measured.p50))
+            .expect("finite times")
+    });
+    for (i, e) in evals.iter_mut().enumerate() {
+        e.rank = i + 1;
+    }
+
+    // --- stage 4: compression curve + profile ------------------------
+    let degree_compression = sweep::compression_by_degree(&evals);
+    // Degree-1 padded probes (tiny-world sweeps) measure barrier
+    // overhead for the report but are never *chosen*: a no-op layer in
+    // the persisted schedule would only add handshake rounds.
+    let best = evals.iter().find(|e| !e.degrees.contains(&1)).unwrap_or(&evals[0]);
+    let profile = TuneProfile {
+        format: profile::TUNE_FORMAT,
+        world,
+        degrees: best.degrees.clone(),
+        cost: model,
+        packet_floor: model.floor_bytes(0.6),
+        compression: if best.compressions.is_empty() {
+            vec![sweep::aggregate_compression(&evals)]
+        } else {
+            best.compressions.clone()
+        },
+        dataset: data.source.clone(),
+        scale: opts.scale,
+        seed: opts.seed,
+    };
+    if let Some(parent) = opts.out.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+    }
+    profile.save(&opts.out)?;
+    log::info!("wrote tuning profile {} (digest {:016x})", opts.out.display(), profile.digest());
+
+    let outcome = TuneOutcome {
+        profile,
+        calibrations: vec![cal_mem, cal_tcp],
+        model,
+        model_source,
+        evals,
+        degree_compression,
+    };
+    report::write_bench_json(&opts.bench_json, opts, &outcome)?;
+    Ok(outcome)
+}
+
+fn load_tune_data(opts: &TuneOpts) -> Result<TuneData> {
+    if let Some(dir) = &opts.shards {
+        let (manifest, shards) = load_all_shards(dir)
+            .with_context(|| format!("loading shard set from {}", dir.display()))?;
+        let hasher = IndexHasher::pagerank(manifest.vertices as u64, manifest.seed);
+        log::info!(
+            "profiling against {} shards of {} ({} vertices)",
+            shards.len(),
+            manifest.source,
+            manifest.vertices
+        );
+        return Ok(TuneData {
+            shards,
+            vertices: manifest.vertices,
+            hasher,
+            source: manifest.source.clone(),
+        });
+    }
+    if opts.world < 2 {
+        bail!("tuning needs a world of at least 2 machines, got {}", opts.world);
+    }
+    let preset = DatasetPreset::by_name(&opts.dataset)
+        .with_context(|| format!("unknown dataset `{}` (twitter|yahoo|docterm)", opts.dataset))?;
+    let spec = DatasetSpec::new(preset, opts.scale, opts.seed);
+    log::info!("generating {} (scale {})", spec.name(), opts.scale);
+    let graph = spec.generate();
+    // Partition ONCE for the whole sweep — the hash partition depends
+    // only on (world, seed), never on the schedule.
+    let built = PageRankShards::build(&graph, opts.world, opts.seed);
+    Ok(TuneData {
+        shards: built.shards,
+        vertices: built.vertices,
+        hasher: built.hasher,
+        source: opts.dataset.clone(),
+    })
+}
+
+/// Load a tuning profile and apply it to a run configuration: the tuned
+/// degree schedule and fitted cost model replace the config's, and the
+/// result is re-validated against any pinned worker count. This is the
+/// single consumption path for `--tune-profile` and the `[tune] profile`
+/// config key, used by `sar launch` and `sar pagerank` alike — so the
+/// tuned schedule flows into `LaunchOpts`, the `WorkerPlan`, and the
+/// lockstep oracle identically.
+pub fn apply_profile(cfg: &mut crate::config::RunConfig, path: &Path) -> Result<TuneProfile> {
+    let prof = TuneProfile::load(path)
+        .with_context(|| format!("loading tuning profile {}", path.display()))?;
+    prof.apply(cfg)?;
+    Ok(prof)
+}

@@ -1,0 +1,212 @@
+//! Machine-readable bench trajectory emission (`BENCH_<n>.json`).
+//!
+//! Every `sar tune` run records its fitted cost-model constants and the
+//! full ranked schedule sweep — predicted *and* measured times, with
+//! p10/p50/p90 spread — as one JSON document, so the repo accumulates a
+//! perf trajectory that CI can assert on and graph across PRs.
+
+use super::{Calibration, ScheduleEval, TuneOpts, TuneOutcome};
+use crate::bench::{json_f64, json_str, summary_json};
+use crate::simnet::CostModel;
+use anyhow::{Context, Result};
+use std::fmt::Write as _;
+use std::path::Path;
+
+fn cost_model_json(m: &CostModel) -> String {
+    format!(
+        "{{\"setup_secs\":{},\"bandwidth_bps\":{},\"outlier_prob\":{},\
+         \"outlier_mean_secs\":{},\"packet_floor_bytes\":{}}}",
+        json_f64(m.setup_secs),
+        json_f64(m.bandwidth_bps),
+        json_f64(m.outlier_prob),
+        json_f64(m.outlier_mean_secs),
+        json_f64(m.floor_bytes(0.6))
+    )
+}
+
+fn calibration_json(c: &Calibration) -> String {
+    let samples = c
+        .samples
+        .iter()
+        .map(|s| format!("{{\"bytes\":{},\"secs\":{}}}", s.bytes, summary_json(&s.secs)))
+        .collect::<Vec<_>>()
+        .join(",");
+    let fitted = match &c.fitted {
+        Some(m) => cost_model_json(m),
+        None => "null".to_string(),
+    };
+    format!(
+        "{{\"transport\":{},\"fitted\":{},\"samples\":[{samples}]}}",
+        json_str(&c.transport),
+        fitted
+    )
+}
+
+fn degrees_json(degrees: &[usize]) -> String {
+    let inner = degrees.iter().map(|k| k.to_string()).collect::<Vec<_>>().join(",");
+    format!("[{inner}]")
+}
+
+fn schedule_json(e: &ScheduleEval, chosen: bool) -> String {
+    let payloads =
+        e.layer_payloads.iter().map(|p| json_f64(*p)).collect::<Vec<_>>().join(",");
+    let compressions =
+        e.compressions.iter().map(|c| json_f64(*c)).collect::<Vec<_>>().join(",");
+    format!(
+        "{{\"rank\":{},\"degrees\":{},\"predicted_secs\":{},\"measured_secs\":{},\
+         \"layer_payload_bytes\":[{payloads}],\"compression\":[{compressions}],\
+         \"chosen\":{chosen}}}",
+        e.rank,
+        degrees_json(&e.degrees),
+        json_f64(e.predicted_secs),
+        summary_json(&e.measured)
+    )
+}
+
+/// Render the whole outcome as one JSON document.
+pub fn bench_json(opts: &TuneOpts, outcome: &TuneOutcome) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    let _ = writeln!(out, "  \"bench\": 3,");
+    let _ = writeln!(out, "  \"tool\": \"sar tune\",");
+    let _ = writeln!(out, "  \"world\": {},", outcome.profile.world);
+    let _ = writeln!(
+        out,
+        "  \"dataset\": {{\"name\":{},\"scale\":{},\"seed\":{}}},",
+        json_str(&outcome.profile.dataset),
+        json_f64(opts.scale),
+        opts.seed
+    );
+    let _ = writeln!(
+        out,
+        "  \"bench_opts\": {{\"warmup_iters\":{},\"measure_iters\":{},\"fast\":{}}},",
+        opts.bench.warmup_iters, opts.bench.measure_iters, opts.fast
+    );
+    let cals =
+        outcome.calibrations.iter().map(calibration_json).collect::<Vec<_>>().join(",\n    ");
+    let _ = writeln!(out, "  \"calibration\": [\n    {cals}\n  ],");
+    let _ = writeln!(out, "  \"model_source\": {},", json_str(&outcome.model_source));
+    let _ = writeln!(out, "  \"model\": {},", cost_model_json(&outcome.model));
+    let curve = outcome
+        .degree_compression
+        .iter()
+        .map(|(k, c)| format!("{{\"degree\":{k},\"compression\":{}}}", json_f64(*c)))
+        .collect::<Vec<_>>()
+        .join(",");
+    let _ = writeln!(out, "  \"compression_by_degree\": [{curve}],");
+    let scheds = outcome
+        .evals
+        .iter()
+        .map(|e| schedule_json(e, e.degrees == outcome.profile.degrees))
+        .collect::<Vec<_>>()
+        .join(",\n    ");
+    let _ = writeln!(out, "  \"schedules\": [\n    {scheds}\n  ],");
+    let _ = writeln!(
+        out,
+        "  \"chosen\": {{\"degrees\":{},\"profile\":{},\"profile_digest\":\"{:016x}\"}}",
+        degrees_json(&outcome.profile.degrees),
+        json_str(&opts.out.display().to_string()),
+        outcome.profile.digest()
+    );
+    out.push_str("}\n");
+    out
+}
+
+/// Write the bench document, creating parent directories.
+pub fn write_bench_json(path: &Path, opts: &TuneOpts, outcome: &TuneOutcome) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating {}", parent.display()))?;
+        }
+    }
+    std::fs::write(path, bench_json(opts, outcome))
+        .with_context(|| format!("writing bench trajectory {}", path.display()))?;
+    log::info!("wrote bench trajectory {}", path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tune::profile::{TuneProfile, TUNE_FORMAT};
+    use crate::util::Summary;
+
+    fn tiny_outcome() -> TuneOutcome {
+        let model = CostModel::fit(&[(1024, 1e-4), (1 << 20, 1e-3)]).unwrap();
+        let mk = |degrees: Vec<usize>, rank: usize| ScheduleEval {
+            degrees,
+            predicted_secs: 1e-3 * rank as f64,
+            measured: Summary::of(&[1e-3, 2e-3, 3e-3]),
+            layer_payloads: vec![1000.0, 600.0],
+            compressions: vec![0.6],
+            rank,
+        };
+        TuneOutcome {
+            profile: TuneProfile {
+                format: TUNE_FORMAT,
+                world: 4,
+                degrees: vec![2, 2],
+                cost: model,
+                packet_floor: model.floor_bytes(0.6),
+                compression: vec![0.6],
+                dataset: "twitter".into(),
+                scale: 0.01,
+                seed: 42,
+            },
+            calibrations: vec![Calibration {
+                transport: "mem".into(),
+                samples: vec![],
+                fitted: None,
+            }],
+            model,
+            model_source: "tcp-loopback".into(),
+            evals: vec![mk(vec![2, 2], 1), mk(vec![4], 2), mk(vec![4, 1], 3)],
+            degree_compression: vec![(2, 0.6), (4, 0.55)],
+        }
+    }
+
+    /// The emitted document must be structurally sound JSON (balanced
+    /// braces/brackets outside strings, no trailing commas before
+    /// closers) and carry the required fields.
+    #[test]
+    fn bench_json_is_balanced_and_complete() {
+        let opts = TuneOpts::default();
+        let doc = bench_json(&opts, &tiny_outcome());
+        for key in [
+            "\"bench\": 3",
+            "\"model\":",
+            "\"setup_secs\"",
+            "\"bandwidth_bps\"",
+            "\"schedules\":",
+            "\"predicted_secs\"",
+            "\"measured_secs\"",
+            "\"chosen\":",
+            "\"fitted\":null",
+        ] {
+            assert!(doc.contains(key), "missing {key} in:\n{doc}");
+        }
+        assert!(doc.matches("\"rank\":").count() >= 3, "need >= 3 schedule rows");
+        let mut depth = 0i64;
+        let mut in_str = false;
+        let mut prev = ' ';
+        for c in doc.chars() {
+            if in_str {
+                if c == '"' && prev != '\\' {
+                    in_str = false;
+                }
+            } else {
+                match c {
+                    '"' => in_str = true,
+                    '{' | '[' => depth += 1,
+                    '}' | ']' => depth -= 1,
+                    _ => {}
+                }
+                assert!(depth >= 0, "unbalanced close in:\n{doc}");
+            }
+            prev = c;
+        }
+        assert_eq!(depth, 0, "unbalanced JSON:\n{doc}");
+        assert!(!doc.contains(",\n  ]") && !doc.contains(",}"), "trailing comma:\n{doc}");
+    }
+}

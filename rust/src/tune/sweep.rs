@@ -1,0 +1,237 @@
+//! The degree-schedule sweep (paper Figure 6, measurement-driven).
+//!
+//! Every candidate schedule runs the *real* protocol once on the real
+//! dataset via the lockstep driver: the recorded message trace yields
+//! (a) a wall-clock measurement, (b) the per-layer payloads and their
+//! index-collision compression factors, and (c) a cluster-scale time
+//! prediction by replaying the trace through the discrete-event
+//! simulator under the fitted cost model. Ranking by predicted time
+//! reproduces the paper's methodology: laptop traces + calibrated
+//! model → cluster ranking.
+
+use super::{TuneData, TuneOpts};
+use crate::allreduce::Phase;
+use crate::apps::pagerank::DistPageRank;
+use crate::bench::bench;
+use crate::simnet::{simulate_collective, CostModel, SimParams};
+use crate::topology::factorizations_bounded;
+use crate::util::Summary;
+use anyhow::Result;
+
+/// One candidate schedule's measurements and prediction.
+#[derive(Clone, Debug)]
+pub struct ScheduleEval {
+    pub degrees: Vec<usize>,
+    /// Simulator wall-clock for one reduce trace under the fitted model.
+    pub predicted_secs: f64,
+    /// Measured wall-clock of one full iteration (SpMV + allreduce) —
+    /// identical compute across schedules, so differences are
+    /// topological.
+    pub measured: Summary,
+    /// Per-node payload entering each reduce-down layer, bytes.
+    pub layer_payloads: Vec<f64>,
+    /// Measured per-layer compression factors (see
+    /// [`layer_compressions`]); one entry per layer with degree ≥ 2.
+    pub compressions: Vec<f64>,
+    /// 1-based position after ranking (1 = chosen).
+    pub rank: usize,
+}
+
+/// Candidate schedules for a world of `m`: all ordered factorizations
+/// (capped), padded for tiny worlds with degree-1 probe variants
+/// (`[m, 1]`, `[1, m]`) so a sweep always carries at least three rows —
+/// a degree-1 layer exchanges nothing, so these measure the protocol's
+/// pure layer-barrier overhead at zero payload.
+pub fn candidate_schedules(m: usize, cap: usize) -> Vec<Vec<usize>> {
+    let mut out = factorizations_bounded(m, cap.max(1));
+    if m >= 2 {
+        for probe in [vec![m, 1], vec![1, m]] {
+            if out.len() >= 3 {
+                break;
+            }
+            out.push(probe);
+        }
+    }
+    out
+}
+
+/// Evaluate one schedule: run config + one traced reduce on the actual
+/// dataset, measure repeat iterations, and simulate the trace under the
+/// fitted model.
+pub fn eval_schedule(
+    data: &TuneData,
+    degrees: &[usize],
+    model: &CostModel,
+    opts: &TuneOpts,
+    world: usize,
+) -> Result<ScheduleEval> {
+    let mut dist = build_dist(data, degrees)?;
+    let label = degrees.iter().map(|k| k.to_string()).collect::<Vec<_>>().join("x");
+    let measured = bench(&format!("schedule {label}"), &opts.bench, || {
+        dist.step();
+    });
+    let trace = dist.iter_traces.last().expect("bench ran at least one step");
+    let sim = simulate_collective(
+        trace,
+        world,
+        &SimParams { cost: *model, threads: opts.threads, merge_bps: 2e9, seed: opts.seed },
+    );
+    let layer_payloads: Vec<f64> = (0..degrees.len())
+        .map(|l| trace.per_node_payload(Phase::ReduceDown, l, world, degrees[l]))
+        .collect();
+    let compressions = layer_compressions(trace, degrees, &layer_payloads);
+    Ok(ScheduleEval {
+        degrees: degrees.to_vec(),
+        predicted_secs: sim.total_secs,
+        measured: measured.secs,
+        layer_payloads,
+        compressions,
+        rank: 0,
+    })
+}
+
+fn build_dist(data: &TuneData, degrees: &[usize]) -> Result<DistPageRank> {
+    // One shared partition for the whole sweep (see [`TuneData`]); only
+    // the butterfly is rebuilt per schedule. The CSR clone is a flat
+    // memcpy — no regeneration or re-partitioning.
+    DistPageRank::from_shards(
+        data.shards.clone(),
+        data.vertices,
+        degrees.to_vec(),
+        data.hasher.clone(),
+    )
+}
+
+/// Per-layer compression factors from a reduce trace. For layer ℓ with
+/// a successor carrying data, the factor is the ratio of successive
+/// per-node payloads (the planner's `bytes ← bytes · c` constant). For
+/// the deepest exchanging layer the reduce-up echo is used instead: the
+/// up phase ships the *merged* values over the same edges the down
+/// phase shipped raw parts, so `up/down` bytes approximate the merge's
+/// collision compression. Degree-1 layers exchange nothing and are
+/// skipped. Factors are clamped to (0, 1] — merged data never exceeds
+/// its parts under a sum reduction.
+pub fn layer_compressions(
+    trace: &crate::allreduce::Trace,
+    degrees: &[usize],
+    payloads: &[f64],
+) -> Vec<f64> {
+    let exchanging: Vec<usize> = (0..degrees.len()).filter(|&l| degrees[l] >= 2).collect();
+    let mut out = Vec::with_capacity(exchanging.len());
+    for (pos, &l) in exchanging.iter().enumerate() {
+        let c = match exchanging.get(pos + 1) {
+            Some(&next) if payloads[l] > 0.0 => payloads[next] / payloads[l],
+            _ => {
+                let down = trace.layer_bytes(Phase::ReduceDown, l) as f64;
+                let up = trace.layer_bytes(Phase::ReduceUp, l) as f64;
+                if down > 0.0 && up > 0.0 {
+                    up / down
+                } else {
+                    1.0
+                }
+            }
+        };
+        out.push(c.clamp(f64::MIN_POSITIVE, 1.0));
+    }
+    out
+}
+
+/// Measured compression after a k-way merge, per distinct first-layer
+/// degree across the sweep — the planner's data constant as a curve
+/// (higher degrees merge more streams and compress harder on power-law
+/// data).
+pub fn compression_by_degree(evals: &[ScheduleEval]) -> Vec<(usize, f64)> {
+    let mut out: Vec<(usize, f64)> = Vec::new();
+    for e in evals {
+        // compressions[i] belongs to the i-th *exchanging* (degree ≥ 2)
+        // layer, so pair through that mapping rather than raw zip.
+        let first_exchanging = e.degrees.iter().position(|&k| k >= 2);
+        if let (Some(l0), Some(&c)) = (first_exchanging, e.compressions.first()) {
+            let k = e.degrees[l0];
+            if !out.iter().any(|&(kk, _)| kk == k) {
+                out.push((k, c));
+            }
+        }
+    }
+    out.sort_unstable_by_key(|&(k, _)| k);
+    out
+}
+
+/// Geometric mean of every measured layer compression across the sweep
+/// (fallback planner constant when the chosen schedule has a single
+/// layer and therefore no payload ratio of its own).
+pub fn aggregate_compression(evals: &[ScheduleEval]) -> f64 {
+    let all: Vec<f64> =
+        evals.iter().flat_map(|e| e.compressions.iter().copied()).filter(|c| *c > 0.0).collect();
+    if all.is_empty() {
+        return 0.7; // the paper's power-law ballpark
+    }
+    let log_mean = all.iter().map(|c| c.ln()).sum::<f64>() / all.len() as f64;
+    log_mean.exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::allreduce::Trace;
+
+    #[test]
+    fn candidates_cover_world_and_pad_small_sweeps() {
+        let c4 = candidate_schedules(4, 64);
+        assert!(c4.len() >= 3, "small worlds must pad to >= 3 rows: {c4:?}");
+        for d in &c4 {
+            assert_eq!(d.iter().product::<usize>(), 4, "{d:?}");
+        }
+        assert!(c4.contains(&vec![4]) && c4.contains(&vec![2, 2]));
+        // Larger worlds need no padding.
+        let c8 = candidate_schedules(8, 64);
+        assert_eq!(c8.len(), 4);
+        assert!(!c8.iter().any(|d| d.contains(&1)));
+        // The cap still floors at 3 via padding only when needed.
+        let capped = candidate_schedules(64, 2);
+        assert_eq!(capped.len(), 3);
+    }
+
+    #[test]
+    fn compressions_come_from_payload_ratios_and_up_echo() {
+        // Two-layer degree-2 trace over 4 nodes: layer 0 payload 100,
+        // layer 1 payload 60 (c0 = 0.6); layer 1 up echo is half its
+        // down bytes (c1 = 0.5).
+        let mut t = Trace::new();
+        for (src, dst) in [(0usize, 1usize), (1, 0), (2, 3), (3, 2)] {
+            t.record(Phase::ReduceDown, 0, src, dst, 50);
+        }
+        for (src, dst) in [(0usize, 2usize), (2, 0), (1, 3), (3, 1)] {
+            t.record(Phase::ReduceDown, 1, src, dst, 30);
+            t.record(Phase::ReduceUp, 1, dst, src, 15);
+        }
+        let degrees = [2usize, 2];
+        let payloads: Vec<f64> = (0..2)
+            .map(|l| t.per_node_payload(Phase::ReduceDown, l, 4, degrees[l]))
+            .collect();
+        assert!((payloads[0] - 100.0).abs() < 1e-9);
+        assert!((payloads[1] - 60.0).abs() < 1e-9);
+        let cs = layer_compressions(&t, &degrees, &payloads);
+        assert_eq!(cs.len(), 2);
+        assert!((cs[0] - 0.6).abs() < 1e-9, "{cs:?}");
+        assert!((cs[1] - 0.5).abs() < 1e-9, "{cs:?}");
+        // Degree-1 probe layers are skipped entirely.
+        let cs = layer_compressions(&t, &[2, 1], &payloads);
+        assert_eq!(cs.len(), 1);
+    }
+
+    #[test]
+    fn aggregate_compression_is_geometric_mean() {
+        let mk = |cs: Vec<f64>| ScheduleEval {
+            degrees: vec![2, 2],
+            predicted_secs: 0.0,
+            measured: Summary::of(&[]),
+            layer_payloads: vec![],
+            compressions: cs,
+            rank: 0,
+        };
+        let evals = vec![mk(vec![0.25]), mk(vec![1.0])];
+        assert!((aggregate_compression(&evals) - 0.5).abs() < 1e-12);
+        assert_eq!(aggregate_compression(&[mk(vec![])]), 0.7);
+    }
+}

@@ -1,0 +1,189 @@
+//! Autotuner acceptance tests.
+//!
+//! The pipeline under test: `sar tune` calibrates the transports, runs
+//! one real allreduce per candidate schedule on the actual dataset,
+//! writes a digest-protected `tune.toml` plus a machine-readable
+//! `BENCH_*.json`, and both `sar pagerank --mode lockstep` and a real
+//! 4-process `sar launch` consume the profile with the cross-mode
+//! determinism checksum unchanged. The multi-process half is tagged
+//! `mp_` so CI runs it in the tier-2 job.
+
+use sparse_allreduce::bench::BenchOpts;
+use sparse_allreduce::cluster::{launch_local, LaunchOpts};
+use sparse_allreduce::config::RunConfig;
+use sparse_allreduce::coordinator::run_pagerank_lockstep;
+use sparse_allreduce::graph::{DatasetPreset, DatasetSpec};
+use sparse_allreduce::tune::{self, run_tune, TuneOpts, TuneProfile};
+use std::path::{Path, PathBuf};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sar-tune-test-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn tiny_tune_opts(dir: &Path) -> TuneOpts {
+    TuneOpts {
+        dataset: "twitter".into(),
+        scale: 0.002,
+        seed: 42,
+        world: 4,
+        shards: None,
+        out: dir.join("tune.toml"),
+        bench_json: dir.join("BENCH_3.json"),
+        bench: BenchOpts { warmup_iters: 1, measure_iters: 2 },
+        threads: 2,
+        fast: true,
+        max_schedules: 16,
+    }
+}
+
+/// Acceptance (in-process half): `sar tune` on a small preset produces
+/// a digest-verified profile whose schedule covers the world, emits a
+/// bench row with fitted constants and ≥ 3 ranked schedules carrying
+/// predicted *and* measured times, and rejects a tampered profile.
+#[test]
+fn tune_writes_digest_verified_profile_and_bench_row() {
+    let dir = tmp_dir("e2e");
+    let opts = tiny_tune_opts(&dir);
+    let outcome = run_tune(&opts).expect("tune run failed");
+
+    // Profile round-trips through disk with digest verification.
+    let prof = TuneProfile::load(&opts.out).expect("profile must load + verify");
+    assert_eq!(prof, outcome.profile);
+    assert_eq!(prof.degrees.iter().product::<usize>(), 4);
+    assert!(!prof.degrees.contains(&1), "padded probes must not be chosen: {:?}", prof.degrees);
+    assert!(prof.cost.bandwidth_bps > 0.0 && prof.cost.setup_secs >= 0.0);
+    assert!(!prof.compression.is_empty());
+
+    // ≥ 3 ranked schedules, each with a prediction and measured spread.
+    assert!(outcome.evals.len() >= 3, "got {} schedules", outcome.evals.len());
+    for (i, e) in outcome.evals.iter().enumerate() {
+        assert_eq!(e.rank, i + 1);
+        assert!(e.predicted_secs >= 0.0 && e.predicted_secs.is_finite());
+        assert_eq!(e.measured.n, 2);
+        assert_eq!(e.degrees.iter().product::<usize>(), 4);
+    }
+
+    // Bench row: present, JSON-shaped, and carrying the required fields.
+    let doc = std::fs::read_to_string(&opts.bench_json).unwrap();
+    assert!(doc.trim_start().starts_with('{') && doc.trim_end().ends_with('}'));
+    for key in [
+        "\"bench\": 3",
+        "\"schedules\"",
+        "\"model\"",
+        "\"setup_secs\"",
+        "\"bandwidth_bps\"",
+        "\"predicted_secs\"",
+        "\"measured_secs\"",
+        "\"p10\"",
+        "\"p90\"",
+        "\"chosen\"",
+    ] {
+        assert!(doc.contains(key), "bench row missing {key}");
+    }
+    assert!(doc.matches("\"rank\":").count() >= 3);
+
+    // Tampering with a digest-covered field is rejected at load.
+    let text = std::fs::read_to_string(&opts.out).unwrap();
+    let tampered = text.replace("scale = 0.002", "scale = 0.004");
+    assert_ne!(tampered, text, "expected the scale line in the profile");
+    std::fs::write(&opts.out, tampered).unwrap();
+    let err = TuneProfile::load(&opts.out).unwrap_err();
+    assert!(format!("{err:#}").contains("digest"), "got: {err:#}");
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// The profile flows into the lockstep oracle through the same
+/// `apply_profile` path the CLI uses, and the run is identical to one
+/// configured with the schedule spelled out explicitly.
+#[test]
+fn tuned_profile_drives_lockstep_pagerank() {
+    let dir = tmp_dir("lockstep");
+    let opts = tiny_tune_opts(&dir);
+    let outcome = run_tune(&opts).expect("tune run failed");
+
+    let base = RunConfig {
+        iters: 4,
+        seed: 42,
+        scale: 0.002,
+        dataset: "twitter".into(),
+        ..RunConfig::default()
+    };
+    let mut tuned_cfg = base.clone();
+    let prof = tune::apply_profile(&mut tuned_cfg, &opts.out).unwrap();
+    assert_eq!(tuned_cfg.degrees, outcome.profile.degrees);
+    assert_eq!(prof.degrees, outcome.profile.degrees);
+
+    let graph = DatasetSpec::new(DatasetPreset::TwitterFollowers, 0.002, 42).generate();
+    let tuned = run_pagerank_lockstep(&graph, &tuned_cfg);
+    let explicit_cfg = RunConfig { degrees: prof.degrees.clone(), ..base };
+    let explicit = run_pagerank_lockstep(&graph, &explicit_cfg);
+    assert!(tuned.checksum > 0.0 && tuned.checksum.is_finite());
+    assert_eq!(tuned.checksum, explicit.checksum, "profile must not perturb the math");
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// A profile that no longer covers the launch's world is rejected
+/// before anything is spawned.
+#[test]
+fn stale_profile_rejected_before_launch() {
+    let dir = tmp_dir("stale");
+    let opts = tiny_tune_opts(&dir);
+    run_tune(&opts).expect("tune run failed");
+    // The launch pins 8 workers but the profile covers 4.
+    let mut cfg = RunConfig {
+        workers: Some(8),
+        ..RunConfig::default()
+    };
+    let err = tune::apply_profile(&mut cfg, &opts.out).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("worker"), "got: {msg}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Acceptance (multi-process half): the tuned schedule drives a real
+/// 4-process `sar launch` and lands on the lockstep oracle's checksum —
+/// the cross-mode determinism anchor is unchanged by tuning.
+#[test]
+fn mp_tune_profile_drives_launch_and_matches_lockstep() {
+    let bin = Path::new(env!("CARGO_BIN_EXE_sar"));
+    let dir = tmp_dir("mp");
+    let opts = tiny_tune_opts(&dir);
+    let outcome = run_tune(&opts).expect("tune run failed");
+
+    let mut cfg = RunConfig {
+        iters: 4,
+        seed: 42,
+        scale: 0.002,
+        dataset: "twitter".into(),
+        ..RunConfig::default()
+    };
+    tune::apply_profile(&mut cfg, &opts.out).unwrap();
+    assert_eq!(cfg.degrees, outcome.profile.degrees);
+    assert_eq!(cfg.degrees.iter().product::<usize>(), 4, "4-process launch");
+
+    let graph = DatasetSpec::new(DatasetPreset::TwitterFollowers, 0.002, 42).generate();
+    let lockstep = run_pagerank_lockstep(&graph, &cfg);
+
+    let launch = LaunchOpts::from_run_config(&cfg);
+    let run = launch_local(bin, launch).expect("tuned 4-process launch failed");
+    assert_eq!(run.world, 4);
+    assert_eq!(run.dead, Vec::<usize>::new());
+    assert!(
+        (run.checksum - lockstep.checksum).abs() < 1e-9,
+        "tuned distributed checksum {} != lockstep {}",
+        run.checksum,
+        lockstep.checksum
+    );
+    // The RTT satellite rides the same run: four live workers
+    // heartbeating for the whole run must leave samples behind.
+    assert_eq!(run.rtt_per_worker.len(), 4);
+    assert!(run.rtt.n > 0, "expected heartbeat RTT samples");
+    assert!(run.rtt.min >= 0.0 && run.rtt.max < 10.0, "implausible rtt: {:?}", run.rtt);
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}

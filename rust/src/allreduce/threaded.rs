@@ -49,6 +49,15 @@ impl<T: Transport + 'static> NodeHandle<T> {
         self.timeout = timeout;
     }
 
+    /// Offset the collective sequence space (e.g. by `job_id << 16`):
+    /// consecutive jobs reusing one long-lived transport then can never
+    /// produce colliding message tags, even with late duplicate packets
+    /// from a previous job still in flight (replicated sends don't
+    /// barrier). Leaves 2^16 collectives per job.
+    pub fn set_seq_base(&mut self, base: u32) {
+        self.seq = base;
+    }
+
     /// Wait for the message `(tag, src)`, pulling from the pending buffer
     /// or the transport.
     fn await_msg(&mut self, tag: Tag, src: NodeId) -> Result<Vec<u8>, TransportError> {
@@ -125,13 +134,11 @@ impl<T: Transport + 'static> NodeHandle<T> {
         Ok(())
     }
 
-    /// Run one reduce for this node: `values` aligned with the outbound
-    /// index set; returns values aligned with the inbound set.
-    pub fn reduce<R: ReduceOp>(&mut self, values: Vec<R::T>) -> Result<Vec<R::T>, TransportError> {
-        self.seq += 1;
+    /// The scatter-reduce sweep down the layers; returns this node's
+    /// fully-reduced bottom range (aligned with `bottom_down_set`).
+    fn reduce_down<R: ReduceOp>(&mut self, values: Vec<R::T>) -> Result<Vec<R::T>, TransportError> {
         let layers = self.proto.topology().layers();
         let mut current = values;
-
         for layer in 0..layers {
             let segs = self.proto.reduce_down_outgoing::<R>(layer, &current);
             let my_slot = self.proto.slot(layer);
@@ -147,9 +154,13 @@ impl<T: Transport + 'static> NodeHandle<T> {
             let refs: Vec<&[R::T]> = decoded.iter().map(|v| v.as_slice()).collect();
             current = self.proto.reduce_down_absorb::<R>(layer, &refs);
         }
+        Ok(current)
+    }
 
-        current = self.proto.apply_final_map::<R>(&current);
-
+    /// The allgather sweep back up; `values` aligned with `bottom_up_set`.
+    fn reduce_up<R: ReduceOp>(&mut self, values: Vec<R::T>) -> Result<Vec<R::T>, TransportError> {
+        let layers = self.proto.topology().layers();
+        let mut current = values;
         for layer in (0..layers).rev() {
             let segs = self.proto.reduce_up_outgoing::<R>(layer, &current);
             let my_slot = self.proto.slot(layer);
@@ -165,6 +176,45 @@ impl<T: Transport + 'static> NodeHandle<T> {
             current = self.proto.reduce_up_absorb::<R>(layer, &decoded);
         }
         Ok(current)
+    }
+
+    /// Run one reduce for this node: `values` aligned with the outbound
+    /// index set; returns values aligned with the inbound set.
+    pub fn reduce<R: ReduceOp>(&mut self, values: Vec<R::T>) -> Result<Vec<R::T>, TransportError> {
+        self.seq += 1;
+        let bottom = self.reduce_down::<R>(values)?;
+        let projected = self.proto.apply_final_map::<R>(&bottom);
+        self.reduce_up::<R>(projected)
+    }
+
+    /// Like [`NodeHandle::reduce`], but with a custom bottom-of-butterfly
+    /// transform replacing the final projection: after the scatter-reduce
+    /// completes, `bottom(down_set, reduced, up_set)` receives this node's
+    /// fully-reduced bottom range (aligned with
+    /// [`crate::allreduce::NodeProtocol::bottom_down_set`]) and must
+    /// return one value per `up_set` index to be allgathered — the
+    /// parameter-server mode the lockstep driver exposes as
+    /// [`crate::allreduce::LocalCluster::reduce_with_bottom`], now
+    /// available on every transport-backed node (threaded sessions and
+    /// multi-process workers alike).
+    pub fn reduce_with_bottom<R, F>(
+        &mut self,
+        values: Vec<R::T>,
+        bottom: F,
+    ) -> Result<Vec<R::T>, TransportError>
+    where
+        R: ReduceOp,
+        F: FnOnce(&IndexSet, &[R::T], &IndexSet) -> Vec<R::T>,
+    {
+        self.seq += 1;
+        let reduced = self.reduce_down::<R>(values)?;
+        let out = bottom(self.proto.bottom_down_set(), &reduced, self.proto.bottom_up_set());
+        assert_eq!(
+            out.len(),
+            self.proto.bottom_up_set().len(),
+            "bottom transform must return one value per requested bottom index"
+        );
+        self.reduce_up::<R>(out)
     }
 }
 

@@ -5,6 +5,15 @@
 //! `b^{h+1} = G ×_or b^h` — implemented with the *same* Sparse Allreduce
 //! machinery as PageRank, just with the [`OrU32`] reduce operator.
 //!
+//! The per-node state machine lives in [`DiameterNode`]: the node's edge
+//! shard, the vertices it tracks, and its current sketches. Every
+//! execution mode drives the identical node engine — the in-process
+//! drivers ([`estimate_diameter`] and the comm-session job runner) build
+//! all `m` nodes in one process, a multi-process worker builds only its
+//! own ([`DiameterNode::build_one`]) — so the determinism probe
+//! ([`DiameterNode::probe`]) is comparable across lockstep, threaded and
+//! multi-process runs.
+//!
 //! Two sketch modes:
 //! * **Exact** (graphs ≤ 32 vertices): sketch = one-hot vertex bitmask, so
 //!   the iteration computes exact reachability sets — used to validate the
@@ -15,12 +24,12 @@
 //!   bit; the effective diameter is the smallest `h` with
 //!   `N(h) ≥ 0.9·N(h_max)`.
 
-use crate::allreduce::LocalCluster;
+use crate::comm::{ExecMode, Session};
 use crate::graph::{Csr, EdgeList};
 use crate::partition::random_edge_partition;
 use crate::sparse::{spvec_from_pairs, IndexSet, OrU32};
-use crate::topology::Butterfly;
 use crate::util::Pcg32;
+use anyhow::Result;
 
 /// Diameter estimation parameters.
 #[derive(Clone, Copy, Debug)]
@@ -73,133 +82,194 @@ fn estimate_count(sketches: &[u32]) -> f64 {
     2f64.powf(mean) / FM_PHI
 }
 
-/// Run distributed HADI. Vertex `v`'s `K` sketches live at allreduce
-/// indices `v·K + k`.
-pub fn estimate_diameter(
-    graph: &EdgeList,
-    degrees: Vec<usize>,
-    cfg: &DiameterConfig,
-) -> DiameterResult {
-    let n = graph.vertices;
-    let k = if cfg.exact { 1 } else { cfg.k_sketches };
-    assert!(!cfg.exact || n <= 32, "exact mode needs ≤ 32 vertices");
-    let m: usize = degrees.iter().product();
-    let shards_edges = random_edge_partition(&graph.edges, m, cfg.seed);
-    let shards: Vec<Csr> =
-        shards_edges.iter().map(|es| Csr::from_edges(es, |_| 1.0)).collect();
+/// One logical node's share of a diameter run: its edge shard, the
+/// vertices it tracks (rows ∪ cols; node 0 tracks everything so it can
+/// evaluate N(h)), and its current sketches aligned with
+/// `tracked × K`. Vertex `v`'s `K` sketches live at allreduce indices
+/// `v·K + j`.
+pub struct DiameterNode {
+    shard: Csr,
+    tracked: Vec<i64>,
+    k: usize,
+    exact: bool,
+    vertices: i64,
+    cur: Vec<u32>,
+}
 
-    // initial sketches for every vertex
-    let mut rng = Pcg32::new(cfg.seed ^ 0xD1A);
-    let init: Vec<Vec<u32>> = (0..n)
-        .map(|v| {
-            (0..k)
-                .map(|_| if cfg.exact { 1u32 << (v as u32) } else { fm_sketch(&mut rng) })
-                .collect()
-        })
-        .collect();
+impl DiameterNode {
+    /// Build every node's engine (in-process drivers). Deterministic in
+    /// `(graph, m, cfg.seed)`: the edge partition and the global init
+    /// sketch sequence are both seeded, so a multi-process worker
+    /// rebuilding only its own node lands on identical state.
+    pub fn build_all(graph: &EdgeList, m: usize, cfg: &DiameterConfig) -> Vec<DiameterNode> {
+        let n = graph.vertices;
+        let k = if cfg.exact { 1 } else { cfg.k_sketches };
+        assert!(!cfg.exact || n <= 32, "exact mode needs ≤ 32 vertices");
+        let shards_edges = random_edge_partition(&graph.edges, m, cfg.seed);
+        let shards: Vec<Csr> =
+            shards_edges.iter().map(|es| Csr::from_edges(es, |_| 1.0)).collect();
 
-    // Expanded index space: v*K + j. Every node tracks (inbound) and
-    // re-contributes (outbound) the sketches of ALL vertices its shard
-    // touches — rows ∪ cols. Contributing a vertex's old sketch keeps b^h
-    // monotone (self-retention) and is free under idempotent OR; rows
-    // additionally contribute the OR-SpMV of their in-neighbours. Node 0
-    // additionally monitors every vertex to evaluate N(h).
-    let expand = |verts: &[i64]| -> Vec<i64> {
-        let mut out = Vec::with_capacity(verts.len() * k);
-        for &v in verts {
-            for j in 0..k as i64 {
-                out.push(v * k as i64 + j);
-            }
-        }
-        out
-    };
-
-    let topo = Butterfly::new(degrees, n * k as i64);
-    let mut cluster = LocalCluster::new(topo);
-    // per-node tracked vertex list: rows ∪ cols (node 0: all vertices)
-    let tracked: Vec<Vec<i64>> = shards
-        .iter()
-        .enumerate()
-        .map(|(node, shard)| {
-            if node == 0 {
-                (0..n).collect()
-            } else {
-                let mut v = shard.row_globals.clone();
-                v.extend_from_slice(&shard.col_globals);
-                v.sort_unstable();
-                v.dedup();
-                v
-            }
-        })
-        .collect();
-    let outbound: Vec<IndexSet> =
-        tracked.iter().map(|t| IndexSet::from_sorted(expand(t))).collect();
-    let inbound = outbound.clone();
-    cluster.config(outbound, inbound);
-
-    // current sketches per node, aligned with `tracked[node] × K`
-    let mut cur: Vec<Vec<u32>> = tracked
-        .iter()
-        .map(|t| t.iter().flat_map(|&v| init[v as usize].clone()).collect())
-        .collect();
-
-    let mut neighbourhood = Vec::new();
-    let mut hops = 0usize;
-    for _h in 1..=cfg.max_h {
-        // build outbound contributions
-        let contributions: Vec<Vec<u32>> = shards
-            .iter()
-            .enumerate()
-            .map(|(node, shard)| {
-                let t = &tracked[node];
-                let pos_of = |v: i64| t.binary_search(&v).expect("tracked vertex") * k;
-                // cols slice of the node's current sketches
-                let cols: Vec<u32> = shard
-                    .col_globals
-                    .iter()
-                    .flat_map(|&v| {
-                        let p = pos_of(v);
-                        cur[node][p..p + k].to_vec()
-                    })
-                    .collect();
-                // sketch-wise OR-SpMV: for slot j, input = cols of slot j
-                let mut qs: Vec<Vec<u32>> = Vec::with_capacity(k);
-                for j in 0..k {
-                    let slice: Vec<u32> =
-                        (0..shard.cols()).map(|c| cols[c * k + j]).collect();
-                    qs.push(shard.spmv_or(&slice));
-                }
-                // contribution pairs: old sketch for every tracked vertex
-                // (self-retention) + OR-SpMV results for rows
-                let mut pairs: Vec<(i64, u32)> = Vec::new();
-                for (p, &v) in t.iter().enumerate() {
-                    for j in 0..k {
-                        pairs.push((v * k as i64 + j as i64, cur[node][p * k + j]));
-                    }
-                }
-                for (r, &v) in shard.row_globals.iter().enumerate() {
-                    for j in 0..k {
-                        pairs.push((v * k as i64 + j as i64, qs[j][r]));
-                    }
-                }
-                spvec_from_pairs::<OrU32>(pairs).val
+        // initial sketches for every vertex, one global RNG sequence
+        let mut rng = Pcg32::new(cfg.seed ^ 0xD1A);
+        let init: Vec<Vec<u32>> = (0..n)
+            .map(|v| {
+                (0..k)
+                    .map(|_| if cfg.exact { 1u32 << (v as u32) } else { fm_sketch(&mut rng) })
+                    .collect()
             })
             .collect();
 
-        let (results, _trace) = cluster.reduce::<OrU32>(contributions);
-        cur = results;
-        hops += 1;
+        shards
+            .into_iter()
+            .enumerate()
+            .map(|(node, shard)| {
+                let tracked: Vec<i64> = if node == 0 {
+                    (0..n).collect()
+                } else {
+                    let mut v = shard.row_globals.clone();
+                    v.extend_from_slice(&shard.col_globals);
+                    v.sort_unstable();
+                    v.dedup();
+                    v
+                };
+                let cur: Vec<u32> =
+                    tracked.iter().flat_map(|&v| init[v as usize].clone()).collect();
+                DiameterNode { shard, tracked, k, exact: cfg.exact, vertices: n, cur }
+            })
+            .collect()
+    }
 
-        // node 0 evaluates N(h) over all vertices
+    /// Build one node's engine (multi-process workers): partitions the
+    /// same regenerated edge list and keeps only shard `node`.
+    pub fn build_one(graph: &EdgeList, m: usize, node: usize, cfg: &DiameterConfig) -> DiameterNode {
+        let mut all = Self::build_all(graph, m, cfg);
+        all.swap_remove(node)
+    }
+
+    /// Sketches per vertex actually in use (1 in exact mode).
+    pub fn sketches(&self) -> usize {
+        self.k
+    }
+
+    /// The allreduce index domain: `vertices × K`.
+    pub fn index_range(&self) -> i64 {
+        self.vertices * self.k as i64
+    }
+
+    /// The node's contributed *and* requested index set (`tracked × K`
+    /// expanded): contributing a vertex's old sketch keeps `b^h` monotone
+    /// (self-retention) and is free under idempotent OR.
+    pub fn index_set(&self) -> IndexSet {
+        let mut out = Vec::with_capacity(self.tracked.len() * self.k);
+        for &v in &self.tracked {
+            for j in 0..self.k as i64 {
+                out.push(v * self.k as i64 + j);
+            }
+        }
+        IndexSet::from_sorted(out)
+    }
+
+    /// This hop's outbound values: every tracked vertex's old sketch
+    /// (self-retention) merged with the OR-SpMV of the shard's rows.
+    pub fn contribution(&self) -> Vec<u32> {
+        let k = self.k;
+        let t = &self.tracked;
+        let pos_of = |v: i64| t.binary_search(&v).expect("tracked vertex") * k;
+        // cols slice of the node's current sketches
+        let cols: Vec<u32> = self
+            .shard
+            .col_globals
+            .iter()
+            .flat_map(|&v| {
+                let p = pos_of(v);
+                self.cur[p..p + k].to_vec()
+            })
+            .collect();
+        // sketch-wise OR-SpMV: for slot j, input = cols of slot j
+        let mut qs: Vec<Vec<u32>> = Vec::with_capacity(k);
+        for j in 0..k {
+            let slice: Vec<u32> = (0..self.shard.cols()).map(|c| cols[c * k + j]).collect();
+            qs.push(self.shard.spmv_or(&slice));
+        }
+        let mut pairs: Vec<(i64, u32)> = Vec::new();
+        for (p, &v) in t.iter().enumerate() {
+            for j in 0..k {
+                pairs.push((v * k as i64 + j as i64, self.cur[p * k + j]));
+            }
+        }
+        for (r, &v) in self.shard.row_globals.iter().enumerate() {
+            for j in 0..k {
+                pairs.push((v * k as i64 + j as i64, qs[j][r]));
+            }
+        }
+        spvec_from_pairs::<OrU32>(pairs).val
+    }
+
+    /// Absorb the reduced sketches (aligned with [`DiameterNode::index_set`]).
+    pub fn absorb(&mut self, reduced: Vec<u32>) {
+        assert_eq!(reduced.len(), self.tracked.len() * self.k, "reduced sketch length");
+        self.cur = reduced;
+    }
+
+    /// The cross-mode determinism probe: the node's first tracked sketch
+    /// (the diameter analogue of PageRank's `p[0]`). Exact as f64 for
+    /// any u32, so summing probes across nodes is order-independent.
+    pub fn probe(&self) -> f64 {
+        self.cur.first().copied().unwrap_or(0) as f64
+    }
+
+    /// Evaluate the neighbourhood function over all vertices — only the
+    /// all-vertex tracker (node 0) can answer this.
+    pub fn neighbourhood_estimate(&self) -> f64 {
+        assert_eq!(
+            self.tracked.len() as i64,
+            self.vertices,
+            "N(h) evaluation needs the all-vertex tracker (node 0)"
+        );
         let mut total = 0f64;
-        for v in 0..n as usize {
-            let sk = &cur[0][v * k..(v + 1) * k];
-            total += if cfg.exact {
+        for v in 0..self.vertices as usize {
+            let sk = &self.cur[v * self.k..(v + 1) * self.k];
+            total += if self.exact {
                 sk[0].count_ones() as f64
             } else {
                 estimate_count(sk)
             };
         }
+        total
+    }
+}
+
+/// Sum of per-node probes: the checksum every execution mode reports.
+pub fn diameter_checksum(nodes: &[DiameterNode]) -> f64 {
+    nodes.iter().map(|n| n.probe()).sum()
+}
+
+/// Run distributed HADI through a communicator session of the given
+/// mode (lockstep or threaded). Stops early once N(h) saturates.
+pub fn estimate_diameter_mode(
+    graph: &EdgeList,
+    degrees: Vec<usize>,
+    cfg: &DiameterConfig,
+    mode: ExecMode,
+) -> Result<DiameterResult> {
+    let m: usize = degrees.iter().product();
+    let mut nodes = DiameterNode::build_all(graph, m, cfg);
+    let range = nodes[0].index_range();
+    let mut session = Session::new_in_process(mode, degrees, 4, range.max(1), None)?;
+    let sets: Vec<IndexSet> = nodes.iter().map(|n| n.index_set()).collect();
+    let mut handle = session.configure(sets.clone(), sets)?;
+
+    let mut neighbourhood = Vec::new();
+    let mut hops = 0usize;
+    for _h in 1..=cfg.max_h {
+        let mut vals: Vec<Vec<u32>> = nodes.iter().map(|n| n.contribution()).collect();
+        handle.allreduce::<OrU32>(&mut vals)?;
+        for (node, v) in nodes.iter_mut().zip(vals) {
+            node.absorb(v);
+        }
+        hops += 1;
+
+        let total = nodes[0].neighbourhood_estimate();
         neighbourhood.push(total);
         // saturation: stop when N stops growing
         if neighbourhood.len() >= 2 {
@@ -216,7 +286,18 @@ pub fn estimate_diameter(
         .position(|&x| x >= 0.9 * n_max)
         .map(|i| i + 1)
         .unwrap_or(hops);
-    DiameterResult { neighbourhood, effective_diameter: effective, hops_run: hops }
+    Ok(DiameterResult { neighbourhood, effective_diameter: effective, hops_run: hops })
+}
+
+/// Run distributed HADI on the lockstep oracle (the historical entry
+/// point; in-process collectives cannot fail).
+pub fn estimate_diameter(
+    graph: &EdgeList,
+    degrees: Vec<usize>,
+    cfg: &DiameterConfig,
+) -> DiameterResult {
+    estimate_diameter_mode(graph, degrees, cfg, ExecMode::Lockstep)
+        .expect("in-process diameter run failed")
 }
 
 #[cfg(test)]
@@ -327,5 +408,28 @@ mod tests {
             (100.0..1600.0).contains(&n_est),
             "FM estimate {n_est} too far from 399"
         );
+    }
+
+    #[test]
+    fn threaded_mode_matches_lockstep_hop_for_hop() {
+        let g = path_graph(12);
+        let cfg = DiameterConfig { exact: false, k_sketches: 4, max_h: 6, seed: 9 };
+        let a = estimate_diameter_mode(&g, vec![2, 2], &cfg, ExecMode::Lockstep).unwrap();
+        let b = estimate_diameter_mode(&g, vec![2, 2], &cfg, ExecMode::Threaded).unwrap();
+        assert_eq!(a.hops_run, b.hops_run);
+        assert_eq!(a.neighbourhood, b.neighbourhood, "N(h) must be bit-identical");
+    }
+
+    #[test]
+    fn build_one_matches_build_all() {
+        let g = path_graph(16);
+        let cfg = DiameterConfig { exact: false, k_sketches: 2, max_h: 4, seed: 11 };
+        let all = DiameterNode::build_all(&g, 4, &cfg);
+        for node in 0..4 {
+            let one = DiameterNode::build_one(&g, 4, node, &cfg);
+            assert_eq!(one.tracked, all[node].tracked, "node {node} tracked set");
+            assert_eq!(one.cur, all[node].cur, "node {node} init sketches");
+            assert_eq!(one.contribution(), all[node].contribution(), "node {node}");
+        }
     }
 }

@@ -27,6 +27,24 @@ impl Default for PageRankConfig {
     }
 }
 
+/// The paper's eq. 2 teleport update, `P' = 1/n + (n−1)/n · Q`, applied
+/// in place. Every driver — lockstep oracle, comm-session lanes,
+/// multi-process workers — MUST share this one function: a divergent
+/// float-op order would silently break the cross-mode checksum equality
+/// the test suite anchors on.
+pub fn apply_update(p: &mut [f32], sums: &[f32], vertices: i64) {
+    let teleport = 1.0f32 / vertices as f32;
+    let damp = (vertices as f32 - 1.0) / vertices as f32;
+    for (pv, s) in p.iter_mut().zip(sums) {
+        *pv = teleport + damp * s;
+    }
+}
+
+/// The uniform starting vector (`1/n` per tracked source vertex).
+pub fn initial_p(vertices: i64, cols: usize) -> Vec<f32> {
+    vec![1.0f32 / vertices as f32; cols]
+}
+
 /// Serial oracle: dense PageRank with the paper's update rule.
 /// Returns scores indexed by vertex id.
 pub fn serial_pagerank(graph: &EdgeList, iters: usize) -> Vec<f32> {
@@ -174,12 +192,8 @@ impl DistPageRank {
         let q: Vec<Vec<f32>> =
             self.shards.iter().zip(&self.p_local).map(|(s, p)| s.spmv(p)).collect();
         let (sums, trace) = self.cluster.reduce::<SumF32>(q);
-        let teleport = 1.0f32 / self.n as f32;
-        let damp = (self.n as f32 - 1.0) / self.n as f32;
         for (pl, sv) in self.p_local.iter_mut().zip(sums) {
-            for (p, s) in pl.iter_mut().zip(sv) {
-                *p = teleport + damp * s;
-            }
+            apply_update(pl, &sv, self.n);
         }
         self.iters_done += 1;
         self.iter_traces.push(trace);

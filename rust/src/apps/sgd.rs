@@ -21,13 +21,21 @@
 //!
 //! The one-step gradient delay is the paper's own semantics (push happens
 //! before the next model fetch on the same indices).
+//!
+//! The per-worker state machine lives in [`SgdNode`]; every execution
+//! mode drives the identical engine — [`Trainer`] holds all `m` nodes
+//! over an in-process [`Session`] (lockstep or threaded), a
+//! multi-process worker holds only its own node and drives it with its
+//! transport-backed handle — so the per-worker final loss is the
+//! cross-mode determinism probe.
 
-use crate::allreduce::LocalCluster;
+use crate::comm::{ExecMode, Session};
 use crate::partition::IndexHasher;
 use crate::sparse::{IndexSet, SumF32};
-use crate::topology::Butterfly;
 use crate::util::{Pcg32, Zipf};
+use anyhow::Result;
 use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 /// One sparse training example.
 #[derive(Clone, Debug)]
@@ -244,50 +252,55 @@ impl ExpandMap {
     }
 }
 
-/// Distributed mini-batch SGD trainer (sequential lockstep driver).
-pub struct Trainer<E: GradEngine> {
-    cluster: LocalCluster,
-    engines: Vec<E>,
-    data: SynthData,
+/// One worker's share of a distributed SGD run: its RNG stream, its
+/// persistent bottom-owner model shard, the one-step-delayed gradient
+/// push, and the current batch's expansion map. Deterministic in
+/// `(cfg.seed, node)` — a multi-process worker rebuilding only its node
+/// samples the identical batches as lane `node` of an in-process run.
+pub struct SgdNode<E: GradEngine> {
+    data: Arc<SynthData>,
     cfg: SgdConfig,
     hasher: IndexHasher,
-    rngs: Vec<Pcg32>,
-    /// Persistent model shards: bottom owner → (allreduce index → weight).
-    shards: Vec<HashMap<i64, f32>>,
-    /// Per worker: previous step's (expanded indices, expanded-order grad).
-    pending_push: Vec<(Vec<i64>, Vec<f32>)>,
+    rng: Pcg32,
+    engine: E,
+    /// Persistent model shard (bottom owner): allreduce index → weight.
+    /// Shared with the bottom transform closure, which may run on a lane
+    /// thread in threaded mode.
+    shard: Arc<Mutex<HashMap<i64, f32>>>,
+    /// Previous step's (expanded indices, expanded-order gradient).
+    pending: (Vec<i64>, Vec<f32>),
+    cur: Option<(DenseBatch, ExpandMap)>,
+    /// Per-step loss on this worker's batches.
     pub losses: Vec<f32>,
-    pub step_count: usize,
 }
 
-impl<E: GradEngine> Trainer<E> {
-    /// `features` is the raw feature-space size; allreduce index range is
-    /// `features · classes`.
-    pub fn new(degrees: Vec<usize>, data: SynthData, cfg: SgdConfig, engines: Vec<E>) -> Self {
-        let m: usize = degrees.iter().product();
-        assert_eq!(engines.len(), m);
-        let range = data.features * data.classes as i64;
-        let topo = Butterfly::new(degrees, range);
-        let cluster = LocalCluster::new(topo);
+impl<E: GradEngine> SgdNode<E> {
+    /// Build worker `node` of `m`. The RNG forks are drawn from one root
+    /// sequence, so building node `w` standalone replays the forks a
+    /// whole-cluster build would have made before it.
+    pub fn new(node: usize, data: Arc<SynthData>, cfg: SgdConfig, engine: E) -> SgdNode<E> {
         let hasher = IndexHasher::new(data.features as u64, cfg.seed ^ 0xFEA7);
         let mut root = Pcg32::new(cfg.seed);
-        let rngs = (0..m).map(|i| root.fork(i as u64)).collect();
-        Self {
-            cluster,
-            engines,
+        let mut rng = root.fork(0);
+        for i in 1..=node {
+            rng = root.fork(i as u64);
+        }
+        SgdNode {
             data,
             cfg,
             hasher,
-            rngs,
-            shards: (0..m).map(|_| HashMap::new()).collect(),
-            pending_push: (0..m).map(|_| (Vec::new(), Vec::new())).collect(),
+            rng,
+            engine,
+            shard: Arc::new(Mutex::new(HashMap::new())),
+            pending: (Vec::new(), Vec::new()),
+            cur: None,
             losses: Vec::new(),
-            step_count: 0,
         }
     }
 
-    pub fn machines(&self) -> usize {
-        self.engines.len()
+    /// The allreduce index domain: `features × classes`.
+    pub fn index_range(&self) -> i64 {
+        self.data.features * self.cfg.classes as i64
     }
 
     /// Expansion of a sorted raw active-feature list into sorted hashed
@@ -307,65 +320,166 @@ impl<E: GradEngine> Trainer<E> {
         ExpandMap { indices, order, classes: c }
     }
 
+    /// Start one step: sample this worker's batch and return
+    /// `(outbound, inbound, push_values)` for the dynamic config —
+    /// outbound = the previous step's gradient indices, inbound = this
+    /// batch's class-expanded features.
+    pub fn begin_step(&mut self) -> (IndexSet, IndexSet, Vec<f32>) {
+        let exs = self.data.batch(&mut self.rng, self.cfg.batch_per_worker);
+        let batch = DenseBatch::from_examples(&exs);
+        let map = self.expand(&batch.active);
+        let outbound = IndexSet::from_sorted(self.pending.0.clone());
+        let inbound = IndexSet::from_sorted(map.indices.clone());
+        let push = self.pending.1.clone();
+        self.cur = Some((batch, map));
+        (outbound, inbound, push)
+    }
+
+    /// The parameter-server bottom transform for this step: fold the
+    /// reduced gradient into the owned shard, serve fresh weights for
+    /// the requested indices. Runs on whatever thread executes the
+    /// node's bottom (lane thread in threaded mode), hence `Send`.
+    pub fn bottom_fn(
+        &self,
+    ) -> impl FnOnce(&IndexSet, &[f32], &IndexSet) -> Vec<f32> + Send + 'static {
+        let shard = self.shard.clone();
+        let lr = self.cfg.lr;
+        move |down: &IndexSet, reduced: &[f32], up: &IndexSet| {
+            let mut s = shard.lock().expect("model shard poisoned");
+            for (&idx, &g) in down.as_slice().iter().zip(reduced) {
+                *s.entry(idx).or_insert(0.0) -= lr * g;
+            }
+            up.as_slice().iter().map(|i| *s.get(i).unwrap_or(&0.0)).collect::<Vec<f32>>()
+        }
+    }
+
+    /// Finish the step: compute loss + gradient on the gathered
+    /// sub-model and queue the gradient for the next step's push.
+    pub fn finish_step(&mut self, gathered: Vec<f32>) -> f32 {
+        let (batch, map) = self.cur.take().expect("begin_step before finish_step");
+        let w_sub = map.gather(&gathered);
+        let (loss, grad) = self.engine.grad(&batch, &w_sub, self.cfg.classes);
+        self.pending = (map.indices.clone(), map.scatter(&grad));
+        self.losses.push(loss);
+        loss
+    }
+
+    /// The cross-mode determinism probe: this worker's final loss.
+    pub fn final_loss(&self) -> f32 {
+        self.losses.last().copied().unwrap_or(0.0)
+    }
+
+    /// Current weight of an allreduce index, if this node owns it.
+    pub fn weight_of(&self, idx: i64) -> Option<f32> {
+        self.shard.lock().expect("model shard poisoned").get(&idx).copied()
+    }
+
+    /// Live parameters in this node's shard.
+    pub fn live_params(&self) -> usize {
+        self.shard.lock().expect("model shard poisoned").len()
+    }
+}
+
+/// One global SGD step across all in-process nodes: dynamic config, one
+/// parameter-server reduce, then per-worker gradient computation.
+/// Returns the mean loss. Shared by [`Trainer`] and the comm-session
+/// job runner, so there is exactly one driver-side step implementation.
+pub(crate) fn sgd_step<E: GradEngine>(
+    session: &mut Session,
+    nodes: &mut [SgdNode<E>],
+) -> Result<f32> {
+    let m = nodes.len();
+    let mut outs = Vec::with_capacity(m);
+    let mut ins = Vec::with_capacity(m);
+    let mut vals = Vec::with_capacity(m);
+    for node in nodes.iter_mut() {
+        let (o, i, v) = node.begin_step();
+        outs.push(o);
+        ins.push(i);
+        vals.push(v);
+    }
+    let bottoms: Vec<_> = nodes.iter().map(|n| n.bottom_fn()).collect();
+    let mut handle = session.configure(outs, ins)?;
+    let weights = handle.allreduce_with_bottom::<SumF32, _>(vals, bottoms)?;
+    drop(handle);
+    let mut mean = 0f32;
+    for (node, w) in nodes.iter_mut().zip(weights) {
+        mean += node.finish_step(w);
+    }
+    Ok(mean / m as f32)
+}
+
+/// Distributed mini-batch SGD trainer: all `m` workers' [`SgdNode`]s
+/// driven through one in-process communicator [`Session`].
+pub struct Trainer<E: GradEngine> {
+    session: Session,
+    nodes: Vec<SgdNode<E>>,
+    hasher: IndexHasher,
+    cfg: SgdConfig,
+    pub losses: Vec<f32>,
+    pub step_count: usize,
+}
+
+impl<E: GradEngine> Trainer<E> {
+    /// Lockstep trainer (the deterministic oracle; historical default).
+    /// `features` is the raw feature-space size; the allreduce index
+    /// range is `features · classes`.
+    pub fn new(degrees: Vec<usize>, data: SynthData, cfg: SgdConfig, engines: Vec<E>) -> Self {
+        Self::with_mode(degrees, data, cfg, engines, ExecMode::Lockstep)
+            .expect("in-process sgd session failed")
+    }
+
+    /// Trainer over any in-process execution mode (lockstep | threaded).
+    pub fn with_mode(
+        degrees: Vec<usize>,
+        data: SynthData,
+        cfg: SgdConfig,
+        engines: Vec<E>,
+        mode: ExecMode,
+    ) -> Result<Self> {
+        let m: usize = degrees.iter().product();
+        assert_eq!(engines.len(), m);
+        let data = Arc::new(data);
+        let range = data.features * cfg.classes as i64;
+        let session = Session::new_in_process(mode, degrees, 4, range, None)?;
+        let hasher = IndexHasher::new(data.features as u64, cfg.seed ^ 0xFEA7);
+        let nodes: Vec<SgdNode<E>> = engines
+            .into_iter()
+            .enumerate()
+            .map(|(w, engine)| SgdNode::new(w, data.clone(), cfg, engine))
+            .collect();
+        Ok(Self { session, nodes, hasher, cfg, losses: Vec::new(), step_count: 0 })
+    }
+
+    pub fn machines(&self) -> usize {
+        self.nodes.len()
+    }
+
     /// Run one global training step. Returns mean loss across workers.
     pub fn step(&mut self) -> f32 {
-        let m = self.machines();
-        // 1. sample batches + densify
-        let batches: Vec<DenseBatch> = (0..m)
-            .map(|w| {
-                let exs = self.data.batch(&mut self.rngs[w], self.cfg.batch_per_worker);
-                DenseBatch::from_examples(&exs)
-            })
-            .collect();
-
-        // 2. dynamic config: outbound = last step's gradient indices,
-        //    inbound = this step's active features (both class-expanded).
-        let maps: Vec<ExpandMap> = batches.iter().map(|b| self.expand(&b.active)).collect();
-        let outbound: Vec<IndexSet> = self
-            .pending_push
-            .iter()
-            .map(|(idx, _)| IndexSet::from_sorted(idx.clone()))
-            .collect();
-        let inbound: Vec<IndexSet> =
-            maps.iter().map(|m| IndexSet::from_sorted(m.indices.clone())).collect();
-        self.cluster.config(outbound, inbound);
-
-        // 3. one reduce: push pending gradients into the owner shards,
-        //    pull fresh weights for the current batches.
-        let push_values: Vec<Vec<f32>> =
-            self.pending_push.iter().map(|(_, v)| v.clone()).collect();
-        let shards = &mut self.shards;
-        let lr = self.cfg.lr;
-        let cluster = &self.cluster;
-        let (weights, _trace) = cluster.reduce_with_bottom::<SumF32, _>(push_values, |node, reduced| {
-            let down = cluster.node(node).bottom_down_set();
-            let up = cluster.node(node).bottom_up_set();
-            let shard = &mut shards[node];
-            for (&idx, &g) in down.as_slice().iter().zip(reduced) {
-                *shard.entry(idx).or_insert(0.0) -= lr * g;
-            }
-            up.as_slice().iter().map(|i| *shard.get(i).unwrap_or(&0.0)).collect()
-        });
-
-        // 4. compute gradients on the gathered sub-models
-        let mut mean_loss = 0f32;
-        for w in 0..m {
-            let w_sub = maps[w].gather(&weights[w]);
-            let (loss, grad) = self.engines[w].grad(&batches[w], &w_sub, self.cfg.classes);
-            mean_loss += loss;
-            self.pending_push[w] = (maps[w].indices.clone(), maps[w].scatter(&grad));
-        }
-        mean_loss /= m as f32;
-        self.losses.push(mean_loss);
+        let mean =
+            sgd_step(&mut self.session, &mut self.nodes).expect("in-process sgd step failed");
+        self.losses.push(mean);
         self.step_count += 1;
-        mean_loss
+        mean
+    }
+
+    /// Per-worker nodes (final-loss probes, shard inspection).
+    pub fn nodes(&self) -> &[SgdNode<E>] {
+        &self.nodes
+    }
+
+    /// Sum of per-worker final losses — the cross-mode determinism probe
+    /// multi-process runs report per worker and sum coordinator-side.
+    pub fn checksum(&self) -> f64 {
+        self.nodes.iter().map(|n| n.final_loss() as f64).sum()
     }
 
     /// Current weight of a (feature, class) pair, reading the owner shard.
     pub fn weight(&self, feat: i64, class: usize) -> f32 {
         let idx = self.hasher.hash(feat) * self.cfg.classes as i64 + class as i64;
-        for shard in &self.shards {
-            if let Some(&w) = shard.get(&idx) {
+        for node in &self.nodes {
+            if let Some(w) = node.weight_of(idx) {
                 return w;
             }
         }
@@ -374,7 +488,7 @@ impl<E: GradEngine> Trainer<E> {
 
     /// Total parameters touched so far (live entries across shards).
     pub fn live_params(&self) -> usize {
-        self.shards.iter().map(|s| s.len()).sum()
+        self.nodes.iter().map(|n| n.live_params()).sum()
     }
 }
 
@@ -465,6 +579,51 @@ mod tests {
     }
 
     #[test]
+    fn threaded_trainer_matches_lockstep_bit_for_bit() {
+        let cfg = SgdConfig { classes: 4, batch_per_worker: 8, lr: 0.5, seed: 21 };
+        let mut a = Trainer::with_mode(
+            vec![2, 2],
+            SynthData::new(300, 4, 6, 1.1),
+            cfg,
+            vec![NativeGradEngine; 4],
+            ExecMode::Lockstep,
+        )
+        .unwrap();
+        let mut b = Trainer::with_mode(
+            vec![2, 2],
+            SynthData::new(300, 4, 6, 1.1),
+            cfg,
+            vec![NativeGradEngine; 4],
+            ExecMode::Threaded,
+        )
+        .unwrap();
+        for _ in 0..8 {
+            let la = a.step();
+            let lb = b.step();
+            assert_eq!(la.to_bits(), lb.to_bits(), "per-step mean loss must be identical");
+        }
+        assert_eq!(a.checksum(), b.checksum());
+        assert!(a.checksum().is_finite());
+    }
+
+    #[test]
+    fn standalone_node_matches_trainer_lane() {
+        // A multi-process worker builds only its own SgdNode; its batch
+        // stream must equal the corresponding lane of a full build.
+        let cfg = SgdConfig { classes: 4, batch_per_worker: 4, lr: 0.2, seed: 33 };
+        let data = Arc::new(SynthData::new(120, 4, 5, 1.1));
+        let mut full: Vec<SgdNode<NativeGradEngine>> = (0..4)
+            .map(|w| SgdNode::new(w, data.clone(), cfg, NativeGradEngine))
+            .collect();
+        let mut lone = SgdNode::new(2, data.clone(), cfg, NativeGradEngine);
+        let (o_full, i_full, v_full) = full[2].begin_step();
+        let (o_lone, i_lone, v_lone) = lone.begin_step();
+        assert_eq!(o_full.as_slice(), o_lone.as_slice());
+        assert_eq!(i_full.as_slice(), i_lone.as_slice());
+        assert_eq!(v_full, v_lone);
+    }
+
+    #[test]
     fn model_shards_are_disjoint() {
         let data = SynthData::new(300, 4, 6, 1.1);
         let cfg = SgdConfig { classes: 4, batch_per_worker: 8, lr: 0.2, seed: 9 };
@@ -473,7 +632,8 @@ mod tests {
             t.step();
         }
         let mut seen = std::collections::HashSet::new();
-        for shard in &t.shards {
+        for node in t.nodes() {
+            let shard = node.shard.lock().unwrap();
             for &k in shard.keys() {
                 assert!(seen.insert(k), "index {k} owned by two shards");
             }

@@ -139,9 +139,10 @@ COMMANDS:
   shard         partition a dataset into on-disk worker shards
   pagerank      distributed PageRank on a synthetic power-law graph
   diameter      HADI effective-diameter estimation (OR-allreduce)
+  sgd           distributed mini-batch SGD through the Comm session API
   train         distributed mini-batch SGD (XLA engine by default)
-  worker        join a multi-process cluster as a worker daemon
-  launch        coordinate a multi-process cluster run
+  worker        join a multi-process worker pool as a daemon
+  launch        coordinate a worker pool: one JOIN, N jobs
   config-check  validate a cluster config file
   help          show usage (`sar help <command>` for one command)
 
@@ -209,17 +210,18 @@ global graph — and still land on the lockstep oracle's checksum.
   --edges path     shard a `src dst` edge-list text file instead
                    of a synthetic preset",
         "pagerank" => "\
-USAGE: sar pagerank [--mode lockstep|threaded|distributed] [--distributed]
+USAGE: sar pagerank [--mode lockstep|threaded|distributed|mp] [--distributed]
                     [--dataset twitter|yahoo|docterm] [--scale f]
                     [--degrees 16x4] [--tune-profile tune.toml]
                     [--replication r] [--iters n]
                     [--threads t] [--seed s] [--bin path] [--shards dir]
 
-Distributed PageRank on a synthetic power-law graph.
+Distributed PageRank through the Comm session API.
   --mode m         execution mode                        [threaded]
-                   lockstep: single-thread oracle
-                   threaded: one thread per node, shared transport
-                   distributed: one OS process per node over TCP
+                   lockstep|local: single-thread oracle
+                   threaded|threads: one lane thread per node
+                   distributed|multiprocess|mp|cluster: one OS
+                   process per node over TCP
   --distributed    shorthand for --mode distributed
   --dataset d      synthetic dataset preset              [twitter]
   --scale f        dataset scale multiplier              [0.05]
@@ -230,16 +232,46 @@ Distributed PageRank on a synthetic power-law graph.
   --seed s         RNG seed                              [42]
   --bin path       sar binary to spawn workers from (mode=distributed)
   --shards dir     load worker shards from a `sar shard` directory
-                   (mode=lockstep or distributed) instead of
-                   regenerating the dataset
+                   (any mode) instead of regenerating the dataset
   --tune-profile p use the degree schedule + cost model from a
                    digest-verified `sar tune` profile (conflicts
                    with --degrees)",
         "diameter" => "\
-USAGE: sar diameter [--dataset d] [--scale f] [--degrees 4x2] [--sketches k]
+USAGE: sar diameter [--mode lockstep|threaded|distributed|mp] [--dataset d]
+                    [--scale f] [--degrees 4x2] [--sketches k]
                     [--max-h n] [--seed s]
 
-HADI effective-diameter estimation (OR-allreduce).",
+HADI effective-diameter estimation (OR-allreduce) through the Comm
+session API.
+  --mode m       execution mode                          [lockstep]
+                 in-process modes report the N(h) curve + effective
+                 diameter (early-stops on saturation); distributed
+                 runs --max-h fixed hops on a worker pool and reports
+                 the cross-mode sketch checksum
+  --dataset d    synthetic dataset preset                [twitter]
+  --scale f      dataset scale multiplier                [0.05]
+  --degrees kxk  butterfly degree schedule               [4x2]
+  --sketches k   Flajolet–Martin sketches per vertex     [8]
+  --max-h n      maximum hops                            [24]
+  --seed s       RNG seed                                [7]",
+        "sgd" => "\
+USAGE: sar sgd [--mode lockstep|threaded|distributed|mp] [--features n]
+               [--classes c] [--steps n] [--degrees 2x2] [--batch b]
+               [--lr f] [--feats-per-ex k] [--seed s]
+
+Distributed mini-batch SGD through the Comm session API: dynamic
+per-step configs (the paper's §III-B mini-batch loop) with the
+parameter-server bottom, NativeGradEngine in every mode so the
+per-worker final losses are bit-comparable across modes.
+  --mode m         execution mode                        [lockstep]
+  --features n     raw feature-space size                [1024]
+  --classes c      classes                               [8]
+  --steps n        training steps                        [20]
+  --degrees kxk    butterfly degree schedule             [2x2]
+  --batch b        examples per worker per step          [32]
+  --lr f           learning rate                         [0.5]
+  --feats-per-ex k active features per example           [8]
+  --seed s         RNG seed                              [123]",
         "train" => "\
 USAGE: sar train [--features n] [--classes c] [--steps n] [--degrees 2x2]
                  [--batch b] [--lr f] [--feats-per-ex k] [--native] [--seed s]
@@ -256,24 +288,31 @@ run the config phase and reduce iterations, report metrics.
   --advertise a    data-plane address peers should dial  [derived]
   --heartbeat-ms n control heartbeat interval            [100]",
         "launch" => "\
-USAGE: sar launch [--workers n] [--degrees 2x2] [--tune-profile tune.toml]
+USAGE: sar launch [--jobs pagerank,diameter,...] [--workers n]
+                  [--degrees 2x2] [--tune-profile tune.toml]
                   [--replication r] [--iters n]
                   [--dataset d] [--scale f] [--seed s] [--threads t]
                   [--bind addr] [--file cfg.toml] [--no-spawn] [--bin path]
                   [--shards dir]
 
-Coordinate a multi-process PageRank run: gather worker JOINs, ship plans,
-barrier the config phase, start, and aggregate reports.
+Coordinate a worker pool: gather worker JOINs once, then run each job
+through its own CONFIG barrier → START → REPORT cycle on the same
+pool — no worker restarts between jobs. Report lines are prefixed
+with the job name so multi-job output is attributable.
+  --jobs a,b,...   apps to run, in order (pagerank|diameter|sgd);
+                   each inherits this launch's dataset/seed/iters
+                   [pagerank]
   --workers n      expected worker count (must equal degrees × replication)
   --no-spawn       wait for externally-started workers instead of
                    forking them locally
   --bind a         control-plane bind address            [127.0.0.1:0]
   --bin path       sar binary to spawn local workers from [current exe]
   --file path      take topology/dataset settings from a config file
-  --shards dir     `sar shard` directory: workers load + verify only
-                   their own shard (no per-worker regeneration); the
-                   dir must be readable at the same path on every
-                   worker host
+                   (`[run] jobs = \"pagerank,diameter\"` sets the job list)
+  --shards dir     `sar shard` directory for pagerank jobs: workers
+                   load + verify only their own shard (no per-worker
+                   regeneration); the dir must be readable at the
+                   same path on every worker host
   --tune-profile p use the degree schedule + cost model from a
                    digest-verified `sar tune` profile (conflicts
                    with --degrees; also settable as `[tune] profile`
@@ -342,8 +381,8 @@ mod tests {
     #[test]
     fn every_command_has_usage() {
         for cmd in [
-            "info", "plan", "tune", "shard", "pagerank", "diameter", "train", "worker", "launch",
-            "config-check", "help",
+            "info", "plan", "tune", "shard", "pagerank", "diameter", "sgd", "train", "worker",
+            "launch", "config-check", "help",
         ] {
             assert!(usage_for(cmd).is_some(), "missing usage for {cmd}");
             assert!(USAGE.contains(cmd), "top-level usage missing {cmd}");

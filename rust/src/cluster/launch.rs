@@ -1,18 +1,21 @@
-//! Control plane: gather workers, plan, barrier, start, collect.
+//! Control plane: gather workers once, then run jobs against the pool.
 //!
 //! The [`Coordinator`] binds the control listener; [`Coordinator::accept`]
 //! collects one JOIN per expected worker (arrival order assigns physical
-//! node ids), ships every worker its [`WorkerPlan`] (degree schedule from
-//! the config/planner plus the gathered address map), and returns a
-//! [`Session`]. The session then walks the run's state machine:
-//! [`Session::barrier_config`] (all live workers voted CONFIG_DONE),
-//! [`Session::start`], and [`Session::collect`] (one REPORT per logical
-//! node, tolerating dead replicas per the §V fault model). Heartbeats
-//! feed a [`FailureDetector`] the whole time, so a killed worker turns
-//! into replica failover — or a readable quorum error — instead of a
-//! hang.
+//! node ids) and ships every worker its pool-level [`WorkerPlan`]
+//! (identity, topology, address map), returning a [`Session`] — a
+//! *live worker pool*, not a single run. Each job then walks a
+//! JOB → CONFIG_DONE barrier → START → REPORT cycle on that pool:
+//! [`Session::submit`], [`Session::barrier_config`], [`Session::start`],
+//! [`Session::collect_job`] — or [`Session::run_job`] for the whole
+//! cycle. `sar launch --jobs pagerank,diameter` runs N cycles against
+//! one JOINed pool (same worker pids, no re-JOIN); [`Session::shutdown`]
+//! releases it. Heartbeats feed a [`FailureDetector`] for the pool's
+//! whole lifetime, so a killed worker turns into replica failover — or
+//! a readable quorum error — instead of a hang.
 
-use super::proto::{recv_ctrl, send_ctrl, CtrlMsg, WorkerPlan, WorkerReport, COORD};
+use super::proto::{recv_ctrl, send_ctrl, CtrlMsg, JobPlan, WorkerPlan, WorkerReport, COORD};
+use crate::comm::{AppKind, JobSpec};
 use crate::config::{validate_world, RunConfig};
 use crate::fault::{FailureDetector, ReplicaMap};
 use crate::graph::ShardManifest;
@@ -25,7 +28,7 @@ use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-/// Everything `sar launch` needs to run one distributed job.
+/// Everything `sar launch` needs to bring up a pool and run its jobs.
 #[derive(Clone, Debug)]
 pub struct LaunchOpts {
     /// Butterfly degree schedule over logical nodes.
@@ -47,10 +50,15 @@ pub struct LaunchOpts {
     pub data_timeout: Duration,
     /// Overall deadline for each control phase (join/barrier/collect).
     pub phase_deadline: Duration,
-    /// `sar shard` output directory: workers load (and verify) only
-    /// their own shard instead of regenerating the dataset. The path
-    /// must be readable on every worker host. `None` = regenerate.
+    /// `sar shard` output directory for the default PageRank job:
+    /// workers load (and verify) only their own shard instead of
+    /// regenerating the dataset. The path must be readable on every
+    /// worker host. `None` = regenerate.
     pub shards: Option<PathBuf>,
+    /// The jobs to run against the pool, in order. Empty = one PageRank
+    /// job derived from the legacy fields above (the historical
+    /// single-job launch).
+    pub jobs: Vec<JobSpec>,
 }
 
 impl Default for LaunchOpts {
@@ -68,14 +76,17 @@ impl Default for LaunchOpts {
             data_timeout: Duration::from_secs(20),
             phase_deadline: Duration::from_secs(120),
             shards: None,
+            jobs: Vec::new(),
         }
     }
 }
 
 impl LaunchOpts {
     /// Options from a [`RunConfig`] (the `--file` path of `sar launch`).
+    /// The config's `run.jobs` list is resolved into job specs that
+    /// inherit the config's dataset/seed/iteration fields.
     pub fn from_run_config(cfg: &RunConfig) -> LaunchOpts {
-        LaunchOpts {
+        let mut opts = LaunchOpts {
             degrees: cfg.degrees.clone(),
             replication: cfg.replication,
             iters: cfg.iters,
@@ -85,7 +96,61 @@ impl LaunchOpts {
             send_threads: cfg.send_threads,
             shards: cfg.shards.as_ref().map(PathBuf::from),
             ..LaunchOpts::default()
+        };
+        if !cfg.jobs.is_empty() {
+            // RunConfig job names are validated at parse time (TOML key
+            // handler and the --jobs flag both call AppKind::parse); a
+            // failure here is an internal invariant break, and silently
+            // running the default workload instead would be far worse
+            // than a loud stop.
+            opts.jobs = opts
+                .jobs_from_names(&cfg.jobs)
+                .expect("RunConfig.jobs holds parse-validated app names");
         }
+        opts
+    }
+
+    /// The default single job: PageRank shaped by the legacy fields.
+    pub fn default_job(&self) -> JobSpec {
+        JobSpec {
+            dataset: self.dataset.clone(),
+            scale: self.scale,
+            seed: self.seed,
+            iters: self.iters,
+            shards: self.shards.clone(),
+            ..JobSpec::pagerank()
+        }
+    }
+
+    /// The job list this launch runs (never empty).
+    pub fn job_list(&self) -> Vec<JobSpec> {
+        if self.jobs.is_empty() {
+            vec![self.default_job()]
+        } else {
+            self.jobs.clone()
+        }
+    }
+
+    /// Resolve app names (`pagerank`, `diameter`, `sgd`) into job specs
+    /// inheriting this launch's dataset/seed/iteration fields.
+    pub fn jobs_from_names(&self, names: &[String]) -> Result<Vec<JobSpec>> {
+        names
+            .iter()
+            .map(|name| {
+                let spec = match AppKind::parse(name)? {
+                    AppKind::Pagerank => self.default_job(),
+                    AppKind::Diameter => JobSpec {
+                        dataset: self.dataset.clone(),
+                        scale: self.scale,
+                        seed: self.seed,
+                        iters: self.iters,
+                        ..JobSpec::diameter()
+                    },
+                    AppKind::Sgd => JobSpec { seed: self.seed, iters: self.iters, ..JobSpec::sgd() },
+                };
+                Ok(spec)
+            })
+            .collect()
     }
 
     /// Logical (protocol) node count.
@@ -103,38 +168,48 @@ impl LaunchOpts {
         if self.iters == 0 {
             bail!("iters must be >= 1");
         }
+        for job in self.job_list() {
+            job.validate()?;
+            if job.app == AppKind::Sgd && self.replication > 1 {
+                bail!(
+                    "job `{}`: sgd's parameter-server bottom holds worker-local model \
+                     state; replication > 1 is not supported for sgd jobs",
+                    job.name
+                );
+            }
+        }
         Ok(())
     }
 }
 
-/// Resolve the launch's shard directory (if any) into the
-/// `(shard_dir, manifest_digest)` pair planned to every worker.
-/// Loading the manifest here — before a single JOIN is gathered, let
-/// alone START — front-loads every rejectable mismatch: a corrupt or
+/// Resolve one job's shard directory (if any) into the
+/// `(shard_dir, manifest_digest)` pair shipped in its [`JobPlan`].
+/// Loading the manifest here — before the job is submitted, let alone
+/// STARTed — front-loads every rejectable mismatch: a corrupt or
 /// hand-edited manifest (digest check inside [`ShardManifest::load`]),
 /// a shard count that disagrees with the degree schedule, and shards
 /// built under a different dataset, scale or partition seed than the
-/// launch asks for (which would silently break the advertised
-/// cross-mode checksum equality).
-pub(super) fn resolve_shards(opts: &LaunchOpts) -> Result<(String, u64)> {
-    let Some(dir) = &opts.shards else {
+/// job asks for (which would silently break the advertised cross-mode
+/// checksum equality).
+pub(super) fn resolve_job_shards(spec: &JobSpec, degrees: &[usize]) -> Result<(String, u64)> {
+    let Some(dir) = &spec.shards else {
         return Ok((String::new(), 0));
     };
     let manifest = ShardManifest::load(dir)
         .with_context(|| format!("loading shard manifest from {}", dir.display()))?;
-    let logical = opts.logical();
+    let logical: usize = degrees.iter().product();
     if manifest.shards.len() != logical {
         bail!(
             "shard dir {} holds {} shards but --degrees {:?} needs one per logical \
              node ({logical}); re-run `sar shard --workers {logical}`",
             dir.display(),
             manifest.shards.len(),
-            opts.degrees
+            degrees
         );
     }
     manifest
-        .check_run_identity(&opts.dataset, opts.scale, opts.seed)
-        .with_context(|| format!("shard dir {} contradicts the launch flags", dir.display()))?;
+        .check_run_identity(&spec.dataset, spec.scale, spec.seed)
+        .with_context(|| format!("shard dir {} contradicts the job's flags", dir.display()))?;
     // Ship an absolute path: locally-spawned workers inherit an
     // arbitrary cwd. Join against the coordinator's cwd WITHOUT
     // resolving symlinks — multi-host runs only promise the dir is
@@ -233,15 +308,21 @@ pub fn rtt_straggler(per_worker: &[Summary]) -> Option<(usize, &Summary)> {
         .max_by(|a, b| a.1.p50.partial_cmp(&b.1.p50).expect("rtt p50 comparable"))
 }
 
-/// Aggregated outcome of a distributed run.
+/// Aggregated outcome of one distributed job.
 #[derive(Clone, Debug)]
 pub struct ClusterRun {
+    /// The job's name (attributes multi-job launch output).
+    pub job: String,
     pub world: usize,
     pub replication: usize,
     /// Per *physical* worker metrics (`None` for dead/unreported workers).
     pub per_node: Vec<Option<RunMetrics>>,
-    /// Sum over logical nodes of the first replica's `p[0]` probe —
-    /// comparable with `LocalCluster` / `DistPageRank::checksum()`.
+    /// Per *physical* worker OS pids as reported with this job (`None`
+    /// for dead/unreported workers) — equal pids across jobs prove the
+    /// pool was reused without a worker restart.
+    pub pids: Vec<Option<u32>>,
+    /// Sum over logical nodes of the first replica's determinism probe —
+    /// comparable with the lockstep/threaded drivers' checksums.
     pub checksum: f64,
     /// START → last required REPORT.
     pub wall_secs: f64,
@@ -266,7 +347,8 @@ enum Event {
     Eof,
 }
 
-/// A planned cluster run (all workers joined and hold their plans).
+/// A live worker pool (all workers joined and hold the pool plan).
+/// Jobs run against it one at a time; the pool survives between jobs.
 pub struct Session {
     opts: LaunchOpts,
     map: ReplicaMap,
@@ -274,6 +356,15 @@ pub struct Session {
     events: Receiver<(usize, Event)>,
     detector: Arc<FailureDetector>,
     rtt: Arc<RttTracker>,
+    /// Monotonic job-id source (tags the per-job control messages).
+    job_seq: u32,
+    /// The job whose control messages are currently accepted (stays set
+    /// after collection so late replica reports still land, until the
+    /// next submit resets it).
+    current_job: Option<u32>,
+    current_name: String,
+    /// Whether the current job's run has been collected.
+    collected: bool,
     config_done: Vec<bool>,
     reports: Vec<Option<WorkerReport>>,
     failures: Vec<(usize, String)>,
@@ -302,10 +393,10 @@ impl Coordinator {
     }
 
     /// Accept `opts.world()` JOINs, assign node ids in arrival order,
-    /// and ship each worker its plan.
+    /// and ship each worker its pool plan. Jobs are submitted
+    /// separately on the returned pool session.
     pub fn accept(self, opts: LaunchOpts) -> Result<Session> {
         opts.validate()?;
-        let (shard_dir, manifest_digest) = resolve_shards(&opts)?;
         let world = opts.world();
         let mut conns = Vec::with_capacity(world);
         let mut data_addrs = Vec::with_capacity(world);
@@ -415,14 +506,7 @@ impl Coordinator {
             replication: opts.replication as u32,
             degrees: opts.degrees.iter().map(|&k| k as u32).collect(),
             addrs: data_addrs,
-            dataset: opts.dataset.clone(),
-            scale: opts.scale,
-            seed: opts.seed,
-            iters: opts.iters as u32,
-            send_threads: opts.send_threads as u32,
             data_timeout_ms: opts.data_timeout.as_millis() as u64,
-            shard_dir,
-            manifest_digest,
         };
         for (w, writer) in writers.iter().enumerate() {
             let plan = WorkerPlan { node: w as u32, ..plan_template.clone() };
@@ -437,6 +521,10 @@ impl Coordinator {
             events,
             detector,
             rtt,
+            job_seq: 0,
+            current_job: None,
+            current_name: String::new(),
+            collected: false,
             config_done: vec![false; world],
             reports: (0..world).map(|_| None).collect(),
             failures: Vec::new(),
@@ -463,10 +551,26 @@ impl Session {
     }
 
     /// Drain one pending control event (if any) into session state.
+    /// Per-job messages tagged with a stale job id are logged and
+    /// dropped — a slow worker's late report must not corrupt the
+    /// current job's barrier.
     fn pump(&mut self, wait: Duration) {
+        let cur = self.current_job;
         match self.events.recv_timeout(wait) {
-            Ok((w, Event::Msg(CtrlMsg::ConfigDone))) => self.config_done[w] = true,
-            Ok((w, Event::Msg(CtrlMsg::Report(r)))) => self.reports[w] = Some(r),
+            Ok((w, Event::Msg(CtrlMsg::ConfigDone { job }))) => {
+                if Some(job) == cur {
+                    self.config_done[w] = true;
+                } else {
+                    log::warn!("stale CONFIG_DONE (job {job}) from worker {w}");
+                }
+            }
+            Ok((w, Event::Msg(CtrlMsg::Report(r)))) => {
+                if Some(r.job) == cur {
+                    self.reports[w] = Some(r);
+                } else {
+                    log::warn!("stale REPORT (job {}) from worker {w}", r.job);
+                }
+            }
             Ok((w, Event::Msg(CtrlMsg::Failed { error }))) => {
                 log::warn!("worker {w} failed: {error}");
                 self.detector.mark_dead(w);
@@ -494,9 +598,98 @@ impl Session {
         }
     }
 
-    /// Wait until every live worker finished the config phase; verifies
-    /// that each logical node still has a live, configured replica.
+    /// Ship a job descriptor to every live worker and reset the per-job
+    /// barrier/report state. The pool must be idle (no in-flight job
+    /// between its START and collect).
+    pub fn submit(&mut self, spec: &JobSpec) -> Result<()> {
+        spec.validate()?;
+        if spec.app == AppKind::Sgd && self.opts.replication > 1 {
+            bail!(
+                "sgd's parameter-server bottom holds worker-local model state; \
+                 replication > 1 is not supported for sgd jobs"
+            );
+        }
+        if self.current_job.is_some() {
+            if !self.collected {
+                bail!(
+                    "job `{}` is still in flight; collect it before submitting the next one",
+                    self.current_name
+                );
+            }
+            // Quiesce the pool: collect_job returns once each *logical*
+            // node reported (§V fast path), so a slow replica may still
+            // be mid-reduce on the previous job. Its old protocol
+            // handle would consume — and then discard — the NEXT job's
+            // config traffic, wedging that replica. Wait until every
+            // live worker reported (dead workers excepted) before any
+            // new data-plane messages can start flowing.
+            let deadline = Instant::now() + self.opts.phase_deadline;
+            loop {
+                let settled = (0..self.world())
+                    .all(|w| self.reports[w].is_some() || self.detector.is_hard_dead(w));
+                if settled {
+                    break;
+                }
+                self.pump(Duration::from_millis(20));
+                if Instant::now() > deadline {
+                    self.shutdown_all();
+                    bail!(
+                        "pool quiesce timed out waiting for previous-job reports{}",
+                        self.failure_summary()
+                    );
+                }
+            }
+        }
+        let (shard_dir, manifest_digest) = resolve_job_shards(spec, &self.opts.degrees)?;
+        let job_id = self.job_seq;
+        self.job_seq += 1;
+        let plan = JobPlan {
+            job: job_id,
+            name: spec.name.clone(),
+            app: spec.app.key().to_string(),
+            dataset: spec.dataset.clone(),
+            scale: spec.scale,
+            seed: spec.seed,
+            iters: spec.iters as u32,
+            send_threads: self.opts.send_threads as u32,
+            shard_dir,
+            manifest_digest,
+            sketches: spec.sketches as u32,
+            classes: spec.classes as u32,
+            batch: spec.batch as u32,
+            lr: spec.lr as f64,
+            features: spec.features,
+            feats_per_ex: spec.feats_per_ex as u32,
+        };
+        for c in self.config_done.iter_mut() {
+            *c = false;
+        }
+        for r in self.reports.iter_mut() {
+            *r = None;
+        }
+        self.started_at = None;
+        self.current_job = Some(job_id);
+        self.current_name = spec.name.clone();
+        self.collected = false;
+        for (w, writer) in self.writers.iter().enumerate() {
+            if self.detector.is_hard_dead(w) {
+                continue;
+            }
+            if let Err(e) = send_ctrl(writer, COORD, &CtrlMsg::Job(plan.clone())) {
+                log::warn!("JOB to worker {w} failed: {e}");
+                self.detector.mark_dead(w);
+            }
+        }
+        Ok(())
+    }
+
+    /// Wait until every live worker finished the current job's config
+    /// phase; verifies that each logical node still has a live,
+    /// configured replica.
     pub fn barrier_config(&mut self) -> Result<()> {
+        if self.current_job.is_none() || self.collected {
+            bail!("no job submitted (call submit() first)");
+        }
         let deadline = Instant::now() + self.opts.phase_deadline;
         loop {
             self.pump(Duration::from_millis(50));
@@ -527,10 +720,16 @@ impl Session {
         }
     }
 
-    /// Release every live worker into the reduce iterations.
+    /// Release every live worker into the current job's iterations.
     pub fn start(&mut self) -> Result<()> {
+        let Some(job) = self.current_job else {
+            bail!("no job submitted (call submit() first)");
+        };
+        if self.collected {
+            bail!("job {job} already collected; submit the next one first");
+        }
         if self.started_at.is_some() {
-            bail!("start() called twice");
+            bail!("start() called twice for job {job}");
         }
         self.started_at = Some(Instant::now());
         for (w, writer) in self.writers.iter().enumerate() {
@@ -539,7 +738,7 @@ impl Session {
             if self.detector.is_hard_dead(w) {
                 continue;
             }
-            if let Err(e) = send_ctrl(writer, COORD, &CtrlMsg::Start) {
+            if let Err(e) = send_ctrl(writer, COORD, &CtrlMsg::Start { job }) {
                 log::warn!("START to worker {w} failed: {e}");
                 self.detector.mark_dead(w);
             }
@@ -547,9 +746,10 @@ impl Session {
         Ok(())
     }
 
-    /// Wait for one REPORT per logical node (any live replica), then
-    /// release the cluster and aggregate.
-    pub fn collect(mut self) -> Result<ClusterRun> {
+    /// Wait for one REPORT per logical node (any live replica) for the
+    /// current job, then aggregate — WITHOUT releasing the pool, so the
+    /// next [`Session::submit`] reuses the same workers.
+    pub fn collect_job(&mut self) -> Result<ClusterRun> {
         let Some(started_at) = self.started_at else {
             bail!("collect() before start()");
         };
@@ -565,7 +765,8 @@ impl Session {
             // abort with the §V story instead of waiting out the
             // deadline. A logical node whose REPORT already arrived is
             // complete even if its workers die afterwards (e.g. killed
-            // while idling for SHUTDOWN), so only unreported nodes count.
+            // while idling for the next job), so only unreported nodes
+            // count.
             for l in 0..self.map.logical {
                 let reported = self.map.replicas(l).any(|p| self.reports[p].is_some());
                 let extinct = self.detector.group_extinct_hard(&self.map, l);
@@ -585,10 +786,7 @@ impl Session {
             }
         }
         let wall_secs = started_at.elapsed().as_secs_f64();
-        // Snapshot liveness BEFORE releasing the cluster: workers exit
-        // on SHUTDOWN and their control EOFs must not read as deaths.
         let dead = self.detector.hard_dead();
-        self.shutdown_all();
 
         let mut checksum = 0f64;
         for l in 0..self.map.logical {
@@ -605,15 +803,24 @@ impl Session {
             .iter()
             .map(|r| r.as_ref().map(report_metrics))
             .collect();
+        let pids: Vec<Option<u32>> =
+            self.reports.iter().map(|r| r.as_ref().map(|r| r.pid)).collect();
         let config_secs = per_node
             .iter()
             .flatten()
             .map(|m| m.config_secs)
             .fold(0.0, f64::max);
+        // The job is complete; the pool is idle again. `current_job`
+        // stays set so a slow replica's late report is still accepted
+        // (the next submit quiesces on it).
+        self.started_at = None;
+        self.collected = true;
         Ok(ClusterRun {
+            job: self.current_name.clone(),
             world: self.world(),
             replication: self.opts.replication,
             per_node,
+            pids,
             checksum,
             wall_secs,
             config_secs,
@@ -621,6 +828,28 @@ impl Session {
             rtt_per_worker: self.rtt.summaries(),
             rtt: self.rtt.aggregate(),
         })
+    }
+
+    /// The whole per-job cycle on the live pool: submit → config
+    /// barrier → start → collect. The pool stays up afterwards.
+    pub fn run_job(&mut self, spec: &JobSpec) -> Result<ClusterRun> {
+        self.submit(spec)?;
+        self.barrier_config()?;
+        self.start()?;
+        self.collect_job()
+    }
+
+    /// Legacy single-job collect: gather the current job's reports and
+    /// release the pool.
+    pub fn collect(mut self) -> Result<ClusterRun> {
+        let run = self.collect_job()?;
+        self.shutdown_all();
+        Ok(run)
+    }
+
+    /// Release the pool (idempotent; also runs on drop).
+    pub fn shutdown(&mut self) {
+        self.shutdown_all();
     }
 
     fn shutdown_all(&mut self) {
@@ -688,6 +917,45 @@ mod tests {
         assert_eq!(opts.dataset, "yahoo");
     }
 
+    #[test]
+    fn job_list_defaults_to_one_pagerank_job() {
+        let opts = LaunchOpts { shards: Some("/data/sh".into()), ..LaunchOpts::default() };
+        let jobs = opts.job_list();
+        assert_eq!(jobs.len(), 1);
+        assert_eq!(jobs[0].app, AppKind::Pagerank);
+        assert_eq!(jobs[0].dataset, "twitter");
+        assert_eq!(jobs[0].shards.as_deref(), Some(std::path::Path::new("/data/sh")));
+        assert_eq!(jobs[0].iters, opts.iters);
+    }
+
+    #[test]
+    fn jobs_from_names_inherit_launch_fields() {
+        let opts = LaunchOpts { seed: 99, iters: 3, ..LaunchOpts::default() };
+        let jobs = opts
+            .jobs_from_names(&["pagerank".into(), "diameter".into(), "sgd".into()])
+            .unwrap();
+        assert_eq!(jobs.len(), 3);
+        assert_eq!(jobs[0].app, AppKind::Pagerank);
+        assert_eq!(jobs[1].app, AppKind::Diameter);
+        assert_eq!(jobs[2].app, AppKind::Sgd);
+        for j in &jobs {
+            assert_eq!(j.seed, 99);
+            assert_eq!(j.iters, 3);
+        }
+        assert!(opts.jobs_from_names(&["kmeans".into()]).is_err());
+    }
+
+    #[test]
+    fn sgd_with_replication_is_rejected_up_front() {
+        let opts = LaunchOpts {
+            replication: 2,
+            jobs: vec![JobSpec::sgd()],
+            ..LaunchOpts::default()
+        };
+        let err = opts.validate().unwrap_err();
+        assert!(format!("{err:#}").contains("replication"), "got {err:#}");
+    }
+
     /// Satellite: a synthetic slow worker must surface through the RTT
     /// tracker — its median sits above its peers', the straggler query
     /// names it, and the pooled summary's max reflects it.
@@ -749,6 +1017,8 @@ mod tests {
     fn report_metrics_roundtrip() {
         let r = WorkerReport {
             node: 0,
+            job: 0,
+            pid: 1,
             config_secs: 0.5,
             iter_compute_secs: vec![0.1, 0.2],
             iter_comm_secs: vec![0.3, 0.4],

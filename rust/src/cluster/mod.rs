@@ -20,14 +20,18 @@
 //!  worker                         coordinator
 //!    | ---- JOIN {data_addr} ---------> |   arrival order = node id
 //!    | <--- PLAN {node, degrees,        |   after all M workers joined
-//!    |           addrs[M], dataset,     |
-//!    |           iters, …} ------------ |
-//!    |  (build TcpNet, shard, run       |
-//!    |   config phase over data plane)  |
-//!    | ---- CONFIG_DONE --------------> |   barrier over live workers
-//!    | <--- START --------------------- |
+//!    |           addrs[M]} ------------ |   (pool-level, once)
+//!    |  (build TcpNet fabric, once)     |
+//!    |                                  |
+//!    | <--- JOB {app, op, dataset/      |   repeated per job on the
+//!    |           shards, iters, …} ---- |   same pool (no re-JOIN)
+//!    |  (acquire data, run config       |
+//!    |   phase over data plane)         |
+//!    | ---- CONFIG_DONE {job} --------> |   barrier over live workers
+//!    | <--- START {job} --------------- |
 //!    |  (reduce iterations…)            |
-//!    | ---- REPORT {metrics, p0} -----> |   one per logical node needed
+//!    | ---- REPORT {job, metrics,       |   one per logical node needed,
+//!    |             pid, probe} -------> |   then back to JOB or:
 //!    | <--- SHUTDOWN ------------------ |
 //!    |                                  |
 //!    | ---- HEARTBEAT (100ms) --------> |   entire lifetime, background
@@ -59,9 +63,9 @@ pub mod spawn;
 pub mod worker;
 
 pub use launch::{rtt_straggler, ClusterRun, Coordinator, LaunchOpts, RttTracker, Session};
-pub use proto::{CtrlMsg, WorkerPlan, WorkerReport};
+pub use proto::{CtrlMsg, JobPlan, WorkerPlan, WorkerReport};
 pub use spawn::{
-    default_degrees, launch_local, sar_binary, spawn_local, spawn_session, spawn_workers,
-    LocalProcs, MAX_LOCAL_WORKERS,
+    default_degrees, launch_local, launch_local_jobs, sar_binary, spawn_local, spawn_session,
+    spawn_workers, LocalProcs, MAX_LOCAL_WORKERS,
 };
 pub use worker::{load_worker_data, run_worker, WorkerData, WorkerOpts};

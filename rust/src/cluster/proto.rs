@@ -8,8 +8,18 @@
 //! framing keeps one frame reader for both planes and gives control
 //! messages the same size accounting as data messages.
 //!
-//! See [`super`] for the JOIN → PLAN → CONFIG_DONE → START →
-//! HEARTBEAT/REPORT → SHUTDOWN state machine these messages drive.
+//! The protocol has two levels:
+//!
+//! * **Pool bring-up** (once per worker process): JOIN → PLAN
+//!   ([`WorkerPlan`]: identity, topology, address map). The worker
+//!   builds its TCP data fabric from the plan and keeps it for its
+//!   whole lifetime.
+//! * **Per-job cycle** (repeated on the same pool): JOB ([`JobPlan`]:
+//!   app, op, dataset/shard ref, iteration plan) → CONFIG_DONE barrier
+//!   → START → REPORT. `sar launch --jobs pagerank,diameter` runs N
+//!   such cycles against one JOINed pool; SHUTDOWN releases it.
+//!
+//! See [`super`] for the full state machine these messages drive.
 
 use crate::topology::NodeId;
 use crate::transport::wire::{decode_header, encode_header, HEADER_BYTES};
@@ -30,12 +40,16 @@ pub enum CtrlMsg {
     /// worker → coordinator: first message on the connection; the
     /// worker's data-plane listener address.
     Join { data_addr: String },
-    /// coordinator → worker: identity, topology, address map, workload.
+    /// coordinator → worker: identity, topology, address map. Sent once
+    /// per pool; jobs ride separately so the pool outlives any one job.
     Plan(WorkerPlan),
-    /// worker → coordinator: config phase finished (barrier vote).
-    ConfigDone,
-    /// coordinator → worker: all workers configured; run the iterations.
-    Start,
+    /// coordinator → worker: run this job on the already-built fabric.
+    Job(JobPlan),
+    /// worker → coordinator: config phase of job `job` finished
+    /// (barrier vote).
+    ConfigDone { job: u32 },
+    /// coordinator → worker: all workers configured job `job`; run it.
+    Start { job: u32 },
     /// worker → coordinator: liveness (sent on an interval by a
     /// background thread for the whole worker lifetime). `nonce`
     /// identifies this beat so the coordinator's [`CtrlMsg::HeartbeatAck`]
@@ -48,7 +62,7 @@ pub enum CtrlMsg {
     /// immediately on receipt; the worker timestamps the pair to measure
     /// RTT.
     HeartbeatAck { nonce: u64 },
-    /// worker → coordinator: run finished; metrics and checksum.
+    /// worker → coordinator: job finished; metrics and checksum.
     Report(WorkerReport),
     /// worker → coordinator: run failed; human-readable cause.
     Failed { error: String },
@@ -56,7 +70,8 @@ pub enum CtrlMsg {
     Shutdown,
 }
 
-/// Everything a worker needs to run its share of the job.
+/// Pool-level identity and topology: everything a worker needs to join
+/// the fabric, before any job is known.
 #[derive(Clone, Debug, PartialEq)]
 pub struct WorkerPlan {
     /// This worker's physical node id (index into `addrs`).
@@ -69,15 +84,29 @@ pub struct WorkerPlan {
     pub degrees: Vec<u32>,
     /// Data-plane address of every physical node, indexed by node id.
     pub addrs: Vec<String>,
+    /// Data-plane receive timeout; bounds how long a worker waits on a
+    /// dead peer before reporting failure instead of hanging.
+    pub data_timeout_ms: u64,
+}
+
+/// Per-job descriptor: the app, its reduce-op implied by the app, the
+/// dataset/shard reference, and the iteration plan. One pool runs many
+/// of these back to back.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobPlan {
+    /// Monotonic job id within the pool (tags CONFIG_DONE/START/REPORT).
+    pub job: u32,
+    /// Human-readable name (prefixes the launch report lines).
+    pub name: String,
+    /// App key: `pagerank` | `diameter` | `sgd`.
+    pub app: String,
     /// Dataset preset key (see `graph::DatasetPreset::by_name`).
     pub dataset: String,
     pub scale: f64,
     pub seed: u64,
+    /// PageRank iterations / diameter hops / SGD steps.
     pub iters: u32,
     pub send_threads: u32,
-    /// Data-plane receive timeout; bounds how long a worker waits on a
-    /// dead peer before reporting failure instead of hanging.
-    pub data_timeout_ms: u64,
     /// Shard directory for on-disk dataset ingestion (`sar shard`
     /// output, readable at this path on the worker's host). Empty = no
     /// shards: regenerate the synthetic dataset deterministically.
@@ -87,17 +116,32 @@ pub struct WorkerPlan {
     /// before touching shard data (stale/foreign shard dirs are
     /// rejected before CONFIG_DONE, hence before START).
     pub manifest_digest: u64,
+    /// Diameter: FM sketches per vertex.
+    pub sketches: u32,
+    /// SGD: classes, batch per worker, learning rate, feature-space
+    /// size, active features per example.
+    pub classes: u32,
+    pub batch: u32,
+    pub lr: f64,
+    pub features: i64,
+    pub feats_per_ex: u32,
 }
 
-/// Per-worker run outcome shipped back on REPORT.
+/// Per-worker job outcome shipped back on REPORT.
 #[derive(Clone, Debug, PartialEq)]
 pub struct WorkerReport {
     pub node: u32,
+    /// Which job this report answers (pools run many).
+    pub job: u32,
+    /// The reporting worker's OS pid — lets a multi-job launch assert
+    /// the pool was reused (same pids job after job, no re-JOIN).
+    pub pid: u32,
     pub config_secs: f64,
     pub iter_compute_secs: Vec<f64>,
     pub iter_comm_secs: Vec<f64>,
-    /// First entry of the node's final P vector (determinism probe; the
-    /// coordinator sums one per logical node into the run checksum).
+    /// The node's determinism probe (PageRank `p[0]`, diameter's first
+    /// sketch, SGD's final loss); the coordinator sums one per logical
+    /// node into the run checksum.
     pub checksum_p0: f64,
 }
 
@@ -112,6 +156,7 @@ const OP_REPORT: u32 = 6;
 const OP_FAILED: u32 = 7;
 const OP_SHUTDOWN: u32 = 8;
 const OP_HEARTBEAT_ACK: u32 = 9;
+const OP_JOB: u32 = 10;
 
 // --- body codec ----------------------------------------------------------
 
@@ -123,6 +168,9 @@ impl Enc {
         self.0.extend_from_slice(&v.to_le_bytes());
     }
     fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn i64(&mut self, v: i64) {
         self.0.extend_from_slice(&v.to_le_bytes());
     }
     fn f64(&mut self, v: f64) {
@@ -179,6 +227,9 @@ impl<'a> Dec<'a> {
     fn u64(&mut self) -> std::io::Result<u64> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
+    fn i64(&mut self) -> std::io::Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
     fn f64(&mut self) -> std::io::Result<f64> {
         Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
@@ -221,18 +272,36 @@ pub fn encode(msg: &CtrlMsg) -> (u32, Vec<u8>) {
             e.u32(p.replication);
             e.u32s(&p.degrees);
             e.strs(&p.addrs);
-            e.str(&p.dataset);
-            e.f64(p.scale);
-            e.u64(p.seed);
-            e.u32(p.iters);
-            e.u32(p.send_threads);
             e.u64(p.data_timeout_ms);
-            e.str(&p.shard_dir);
-            e.u64(p.manifest_digest);
             OP_PLAN
         }
-        CtrlMsg::ConfigDone => OP_CONFIG_DONE,
-        CtrlMsg::Start => OP_START,
+        CtrlMsg::Job(j) => {
+            e.u32(j.job);
+            e.str(&j.name);
+            e.str(&j.app);
+            e.str(&j.dataset);
+            e.f64(j.scale);
+            e.u64(j.seed);
+            e.u32(j.iters);
+            e.u32(j.send_threads);
+            e.str(&j.shard_dir);
+            e.u64(j.manifest_digest);
+            e.u32(j.sketches);
+            e.u32(j.classes);
+            e.u32(j.batch);
+            e.f64(j.lr);
+            e.i64(j.features);
+            e.u32(j.feats_per_ex);
+            OP_JOB
+        }
+        CtrlMsg::ConfigDone { job } => {
+            e.u32(*job);
+            OP_CONFIG_DONE
+        }
+        CtrlMsg::Start { job } => {
+            e.u32(*job);
+            OP_START
+        }
         CtrlMsg::Heartbeat { nonce, rtt_us } => {
             e.u64(*nonce);
             e.u64(*rtt_us);
@@ -244,6 +313,8 @@ pub fn encode(msg: &CtrlMsg) -> (u32, Vec<u8>) {
         }
         CtrlMsg::Report(r) => {
             e.u32(r.node);
+            e.u32(r.job);
+            e.u32(r.pid);
             e.f64(r.config_secs);
             e.f64s(&r.iter_compute_secs);
             e.f64s(&r.iter_comm_secs);
@@ -270,21 +341,34 @@ pub fn decode(opcode: u32, payload: &[u8]) -> std::io::Result<CtrlMsg> {
             replication: d.u32()?,
             degrees: d.u32s()?,
             addrs: d.strs()?,
+            data_timeout_ms: d.u64()?,
+        }),
+        OP_JOB => CtrlMsg::Job(JobPlan {
+            job: d.u32()?,
+            name: d.str()?,
+            app: d.str()?,
             dataset: d.str()?,
             scale: d.f64()?,
             seed: d.u64()?,
             iters: d.u32()?,
             send_threads: d.u32()?,
-            data_timeout_ms: d.u64()?,
             shard_dir: d.str()?,
             manifest_digest: d.u64()?,
+            sketches: d.u32()?,
+            classes: d.u32()?,
+            batch: d.u32()?,
+            lr: d.f64()?,
+            features: d.i64()?,
+            feats_per_ex: d.u32()?,
         }),
-        OP_CONFIG_DONE => CtrlMsg::ConfigDone,
-        OP_START => CtrlMsg::Start,
+        OP_CONFIG_DONE => CtrlMsg::ConfigDone { job: d.u32()? },
+        OP_START => CtrlMsg::Start { job: d.u32()? },
         OP_HEARTBEAT => CtrlMsg::Heartbeat { nonce: d.u64()?, rtt_us: d.u64()? },
         OP_HEARTBEAT_ACK => CtrlMsg::HeartbeatAck { nonce: d.u64()? },
         OP_REPORT => CtrlMsg::Report(WorkerReport {
             node: d.u32()?,
+            job: d.u32()?,
+            pid: d.u32()?,
             config_secs: d.f64()?,
             iter_compute_secs: d.f64s()?,
             iter_comm_secs: d.f64s()?,
@@ -338,28 +422,44 @@ mod tests {
             replication: 2,
             degrees: vec![2, 2],
             addrs: (0..8).map(|i| format!("127.0.0.1:{}", 9000 + i)).collect(),
-            dataset: "twitter".into(),
-            scale: 0.01,
-            seed: 42,
-            iters: 5,
-            send_threads: 4,
             data_timeout_ms: 10_000,
-            shard_dir: "/data/shards/twitter-4".into(),
-            manifest_digest: 0xDEAD_BEEF_0BAD_F00D,
         }
     }
 
-    #[test]
-    fn every_message_roundtrips() {
-        let msgs = vec![
+    fn sample_job() -> JobPlan {
+        JobPlan {
+            job: 2,
+            name: "diameter-pass".into(),
+            app: "diameter".into(),
+            dataset: "twitter".into(),
+            scale: 0.01,
+            seed: 42,
+            iters: 6,
+            send_threads: 4,
+            shard_dir: "/data/shards/twitter-4".into(),
+            manifest_digest: 0xDEAD_BEEF_0BAD_F00D,
+            sketches: 8,
+            classes: 4,
+            batch: 32,
+            lr: 0.5,
+            features: -1,
+            feats_per_ex: 6,
+        }
+    }
+
+    fn all_variants() -> Vec<CtrlMsg> {
+        vec![
             CtrlMsg::Join { data_addr: "10.0.0.7:41234".into() },
             CtrlMsg::Plan(sample_plan()),
-            CtrlMsg::ConfigDone,
-            CtrlMsg::Start,
+            CtrlMsg::Job(sample_job()),
+            CtrlMsg::ConfigDone { job: 2 },
+            CtrlMsg::Start { job: 2 },
             CtrlMsg::Heartbeat { nonce: 7, rtt_us: 350 },
             CtrlMsg::HeartbeatAck { nonce: 7 },
             CtrlMsg::Report(WorkerReport {
                 node: 1,
+                job: 2,
+                pid: 4242,
                 config_secs: 0.25,
                 iter_compute_secs: vec![0.1, 0.2],
                 iter_comm_secs: vec![0.3, 0.4],
@@ -367,8 +467,12 @@ mod tests {
             }),
             CtrlMsg::Failed { error: "peer 3 timed out".into() },
             CtrlMsg::Shutdown,
-        ];
-        for msg in msgs {
+        ]
+    }
+
+    #[test]
+    fn every_message_roundtrips() {
+        for msg in all_variants() {
             let (op, payload) = encode(&msg);
             assert_eq!(decode(op, &payload).unwrap(), msg, "opcode {op}");
         }
@@ -376,32 +480,14 @@ mod tests {
 
     #[test]
     fn truncated_and_trailing_rejected() {
-        let (op, payload) = encode(&CtrlMsg::Plan(sample_plan()));
-        assert!(decode(op, &payload[..payload.len() - 1]).is_err());
-        let mut extra = payload.clone();
-        extra.push(0);
-        assert!(decode(op, &extra).is_err());
+        for sample in [CtrlMsg::Plan(sample_plan()), CtrlMsg::Job(sample_job())] {
+            let (op, payload) = encode(&sample);
+            assert!(decode(op, &payload[..payload.len() - 1]).is_err());
+            let mut extra = payload.clone();
+            extra.push(0);
+            assert!(decode(op, &extra).is_err());
+        }
         assert!(decode(99, &[]).is_err());
-    }
-
-    fn all_variants() -> Vec<CtrlMsg> {
-        vec![
-            CtrlMsg::Join { data_addr: "10.0.0.7:41234".into() },
-            CtrlMsg::Plan(sample_plan()),
-            CtrlMsg::ConfigDone,
-            CtrlMsg::Start,
-            CtrlMsg::Heartbeat { nonce: 1, rtt_us: 0 },
-            CtrlMsg::HeartbeatAck { nonce: 1 },
-            CtrlMsg::Report(WorkerReport {
-                node: 2,
-                config_secs: 0.5,
-                iter_compute_secs: vec![0.1],
-                iter_comm_secs: vec![0.2],
-                checksum_p0: 0.125,
-            }),
-            CtrlMsg::Failed { error: "worker 1 exploded".into() },
-            CtrlMsg::Shutdown,
-        ]
     }
 
     /// Satellite: every `CtrlMsg` variant survives encode → TCP → decode

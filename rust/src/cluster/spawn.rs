@@ -110,16 +110,19 @@ pub fn spawn_workers(bin: &Path, coordinator: SocketAddr, world: usize) -> Resul
 }
 
 /// Bind the coordinator, spawn local workers, and return the planned
-/// session plus the process handles — the manual-phase entry point used
-/// by fault-injection tests (kill a worker between phases).
+/// pool session plus the process handles — the manual-phase entry point
+/// used by fault-injection tests (kill a worker between phases) and by
+/// multi-job launches (N `run_job` calls on one pool).
 pub fn spawn_session(bin: &Path, opts: LaunchOpts) -> Result<(Session, LocalProcs)> {
     // Validate BEFORE forking: a bad schedule — or a missing/corrupt/
-    // mismatched shard directory — must not cost a fleet of
-    // subprocesses that immediately has to be reaped. (`accept` runs
-    // the same shard resolution again for the `--no-spawn` path; it is
-    // a cheap manifest re-read.)
+    // mismatched shard directory for any planned job — must not cost a
+    // fleet of subprocesses that immediately has to be reaped.
+    // (`Session::submit` runs the same shard resolution again per job;
+    // it is a cheap manifest re-read.)
     opts.validate()?;
-    super::launch::resolve_shards(&opts)?;
+    for job in opts.job_list() {
+        super::launch::resolve_job_shards(&job, &opts.degrees)?;
+    }
     let world = opts.world();
     let coord = Coordinator::bind(&opts.bind)?;
     let addr = coord.addr()?;
@@ -128,16 +131,40 @@ pub fn spawn_session(bin: &Path, opts: LaunchOpts) -> Result<(Session, LocalProc
     Ok((session, procs))
 }
 
-/// Run one full distributed PageRank job on `world` local worker
-/// processes of `bin`: bind → spawn → plan → config barrier → start →
-/// collect → reap.
+/// Run the launch's first (or only) job on local worker processes of
+/// `bin`: bind → spawn → plan → submit → config barrier → start →
+/// collect → release → reap.
 pub fn launch_local(bin: &Path, opts: LaunchOpts) -> Result<ClusterRun> {
+    let job = opts
+        .job_list()
+        .into_iter()
+        .next()
+        .expect("job_list is never empty");
     let (mut session, mut procs) = spawn_session(bin, opts)?;
-    session.barrier_config()?;
-    session.start()?;
-    let run = session.collect()?;
+    let run = session.run_job(&job)?;
+    session.shutdown();
     procs.wait_all();
     Ok(run)
+}
+
+/// Run EVERY job of the launch against one spawned worker pool — the
+/// multi-job entry point behind `sar launch --jobs a,b`: the pool JOINs
+/// once, each job gets its own CONFIG/START/REPORT cycle, and the
+/// workers are released only after the last report.
+pub fn launch_local_jobs(bin: &Path, opts: LaunchOpts) -> Result<Vec<ClusterRun>> {
+    let jobs = opts.job_list();
+    let (mut session, mut procs) = spawn_session(bin, opts)?;
+    let mut runs = Vec::with_capacity(jobs.len());
+    for job in &jobs {
+        runs.push(
+            session
+                .run_job(job)
+                .with_context(|| format!("running job `{}` on the pool", job.name))?,
+        );
+    }
+    session.shutdown();
+    procs.wait_all();
+    Ok(runs)
 }
 
 /// Default degree schedule for an ad-hoc `n`-process cluster.

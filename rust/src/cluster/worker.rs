@@ -1,14 +1,24 @@
-//! Worker daemon: one `NodeProtocol` endpoint per OS process.
+//! Worker daemon: one protocol endpoint per OS process, serving a
+//! long-lived pool.
 //!
 //! `sar worker --listen <addr> --coordinator <addr>` runs
 //! [`run_worker`]: bind the data-plane listener, dial the coordinator,
-//! JOIN with the advertised data address, receive the [`WorkerPlan`]
-//! (identity + topology + address map + workload), build the shard and
-//! the [`TcpNet`] fabric, run the config phase, vote CONFIG_DONE, wait
-//! for START, run the reduce iterations, and REPORT metrics plus the
-//! determinism checksum. A background thread heartbeats the control
-//! connection for the whole run so the coordinator's
-//! [`crate::fault::FailureDetector`] can distinguish slow from dead.
+//! JOIN with the advertised data address, receive the pool-level
+//! [`WorkerPlan`] (identity + topology + address map), build the
+//! [`TcpNet`] fabric ONCE — then serve job descriptors until released:
+//! for every [`JobPlan`] the coordinator ships, acquire the job's
+//! dataset, run its config phase, vote CONFIG_DONE, wait for START, run
+//! the iterations, and REPORT metrics plus the determinism checksum.
+//! The fabric, the control connection and the heartbeat thread all
+//! outlive any single job, so `sar launch --jobs pagerank,diameter`
+//! reuses one worker pool with no re-JOIN.
+//!
+//! Per-job apps are the same per-node engines the in-process comm
+//! session drives (`apps::{pagerank,diameter,sgd}`): PageRank
+//! (sum-reduce over the shard CSR), HADI diameter (OR-reduce over
+//! sketch sets), and mini-batch SGD (dynamic per-step configs with the
+//! parameter-server bottom). A worker therefore produces bit-comparable
+//! checksums with the lockstep oracle for every app.
 //!
 //! Control-plane reading is split across two threads: a router thread
 //! owns the read half of the control connection, answers
@@ -19,26 +29,30 @@
 //! previously measured RTT, so the coordinator accumulates a
 //! per-worker RTT distribution without a second socket.
 //!
-//! Dataset acquisition ([`load_worker_data`]) has two paths. When the
-//! plan names a shard directory (`sar shard` output), the worker streams
-//! *only its own shard* into a CSR — after verifying the local manifest
-//! hashes to exactly the digest the coordinator planned against, and the
-//! shard file's CRC matches the manifest — so no worker ever
-//! materializes the global edge list and a stale or foreign shard dir is
-//! rejected before CONFIG_DONE (hence before START). With no shard
-//! directory the worker falls back to deterministically regenerating the
-//! full synthetic graph from the plan's `(dataset, scale, seed)` and
-//! taking its own partition — the same scheme the in-process drivers
-//! use — so no graph bytes cross the control plane in either path.
+//! Dataset acquisition for PageRank jobs ([`load_worker_data`]) has two
+//! paths. When the job names a shard directory (`sar shard` output),
+//! the worker streams *only its own shard* into a CSR — after verifying
+//! the local manifest hashes to exactly the digest the coordinator
+//! planned against, and the shard file's CRC matches the manifest — so
+//! no worker ever materializes the global edge list and a stale or
+//! foreign shard dir is rejected before CONFIG_DONE (hence before
+//! START). With no shard directory the worker falls back to
+//! deterministically regenerating the full synthetic graph from the
+//! job's `(dataset, scale, seed)` and taking its own partition — the
+//! same scheme the in-process drivers use — so no graph bytes cross the
+//! control plane in either path.
 
-use super::proto::{recv_ctrl, send_ctrl, CtrlMsg, WorkerPlan, WorkerReport};
+use super::proto::{recv_ctrl, send_ctrl, CtrlMsg, JobPlan, WorkerPlan, WorkerReport};
 use crate::allreduce::NodeHandle;
-use crate::apps::pagerank::PageRankShards;
+use crate::apps::diameter::{DiameterConfig, DiameterNode};
+use crate::apps::pagerank::{self, PageRankShards};
+use crate::apps::sgd::{NativeGradEngine, SgdConfig, SgdNode, SynthData};
+use crate::comm::job::SGD_ZIPF_ALPHA;
 use crate::config::validate_world;
 use crate::fault::{ReplicaMap, ReplicatedHandle};
 use crate::graph::{load_shard, Csr, DatasetPreset, DatasetSpec, ShardManifest};
 use crate::metrics::RunMetrics;
-use crate::sparse::{IndexSet, SumF32};
+use crate::sparse::{IndexSet, OrU32, SumF32};
 use crate::topology::Butterfly;
 use crate::transport::{
     advertised_addr, connect_with_retry, RetryPolicy, TcpNet, Transport, TransportError,
@@ -83,7 +97,7 @@ fn resolve(addr: &str) -> Result<SocketAddr> {
         .with_context(|| format!("`{addr}` resolved to no address"))
 }
 
-/// Run the worker daemon to completion (one job, then exit).
+/// Run the worker daemon to completion (serve the pool until SHUTDOWN).
 pub fn run_worker(opts: &WorkerOpts) -> Result<()> {
     let listener = TcpListener::bind(&opts.listen)
         .with_context(|| format!("binding data listener on {}", opts.listen))?;
@@ -152,12 +166,10 @@ pub fn run_worker(opts: &WorkerOpts) -> Result<()> {
     };
     let node = plan.node as usize;
     log::info!(
-        "plan: node {node}/{} degrees {:?} replication {} dataset {} scale {}",
+        "plan: node {node}/{} degrees {:?} replication {}",
         plan.world,
         plan.degrees,
         plan.replication,
-        plan.dataset,
-        plan.scale
     );
 
     // Heartbeat for the rest of the process lifetime; a send failure
@@ -194,20 +206,10 @@ pub fn run_worker(opts: &WorkerOpts) -> Result<()> {
         })
     };
 
-    let outcome = execute_plan(node, &plan, listener, &ctrl_wr, &ctrl_msgs);
+    let outcome = serve_pool(node, &plan, listener, &ctrl_wr, &ctrl_msgs);
     let result = match outcome {
-        Ok(report) => {
-            send_ctrl(&ctrl_wr, node, &CtrlMsg::Report(report)).context("sending REPORT")?;
-            // Stay up until the coordinator releases us (or disappears),
-            // so our data listener keeps serving replica peers that are
-            // still reducing.
-            loop {
-                match ctrl_msgs.recv() {
-                    Ok(Ok(CtrlMsg::Shutdown)) | Ok(Err(_)) | Err(_) => break,
-                    Ok(Ok(_)) => continue,
-                }
-            }
-            log::info!("worker {node} done");
+        Ok(()) => {
+            log::info!("worker {node} released");
             Ok(())
         }
         Err(e) => {
@@ -231,12 +233,21 @@ fn next_ctrl(rx: &Receiver<std::io::Result<CtrlMsg>>) -> Result<CtrlMsg> {
 }
 
 /// The two in-process protocol drivers behind one object-safe face, so
-/// the worker body is written once for both the plain and the
-/// replicated (§V failover) modes.
+/// the worker's per-app job loops are written once for both the plain
+/// and the replicated (§V failover) modes. One method per reduce
+/// operator keeps the trait object-safe; all of them funnel into the
+/// drivers' generic `reduce::<R>` path.
 trait Collective {
     fn run_config(&mut self, outbound: IndexSet, inbound: IndexSet)
         -> Result<(), TransportError>;
     fn reduce_sum(&mut self, values: Vec<f32>) -> Result<Vec<f32>, TransportError>;
+    fn reduce_or(&mut self, values: Vec<u32>) -> Result<Vec<u32>, TransportError>;
+    /// Sum-reduce with the parameter-server bottom transform (SGD).
+    fn reduce_sum_with_bottom(
+        &mut self,
+        values: Vec<f32>,
+        bottom: &mut dyn FnMut(&IndexSet, &[f32], &IndexSet) -> Vec<f32>,
+    ) -> Result<Vec<f32>, TransportError>;
 }
 
 impl<T: Transport + 'static> Collective for NodeHandle<T> {
@@ -250,6 +261,18 @@ impl<T: Transport + 'static> Collective for NodeHandle<T> {
 
     fn reduce_sum(&mut self, values: Vec<f32>) -> Result<Vec<f32>, TransportError> {
         self.reduce::<SumF32>(values)
+    }
+
+    fn reduce_or(&mut self, values: Vec<u32>) -> Result<Vec<u32>, TransportError> {
+        self.reduce::<OrU32>(values)
+    }
+
+    fn reduce_sum_with_bottom(
+        &mut self,
+        values: Vec<f32>,
+        bottom: &mut dyn FnMut(&IndexSet, &[f32], &IndexSet) -> Vec<f32>,
+    ) -> Result<Vec<f32>, TransportError> {
+        self.reduce_with_bottom::<SumF32, _>(values, |d, r, u| bottom(d, r, u))
     }
 }
 
@@ -265,9 +288,27 @@ impl<T: Transport + 'static> Collective for ReplicatedHandle<T> {
     fn reduce_sum(&mut self, values: Vec<f32>) -> Result<Vec<f32>, TransportError> {
         self.reduce::<SumF32>(values)
     }
+
+    fn reduce_or(&mut self, values: Vec<u32>) -> Result<Vec<u32>, TransportError> {
+        self.reduce::<OrU32>(values)
+    }
+
+    fn reduce_sum_with_bottom(
+        &mut self,
+        _values: Vec<f32>,
+        _bottom: &mut dyn FnMut(&IndexSet, &[f32], &IndexSet) -> Vec<f32>,
+    ) -> Result<Vec<f32>, TransportError> {
+        // Guarded at job-build time (sgd jobs reject replication > 1);
+        // kept as a readable error in case that guard is ever bypassed.
+        Err(TransportError::Io(std::io::Error::new(
+            std::io::ErrorKind::Unsupported,
+            "the parameter-server bottom holds worker-local model state; \
+             replication is not supported for sgd jobs",
+        )))
+    }
 }
 
-/// One worker's slice of the dataset.
+/// One worker's slice of a PageRank dataset.
 pub struct WorkerData {
     /// This worker's shard CSR (local compute input).
     pub shard: Csr,
@@ -275,60 +316,123 @@ pub struct WorkerData {
     pub vertices: i64,
 }
 
-/// Acquire the worker's dataset slice: stream it from the plan's shard
-/// directory when one is given (manifest digest + shard CRC verified,
-/// no graph generation at all), else deterministically regenerate the
-/// synthetic dataset and take shard `lnode` of `logical`.
-pub fn load_worker_data(plan: &WorkerPlan, lnode: usize, logical: usize) -> Result<WorkerData> {
-    if !plan.shard_dir.is_empty() {
-        let dir = std::path::Path::new(&plan.shard_dir);
+/// Acquire the worker's PageRank dataset slice: stream it from the
+/// job's shard directory when one is given (manifest digest + shard CRC
+/// verified, no graph generation at all), else deterministically
+/// regenerate the synthetic dataset and take shard `lnode` of `logical`.
+pub fn load_worker_data(job: &JobPlan, lnode: usize, logical: usize) -> Result<WorkerData> {
+    if !job.shard_dir.is_empty() {
+        let dir = std::path::Path::new(&job.shard_dir);
         let manifest = ShardManifest::load(dir)
-            .with_context(|| format!("loading shard manifest from {}", plan.shard_dir))?;
+            .with_context(|| format!("loading shard manifest from {}", job.shard_dir))?;
         let digest = manifest.digest();
-        if digest != plan.manifest_digest {
+        if digest != job.manifest_digest {
             bail!(
                 "shard manifest digest mismatch: the plan was made against \
                  {:016x} but {} holds {digest:016x} — this host's shard dir is \
                  stale or from a different `sar shard` run",
-                plan.manifest_digest,
-                plan.shard_dir
+                job.manifest_digest,
+                job.shard_dir
             );
         }
         if manifest.shards.len() != logical {
             bail!(
                 "shard dir {} holds {} shards but the plan needs one per logical \
                  node ({logical})",
-                plan.shard_dir,
+                job.shard_dir,
                 manifest.shards.len()
             );
         }
         let shard = load_shard(dir, &manifest, lnode)
-            .with_context(|| format!("loading shard {lnode} from {}", plan.shard_dir))?;
+            .with_context(|| format!("loading shard {lnode} from {}", job.shard_dir))?;
         log::info!(
             "loaded shard {lnode}/{logical} from {} ({} edges, {} rows × {} cols)",
-            plan.shard_dir,
+            job.shard_dir,
             shard.nnz(),
             shard.rows(),
             shard.cols()
         );
         return Ok(WorkerData { shard, vertices: manifest.vertices });
     }
-    let preset = DatasetPreset::by_name(&plan.dataset)
-        .with_context(|| format!("unknown dataset `{}`", plan.dataset))?;
-    let spec = DatasetSpec::new(preset, plan.scale, plan.seed);
+    let preset = DatasetPreset::by_name(&job.dataset)
+        .with_context(|| format!("unknown dataset `{}`", job.dataset))?;
+    let spec = DatasetSpec::new(preset, job.scale, job.seed);
     let graph = spec.generate();
-    let mut shards = PageRankShards::build(&graph, logical, plan.seed);
+    let mut shards = PageRankShards::build(&graph, logical, job.seed);
     let shard = shards.shards.swap_remove(lnode);
     Ok(WorkerData { shard, vertices: graph.vertices })
 }
 
-fn execute_plan(
+/// This worker's per-job application engine.
+enum JobEngine {
+    Pagerank { shard: Csr, vertices: i64 },
+    Diameter { dnode: DiameterNode },
+    Sgd { snode: SgdNode<NativeGradEngine> },
+}
+
+/// Build the job's engine and derive its allreduce index domain.
+fn build_engine(
+    job: &JobPlan,
+    lnode: usize,
+    logical: usize,
+    replication: usize,
+) -> Result<(JobEngine, i64)> {
+    match job.app.as_str() {
+        "pagerank" => {
+            let data = load_worker_data(job, lnode, logical)?;
+            let range = data.vertices;
+            Ok((JobEngine::Pagerank { shard: data.shard, vertices: data.vertices }, range))
+        }
+        "diameter" => {
+            let preset = DatasetPreset::by_name(&job.dataset)
+                .with_context(|| format!("unknown dataset `{}`", job.dataset))?;
+            let graph = DatasetSpec::new(preset, job.scale, job.seed).generate();
+            let cfg = DiameterConfig {
+                k_sketches: (job.sketches.max(1)) as usize,
+                max_h: job.iters as usize,
+                exact: false,
+                seed: job.seed,
+            };
+            let dnode = DiameterNode::build_one(&graph, logical, lnode, &cfg);
+            let range = dnode.index_range();
+            Ok((JobEngine::Diameter { dnode }, range))
+        }
+        "sgd" => {
+            if replication > 1 {
+                bail!(
+                    "sgd's parameter-server bottom holds worker-local model state; \
+                     replication > 1 is not supported for sgd jobs"
+                );
+            }
+            let data = Arc::new(SynthData::new(
+                job.features,
+                job.classes as usize,
+                job.feats_per_ex as usize,
+                SGD_ZIPF_ALPHA,
+            ));
+            let cfg = SgdConfig {
+                classes: job.classes as usize,
+                batch_per_worker: job.batch as usize,
+                lr: job.lr as f32,
+                seed: job.seed,
+            };
+            let snode = SgdNode::new(lnode, data, cfg, NativeGradEngine);
+            let range = snode.index_range();
+            Ok((JobEngine::Sgd { snode }, range))
+        }
+        other => bail!("unknown app `{other}` in job plan (pagerank|diameter|sgd)"),
+    }
+}
+
+/// Pool service loop: build the data fabric once, then run every job
+/// the coordinator ships until SHUTDOWN (or the coordinator vanishes).
+fn serve_pool(
     node: usize,
     plan: &WorkerPlan,
     listener: TcpListener,
     ctrl_wr: &Mutex<TcpStream>,
     ctrl_msgs: &Receiver<std::io::Result<CtrlMsg>>,
-) -> Result<WorkerReport> {
+) -> Result<()> {
     let world = plan.world as usize;
     if plan.addrs.len() != world || node >= world {
         bail!("bad plan: node {node}, world {world}, {} addresses", plan.addrs.len());
@@ -341,63 +445,174 @@ fn execute_plan(
     let addrs: Vec<SocketAddr> =
         plan.addrs.iter().map(|a| resolve(a)).collect::<Result<Vec<_>>>()?;
     let net = TcpNet::from_addrs(node, listener, addrs).context("building data fabric")?;
-
-    let lnode = node % logical;
-    let data = load_worker_data(plan, lnode, logical)?;
-    let topo = Butterfly::new(degrees, data.vertices);
     let timeout = Duration::from_millis(plan.data_timeout_ms.max(1));
-    let send_threads = plan.send_threads.max(1) as usize;
 
+    loop {
+        let msg = match ctrl_msgs.recv() {
+            Ok(Ok(msg)) => msg,
+            // Coordinator gone while idle between jobs: a clean release,
+            // same as SHUTDOWN (crashed launches must not strand pools).
+            Ok(Err(_)) | Err(_) => return Ok(()),
+        };
+        match msg {
+            CtrlMsg::Job(job) => {
+                log::info!(
+                    "job {} `{}` ({}) — iters {}, dataset {}",
+                    job.job,
+                    job.name,
+                    job.app,
+                    job.iters,
+                    job.dataset
+                );
+                let report = execute_job(
+                    node,
+                    logical,
+                    replication,
+                    &degrees,
+                    &job,
+                    net.clone(),
+                    timeout,
+                    ctrl_wr,
+                    ctrl_msgs,
+                )?;
+                send_ctrl(ctrl_wr, node, &CtrlMsg::Report(report)).context("sending REPORT")?;
+            }
+            CtrlMsg::Shutdown => return Ok(()),
+            other => log::warn!("unexpected control message while idle: {other:?}"),
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn execute_job(
+    node: usize,
+    logical: usize,
+    replication: usize,
+    degrees: &[usize],
+    job: &JobPlan,
+    net: Arc<TcpNet>,
+    timeout: Duration,
+    ctrl_wr: &Mutex<TcpStream>,
+    ctrl_msgs: &Receiver<std::io::Result<CtrlMsg>>,
+) -> Result<WorkerReport> {
+    let lnode = node % logical;
+    let send_threads = job.send_threads.max(1) as usize;
+
+    let mut metrics = RunMetrics::new();
+    let t0 = Instant::now();
+    let (engine, range) = build_engine(job, lnode, logical, replication)?;
+    let topo = Butterfly::new(degrees.to_vec(), range.max(1));
+
+    // Job-scoped tag space: the pool's TcpNet outlives any one job, and
+    // replicated duplicate sends don't barrier — a late packet from the
+    // previous job must not alias this job's tags.
+    let seq_base = job.job.wrapping_shl(16);
     let mut handle: Box<dyn Collective> = if replication == 1 {
         let mut h = NodeHandle::new(topo, node, net, send_threads);
         h.set_timeout(timeout);
+        h.set_seq_base(seq_base);
         Box::new(h)
     } else {
         let map = ReplicaMap::new(logical, replication);
         let mut h = ReplicatedHandle::new(topo, map, node, net, send_threads);
         h.set_timeout(timeout);
+        h.set_seq_base(seq_base);
         Box::new(h)
     };
 
-    let mut metrics = RunMetrics::new();
-    let t0 = Instant::now();
-    handle
-        .run_config(
-            IndexSet::from_sorted(data.shard.row_globals.clone()),
-            IndexSet::from_sorted(data.shard.col_globals.clone()),
-        )
-        .context("config phase")?;
+    // Static-pattern apps run their one collective config here; SGD's
+    // configs are dynamic (per step) and run inside the iteration loop.
+    match &engine {
+        JobEngine::Pagerank { shard, .. } => {
+            handle
+                .run_config(
+                    IndexSet::from_sorted(shard.row_globals.clone()),
+                    IndexSet::from_sorted(shard.col_globals.clone()),
+                )
+                .context("config phase")?;
+        }
+        JobEngine::Diameter { dnode } => {
+            let set = dnode.index_set();
+            handle.run_config(set.clone(), set).context("config phase")?;
+        }
+        JobEngine::Sgd { .. } => {}
+    }
     metrics.config_secs = t0.elapsed().as_secs_f64();
 
-    send_ctrl(ctrl_wr, node, &CtrlMsg::ConfigDone).context("sending CONFIG_DONE")?;
+    send_ctrl(ctrl_wr, node, &CtrlMsg::ConfigDone { job: job.job })
+        .context("sending CONFIG_DONE")?;
     loop {
         match next_ctrl(ctrl_msgs).context("waiting for START")? {
-            CtrlMsg::Start => break,
+            CtrlMsg::Start { job: j } if j == job.job => break,
+            CtrlMsg::Start { job: j } => {
+                log::warn!("START for job {j} while running job {} — ignoring", job.job)
+            }
             CtrlMsg::Shutdown => bail!("coordinator shut the run down before START"),
             _ => continue,
         }
     }
 
-    let p0 = run_pagerank_iters(
-        handle.as_mut(),
-        &data.shard,
-        data.vertices,
-        plan.iters as usize,
-        &mut metrics,
-    )?;
+    let iters = job.iters as usize;
+    let checksum = match engine {
+        JobEngine::Pagerank { shard, vertices } => {
+            run_pagerank_iters(handle.as_mut(), &shard, vertices, iters, &mut metrics)? as f64
+        }
+        JobEngine::Diameter { mut dnode } => {
+            for it in 0..iters {
+                let tc = Instant::now();
+                let vals = dnode.contribution();
+                let compute = tc.elapsed();
+                let tm = Instant::now();
+                let reduced = handle
+                    .reduce_or(vals)
+                    .with_context(|| format!("reduce hop {it}"))?;
+                let comm = tm.elapsed();
+                let t2 = Instant::now();
+                dnode.absorb(reduced);
+                metrics.push(compute + t2.elapsed(), comm);
+            }
+            dnode.probe()
+        }
+        JobEngine::Sgd { mut snode } => {
+            for it in 0..iters {
+                let tc = Instant::now();
+                let (outbound, inbound, push) = snode.begin_step();
+                let compute = tc.elapsed();
+                let tm = Instant::now();
+                handle
+                    .run_config(outbound, inbound)
+                    .with_context(|| format!("sgd config, step {it}"))?;
+                let f = snode.bottom_fn();
+                let mut slot = Some(f);
+                let mut bottom = move |d: &IndexSet, r: &[f32], u: &IndexSet| {
+                    (slot.take().expect("bottom transform used once"))(d, r, u)
+                };
+                let weights = handle
+                    .reduce_sum_with_bottom(push, &mut bottom)
+                    .with_context(|| format!("sgd reduce, step {it}"))?;
+                let comm = tm.elapsed();
+                let t2 = Instant::now();
+                snode.finish_step(weights);
+                metrics.push(compute + t2.elapsed(), comm);
+            }
+            snode.final_loss() as f64
+        }
+    };
 
     Ok(WorkerReport {
         node: node as u32,
+        job: job.job,
+        pid: std::process::id(),
         config_secs: metrics.config_secs,
         iter_compute_secs: metrics.iters.iter().map(|i| i.compute_secs).collect(),
         iter_comm_secs: metrics.iters.iter().map(|i| i.comm_secs).collect(),
-        checksum_p0: p0 as f64,
+        checksum_p0: checksum,
     })
 }
 
-/// The PageRank iteration loop (identical math to
-/// `coordinator::run_pagerank_threaded`); returns the node's `p[0]`
-/// determinism probe.
+/// The PageRank iteration loop (the same shared update rule every
+/// driver applies — see [`pagerank::apply_update`]); returns the node's
+/// `p[0]` determinism probe.
 fn run_pagerank_iters(
     handle: &mut dyn Collective,
     shard: &Csr,
@@ -405,9 +620,7 @@ fn run_pagerank_iters(
     iters: usize,
     metrics: &mut RunMetrics,
 ) -> Result<f32> {
-    let teleport = 1.0f32 / vertices as f32;
-    let damp = (vertices as f32 - 1.0) / vertices as f32;
-    let mut p = vec![teleport; shard.cols()];
+    let mut p = pagerank::initial_p(vertices, shard.cols());
     for it in 0..iters {
         let tc = Instant::now();
         let q = shard.spmv(&p);
@@ -416,9 +629,7 @@ fn run_pagerank_iters(
         let sums = handle.reduce_sum(q).with_context(|| format!("reduce iteration {it}"))?;
         let comm = tm.elapsed();
         let t2 = Instant::now();
-        for (pv, s) in p.iter_mut().zip(sums) {
-            *pv = teleport + damp * s;
-        }
+        pagerank::apply_update(&mut p, &sums, vertices);
         metrics.push(compute + t2.elapsed(), comm);
     }
     Ok(p.first().copied().unwrap_or(0.0))

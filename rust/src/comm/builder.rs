@@ -1,0 +1,219 @@
+//! [`CommBuilder`]: fix a communicator's shape once, then open sessions
+//! or run jobs under any execution mode.
+
+use super::job::{JobOutcome, JobSpec};
+use super::session::{PoolBackend, Session};
+use super::{run, ExecMode};
+use crate::config::validate_world;
+use crate::simnet::CostModel;
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+
+/// Builder for a communicator session (see [`crate::comm`] module docs).
+///
+/// ```no_run
+/// use sparse_allreduce::comm::{CommBuilder, ExecMode, JobSpec};
+/// use sparse_allreduce::sparse::{IndexSet, SumF32};
+///
+/// // The primitive door: configure once per sparsity pattern, then
+/// // allreduce repeatedly — the paper's two-phase lifecycle.
+/// let mut sess = CommBuilder::new(vec![2, 2])
+///     .mode(ExecMode::Threaded)
+///     .send_threads(4)
+///     .build(1024)?; // allreduce index domain [0, 1024)
+/// let out: Vec<IndexSet> = (0..4).map(|n| IndexSet::from_unsorted(vec![n, 100])).collect();
+/// let inb: Vec<IndexSet> = (0..4).map(|_| IndexSet::from_unsorted(vec![100])).collect();
+/// let mut cfg = sess.configure(out, inb)?;
+/// for _ in 0..10 {
+///     let mut values = vec![vec![1.0f32, 0.5]; 4];
+///     cfg.allreduce::<SumF32>(&mut values)?; // values now hold the reduced inbound
+/// }
+///
+/// // The whole-app door: the same builder runs any packaged job in any
+/// // mode (a multi-process submit spawns a worker pool under the hood).
+/// let outcome = CommBuilder::new(vec![2, 2])
+///     .mode(ExecMode::Lockstep)
+///     .submit(&JobSpec::diameter())?;
+/// println!("checksum {}", outcome.checksum);
+/// # Ok::<(), anyhow::Error>(())
+/// ```
+#[derive(Clone, Debug)]
+pub struct CommBuilder {
+    degrees: Vec<usize>,
+    mode: ExecMode,
+    replication: usize,
+    send_threads: usize,
+    bind: String,
+    worker_bin: Option<PathBuf>,
+    delay: Option<(CostModel, u64, f64)>,
+}
+
+impl CommBuilder {
+    /// A communicator over the butterfly degree schedule `degrees`
+    /// (logical node count = product). Defaults: lockstep mode, no
+    /// replication, 4 sender threads.
+    pub fn new(degrees: Vec<usize>) -> CommBuilder {
+        CommBuilder {
+            degrees,
+            mode: ExecMode::Lockstep,
+            replication: 1,
+            send_threads: 4,
+            bind: "127.0.0.1:0".to_string(),
+            worker_bin: None,
+            delay: None,
+        }
+    }
+
+    pub fn mode(mut self, mode: ExecMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    /// Replicas per logical node (multi-process only; §V failover).
+    pub fn replication(mut self, r: usize) -> Self {
+        self.replication = r;
+        self
+    }
+
+    pub fn send_threads(mut self, t: usize) -> Self {
+        self.send_threads = t.max(1);
+        self
+    }
+
+    /// Control-plane bind address for multi-process pools.
+    pub fn bind(mut self, addr: impl Into<String>) -> Self {
+        self.bind = addr.into();
+        self
+    }
+
+    /// The `sar` binary to fork pool workers from (multi-process only;
+    /// defaults to `$SAR_BIN` / the current executable).
+    pub fn worker_binary(mut self, bin: PathBuf) -> Self {
+        self.worker_bin = Some(bin);
+        self
+    }
+
+    /// Inject the simnet cost model into a threaded session's transport
+    /// (the Figure 7 latency-hiding setup): per-message delay from
+    /// `cost`, scaled by `time_scale`.
+    pub fn delay(mut self, cost: CostModel, seed: u64, time_scale: f64) -> Self {
+        self.delay = Some((cost, seed, time_scale));
+        self
+    }
+
+    pub fn exec_mode(&self) -> ExecMode {
+        self.mode
+    }
+
+    /// Logical (protocol) node count.
+    pub fn logical(&self) -> usize {
+        self.degrees.iter().product()
+    }
+
+    pub fn degrees(&self) -> &[usize] {
+        &self.degrees
+    }
+
+    pub fn send_threads_value(&self) -> usize {
+        self.send_threads
+    }
+
+    fn validate(&self) -> Result<()> {
+        validate_world(&self.degrees, self.replication, self.logical() * self.replication)?;
+        if self.replication > 1 && self.mode != ExecMode::MultiProcess {
+            bail!(
+                "replication only applies to multi-process sessions (the in-process \
+                 modes run the plain protocol)"
+            );
+        }
+        if self.delay.is_some() && self.mode != ExecMode::Threaded {
+            bail!("cost-model delay injection needs the threaded mode");
+        }
+        Ok(())
+    }
+
+    /// Spawn a worker pool whose pre-fork validation covers `jobs`
+    /// (a bad schedule or shard dir must not cost a fleet of forked
+    /// subprocesses).
+    fn build_pool(self, jobs: Vec<JobSpec>) -> Result<Session> {
+        let opts = crate::cluster::LaunchOpts {
+            degrees: self.degrees.clone(),
+            replication: self.replication,
+            send_threads: self.send_threads,
+            bind: self.bind.clone(),
+            jobs,
+            ..crate::cluster::LaunchOpts::default()
+        };
+        let bin = match &self.worker_bin {
+            Some(b) => b.clone(),
+            None => crate::cluster::sar_binary()?,
+        };
+        let (session, procs) =
+            crate::cluster::spawn_session(&bin, opts).context("spawning the worker pool")?;
+        Ok(Session::new_pool(
+            self.degrees,
+            self.send_threads,
+            PoolBackend { session, procs: Some(procs) },
+        ))
+    }
+
+    /// Open the communicator session. For the in-process modes
+    /// `index_range` is the allreduce index domain `[0, index_range)`
+    /// the session's butterfly covers; a multi-process pool ignores it
+    /// (each job descriptor carries its own domain) — the pool's
+    /// workers are spawned now and JOIN before this returns.
+    pub fn build(self, index_range: i64) -> Result<Session> {
+        self.validate()?;
+        match self.mode {
+            ExecMode::Lockstep | ExecMode::Threaded => Session::new_in_process(
+                self.mode,
+                self.degrees,
+                self.send_threads,
+                index_range,
+                self.delay,
+            ),
+            ExecMode::MultiProcess => self.build_pool(Vec::new()),
+        }
+    }
+
+    /// One-shot job run: build a session for exactly this job, run it,
+    /// release it. In-process modes derive the index domain from the
+    /// job's prepared dataset; a multi-process submit spawns a worker
+    /// pool — validated against THIS job (schedule, shard dir) before
+    /// any process is forked — ships the job descriptor, and shuts the
+    /// pool down after the report.
+    pub fn submit(&self, spec: &JobSpec) -> Result<JobOutcome> {
+        spec.validate()?;
+        match self.mode {
+            ExecMode::MultiProcess => {
+                let me = self.clone();
+                me.validate()?;
+                let mut sess = me.build_pool(vec![spec.clone()])?;
+                sess.submit(spec)
+            }
+            _ => run::run_in_process(self, spec),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_validates_shape() {
+        assert!(CommBuilder::new(vec![2, 2]).build(16).is_ok());
+        assert!(CommBuilder::new(vec![]).build(16).is_err());
+        assert!(CommBuilder::new(vec![2, 0]).build(16).is_err());
+        // replication needs multi-process
+        assert!(CommBuilder::new(vec![2]).replication(2).build(16).is_err());
+        // delay injection needs threaded
+        let err = CommBuilder::new(vec![2])
+            .delay(CostModel::ideal(1e9), 1, 1.0)
+            .build(16)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("threaded"), "got {err:#}");
+        // in-process sessions need a positive index range
+        assert!(CommBuilder::new(vec![2]).build(0).is_err());
+    }
+}

@@ -1,0 +1,283 @@
+//! Job descriptors: what one application run over a communicator looks
+//! like, independent of execution mode.
+//!
+//! A [`JobSpec`] names an application ([`AppKind`]), its dataset/shard
+//! reference and its iteration plan. The in-process backends drive the
+//! job through [`crate::comm::Session`]'s configure/allreduce lifecycle;
+//! the multi-process backend ships the same descriptor to a worker pool
+//! over the `cluster` control plane (`CtrlMsg::Job`), where each worker
+//! runs the identical per-node loop from `apps::`.
+
+use crate::metrics::RunMetrics;
+use anyhow::{bail, Context, Result};
+use std::path::PathBuf;
+
+/// Which application a job runs (and therefore which reduce operator
+/// its collective uses).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AppKind {
+    /// PageRank over `SumF32` (paper §I-A2, §VI-E).
+    Pagerank,
+    /// HADI effective-diameter sketches over `OrU32` (paper eq. 3).
+    Diameter,
+    /// Mini-batch SGD over `SumF32` with the parameter-server bottom
+    /// (paper §III-B).
+    Sgd,
+}
+
+impl AppKind {
+    pub fn key(&self) -> &'static str {
+        match self {
+            AppKind::Pagerank => "pagerank",
+            AppKind::Diameter => "diameter",
+            AppKind::Sgd => "sgd",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<AppKind> {
+        match s {
+            "pagerank" => Ok(AppKind::Pagerank),
+            "diameter" => Ok(AppKind::Diameter),
+            "sgd" => Ok(AppKind::Sgd),
+            other => bail!("unknown app `{other}` (pagerank|diameter|sgd)"),
+        }
+    }
+}
+
+/// Zipf exponent of the synthetic SGD feature distribution. Fixed (not a
+/// [`JobSpec`] field) so every execution mode samples the identical
+/// power-law without another knob to keep in sync across the wire.
+pub const SGD_ZIPF_ALPHA: f64 = 1.1;
+
+/// Parse a comma-separated job list (`"pagerank,diameter"`) into
+/// validated app names — the ONE implementation behind both the
+/// `sar launch --jobs` flag and the `[run] jobs` config key, so the two
+/// spellings can't drift in what they accept.
+pub fn parse_job_names(list: &str) -> Result<Vec<String>> {
+    let names: Vec<String> = list
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if names.is_empty() {
+        bail!("job list must name at least one app (pagerank|diameter|sgd)");
+    }
+    for name in &names {
+        AppKind::parse(name).with_context(|| format!("job list entry `{name}`"))?;
+    }
+    Ok(names)
+}
+
+/// Iteration ceiling per job. A worker pool scopes each job's message
+/// tags to `job_id << 16`, i.e. 2^16 collectives per job; SGD spends
+/// two collectives per step (dynamic config + reduce), so bounding
+/// iterations at 30 000 keeps every app comfortably inside its tag
+/// budget — without this, a long job's tags would silently alias the
+/// next job's.
+pub const MAX_JOB_ITERS: usize = 30_000;
+
+/// One application run over a communicator, in any execution mode.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    /// Report prefix (multi-job launches attribute output lines by it).
+    pub name: String,
+    pub app: AppKind,
+    /// Synthetic dataset preset key (pagerank, diameter).
+    pub dataset: String,
+    pub scale: f64,
+    pub seed: u64,
+    /// Iteration plan: PageRank iterations, diameter hops, SGD steps.
+    pub iters: usize,
+    /// `sar shard` directory (pagerank only): load per-node CSRs from
+    /// disk instead of regenerating the dataset.
+    pub shards: Option<PathBuf>,
+    /// Diameter: Flajolet–Martin sketches per vertex.
+    pub sketches: usize,
+    /// SGD: classes, examples per worker per step, learning rate, raw
+    /// feature-space size, active features per example.
+    pub classes: usize,
+    pub batch: usize,
+    pub lr: f32,
+    pub features: i64,
+    pub feats_per_ex: usize,
+}
+
+impl JobSpec {
+    /// A PageRank job (the historical default workload).
+    pub fn pagerank() -> JobSpec {
+        JobSpec {
+            name: "pagerank".to_string(),
+            app: AppKind::Pagerank,
+            dataset: "twitter".to_string(),
+            scale: 0.05,
+            seed: 42,
+            iters: 10,
+            shards: None,
+            sketches: 0,
+            classes: 0,
+            batch: 0,
+            lr: 0.0,
+            features: 0,
+            feats_per_ex: 0,
+        }
+    }
+
+    /// A HADI diameter job: `iters` is the (fixed) hop count. The
+    /// OR-reduce is idempotent and the sketches monotone, so running
+    /// past saturation cannot change the result — a fixed hop count is
+    /// what makes the checksum comparable across execution modes.
+    pub fn diameter() -> JobSpec {
+        JobSpec {
+            name: "diameter".to_string(),
+            app: AppKind::Diameter,
+            iters: 8,
+            sketches: 8,
+            seed: 7,
+            ..JobSpec::pagerank()
+        }
+    }
+
+    /// A mini-batch SGD job over the synthetic power-law classification
+    /// data (`NativeGradEngine` in every mode, so results are comparable).
+    pub fn sgd() -> JobSpec {
+        JobSpec {
+            name: "sgd".to_string(),
+            app: AppKind::Sgd,
+            iters: 10,
+            classes: 4,
+            batch: 16,
+            lr: 0.5,
+            features: 500,
+            feats_per_ex: 6,
+            seed: 123,
+            ..JobSpec::pagerank()
+        }
+    }
+
+    /// Sanity checks shared by every backend, so a bad spec fails at
+    /// submit time with a readable error rather than deep in a loop.
+    pub fn validate(&self) -> Result<()> {
+        if self.iters == 0 {
+            bail!("job `{}`: iters must be >= 1", self.name);
+        }
+        if self.iters > MAX_JOB_ITERS {
+            bail!(
+                "job `{}`: {} iterations exceeds the per-job collective budget \
+                 ({MAX_JOB_ITERS}; each pool job owns 2^16 message tags)",
+                self.name,
+                self.iters
+            );
+        }
+        match self.app {
+            AppKind::Pagerank => {}
+            AppKind::Diameter => {
+                if self.sketches == 0 {
+                    bail!("job `{}`: diameter needs sketches >= 1", self.name);
+                }
+                if self.shards.is_some() {
+                    bail!(
+                        "job `{}`: --shards is a pagerank-shaped ingest (per-node CSR \
+                         weights); diameter regenerates its dataset",
+                        self.name
+                    );
+                }
+            }
+            AppKind::Sgd => {
+                if self.classes == 0 || self.batch == 0 || self.features <= 0
+                    || self.feats_per_ex == 0
+                {
+                    bail!(
+                        "job `{}`: sgd needs classes/batch/features/feats-per-ex >= 1",
+                        self.name
+                    );
+                }
+                if self.shards.is_some() {
+                    bail!("job `{}`: sgd samples synthetic data; --shards does not apply",
+                          self.name);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Outcome of one job, comparable across execution modes via `checksum`.
+#[derive(Clone, Debug)]
+pub struct JobOutcome {
+    pub job: String,
+    pub app: AppKind,
+    /// The cross-mode determinism probe: Σ over logical nodes of the
+    /// app's per-node probe (PageRank `p[0]`, diameter's first sketch,
+    /// SGD's final per-worker loss).
+    pub checksum: f64,
+    pub wall_secs: f64,
+    pub config_secs: f64,
+    /// Per logical node (in-process) or per reporting worker (pool).
+    pub per_node: Vec<RunMetrics>,
+    /// SGD only (in-process): mean loss per step.
+    pub losses: Vec<f32>,
+    /// Diameter only (in-process): estimated neighbourhood function N(h).
+    pub neighbourhood: Vec<f64>,
+    /// Workers that died during a pool run (masked by replication).
+    pub dead: Vec<usize>,
+}
+
+impl JobOutcome {
+    /// Aggregate comm fraction across nodes (same definition as
+    /// `coordinator::PageRankRun::comm_fraction`).
+    pub fn comm_fraction(&self) -> f64 {
+        let comm: f64 = self.per_node.iter().map(|m| m.total_comm()).sum();
+        let total: f64 = self.per_node.iter().map(|m| m.total()).sum();
+        if total == 0.0 {
+            0.0
+        } else {
+            comm / total
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn app_kind_round_trips_through_keys() {
+        for app in [AppKind::Pagerank, AppKind::Diameter, AppKind::Sgd] {
+            assert_eq!(AppKind::parse(app.key()).unwrap(), app);
+        }
+        assert!(AppKind::parse("kmeans").is_err());
+    }
+
+    #[test]
+    fn default_specs_validate() {
+        JobSpec::pagerank().validate().unwrap();
+        JobSpec::diameter().validate().unwrap();
+        JobSpec::sgd().validate().unwrap();
+    }
+
+    #[test]
+    fn job_name_lists_parse_and_reject() {
+        assert_eq!(
+            parse_job_names("pagerank, diameter,sgd").unwrap(),
+            vec!["pagerank", "diameter", "sgd"]
+        );
+        assert!(parse_job_names(",").is_err());
+        let err = parse_job_names("pagerank,kmeans").unwrap_err();
+        assert!(format!("{err:#}").contains("kmeans"), "got: {err:#}");
+    }
+
+    #[test]
+    fn bad_specs_fail_readably() {
+        let z = JobSpec { iters: 0, ..JobSpec::pagerank() };
+        assert!(z.validate().is_err());
+        let big = JobSpec { iters: MAX_JOB_ITERS + 1, ..JobSpec::pagerank() };
+        let err = big.validate().unwrap_err();
+        assert!(format!("{err:#}").contains("budget"), "got: {err:#}");
+        let d = JobSpec { sketches: 0, ..JobSpec::diameter() };
+        assert!(d.validate().is_err());
+        let d = JobSpec { shards: Some("x".into()), ..JobSpec::diameter() };
+        assert!(format!("{:#}", d.validate().unwrap_err()).contains("diameter"));
+        let s = JobSpec { classes: 0, ..JobSpec::sgd() };
+        assert!(s.validate().is_err());
+    }
+}

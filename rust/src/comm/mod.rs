@@ -1,0 +1,107 @@
+//! Session-based communicator API: one `Comm` handle, any app, any mode.
+//!
+//! The paper's Sparse Allreduce is a *primitive* — §VI applies it to
+//! PageRank, and the abstract names spectral partitioning, regression,
+//! topic models and clustering as equally natural clients. This module
+//! turns the repo's PageRank-shaped entry points into an MPI-style
+//! communicator session:
+//!
+//! ```text
+//!   CommBuilder ──build(range)──► Session ──configure(out, in)──► ConfigHandle
+//!        │                          ▲                                │
+//!        │                          └──── allreduce::<R>(&mut v) ────┘  (repeatedly)
+//!        └──────── submit(&JobSpec) ─────► JobOutcome   (whole-app door)
+//! ```
+//!
+//! * [`CommBuilder`] fixes the communicator's shape: butterfly degree
+//!   schedule, execution mode ([`ExecMode`]), replication, sender
+//!   threads.
+//! * [`Session::configure`] runs the paper's config phase once per
+//!   sparsity pattern; the returned [`ConfigHandle`] exposes
+//!   [`ConfigHandle::allreduce`], generic over [`crate::sparse::ReduceOp`],
+//!   so `SumF32` (PageRank, SGD), `OrU32` (HyperANF/HADI diameter
+//!   sketches) and `MaxF32` all flow through one code path.
+//! * [`Session::submit`] / [`CommBuilder::submit`] run a whole
+//!   application job ([`JobSpec`]) under the session's mode — the same
+//!   job descriptor the `cluster` plane ships to a long-lived worker
+//!   pool, so `sar launch` can run pagerank *then* diameter against one
+//!   JOINed pool without restarting a worker.
+//!
+//! The in-process backends (lockstep, threaded) expose the raw
+//! two-phase lifecycle directly; the multi-process backend drives a
+//! worker pool through job descriptors (the workers run the identical
+//! per-node loops from `apps::`), and `configure`/`allreduce` on it
+//! return a readable error pointing at `submit`.
+
+pub mod builder;
+pub mod job;
+pub mod run;
+pub mod session;
+
+pub use builder::CommBuilder;
+pub use job::{parse_job_names, AppKind, JobOutcome, JobSpec};
+pub use session::{ConfigHandle, Session};
+
+use anyhow::{bail, Result};
+
+/// How a communicator session executes its collectives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Sequential lockstep in one thread (`LocalCluster`): the
+    /// deterministic oracle.
+    Lockstep,
+    /// One worker thread per node over a shared in-process transport.
+    Threaded,
+    /// One worker OS process per node over TCP (`cluster::` plane).
+    MultiProcess,
+}
+
+impl ExecMode {
+    /// Every accepted spelling, kept in one place so the parse error and
+    /// the docs can't drift apart.
+    pub const SPELLINGS: &'static str =
+        "lockstep|local, threaded|threads, distributed|multiprocess|mp|cluster";
+
+    pub fn parse(s: &str) -> Result<ExecMode> {
+        match s {
+            "lockstep" | "local" => Ok(ExecMode::Lockstep),
+            "threaded" | "threads" => Ok(ExecMode::Threaded),
+            "distributed" | "multiprocess" | "mp" | "cluster" => Ok(ExecMode::MultiProcess),
+            other => bail!(
+                "unknown exec mode `{other}` (accepted: {})",
+                ExecMode::SPELLINGS
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exec_mode_accepts_every_documented_spelling() {
+        for (s, want) in [
+            ("lockstep", ExecMode::Lockstep),
+            ("local", ExecMode::Lockstep),
+            ("threaded", ExecMode::Threaded),
+            ("threads", ExecMode::Threaded),
+            ("distributed", ExecMode::MultiProcess),
+            ("multiprocess", ExecMode::MultiProcess),
+            ("mp", ExecMode::MultiProcess),
+            ("cluster", ExecMode::MultiProcess),
+        ] {
+            assert_eq!(ExecMode::parse(s).unwrap(), want, "spelling `{s}`");
+        }
+    }
+
+    #[test]
+    fn exec_mode_error_lists_all_spellings() {
+        let err = ExecMode::parse("quantum").unwrap_err();
+        let msg = format!("{err}");
+        for spelling in ["lockstep", "local", "threaded", "threads", "distributed",
+                         "multiprocess", "mp", "cluster"] {
+            assert!(msg.contains(spelling), "error must list `{spelling}`: {msg}");
+        }
+    }
+}

@@ -1,0 +1,306 @@
+//! Mode-agnostic job execution: drive a [`JobSpec`] through a
+//! communicator [`Session`].
+//!
+//! The in-process paths prepare the app's per-node engines
+//! (`apps::{pagerank,diameter,sgd}`) and loop configure/allreduce on the
+//! session — ONE driver per app, shared by lockstep and threaded (the
+//! session hides the difference). The multi-process path hands the spec
+//! to the worker pool, whose workers run the *same* per-node engines
+//! against their transport-backed handles, so the reported checksum is
+//! comparable across all three modes.
+
+use super::builder::CommBuilder;
+use super::job::{AppKind, JobOutcome, JobSpec, SGD_ZIPF_ALPHA};
+use super::session::Session;
+use crate::apps::diameter::{diameter_checksum, DiameterConfig, DiameterNode};
+use crate::apps::pagerank::{self, PageRankShards};
+use crate::apps::sgd::{sgd_step, NativeGradEngine, SgdConfig, SgdNode, SynthData};
+use crate::graph::{Csr, DatasetPreset, DatasetSpec};
+use crate::metrics::RunMetrics;
+use crate::sparse::{IndexSet, OrU32, SumF32};
+use anyhow::{bail, Context, Result};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// A job's prepared per-node state, ready to drive through a session.
+pub(crate) enum Prepared {
+    Pagerank { shards: Vec<Csr>, vertices: i64 },
+    Diameter { nodes: Vec<DiameterNode> },
+    Sgd { nodes: Vec<SgdNode<NativeGradEngine>> },
+}
+
+impl Prepared {
+    /// The allreduce index domain the job's collective runs over.
+    pub(crate) fn index_range(&self) -> i64 {
+        match self {
+            Prepared::Pagerank { vertices, .. } => *vertices,
+            Prepared::Diameter { nodes } => nodes[0].index_range(),
+            Prepared::Sgd { nodes } => nodes[0].index_range(),
+        }
+    }
+}
+
+/// Build the job's per-node engines for an `m`-lane communicator.
+pub(crate) fn prepare(spec: &JobSpec, m: usize) -> Result<Prepared> {
+    match spec.app {
+        AppKind::Pagerank => {
+            if let Some(dir) = &spec.shards {
+                let (manifest, shards) = crate::graph::load_all_shards(dir)
+                    .with_context(|| format!("loading shards from {}", dir.display()))?;
+                manifest.check_run_identity(&spec.dataset, spec.scale, spec.seed)?;
+                if shards.len() != m {
+                    bail!(
+                        "shard dir {} holds {} shards but the schedule covers {m} \
+                         logical nodes",
+                        dir.display(),
+                        shards.len()
+                    );
+                }
+                Ok(Prepared::Pagerank { shards, vertices: manifest.vertices })
+            } else {
+                let preset = DatasetPreset::by_name(&spec.dataset).ok_or_else(|| {
+                    anyhow::anyhow!("unknown dataset `{}` (twitter|yahoo|docterm)", spec.dataset)
+                })?;
+                let graph = DatasetSpec::new(preset, spec.scale, spec.seed).generate();
+                let built = PageRankShards::build(&graph, m, spec.seed);
+                Ok(Prepared::Pagerank { shards: built.shards, vertices: graph.vertices })
+            }
+        }
+        AppKind::Diameter => {
+            let preset = DatasetPreset::by_name(&spec.dataset).ok_or_else(|| {
+                anyhow::anyhow!("unknown dataset `{}` (twitter|yahoo|docterm)", spec.dataset)
+            })?;
+            let graph = DatasetSpec::new(preset, spec.scale, spec.seed).generate();
+            let cfg = DiameterConfig {
+                k_sketches: spec.sketches,
+                max_h: spec.iters,
+                exact: false,
+                seed: spec.seed,
+            };
+            Ok(Prepared::Diameter { nodes: DiameterNode::build_all(&graph, m, &cfg) })
+        }
+        AppKind::Sgd => {
+            let data = Arc::new(SynthData::new(
+                spec.features,
+                spec.classes,
+                spec.feats_per_ex,
+                SGD_ZIPF_ALPHA,
+            ));
+            let cfg = SgdConfig {
+                classes: spec.classes,
+                batch_per_worker: spec.batch,
+                lr: spec.lr,
+                seed: spec.seed,
+            };
+            let nodes = (0..m)
+                .map(|w| SgdNode::new(w, data.clone(), cfg, NativeGradEngine))
+                .collect();
+            Ok(Prepared::Sgd { nodes })
+        }
+    }
+}
+
+/// One-shot in-process run: prepare the job, open a session of exactly
+/// its index domain, drive it.
+pub(crate) fn run_in_process(builder: &CommBuilder, spec: &JobSpec) -> Result<JobOutcome> {
+    let prepared = prepare(spec, builder.logical())?;
+    let mut session = builder.clone().build(prepared.index_range())?;
+    drive(&mut session, spec, prepared)
+}
+
+fn drive(session: &mut Session, spec: &JobSpec, prepared: Prepared) -> Result<JobOutcome> {
+    match prepared {
+        Prepared::Pagerank { shards, vertices } => drive_pagerank(session, spec, shards, vertices),
+        Prepared::Diameter { nodes } => drive_diameter(session, spec, nodes),
+        Prepared::Sgd { nodes } => drive_sgd(session, spec, nodes),
+    }
+}
+
+fn outcome(spec: &JobSpec, checksum: f64, wall_secs: f64, config_secs: f64) -> JobOutcome {
+    JobOutcome {
+        job: spec.name.clone(),
+        app: spec.app,
+        checksum,
+        wall_secs,
+        config_secs,
+        per_node: Vec::new(),
+        losses: Vec::new(),
+        neighbourhood: Vec::new(),
+        dead: Vec::new(),
+    }
+}
+
+fn drive_pagerank(
+    session: &mut Session,
+    spec: &JobSpec,
+    shards: Vec<Csr>,
+    vertices: i64,
+) -> Result<JobOutcome> {
+    let m = shards.len();
+    let t0 = Instant::now();
+    let outbound: Vec<IndexSet> =
+        shards.iter().map(|s| IndexSet::from_sorted(s.row_globals.clone())).collect();
+    let inbound: Vec<IndexSet> =
+        shards.iter().map(|s| IndexSet::from_sorted(s.col_globals.clone())).collect();
+    let mut handle = session.configure(outbound, inbound)?;
+    let config_secs = t0.elapsed().as_secs_f64();
+
+    let mut metrics: Vec<RunMetrics> = (0..m).map(|_| RunMetrics::new()).collect();
+    for mtr in &mut metrics {
+        mtr.config_secs = config_secs;
+    }
+    let mut p: Vec<Vec<f32>> =
+        shards.iter().map(|s| pagerank::initial_p(vertices, s.cols())).collect();
+    let wall = Instant::now();
+    for _ in 0..spec.iters {
+        let mut q = Vec::with_capacity(m);
+        let mut compute = Vec::with_capacity(m);
+        for (s, pv) in shards.iter().zip(&p) {
+            let tc = Instant::now();
+            q.push(s.spmv(pv));
+            compute.push(tc.elapsed());
+        }
+        let tm = Instant::now();
+        handle.allreduce::<SumF32>(&mut q)?;
+        let comm = tm.elapsed();
+        for n in 0..m {
+            let tu = Instant::now();
+            pagerank::apply_update(&mut p[n], &q[n], vertices);
+            metrics[n].push(compute[n] + tu.elapsed(), comm);
+        }
+    }
+    let wall_secs = wall.elapsed().as_secs_f64();
+    let checksum: f64 = p.iter().map(|pv| pv.first().copied().unwrap_or(0.0) as f64).sum();
+    let mut out = outcome(spec, checksum, wall_secs, config_secs);
+    out.per_node = metrics;
+    Ok(out)
+}
+
+fn drive_diameter(
+    session: &mut Session,
+    spec: &JobSpec,
+    mut nodes: Vec<DiameterNode>,
+) -> Result<JobOutcome> {
+    let t0 = Instant::now();
+    let sets: Vec<IndexSet> = nodes.iter().map(|n| n.index_set()).collect();
+    let mut handle = session.configure(sets.clone(), sets)?;
+    let config_secs = t0.elapsed().as_secs_f64();
+
+    let mut neighbourhood = Vec::with_capacity(spec.iters);
+    let wall = Instant::now();
+    for _ in 0..spec.iters {
+        let mut vals: Vec<Vec<u32>> = nodes.iter().map(|n| n.contribution()).collect();
+        handle.allreduce::<OrU32>(&mut vals)?;
+        for (node, v) in nodes.iter_mut().zip(vals) {
+            node.absorb(v);
+        }
+        neighbourhood.push(nodes[0].neighbourhood_estimate());
+    }
+    let wall_secs = wall.elapsed().as_secs_f64();
+    let mut out = outcome(spec, diameter_checksum(&nodes), wall_secs, config_secs);
+    out.neighbourhood = neighbourhood;
+    Ok(out)
+}
+
+fn drive_sgd(
+    session: &mut Session,
+    spec: &JobSpec,
+    mut nodes: Vec<SgdNode<NativeGradEngine>>,
+) -> Result<JobOutcome> {
+    let mut losses = Vec::with_capacity(spec.iters);
+    let wall = Instant::now();
+    for _ in 0..spec.iters {
+        losses.push(sgd_step(session, &mut nodes)?);
+    }
+    let wall_secs = wall.elapsed().as_secs_f64();
+    let checksum: f64 = nodes.iter().map(|n| n.final_loss() as f64).sum();
+    let mut out = outcome(spec, checksum, wall_secs, 0.0);
+    out.losses = losses;
+    Ok(out)
+}
+
+fn outcome_from_cluster(spec: &JobSpec, run: &crate::cluster::ClusterRun) -> JobOutcome {
+    JobOutcome {
+        job: spec.name.clone(),
+        app: spec.app,
+        checksum: run.checksum,
+        wall_secs: run.wall_secs,
+        config_secs: run.config_secs,
+        per_node: run.per_node.iter().flatten().cloned().collect(),
+        losses: Vec::new(),
+        neighbourhood: Vec::new(),
+        dead: run.dead.clone(),
+    }
+}
+
+impl Session {
+    /// Run a whole application job on this communicator.
+    ///
+    /// * In-process sessions drive the app's per-node engines through
+    ///   their own configure/allreduce lifecycle; the job's index
+    ///   domain must match the domain the session was built over.
+    /// * Pool sessions ship the descriptor to the JOINed workers — a
+    ///   per-job CONFIG/START/REPORT cycle on the long-lived pool, so
+    ///   consecutive `submit` calls reuse the same worker processes.
+    pub fn submit(&mut self, spec: &JobSpec) -> Result<JobOutcome> {
+        spec.validate()?;
+        if let Some(pool) = self.pool_mut() {
+            let run = pool.session.run_job(spec)?;
+            return Ok(outcome_from_cluster(spec, &run));
+        }
+        let prepared = prepare(spec, self.lanes())?;
+        if prepared.index_range() != self.index_range() {
+            bail!(
+                "job `{}` needs index domain {} but this session was built over {} — \
+                 open one with CommBuilder::build({}) or use CommBuilder::submit",
+                spec.name,
+                prepared.index_range(),
+                self.index_range(),
+                prepared.index_range()
+            );
+        }
+        drive(self, spec, prepared)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_pagerank() -> JobSpec {
+        JobSpec { scale: 0.002, iters: 4, ..JobSpec::pagerank() }
+    }
+
+    #[test]
+    fn lockstep_submit_matches_dist_pagerank_oracle() {
+        let spec = tiny_pagerank();
+        let preset = DatasetPreset::by_name(&spec.dataset).unwrap();
+        let graph = DatasetSpec::new(preset, spec.scale, spec.seed).generate();
+        let mut oracle = crate::apps::pagerank::DistPageRank::new(
+            &graph,
+            vec![2, 2],
+            &crate::apps::pagerank::PageRankConfig { seed: spec.seed, iters: spec.iters },
+        );
+        oracle.run(spec.iters);
+
+        let out = CommBuilder::new(vec![2, 2]).submit(&spec).unwrap();
+        assert_eq!(out.checksum, oracle.checksum(), "session must reproduce the oracle");
+        assert_eq!(out.per_node.len(), 4);
+        assert!(out.wall_secs >= 0.0);
+    }
+
+    #[test]
+    fn session_reuse_across_jobs_with_matching_domain() {
+        let spec = tiny_pagerank();
+        let prepared = prepare(&spec, 4).unwrap();
+        let range = prepared.index_range();
+        let mut sess = CommBuilder::new(vec![2, 2]).build(range).unwrap();
+        let a = sess.submit(&spec).unwrap();
+        let b = sess.submit(&spec).unwrap();
+        assert_eq!(a.checksum, b.checksum, "same job on a reused session");
+        // a mismatched domain is a readable error, not a wrong answer
+        let other = JobSpec::sgd();
+        let err = sess.submit(&other).unwrap_err();
+        assert!(format!("{err:#}").contains("index domain"), "got {err:#}");
+    }
+}

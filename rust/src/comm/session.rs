@@ -1,0 +1,556 @@
+//! The communicator session: one handle over the paper's two-phase
+//! lifecycle, backed by any execution mode.
+//!
+//! In-process backends:
+//!
+//! * **Lockstep** wraps [`LocalCluster`] — the deterministic
+//!   single-thread oracle.
+//! * **Threaded** keeps one long-lived worker thread per logical node,
+//!   each owning a [`NodeHandle`] over a shared in-process transport.
+//!   `configure`/`allreduce` ship one closure per lane down a channel
+//!   and collect the per-lane results, so repeated collectives reuse
+//!   the same threads (and the same transport) instead of re-spawning a
+//!   cluster per call.
+//!
+//! The multi-process backend holds a planned [`crate::cluster::Session`]
+//! worker pool (plus the locally-forked worker processes when the pool
+//! was spawned rather than joined); whole jobs are submitted to it via
+//! [`Session::submit`], and the raw `configure`/`allreduce` door returns
+//! a readable error — per-iteration values never cross the control
+//! plane.
+
+use super::ExecMode;
+use crate::allreduce::threaded::NodeHandle;
+use crate::allreduce::LocalCluster;
+use crate::simnet::CostModel;
+use crate::sparse::{IndexSet, ReduceOp};
+use crate::topology::Butterfly;
+use crate::transport::{DelayTransport, Envelope, MemTransport, Transport, TransportError};
+use anyhow::{bail, Context, Result};
+use std::any::Any;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// The in-process transport a threaded session runs on: plain shared
+/// memory, or the same wrapped in the simnet cost model (the Figure 7
+/// latency-hiding study's setup).
+pub(crate) enum LaneTransport {
+    Mem(MemTransport),
+    Delay(DelayTransport<MemTransport>),
+}
+
+impl Transport for LaneTransport {
+    fn machines(&self) -> usize {
+        match self {
+            LaneTransport::Mem(t) => t.machines(),
+            LaneTransport::Delay(t) => t.machines(),
+        }
+    }
+
+    fn send(&self, dst: crate::topology::NodeId, env: Envelope) -> Result<(), TransportError> {
+        match self {
+            LaneTransport::Mem(t) => t.send(dst, env),
+            LaneTransport::Delay(t) => t.send(dst, env),
+        }
+    }
+
+    fn recv(&self, node: crate::topology::NodeId, timeout: Duration) -> Result<Envelope, TransportError> {
+        match self {
+            LaneTransport::Mem(t) => t.recv(node, timeout),
+            LaneTransport::Delay(t) => t.recv(node, timeout),
+        }
+    }
+}
+
+type LaneResult = Box<dyn Any + Send>;
+/// A lane's answer: the closure's boxed result, or the panic payload if
+/// the closure unwound (a lane panic must surface on the driver thread,
+/// not hang `run_all` waiting for a result that will never come).
+type LaneOutcome = std::thread::Result<LaneResult>;
+type LaneCmd = Box<dyn FnOnce(&mut NodeHandle<LaneTransport>) -> LaneResult + Send>;
+
+/// Persistent per-node worker threads for the threaded backend.
+struct ThreadedLanes {
+    cmds: Vec<Sender<LaneCmd>>,
+    results: Receiver<(usize, LaneOutcome)>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ThreadedLanes {
+    fn spawn(topo: &Butterfly, transport: Arc<LaneTransport>, send_threads: usize) -> ThreadedLanes {
+        let m = topo.machines();
+        let (res_tx, results) = channel();
+        let mut cmds = Vec::with_capacity(m);
+        let mut threads = Vec::with_capacity(m);
+        for node in 0..m {
+            let (tx, rx) = channel::<LaneCmd>();
+            cmds.push(tx);
+            let topo = topo.clone();
+            let transport = transport.clone();
+            let res_tx = res_tx.clone();
+            threads.push(std::thread::spawn(move || {
+                let mut h = NodeHandle::new(topo, node, transport, send_threads);
+                while let Ok(cmd) = rx.recv() {
+                    let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        cmd(&mut h)
+                    }));
+                    let panicked = out.is_err();
+                    if res_tx.send((node, out)).is_err() {
+                        return;
+                    }
+                    if panicked {
+                        // The handle's protocol state is unknown after an
+                        // unwind; retire the lane (the driver re-raises).
+                        return;
+                    }
+                }
+            }));
+        }
+        ThreadedLanes { cmds, results, threads }
+    }
+
+    /// Run one closure per lane concurrently; results in lane order.
+    /// Session methods are serialized on `&mut self`, so every received
+    /// result belongs to this batch. A lane panic is re-raised here.
+    fn run_all<O, F>(&self, fns: Vec<F>) -> Vec<O>
+    where
+        O: Send + 'static,
+        F: FnOnce(&mut NodeHandle<LaneTransport>) -> O + Send + 'static,
+    {
+        assert_eq!(fns.len(), self.cmds.len(), "one closure per lane");
+        for (tx, f) in self.cmds.iter().zip(fns) {
+            let cmd: LaneCmd = Box::new(move |h| Box::new(f(h)) as LaneResult);
+            tx.send(cmd).expect("lane thread exited early");
+        }
+        let mut out: Vec<Option<O>> = (0..self.cmds.len()).map(|_| None).collect();
+        for _ in 0..self.cmds.len() {
+            let (node, r) = self.results.recv().expect("lane thread gone without reporting");
+            match r {
+                Ok(v) => out[node] = Some(*v.downcast::<O>().expect("lane result type")),
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+        out.into_iter().map(|o| o.expect("one result per lane")).collect()
+    }
+}
+
+impl Drop for ThreadedLanes {
+    fn drop(&mut self) {
+        // Disconnect the command channels so every lane thread's recv
+        // errors and the thread exits, then reap.
+        self.cmds.clear();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// A planned multi-process worker pool plus (when locally spawned) the
+/// worker subprocesses backing it.
+pub(crate) struct PoolBackend {
+    pub(crate) session: crate::cluster::Session,
+    pub(crate) procs: Option<crate::cluster::LocalProcs>,
+}
+
+impl Drop for PoolBackend {
+    fn drop(&mut self) {
+        // Release the pool before reaping, so locally-spawned workers
+        // exit on SHUTDOWN instead of being killed mid-frame.
+        self.session.shutdown();
+        if let Some(procs) = &mut self.procs {
+            procs.wait_all();
+        }
+    }
+}
+
+enum Backend {
+    Lockstep(LocalCluster),
+    Threaded(ThreadedLanes),
+    Pool(Box<PoolBackend>),
+}
+
+/// One communicator handle (see module docs for the lifecycle).
+pub struct Session {
+    mode: ExecMode,
+    degrees: Vec<usize>,
+    send_threads: usize,
+    index_range: i64,
+    configured: bool,
+    out_lens: Vec<usize>,
+    in_lens: Vec<usize>,
+    backend: Backend,
+}
+
+impl Session {
+    /// Build an in-process session (lockstep or threaded lanes).
+    pub(crate) fn new_in_process(
+        mode: ExecMode,
+        degrees: Vec<usize>,
+        send_threads: usize,
+        index_range: i64,
+        delay: Option<(CostModel, u64, f64)>,
+    ) -> Result<Session> {
+        if index_range < 1 {
+            bail!("index range must be >= 1 (got {index_range})");
+        }
+        let topo = Butterfly::new(degrees.clone(), index_range);
+        let m = topo.machines();
+        let backend = match mode {
+            ExecMode::Lockstep => {
+                if delay.is_some() {
+                    bail!("cost-model delay injection needs --mode threaded");
+                }
+                Backend::Lockstep(LocalCluster::new(topo))
+            }
+            ExecMode::Threaded => {
+                let transport = match delay {
+                    None => LaneTransport::Mem(MemTransport::new(m)),
+                    Some((cost, seed, scale)) => LaneTransport::Delay(
+                        DelayTransport::new(MemTransport::new(m), cost, seed)
+                            .with_time_scale(scale),
+                    ),
+                };
+                Backend::Threaded(ThreadedLanes::spawn(&topo, Arc::new(transport), send_threads))
+            }
+            ExecMode::MultiProcess => {
+                bail!("multi-process sessions are built from a worker pool (CommBuilder)")
+            }
+        };
+        Ok(Session {
+            mode,
+            degrees,
+            send_threads,
+            index_range,
+            configured: false,
+            out_lens: Vec::new(),
+            in_lens: Vec::new(),
+            backend,
+        })
+    }
+
+    /// Wrap a planned worker pool as a session (jobs only).
+    pub(crate) fn new_pool(degrees: Vec<usize>, send_threads: usize, pool: PoolBackend) -> Session {
+        Session {
+            mode: ExecMode::MultiProcess,
+            degrees,
+            send_threads,
+            index_range: 0,
+            configured: false,
+            out_lens: Vec::new(),
+            in_lens: Vec::new(),
+            backend: Backend::Pool(Box::new(pool)),
+        }
+    }
+
+    pub fn mode(&self) -> ExecMode {
+        self.mode
+    }
+
+    pub fn degrees(&self) -> &[usize] {
+        &self.degrees
+    }
+
+    /// Logical lanes (= butterfly machine count).
+    pub fn lanes(&self) -> usize {
+        self.degrees.iter().product()
+    }
+
+    pub fn send_threads(&self) -> usize {
+        self.send_threads
+    }
+
+    /// The allreduce index domain this session was built over (0 for a
+    /// worker pool, whose jobs each carry their own domain).
+    pub fn index_range(&self) -> i64 {
+        self.index_range
+    }
+
+    pub(crate) fn pool_mut(&mut self) -> Option<&mut PoolBackend> {
+        match &mut self.backend {
+            Backend::Pool(p) => Some(p),
+            _ => None,
+        }
+    }
+
+    /// Run the config phase once for a sparsity pattern: `outbound[n]` /
+    /// `inbound[n]` are lane `n`'s contributed / requested index sets.
+    /// The returned handle borrows the session; reconfiguring (a new
+    /// sparsity pattern, e.g. SGD's per-step feature sets) just means
+    /// calling `configure` again once the handle is dropped.
+    pub fn configure(
+        &mut self,
+        outbound: Vec<IndexSet>,
+        inbound: Vec<IndexSet>,
+    ) -> Result<ConfigHandle<'_>> {
+        let m = self.lanes();
+        if outbound.len() != m || inbound.len() != m {
+            bail!(
+                "configure needs one outbound and one inbound set per lane \
+                 ({m} lanes, got {} outbound / {} inbound)",
+                outbound.len(),
+                inbound.len()
+            );
+        }
+        self.out_lens = outbound.iter().map(|s| s.len()).collect();
+        self.in_lens = inbound.iter().map(|s| s.len()).collect();
+        match &mut self.backend {
+            Backend::Lockstep(cluster) => {
+                cluster.config(outbound, inbound);
+            }
+            Backend::Threaded(lanes) => {
+                let fns: Vec<_> = outbound
+                    .into_iter()
+                    .zip(inbound)
+                    .map(|(o, i)| {
+                        move |h: &mut NodeHandle<LaneTransport>| h.config(o, i)
+                    })
+                    .collect();
+                for (n, r) in lanes.run_all(fns).into_iter().enumerate() {
+                    r.with_context(|| format!("lane {n} config failed"))?;
+                }
+            }
+            Backend::Pool(_) => bail!(
+                "a multi-process pool session runs whole jobs (Session::submit / \
+                 `sar launch --jobs`); per-iteration values never cross the control plane"
+            ),
+        }
+        self.configured = true;
+        Ok(ConfigHandle { sess: self })
+    }
+
+    fn check_values<T>(&self, values: &[Vec<T>]) -> Result<()> {
+        if !self.configured {
+            bail!("allreduce before configure");
+        }
+        if values.len() != self.lanes() {
+            bail!("allreduce needs one value vector per lane ({} lanes, got {})",
+                  self.lanes(), values.len());
+        }
+        for (n, (v, &want)) in values.iter().zip(&self.out_lens).enumerate() {
+            if v.len() != want {
+                bail!(
+                    "lane {n}: {} values but the configured outbound set has {want} \
+                     indices (reconfigure for a new sparsity pattern)",
+                    v.len()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn allreduce_impl<R: ReduceOp>(&mut self, values: &mut Vec<Vec<R::T>>) -> Result<()> {
+        self.check_values(&*values)?;
+        let input = std::mem::take(values);
+        let reduced = match &mut self.backend {
+            Backend::Lockstep(cluster) => cluster.reduce::<R>(input).0,
+            Backend::Threaded(lanes) => {
+                let fns: Vec<_> = input
+                    .into_iter()
+                    .map(|v| move |h: &mut NodeHandle<LaneTransport>| h.reduce::<R>(v))
+                    .collect();
+                let mut out = Vec::with_capacity(self.out_lens.len());
+                for (n, r) in lanes.run_all(fns).into_iter().enumerate() {
+                    out.push(r.with_context(|| format!("lane {n} reduce failed"))?);
+                }
+                out
+            }
+            Backend::Pool(_) => bail!("pool sessions run jobs, not raw collectives"),
+        };
+        *values = reduced;
+        Ok(())
+    }
+
+    fn allreduce_with_bottom_impl<R, F>(
+        &mut self,
+        values: Vec<Vec<R::T>>,
+        bottoms: Vec<F>,
+    ) -> Result<Vec<Vec<R::T>>>
+    where
+        R: ReduceOp,
+        F: FnOnce(&IndexSet, &[R::T], &IndexSet) -> Vec<R::T> + Send + 'static,
+    {
+        self.check_values(&values)?;
+        if bottoms.len() != self.lanes() {
+            bail!("one bottom transform per lane required");
+        }
+        match &mut self.backend {
+            Backend::Lockstep(cluster) => {
+                let cluster: &LocalCluster = cluster;
+                let mut slots: Vec<Option<F>> = bottoms.into_iter().map(Some).collect();
+                let (got, _trace) = cluster.reduce_with_bottom::<R, _>(values, |node, reduced| {
+                    let f = slots[node].take().expect("bottom transform runs once per lane");
+                    let p = cluster.node(node);
+                    f(p.bottom_down_set(), reduced, p.bottom_up_set())
+                });
+                Ok(got)
+            }
+            Backend::Threaded(lanes) => {
+                let fns: Vec<_> = values
+                    .into_iter()
+                    .zip(bottoms)
+                    .map(|(v, f)| {
+                        move |h: &mut NodeHandle<LaneTransport>| h.reduce_with_bottom::<R, F>(v, f)
+                    })
+                    .collect();
+                let mut out = Vec::with_capacity(self.out_lens.len());
+                for (n, r) in lanes.run_all(fns).into_iter().enumerate() {
+                    out.push(r.with_context(|| format!("lane {n} reduce failed"))?);
+                }
+                Ok(out)
+            }
+            Backend::Pool(_) => bail!("pool sessions run jobs, not raw collectives"),
+        }
+    }
+}
+
+/// Proof that the config phase ran; the door to the reduce phase.
+pub struct ConfigHandle<'s> {
+    sess: &'s mut Session,
+}
+
+impl ConfigHandle<'_> {
+    pub fn lanes(&self) -> usize {
+        self.sess.lanes()
+    }
+
+    /// One sparse allreduce: `values[n]` aligned with lane `n`'s
+    /// configured outbound set going in, replaced by the reduced values
+    /// aligned with its inbound set coming out. Generic over the reduce
+    /// operator — `SumF32`, `OrU32` and `MaxF32` all take this one path.
+    pub fn allreduce<R: ReduceOp>(&mut self, values: &mut Vec<Vec<R::T>>) -> Result<()> {
+        self.sess.allreduce_impl::<R>(values)
+    }
+
+    /// Allreduce with a custom bottom-of-butterfly transform per lane:
+    /// after the scatter-reduce, `bottoms[n](down_set, reduced, up_set)`
+    /// receives lane `n`'s fully-reduced bottom range and must return
+    /// one value per `up_set` index to be allgathered. This is the
+    /// parameter-server mode of the paper's mini-batch SGD (§III-B):
+    /// the bottom owner folds gradients into its persistent model shard
+    /// and serves fresh weights back up.
+    pub fn allreduce_with_bottom<R, F>(
+        &mut self,
+        values: Vec<Vec<R::T>>,
+        bottoms: Vec<F>,
+    ) -> Result<Vec<Vec<R::T>>>
+    where
+        R: ReduceOp,
+        F: FnOnce(&IndexSet, &[R::T], &IndexSet) -> Vec<R::T> + Send + 'static,
+    {
+        self.sess.allreduce_with_bottom_impl::<R, F>(values, bottoms)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{MaxF32, OrU32, SumF32};
+
+    fn sets(v: Vec<Vec<i64>>) -> Vec<IndexSet> {
+        v.into_iter().map(IndexSet::from_unsorted).collect()
+    }
+
+    fn session(mode: ExecMode) -> Session {
+        Session::new_in_process(mode, vec![2, 2], 2, 64, None).unwrap()
+    }
+
+    fn check_sum_session(mut s: Session) {
+        let out = sets(vec![vec![1, 5], vec![5, 9], vec![2], vec![]]);
+        let inb = sets(vec![vec![5], vec![1, 2], vec![9], vec![5, 9]]);
+        let mut cfg = s.configure(out, inb).unwrap();
+        let mut vals = vec![vec![1.0f32, 10.0], vec![20.0, 3.0], vec![7.0], vec![]];
+        cfg.allreduce::<SumF32>(&mut vals).unwrap();
+        assert_eq!(vals[0], vec![30.0]);
+        assert_eq!(vals[1], vec![1.0, 7.0]);
+        assert_eq!(vals[2], vec![3.0]);
+        assert_eq!(vals[3], vec![30.0, 3.0]);
+        // same config, second reduce (values doubled)
+        let mut vals = vec![vec![2.0f32, 20.0], vec![40.0, 6.0], vec![14.0], vec![]];
+        cfg.allreduce::<SumF32>(&mut vals).unwrap();
+        assert_eq!(vals[0], vec![60.0]);
+    }
+
+    #[test]
+    fn lockstep_session_reduces_and_reuses_config() {
+        check_sum_session(session(ExecMode::Lockstep));
+    }
+
+    #[test]
+    fn threaded_session_reduces_and_reuses_config() {
+        check_sum_session(session(ExecMode::Threaded));
+    }
+
+    #[test]
+    fn or_and_max_flow_through_the_same_path() {
+        for mode in [ExecMode::Lockstep, ExecMode::Threaded] {
+            let mut s = session(mode);
+            let out = sets(vec![vec![3], vec![3], vec![7], vec![]]);
+            let inb = sets(vec![vec![3, 7], vec![3], vec![3], vec![7]]);
+            let mut cfg = s.configure(out.clone(), inb.clone()).unwrap();
+            let mut vals = vec![vec![0b01u32], vec![0b10], vec![0b100], vec![]];
+            cfg.allreduce::<OrU32>(&mut vals).unwrap();
+            assert_eq!(vals[0], vec![0b11, 0b100], "{mode:?}");
+            assert_eq!(vals[3], vec![0b100], "{mode:?}");
+            drop(cfg);
+            let mut cfg = s.configure(out, inb).unwrap();
+            let mut vals = vec![vec![2.0f32], vec![5.0], vec![-1.0], vec![]];
+            cfg.allreduce::<MaxF32>(&mut vals).unwrap();
+            assert_eq!(vals[0], vec![5.0, -1.0], "{mode:?}");
+            assert_eq!(vals[1], vec![5.0], "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn misuse_is_a_readable_error() {
+        let mut s = session(ExecMode::Lockstep);
+        // allreduce before configure
+        let mut vals: Vec<Vec<f32>> = vec![vec![]; 4];
+        assert!(s.allreduce_impl::<SumF32>(&mut vals).is_err());
+        // wrong lane count
+        assert!(s.configure(sets(vec![vec![]]), sets(vec![vec![]])).is_err());
+        // wrong value length vs configured outbound
+        let out = sets(vec![vec![1], vec![], vec![], vec![]]);
+        let inb = sets(vec![vec![1], vec![], vec![], vec![]]);
+        let mut cfg = s.configure(out, inb).unwrap();
+        let mut vals = vec![vec![1.0f32, 2.0], vec![], vec![], vec![]];
+        let err = cfg.allreduce::<SumF32>(&mut vals).unwrap_err();
+        assert!(format!("{err:#}").contains("outbound set"), "got {err:#}");
+    }
+
+    #[test]
+    fn bottom_transform_runs_per_lane() {
+        for mode in [ExecMode::Lockstep, ExecMode::Threaded] {
+            let mut s = session(mode);
+            let out = sets(vec![vec![1], vec![1], vec![], vec![]]);
+            let inb = sets(vec![vec![1], vec![1], vec![1], vec![]]);
+            let mut cfg = s.configure(out, inb).unwrap();
+            // bottom transform: negate the reduced sums before gathering
+            let bottoms: Vec<_> = (0..4)
+                .map(|_| {
+                    |down: &IndexSet, reduced: &[f32], up: &IndexSet| {
+                        assert_eq!(down.len(), reduced.len());
+                        up.as_slice()
+                            .iter()
+                            .map(|i| {
+                                down.position(*i)
+                                    .map(|p| -reduced[p])
+                                    .unwrap_or(0.0)
+                            })
+                            .collect::<Vec<f32>>()
+                    }
+                })
+                .collect();
+            let got = cfg
+                .allreduce_with_bottom::<SumF32, _>(
+                    vec![vec![2.0], vec![3.0], vec![], vec![]],
+                    bottoms,
+                )
+                .unwrap();
+            assert_eq!(got[0], vec![-5.0], "{mode:?}");
+            assert_eq!(got[1], vec![-5.0], "{mode:?}");
+            assert_eq!(got[2], vec![-5.0], "{mode:?}");
+            assert_eq!(got[3], Vec::<f32>::new(), "{mode:?}");
+        }
+    }
+}

@@ -29,6 +29,10 @@ pub struct RunConfig {
     pub iters: usize,
     /// RNG seed.
     pub seed: u64,
+    /// Jobs a multi-process launch runs against one worker pool, in
+    /// order (`run.jobs = "pagerank,diameter"`). App keys: pagerank |
+    /// diameter | sgd. Empty = the single default PageRank job.
+    pub jobs: Vec<String>,
     /// Expected physical worker count for multi-process runs. `None`
     /// derives it from `degrees × replication`; when set it must agree
     /// with the degree schedule (validated at load time — mismatches
@@ -53,6 +57,7 @@ impl Default for RunConfig {
             shards: None,
             iters: 10,
             seed: 42,
+            jobs: Vec::new(),
             workers: None,
             tune_profile: None,
         }
@@ -143,6 +148,10 @@ impl RunConfig {
                 }
                 "run.iters" => cfg.iters = val.as_int().context("iters must be int")? as usize,
                 "run.seed" => cfg.seed = val.as_int().context("seed must be int")? as u64,
+                "run.jobs" => {
+                    let s = val.as_str().context("jobs must be a comma-separated string")?;
+                    cfg.jobs = crate::comm::parse_job_names(s)?;
+                }
                 "tune.profile" => {
                     let s = val.as_str().context("tune.profile must be a path string")?;
                     if s.is_empty() {
@@ -245,6 +254,16 @@ seed = 7
         assert_eq!(cfg.shards.as_deref(), Some("/data/shards/tw4"));
         assert!(RunConfig::from_toml("[data]\nshards = \"\"").is_err());
         assert_eq!(RunConfig::default().shards, None);
+    }
+
+    #[test]
+    fn jobs_key_parses_and_validates() {
+        let cfg = RunConfig::from_toml("[run]\njobs = \"pagerank, diameter,sgd\"").unwrap();
+        assert_eq!(cfg.jobs, vec!["pagerank", "diameter", "sgd"]);
+        assert!(RunConfig::default().jobs.is_empty());
+        let err = RunConfig::from_toml("[run]\njobs = \"pagerank,kmeans\"").unwrap_err();
+        assert!(format!("{err:#}").contains("kmeans"), "got: {err:#}");
+        assert!(RunConfig::from_toml("[run]\njobs = \",\"").is_err());
     }
 
     #[test]

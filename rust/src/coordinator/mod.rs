@@ -15,6 +15,14 @@
 //!
 //! All three report the same [`PageRankRun`] shape with the same
 //! determinism checksum, so modes can be cross-checked for equality.
+//!
+//! NOTE: this module predates the session-based communicator API
+//! (`crate::comm`). New code should go through
+//! [`crate::comm::CommBuilder`] / [`crate::comm::Session`] — one handle
+//! for any app in any mode — and these PageRank-shaped entry points are
+//! kept as thin compatibility shims for the benches and the
+//! measurement drivers (`tune`, Figure 7 thread sweeps) that need the
+//! raw threaded cluster underneath.
 
 use crate::allreduce::threaded::{run_cluster, NodeHandle};
 use crate::apps::pagerank::{DistPageRank, PageRankConfig, PageRankShards};
@@ -26,32 +34,14 @@ use crate::simnet::CostModel;
 use crate::sparse::SumF32;
 use crate::topology::Butterfly;
 use crate::transport::{DelayTransport, MemTransport, Transport};
-use anyhow::{bail, Result};
+use anyhow::Result;
 use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
 
-/// How a cluster run is executed.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum ExecMode {
-    /// Sequential lockstep in one thread (`LocalCluster`).
-    Lockstep,
-    /// One thread per node, shared in-process transport.
-    Threaded,
-    /// One OS process per node over TCP (`cluster::` control plane).
-    MultiProcess,
-}
-
-impl ExecMode {
-    pub fn parse(s: &str) -> Result<ExecMode> {
-        match s {
-            "lockstep" | "local" => Ok(ExecMode::Lockstep),
-            "threaded" | "threads" => Ok(ExecMode::Threaded),
-            "distributed" | "multiprocess" | "cluster" => Ok(ExecMode::MultiProcess),
-            other => bail!("unknown exec mode `{other}` (lockstep|threaded|distributed)"),
-        }
-    }
-}
+/// How a cluster run is executed. Moved to [`crate::comm`] with the
+/// session API; re-exported here for the existing call sites.
+pub use crate::comm::ExecMode;
 
 /// Outcome of a threaded PageRank run.
 #[derive(Clone, Debug)]
@@ -108,9 +98,7 @@ pub fn run_pagerank_threaded<T: Transport + 'static>(
         .expect("config failed");
         metrics.config_secs = t0.elapsed().as_secs_f64();
 
-        let teleport = 1.0f32 / n as f32;
-        let damp = (n as f32 - 1.0) / n as f32;
-        let mut p = vec![teleport; shard.cols()];
+        let mut p = crate::apps::pagerank::initial_p(n, shard.cols());
         for _ in 0..iters {
             let tc = Instant::now();
             let q = shard.spmv(&p);
@@ -119,9 +107,7 @@ pub fn run_pagerank_threaded<T: Transport + 'static>(
             let sums = h.reduce::<SumF32>(q).expect("reduce failed");
             let comm = tm.elapsed();
             let tc2 = Instant::now();
-            for (pv, s) in p.iter_mut().zip(sums) {
-                *pv = teleport + damp * s;
-            }
+            crate::apps::pagerank::apply_update(&mut p, &sums, n);
             metrics.push(compute + tc2.elapsed(), comm);
         }
         (metrics, p.first().copied().unwrap_or(0.0))

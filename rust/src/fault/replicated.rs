@@ -98,6 +98,13 @@ impl<T: Transport + 'static> ReplicatedHandle<T> {
         self.timeout = timeout;
     }
 
+    /// Offset the collective sequence space (e.g. by `job_id << 16`) so
+    /// tags from consecutive jobs on one long-lived transport can never
+    /// collide — see `NodeHandle::set_seq_base`.
+    pub fn set_seq_base(&mut self, base: u32) {
+        self.seq = base;
+    }
+
     /// Wait for the first copy of `(tag, logical src)` from any replica.
     fn await_race(&mut self, tag: Tag, lsrc: usize) -> Result<Vec<u8>, TransportError> {
         if let Some(p) = self.pending.remove(&(tag, lsrc)) {

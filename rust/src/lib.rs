@@ -26,6 +26,7 @@ pub mod apps;
 pub mod bench;
 pub mod cli;
 pub mod cluster;
+pub mod comm;
 pub mod config;
 pub mod coordinator;
 pub mod fault;

@@ -1,23 +1,20 @@
 //! `sar` — the Sparse Allreduce launcher (Layer-3 coordinator binary).
 
 use anyhow::{bail, Result};
-use sparse_allreduce::apps::diameter::{estimate_diameter, DiameterConfig};
+use sparse_allreduce::apps::diameter::{estimate_diameter_mode, DiameterConfig};
 use sparse_allreduce::apps::sgd::{NativeGradEngine, SgdConfig, SynthData, Trainer};
 use sparse_allreduce::bench::{print_table, BenchOpts};
 use sparse_allreduce::cli::{usage_for, Args, USAGE};
-use sparse_allreduce::cluster::{self, LaunchOpts, WorkerOpts};
+use sparse_allreduce::cluster::{self, ClusterRun, LaunchOpts, WorkerOpts};
+use sparse_allreduce::comm::{CommBuilder, ExecMode, JobOutcome, JobSpec};
 use sparse_allreduce::config::{validate_world, RunConfig};
-use sparse_allreduce::tune::{self, TuneOpts};
-use sparse_allreduce::coordinator::{
-    run_pagerank_config, run_pagerank_distributed, run_pagerank_lockstep,
-    run_pagerank_lockstep_sharded, ExecMode, PageRankRun,
-};
 use sparse_allreduce::graph::{
     load_edge_list, shard_graph, DatasetPreset, DatasetSpec, ShardManifest,
 };
 use sparse_allreduce::partition::Strategy;
 use sparse_allreduce::runtime::{Runtime, XlaGradEngine};
 use sparse_allreduce::topology::{plan_degrees, PlannerParams};
+use sparse_allreduce::tune::{self, TuneOpts};
 use sparse_allreduce::util::{human_bytes, human_duration, logging};
 use std::path::{Path, PathBuf};
 
@@ -45,6 +42,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "shard" => cmd_shard(args),
         "pagerank" => cmd_pagerank(args),
         "diameter" => cmd_diameter(args),
+        "sgd" => cmd_sgd(args),
         "train" => cmd_train(args),
         "worker" => cmd_worker(args),
         "launch" => cmd_launch(args),
@@ -314,77 +312,141 @@ fn cmd_pagerank(args: &Args) -> Result<()> {
         let prof = tune::apply_profile(&mut cfg, Path::new(&p))?;
         log::info!("applied tuning profile {p}: schedule {:?}", prof.degrees);
     }
-    if cfg.shards.is_some() && matches!(mode, ExecMode::Threaded) {
-        bail!(
-            "--shards supports --mode lockstep and --mode distributed (the threaded \
-             driver shares one in-memory graph; see `sar help pagerank`)"
-        );
+    // ONE source of truth for the graph: every mode's driver derives it
+    // from the job spec's (dataset, scale, seed) — or from the on-disk
+    // shard set when --shards is given — so the advertised cross-mode
+    // checksum equality holds by construction.
+    if DatasetPreset::by_name(&cfg.dataset).is_none() {
+        bail!("unknown dataset `{}` (twitter|yahoo|docterm)", cfg.dataset);
     }
-    // ONE source of truth for the graph: distributed workers regenerate
-    // it from cfg's (dataset, scale, seed), so the in-process modes must
-    // derive their spec from the same fields or the advertised
-    // cross-mode checksum equality silently breaks. (With --shards the
-    // on-disk shard set is that source of truth instead, for every mode.)
-    let preset = DatasetPreset::by_name(&cfg.dataset).ok_or_else(|| {
-        anyhow::anyhow!("unknown dataset `{}` (twitter|yahoo|docterm)", cfg.dataset)
-    })?;
 
-    let run = match (mode, cfg.shards.clone()) {
-        (ExecMode::MultiProcess, _) => {
-            let bin = args.flag("bin").map(PathBuf::from);
-            run_pagerank_distributed(&cfg, bin.as_deref())?
-        }
-        (ExecMode::Lockstep, Some(dir)) => run_pagerank_lockstep_sharded(Path::new(&dir), &cfg)?,
-        _ => {
-            let spec = DatasetSpec::new(preset, cfg.scale, cfg.seed);
-            log::info!("generating {} (scale {})", spec.name(), cfg.scale);
-            let graph = spec.generate();
-            log::info!("graph: {} vertices, {} edges", graph.vertices, graph.num_edges());
-            match mode {
-                ExecMode::Lockstep => run_pagerank_lockstep(&graph, &cfg),
-                _ => run_pagerank_config(&graph, &cfg, 0.0),
-            }
-        }
+    let spec = JobSpec {
+        dataset: cfg.dataset.clone(),
+        scale: cfg.scale,
+        seed: cfg.seed,
+        iters: cfg.iters,
+        shards: cfg.shards.as_ref().map(PathBuf::from),
+        ..JobSpec::pagerank()
     };
-    print_pagerank_run(&cfg, mode, &run);
+    let mut builder = CommBuilder::new(cfg.degrees.clone())
+        .mode(mode)
+        .replication(replication)
+        .send_threads(cfg.send_threads);
+    if let Some(bin) = args.flag("bin") {
+        builder = builder.worker_binary(PathBuf::from(bin));
+    }
+    let out = builder.submit(&spec)?;
+    print_job_outcome(&cfg, mode, &out);
     Ok(())
 }
 
-fn print_pagerank_run(cfg: &RunConfig, mode: ExecMode, run: &PageRankRun) {
+fn print_job_outcome(cfg: &RunConfig, mode: ExecMode, out: &JobOutcome) {
     println!(
-        "pagerank[{mode:?}]: {} iters on {} machines ({:?}) in {}",
+        "{}[{mode:?}]: {} iters on {} machines ({:?}) in {}",
+        out.job,
         cfg.iters,
         cfg.machines(),
         cfg.degrees,
-        human_duration(run.wall_secs)
+        human_duration(out.wall_secs)
     );
     println!(
         "  config {} | comm fraction {:.0}% | checksum {:.6}",
-        human_duration(run.config_secs),
-        run.comm_fraction() * 100.0,
-        run.checksum
+        human_duration(out.config_secs),
+        out.comm_fraction() * 100.0,
+        out.checksum
     );
+    if !out.dead.is_empty() {
+        println!("  dead workers (masked by replication): {:?}", out.dead);
+    }
 }
 
 fn cmd_diameter(args: &Args) -> Result<()> {
-    args.expect_known("diameter", &["dataset", "scale", "degrees", "sketches", "max-h", "seed"])?;
-    let spec = dataset_from(args)?;
-    let graph = spec.generate();
+    args.expect_known(
+        "diameter",
+        &["mode", "dataset", "scale", "degrees", "sketches", "max-h", "seed"],
+    )?;
+    let mode = ExecMode::parse(args.flag("mode").unwrap_or("lockstep"))?;
     let degrees = args.degrees_flag("degrees", &[4, 2])?;
-    let cfg = DiameterConfig {
-        k_sketches: args.usize_flag("sketches", 8)?,
-        max_h: args.usize_flag("max-h", 24)?,
-        exact: false,
-        seed: args.u64_flag("seed", 7)?,
-    };
-    let res = estimate_diameter(&graph, degrees, &cfg);
+    let dataset = args.flag("dataset").unwrap_or("twitter").to_string();
+    let scale = args.f64_flag("scale", 0.05)?;
+    let seed = args.u64_flag("seed", 7)?;
+    let sketches = args.usize_flag("sketches", 8)?;
+    let max_h = args.usize_flag("max-h", 24)?;
+    if DatasetPreset::by_name(&dataset).is_none() {
+        bail!("unknown dataset `{dataset}` (twitter|yahoo|docterm)");
+    }
+
+    if mode == ExecMode::MultiProcess {
+        // A pool can't evaluate N(h) driver-side each hop, so it runs a
+        // fixed hop count; OR-idempotence makes extra hops free.
+        let spec = JobSpec {
+            dataset,
+            scale,
+            seed,
+            iters: max_h,
+            sketches,
+            ..JobSpec::diameter()
+        };
+        let m: usize = degrees.iter().product();
+        let out = CommBuilder::new(degrees).mode(mode).submit(&spec)?;
+        println!(
+            "diameter[MultiProcess]: {max_h} hops on {m} workers in {}; sketch checksum {:.0}",
+            human_duration(out.wall_secs),
+            out.checksum
+        );
+        return Ok(());
+    }
+
+    // In-process modes see node 0's sketches each hop: full N(h) curve,
+    // early stop on saturation — the same (dataset, scale, seed) triple
+    // a distributed job would regenerate from.
+    let preset = DatasetPreset::by_name(&dataset).unwrap();
+    let graph = DatasetSpec::new(preset, scale, seed).generate();
+    let cfg = DiameterConfig { k_sketches: sketches, max_h, exact: false, seed };
+    let res = estimate_diameter_mode(&graph, degrees, &cfg, mode)?;
     println!(
-        "effective diameter ≈ {} ({} hops run) on {} vertices",
+        "effective diameter ≈ {} ({} hops run) on {} vertices [{mode:?}]",
         res.effective_diameter, res.hops_run, graph.vertices
     );
     for (h, n) in res.neighbourhood.iter().enumerate() {
         println!("  N({}) ≈ {:.0}", h + 1, n);
     }
+    Ok(())
+}
+
+fn cmd_sgd(args: &Args) -> Result<()> {
+    args.expect_known(
+        "sgd",
+        &["mode", "features", "classes", "steps", "degrees", "batch", "lr", "feats-per-ex", "seed"],
+    )?;
+    let mode = ExecMode::parse(args.flag("mode").unwrap_or("lockstep"))?;
+    let degrees = args.degrees_flag("degrees", &[2, 2])?;
+    let spec = JobSpec {
+        iters: args.usize_flag("steps", 20)?,
+        classes: args.usize_flag("classes", 8)?,
+        batch: args.usize_flag("batch", 32)?,
+        lr: args.f64_flag("lr", 0.5)? as f32,
+        features: args.usize_flag("features", 1024)? as i64,
+        feats_per_ex: args.usize_flag("feats-per-ex", 8)?,
+        seed: args.u64_flag("seed", 123)?,
+        ..JobSpec::sgd()
+    };
+    let m: usize = degrees.iter().product();
+    println!(
+        "sgd[{mode:?}]: {} steps of a {}x{} model on {m} workers (batch {}, lr {})",
+        spec.iters, spec.features, spec.classes, spec.batch, spec.lr
+    );
+    let out = CommBuilder::new(degrees).mode(mode).submit(&spec)?;
+    for (s, loss) in out.losses.iter().enumerate() {
+        if s < 3 || (s + 1) % 5 == 0 || s + 1 == out.losses.len() {
+            println!("  step {:>4}  loss {loss:.4}", s + 1);
+        }
+    }
+    println!(
+        "  done in {} | final-loss checksum {:.6}",
+        human_duration(out.wall_secs),
+        out.checksum
+    );
     Ok(())
 }
 
@@ -459,8 +521,8 @@ fn cmd_launch(args: &Args) -> Result<()> {
     args.expect_known(
         "launch",
         &[
-            "workers", "degrees", "replication", "iters", "dataset", "scale", "seed", "threads",
-            "bind", "file", "no-spawn", "bin", "shards", "tune-profile",
+            "jobs", "workers", "degrees", "replication", "iters", "dataset", "scale", "seed",
+            "threads", "bind", "file", "no-spawn", "bin", "shards", "tune-profile",
         ],
     )?;
     let mut cfg = match args.flag("file") {
@@ -481,6 +543,9 @@ fn cmd_launch(args: &Args) -> Result<()> {
     }
     if let Some(dir) = args.flag("shards") {
         cfg.shards = Some(dir.to_string());
+    }
+    if let Some(list) = args.flag("jobs") {
+        cfg.jobs = sparse_allreduce::comm::parse_job_names(list)?;
     }
     if let Some(p) = args.flag("tune-profile") {
         cfg.tune_profile = Some(p.to_string());
@@ -521,12 +586,17 @@ fn cmd_launch(args: &Args) -> Result<()> {
         validate_world(&opts.degrees, opts.replication, w)?;
     }
     let world = opts.world();
+    let jobs = opts.job_list();
+    let job_names: Vec<&str> = jobs.iter().map(|j| j.name.as_str()).collect();
     println!(
-        "launching {world} workers (degrees {:?}, replication {})",
-        opts.degrees, opts.replication
+        "launching {world} workers (degrees {:?}, replication {}) for {} job(s): {}",
+        opts.degrees,
+        opts.replication,
+        jobs.len(),
+        job_names.join(", ")
     );
 
-    let run = if args.has_switch("no-spawn") {
+    let runs: Vec<ClusterRun> = if args.has_switch("no-spawn") {
         let coord = cluster::Coordinator::bind(&opts.bind)?;
         // Print an address a REMOTE worker can actually dial: for an
         // all-interfaces bind the operator must substitute this host's
@@ -540,9 +610,12 @@ fn cmd_launch(args: &Args) -> Result<()> {
         println!("waiting for {world} workers; start each with:");
         println!("  sar worker --coordinator {shown}");
         let mut session = coord.accept(opts)?;
-        session.barrier_config()?;
-        session.start()?;
-        session.collect()?
+        let mut runs = Vec::with_capacity(jobs.len());
+        for job in &jobs {
+            runs.push(session.run_job(job)?);
+        }
+        session.shutdown();
+        runs
     } else {
         // (Oversized local forks are rejected inside spawn_workers —
         // the same cap covers `sar pagerank --distributed`.)
@@ -550,20 +623,30 @@ fn cmd_launch(args: &Args) -> Result<()> {
             Some(b) => PathBuf::from(b),
             None => cluster::sar_binary()?,
         };
-        cluster::launch_local(&bin, opts)?
+        cluster::launch_local_jobs(&bin, opts)?
     };
 
+    for run in &runs {
+        print_launch_run(&cfg, run);
+    }
+    Ok(())
+}
+
+/// One job's pool report, every line prefixed with the job name so
+/// multi-job output is attributable.
+fn print_launch_run(cfg: &RunConfig, run: &ClusterRun) {
+    let tag = &run.job;
     println!(
-        "launch: {} iters on {} workers ({:?}, replication {}) in {}",
+        "[{tag}] {} iters on {} workers ({:?}, replication {}) in {}",
         cfg.iters,
         run.world,
         cfg.degrees,
         run.replication,
         human_duration(run.wall_secs)
     );
-    let pr = sparse_allreduce::coordinator::cluster_pagerank_run(&run);
+    let pr = sparse_allreduce::coordinator::cluster_pagerank_run(run);
     println!(
-        "  config {} | comm fraction {:.0}% | checksum {:.6}",
+        "[{tag}]   config {} | comm fraction {:.0}% | checksum {:.6}",
         human_duration(run.config_secs),
         pr.comm_fraction() * 100.0,
         run.checksum
@@ -573,7 +656,7 @@ fn cmd_launch(args: &Args) -> Result<()> {
     // even while its heartbeats still arrive in time.
     if run.rtt.n > 0 {
         println!(
-            "  heartbeat rtt min {} | p50 {} | max {} ({} samples)",
+            "[{tag}]   heartbeat rtt min {} | p50 {} | max {} ({} samples)",
             human_duration(run.rtt.min),
             human_duration(run.rtt.p50),
             human_duration(run.rtt.max),
@@ -594,7 +677,7 @@ fn cmd_launch(args: &Args) -> Result<()> {
             let peer_median = peers.get(peers.len() / 2).copied().unwrap_or(0.0);
             if peer_median > 0.0 && s.p50 > 3.0 * peer_median {
                 println!(
-                    "  straggler: worker {w} rtt p50 {} ({}x peer median)",
+                    "[{tag}]   straggler: worker {w} rtt p50 {} ({}x peer median)",
                     human_duration(s.p50),
                     (s.p50 / peer_median).round()
                 );
@@ -602,9 +685,8 @@ fn cmd_launch(args: &Args) -> Result<()> {
         }
     }
     if !run.dead.is_empty() {
-        println!("  dead workers (masked by replication): {:?}", run.dead);
+        println!("[{tag}]   dead workers (masked by replication): {:?}", run.dead);
     }
-    Ok(())
 }
 
 fn cmd_config_check(args: &Args) -> Result<()> {

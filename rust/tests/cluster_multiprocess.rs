@@ -132,7 +132,9 @@ fn mp_killing_one_replica_fails_over() {
     let want = reference_checksum(&opts);
     assert_eq!(opts.world(), 8);
 
+    let job = opts.default_job();
     let (mut session, mut procs) = spawn_session(sar_bin(), opts).expect("bring-up failed");
+    session.submit(&job).expect("submit failed");
     session.barrier_config().expect("config barrier failed");
     // Fail-stop one worker process. Node ids are assigned by JOIN
     // arrival order, so process #5's node id is arbitrary — but with

@@ -1,0 +1,157 @@
+//! Comm-session acceptance tests: one `CommBuilder` handle runs any app
+//! in any execution mode with identical checksums, and one `sar launch`
+//! worker pool executes multiple distinct jobs without a re-JOIN.
+//!
+//! The in-process parity tests are tier-1; the pool tests fork real
+//! `sar worker` subprocesses and are tagged `mp_` so CI gates them into
+//! the tier-2 job (`cargo test --test comm mp_`).
+
+use sparse_allreduce::cluster::{spawn_session, LaunchOpts};
+use sparse_allreduce::comm::{AppKind, CommBuilder, ExecMode, JobSpec};
+use std::path::Path;
+
+fn sar_bin() -> &'static Path {
+    Path::new(env!("CARGO_BIN_EXE_sar"))
+}
+
+fn tiny_pagerank() -> JobSpec {
+    JobSpec { scale: 0.002, iters: 5, seed: 42, ..JobSpec::pagerank() }
+}
+
+fn tiny_diameter() -> JobSpec {
+    JobSpec { scale: 0.002, iters: 4, sketches: 4, seed: 7, ..JobSpec::diameter() }
+}
+
+fn tiny_sgd() -> JobSpec {
+    JobSpec {
+        iters: 6,
+        classes: 4,
+        batch: 8,
+        features: 300,
+        feats_per_ex: 5,
+        seed: 123,
+        ..JobSpec::sgd()
+    }
+}
+
+fn run_mode(mode: ExecMode, spec: &JobSpec) -> f64 {
+    CommBuilder::new(vec![2, 2])
+        .mode(mode)
+        .send_threads(2)
+        .submit(spec)
+        .unwrap_or_else(|e| panic!("{:?} {} failed: {e:#}", mode, spec.name))
+        .checksum
+}
+
+/// Tier-1 parity: lockstep and threaded sessions produce identical
+/// checksums for all three apps — the non-sum ops (diameter's OrU32)
+/// and the parameter-server app (sgd) alongside the historical
+/// pagerank assertion.
+#[test]
+fn lockstep_and_threaded_agree_for_all_three_apps() {
+    for spec in [tiny_pagerank(), tiny_diameter(), tiny_sgd()] {
+        let lockstep = run_mode(ExecMode::Lockstep, &spec);
+        let threaded = run_mode(ExecMode::Threaded, &spec);
+        assert!(
+            (lockstep - threaded).abs() < 1e-12,
+            "{}: lockstep {lockstep} vs threaded {threaded}",
+            spec.name
+        );
+        assert!(lockstep.is_finite(), "{} checksum must be finite", spec.name);
+        if spec.app == AppKind::Diameter {
+            // sketch probes are integers: the OR-reduce must be exact
+            assert_eq!(lockstep, threaded, "diameter checksums are integral");
+            assert!(lockstep > 0.0, "sketches are non-empty");
+        }
+    }
+}
+
+/// The deterministic probe is stable across repeated submits of the
+/// same spec (sessions don't leak state between jobs).
+#[test]
+fn repeated_submits_are_deterministic() {
+    let spec = tiny_diameter();
+    let a = run_mode(ExecMode::Lockstep, &spec);
+    let b = run_mode(ExecMode::Lockstep, &spec);
+    assert_eq!(a, b);
+}
+
+/// Acceptance: ONE worker pool executes three distinct jobs — different
+/// apps, different reduce operators — with per-job reports, identical
+/// checksums to the lockstep oracle, and NO worker restart (the same
+/// OS pids report every job; a re-JOIN would have forked new workers).
+#[test]
+fn mp_multi_job_pool_matches_lockstep_without_rejoin() {
+    let pr = tiny_pagerank();
+    let di = tiny_diameter();
+    let sg = tiny_sgd();
+    let want_pr = run_mode(ExecMode::Lockstep, &pr);
+    let want_di = run_mode(ExecMode::Lockstep, &di);
+    let want_sg = run_mode(ExecMode::Lockstep, &sg);
+
+    let opts = LaunchOpts { degrees: vec![2, 2], send_threads: 2, ..LaunchOpts::default() };
+    let (mut session, mut procs) = spawn_session(sar_bin(), opts).expect("pool bring-up failed");
+    let run_pr = session.run_job(&pr).expect("pagerank job failed");
+    let run_di = session.run_job(&di).expect("diameter job failed");
+    let run_sg = session.run_job(&sg).expect("sgd job failed");
+    session.shutdown();
+    procs.wait_all();
+
+    for (run, want) in [(&run_pr, want_pr), (&run_di, want_di), (&run_sg, want_sg)] {
+        assert!(
+            (run.checksum - want).abs() < 1e-9,
+            "job `{}`: pool checksum {} != lockstep {}",
+            run.job,
+            run.checksum,
+            want
+        );
+        assert_eq!(run.dead, Vec::<usize>::new(), "job `{}` lost workers", run.job);
+        assert_eq!(
+            run.per_node.iter().filter(|m| m.is_some()).count(),
+            4,
+            "job `{}` must have all four reports",
+            run.job
+        );
+    }
+    // Reports are attributable per job...
+    assert_eq!(run_pr.job, "pagerank");
+    assert_eq!(run_di.job, "diameter");
+    assert_eq!(run_sg.job, "sgd");
+    // ...and the pool was genuinely reused: every job was answered by
+    // the SAME worker processes (equal pid vectors ⇒ no re-JOIN, no
+    // worker restart between jobs).
+    assert!(run_pr.pids.iter().all(|p| p.is_some()), "all workers report pids");
+    assert_eq!(run_pr.pids, run_di.pids, "pagerank → diameter reused the pool");
+    assert_eq!(run_di.pids, run_sg.pids, "diameter → sgd reused the pool");
+}
+
+/// The one-shot multi-process door (`CommBuilder::submit` with
+/// mode=mp) spawns a pool, runs the job, and lands on the same
+/// checksum as the in-process modes — closing the three-mode triangle
+/// for a non-sum operator.
+#[test]
+fn mp_builder_one_shot_matches_lockstep() {
+    let spec = tiny_diameter();
+    let want = run_mode(ExecMode::Lockstep, &spec);
+    let out = CommBuilder::new(vec![2, 2])
+        .mode(ExecMode::MultiProcess)
+        .worker_binary(sar_bin().to_path_buf())
+        .submit(&spec)
+        .expect("mp one-shot failed");
+    assert_eq!(out.checksum, want, "diameter checksums are integral and exact");
+}
+
+/// sgd jobs reject replication (worker-local model shards can't be
+/// transparently replicated) with a readable error — before any
+/// process is forked.
+#[test]
+fn sgd_with_replication_is_rejected() {
+    let opts = LaunchOpts {
+        degrees: vec![2],
+        replication: 2,
+        jobs: vec![tiny_sgd()],
+        ..LaunchOpts::default()
+    };
+    let err = spawn_session(sar_bin(), opts).unwrap_err();
+    assert!(format!("{err:#}").contains("replication"), "got: {err:#}");
+}

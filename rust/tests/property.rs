@@ -398,3 +398,148 @@ fn prop_merge_fully_overlapping_supports() {
     assert_eq!(merged.idx, idx, "fully-overlapping union is the shared support");
     check_against_oracle(&inputs, "fully overlapping");
 }
+
+// ---------------------------------------------------------------------
+// ReduceOp algebraic laws (satellite): identity, commutativity and
+// associativity for every operator, plus the scatter-combine itself
+// checked against a fold oracle over Zipf-distributed sparse vectors —
+// so a future op can't silently break the reduce path.
+// ---------------------------------------------------------------------
+
+mod reduce_op_laws {
+    use super::*;
+    use sparse_allreduce::sparse::{MaxF32, ReduceOp};
+    use sparse_allreduce::util::Zipf;
+
+    const LAW_CASES: usize = 60;
+
+    #[test]
+    fn prop_identity_is_exact_for_every_op() {
+        let mut rng = Pcg32::new(0x1D);
+        for _ in 0..LAW_CASES {
+            let x = rng.next_f32() * 4.0 - 2.0;
+            assert_eq!(SumF32::combine(SumF32::zero(), x), x);
+            assert_eq!(SumF32::combine(x, SumF32::zero()), x);
+            assert_eq!(MaxF32::combine(MaxF32::zero(), x), x);
+            assert_eq!(MaxF32::combine(x, MaxF32::zero()), x);
+            let u = rng.next_u32();
+            assert_eq!(OrU32::combine(OrU32::zero(), u), u);
+            assert_eq!(OrU32::combine(u, OrU32::zero()), u);
+        }
+    }
+
+    #[test]
+    fn prop_commutativity_is_exact_for_every_op() {
+        let mut rng = Pcg32::new(0xC0);
+        for _ in 0..LAW_CASES {
+            let (a, b) = (rng.next_f32() * 4.0 - 2.0, rng.next_f32() * 4.0 - 2.0);
+            assert_eq!(SumF32::combine(a, b), SumF32::combine(b, a));
+            assert_eq!(MaxF32::combine(a, b), MaxF32::combine(b, a));
+            let (x, y) = (rng.next_u32(), rng.next_u32());
+            assert_eq!(OrU32::combine(x, y), OrU32::combine(y, x));
+        }
+    }
+
+    #[test]
+    fn prop_associativity_exact_or_within_float_eps() {
+        let mut rng = Pcg32::new(0xA5);
+        for _ in 0..LAW_CASES {
+            let (a, b, c) =
+                (rng.next_f32() * 4.0 - 2.0, rng.next_f32() * 4.0 - 2.0, rng.next_f32() * 4.0 - 2.0);
+            // OR and MAX are exactly associative; float addition only up
+            // to rounding (the scatter-combine fixes ONE order per node,
+            // so the protocol stays deterministic regardless).
+            assert_eq!(
+                MaxF32::combine(MaxF32::combine(a, b), c),
+                MaxF32::combine(a, MaxF32::combine(b, c))
+            );
+            let l = SumF32::combine(SumF32::combine(a, b), c);
+            let r = SumF32::combine(a, SumF32::combine(b, c));
+            assert!((l - r).abs() <= 1e-5 * (1.0 + l.abs().max(r.abs())), "{l} vs {r}");
+            let (x, y, z) = (rng.next_u32(), rng.next_u32(), rng.next_u32());
+            assert_eq!(
+                OrU32::combine(OrU32::combine(x, y), z),
+                OrU32::combine(x, OrU32::combine(y, z))
+            );
+        }
+    }
+
+    /// A sorted, deduped Zipf-distributed index set (power-law skew:
+    /// low indices collide heavily across nodes, the tail is sparse —
+    /// exactly the regime the paper's merge machinery targets).
+    fn zipf_set(rng: &mut Pcg32, zipf: &Zipf, max_k: usize) -> Vec<i64> {
+        let k = rng.gen_range(1, max_k);
+        let mut idx: Vec<i64> = (0..k).map(|_| zipf.sample(rng) as i64).collect();
+        idx.sort_unstable();
+        idx.dedup();
+        idx
+    }
+
+    fn check_zipf_reduce<R: ReduceOp>(
+        seed: u64,
+        gen: &mut dyn FnMut(&mut Pcg32) -> R::T,
+        close: &dyn Fn(&R::T, &R::T) -> bool,
+    ) {
+        let mut rng = Pcg32::new(seed);
+        let degrees = random_degrees(&mut rng);
+        let m: usize = degrees.iter().product();
+        let range = 2048u64;
+        let zipf = Zipf::new(range, 1.1);
+        let outs: Vec<(Vec<i64>, Vec<R::T>)> = (0..m)
+            .map(|_| {
+                let idx = zipf_set(&mut rng, &zipf, 120);
+                let val: Vec<R::T> = idx.iter().map(|_| gen(&mut rng)).collect();
+                (idx, val)
+            })
+            .collect();
+        let ins: Vec<Vec<i64>> = (0..m).map(|_| zipf_set(&mut rng, &zipf, 80)).collect();
+        let topo = Butterfly::new(degrees.clone(), range as i64);
+        let mut cluster = LocalCluster::new(topo);
+        cluster.config(
+            outs.iter().map(|(i, _)| IndexSet::from_sorted(i.clone())).collect(),
+            ins.iter().map(|i| IndexSet::from_sorted(i.clone())).collect(),
+        );
+        let (got, _) = cluster.reduce::<R>(outs.iter().map(|(_, v)| v.clone()).collect());
+
+        // fold oracle: combine every contribution per index, any order
+        let mut acc: HashMap<i64, R::T> = HashMap::new();
+        for (idx, val) in &outs {
+            for (&i, &v) in idx.iter().zip(val) {
+                acc.entry(i).and_modify(|e| *e = R::combine(*e, v)).or_insert(v);
+            }
+        }
+        for (n, req) in ins.iter().enumerate() {
+            assert_eq!(got[n].len(), req.len(), "seed {seed} node {n}");
+            for (j, i) in req.iter().enumerate() {
+                let want = acc.get(i).copied().unwrap_or(R::zero());
+                assert!(
+                    close(&got[n][j], &want),
+                    "seed {seed} degrees {degrees:?} node {n} idx {i}: {:?} vs {:?}",
+                    got[n][j],
+                    want
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prop_zipf_scatter_combine_matches_fold_oracle_all_ops() {
+        for seed in 0..25u64 {
+            check_zipf_reduce::<SumF32>(
+                0xF000 + seed,
+                &mut |r: &mut Pcg32| r.next_f32() * 4.0 - 2.0,
+                &|a: &f32, b: &f32| (a - b).abs() < 1e-3,
+            );
+            check_zipf_reduce::<OrU32>(
+                0xB000 + seed,
+                &mut |r: &mut Pcg32| r.next_u32(),
+                &|a: &u32, b: &u32| a == b,
+            );
+            check_zipf_reduce::<MaxF32>(
+                0xC000 + seed,
+                &mut |r: &mut Pcg32| r.next_f32() * 4.0 - 2.0,
+                &|a: &f32, b: &f32| a == b,
+            );
+        }
+    }
+}

@@ -13,7 +13,7 @@
 //! own graphs would race it.
 
 use sparse_allreduce::apps::pagerank::{DistPageRank, PageRankConfig};
-use sparse_allreduce::cluster::{load_worker_data, WorkerPlan};
+use sparse_allreduce::cluster::{load_worker_data, JobPlan};
 use sparse_allreduce::graph::{
     generation_count, shard_graph, DatasetPreset, DatasetSpec, ShardManifest,
 };
@@ -27,21 +27,24 @@ fn tmp_dir(tag: &str) -> PathBuf {
     dir
 }
 
-fn plan(shard_dir: &Path, digest: u64) -> WorkerPlan {
-    WorkerPlan {
-        node: 0,
-        world: 4,
-        replication: 1,
-        degrees: vec![2, 2],
-        addrs: (0..4).map(|_| "127.0.0.1:1".to_string()).collect(),
+fn plan(shard_dir: &Path, digest: u64) -> JobPlan {
+    JobPlan {
+        job: 0,
+        name: "pagerank".into(),
+        app: "pagerank".into(),
         dataset: "twitter".into(),
         scale: 0.002,
         seed: 42,
         iters: 5,
         send_threads: 1,
-        data_timeout_ms: 1_000,
         shard_dir: shard_dir.to_string_lossy().into_owned(),
         manifest_digest: digest,
+        sketches: 0,
+        classes: 0,
+        batch: 0,
+        lr: 0.0,
+        features: 0,
+        feats_per_ex: 0,
     }
 }
 
@@ -67,8 +70,7 @@ fn shard_ingestion_end_to_end() {
     // --- shard-supplied workers never generate -------------------------
     let before = generation_count();
     for node in 0..4usize {
-        let p = WorkerPlan { node: node as u32, ..plan(&dir, digest) };
-        let data = load_worker_data(&p, node, 4).unwrap();
+        let data = load_worker_data(&plan(&dir, digest), node, 4).unwrap();
         assert_eq!(data.vertices, graph.vertices);
         let want = &oracle.shards[node];
         assert_eq!(data.shard.row_globals, want.row_globals, "worker {node} rows");
@@ -110,8 +112,7 @@ fn shard_ingestion_end_to_end() {
     let mid = bytes.len() / 2;
     bytes[mid] ^= 0x10;
     std::fs::write(&victim, &bytes).unwrap();
-    let p = WorkerPlan { node: 2, ..plan(&dir, digest) };
-    let err = load_worker_data(&p, 2, 4).unwrap_err();
+    let err = load_worker_data(&plan(&dir, digest), 2, 4).unwrap_err();
     let msg = format!("{err:#}");
     assert!(
         msg.contains("CRC") || msg.contains("sorted") || msg.contains("degree table"),

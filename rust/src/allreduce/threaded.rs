@@ -187,6 +187,32 @@ impl<T: Transport + 'static> NodeHandle<T> {
         self.reduce_up::<R>(projected)
     }
 
+    /// The scatter-reduce half of one collective, exposed for the
+    /// remote collective plane: advances the collective sequence, runs
+    /// the down sweep, and returns this node's fully-reduced bottom
+    /// range (aligned with `protocol().bottom_down_set()`). The handle
+    /// is left mid-collective — the caller MUST follow with
+    /// [`NodeHandle::reduce_up_half`] (every peer's allgather blocks on
+    /// this node's up-phase messages).
+    pub fn reduce_down_half<R: ReduceOp>(
+        &mut self,
+        values: Vec<R::T>,
+    ) -> Result<Vec<R::T>, TransportError> {
+        self.seq += 1;
+        self.reduce_down::<R>(values)
+    }
+
+    /// The allgather half completing a [`NodeHandle::reduce_down_half`]:
+    /// `values` must hold one entry per `protocol().bottom_up_set()`
+    /// index; returns values aligned with the inbound set. Does NOT
+    /// advance the sequence — both halves belong to one collective.
+    pub fn reduce_up_half<R: ReduceOp>(
+        &mut self,
+        values: Vec<R::T>,
+    ) -> Result<Vec<R::T>, TransportError> {
+        self.reduce_up::<R>(values)
+    }
+
     /// Like [`NodeHandle::reduce`], but with a custom bottom-of-butterfly
     /// transform replacing the final projection: after the scatter-reduce
     /// completes, `bottom(down_set, reduced, up_set)` receives this node's

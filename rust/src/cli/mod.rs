@@ -143,6 +143,7 @@ COMMANDS:
   train         distributed mini-batch SGD (XLA engine by default)
   worker        join a multi-process worker pool as a daemon
   launch        coordinate a worker pool: one JOIN, N jobs
+  serve         serve remote collective clients against a worker pool
   config-check  validate a cluster config file
   help          show usage (`sar help <command>` for one command)
 
@@ -155,12 +156,17 @@ pub fn usage_for(cmd: &str) -> Option<&'static str> {
         "info" => "USAGE: sar info\n\nShow build/runtime info (PJRT platform, artifacts).",
         "plan" => "\
 USAGE: sar plan [--mbytes f] [--machines m] [--floor-mb f] [--compression f]
+                [--tune-profile tune.toml]
 
 Pick a butterfly degree schedule (paper §IV-B).
   --mbytes f       per-node sparse payload in MiB        [16]
   --machines m     cluster size                          [64]
   --floor-mb f     effective packet floor in MiB         [2]
-  --compression f  per-layer collision shrink factor     [0.7]",
+  --compression f  per-layer collision shrink factor     [0.7]
+  --tune-profile p plan under a `sar tune` profile: its measured packet
+                   floor and per-layer compression CURVE replace the
+                   constants above (machines defaults to the profile's
+                   world; conflicts with --floor-mb/--compression)",
         "tune" => "\
 USAGE: sar tune [--dataset twitter|yahoo|docterm] [--scale f] [--seed s]
                 [--world m] [--shards dir] [--out tune.toml]
@@ -191,7 +197,7 @@ bench trajectory row (BENCH_*.json).
         "shard" => "\
 USAGE: sar shard --out <dir> [--workers m] [--dataset twitter|yahoo|docterm]
                  [--scale f] [--seed s] [--partition random|greedy]
-                 [--edges path]
+                 [--edges path] [--from path]
 
 Partition a dataset into on-disk worker shards: hash-permute the vertex
 ids (the same permutation every PageRank driver applies), split the
@@ -208,12 +214,16 @@ global graph — and still land on the lockstep oracle's checksum.
                    later run's --seed                            [42]
   --partition p    edge-partition strategy (random|greedy)       [random]
   --edges path     shard a `src dst` edge-list text file instead
-                   of a synthetic preset",
+                   of a synthetic preset (as-is, no cleanup)
+  --from path      convert + shard a SNAP-style edge list (whitespace
+                   separated `src dst`, `#` comments): duplicate edges
+                   collapsed, edge order canonicalized, so real
+                   downloads flow into the shard pipeline",
         "pagerank" => "\
 USAGE: sar pagerank [--mode lockstep|threaded|distributed|mp] [--distributed]
                     [--dataset twitter|yahoo|docterm] [--scale f]
                     [--degrees 16x4] [--tune-profile tune.toml]
-                    [--replication r] [--iters n]
+                    [--replication r] [--iters n] [--pool host:port]
                     [--threads t] [--seed s] [--bin path] [--shards dir]
 
 Distributed PageRank through the Comm session API.
@@ -233,13 +243,15 @@ Distributed PageRank through the Comm session API.
   --bin path       sar binary to spawn workers from (mode=distributed)
   --shards dir     load worker shards from a `sar shard` directory
                    (any mode) instead of regenerating the dataset
+  --pool addr      run the collectives on a `sar serve`d worker pool
+                   (implies --mode mp; --degrees must match the pool)
   --tune-profile p use the degree schedule + cost model from a
                    digest-verified `sar tune` profile (conflicts
                    with --degrees)",
         "diameter" => "\
 USAGE: sar diameter [--mode lockstep|threaded|distributed|mp] [--dataset d]
                     [--scale f] [--degrees 4x2] [--sketches k]
-                    [--max-h n] [--seed s]
+                    [--max-h n] [--seed s] [--pool host:port]
 
 HADI effective-diameter estimation (OR-allreduce) through the Comm
 session API.
@@ -253,11 +265,13 @@ session API.
   --degrees kxk  butterfly degree schedule               [4x2]
   --sketches k   Flajolet–Martin sketches per vertex     [8]
   --max-h n      maximum hops                            [24]
-  --seed s       RNG seed                                [7]",
+  --seed s       RNG seed                                [7]
+  --pool addr    run the collectives on a `sar serve`d worker pool
+                 (implies --mode mp)",
         "sgd" => "\
 USAGE: sar sgd [--mode lockstep|threaded|distributed|mp] [--features n]
                [--classes c] [--steps n] [--degrees 2x2] [--batch b]
-               [--lr f] [--feats-per-ex k] [--seed s]
+               [--lr f] [--feats-per-ex k] [--seed s] [--pool host:port]
 
 Distributed mini-batch SGD through the Comm session API: dynamic
 per-step configs (the paper's §III-B mini-batch loop) with the
@@ -271,7 +285,11 @@ per-worker final losses are bit-comparable across modes.
   --batch b        examples per worker per step          [32]
   --lr f           learning rate                         [0.5]
   --feats-per-ex k active features per example           [8]
-  --seed s         RNG seed                              [123]",
+  --seed s         RNG seed                              [123]
+  --pool addr      run the collectives on a `sar serve`d worker pool
+                   (implies --mode mp; per-step dynamic configs and the
+                   parameter-server bottom run over the wire, model
+                   state stays client-side)",
         "train" => "\
 USAGE: sar train [--features n] [--classes c] [--steps n] [--degrees 2x2]
                  [--batch b] [--lr f] [--feats-per-ex k] [--native] [--seed s]
@@ -317,6 +335,29 @@ with the job name so multi-job output is attributable.
                    digest-verified `sar tune` profile (conflicts
                    with --degrees; also settable as `[tune] profile`
                    in --file configs)",
+        "serve" => "\
+USAGE: sar serve [--degrees 2x2] [--threads t] [--bind addr]
+                 [--client-bind addr] [--sessions n] [--no-spawn] [--bin path]
+
+Serve remote collective clients against a worker pool: launch (or, with
+--no-spawn, wait for) the workers, then accept client sessions on the
+client port. A client streams its sparsity pattern (`configure`) and
+per-round sparse values (`allreduce`), the workers run the app-agnostic
+generic collective engine — SumF32 | OrU32 | MaxF32, including the
+client-side allreduce_with_bottom — and reduced results stream back.
+No app name ever crosses the wire, so ANY workload runs distributed.
+Clients connect with `CommBuilder::pool(addr)` or the `--pool` flag of
+sar pagerank/diameter/sgd. Replication is not supported (collectives
+need every lane; launch a replication-1 pool).
+  --degrees kxk    butterfly degree schedule over the pool [2x2]
+  --threads t      sender threads per worker               [4]
+  --bind a         worker control-plane bind address       [127.0.0.1:0]
+  --client-bind a  client-facing bind address              [127.0.0.1:0]
+  --sessions n     serve n client sessions, then release the pool
+                   (default: serve until killed)
+  --no-spawn       wait for externally-started workers instead of
+                   forking them locally
+  --bin path       sar binary to spawn local workers from  [current exe]",
         "config-check" => "\
 USAGE: sar config-check --file <path>
 
@@ -382,7 +423,7 @@ mod tests {
     fn every_command_has_usage() {
         for cmd in [
             "info", "plan", "tune", "shard", "pagerank", "diameter", "sgd", "train", "worker",
-            "launch", "config-check", "help",
+            "launch", "serve", "config-check", "help",
         ] {
             assert!(usage_for(cmd).is_some(), "missing usage for {cmd}");
             assert!(USAGE.contains(cmd), "top-level usage missing {cmd}");

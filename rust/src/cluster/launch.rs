@@ -14,7 +14,10 @@
 //! whole lifetime, so a killed worker turns into replica failover — or
 //! a readable quorum error — instead of a hang.
 
-use super::proto::{recv_ctrl, send_ctrl, CtrlMsg, JobPlan, WorkerPlan, WorkerReport, COORD};
+use super::proto::{
+    recv_ctrl, send_ctrl, ConfigureMsg, CtrlMsg, JobPlan, ResultMsg, ValuesMsg, WorkerPlan,
+    WorkerReport, COORD,
+};
 use crate::comm::{AppKind, JobSpec};
 use crate::config::{validate_world, RunConfig};
 use crate::fault::{FailureDetector, ReplicaMap};
@@ -22,6 +25,7 @@ use crate::graph::ShardManifest;
 use crate::metrics::{IterTiming, RunMetrics};
 use crate::util::Summary;
 use anyhow::{bail, Context, Result};
+use std::collections::VecDeque;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
@@ -366,6 +370,9 @@ pub struct Session {
     /// Whether the current job's run has been collected.
     collected: bool,
     config_done: Vec<bool>,
+    /// RESULT messages of the current remote collective config,
+    /// in arrival order (drained by [`Session::collective_next_result`]).
+    collective_inbox: VecDeque<ResultMsg>,
     reports: Vec<Option<WorkerReport>>,
     failures: Vec<(usize, String)>,
     started_at: Option<Instant>,
@@ -526,6 +533,7 @@ impl Coordinator {
             current_name: String::new(),
             collected: false,
             config_done: vec![false; world],
+            collective_inbox: VecDeque::new(),
             reports: (0..world).map(|_| None).collect(),
             failures: Vec::new(),
             started_at: None,
@@ -569,6 +577,13 @@ impl Session {
                     self.reports[w] = Some(r);
                 } else {
                     log::warn!("stale REPORT (job {}) from worker {w}", r.job);
+                }
+            }
+            Ok((w, Event::Msg(CtrlMsg::Result(r)))) => {
+                if Some(r.job) == cur {
+                    self.collective_inbox.push_back(r);
+                } else {
+                    log::warn!("stale RESULT (collective {}) from worker {w}", r.job);
                 }
             }
             Ok((w, Event::Msg(CtrlMsg::Failed { error }))) => {
@@ -845,6 +860,144 @@ impl Session {
         let run = self.collect_job()?;
         self.shutdown_all();
         Ok(run)
+    }
+
+    /// The options this pool was launched with (topology, deadlines) —
+    /// the serve plane derives the client handshake from them.
+    pub(crate) fn launch_opts(&self) -> &LaunchOpts {
+        &self.opts
+    }
+
+    // --- remote collective plane (see `cluster::serve`) ------------------
+
+    /// Begin serving one remote collective config: allocate its pool
+    /// job id and reset the barrier state. Requires a replication-1
+    /// pool (the generic engine has no replica story — ROADMAP PR 5
+    /// follow-up) and no app job in flight.
+    pub fn collective_begin(&mut self) -> Result<u32> {
+        if self.opts.replication > 1 {
+            bail!(
+                "remote collective sessions need a replication-1 pool \
+                 (this pool replicates ×{})",
+                self.opts.replication
+            );
+        }
+        if self.current_job.is_some() && !self.collected {
+            bail!(
+                "job `{}` is still in flight; collect it before serving collectives",
+                self.current_name
+            );
+        }
+        let job = self.job_seq;
+        self.job_seq += 1;
+        for c in self.config_done.iter_mut() {
+            *c = false;
+        }
+        self.collective_inbox.clear();
+        self.current_job = Some(job);
+        self.current_name = format!("collective-{job}");
+        // No REPORT cycle rides a collective config; mark it collected
+        // so nothing ever waits on one.
+        self.collected = true;
+        self.started_at = None;
+        Ok(job)
+    }
+
+    /// Forward one lane's CONFIGURE to its worker (lane = physical
+    /// worker on the replication-1 pools collectives run on).
+    pub fn collective_configure(&mut self, msg: ConfigureMsg) -> Result<()> {
+        if Some(msg.job) != self.current_job {
+            bail!(
+                "CONFIGURE for collective {} but the pool is serving {:?}",
+                msg.job,
+                self.current_job
+            );
+        }
+        let lane = msg.lane as usize;
+        if lane >= self.writers.len() {
+            bail!("CONFIGURE names lane {lane} but the pool has {} workers", self.writers.len());
+        }
+        if self.detector.is_hard_dead(lane) {
+            bail!("lane {lane}'s worker is dead{}", self.failure_summary());
+        }
+        send_ctrl(&self.writers[lane], COORD, &CtrlMsg::Configure(msg))
+            .with_context(|| format!("sending CONFIGURE to worker {lane}"))
+    }
+
+    /// Barrier until every worker voted CONFIG_DONE for the current
+    /// collective config (collectives need the full world: there is no
+    /// replica to absorb a dead lane).
+    pub fn collective_config_barrier(&mut self) -> Result<()> {
+        if self.current_job.is_none() {
+            bail!("no collective config begun");
+        }
+        let deadline = Instant::now() + self.opts.phase_deadline;
+        loop {
+            self.pump(Duration::from_millis(20));
+            let world = self.world();
+            if (0..world).all(|w| self.config_done[w]) {
+                return Ok(());
+            }
+            if (0..world).any(|w| self.detector.is_hard_dead(w)) {
+                bail!(
+                    "a worker died during the collective config phase{}",
+                    self.failure_summary()
+                );
+            }
+            if Instant::now() > deadline {
+                bail!("collective config barrier timed out{}", self.failure_summary());
+            }
+        }
+    }
+
+    /// Forward one lane's VALUES to its worker.
+    pub fn collective_values(&mut self, msg: ValuesMsg) -> Result<()> {
+        if Some(msg.job) != self.current_job {
+            bail!(
+                "VALUES for collective {} but the pool is serving {:?}",
+                msg.job,
+                self.current_job
+            );
+        }
+        let lane = msg.lane as usize;
+        if lane >= self.writers.len() {
+            bail!("VALUES names lane {lane} but the pool has {} workers", self.writers.len());
+        }
+        if self.detector.is_hard_dead(lane) {
+            bail!("lane {lane}'s worker is dead{}", self.failure_summary());
+        }
+        send_ctrl(&self.writers[lane], COORD, &CtrlMsg::Values(msg))
+            .with_context(|| format!("sending VALUES to worker {lane}"))
+    }
+
+    /// Pump until the next RESULT of the current collective config
+    /// arrives (arrival order; the client buffers by lane).
+    pub fn collective_next_result(&mut self) -> Result<ResultMsg> {
+        if self.current_job.is_none() {
+            bail!("no collective config begun");
+        }
+        let deadline = Instant::now() + self.opts.phase_deadline;
+        loop {
+            if let Some(r) = self.collective_inbox.pop_front() {
+                return Ok(r);
+            }
+            if (0..self.world()).any(|w| self.detector.is_hard_dead(w)) {
+                bail!("a worker died mid-collective{}", self.failure_summary());
+            }
+            self.pump(Duration::from_millis(20));
+            if Instant::now() > deadline {
+                bail!("timed out waiting for a collective RESULT{}", self.failure_summary());
+            }
+        }
+    }
+
+    /// End the collective session: the pool returns to idle, ready for
+    /// app jobs or the next client.
+    pub fn collective_end(&mut self) {
+        self.current_job = None;
+        self.current_name = String::new();
+        self.collected = false;
+        self.collective_inbox.clear();
     }
 
     /// Release the pool (idempotent; also runs on drop).

@@ -37,6 +37,14 @@
 //!    | ---- HEARTBEAT (100ms) --------> |   entire lifetime, background
 //! ```
 //!
+//! Next to the per-job cycle the same pool serves the **remote
+//! collective plane** (`sar serve`, see [`serve`]): a client process
+//! streams CONFIGURE (per-lane sparsity patterns) and per-round VALUES
+//! through the coordinator, workers run the app-agnostic generic
+//! engine — no `JobPlan` app tag — and RESULTs stream back. That is the
+//! paper's raw `configure`/`allreduce` lifecycle offered over the wire,
+//! consumed by [`crate::comm::RemoteSession`].
+//!
 //! Failure handling: heartbeats and control-connection EOFs feed a
 //! [`crate::fault::FailureDetector`]. With `replication > 1` a dead
 //! worker is masked by the replicated driver's packet racing (paper §V)
@@ -59,11 +67,13 @@
 
 pub mod launch;
 pub mod proto;
+pub mod serve;
 pub mod spawn;
 pub mod worker;
 
 pub use launch::{rtt_straggler, ClusterRun, Coordinator, LaunchOpts, RttTracker, Session};
-pub use proto::{CtrlMsg, JobPlan, WorkerPlan, WorkerReport};
+pub use proto::{ConfigureMsg, CtrlMsg, JobPlan, ResultMsg, ValuesMsg, WorkerPlan, WorkerReport};
+pub use serve::serve_clients;
 pub use spawn::{
     default_degrees, launch_local, launch_local_jobs, sar_binary, spawn_local, spawn_session,
     spawn_workers, LocalProcs, MAX_LOCAL_WORKERS,

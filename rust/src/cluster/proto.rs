@@ -8,7 +8,7 @@
 //! framing keeps one frame reader for both planes and gives control
 //! messages the same size accounting as data messages.
 //!
-//! The protocol has two levels:
+//! The protocol has three levels:
 //!
 //! * **Pool bring-up** (once per worker process): JOIN → PLAN
 //!   ([`WorkerPlan`]: identity, topology, address map). The worker
@@ -18,18 +18,86 @@
 //!   app, op, dataset/shard ref, iteration plan) → CONFIG_DONE barrier
 //!   → START → REPORT. `sar launch --jobs pagerank,diameter` runs N
 //!   such cycles against one JOINed pool; SHUTDOWN releases it.
+//! * **Remote collective cycle** (the app-agnostic door, `sar serve`):
+//!   CONFIGURE ([`ConfigureMsg`]: one lane's sparsity pattern) →
+//!   CONFIG_DONE barrier, then per round VALUES ([`ValuesMsg`]: one
+//!   lane's sparse values, tagged with a [`reduce_op_code`]) → RESULT
+//!   ([`ResultMsg`]: the lane's reduced inbound values, or its bottom
+//!   range for the client-side §III-B bottom transform). No app tag
+//!   anywhere: the worker runs the generic engine.
 //!
 //! See [`super`] for the full state machine these messages drive.
 
+use crate::sparse::{MaxF32, OrU32, ReduceOp, SumF32};
 use crate::topology::NodeId;
 use crate::transport::wire::{decode_header, encode_header, HEADER_BYTES};
 use crate::transport::Tag;
+use std::any::TypeId;
 use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::sync::Mutex;
 
 /// `src` value identifying the coordinator on control frames.
 pub const COORD: NodeId = u32::MAX as NodeId;
+
+/// `src` value identifying a remote collective client on control frames.
+pub const CLIENT: NodeId = (u32::MAX - 1) as NodeId;
+
+// --- remote collective wire codes ---------------------------------------
+
+/// [`ValuesMsg::op`]: f32 sum ([`SumF32`]).
+pub const OP_CODE_SUM_F32: u8 = 0;
+/// [`ValuesMsg::op`]: u32 bitwise OR ([`OrU32`]).
+pub const OP_CODE_OR_U32: u8 = 1;
+/// [`ValuesMsg::op`]: f32 max ([`MaxF32`]).
+pub const OP_CODE_MAX_F32: u8 = 2;
+
+/// [`ValuesMsg::stage`]: one whole allreduce (scatter-reduce + final
+/// projection + allgather) — the common case.
+pub const VAL_STAGE_FULL: u8 = 0;
+/// [`ValuesMsg::stage`]: scatter-reduce half only; the worker answers
+/// with its fully-reduced bottom range ([`RES_STAGE_BOTTOM`]) so the
+/// client can apply an `allreduce_with_bottom` transform.
+pub const VAL_STAGE_DOWN: u8 = 1;
+/// [`ValuesMsg::stage`]: allgather half, fed with the client's
+/// transformed bottom values (one per up-set index).
+pub const VAL_STAGE_UP: u8 = 2;
+
+/// [`ResultMsg::stage`]: reduced values aligned with the lane's
+/// configured inbound set — a finished collective.
+pub const RES_STAGE_FINAL: u8 = 0;
+/// [`ResultMsg::stage`]: the lane's fully-reduced bottom range plus its
+/// down/up index sets (mid-collective; the client owes a
+/// [`VAL_STAGE_UP`] round).
+pub const RES_STAGE_BOTTOM: u8 = 1;
+
+/// Wire code for a reduce operator on the remote collective plane
+/// (`None` for operators without a remote encoding — the plane ships
+/// exactly the three ops the paper exercises).
+pub fn reduce_op_code<R: ReduceOp>() -> Option<u8> {
+    let t = TypeId::of::<R>();
+    if t == TypeId::of::<SumF32>() {
+        Some(OP_CODE_SUM_F32)
+    } else if t == TypeId::of::<OrU32>() {
+        Some(OP_CODE_OR_U32)
+    } else if t == TypeId::of::<MaxF32>() {
+        Some(OP_CODE_MAX_F32)
+    } else {
+        None
+    }
+}
+
+/// Serialized element width (bytes) for a remote op code — lets the
+/// serve relay size-check a round's payloads against the configured
+/// index counts before anything reaches a worker.
+pub fn op_code_width(op: u8) -> Option<usize> {
+    match op {
+        OP_CODE_SUM_F32 => Some(SumF32::WIDTH),
+        OP_CODE_OR_U32 => Some(OrU32::WIDTH),
+        OP_CODE_MAX_F32 => Some(MaxF32::WIDTH),
+        _ => None,
+    }
+}
 
 /// Largest accepted control payload (corrupt-header guard).
 const MAX_CTRL_PAYLOAD: usize = 64 << 20;
@@ -68,6 +136,79 @@ pub enum CtrlMsg {
     Failed { error: String },
     /// coordinator → worker: release the worker process.
     Shutdown,
+    /// client → coordinator → worker: one lane's sparsity pattern for
+    /// the app-agnostic generic collective engine (remote `configure`).
+    Configure(ConfigureMsg),
+    /// client → coordinator → worker: one lane's sparse values for one
+    /// collective round (remote `allreduce`).
+    Values(ValuesMsg),
+    /// worker → coordinator → client: one lane's round outcome.
+    Result(ResultMsg),
+}
+
+/// One lane's config-phase input on the remote collective plane: the
+/// index scatter of the paper's `configure(out, in)`, shipped over the
+/// existing control framing. The client streams one per lane; the
+/// coordinator rewrites `job` to a pool-unique id and forwards each to
+/// its worker, which builds a fresh protocol handle over the pool's
+/// long-lived data fabric.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConfigureMsg {
+    /// Collective config id (tags the CONFIG_DONE vote and every
+    /// VALUES/RESULT round; scopes the worker's data-plane message tags
+    /// to `job << 16` exactly like app jobs).
+    pub job: u32,
+    /// The logical lane this pattern belongs to (= physical worker on a
+    /// replication-1 pool).
+    pub lane: u32,
+    /// Allreduce index domain `[0, index_range)` the butterfly covers.
+    pub index_range: i64,
+    /// Sender threads for the worker's protocol handle.
+    pub send_threads: u32,
+    /// Indices this lane contributes (sorted).
+    pub outbound: Vec<i64>,
+    /// Indices this lane requests back (sorted).
+    pub inbound: Vec<i64>,
+}
+
+/// One lane's values for one remote collective round, aligned with its
+/// configured outbound set ([`VAL_STAGE_FULL`]/[`VAL_STAGE_DOWN`]) or
+/// its bottom up-set ([`VAL_STAGE_UP`]). `payload` is the
+/// [`crate::transport::wire::encode_values`] byte form of the values
+/// under the operator named by `op`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ValuesMsg {
+    pub job: u32,
+    /// Collective round counter within the config (client-assigned;
+    /// matches rounds to results).
+    pub seq: u32,
+    pub lane: u32,
+    /// Reduce operator ([`OP_CODE_SUM_F32`] | [`OP_CODE_OR_U32`] |
+    /// [`OP_CODE_MAX_F32`]).
+    pub op: u8,
+    /// [`VAL_STAGE_FULL`] | [`VAL_STAGE_DOWN`] | [`VAL_STAGE_UP`].
+    pub stage: u8,
+    pub payload: Vec<u8>,
+}
+
+/// One lane's outcome for one remote collective round. For
+/// [`RES_STAGE_FINAL`] the payload holds the reduced values aligned
+/// with the lane's inbound set; for [`RES_STAGE_BOTTOM`] it holds the
+/// fully-reduced bottom range, with `down_idx`/`up_idx` carrying the
+/// bottom index sets the client-side transform runs between.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResultMsg {
+    pub job: u32,
+    pub seq: u32,
+    pub lane: u32,
+    /// [`RES_STAGE_FINAL`] | [`RES_STAGE_BOTTOM`].
+    pub stage: u8,
+    /// Bottom stage only: the lane's fully-reduced bottom index range.
+    pub down_idx: Vec<i64>,
+    /// Bottom stage only: the indices whose transformed values the lane
+    /// must receive back for the allgather half.
+    pub up_idx: Vec<i64>,
+    pub payload: Vec<u8>,
 }
 
 /// Pool-level identity and topology: everything a worker needs to join
@@ -157,6 +298,9 @@ const OP_FAILED: u32 = 7;
 const OP_SHUTDOWN: u32 = 8;
 const OP_HEARTBEAT_ACK: u32 = 9;
 const OP_JOB: u32 = 10;
+const OP_CONFIGURE: u32 = 11;
+const OP_VALUES: u32 = 12;
+const OP_RESULT: u32 = 13;
 
 // --- body codec ----------------------------------------------------------
 
@@ -164,6 +308,9 @@ const OP_JOB: u32 = 10;
 struct Enc(Vec<u8>);
 
 impl Enc {
+    fn u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
     fn u32(&mut self, v: u32) {
         self.0.extend_from_slice(&v.to_le_bytes());
     }
@@ -198,6 +345,16 @@ impl Enc {
             self.f64(v);
         }
     }
+    fn i64s(&mut self, vs: &[i64]) {
+        self.u32(vs.len() as u32);
+        for &v in vs {
+            self.i64(v);
+        }
+    }
+    fn bytes(&mut self, b: &[u8]) {
+        self.u32(b.len() as u32);
+        self.0.extend_from_slice(b);
+    }
 }
 
 struct Dec<'a> {
@@ -220,6 +377,9 @@ impl<'a> Dec<'a> {
         let s = &self.buf[self.off..self.off + n];
         self.off += n;
         Ok(s)
+    }
+    fn u8(&mut self) -> std::io::Result<u8> {
+        Ok(self.take(1)?[0])
     }
     fn u32(&mut self) -> std::io::Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
@@ -249,6 +409,14 @@ impl<'a> Dec<'a> {
     fn f64s(&mut self) -> std::io::Result<Vec<f64>> {
         let n = self.u32()? as usize;
         (0..n).map(|_| self.f64()).collect()
+    }
+    fn i64s(&mut self) -> std::io::Result<Vec<i64>> {
+        let n = self.u32()? as usize;
+        (0..n).map(|_| self.i64()).collect()
+    }
+    fn bytes(&mut self) -> std::io::Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        Ok(self.take(n)?.to_vec())
     }
     fn finish(self) -> std::io::Result<()> {
         if self.off != self.buf.len() {
@@ -326,6 +494,34 @@ pub fn encode(msg: &CtrlMsg) -> (u32, Vec<u8>) {
             OP_FAILED
         }
         CtrlMsg::Shutdown => OP_SHUTDOWN,
+        CtrlMsg::Configure(c) => {
+            e.u32(c.job);
+            e.u32(c.lane);
+            e.i64(c.index_range);
+            e.u32(c.send_threads);
+            e.i64s(&c.outbound);
+            e.i64s(&c.inbound);
+            OP_CONFIGURE
+        }
+        CtrlMsg::Values(v) => {
+            e.u32(v.job);
+            e.u32(v.seq);
+            e.u32(v.lane);
+            e.u8(v.op);
+            e.u8(v.stage);
+            e.bytes(&v.payload);
+            OP_VALUES
+        }
+        CtrlMsg::Result(r) => {
+            e.u32(r.job);
+            e.u32(r.seq);
+            e.u32(r.lane);
+            e.u8(r.stage);
+            e.i64s(&r.down_idx);
+            e.i64s(&r.up_idx);
+            e.bytes(&r.payload);
+            OP_RESULT
+        }
     };
     (op, e.0)
 }
@@ -376,6 +572,46 @@ pub fn decode(opcode: u32, payload: &[u8]) -> std::io::Result<CtrlMsg> {
         }),
         OP_FAILED => CtrlMsg::Failed { error: d.str()? },
         OP_SHUTDOWN => CtrlMsg::Shutdown,
+        OP_CONFIGURE => CtrlMsg::Configure(ConfigureMsg {
+            job: d.u32()?,
+            lane: d.u32()?,
+            index_range: d.i64()?,
+            send_threads: d.u32()?,
+            outbound: d.i64s()?,
+            inbound: d.i64s()?,
+        }),
+        OP_VALUES => {
+            let v = ValuesMsg {
+                job: d.u32()?,
+                seq: d.u32()?,
+                lane: d.u32()?,
+                op: d.u8()?,
+                stage: d.u8()?,
+                payload: d.bytes()?,
+            };
+            if v.op > OP_CODE_MAX_F32 {
+                return Err(bad(format!("unknown reduce-op code {}", v.op)));
+            }
+            if v.stage > VAL_STAGE_UP {
+                return Err(bad(format!("unknown values stage {}", v.stage)));
+            }
+            CtrlMsg::Values(v)
+        }
+        OP_RESULT => {
+            let r = ResultMsg {
+                job: d.u32()?,
+                seq: d.u32()?,
+                lane: d.u32()?,
+                stage: d.u8()?,
+                down_idx: d.i64s()?,
+                up_idx: d.i64s()?,
+                payload: d.bytes()?,
+            };
+            if r.stage > RES_STAGE_BOTTOM {
+                return Err(bad(format!("unknown result stage {}", r.stage)));
+            }
+            CtrlMsg::Result(r)
+        }
         other => return Err(bad(format!("unknown control opcode {other}"))),
     };
     d.finish()?;
@@ -447,6 +683,40 @@ mod tests {
         }
     }
 
+    fn sample_configure() -> ConfigureMsg {
+        ConfigureMsg {
+            job: 5,
+            lane: 2,
+            index_range: 1 << 33,
+            send_threads: 4,
+            outbound: vec![0, 7, 1 << 32],
+            inbound: vec![7],
+        }
+    }
+
+    fn sample_values() -> ValuesMsg {
+        ValuesMsg {
+            job: 5,
+            seq: 3,
+            lane: 2,
+            op: OP_CODE_SUM_F32,
+            stage: VAL_STAGE_FULL,
+            payload: vec![0, 0, 128, 63, 0, 0, 0, 64],
+        }
+    }
+
+    fn sample_result() -> ResultMsg {
+        ResultMsg {
+            job: 5,
+            seq: 3,
+            lane: 2,
+            stage: RES_STAGE_BOTTOM,
+            down_idx: vec![0, 7],
+            up_idx: vec![7, 9, 11],
+            payload: vec![1, 2, 3, 4, 5, 6, 7, 8],
+        }
+    }
+
     fn all_variants() -> Vec<CtrlMsg> {
         vec![
             CtrlMsg::Join { data_addr: "10.0.0.7:41234".into() },
@@ -467,6 +737,9 @@ mod tests {
             }),
             CtrlMsg::Failed { error: "peer 3 timed out".into() },
             CtrlMsg::Shutdown,
+            CtrlMsg::Configure(sample_configure()),
+            CtrlMsg::Values(sample_values()),
+            CtrlMsg::Result(sample_result()),
         ]
     }
 
@@ -480,14 +753,57 @@ mod tests {
 
     #[test]
     fn truncated_and_trailing_rejected() {
-        for sample in [CtrlMsg::Plan(sample_plan()), CtrlMsg::Job(sample_job())] {
+        for sample in [
+            CtrlMsg::Plan(sample_plan()),
+            CtrlMsg::Job(sample_job()),
+            CtrlMsg::Configure(sample_configure()),
+            CtrlMsg::Values(sample_values()),
+            CtrlMsg::Result(sample_result()),
+        ] {
             let (op, payload) = encode(&sample);
-            assert!(decode(op, &payload[..payload.len() - 1]).is_err());
+            assert!(decode(op, &payload[..payload.len() - 1]).is_err(), "truncated {op}");
             let mut extra = payload.clone();
             extra.push(0);
-            assert!(decode(op, &extra).is_err());
+            assert!(decode(op, &extra).is_err(), "trailing {op}");
         }
         assert!(decode(99, &[]).is_err());
+    }
+
+    /// Satellite: remote-plane payload corruption is an error, not a
+    /// panic or a silently wrong collective — unknown op/stage bytes
+    /// and a length prefix lying about the index-set size are all
+    /// rejected at decode time, matching the CtrlMsg corruption suite.
+    #[test]
+    fn remote_plane_corruption_rejected() {
+        // op byte past the known operators
+        let (op, mut payload) = encode(&CtrlMsg::Values(sample_values()));
+        payload[12] = OP_CODE_MAX_F32 + 1;
+        let err = decode(op, &payload).unwrap_err();
+        assert!(err.to_string().contains("reduce-op"), "got: {err}");
+        // stage byte past the known stages
+        let (op, mut payload) = encode(&CtrlMsg::Values(sample_values()));
+        payload[13] = VAL_STAGE_UP + 1;
+        let err = decode(op, &payload).unwrap_err();
+        assert!(err.to_string().contains("stage"), "got: {err}");
+        // result stage byte past the known stages
+        let (op, mut payload) = encode(&CtrlMsg::Result(sample_result()));
+        payload[12] = RES_STAGE_BOTTOM + 1;
+        let err = decode(op, &payload).unwrap_err();
+        assert!(err.to_string().contains("stage"), "got: {err}");
+        // length prefix of the outbound set lying about the element count
+        let (op, mut payload) = encode(&CtrlMsg::Configure(sample_configure()));
+        // layout: job(4) lane(4) index_range(8) send_threads(4) then
+        // outbound len at offset 20
+        payload[20] = 0xFF;
+        payload[21] = 0xFF;
+        assert!(decode(op, &payload).is_err(), "lying length prefix must be rejected");
+    }
+
+    #[test]
+    fn reduce_op_codes_cover_the_shipped_operators() {
+        assert_eq!(reduce_op_code::<SumF32>(), Some(OP_CODE_SUM_F32));
+        assert_eq!(reduce_op_code::<OrU32>(), Some(OP_CODE_OR_U32));
+        assert_eq!(reduce_op_code::<MaxF32>(), Some(OP_CODE_MAX_F32));
     }
 
     /// Satellite: every `CtrlMsg` variant survives encode → TCP → decode

@@ -1,0 +1,383 @@
+//! Remote collective ingress: serve client sessions against a live
+//! worker pool (`sar serve`).
+//!
+//! The serve plane is what turns the pool from "runs the three baked-in
+//! apps" into a *service*: a client process ([`crate::comm::remote`])
+//! dials the pool's client port, streams its sparsity pattern and then
+//! per-round sparse values, and reduced results stream back — the
+//! paper's primitive offered over the wire, app-agnostic.
+//!
+//! ```text
+//!  client                    coordinator (this relay)        workers
+//!    | --- CONFIGURE ×M ------> |  rewrite job id, scatter --->|  config phase
+//!    | <-- CONFIG_DONE -------- |<-- CONFIG_DONE ×M barrier ---|  (data plane)
+//!    | --- VALUES ×M ---------> |  forward lane-wise --------->|  reduce
+//!    | <-- RESULT ×M ---------- |<-- RESULT ×M ----------------|
+//!    |        (repeat VALUES/RESULT; re-CONFIGURE at will)     |
+//! ```
+//!
+//! One client is served at a time (collectives occupy the whole pool);
+//! the ingress stays sparse — only the client's own index sets and
+//! values cross it, never dense vectors (cf. partition-aware message
+//! reduction, Yan et al. 1503.00626). The relay is strictly
+//! request-response AND batch-buffered: a config's CONFIGUREs and a
+//! round's VALUES are collected into a complete distinct-lane batch —
+//! validated (lane range, duplicates, payload sizes against the
+//! configured index counts) — before ANYTHING is forwarded to a
+//! worker, then the round's M RESULTs are drained back to the client.
+//! A half-streamed or malformed batch therefore ends only the client's
+//! session; no worker ever enters a collective its peers won't join.
+//! The UP half of a bottom collective is validated too: the relay
+//! records each lane's up-set size from the Bottom RESULTs it relays,
+//! so a mis-sized allgather payload is rejected at the ingress.
+
+use super::launch::Session;
+use super::proto::{
+    op_code_width, recv_ctrl, send_ctrl, ConfigureMsg, CtrlMsg, ValuesMsg, WorkerPlan, COORD,
+    RES_STAGE_BOTTOM, VAL_STAGE_DOWN, VAL_STAGE_UP,
+};
+use anyhow::{Context, Result};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Mutex;
+
+/// Serve collective clients against the pool, one at a time: accept a
+/// connection, answer its configs and rounds until it disconnects, then
+/// accept the next. `max_sessions` bounds how many clients are served
+/// (`None` = until the listener fails); returns the number served.
+///
+/// A client protocol violation ends that client's session (with a
+/// FAILED answer) but keeps the pool serving; a *pool* failure (dead
+/// worker, barrier timeout) is returned — without replication there is
+/// no way to finish any collective, so the operator must relaunch.
+pub fn serve_clients(
+    session: &mut Session,
+    listener: &TcpListener,
+    max_sessions: Option<usize>,
+) -> Result<usize> {
+    let mut served = 0usize;
+    while max_sessions.map(|n| served < n).unwrap_or(true) {
+        let (stream, peer) = listener.accept().context("accepting collective client")?;
+        // Best effort: a socket that dies between accept and setsockopt
+        // is a per-client event, surfaced at the handshake send.
+        let _ = stream.set_nodelay(true);
+        log::info!("collective client connected from {peer}");
+        let outcome = serve_one_client(session, stream);
+        session.collective_end();
+        served += 1;
+        match outcome {
+            Ok(()) => log::info!("collective client {peer} done"),
+            Err(ClientEnd::Client(e)) => {
+                log::warn!("client {peer} ended with a protocol error: {e:#}");
+            }
+            Err(ClientEnd::Pool(e)) => {
+                return Err(e.context(format!("pool failed serving client {peer}")));
+            }
+        }
+    }
+    Ok(served)
+}
+
+/// Why a client session ended early: the client misbehaved (pool still
+/// healthy) or the pool itself failed (fatal for the serve loop).
+enum ClientEnd {
+    Client(anyhow::Error),
+    Pool(anyhow::Error),
+}
+
+/// Send FAILED to the client (best effort) and record a client-side end.
+fn client_fail(wr: &Mutex<TcpStream>, msg: String) -> ClientEnd {
+    let _ = send_ctrl(wr, COORD, &CtrlMsg::Failed { error: msg.clone() });
+    ClientEnd::Client(anyhow::anyhow!(msg))
+}
+
+/// Send FAILED to the client (best effort) and record a pool failure.
+fn pool_fail(wr: &Mutex<TcpStream>, e: anyhow::Error) -> ClientEnd {
+    let _ = send_ctrl(wr, COORD, &CtrlMsg::Failed { error: format!("{e:#}") });
+    ClientEnd::Pool(e)
+}
+
+fn serve_one_client(session: &mut Session, stream: TcpStream) -> Result<(), ClientEnd> {
+    let world = session.world();
+    let plan = {
+        let opts = session.launch_opts();
+        WorkerPlan {
+            node: u32::MAX, // "you are a client": shape only, no identity
+            world: world as u32,
+            replication: opts.replication as u32,
+            degrees: opts.degrees.iter().map(|&k| k as u32).collect(),
+            addrs: Vec::new(),
+            data_timeout_ms: opts.data_timeout.as_millis() as u64,
+        }
+    };
+    let mut rd = stream
+        .try_clone()
+        .map_err(|e| ClientEnd::Client(anyhow::Error::from(e).context("cloning client stream")))?;
+    let wr = Mutex::new(stream);
+    send_ctrl(&wr, COORD, &CtrlMsg::Plan(plan)).map_err(|e| {
+        ClientEnd::Client(anyhow::Error::from(e).context("sending the pool-shape handshake"))
+    })?;
+
+    // Per-config state: the client's own config counter maps to a
+    // pool-unique job id (pools interleave collectives with app jobs,
+    // so client counters cannot tag worker messages directly). Batches
+    // are buffered lane-slotted and forwarded only once COMPLETE, so a
+    // client that streams half a batch and dies — or repeats a lane —
+    // never strands a worker inside a collective its peers won't join.
+    let mut client_job: Option<u32> = None;
+    let mut pool_job: Option<u32> = None;
+    // The live config's per-lane outbound index counts (payload
+    // size-check for FULL/DOWN rounds).
+    let mut out_lens: Vec<usize> = Vec::new();
+    let mut configured = false;
+    let mut cfg_batch: Vec<Option<ConfigureMsg>> = Vec::new();
+    // Per-round state: one VALUES per lane, all same (seq, stage, op) —
+    // the op is part of the key so a mixed-operator round can never
+    // reach the workers (all three ops share the 4-byte width, so size
+    // checks alone would not catch it).
+    let mut round: Option<(u32, u8, u8)> = None;
+    let mut val_batch: Vec<Option<ValuesMsg>> = Vec::new();
+    // After a DOWN half the client owes the matching UP half; the relay
+    // records each lane's up-set size from the Bottom RESULTs so even a
+    // hand-rolled client cannot feed the allgather a mis-sized payload.
+    let mut pending_up: Option<(u32, u8)> = None;
+    let mut up_lens: Vec<usize> = vec![0; world];
+
+    loop {
+        let msg = match recv_ctrl(&mut rd) {
+            Ok((_, m)) => m,
+            // A frame that ARRIVED but doesn't decode (unknown opcode,
+            // oversized payload, truncated body) is a protocol
+            // violation — answer FAILED on the still-writable half so
+            // the client sees the cause instead of a bare reset.
+            Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
+                return Err(client_fail(&wr, format!("undecodable client frame: {e}")));
+            }
+            // Client gone (EOF/reset): the session is over.
+            Err(_) => return Ok(()),
+        };
+        match msg {
+            CtrlMsg::Configure(c) => {
+                if round.is_some() {
+                    return Err(client_fail(
+                        &wr,
+                        "CONFIGURE mid-round: finish the in-flight allreduce first".to_string(),
+                    ));
+                }
+                if client_job != Some(c.job) {
+                    // New sparsity pattern: start a fresh batch (a
+                    // half-streamed previous batch is simply discarded —
+                    // nothing of it ever reached a worker). An abandoned
+                    // bottom collective is abandoned too: workers
+                    // rebuild their handles on CONFIGURE.
+                    client_job = Some(c.job);
+                    pool_job = None;
+                    configured = false;
+                    pending_up = None;
+                    cfg_batch = (0..world).map(|_| None).collect();
+                }
+                let lane = c.lane as usize;
+                if lane >= world {
+                    return Err(client_fail(
+                        &wr,
+                        format!("CONFIGURE lane {} out of range ({world} lanes)", c.lane),
+                    ));
+                }
+                if c.index_range < 1 {
+                    return Err(client_fail(
+                        &wr,
+                        format!("CONFIGURE index range must be >= 1 (got {})", c.index_range),
+                    ));
+                }
+                if cfg_batch[lane].replace(c).is_some() {
+                    return Err(client_fail(
+                        &wr,
+                        format!("duplicate CONFIGURE for lane {lane}"),
+                    ));
+                }
+                if cfg_batch.iter().all(|s| s.is_some()) {
+                    // Complete distinct-lane batch: only now touch the
+                    // pool.
+                    let pj = session.collective_begin().map_err(|e| pool_fail(&wr, e))?;
+                    pool_job = Some(pj);
+                    out_lens = cfg_batch
+                        .iter()
+                        .map(|s| s.as_ref().expect("full batch").outbound.len())
+                        .collect();
+                    for slot in cfg_batch.iter_mut() {
+                        let mut m = slot.take().expect("full batch");
+                        m.job = pj;
+                        session.collective_configure(m).map_err(|e| pool_fail(&wr, e))?;
+                    }
+                    session.collective_config_barrier().map_err(|e| pool_fail(&wr, e))?;
+                    configured = true;
+                    send_ctrl(&wr, COORD, &CtrlMsg::ConfigDone { job: pj }).map_err(|e| {
+                        ClientEnd::Client(
+                            anyhow::Error::from(e).context("acking the client's config"),
+                        )
+                    })?;
+                }
+            }
+            CtrlMsg::Values(v) => {
+                if !configured || Some(v.job) != pool_job {
+                    return Err(client_fail(
+                        &wr,
+                        format!(
+                            "VALUES for collective {} but the live config is {:?}",
+                            v.job, pool_job
+                        ),
+                    ));
+                }
+                match round {
+                    None => {
+                        round = Some((v.seq, v.stage, v.op));
+                        val_batch = (0..world).map(|_| None).collect();
+                    }
+                    Some((s, st, op)) if s == v.seq && st == v.stage && op == v.op => {}
+                    Some((s, st, op)) => {
+                        return Err(client_fail(
+                            &wr,
+                            format!(
+                                "VALUES round ({}, stage {}, op {}) while round ({s}, \
+                                 stage {st}, op {op}) is incomplete",
+                                v.seq, v.stage, v.op
+                            ),
+                        ));
+                    }
+                }
+                let lane = v.lane as usize;
+                if lane >= world {
+                    return Err(client_fail(
+                        &wr,
+                        format!("VALUES lane {} out of range ({world} lanes)", v.lane),
+                    ));
+                }
+                let Some(width) = op_code_width(v.op) else {
+                    return Err(client_fail(&wr, format!("unknown reduce-op code {}", v.op)));
+                };
+                // Stage sequencing + payload sizing: FULL/DOWN payloads
+                // must hold exactly the configured outbound count and
+                // may only start when no bottom is half-done; an UP half
+                // must complete the pending DOWN (same seq and op) and
+                // match the up-set sizes recorded from its Bottom
+                // RESULTs.
+                match (v.stage, pending_up) {
+                    (VAL_STAGE_UP, Some((s, op))) if v.seq == s && v.op == op => {
+                        if v.payload.len() != up_lens[lane] * width {
+                            return Err(client_fail(
+                                &wr,
+                                format!(
+                                    "lane {lane}: {} payload bytes but the bottom up set \
+                                     has {} indices (×{width} bytes)",
+                                    v.payload.len(),
+                                    up_lens[lane]
+                                ),
+                            ));
+                        }
+                    }
+                    (VAL_STAGE_UP, Some((s, op))) => {
+                        return Err(client_fail(
+                            &wr,
+                            format!(
+                                "UP half (seq {}, op {}) does not complete the pending \
+                                 DOWN half (seq {s}, op {op})",
+                                v.seq, v.op
+                            ),
+                        ));
+                    }
+                    (VAL_STAGE_UP, None) => {
+                        return Err(client_fail(
+                            &wr,
+                            "UP half without a preceding DOWN half".to_string(),
+                        ));
+                    }
+                    (_, Some((s, _))) => {
+                        return Err(client_fail(
+                            &wr,
+                            format!(
+                                "a DOWN half (seq {s}) awaits its UP half; reconfigure to \
+                                 abandon it"
+                            ),
+                        ));
+                    }
+                    (_, None) => {
+                        if v.payload.len() != out_lens[lane] * width {
+                            return Err(client_fail(
+                                &wr,
+                                format!(
+                                    "lane {lane}: {} payload bytes but the configured \
+                                     outbound set has {} indices (×{width} bytes)",
+                                    v.payload.len(),
+                                    out_lens[lane]
+                                ),
+                            ));
+                        }
+                    }
+                }
+                if val_batch[lane].replace(v).is_some() {
+                    return Err(client_fail(&wr, format!("duplicate VALUES for lane {lane}")));
+                }
+                if val_batch.iter().all(|s| s.is_some()) {
+                    // Complete round: forward lane-wise, then drain the
+                    // round's results back (any lane order — the client
+                    // buffers).
+                    let (seq, stage, op) = round.expect("round in flight");
+                    for slot in val_batch.iter_mut() {
+                        let m = slot.take().expect("full batch");
+                        session.collective_values(m).map_err(|e| pool_fail(&wr, e))?;
+                    }
+                    for _ in 0..world {
+                        let r =
+                            session.collective_next_result().map_err(|e| pool_fail(&wr, e))?;
+                        if r.stage == RES_STAGE_BOTTOM {
+                            if let Some(l) = up_lens.get_mut(r.lane as usize) {
+                                *l = r.up_idx.len();
+                            }
+                        }
+                        send_ctrl(&wr, COORD, &CtrlMsg::Result(r)).map_err(|e| {
+                            ClientEnd::Client(
+                                anyhow::Error::from(e).context("relaying RESULT to client"),
+                            )
+                        })?;
+                    }
+                    pending_up =
+                        if stage == VAL_STAGE_DOWN { Some((seq, op)) } else { None };
+                    round = None;
+                }
+            }
+            // A polite goodbye (the client API sends none today, but a
+            // raw client may).
+            CtrlMsg::Shutdown => return Ok(()),
+            other => {
+                return Err(client_fail(&wr, format!("unexpected client message {other:?}")));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The end-to-end serve-plane behaviour (real workers, real client)
+    // lives in tests/remote.rs as tier-2 `mp_` tests; here we only pin
+    // the pure pieces.
+
+    #[test]
+    fn client_fail_is_client_end() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let s = TcpStream::connect(addr).unwrap();
+            // Keep the socket open long enough for the send to land.
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            drop(s);
+        });
+        let (s, _) = listener.accept().unwrap();
+        let wr = Mutex::new(s);
+        match client_fail(&wr, "bad client".to_string()) {
+            ClientEnd::Client(e) => assert!(format!("{e}").contains("bad client")),
+            ClientEnd::Pool(_) => panic!("client_fail must not be a pool failure"),
+        }
+        client.join().unwrap();
+    }
+}

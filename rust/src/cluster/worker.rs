@@ -42,7 +42,11 @@
 //! same scheme the in-process drivers use — so no graph bytes cross the
 //! control plane in either path.
 
-use super::proto::{recv_ctrl, send_ctrl, CtrlMsg, JobPlan, WorkerPlan, WorkerReport};
+use super::proto::{
+    recv_ctrl, send_ctrl, ConfigureMsg, CtrlMsg, JobPlan, ResultMsg, ValuesMsg, WorkerPlan,
+    WorkerReport, OP_CODE_MAX_F32, OP_CODE_OR_U32, OP_CODE_SUM_F32, RES_STAGE_BOTTOM,
+    RES_STAGE_FINAL, VAL_STAGE_DOWN, VAL_STAGE_FULL, VAL_STAGE_UP,
+};
 use crate::allreduce::NodeHandle;
 use crate::apps::diameter::{DiameterConfig, DiameterNode};
 use crate::apps::pagerank::{self, PageRankShards};
@@ -52,10 +56,10 @@ use crate::config::validate_world;
 use crate::fault::{ReplicaMap, ReplicatedHandle};
 use crate::graph::{load_shard, Csr, DatasetPreset, DatasetSpec, ShardManifest};
 use crate::metrics::RunMetrics;
-use crate::sparse::{IndexSet, OrU32, SumF32};
+use crate::sparse::{IndexSet, MaxF32, OrU32, ReduceOp, SumF32};
 use crate::topology::Butterfly;
 use crate::transport::{
-    advertised_addr, connect_with_retry, RetryPolicy, TcpNet, Transport, TransportError,
+    advertised_addr, connect_with_retry, wire, RetryPolicy, TcpNet, Transport, TransportError,
 };
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
@@ -447,12 +451,17 @@ fn serve_pool(
     let net = TcpNet::from_addrs(node, listener, addrs).context("building data fabric")?;
     let timeout = Duration::from_millis(plan.data_timeout_ms.max(1));
 
+    let mut pending: Option<CtrlMsg> = None;
     loop {
-        let msg = match ctrl_msgs.recv() {
-            Ok(Ok(msg)) => msg,
-            // Coordinator gone while idle between jobs: a clean release,
-            // same as SHUTDOWN (crashed launches must not strand pools).
-            Ok(Err(_)) | Err(_) => return Ok(()),
+        let msg = match pending.take() {
+            Some(m) => m,
+            None => match ctrl_msgs.recv() {
+                Ok(Ok(msg)) => msg,
+                // Coordinator gone while idle between jobs: a clean
+                // release, same as SHUTDOWN (crashed launches must not
+                // strand pools).
+                Ok(Err(_)) | Err(_) => return Ok(()),
+            },
         };
         match msg {
             CtrlMsg::Job(job) => {
@@ -477,9 +486,169 @@ fn serve_pool(
                 )?;
                 send_ctrl(ctrl_wr, node, &CtrlMsg::Report(report)).context("sending REPORT")?;
             }
+            CtrlMsg::Configure(c) => {
+                // App-agnostic generic collective engine: a remote
+                // client streamed a sparsity pattern; serve its rounds
+                // until a non-collective message takes over.
+                match serve_generic(
+                    node,
+                    replication,
+                    &degrees,
+                    c,
+                    net.clone(),
+                    timeout,
+                    ctrl_wr,
+                    ctrl_msgs,
+                )? {
+                    Some(next) => pending = Some(next),
+                    None => return Ok(()),
+                }
+            }
             CtrlMsg::Shutdown => return Ok(()),
             other => log::warn!("unexpected control message while idle: {other:?}"),
         }
+    }
+}
+
+/// Serve the app-agnostic generic collective engine for one remote
+/// config (and any reconfigures that follow it): build a protocol
+/// handle for the streamed sparsity pattern over the pool's long-lived
+/// fabric, vote CONFIG_DONE, then answer VALUES rounds with RESULTs —
+/// no `JobPlan` app tag anywhere, so ANY client workload runs
+/// distributed without touching this file. Returns the first
+/// non-collective control message (handed back to the pool loop), or
+/// `None` when the control channel died.
+#[allow(clippy::too_many_arguments)]
+fn serve_generic(
+    node: usize,
+    replication: usize,
+    degrees: &[usize],
+    first: ConfigureMsg,
+    net: Arc<TcpNet>,
+    timeout: Duration,
+    ctrl_wr: &Mutex<TcpStream>,
+    ctrl_msgs: &Receiver<std::io::Result<CtrlMsg>>,
+) -> Result<Option<CtrlMsg>> {
+    if replication > 1 {
+        bail!(
+            "the generic collective engine runs on replication-1 pools \
+             (this pool replicates ×{replication})"
+        );
+    }
+    let mut cfg = first;
+    loop {
+        if cfg.lane as usize != node {
+            bail!("CONFIGURE for lane {} delivered to worker {node}", cfg.lane);
+        }
+        if cfg.index_range < 1 {
+            bail!("CONFIGURE index range must be >= 1 (got {})", cfg.index_range);
+        }
+        let topo = Butterfly::new(degrees.to_vec(), cfg.index_range);
+        let mut handle =
+            NodeHandle::new(topo, node, net.clone(), cfg.send_threads.max(1) as usize);
+        handle.set_timeout(timeout);
+        // Same tag scoping as app jobs: a late packet from the previous
+        // config (or job) must not alias this config's tags.
+        handle.set_seq_base(cfg.job.wrapping_shl(16));
+        let out_len = cfg.outbound.len();
+        handle
+            .config(IndexSet::from_unsorted(cfg.outbound), IndexSet::from_unsorted(cfg.inbound))
+            .with_context(|| format!("generic config {} phase", cfg.job))?;
+        send_ctrl(ctrl_wr, node, &CtrlMsg::ConfigDone { job: cfg.job })
+            .context("sending CONFIG_DONE")?;
+        log::info!(
+            "generic collective config {} ready ({out_len} outbound indices, range {})",
+            cfg.job,
+            cfg.index_range
+        );
+        loop {
+            let msg = match ctrl_msgs.recv() {
+                Ok(Ok(m)) => m,
+                Ok(Err(_)) | Err(_) => return Ok(None),
+            };
+            match msg {
+                CtrlMsg::Values(v) if v.job == cfg.job => {
+                    let r = generic_round(&mut handle, &v, out_len).with_context(|| {
+                        format!("collective round {} (stage {})", v.seq, v.stage)
+                    })?;
+                    send_ctrl(ctrl_wr, node, &CtrlMsg::Result(r)).context("sending RESULT")?;
+                }
+                CtrlMsg::Values(v) => {
+                    bail!("VALUES for collective {} while serving {}", v.job, cfg.job)
+                }
+                // New sparsity pattern (e.g. SGD's per-step feature
+                // sets): rebuild the handle, keep the fabric.
+                CtrlMsg::Configure(next) => {
+                    cfg = next;
+                    break;
+                }
+                other => return Ok(Some(other)),
+            }
+        }
+    }
+}
+
+/// One generic collective round, dispatched by the wire op code — the
+/// single point where the remote plane's three operators funnel into
+/// the protocol's generic `reduce::<R>` path.
+fn generic_round(
+    handle: &mut NodeHandle<TcpNet>,
+    v: &ValuesMsg,
+    out_len: usize,
+) -> Result<ResultMsg> {
+    match v.op {
+        OP_CODE_SUM_F32 => typed_round::<SumF32>(handle, v, out_len),
+        OP_CODE_OR_U32 => typed_round::<OrU32>(handle, v, out_len),
+        OP_CODE_MAX_F32 => typed_round::<MaxF32>(handle, v, out_len),
+        other => bail!("unknown reduce-op code {other}"),
+    }
+}
+
+fn typed_round<R: ReduceOp>(
+    handle: &mut NodeHandle<TcpNet>,
+    v: &ValuesMsg,
+    out_len: usize,
+) -> Result<ResultMsg> {
+    let vals = wire::decode_values::<R>(&v.payload).context("decoding round values")?;
+    let base = ResultMsg {
+        job: v.job,
+        seq: v.seq,
+        lane: v.lane,
+        stage: RES_STAGE_FINAL,
+        down_idx: Vec::new(),
+        up_idx: Vec::new(),
+        payload: Vec::new(),
+    };
+    match v.stage {
+        VAL_STAGE_FULL => {
+            if vals.len() != out_len {
+                bail!("{} values but the configured outbound set has {out_len}", vals.len());
+            }
+            let out = handle.reduce::<R>(vals).context("reduce")?;
+            Ok(ResultMsg { payload: wire::encode_values::<R>(&out), ..base })
+        }
+        VAL_STAGE_DOWN => {
+            if vals.len() != out_len {
+                bail!("{} values but the configured outbound set has {out_len}", vals.len());
+            }
+            let bottom = handle.reduce_down_half::<R>(vals).context("scatter-reduce half")?;
+            Ok(ResultMsg {
+                stage: RES_STAGE_BOTTOM,
+                down_idx: handle.protocol().bottom_down_set().as_slice().to_vec(),
+                up_idx: handle.protocol().bottom_up_set().as_slice().to_vec(),
+                payload: wire::encode_values::<R>(&bottom),
+                ..base
+            })
+        }
+        VAL_STAGE_UP => {
+            let want = handle.protocol().bottom_up_set().len();
+            if vals.len() != want {
+                bail!("{} bottom values but the up set has {want}", vals.len());
+            }
+            let out = handle.reduce_up_half::<R>(vals).context("allgather half")?;
+            Ok(ResultMsg { payload: wire::encode_values::<R>(&out), ..base })
+        }
+        other => bail!("unknown collective stage {other}"),
     }
 }
 

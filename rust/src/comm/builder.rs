@@ -2,6 +2,7 @@
 //! or run jobs under any execution mode.
 
 use super::job::{JobOutcome, JobSpec};
+use super::remote::RemoteSession;
 use super::session::{PoolBackend, Session};
 use super::{run, ExecMode};
 use crate::config::validate_world;
@@ -46,6 +47,7 @@ pub struct CommBuilder {
     bind: String,
     worker_bin: Option<PathBuf>,
     delay: Option<(CostModel, u64, f64)>,
+    pool: Option<String>,
 }
 
 impl CommBuilder {
@@ -61,6 +63,7 @@ impl CommBuilder {
             bind: "127.0.0.1:0".to_string(),
             worker_bin: None,
             delay: None,
+            pool: None,
         }
     }
 
@@ -90,6 +93,15 @@ impl CommBuilder {
     /// defaults to `$SAR_BIN` / the current executable).
     pub fn worker_binary(mut self, bin: PathBuf) -> Self {
         self.worker_bin = Some(bin);
+        self
+    }
+
+    /// Connect to a separately launched worker pool (`sar serve`'s
+    /// client address) instead of spawning one: the session's
+    /// `configure`/`allreduce` run remotely against the pool's generic
+    /// collective engine. Implies [`ExecMode::MultiProcess`].
+    pub fn pool(mut self, addr: impl Into<String>) -> Self {
+        self.pool = Some(addr.into());
         self
     }
 
@@ -129,6 +141,20 @@ impl CommBuilder {
         if self.delay.is_some() && self.mode != ExecMode::Threaded {
             bail!("cost-model delay injection needs the threaded mode");
         }
+        if self.pool.is_some() {
+            if self.mode != ExecMode::MultiProcess {
+                bail!(
+                    "a pool address connects to a remote worker pool; it needs the \
+                     multi-process mode (mp)"
+                );
+            }
+            if self.replication > 1 {
+                bail!(
+                    "a pool's replication is fixed when it is launched; drop the \
+                     client-side replication"
+                );
+            }
+        }
         Ok(())
     }
 
@@ -159,9 +185,12 @@ impl CommBuilder {
 
     /// Open the communicator session. For the in-process modes
     /// `index_range` is the allreduce index domain `[0, index_range)`
-    /// the session's butterfly covers; a multi-process pool ignores it
-    /// (each job descriptor carries its own domain) — the pool's
-    /// workers are spawned now and JOIN before this returns.
+    /// the session's butterfly covers; a locally spawned multi-process
+    /// pool ignores it (each job descriptor carries its own domain) —
+    /// the pool's workers are spawned now and JOIN before this returns.
+    /// With a [`CommBuilder::pool`] address the session instead
+    /// connects to the `sar serve`d pool and the raw two-phase
+    /// lifecycle runs remotely over `index_range`.
     pub fn build(self, index_range: i64) -> Result<Session> {
         self.validate()?;
         match self.mode {
@@ -172,7 +201,29 @@ impl CommBuilder {
                 index_range,
                 self.delay,
             ),
-            ExecMode::MultiProcess => self.build_pool(Vec::new()),
+            ExecMode::MultiProcess => match &self.pool {
+                Some(addr) => {
+                    if index_range < 1 {
+                        bail!("index range must be >= 1 (got {index_range})");
+                    }
+                    let remote = RemoteSession::connect(addr, self.send_threads)?;
+                    if remote.degrees() != self.degrees.as_slice() {
+                        bail!(
+                            "pool at {addr} runs schedule {:?} but this communicator \
+                             wants {:?} — pass degrees matching the pool",
+                            remote.degrees(),
+                            self.degrees
+                        );
+                    }
+                    Ok(Session::new_remote(
+                        self.degrees,
+                        self.send_threads,
+                        index_range,
+                        remote,
+                    ))
+                }
+                None => self.build_pool(Vec::new()),
+            },
         }
     }
 
@@ -181,11 +232,14 @@ impl CommBuilder {
     /// job's prepared dataset; a multi-process submit spawns a worker
     /// pool — validated against THIS job (schedule, shard dir) before
     /// any process is forked — ships the job descriptor, and shuts the
-    /// pool down after the report.
+    /// pool down after the report. With a [`CommBuilder::pool`] address
+    /// no job descriptor crosses the wire at all: the job's driver runs
+    /// here and its collectives run remotely, so even apps the pool has
+    /// never heard of execute distributed.
     pub fn submit(&self, spec: &JobSpec) -> Result<JobOutcome> {
         spec.validate()?;
         match self.mode {
-            ExecMode::MultiProcess => {
+            ExecMode::MultiProcess if self.pool.is_none() => {
                 let me = self.clone();
                 me.validate()?;
                 let mut sess = me.build_pool(vec![spec.clone()])?;
@@ -215,5 +269,20 @@ mod tests {
         assert!(format!("{err:#}").contains("threaded"), "got {err:#}");
         // in-process sessions need a positive index range
         assert!(CommBuilder::new(vec![2]).build(0).is_err());
+    }
+
+    #[test]
+    fn pool_address_validation() {
+        // a pool address without the multi-process mode is a readable error
+        let err = CommBuilder::new(vec![2, 2]).pool("127.0.0.1:7431").build(16).unwrap_err();
+        assert!(format!("{err:#}").contains("multi-process"), "got {err:#}");
+        // client-side replication contradicts a launched pool
+        let err = CommBuilder::new(vec![2, 2])
+            .mode(ExecMode::MultiProcess)
+            .pool("127.0.0.1:7431")
+            .replication(2)
+            .build(16)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("replication"), "got {err:#}");
     }
 }

@@ -28,18 +28,25 @@
 //!   JOINed pool without restarting a worker.
 //!
 //! The in-process backends (lockstep, threaded) expose the raw
-//! two-phase lifecycle directly; the multi-process backend drives a
-//! worker pool through job descriptors (the workers run the identical
-//! per-node loops from `apps::`), and `configure`/`allreduce` on it
-//! return a readable error pointing at `submit`.
+//! two-phase lifecycle directly. Multi-process sessions come in two
+//! shapes: a locally spawned pool runs whole job descriptors (the
+//! workers run the identical per-node loops from `apps::`), while a
+//! [`CommBuilder::pool`] session connects to a separately
+//! `sar serve`-launched pool and exposes the raw lifecycle *remotely* —
+//! the client streams its sparsity pattern and per-round sparse values,
+//! the pool's app-agnostic generic engine reduces them
+//! ([`remote::RemoteSession`]), so any client workload runs distributed
+//! without the pool knowing its name.
 
 pub mod builder;
 pub mod job;
+pub mod remote;
 pub mod run;
 pub mod session;
 
 pub use builder::CommBuilder;
 pub use job::{parse_job_names, AppKind, JobOutcome, JobSpec};
+pub use remote::RemoteSession;
 pub use session::{ConfigHandle, Session};
 
 use anyhow::{bail, Result};

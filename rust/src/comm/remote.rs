@@ -1,0 +1,307 @@
+//! Client side of the remote collective plane: drive a `sar serve`d
+//! worker pool through the paper's raw two-phase lifecycle from a
+//! separate process.
+//!
+//! [`RemoteSession::connect`] dials the pool's client port
+//! (connect-retry, so a client started before the pool wins the race),
+//! reads the pool-shape handshake, and then speaks the
+//! CONFIGURE/VALUES/RESULT cycle of [`crate::cluster::serve`]:
+//!
+//! * [`RemoteSession::configure`] streams one CONFIGURE per lane — the
+//!   per-worker *index scatter* of `configure(out, in)`; the pool's
+//!   CONFIG_DONE barrier answers with the collective's pool job id.
+//! * [`RemoteSession::allreduce`] streams one VALUES per lane and
+//!   gathers one RESULT per lane — generic over [`ReduceOp`] through
+//!   [`crate::cluster::proto::reduce_op_code`], so `SumF32`, `OrU32`
+//!   and `MaxF32` all flow through one path.
+//! * [`RemoteSession::allreduce_with_bottom`] splits the collective on
+//!   the wire: workers run the scatter-reduce half and return each
+//!   lane's fully-reduced bottom range with its down/up index sets;
+//!   the client applies the bottom transform (the §III-B
+//!   parameter-server fold, holding its model state client-side) and
+//!   streams the transformed values into the allgather half.
+//!
+//! Only index sets and sparse values ever cross the ingress — the
+//! client never ships a dense vector, keeping the client→pool link as
+//! sparse as the data-plane links inside the pool.
+
+use crate::cluster::proto::{
+    recv_ctrl, reduce_op_code, send_ctrl, ConfigureMsg, CtrlMsg, ResultMsg, ValuesMsg, CLIENT,
+    RES_STAGE_BOTTOM, RES_STAGE_FINAL, VAL_STAGE_DOWN, VAL_STAGE_FULL, VAL_STAGE_UP,
+};
+use crate::sparse::{IndexSet, ReduceOp};
+use crate::transport::{connect_with_retry, wire, RetryPolicy};
+use anyhow::{bail, Context, Result};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// How long a client read may block before the pool is presumed gone
+/// (matches the coordinator's default phase deadline).
+const READ_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// A live connection to a `sar serve` pool's client port (see module
+/// docs). Obtained via `CommBuilder::pool(addr)` + `build(range)`,
+/// which wraps it in an ordinary [`super::Session`].
+pub struct RemoteSession {
+    rd: TcpStream,
+    wr: Mutex<TcpStream>,
+    degrees: Vec<usize>,
+    send_threads: usize,
+    /// Client-side config counter (the pool maps it to a pool-unique
+    /// job id in the CONFIG_DONE ack).
+    cfg_seq: u32,
+    /// Pool job id of the live config.
+    job: Option<u32>,
+    /// Collective round counter within the live config.
+    seq: u32,
+}
+
+impl RemoteSession {
+    /// Dial a pool's client port and read the pool-shape handshake.
+    pub fn connect(addr: &str, send_threads: usize) -> Result<RemoteSession> {
+        let sock: SocketAddr = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving pool address `{addr}`"))?
+            .next()
+            .with_context(|| format!("pool address `{addr}` resolved to no address"))?;
+        let stream = connect_with_retry(&sock, &RetryPolicy::default())
+            .with_context(|| format!("connecting to the pool's client port {sock}"))?;
+        stream.set_nodelay(true)?;
+        let mut rd = stream.try_clone().context("cloning the pool stream")?;
+        rd.set_read_timeout(Some(READ_TIMEOUT))?;
+        let (_, msg) = recv_ctrl(&mut rd).context("reading the pool-shape handshake")?;
+        let plan = match msg {
+            CtrlMsg::Plan(p) => p,
+            other => bail!(
+                "the pool sent {other:?} instead of the shape handshake — is {addr} \
+                 a `sar serve` client port?"
+            ),
+        };
+        if plan.replication > 1 {
+            bail!(
+                "pool at {addr} replicates ×{}; the remote collective plane needs a \
+                 replication-1 pool",
+                plan.replication
+            );
+        }
+        let degrees: Vec<usize> = plan.degrees.iter().map(|&k| k as usize).collect();
+        log::info!(
+            "connected to pool at {addr}: {} workers, schedule {degrees:?}",
+            plan.world
+        );
+        Ok(RemoteSession {
+            rd,
+            wr: Mutex::new(stream),
+            degrees,
+            send_threads: send_threads.max(1),
+            cfg_seq: 0,
+            job: None,
+            seq: 0,
+        })
+    }
+
+    /// The pool's butterfly degree schedule (clients must match it).
+    pub fn degrees(&self) -> &[usize] {
+        &self.degrees
+    }
+
+    /// Logical lanes (= pool workers on a replication-1 pool).
+    pub fn lanes(&self) -> usize {
+        self.degrees.iter().product()
+    }
+
+    /// Read the next pool message; a FAILED answer becomes a readable
+    /// error carrying the pool's cause.
+    fn recv(&mut self) -> Result<CtrlMsg> {
+        let (_, msg) = recv_ctrl(&mut self.rd).context("reading from the pool")?;
+        if let CtrlMsg::Failed { error } = msg {
+            bail!("pool reported failure: {error}");
+        }
+        Ok(msg)
+    }
+
+    /// Stream a sparsity pattern to the pool (one CONFIGURE per lane)
+    /// and wait for the pool-wide config barrier. Call again for a new
+    /// pattern (e.g. SGD's per-step feature sets) — the pool rebuilds
+    /// its protocol handles over the same long-lived fabric.
+    pub fn configure(
+        &mut self,
+        index_range: i64,
+        outbound: Vec<IndexSet>,
+        inbound: Vec<IndexSet>,
+    ) -> Result<()> {
+        let m = self.lanes();
+        if outbound.len() != m || inbound.len() != m {
+            bail!(
+                "configure needs one index set per lane ({m} lanes, got {} outbound / \
+                 {} inbound)",
+                outbound.len(),
+                inbound.len()
+            );
+        }
+        self.cfg_seq += 1;
+        self.job = None;
+        self.seq = 0;
+        for (lane, (o, i)) in outbound.into_iter().zip(inbound).enumerate() {
+            let msg = CtrlMsg::Configure(ConfigureMsg {
+                job: self.cfg_seq,
+                lane: lane as u32,
+                index_range,
+                send_threads: self.send_threads as u32,
+                outbound: o.into_vec(),
+                inbound: i.into_vec(),
+            });
+            send_ctrl(&self.wr, CLIENT, &msg)
+                .with_context(|| format!("streaming lane {lane}'s sparsity pattern"))?;
+        }
+        match self.recv().context("waiting for the pool's config barrier")? {
+            CtrlMsg::ConfigDone { job } => {
+                self.job = Some(job);
+                Ok(())
+            }
+            other => bail!("expected the config ack, got {other:?}"),
+        }
+    }
+
+    /// One remote sparse allreduce: `values[n]` aligned with lane `n`'s
+    /// configured outbound set; the reduced values aligned with its
+    /// inbound set come back.
+    pub fn allreduce<R: ReduceOp>(&mut self, values: Vec<Vec<R::T>>) -> Result<Vec<Vec<R::T>>> {
+        self.seq += 1;
+        self.send_round::<R>(VAL_STAGE_FULL, values)?;
+        let results = self.collect_round(RES_STAGE_FINAL)?;
+        decode_lane_values::<R>(results)
+    }
+
+    /// Remote allreduce with a client-side bottom transform per lane
+    /// (the §III-B parameter-server mode): after the pool's
+    /// scatter-reduce half, `bottoms[n](down_set, reduced, up_set)`
+    /// receives lane `n`'s fully-reduced bottom range and must return
+    /// one value per `up_set` index for the allgather half — the same
+    /// contract as [`crate::allreduce::LocalCluster::reduce_with_bottom`],
+    /// with the transform (and any model state it closes over) living
+    /// in the client process.
+    pub fn allreduce_with_bottom<R, F>(
+        &mut self,
+        values: Vec<Vec<R::T>>,
+        bottoms: Vec<F>,
+    ) -> Result<Vec<Vec<R::T>>>
+    where
+        R: ReduceOp,
+        F: FnOnce(&IndexSet, &[R::T], &IndexSet) -> Vec<R::T>,
+    {
+        if bottoms.len() != self.lanes() {
+            bail!("one bottom transform per lane required");
+        }
+        self.seq += 1;
+        self.send_round::<R>(VAL_STAGE_DOWN, values)?;
+        let mids = self.collect_round(RES_STAGE_BOTTOM)?;
+        let mut ups: Vec<Vec<R::T>> = Vec::with_capacity(mids.len());
+        for (lane, (r, f)) in mids.into_iter().zip(bottoms).enumerate() {
+            let reduced = wire::decode_values::<R>(&r.payload)
+                .with_context(|| format!("decoding lane {lane}'s bottom values"))?;
+            if reduced.len() != r.down_idx.len() {
+                bail!(
+                    "lane {lane}: {} bottom values but {} bottom indices",
+                    reduced.len(),
+                    r.down_idx.len()
+                );
+            }
+            let down = IndexSet::from_sorted(r.down_idx);
+            let up = IndexSet::from_sorted(r.up_idx);
+            let out = f(&down, &reduced, &up);
+            if out.len() != up.len() {
+                bail!(
+                    "lane {lane}: the bottom transform must return one value per up-set \
+                     index ({} != {})",
+                    out.len(),
+                    up.len()
+                );
+            }
+            ups.push(out);
+        }
+        self.send_round::<R>(VAL_STAGE_UP, ups)?;
+        let results = self.collect_round(RES_STAGE_FINAL)?;
+        decode_lane_values::<R>(results)
+    }
+
+    /// Stream one VALUES per lane for the current round.
+    fn send_round<R: ReduceOp>(&mut self, stage: u8, values: Vec<Vec<R::T>>) -> Result<()> {
+        let job = self.job.context("allreduce before configure")?;
+        let op = reduce_op_code::<R>().context(
+            "this reduce operator has no remote wire encoding (SumF32 | OrU32 | MaxF32)",
+        )?;
+        for (lane, v) in values.into_iter().enumerate() {
+            let msg = CtrlMsg::Values(ValuesMsg {
+                job,
+                seq: self.seq,
+                lane: lane as u32,
+                op,
+                stage,
+                payload: wire::encode_values::<R>(&v),
+            });
+            send_ctrl(&self.wr, CLIENT, &msg)
+                .with_context(|| format!("sending lane {lane}'s values"))?;
+        }
+        Ok(())
+    }
+
+    /// Gather one RESULT per lane for the current round (lanes answer
+    /// in any order; a stale round's result is dropped with a warning).
+    fn collect_round(&mut self, stage: u8) -> Result<Vec<ResultMsg>> {
+        let job = self.job.expect("round in flight");
+        let seq = self.seq;
+        let m = self.lanes();
+        let mut got: Vec<Option<ResultMsg>> = (0..m).map(|_| None).collect();
+        let mut have = 0usize;
+        while have < m {
+            match self.recv().context("waiting for reduced values")? {
+                CtrlMsg::Result(r) => slot_result(&mut got, &mut have, r, job, seq, stage)?,
+                other => bail!("expected RESULT, got {other:?}"),
+            }
+        }
+        Ok(got.into_iter().map(|r| r.expect("one result per lane")).collect())
+    }
+}
+
+/// File a RESULT into its lane slot; results from other rounds are
+/// dropped with a warning (they can only be stale).
+fn slot_result(
+    got: &mut [Option<ResultMsg>],
+    have: &mut usize,
+    r: ResultMsg,
+    job: u32,
+    seq: u32,
+    stage: u8,
+) -> Result<()> {
+    if r.job != job || r.seq != seq || r.stage != stage {
+        log::warn!(
+            "dropping stale RESULT (collective {} round {} stage {})",
+            r.job,
+            r.seq,
+            r.stage
+        );
+        return Ok(());
+    }
+    let lane = r.lane as usize;
+    if lane >= got.len() {
+        bail!("RESULT names lane {lane} but the session has {} lanes", got.len());
+    }
+    if got[lane].replace(r).is_none() {
+        *have += 1;
+    }
+    Ok(())
+}
+
+/// Decode each lane's RESULT payload into values.
+fn decode_lane_values<R: ReduceOp>(results: Vec<ResultMsg>) -> Result<Vec<Vec<R::T>>> {
+    results
+        .into_iter()
+        .enumerate()
+        .map(|(lane, r)| {
+            wire::decode_values::<R>(&r.payload)
+                .with_context(|| format!("decoding lane {lane}'s reduced values"))
+        })
+        .collect()
+}

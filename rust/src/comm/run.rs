@@ -20,7 +20,7 @@ use crate::metrics::RunMetrics;
 use crate::sparse::{IndexSet, OrU32, SumF32};
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// A job's prepared per-node state, ready to drive through a session.
 pub(crate) enum Prepared {
@@ -100,8 +100,11 @@ pub(crate) fn prepare(spec: &JobSpec, m: usize) -> Result<Prepared> {
     }
 }
 
-/// One-shot in-process run: prepare the job, open a session of exactly
-/// its index domain, drive it.
+/// One-shot driver-side run: prepare the job, open a session of exactly
+/// its index domain, drive it. The session may be in-process (lockstep,
+/// threaded) or a remote-pool client (`CommBuilder::pool`) — the driver
+/// code is identical; only where each lane's collective executes
+/// differs.
 pub(crate) fn run_in_process(builder: &CommBuilder, spec: &JobSpec) -> Result<JobOutcome> {
     let prepared = prepare(spec, builder.logical())?;
     let mut session = builder.clone().build(prepared.index_range())?;
@@ -130,6 +133,16 @@ fn outcome(spec: &JobSpec, checksum: f64, wall_secs: f64, config_secs: f64) -> J
     }
 }
 
+/// One lane's PageRank state, owned by the lane closures so a threaded
+/// session runs the SpMV and the score update ON the lane threads (in
+/// parallel across lanes) instead of serially on the driver — the
+/// ROADMAP PR 4 follow-up. The `Arc` makes moving the CSR between the
+/// driver and the lane threads a pointer copy.
+struct PrLane {
+    shard: Arc<Csr>,
+    p: Vec<f32>,
+}
+
 fn drive_pagerank(
     session: &mut Session,
     spec: &JobSpec,
@@ -149,28 +162,30 @@ fn drive_pagerank(
     for mtr in &mut metrics {
         mtr.config_secs = config_secs;
     }
-    let mut p: Vec<Vec<f32>> =
-        shards.iter().map(|s| pagerank::initial_p(vertices, s.cols())).collect();
+    let mut lanes: Vec<PrLane> = shards
+        .into_iter()
+        .map(|s| {
+            let p = pagerank::initial_p(vertices, s.cols());
+            PrLane { shard: Arc::new(s), p }
+        })
+        .collect();
     let wall = Instant::now();
     for _ in 0..spec.iters {
-        let mut q = Vec::with_capacity(m);
-        let mut compute = Vec::with_capacity(m);
-        for (s, pv) in shards.iter().zip(&p) {
-            let tc = Instant::now();
-            q.push(s.spmv(pv));
-            compute.push(tc.elapsed());
-        }
-        let tm = Instant::now();
-        handle.allreduce::<SumF32>(&mut q)?;
-        let comm = tm.elapsed();
-        for n in 0..m {
-            let tu = Instant::now();
-            pagerank::apply_update(&mut p[n], &q[n], vertices);
-            metrics[n].push(compute[n] + tu.elapsed(), comm);
+        let results = handle.allreduce_compute::<SumF32, PrLane, _, _>(
+            lanes,
+            |_, lane| lane.shard.spmv(&lane.p),
+            move |_, lane, sums| pagerank::apply_update(&mut lane.p, &sums, vertices),
+        )?;
+        lanes = Vec::with_capacity(m);
+        for (n, (lane, compute, comm)) in results.into_iter().enumerate() {
+            metrics[n]
+                .push(Duration::from_secs_f64(compute), Duration::from_secs_f64(comm));
+            lanes.push(lane);
         }
     }
     let wall_secs = wall.elapsed().as_secs_f64();
-    let checksum: f64 = p.iter().map(|pv| pv.first().copied().unwrap_or(0.0) as f64).sum();
+    let checksum: f64 =
+        lanes.iter().map(|l| l.p.first().copied().unwrap_or(0.0) as f64).sum();
     let mut out = outcome(spec, checksum, wall_secs, config_secs);
     out.per_node = metrics;
     Ok(out)

@@ -12,13 +12,20 @@
 //!   the same threads (and the same transport) instead of re-spawning a
 //!   cluster per call.
 //!
-//! The multi-process backend holds a planned [`crate::cluster::Session`]
-//! worker pool (plus the locally-forked worker processes when the pool
-//! was spawned rather than joined); whole jobs are submitted to it via
-//! [`Session::submit`], and the raw `configure`/`allreduce` door returns
-//! a readable error — per-iteration values never cross the control
-//! plane.
+//! Multi-process backends come in two shapes:
+//!
+//! * **Pool** — a locally planned [`crate::cluster::Session`] worker
+//!   pool (plus the forked worker processes when spawned rather than
+//!   joined); whole jobs are submitted to it via [`Session::submit`],
+//!   and the raw `configure`/`allreduce` door points at the remote
+//!   plane instead.
+//! * **Remote** — a [`RemoteSession`] client connection to a separately
+//!   `sar serve`-launched pool (`CommBuilder::pool(addr)`): the raw
+//!   two-phase lifecycle works exactly like the in-process modes, with
+//!   each lane's collective executed by a pool worker and only index
+//!   sets / sparse values crossing the ingress.
 
+use super::remote::RemoteSession;
 use super::ExecMode;
 use crate::allreduce::threaded::NodeHandle;
 use crate::allreduce::LocalCluster;
@@ -30,7 +37,7 @@ use anyhow::{bail, Context, Result};
 use std::any::Any;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// The in-process transport a threaded session runs on: plain shared
 /// memory, or the same wrapped in the simnet cost model (the Figure 7
@@ -168,6 +175,7 @@ enum Backend {
     Lockstep(LocalCluster),
     Threaded(ThreadedLanes),
     Pool(Box<PoolBackend>),
+    Remote(Box<RemoteSession>),
 }
 
 /// One communicator handle (see module docs for the lifecycle).
@@ -177,6 +185,14 @@ pub struct Session {
     send_threads: usize,
     index_range: i64,
     configured: bool,
+    /// Monotonic configure counter: each config epoch owns a disjoint
+    /// `epoch << 16` message-tag space on the threaded lanes (same
+    /// scoping as pool jobs), so a collective that failed mid-flight on
+    /// SOME lanes (e.g. a missized `pre` in
+    /// [`ConfigHandle::allreduce_compute`]) cannot leave the lane
+    /// sequence numbers desynchronized forever — reconfiguring
+    /// resynchronizes every lane onto the fresh epoch.
+    epochs: u32,
     out_lens: Vec<usize>,
     in_lens: Vec<usize>,
     backend: Backend,
@@ -223,6 +239,7 @@ impl Session {
             send_threads,
             index_range,
             configured: false,
+            epochs: 0,
             out_lens: Vec::new(),
             in_lens: Vec::new(),
             backend,
@@ -237,9 +254,32 @@ impl Session {
             send_threads,
             index_range: 0,
             configured: false,
+            epochs: 0,
             out_lens: Vec::new(),
             in_lens: Vec::new(),
             backend: Backend::Pool(Box::new(pool)),
+        }
+    }
+
+    /// Wrap a remote-pool client connection as a session: the raw
+    /// two-phase lifecycle against a separately `sar serve`-launched
+    /// pool.
+    pub(crate) fn new_remote(
+        degrees: Vec<usize>,
+        send_threads: usize,
+        index_range: i64,
+        remote: RemoteSession,
+    ) -> Session {
+        Session {
+            mode: ExecMode::MultiProcess,
+            degrees,
+            send_threads,
+            index_range,
+            configured: false,
+            epochs: 0,
+            out_lens: Vec::new(),
+            in_lens: Vec::new(),
+            backend: Backend::Remote(Box::new(remote)),
         }
     }
 
@@ -294,6 +334,9 @@ impl Session {
         }
         self.out_lens = outbound.iter().map(|s| s.len()).collect();
         self.in_lens = inbound.iter().map(|s| s.len()).collect();
+        let index_range = self.index_range;
+        self.epochs = self.epochs.wrapping_add(1);
+        let seq_base = self.epochs.wrapping_shl(16);
         match &mut self.backend {
             Backend::Lockstep(cluster) => {
                 cluster.config(outbound, inbound);
@@ -303,16 +346,30 @@ impl Session {
                     .into_iter()
                     .zip(inbound)
                     .map(|(o, i)| {
-                        move |h: &mut NodeHandle<LaneTransport>| h.config(o, i)
+                        move |h: &mut NodeHandle<LaneTransport>| {
+                            // Epoch-scoped tags: even if a previous
+                            // collective failed on SOME lanes (leaving
+                            // their sequence numbers behind their
+                            // peers'), this configure resynchronizes
+                            // every lane onto a fresh disjoint tag
+                            // space — one bad round cannot poison the
+                            // session.
+                            h.set_seq_base(seq_base);
+                            h.config(o, i)
+                        }
                     })
                     .collect();
                 for (n, r) in lanes.run_all(fns).into_iter().enumerate() {
                     r.with_context(|| format!("lane {n} config failed"))?;
                 }
             }
+            Backend::Remote(remote) => {
+                remote.configure(index_range, outbound, inbound)?;
+            }
             Backend::Pool(_) => bail!(
-                "a multi-process pool session runs whole jobs (Session::submit / \
-                 `sar launch --jobs`); per-iteration values never cross the control plane"
+                "a locally spawned pool session runs whole jobs (Session::submit / \
+                 `sar launch --jobs`); for raw configure/allreduce against a pool, \
+                 launch it with `sar serve` and connect with CommBuilder::pool(addr)"
             ),
         }
         self.configured = true;
@@ -327,16 +384,7 @@ impl Session {
             bail!("allreduce needs one value vector per lane ({} lanes, got {})",
                   self.lanes(), values.len());
         }
-        for (n, (v, &want)) in values.iter().zip(&self.out_lens).enumerate() {
-            if v.len() != want {
-                bail!(
-                    "lane {n}: {} values but the configured outbound set has {want} \
-                     indices (reconfigure for a new sparsity pattern)",
-                    v.len()
-                );
-            }
-        }
-        Ok(())
+        check_value_lens(&self.out_lens, values)
     }
 
     fn allreduce_impl<R: ReduceOp>(&mut self, values: &mut Vec<Vec<R::T>>) -> Result<()> {
@@ -355,10 +403,100 @@ impl Session {
                 }
                 out
             }
+            Backend::Remote(remote) => remote.allreduce::<R>(input)?,
             Backend::Pool(_) => bail!("pool sessions run jobs, not raw collectives"),
         };
         *values = reduced;
         Ok(())
+    }
+
+    /// One allreduce with the per-lane compute fused in (see
+    /// [`ConfigHandle::allreduce_compute`]): `pre(lane, &mut state)`
+    /// produces lane values, the collective reduces them,
+    /// `post(lane, &mut state, reduced)` absorbs the result. In the
+    /// threaded mode both closures run ON the lane threads, so
+    /// driver-side compute (e.g. PageRank's SpMV) parallelizes across
+    /// lanes instead of serializing on the driver.
+    fn allreduce_compute_impl<R, S>(
+        &mut self,
+        states: Vec<S>,
+        pre: Arc<dyn Fn(usize, &mut S) -> Vec<R::T> + Send + Sync>,
+        post: Arc<dyn Fn(usize, &mut S, Vec<R::T>) + Send + Sync>,
+    ) -> Result<Vec<(S, f64, f64)>>
+    where
+        R: ReduceOp,
+        S: Send + 'static,
+    {
+        if !self.configured {
+            bail!("allreduce before configure");
+        }
+        if states.len() != self.lanes() {
+            bail!(
+                "allreduce_compute needs one state per lane ({} lanes, got {})",
+                self.lanes(),
+                states.len()
+            );
+        }
+        let out_lens = self.out_lens.clone();
+        match &mut self.backend {
+            Backend::Threaded(lanes) => {
+                let fns: Vec<_> = states
+                    .into_iter()
+                    .enumerate()
+                    .map(|(n, mut s)| {
+                        let pre = pre.clone();
+                        let post = post.clone();
+                        let want = out_lens[n];
+                        move |h: &mut NodeHandle<LaneTransport>| -> Result<(S, f64, f64), TransportError> {
+                            let t0 = Instant::now();
+                            let q = pre(n, &mut s);
+                            let compute_pre = t0.elapsed();
+                            if q.len() != want {
+                                // Peers that passed their own check may
+                                // already be mid-reduce; the session's
+                                // lanes resynchronize on the next
+                                // configure (epoch-scoped tags).
+                                return Err(TransportError::Io(std::io::Error::new(
+                                    std::io::ErrorKind::InvalidData,
+                                    format!(
+                                        "pre produced {} values but the configured \
+                                         outbound set has {want}; reconfigure the \
+                                         session before the next collective",
+                                        q.len()
+                                    ),
+                                )));
+                            }
+                            let t1 = Instant::now();
+                            let r = h.reduce::<R>(q)?;
+                            let comm = t1.elapsed().as_secs_f64();
+                            let t2 = Instant::now();
+                            post(n, &mut s, r);
+                            Ok((s, (compute_pre + t2.elapsed()).as_secs_f64(), comm))
+                        }
+                    })
+                    .collect();
+                let mut out = Vec::with_capacity(self.out_lens.len());
+                for (n, r) in lanes.run_all(fns).into_iter().enumerate() {
+                    out.push(r.with_context(|| format!("lane {n} reduce failed"))?);
+                }
+                Ok(out)
+            }
+            Backend::Lockstep(cluster) => driver_compute_round::<R, S, _>(
+                states,
+                &out_lens,
+                &*pre,
+                &*post,
+                |vals| Ok(cluster.reduce::<R>(vals).0),
+            ),
+            Backend::Remote(remote) => driver_compute_round::<R, S, _>(
+                states,
+                &out_lens,
+                &*pre,
+                &*post,
+                |vals| remote.allreduce::<R>(vals),
+            ),
+            Backend::Pool(_) => bail!("pool sessions run jobs, not raw collectives"),
+        }
     }
 
     fn allreduce_with_bottom_impl<R, F>(
@@ -399,9 +537,64 @@ impl Session {
                 }
                 Ok(out)
             }
+            Backend::Remote(remote) => remote.allreduce_with_bottom::<R, F>(values, bottoms),
             Backend::Pool(_) => bail!("pool sessions run jobs, not raw collectives"),
         }
     }
+}
+
+/// The driver-side compute-fused round shared by the lockstep and
+/// remote backends of [`Session::allreduce_compute_impl`]: run `pre`
+/// per lane (timed), size-check, reduce via the backend's closure
+/// (timed as comm), run `post` per lane (timed). The threaded backend
+/// has its own path because there the closures run ON the lane threads.
+fn driver_compute_round<R, S, X>(
+    states: Vec<S>,
+    out_lens: &[usize],
+    pre: &(dyn Fn(usize, &mut S) -> Vec<R::T> + Send + Sync),
+    post: &(dyn Fn(usize, &mut S, Vec<R::T>) + Send + Sync),
+    reduce: X,
+) -> Result<Vec<(S, f64, f64)>>
+where
+    R: ReduceOp,
+    S: Send + 'static,
+    X: FnOnce(Vec<Vec<R::T>>) -> Result<Vec<Vec<R::T>>>,
+{
+    let mut states = states;
+    let mut vals = Vec::with_capacity(states.len());
+    let mut pre_secs = Vec::with_capacity(states.len());
+    for (n, s) in states.iter_mut().enumerate() {
+        let t = Instant::now();
+        vals.push(pre(n, s));
+        pre_secs.push(t.elapsed().as_secs_f64());
+    }
+    check_value_lens(out_lens, &vals)?;
+    let t = Instant::now();
+    let reduced = reduce(vals)?;
+    let comm = t.elapsed().as_secs_f64();
+    let mut out = Vec::with_capacity(states.len());
+    for (n, (mut s, r)) in states.into_iter().zip(reduced).enumerate() {
+        let t2 = Instant::now();
+        post(n, &mut s, r);
+        out.push((s, pre_secs[n] + t2.elapsed().as_secs_f64(), comm));
+    }
+    Ok(out)
+}
+
+/// One value vector per configured outbound set, exactly sized — the
+/// shared leg of [`Session::check_values`] and the compute-fused paths
+/// that produce their values after the handle is already borrowed.
+fn check_value_lens<T>(out_lens: &[usize], values: &[Vec<T>]) -> Result<()> {
+    for (n, (v, &want)) in values.iter().zip(out_lens).enumerate() {
+        if v.len() != want {
+            bail!(
+                "lane {n}: {} values but the configured outbound set has {want} \
+                 indices (reconfigure for a new sparsity pattern)",
+                v.len()
+            );
+        }
+    }
+    Ok(())
 }
 
 /// Proof that the config phase ran; the door to the reduce phase.
@@ -428,7 +621,9 @@ impl ConfigHandle<'_> {
     /// one value per `up_set` index to be allgathered. This is the
     /// parameter-server mode of the paper's mini-batch SGD (§III-B):
     /// the bottom owner folds gradients into its persistent model shard
-    /// and serves fresh weights back up.
+    /// and serves fresh weights back up. (On a remote session the
+    /// transform runs client-side between the two wire halves, so the
+    /// model state stays in the client process.)
     pub fn allreduce_with_bottom<R, F>(
         &mut self,
         values: Vec<Vec<R::T>>,
@@ -439,6 +634,30 @@ impl ConfigHandle<'_> {
         F: FnOnce(&IndexSet, &[R::T], &IndexSet) -> Vec<R::T> + Send + 'static,
     {
         self.sess.allreduce_with_bottom_impl::<R, F>(values, bottoms)
+    }
+
+    /// One allreduce with the per-lane compute fused in: for each lane,
+    /// `pre(lane, &mut state)` produces the outbound values (exactly
+    /// the configured outbound count), the collective reduces them, and
+    /// `post(lane, &mut state, reduced)` absorbs the inbound-aligned
+    /// result. In threaded sessions both closures run ON the lane
+    /// threads, so per-node compute (PageRank's SpMV, a gradient
+    /// evaluation) runs in parallel across lanes instead of serially on
+    /// the driver (ROADMAP PR 4 follow-up). Returns per-lane
+    /// `(state, compute_secs, comm_secs)` in lane order.
+    pub fn allreduce_compute<R, S, F, G>(
+        &mut self,
+        states: Vec<S>,
+        pre: F,
+        post: G,
+    ) -> Result<Vec<(S, f64, f64)>>
+    where
+        R: ReduceOp,
+        S: Send + 'static,
+        F: Fn(usize, &mut S) -> Vec<R::T> + Send + Sync + 'static,
+        G: Fn(usize, &mut S, Vec<R::T>) + Send + Sync + 'static,
+    {
+        self.sess.allreduce_compute_impl::<R, S>(states, Arc::new(pre), Arc::new(post))
     }
 }
 
@@ -516,6 +735,63 @@ mod tests {
         let mut vals = vec![vec![1.0f32, 2.0], vec![], vec![], vec![]];
         let err = cfg.allreduce::<SumF32>(&mut vals).unwrap_err();
         assert!(format!("{err:#}").contains("outbound set"), "got {err:#}");
+    }
+
+    /// Satellite (ROADMAP PR 4 follow-up): the compute-fused allreduce
+    /// produces the same reduction as the plain path in both in-process
+    /// modes — in threaded sessions the `pre`/`post` closures run on
+    /// the lane threads, i.e. the driver's per-node compute
+    /// parallelizes.
+    #[test]
+    fn allreduce_compute_matches_plain_path() {
+        struct LaneState {
+            scale: f32,
+            got: Vec<f32>,
+        }
+        for mode in [ExecMode::Lockstep, ExecMode::Threaded] {
+            let mut s = session(mode);
+            let out = sets(vec![vec![1, 5], vec![5, 9], vec![2], vec![]]);
+            let inb = sets(vec![vec![5], vec![1, 2], vec![9], vec![5, 9]]);
+            let mut cfg = s.configure(out, inb).unwrap();
+            let states: Vec<LaneState> =
+                (0..4).map(|_| LaneState { scale: 1.0, got: Vec::new() }).collect();
+            let base: Vec<Vec<f32>> =
+                vec![vec![1.0, 10.0], vec![20.0, 3.0], vec![7.0], vec![]];
+            let got = cfg
+                .allreduce_compute::<SumF32, LaneState, _, _>(
+                    states,
+                    move |n, st| base[n].iter().map(|v| v * st.scale).collect(),
+                    |_, st, reduced| st.got = reduced,
+                )
+                .unwrap();
+            assert_eq!(got[0].0.got, vec![30.0], "{mode:?}");
+            assert_eq!(got[1].0.got, vec![1.0, 7.0], "{mode:?}");
+            assert_eq!(got[2].0.got, vec![3.0], "{mode:?}");
+            assert_eq!(got[3].0.got, vec![30.0, 3.0], "{mode:?}");
+            for (_, compute, comm) in &got {
+                assert!(*compute >= 0.0 && *comm >= 0.0, "{mode:?}");
+            }
+        }
+    }
+
+    /// A `pre` that produces the wrong value count is a readable error
+    /// in both modes, not a protocol panic or a hang.
+    #[test]
+    fn allreduce_compute_missized_pre_is_an_error() {
+        for mode in [ExecMode::Lockstep, ExecMode::Threaded] {
+            let mut s = session(mode);
+            let out = sets(vec![vec![1], vec![], vec![], vec![]]);
+            let inb = sets(vec![vec![1], vec![], vec![], vec![]]);
+            let mut cfg = s.configure(out, inb).unwrap();
+            let err = cfg
+                .allreduce_compute::<SumF32, (), _, _>(
+                    vec![(); 4],
+                    |_, _| vec![0.0; 3],
+                    |_, _, _| {},
+                )
+                .unwrap_err();
+            assert!(format!("{err:#}").contains("outbound set"), "{mode:?}: got {err:#}");
+        }
     }
 
     #[test]

@@ -629,6 +629,30 @@ pub fn load_edge_list(path: &Path) -> Result<EdgeList> {
     Ok(EdgeList { vertices: max_id + 1, edges })
 }
 
+/// Load a SNAP-style edge list for `sar shard --from`: the same
+/// whitespace-separated `src dst` grammar as [`load_edge_list`] — which
+/// already skips SNAP's `#` header comments and accepts tab separation —
+/// plus converter hygiene real downloads need: duplicate directed edges
+/// are collapsed (SNAP exports repeat edges surprisingly often) and the
+/// edge order is canonicalized by sorting, so the resulting shard set —
+/// and every checksum derived from it — is identical no matter how the
+/// download happened to be ordered.
+pub fn load_snap_edge_list(path: &Path) -> Result<EdgeList> {
+    let mut g = load_edge_list(path)?;
+    let before = g.edges.len();
+    g.edges.sort_unstable();
+    g.edges.dedup();
+    if g.edges.len() < before {
+        log::info!(
+            "collapsed {} duplicate edges from {} ({} remain)",
+            before - g.edges.len(),
+            path.display(),
+            g.edges.len()
+        );
+    }
+    Ok(g)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -813,6 +837,69 @@ mod tests {
         assert!(load_edge_list(&dir.join("missing.txt")).is_err());
         std::fs::write(&path, "0 1 2\n").unwrap();
         assert!(load_edge_list(&path).is_err(), "3 columns must be rejected");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Satellite (`sar shard --from`): a SNAP-style download — header
+    /// comments, tab separation, duplicate edges, arbitrary order —
+    /// converts into a clean, deterministic edge list.
+    #[test]
+    fn snap_edge_list_converts_with_dedup_and_canonical_order() {
+        let dir = tmp_dir("snapfile");
+        let path = dir.join("snap.txt");
+        std::fs::write(
+            &path,
+            "# Directed graph (each unordered pair of nodes is saved once)\n\
+             # FromNodeId\tToNodeId\n\
+             5\t0\n0\t1\n1\t2\n0\t1\n\n5\t0\n2\t3\n3\t4\n4\t5\n\
+             1\t0\n2\t0\n3\t0\n4\t0\n5\t1\n5\t2\n",
+        )
+        .unwrap();
+        let g = load_snap_edge_list(&path).unwrap();
+        assert_eq!(g.vertices, 6);
+        // duplicates collapsed, order canonical regardless of the file's
+        assert_eq!(
+            g.edges,
+            vec![
+                (0, 1),
+                (1, 0),
+                (1, 2),
+                (2, 0),
+                (2, 3),
+                (3, 0),
+                (3, 4),
+                (4, 0),
+                (4, 5),
+                (5, 0),
+                (5, 1),
+                (5, 2)
+            ]
+        );
+        // re-writing the same edges in another order yields the same list
+        std::fs::write(
+            &path,
+            "5 2\n0 1\n5 0\n1 2\n2 3\n3 4\n4 5\n1 0\n2 0\n3 0\n4 0\n5 1\n",
+        )
+        .unwrap();
+        let g2 = load_snap_edge_list(&path).unwrap();
+        assert_eq!(g2.edges, g.edges);
+        assert_eq!(g2.vertices, g.vertices);
+        // and the converted graph flows into the shard pipeline
+        let out = dir.join("shards");
+        let manifest = shard_graph(
+            &out,
+            &g,
+            2,
+            crate::partition::Strategy::Random,
+            "file:snap.txt",
+            1.0,
+            42,
+        )
+        .unwrap();
+        assert_eq!(manifest.shards.len(), 2);
+        let (m2, shards) = load_all_shards(&out).unwrap();
+        assert_eq!(m2.digest(), manifest.digest());
+        assert_eq!(shards.iter().map(|s| s.nnz()).sum::<usize>(), g.edges.len());
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

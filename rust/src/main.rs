@@ -1,6 +1,6 @@
 //! `sar` — the Sparse Allreduce launcher (Layer-3 coordinator binary).
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 use sparse_allreduce::apps::diameter::{estimate_diameter_mode, DiameterConfig};
 use sparse_allreduce::apps::sgd::{NativeGradEngine, SgdConfig, SynthData, Trainer};
 use sparse_allreduce::bench::{print_table, BenchOpts};
@@ -9,11 +9,11 @@ use sparse_allreduce::cluster::{self, ClusterRun, LaunchOpts, WorkerOpts};
 use sparse_allreduce::comm::{CommBuilder, ExecMode, JobOutcome, JobSpec};
 use sparse_allreduce::config::{validate_world, RunConfig};
 use sparse_allreduce::graph::{
-    load_edge_list, shard_graph, DatasetPreset, DatasetSpec, ShardManifest,
+    load_edge_list, load_snap_edge_list, shard_graph, DatasetPreset, DatasetSpec, ShardManifest,
 };
 use sparse_allreduce::partition::Strategy;
 use sparse_allreduce::runtime::{Runtime, XlaGradEngine};
-use sparse_allreduce::topology::{plan_degrees, PlannerParams};
+use sparse_allreduce::topology::{plan_degrees, plan_degrees_curve, PlannerParams};
 use sparse_allreduce::tune::{self, TuneOpts};
 use sparse_allreduce::util::{human_bytes, human_duration, logging};
 use std::path::{Path, PathBuf};
@@ -46,6 +46,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "train" => cmd_train(args),
         "worker" => cmd_worker(args),
         "launch" => cmd_launch(args),
+        "serve" => cmd_serve(args),
         "config-check" => cmd_config_check(args),
         other => bail!("unknown command `{other}`\n\n{USAGE}"),
     }
@@ -90,8 +91,37 @@ fn cmd_info(args: &Args) -> Result<()> {
 }
 
 fn cmd_plan(args: &Args) -> Result<()> {
-    args.expect_known("plan", &["mbytes", "machines", "floor-mb", "compression"])?;
+    args.expect_known("plan", &["mbytes", "machines", "floor-mb", "compression", "tune-profile"])?;
     let mbytes = args.f64_flag("mbytes", 16.0)?;
+    // Satellite (ROADMAP PR 3 follow-up): a tuning profile feeds the
+    // MEASURED per-layer collision-compression curve into the planner
+    // instead of one constant — deeper layers shrink by what the actual
+    // dataset showed, not by a guess.
+    if let Some(p) = args.flag("tune-profile") {
+        if args.flag("floor-mb").is_some() || args.flag("compression").is_some() {
+            bail!(
+                "--tune-profile supplies the measured packet floor and compression \
+                 curve; drop --floor-mb/--compression"
+            );
+        }
+        let prof = tune::TuneProfile::load(Path::new(p))?;
+        let machines = args.usize_flag("machines", prof.world)?;
+        let params = PlannerParams {
+            bytes_per_node: mbytes * 1024.0 * 1024.0,
+            packet_floor: prof.packet_floor.max(1.0),
+            compression: 0.7,
+        };
+        let degrees = plan_degrees_curve(machines, &params, &prof.compression);
+        let sched = degrees.iter().map(|k| k.to_string()).collect::<Vec<_>>().join("x");
+        let curve =
+            prof.compression.iter().map(|c| format!("{c:.2}")).collect::<Vec<_>>().join(", ");
+        println!(
+            "planned schedule for M={machines}, {mbytes:.1} MiB/node under profile {p} \
+             (measured floor {}, per-layer compression [{curve}]): {sched}",
+            human_bytes(prof.packet_floor as u64)
+        );
+        return Ok(());
+    }
     let machines = args.usize_flag("machines", 64)?;
     let floor = args.f64_flag("floor-mb", 2.0)?;
     let params = PlannerParams {
@@ -200,7 +230,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
 fn cmd_shard(args: &Args) -> Result<()> {
     args.expect_known(
         "shard",
-        &["out", "workers", "dataset", "scale", "seed", "partition", "edges"],
+        &["out", "workers", "dataset", "scale", "seed", "partition", "edges", "from"],
     )?;
     let out = PathBuf::from(
         args.flag("out")
@@ -210,30 +240,37 @@ fn cmd_shard(args: &Args) -> Result<()> {
     let seed = args.u64_flag("seed", 42)?;
     let strategy = Strategy::parse(args.flag("partition").unwrap_or("random"))?;
 
-    let (graph, source, scale) = match args.flag("edges") {
-        Some(path) => {
-            // An edge-list file is sharded as-is; silently dropping
-            // preset flags would mislabel the run.
-            if args.flag("dataset").is_some() || args.flag("scale").is_some() {
-                bail!(
-                    "--edges shards the file as-is; --dataset/--scale only apply to \
-                     synthetic presets (drop them or shard a preset instead)"
-                );
-            }
-            let path = PathBuf::from(path);
-            let graph = load_edge_list(&path)?;
-            let name = path
-                .file_name()
-                .map(|n| n.to_string_lossy().into_owned())
-                .unwrap_or_else(|| path.display().to_string());
-            (graph, format!("file:{name}"), 1.0)
-        }
-        None => {
-            let spec = dataset_from(args)?;
-            let scale = args.f64_flag("scale", 0.05)?;
-            log::info!("generating {} (scale {scale})", spec.name());
-            (spec.generate(), spec.preset.key().to_string(), scale)
-        }
+    if args.flag("edges").is_some() && args.flag("from").is_some() {
+        bail!("--edges and --from both name an input file; pass only one");
+    }
+    // Both file inputs shard the file as-is; silently dropping preset
+    // flags would mislabel the run.
+    let file_input = args.flag("edges").or(args.flag("from"));
+    if file_input.is_some() && (args.flag("dataset").is_some() || args.flag("scale").is_some()) {
+        bail!(
+            "an edge-list file is sharded as-is; --dataset/--scale only apply to \
+             synthetic presets (drop them or shard a preset instead)"
+        );
+    }
+    let (graph, source, scale) = if let Some(path) = file_input {
+        // `--edges` shards the file as-is; `--from` is the SNAP-style
+        // converter (ROADMAP PR 2 follow-up): `#` header comments
+        // skipped, tab/space separation, duplicate edges collapsed,
+        // edge order canonicalized for determinism.
+        let snap = args.flag("from").is_some();
+        let path = PathBuf::from(path);
+        let graph =
+            if snap { load_snap_edge_list(&path)? } else { load_edge_list(&path)? };
+        let name = path
+            .file_name()
+            .map(|n| n.to_string_lossy().into_owned())
+            .unwrap_or_else(|| path.display().to_string());
+        (graph, format!("file:{name}"), 1.0)
+    } else {
+        let spec = dataset_from(args)?;
+        let scale = args.f64_flag("scale", 0.05)?;
+        log::info!("generating {} (scale {scale})", spec.name());
+        (spec.generate(), spec.preset.key().to_string(), scale)
     };
     println!(
         "sharding {} vertices / {} edges into {workers} shards ({}) under {}",
@@ -276,14 +313,10 @@ fn cmd_pagerank(args: &Args) -> Result<()> {
         "pagerank",
         &[
             "mode", "distributed", "dataset", "scale", "degrees", "replication", "iters",
-            "threads", "seed", "bin", "shards", "tune-profile",
+            "threads", "seed", "bin", "shards", "tune-profile", "pool",
         ],
     )?;
-    let mode = if args.has_switch("distributed") {
-        ExecMode::MultiProcess
-    } else {
-        ExecMode::parse(args.flag("mode").unwrap_or("threaded"))?
-    };
+    let mode = resolve_mode(args, "threaded")?;
     let replication = args.usize_flag("replication", 1)?;
     if replication > 1 && mode != ExecMode::MultiProcess {
         bail!(
@@ -335,9 +368,31 @@ fn cmd_pagerank(args: &Args) -> Result<()> {
     if let Some(bin) = args.flag("bin") {
         builder = builder.worker_binary(PathBuf::from(bin));
     }
+    if let Some(addr) = args.flag("pool") {
+        builder = builder.pool(addr);
+    }
     let out = builder.submit(&spec)?;
     print_job_outcome(&cfg, mode, &out);
     Ok(())
+}
+
+/// Resolve a client command's execution mode from `--mode` /
+/// `--distributed` / `--pool`: a pool address implies mp (any
+/// contradicting `--mode` is a readable error instead of a silently
+/// ignored flag).
+fn resolve_mode(args: &Args, default: &str) -> Result<ExecMode> {
+    if args.flag("pool").is_some() {
+        if let Some(m) = args.flag("mode") {
+            if ExecMode::parse(m)? != ExecMode::MultiProcess {
+                bail!("--pool drives a remote worker pool; drop --mode or pass --mode mp");
+            }
+        }
+        return Ok(ExecMode::MultiProcess);
+    }
+    if args.has_switch("distributed") {
+        return Ok(ExecMode::MultiProcess);
+    }
+    ExecMode::parse(args.flag("mode").unwrap_or(default))
 }
 
 fn print_job_outcome(cfg: &RunConfig, mode: ExecMode, out: &JobOutcome) {
@@ -363,9 +418,9 @@ fn print_job_outcome(cfg: &RunConfig, mode: ExecMode, out: &JobOutcome) {
 fn cmd_diameter(args: &Args) -> Result<()> {
     args.expect_known(
         "diameter",
-        &["mode", "dataset", "scale", "degrees", "sketches", "max-h", "seed"],
+        &["mode", "dataset", "scale", "degrees", "sketches", "max-h", "seed", "pool"],
     )?;
-    let mode = ExecMode::parse(args.flag("mode").unwrap_or("lockstep"))?;
+    let mode = resolve_mode(args, "lockstep")?;
     let degrees = args.degrees_flag("degrees", &[4, 2])?;
     let dataset = args.flag("dataset").unwrap_or("twitter").to_string();
     let scale = args.f64_flag("scale", 0.05)?;
@@ -377,8 +432,10 @@ fn cmd_diameter(args: &Args) -> Result<()> {
     }
 
     if mode == ExecMode::MultiProcess {
-        // A pool can't evaluate N(h) driver-side each hop, so it runs a
-        // fixed hop count; OR-idempotence makes extra hops free.
+        // A spawned pool can't evaluate N(h) driver-side each hop, so
+        // it runs a fixed hop count; OR-idempotence makes extra hops
+        // free. (A --pool run drives the same fixed-hop job through the
+        // remote collective plane.)
         let spec = JobSpec {
             dataset,
             scale,
@@ -388,7 +445,11 @@ fn cmd_diameter(args: &Args) -> Result<()> {
             ..JobSpec::diameter()
         };
         let m: usize = degrees.iter().product();
-        let out = CommBuilder::new(degrees).mode(mode).submit(&spec)?;
+        let mut builder = CommBuilder::new(degrees).mode(mode);
+        if let Some(addr) = args.flag("pool") {
+            builder = builder.pool(addr);
+        }
+        let out = builder.submit(&spec)?;
         println!(
             "diameter[MultiProcess]: {max_h} hops on {m} workers in {}; sketch checksum {:.0}",
             human_duration(out.wall_secs),
@@ -417,9 +478,12 @@ fn cmd_diameter(args: &Args) -> Result<()> {
 fn cmd_sgd(args: &Args) -> Result<()> {
     args.expect_known(
         "sgd",
-        &["mode", "features", "classes", "steps", "degrees", "batch", "lr", "feats-per-ex", "seed"],
+        &[
+            "mode", "features", "classes", "steps", "degrees", "batch", "lr", "feats-per-ex",
+            "seed", "pool",
+        ],
     )?;
-    let mode = ExecMode::parse(args.flag("mode").unwrap_or("lockstep"))?;
+    let mode = resolve_mode(args, "lockstep")?;
     let degrees = args.degrees_flag("degrees", &[2, 2])?;
     let spec = JobSpec {
         iters: args.usize_flag("steps", 20)?,
@@ -436,7 +500,11 @@ fn cmd_sgd(args: &Args) -> Result<()> {
         "sgd[{mode:?}]: {} steps of a {}x{} model on {m} workers (batch {}, lr {})",
         spec.iters, spec.features, spec.classes, spec.batch, spec.lr
     );
-    let out = CommBuilder::new(degrees).mode(mode).submit(&spec)?;
+    let mut builder = CommBuilder::new(degrees).mode(mode);
+    if let Some(addr) = args.flag("pool") {
+        builder = builder.pool(addr);
+    }
+    let out = builder.submit(&spec)?;
     for (s, loss) in out.losses.iter().enumerate() {
         if s < 3 || (s + 1) % 5 == 0 || s + 1 == out.losses.len() {
             println!("  step {:>4}  loss {loss:.4}", s + 1);
@@ -687,6 +755,66 @@ fn print_launch_run(cfg: &RunConfig, run: &ClusterRun) {
     if !run.dead.is_empty() {
         println!("[{tag}]   dead workers (masked by replication): {:?}", run.dead);
     }
+}
+
+/// `sar serve`: launch (or join) a worker pool and serve remote
+/// collective clients against it — the app-agnostic door. Clients
+/// connect with `CommBuilder::pool(addr)` (or any `sar` client verb's
+/// `--pool` flag), stream their sparsity pattern and per-round sparse
+/// values, and get reduced results back; the pool never learns an app
+/// name.
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.expect_known(
+        "serve",
+        &["degrees", "threads", "bind", "client-bind", "sessions", "bin", "no-spawn"],
+    )?;
+    let opts = LaunchOpts {
+        degrees: args.degrees_flag("degrees", &[2, 2])?,
+        send_threads: args.usize_flag("threads", 4)?,
+        bind: args.flag("bind").unwrap_or("127.0.0.1:0").to_string(),
+        ..LaunchOpts::default()
+    };
+    let sessions = match args.flag("sessions") {
+        Some(_) => Some(args.usize_flag("sessions", 1)?),
+        None => None,
+    };
+    let client_bind = args.flag("client-bind").unwrap_or("127.0.0.1:0");
+    let client_listener = std::net::TcpListener::bind(client_bind)
+        .with_context(|| format!("binding the client listener on {client_bind}"))?;
+    let client_addr = sparse_allreduce::transport::advertised_addr(&client_listener)
+        .context("deriving the client address")?;
+    let world = opts.world();
+
+    let (mut session, procs) = if args.has_switch("no-spawn") {
+        let coord = cluster::Coordinator::bind(&opts.bind)?;
+        let raw = coord.local_addr()?;
+        let shown = if raw.ip().is_unspecified() {
+            format!("<this-host>:{}", raw.port())
+        } else {
+            raw.to_string()
+        };
+        println!("waiting for {world} workers; start each with:");
+        println!("  sar worker --coordinator {shown}");
+        (coord.accept(opts)?, None)
+    } else {
+        let bin = match args.flag("bin") {
+            Some(b) => PathBuf::from(b),
+            None => cluster::sar_binary()?,
+        };
+        let (session, procs) = cluster::spawn_session(&bin, opts)?;
+        (session, Some(procs))
+    };
+    println!("pool of {world} workers ready; serving collective clients at {client_addr}");
+    println!("connect with:  sar pagerank --pool {client_addr} --degrees <pool schedule>");
+
+    let served = cluster::serve_clients(&mut session, &client_listener, sessions);
+    session.shutdown();
+    if let Some(mut procs) = procs {
+        procs.wait_all();
+    }
+    let served = served?;
+    println!("served {served} client session(s); pool released");
+    Ok(())
 }
 
 fn cmd_config_check(args: &Args) -> Result<()> {

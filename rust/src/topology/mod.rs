@@ -13,5 +13,6 @@ pub mod planner;
 
 pub use butterfly::{Butterfly, NodeId};
 pub use planner::{
-    factorizations, factorizations_bounded, plan_degrees, PlannerParams, MAX_FACTORIZATIONS,
+    factorizations, factorizations_bounded, plan_degrees, plan_degrees_curve, PlannerParams,
+    MAX_FACTORIZATIONS,
 };

@@ -102,6 +102,18 @@ pub fn factorizations_bounded(m: usize, cap: usize) -> Vec<Vec<usize>> {
 /// so the chosen factor multiset is ordered descending before
 /// returning — this maximizes the minimum packet size across layers.
 pub fn plan_degrees(m: usize, params: &PlannerParams) -> Vec<usize> {
+    plan_degrees_curve(m, params, &[])
+}
+
+/// [`plan_degrees`] with a MEASURED per-layer compression curve (e.g. a
+/// `sar tune` profile's `compression` array) instead of the single
+/// constant: layer ℓ's payload shrink uses `curve[ℓ]`, the last entry
+/// extending to deeper layers, and `params.compression` applying only
+/// when the curve is empty. Power-law data compresses hardest at the
+/// wide top layers (many streams collide) and barely at the bottom, so
+/// a measured curve lets the planner keep later layers wider than the
+/// constant-factor guess would (ROADMAP PR 3 follow-up).
+pub fn plan_degrees_curve(m: usize, params: &PlannerParams, curve: &[f64]) -> Vec<usize> {
     assert!(m >= 1);
     if m == 1 {
         return vec![1];
@@ -109,6 +121,7 @@ pub fn plan_degrees(m: usize, params: &PlannerParams) -> Vec<usize> {
     let mut rem = m;
     let mut bytes = params.bytes_per_node;
     let mut degrees = Vec::new();
+    let mut layer = 0usize;
     while rem > 1 {
         let divisors = divisors_desc(rem);
         // Largest k with bytes/k >= floor; fallback smallest prime factor.
@@ -122,8 +135,15 @@ pub fn plan_degrees(m: usize, params: &PlannerParams) -> Vec<usize> {
         rem /= k;
         // Per-node volume entering the next layer: the node received k
         // packets of bytes/k each and the k-way sum compressed their union
-        // by the collision factor.
-        bytes *= params.compression;
+        // by the collision factor — measured per layer when a curve is
+        // given, the planner constant otherwise.
+        let c = curve
+            .get(layer)
+            .or(curve.last())
+            .copied()
+            .unwrap_or(params.compression);
+        bytes *= c.clamp(f64::MIN_POSITIVE, 1.0);
+        layer += 1;
     }
     degrees.sort_unstable_by(|a, b| b.cmp(a));
     degrees
@@ -289,6 +309,36 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Satellite (ROADMAP PR 3 follow-up): a measured per-layer curve
+    /// changes the schedule relative to the constant factor — no
+    /// compression at depth keeps later layers wide, heavy compression
+    /// pushes them to binary — and the last curve entry extends to
+    /// deeper layers.
+    #[test]
+    fn measured_curve_drives_per_layer_planning() {
+        let p = PlannerParams {
+            bytes_per_node: 8.0 * 1024.0 * 1024.0,
+            packet_floor: 2.0 * 1024.0 * 1024.0,
+            compression: 0.5,
+        };
+        // Constant 0.5: 8 MiB → k=4, 4 MiB → k=2, 2 MiB → forced 2.
+        assert_eq!(plan_degrees(16, &p), vec![4, 2, 2]);
+        // Measured "no collisions" curve: volume never shrinks, so the
+        // second layer stays 4-wide.
+        assert_eq!(plan_degrees_curve(16, &p, &[1.0, 1.0]), vec![4, 4]);
+        // A one-entry curve extends to every deeper layer (here: heavy
+        // top-layer compression forces binary below).
+        assert_eq!(plan_degrees_curve(16, &p, &[0.1]), vec![4, 2, 2]);
+        // Empty curve = the constant-factor planner, bit for bit.
+        for m in [2usize, 6, 16, 64] {
+            assert_eq!(plan_degrees_curve(m, &p, &[]), plan_degrees(m, &p));
+        }
+        // Junk factors are clamped, never amplifying volume or panicking.
+        let d = plan_degrees_curve(16, &p, &[7.5, -1.0]);
+        assert_eq!(d.iter().product::<usize>(), 16);
+        assert!(d.windows(2).all(|w| w[0] >= w[1]), "{d:?}");
     }
 
     #[test]

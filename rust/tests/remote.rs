@@ -1,0 +1,223 @@
+//! Remote collective plane acceptance tests: a client process's
+//! `Session` (ExecMode::Mp + pool address) runs the paper's raw
+//! two-phase lifecycle against a separately launched worker pool, with
+//! checksums equal to the lockstep oracle for every reduce operator —
+//! including the client-side `allreduce_with_bottom` — and whole jobs
+//! driven through the same door.
+//!
+//! All tests fork real `sar worker` subprocesses over TCP and are
+//! tagged `mp_` so CI gates them into the tier-2 job
+//! (`cargo test --test remote mp_`).
+
+use sparse_allreduce::cluster::{serve_clients, spawn_session, LaunchOpts};
+use sparse_allreduce::comm::{CommBuilder, ExecMode, JobSpec};
+use sparse_allreduce::sparse::{IndexSet, MaxF32, OrU32, SumF32};
+use std::net::TcpListener;
+use std::path::Path;
+
+fn sar_bin() -> &'static Path {
+    Path::new(env!("CARGO_BIN_EXE_sar"))
+}
+
+/// Spawn a 4-worker replication-1 pool and serve `sessions` collective
+/// clients against it on a background thread; returns the client
+/// address and the serve thread (joins once the clients are done,
+/// releasing and reaping the pool).
+fn serve_pool(sessions: usize) -> (String, std::thread::JoinHandle<()>) {
+    let opts = LaunchOpts { degrees: vec![2, 2], send_threads: 2, ..LaunchOpts::default() };
+    let (mut session, mut procs) = spawn_session(sar_bin(), opts).expect("pool bring-up failed");
+    let listener = TcpListener::bind("127.0.0.1:0").expect("binding client listener");
+    let addr = listener.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn(move || {
+        serve_clients(&mut session, &listener, Some(sessions)).expect("serve loop failed");
+        session.shutdown();
+        procs.wait_all();
+    });
+    (addr, handle)
+}
+
+fn remote_session(addr: &str) -> sparse_allreduce::comm::Session {
+    CommBuilder::new(vec![2, 2])
+        .mode(ExecMode::MultiProcess)
+        .pool(addr)
+        .send_threads(2)
+        .build(64)
+        .expect("connecting the remote session")
+}
+
+fn sets(v: Vec<Vec<i64>>) -> Vec<IndexSet> {
+    v.into_iter().map(IndexSet::from_unsorted).collect()
+}
+
+/// Acceptance: configure once, allreduce repeatedly — SumF32, MaxF32,
+/// then a reconfigure with OrU32 and the client-side bottom transform —
+/// every result identical to a lockstep session fed the same inputs.
+#[test]
+fn mp_remote_collectives_match_lockstep_for_all_ops() {
+    let (addr, serve) = serve_pool(1);
+    {
+        let mut remote = remote_session(&addr);
+        let mut lock = CommBuilder::new(vec![2, 2]).build(64).unwrap();
+
+        let out = sets(vec![vec![1, 5], vec![5, 9], vec![2], vec![]]);
+        let inb = sets(vec![vec![5], vec![1, 2], vec![9], vec![5, 9]]);
+        {
+            let mut rc = remote.configure(out.clone(), inb.clone()).expect("remote configure");
+            let mut lc = lock.configure(out.clone(), inb.clone()).unwrap();
+            // SumF32, twice: the config is reused across rounds.
+            for scale in [1.0f32, 2.0] {
+                let mk = || {
+                    vec![
+                        vec![1.0 * scale, 10.0 * scale],
+                        vec![20.0 * scale, 3.0 * scale],
+                        vec![7.0 * scale],
+                        vec![],
+                    ]
+                };
+                let (mut a, mut b) = (mk(), mk());
+                rc.allreduce::<SumF32>(&mut a).expect("remote sum allreduce");
+                lc.allreduce::<SumF32>(&mut b).unwrap();
+                assert_eq!(a, b, "SumF32 at scale {scale}");
+            }
+            // MaxF32 through the same config and the same path.
+            let mut a = vec![vec![1.0f32, -2.0], vec![0.5, 3.0], vec![7.0], vec![]];
+            let mut b = a.clone();
+            rc.allreduce::<MaxF32>(&mut a).expect("remote max allreduce");
+            lc.allreduce::<MaxF32>(&mut b).unwrap();
+            assert_eq!(a, b, "MaxF32");
+        }
+
+        // Reconfigure (a new sparsity pattern on the same pool).
+        let out2 = sets(vec![vec![3], vec![3], vec![7], vec![]]);
+        let inb2 = sets(vec![vec![3, 7], vec![3], vec![3], vec![7]]);
+        let mut rc = remote.configure(out2.clone(), inb2.clone()).expect("remote reconfigure");
+        let mut lc = lock.configure(out2.clone(), inb2.clone()).unwrap();
+        let mut a = vec![vec![0b01u32], vec![0b10], vec![0b100], vec![]];
+        let mut b = a.clone();
+        rc.allreduce::<OrU32>(&mut a).expect("remote or allreduce");
+        lc.allreduce::<OrU32>(&mut b).unwrap();
+        assert_eq!(a, b, "OrU32 after reconfigure");
+
+        // allreduce_with_bottom: the transform runs client-side in the
+        // remote session and lane-side in lockstep — same pure function,
+        // same contract, identical results.
+        let bottoms = || {
+            (0..4)
+                .map(|_| {
+                    |down: &IndexSet, reduced: &[f32], up: &IndexSet| {
+                        assert_eq!(down.len(), reduced.len());
+                        up.as_slice()
+                            .iter()
+                            .map(|i| down.position(*i).map(|p| -reduced[p]).unwrap_or(0.0))
+                            .collect::<Vec<f32>>()
+                    }
+                })
+                .collect::<Vec<_>>()
+        };
+        let vals = || vec![vec![2.0f32], vec![3.0], vec![1.0], vec![]];
+        let a = rc
+            .allreduce_with_bottom::<SumF32, _>(vals(), bottoms())
+            .expect("remote bottom allreduce");
+        let b = lc.allreduce_with_bottom::<SumF32, _>(vals(), bottoms()).unwrap();
+        assert_eq!(a, b, "allreduce_with_bottom");
+        // Dropping the remote session closes the client connection and
+        // lets the serve loop release the pool.
+    }
+    serve.join().expect("serve thread");
+}
+
+/// A whole job driven through the remote door: no job descriptor
+/// crosses the wire — the PageRank driver runs client-side and only its
+/// collectives run on the pool — yet the checksum equals lockstep's.
+#[test]
+fn mp_remote_pagerank_job_matches_lockstep() {
+    let spec = JobSpec { scale: 0.002, iters: 4, ..JobSpec::pagerank() };
+    let want = CommBuilder::new(vec![2, 2]).submit(&spec).unwrap().checksum;
+    let (addr, serve) = serve_pool(1);
+    let out = CommBuilder::new(vec![2, 2])
+        .mode(ExecMode::MultiProcess)
+        .pool(&addr)
+        .send_threads(2)
+        .submit(&spec)
+        .expect("remote pagerank submit");
+    assert!(
+        (out.checksum - want).abs() < 1e-12,
+        "remote {} vs lockstep {}",
+        out.checksum,
+        want
+    );
+    serve.join().expect("serve thread");
+}
+
+/// The hardest client: SGD reconfigures EVERY step (dynamic sparsity)
+/// and folds gradients through the parameter-server bottom — which on
+/// a remote session runs client-side, keeping the model state in the
+/// client process. The final-loss checksum still equals lockstep's.
+#[test]
+fn mp_remote_sgd_dynamic_configs_match_lockstep() {
+    let spec = JobSpec {
+        iters: 4,
+        classes: 4,
+        batch: 8,
+        features: 300,
+        feats_per_ex: 5,
+        seed: 123,
+        ..JobSpec::sgd()
+    };
+    let want = CommBuilder::new(vec![2, 2]).submit(&spec).unwrap().checksum;
+    let (addr, serve) = serve_pool(1);
+    let out = CommBuilder::new(vec![2, 2])
+        .mode(ExecMode::MultiProcess)
+        .pool(&addr)
+        .send_threads(2)
+        .submit(&spec)
+        .expect("remote sgd submit");
+    assert!(
+        (out.checksum - want).abs() < 1e-12,
+        "remote {} vs lockstep {}",
+        out.checksum,
+        want
+    );
+    serve.join().expect("serve thread");
+}
+
+/// One pool outlives its clients: two consecutive client sessions hit
+/// the same `sar serve`d pool (no relaunch between them) and both land
+/// on the lockstep checksum.
+#[test]
+fn mp_remote_pool_serves_consecutive_clients() {
+    let spec = JobSpec { scale: 0.002, iters: 3, ..JobSpec::pagerank() };
+    let want = CommBuilder::new(vec![2, 2]).submit(&spec).unwrap().checksum;
+    let (addr, serve) = serve_pool(2);
+    for round in 0..2 {
+        let out = CommBuilder::new(vec![2, 2])
+            .mode(ExecMode::MultiProcess)
+            .pool(&addr)
+            .send_threads(2)
+            .submit(&spec)
+            .unwrap_or_else(|e| panic!("client {round} failed: {e:#}"));
+        assert!(
+            (out.checksum - want).abs() < 1e-12,
+            "client {round}: remote {} vs lockstep {}",
+            out.checksum,
+            want
+        );
+    }
+    serve.join().expect("serve thread");
+}
+
+/// A schedule mismatch between the client and the pool is a readable
+/// error at connect time, not a wedged collective.
+#[test]
+fn mp_remote_schedule_mismatch_is_rejected() {
+    let (addr, serve) = serve_pool(1);
+    let err = CommBuilder::new(vec![4, 2])
+        .mode(ExecMode::MultiProcess)
+        .pool(&addr)
+        .build(64)
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("schedule"), "got: {err:#}");
+    // The failed client still consumed its serve slot (the connection
+    // opened and closed), so the pool shuts down cleanly.
+    serve.join().expect("serve thread");
+}

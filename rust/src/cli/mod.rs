@@ -144,6 +144,7 @@ COMMANDS:
   worker        join a multi-process worker pool as a daemon
   launch        coordinate a worker pool: one JOIN, N jobs
   serve         serve remote collective clients against a worker pool
+  serve-bench   measure serial vs multiplexed client serving (BENCH_6)
   config-check  validate a cluster config file
   help          show usage (`sar help <command>` for one command)
 
@@ -215,10 +216,14 @@ global graph — and still land on the lockstep oracle's checksum.
   --partition p    edge-partition strategy (random|greedy)       [random]
   --edges path     shard a `src dst` edge-list text file instead
                    of a synthetic preset (as-is, no cleanup)
-  --from path      convert + shard a SNAP-style edge list (whitespace
-                   separated `src dst`, `#` comments): duplicate edges
-                   collapsed, edge order canonicalized, so real
-                   downloads flow into the shard pipeline",
+  --from path      convert + shard a real download. A `.mtx` extension
+                   parses Matrix Market coordinate format (general or
+                   symmetric, values ignored, symmetric entries
+                   mirrored); anything else parses as a SNAP-style edge
+                   list (whitespace separated `src dst`, `#` comments).
+                   Both collapse duplicate edges and canonicalize edge
+                   order, so real downloads flow into the shard
+                   pipeline deterministically",
         "pagerank" => "\
 USAGE: sar pagerank [--mode lockstep|threaded|distributed|mp] [--distributed]
                     [--dataset twitter|yahoo|docterm] [--scale f]
@@ -337,7 +342,9 @@ with the job name so multi-job output is attributable.
                    in --file configs)",
         "serve" => "\
 USAGE: sar serve [--degrees 2x2] [--threads t] [--bind addr]
-                 [--client-bind addr] [--sessions n] [--no-spawn] [--bin path]
+                 [--client-bind addr] [--sessions n] [--queue n]
+                 [--keepalive-secs s] [--total-sessions n]
+                 [--no-spawn] [--bin path]
 
 Serve remote collective clients against a worker pool: launch (or, with
 --no-spawn, wait for) the workers, then accept client sessions on the
@@ -346,18 +353,42 @@ per-round sparse values (`allreduce`), the workers run the app-agnostic
 generic collective engine — SumF32 | OrU32 | MaxF32, including the
 client-side allreduce_with_bottom — and reduced results stream back.
 No app name ever crosses the wire, so ANY workload runs distributed.
-Clients connect with `CommBuilder::pool(addr)` or the `--pool` flag of
-sar pagerank/diameter/sgd. Replication is not supported (collectives
-need every lane; launch a replication-1 pool).
+The serve plane is multi-tenant: up to --sessions clients share the
+pool concurrently (each in its own job-scoped tag space), arrivals past
+the limit wait in a bounded queue, complete rounds dispatch round-robin
+across sessions, and a session idle past the keepalive is evicted with
+its worker state released. Clients connect with
+`CommBuilder::pool(addr)` or the `--pool` flag of sar
+pagerank/diameter/sgd. Replication is not supported (collectives need
+every lane; launch a replication-1 pool).
+  --degrees kxk       butterfly degree schedule over the pool [2x2]
+  --threads t         sender threads per worker               [4]
+  --bind a            worker control-plane bind address       [127.0.0.1:0]
+  --client-bind a     client-facing bind address              [127.0.0.1:0]
+  --sessions n        concurrent live client session limit    [4]
+  --queue n           wait-queue depth past the live limit    [16]
+  --keepalive-secs s  evict sessions idle this long           [120]
+  --total-sessions n  serve n sessions in total, then release the pool
+                      (default: serve until killed)
+  --no-spawn          wait for externally-started workers instead of
+                      forking them locally
+  --bin path          sar binary to spawn local workers from  [current exe]",
+        "serve-bench" => "\
+USAGE: sar serve-bench [--degrees 2x2] [--threads t] [--rounds n]
+                       [--out BENCH_6.json] [--bin path] [--fast]
+
+Measure the multi-tenant serve plane's headline: the wall-clock of two
+collective clients served serially vs multiplexed on one pool. Each
+client configures its own sparsity pattern and runs --rounds SumF32
+allreduces; every run's checksum is validated against the lockstep
+oracle before any timing is recorded. Emits the machine-readable
+trajectory row (BENCH_6.json).
   --degrees kxk    butterfly degree schedule over the pool [2x2]
-  --threads t      sender threads per worker               [4]
-  --bind a         worker control-plane bind address       [127.0.0.1:0]
-  --client-bind a  client-facing bind address              [127.0.0.1:0]
-  --sessions n     serve n client sessions, then release the pool
-                   (default: serve until killed)
-  --no-spawn       wait for externally-started workers instead of
-                   forking them locally
-  --bin path       sar binary to spawn local workers from  [current exe]",
+  --threads t      sender threads per worker               [2]
+  --rounds n       allreduce rounds per client session     [16]
+  --out path       bench trajectory output                 [BENCH_6.json]
+  --bin path       sar binary to spawn pool workers from   [current exe]
+  --fast           CI smoke mode: fewer iterations",
         "config-check" => "\
 USAGE: sar config-check --file <path>
 
@@ -423,7 +454,7 @@ mod tests {
     fn every_command_has_usage() {
         for cmd in [
             "info", "plan", "tune", "shard", "pagerank", "diameter", "sgd", "train", "worker",
-            "launch", "serve", "config-check", "help",
+            "launch", "serve", "serve-bench", "config-check", "help",
         ] {
             assert!(usage_for(cmd).is_some(), "missing usage for {cmd}");
             assert!(USAGE.contains(cmd), "top-level usage missing {cmd}");

@@ -25,7 +25,7 @@ use crate::graph::ShardManifest;
 use crate::metrics::{IterTiming, RunMetrics};
 use crate::util::Summary;
 use anyhow::{bail, Context, Result};
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
@@ -346,6 +346,14 @@ pub struct Coordinator {
     listener: TcpListener,
 }
 
+/// Per-collective-config coordinator state: the CONFIG_DONE barrier
+/// votes and the RESULT inbox of ONE remote collective config (= one
+/// client session's live sparsity pattern).
+struct CollectiveState {
+    config_done: Vec<bool>,
+    inbox: VecDeque<ResultMsg>,
+}
+
 enum Event {
     Msg(CtrlMsg),
     Eof,
@@ -370,9 +378,12 @@ pub struct Session {
     /// Whether the current job's run has been collected.
     collected: bool,
     config_done: Vec<bool>,
-    /// RESULT messages of the current remote collective config,
-    /// in arrival order (drained by [`Session::collective_next_result`]).
-    collective_inbox: VecDeque<ResultMsg>,
+    /// Live remote collective configs, keyed by pool job id. Unlike app
+    /// jobs, ANY number of collective configs may be live at once — one
+    /// per multiplexed client session (see [`super::serve`]); each keeps
+    /// its own barrier votes and RESULT inbox so pump routing never
+    /// crosses sessions.
+    collectives: HashMap<u32, CollectiveState>,
     reports: Vec<Option<WorkerReport>>,
     failures: Vec<(usize, String)>,
     started_at: Option<Instant>,
@@ -533,7 +544,7 @@ impl Coordinator {
             current_name: String::new(),
             collected: false,
             config_done: vec![false; world],
-            collective_inbox: VecDeque::new(),
+            collectives: HashMap::new(),
             reports: (0..world).map(|_| None).collect(),
             failures: Vec::new(),
             started_at: None,
@@ -566,7 +577,9 @@ impl Session {
         let cur = self.current_job;
         match self.events.recv_timeout(wait) {
             Ok((w, Event::Msg(CtrlMsg::ConfigDone { job }))) => {
-                if Some(job) == cur {
+                if let Some(c) = self.collectives.get_mut(&job) {
+                    c.config_done[w] = true;
+                } else if Some(job) == cur {
                     self.config_done[w] = true;
                 } else {
                     log::warn!("stale CONFIG_DONE (job {job}) from worker {w}");
@@ -580,8 +593,8 @@ impl Session {
                 }
             }
             Ok((w, Event::Msg(CtrlMsg::Result(r)))) => {
-                if Some(r.job) == cur {
-                    self.collective_inbox.push_back(r);
+                if let Some(c) = self.collectives.get_mut(&r.job) {
+                    c.inbox.push_back(r);
                 } else {
                     log::warn!("stale RESULT (collective {}) from worker {w}", r.job);
                 }
@@ -622,6 +635,13 @@ impl Session {
             bail!(
                 "sgd's parameter-server bottom holds worker-local model state; \
                  replication > 1 is not supported for sgd jobs"
+            );
+        }
+        if !self.collectives.is_empty() {
+            bail!(
+                "{} remote collective session(s) are live on this pool; app jobs and \
+                 collective sessions cannot share the data plane",
+                self.collectives.len()
             );
         }
         if self.current_job.is_some() {
@@ -871,9 +891,11 @@ impl Session {
     // --- remote collective plane (see `cluster::serve`) ------------------
 
     /// Begin serving one remote collective config: allocate its pool
-    /// job id and reset the barrier state. Requires a replication-1
-    /// pool (the generic engine has no replica story — ROADMAP PR 5
-    /// follow-up) and no app job in flight.
+    /// job id and its own barrier/inbox state. Any number of collective
+    /// configs may be live at once (one per multiplexed client
+    /// session) — what stays exclusive is app jobs, which own the whole
+    /// pool. Requires a replication-1 pool (the generic engine has no
+    /// replica story — ROADMAP PR 5 follow-up).
     pub fn collective_begin(&mut self) -> Result<u32> {
         if self.opts.replication > 1 {
             bail!(
@@ -890,28 +912,19 @@ impl Session {
         }
         let job = self.job_seq;
         self.job_seq += 1;
-        for c in self.config_done.iter_mut() {
-            *c = false;
-        }
-        self.collective_inbox.clear();
-        self.current_job = Some(job);
-        self.current_name = format!("collective-{job}");
-        // No REPORT cycle rides a collective config; mark it collected
-        // so nothing ever waits on one.
-        self.collected = true;
-        self.started_at = None;
+        let world = self.world();
+        self.collectives.insert(
+            job,
+            CollectiveState { config_done: vec![false; world], inbox: VecDeque::new() },
+        );
         Ok(job)
     }
 
     /// Forward one lane's CONFIGURE to its worker (lane = physical
     /// worker on the replication-1 pools collectives run on).
     pub fn collective_configure(&mut self, msg: ConfigureMsg) -> Result<()> {
-        if Some(msg.job) != self.current_job {
-            bail!(
-                "CONFIGURE for collective {} but the pool is serving {:?}",
-                msg.job,
-                self.current_job
-            );
+        if !self.collectives.contains_key(&msg.job) {
+            bail!("CONFIGURE for collective {} but that config is not live", msg.job);
         }
         let lane = msg.lane as usize;
         if lane >= self.writers.len() {
@@ -924,18 +937,19 @@ impl Session {
             .with_context(|| format!("sending CONFIGURE to worker {lane}"))
     }
 
-    /// Barrier until every worker voted CONFIG_DONE for the current
-    /// collective config (collectives need the full world: there is no
+    /// Barrier until every worker voted CONFIG_DONE for collective
+    /// config `job` (collectives need the full world: there is no
     /// replica to absorb a dead lane).
-    pub fn collective_config_barrier(&mut self) -> Result<()> {
-        if self.current_job.is_none() {
-            bail!("no collective config begun");
+    pub fn collective_config_barrier(&mut self, job: u32) -> Result<()> {
+        if !self.collectives.contains_key(&job) {
+            bail!("no collective config {job} begun");
         }
         let deadline = Instant::now() + self.opts.phase_deadline;
         loop {
             self.pump(Duration::from_millis(20));
             let world = self.world();
-            if (0..world).all(|w| self.config_done[w]) {
+            let state = self.collectives.get(&job).expect("checked above");
+            if (0..world).all(|w| state.config_done[w]) {
                 return Ok(());
             }
             if (0..world).any(|w| self.detector.is_hard_dead(w)) {
@@ -952,12 +966,8 @@ impl Session {
 
     /// Forward one lane's VALUES to its worker.
     pub fn collective_values(&mut self, msg: ValuesMsg) -> Result<()> {
-        if Some(msg.job) != self.current_job {
-            bail!(
-                "VALUES for collective {} but the pool is serving {:?}",
-                msg.job,
-                self.current_job
-            );
+        if !self.collectives.contains_key(&msg.job) {
+            bail!("VALUES for collective {} but that config is not live", msg.job);
         }
         let lane = msg.lane as usize;
         if lane >= self.writers.len() {
@@ -970,15 +980,18 @@ impl Session {
             .with_context(|| format!("sending VALUES to worker {lane}"))
     }
 
-    /// Pump until the next RESULT of the current collective config
-    /// arrives (arrival order; the client buffers by lane).
-    pub fn collective_next_result(&mut self) -> Result<ResultMsg> {
-        if self.current_job.is_none() {
-            bail!("no collective config begun");
+    /// Pump until the next RESULT of collective config `job` arrives
+    /// (arrival order; the client buffers by lane). Other live configs'
+    /// RESULTs land in their own inboxes meanwhile.
+    pub fn collective_next_result(&mut self, job: u32) -> Result<ResultMsg> {
+        if !self.collectives.contains_key(&job) {
+            bail!("no collective config {job} begun");
         }
         let deadline = Instant::now() + self.opts.phase_deadline;
         loop {
-            if let Some(r) = self.collective_inbox.pop_front() {
+            if let Some(r) =
+                self.collectives.get_mut(&job).and_then(|state| state.inbox.pop_front())
+            {
                 return Ok(r);
             }
             if (0..self.world()).any(|w| self.detector.is_hard_dead(w)) {
@@ -991,13 +1004,29 @@ impl Session {
         }
     }
 
-    /// End the collective session: the pool returns to idle, ready for
-    /// app jobs or the next client.
-    pub fn collective_end(&mut self) {
-        self.current_job = None;
-        self.current_name = String::new();
-        self.collected = false;
-        self.collective_inbox.clear();
+    /// Release collective config `job`: drop its coordinator state and
+    /// tell every live worker to free the config's protocol handle (and
+    /// with it the scatter state its config phase built). Idempotent;
+    /// best-effort on the wire — a worker that already died simply has
+    /// nothing left to free.
+    pub fn collective_release(&mut self, job: u32) {
+        if self.collectives.remove(&job).is_none() {
+            return;
+        }
+        for (w, writer) in self.writers.iter().enumerate() {
+            if self.detector.is_hard_dead(w) {
+                continue;
+            }
+            if let Err(e) = send_ctrl(writer, COORD, &CtrlMsg::Release { job }) {
+                log::warn!("RELEASE of collective {job} to worker {w} failed: {e}");
+            }
+        }
+    }
+
+    /// Live remote collective configs (one per multiplexed client
+    /// session holding a configured pattern).
+    pub fn collectives_live(&self) -> usize {
+        self.collectives.len()
     }
 
     /// Release the pool (idempotent; also runs on drop).

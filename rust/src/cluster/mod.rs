@@ -38,12 +38,16 @@
 //! ```
 //!
 //! Next to the per-job cycle the same pool serves the **remote
-//! collective plane** (`sar serve`, see [`serve`]): a client process
-//! streams CONFIGURE (per-lane sparsity patterns) and per-round VALUES
+//! collective plane** (`sar serve`, see [`serve`]): client processes
+//! stream CONFIGURE (per-lane sparsity patterns) and per-round VALUES
 //! through the coordinator, workers run the app-agnostic generic
 //! engine — no `JobPlan` app tag — and RESULTs stream back. That is the
 //! paper's raw `configure`/`allreduce` lifecycle offered over the wire,
-//! consumed by [`crate::comm::RemoteSession`].
+//! consumed by [`crate::comm::RemoteSession`]. The serve plane is
+//! multi-tenant: the [`mux`] subsystem multiplexes N concurrent client
+//! sessions over one pool (admission control, fair batch scheduling,
+//! keepalive eviction), each session holding its own job-scoped worker
+//! config that a RELEASE frees without touching the fabric.
 //!
 //! Failure handling: heartbeats and control-connection EOFs feed a
 //! [`crate::fault::FailureDetector`]. With `replication > 1` a dead
@@ -66,6 +70,7 @@
 //!   binary for true multi-process runs on one machine.
 
 pub mod launch;
+pub mod mux;
 pub mod proto;
 pub mod serve;
 pub mod spawn;
@@ -73,7 +78,7 @@ pub mod worker;
 
 pub use launch::{rtt_straggler, ClusterRun, Coordinator, LaunchOpts, RttTracker, Session};
 pub use proto::{ConfigureMsg, CtrlMsg, JobPlan, ResultMsg, ValuesMsg, WorkerPlan, WorkerReport};
-pub use serve::serve_clients;
+pub use serve::{serve_clients, serve_mux, ServeOpts, ServeStats};
 pub use spawn::{
     default_degrees, launch_local, launch_local_jobs, sar_binary, spawn_local, spawn_session,
     spawn_workers, LocalProcs, MAX_LOCAL_WORKERS,

@@ -1,0 +1,149 @@
+//! Admission control: a live-session limit with a bounded wait queue.
+//!
+//! `--sessions n` caps how many client sessions hold relay state (and
+//! worker-side scatter state) at once. An arrival past the cap waits in
+//! a FIFO queue of bounded depth — the connection simply isn't answered
+//! yet, which is the whole backpressure story: the client blocks in its
+//! own handshake timeout, no protocol needed. Arrivals past the queue
+//! are rejected immediately so a stampede degrades into readable
+//! "busy" errors instead of unbounded memory.
+//!
+//! Generic over the queued payload so the policy is unit-testable with
+//! plain integers; the serve loop queues pending connections.
+
+use std::collections::VecDeque;
+
+/// What happened to an offered arrival.
+#[derive(Debug)]
+pub enum Offer<T> {
+    /// Under the live cap: serve it now.
+    Admitted(T),
+    /// Over the cap but under the queue bound: parked (FIFO); `depth`
+    /// is its 1-based position in the queue.
+    Queued { depth: usize },
+    /// Queue full: turn it away (payload handed back for the refusal).
+    Rejected(T),
+}
+
+/// Live-limit + bounded-FIFO admission state.
+#[derive(Debug)]
+pub struct Admission<T> {
+    max_live: usize,
+    queue_depth: usize,
+    live: usize,
+    queue: VecDeque<T>,
+}
+
+impl<T> Admission<T> {
+    /// `max_live` is clamped to >= 1 (a pool that admits nobody serves
+    /// nobody forever); `queue_depth` 0 is valid (reject when full).
+    pub fn new(max_live: usize, queue_depth: usize) -> Self {
+        Self { max_live: max_live.max(1), queue_depth, live: 0, queue: VecDeque::new() }
+    }
+
+    /// Sessions currently holding live slots.
+    pub fn live(&self) -> usize {
+        self.live
+    }
+
+    /// Arrivals parked in the wait queue.
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Offer one arrival.
+    pub fn offer(&mut self, t: T) -> Offer<T> {
+        if self.live < self.max_live {
+            self.live += 1;
+            Offer::Admitted(t)
+        } else if self.queue.len() < self.queue_depth {
+            self.queue.push_back(t);
+            Offer::Queued { depth: self.queue.len() }
+        } else {
+            Offer::Rejected(t)
+        }
+    }
+
+    /// A live session ended; its slot is free. Promotion is a separate
+    /// step ([`Self::promote`]) so the caller can decide NOT to promote
+    /// (e.g. a `--total-sessions` budget just ran out).
+    pub fn release(&mut self) {
+        debug_assert!(self.live > 0, "release without a live session");
+        self.live = self.live.saturating_sub(1);
+    }
+
+    /// Move the head of the wait queue into a live slot, if both exist.
+    pub fn promote(&mut self) -> Option<T> {
+        if self.live >= self.max_live {
+            return None;
+        }
+        let t = self.queue.pop_front()?;
+        self.live += 1;
+        Some(t)
+    }
+
+    /// Pop the head of the wait queue WITHOUT admitting it (the caller
+    /// is refusing it — shutdown, exhausted session budget).
+    pub fn dequeue(&mut self) -> Option<T> {
+        self.queue.pop_front()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn admitted<T: std::fmt::Debug>(o: Offer<T>) -> T {
+        match o {
+            Offer::Admitted(t) => t,
+            other => panic!("expected Admitted, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn admits_to_cap_then_queues_then_rejects() {
+        let mut a = Admission::new(2, 2);
+        assert_eq!(admitted(a.offer(10)), 10);
+        assert_eq!(admitted(a.offer(11)), 11);
+        assert_eq!(a.live(), 2);
+        assert!(matches!(a.offer(12), Offer::Queued { depth: 1 }));
+        assert!(matches!(a.offer(13), Offer::Queued { depth: 2 }));
+        assert!(matches!(a.offer(14), Offer::Rejected(14)));
+        assert_eq!(a.queued(), 2);
+    }
+
+    #[test]
+    fn release_then_promote_is_fifo() {
+        let mut a = Admission::new(1, 4);
+        let _ = admitted(a.offer(1));
+        assert!(matches!(a.offer(2), Offer::Queued { .. }));
+        assert!(matches!(a.offer(3), Offer::Queued { .. }));
+        // No free slot yet: promote is a no-op.
+        assert!(a.promote().is_none());
+        a.release();
+        assert_eq!(a.promote(), Some(2));
+        assert_eq!(a.live(), 1);
+        a.release();
+        assert_eq!(a.promote(), Some(3));
+        assert!(a.promote().is_none());
+    }
+
+    #[test]
+    fn dequeue_refuses_without_admitting() {
+        let mut a = Admission::new(1, 4);
+        let _ = admitted(a.offer(1));
+        assert!(matches!(a.offer(2), Offer::Queued { .. }));
+        a.release();
+        assert_eq!(a.dequeue(), Some(2));
+        assert_eq!(a.live(), 0);
+        assert_eq!(a.queued(), 0);
+    }
+
+    #[test]
+    fn zero_caps_are_survivable() {
+        // max_live clamps to 1; queue_depth 0 rejects immediately.
+        let mut a = Admission::new(0, 0);
+        let _ = admitted(a.offer(1));
+        assert!(matches!(a.offer(2), Offer::Rejected(2)));
+    }
+}

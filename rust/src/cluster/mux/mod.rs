@@ -1,0 +1,41 @@
+//! Session multiplexer: the pure core of the multi-tenant serve plane.
+//!
+//! [`super::serve`] turns a worker pool into a service; this module is
+//! the policy layer that lets MANY client sessions share that service
+//! safely. It is deliberately I/O-free — no sockets, no threads — so
+//! every decision the relay makes is unit-testable in isolation:
+//!
+//! - [`admission`]: who gets a live slot. `sar serve --sessions` is a
+//!   live limit, not a lifetime count; clients past it wait in a
+//!   bounded queue and overflow is rejected with a readable error.
+//! - [`session`]: per-client protocol state machine. Each session
+//!   assembles and validates complete distinct-lane batches (the same
+//!   rules the PR-5 serial relay enforced) and surfaces them as
+//!   dispatchable [`session::Batch`]es; nothing half-streamed or
+//!   malformed ever reaches a worker.
+//! - [`scheduler`]: which validated batch goes to the pool next.
+//!   Round-robin over sessions with work, so one heavy client cannot
+//!   starve the rest — cf. "On the Computation Rate of All-Reduce"
+//!   (PAPERS.md) on the throughput a serial relay leaves on the floor.
+//! - [`registry`]: session bookkeeping + idle tracking, feeding the
+//!   keepalive sweep that evicts abandoned clients and frees their
+//!   scatter state on the workers (the RELEASE path).
+//!
+//! Why batches and not frames: worker control loops are
+//! single-threaded and protocol handles buffer unexpected envelopes
+//! per-handle, so two *interleaved* rounds from different jobs would
+//! steal each other's data-plane traffic. The relay therefore
+//! dispatches exactly one complete batch pool-wide at a time and
+//! drains its results before the next — sessions multiplex at batch
+//! granularity, which is also the fairness unit the scheduler rotates
+//! over.
+
+pub mod admission;
+pub mod registry;
+pub mod scheduler;
+pub mod session;
+
+pub use admission::{Admission, Offer};
+pub use registry::Registry;
+pub use scheduler::RoundRobin;
+pub use session::{Batch, SessionSm, Step};

@@ -1,0 +1,135 @@
+//! Session registry: id allocation, per-session bookkeeping, and the
+//! idle scan behind keepalive eviction.
+//!
+//! Generic over the connection payload `C` (the serve loop stores its
+//! socket halves and reader-thread handle there) so the policy — who is
+//! idle, who owns what — tests without any I/O.
+
+use super::session::SessionSm;
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// One registered client session.
+pub struct Entry<C> {
+    pub conn: C,
+    pub sm: SessionSm,
+    /// Last time the client showed signs of life (any frame arrived or
+    /// a batch of its work was dispatched).
+    pub last_activity: Instant,
+}
+
+/// All live sessions, keyed by serve-assigned session id.
+pub struct Registry<C> {
+    next_sid: u64,
+    entries: HashMap<u64, Entry<C>>,
+}
+
+impl<C> Registry<C> {
+    pub fn new() -> Self {
+        Self { next_sid: 1, entries: HashMap::new() }
+    }
+
+    /// Register a newly admitted session; allocates its id and a fresh
+    /// state machine for a `world`-lane pool.
+    pub fn admit(&mut self, conn: C, world: usize, now: Instant) -> u64 {
+        let sid = self.next_sid;
+        self.next_sid += 1;
+        self.entries.insert(sid, Entry { conn, sm: SessionSm::new(world), last_activity: now });
+        sid
+    }
+
+    pub fn get(&self, sid: u64) -> Option<&Entry<C>> {
+        self.entries.get(&sid)
+    }
+
+    pub fn get_mut(&mut self, sid: u64) -> Option<&mut Entry<C>> {
+        self.entries.get_mut(&sid)
+    }
+
+    /// Unregister (eviction, goodbye, or connection loss); the entry is
+    /// handed back so the caller can release its pool job and reap its
+    /// connection.
+    pub fn remove(&mut self, sid: u64) -> Option<Entry<C>> {
+        self.entries.remove(&sid)
+    }
+
+    /// Refresh a session's idle clock.
+    pub fn touch(&mut self, sid: u64, now: Instant) {
+        if let Some(e) = self.entries.get_mut(&sid) {
+            e.last_activity = now;
+        }
+    }
+
+    /// Sessions idle for at least `keepalive` — the eviction candidates
+    /// of one keepalive sweep.
+    pub fn idle(&self, now: Instant, keepalive: Duration) -> Vec<u64> {
+        let mut stale: Vec<u64> = self
+            .entries
+            .iter()
+            .filter(|(_, e)| now.saturating_duration_since(e.last_activity) >= keepalive)
+            .map(|(&sid, _)| sid)
+            .collect();
+        stale.sort_unstable();
+        stale
+    }
+
+    /// Every live session id (sorted for deterministic sweeps).
+    pub fn sids(&self) -> Vec<u64> {
+        let mut sids: Vec<u64> = self.entries.keys().copied().collect();
+        sids.sort_unstable();
+        sids
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+impl<C> Default for Registry<C> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_with_distinct_ids_and_removes() {
+        let mut reg: Registry<&str> = Registry::new();
+        let now = Instant::now();
+        let a = reg.admit("a", 4, now);
+        let b = reg.admit("b", 4, now);
+        assert_ne!(a, b);
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.get(a).unwrap().conn, "a");
+        let e = reg.remove(a).unwrap();
+        assert_eq!(e.conn, "a");
+        assert!(reg.get(a).is_none());
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn idle_scan_finds_only_stale_sessions() {
+        let mut reg: Registry<()> = Registry::new();
+        let t0 = Instant::now();
+        let a = reg.admit((), 2, t0);
+        let b = reg.admit((), 2, t0);
+        let keepalive = Duration::from_secs(10);
+        let later = t0 + Duration::from_secs(11);
+        // b showed life at t0+6: only a is stale at t0+11.
+        reg.touch(b, t0 + Duration::from_secs(6));
+        assert_eq!(reg.idle(later, keepalive), vec![a]);
+        // Touching a saves it from the next sweep.
+        reg.touch(a, later);
+        assert!(reg.idle(later, keepalive).is_empty());
+        // A clock that hasn't advanced past anyone's activity evicts
+        // no one (saturating arithmetic, no panic).
+        assert!(reg.idle(t0, keepalive).is_empty());
+    }
+}

@@ -1,0 +1,157 @@
+//! Batch scheduler: round-robin over sessions with a dispatchable
+//! batch.
+//!
+//! The pool runs one complete batch at a time (see the module docs in
+//! [`super`]), so which session's batch goes next IS the fairness
+//! policy. Plain round-robin suffices: a session that always has work
+//! (a tight allreduce loop) advances the cursor past itself after every
+//! dispatch, so a session that only occasionally has work is picked the
+//! moment its turn comes around — one heavy client cannot starve the
+//! rest, and with a single client the rotation degenerates to "serve it
+//! every time" (no throughput lost vs the PR-5 serial relay).
+
+use std::collections::HashSet;
+
+/// Round-robin over registered session ids, dispatching only those
+/// marked ready (holding a complete validated batch).
+#[derive(Debug, Default)]
+pub struct RoundRobin {
+    order: Vec<u64>,
+    cursor: usize,
+    ready: HashSet<u64>,
+}
+
+impl RoundRobin {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a session to the rotation (at the end: newcomers wait one
+    /// full turn at most).
+    pub fn register(&mut self, sid: u64) {
+        debug_assert!(!self.order.contains(&sid), "session {sid} registered twice");
+        self.order.push(sid);
+    }
+
+    /// Drop a session from the rotation (eviction or goodbye).
+    pub fn remove(&mut self, sid: u64) {
+        self.ready.remove(&sid);
+        if let Some(pos) = self.order.iter().position(|&s| s == sid) {
+            self.order.remove(pos);
+            // Keep the cursor pointing at the same NEXT session.
+            if pos < self.cursor {
+                self.cursor -= 1;
+            }
+            if !self.order.is_empty() {
+                self.cursor %= self.order.len();
+            } else {
+                self.cursor = 0;
+            }
+        }
+    }
+
+    /// The session's state machine produced a complete batch.
+    pub fn mark_ready(&mut self, sid: u64) {
+        debug_assert!(self.order.contains(&sid), "session {sid} not registered");
+        self.ready.insert(sid);
+    }
+
+    /// Pick the next session to dispatch, rotating fairly; clears its
+    /// ready mark (it re-arms when its next batch completes).
+    pub fn next_ready(&mut self) -> Option<u64> {
+        let n = self.order.len();
+        for i in 0..n {
+            let idx = (self.cursor + i) % n;
+            let sid = self.order[idx];
+            if self.ready.remove(&sid) {
+                self.cursor = (idx + 1) % n;
+                return Some(sid);
+            }
+        }
+        None
+    }
+
+    /// Sessions in the rotation (ready or not).
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rotates_fairly_among_always_ready_sessions() {
+        let mut rr = RoundRobin::new();
+        for sid in [1, 2, 3] {
+            rr.register(sid);
+        }
+        let mut picks = Vec::new();
+        for _ in 0..6 {
+            for sid in [1, 2, 3] {
+                rr.mark_ready(sid);
+            }
+            picks.push(rr.next_ready().unwrap());
+        }
+        assert_eq!(picks, vec![1, 2, 3, 1, 2, 3]);
+    }
+
+    #[test]
+    fn heavy_session_cannot_starve_a_light_one() {
+        let mut rr = RoundRobin::new();
+        rr.register(1); // heavy: re-arms after every dispatch
+        rr.register(2); // light: becomes ready once, mid-stream
+        rr.mark_ready(1);
+        assert_eq!(rr.next_ready(), Some(1));
+        rr.mark_ready(1);
+        rr.mark_ready(2);
+        // 2's turn comes immediately — the heavy client just went.
+        assert_eq!(rr.next_ready(), Some(2));
+        assert_eq!(rr.next_ready(), Some(1));
+        assert_eq!(rr.next_ready(), None);
+    }
+
+    #[test]
+    fn removal_mid_rotation_keeps_the_cursor_sane() {
+        let mut rr = RoundRobin::new();
+        for sid in [1, 2, 3] {
+            rr.register(sid);
+        }
+        for sid in [1, 2, 3] {
+            rr.mark_ready(sid);
+        }
+        assert_eq!(rr.next_ready(), Some(1));
+        rr.remove(1); // cursor pointed at 2; must keep pointing there
+        assert_eq!(rr.next_ready(), Some(2));
+        assert_eq!(rr.next_ready(), Some(3));
+        rr.remove(3);
+        rr.remove(2);
+        assert!(rr.is_empty());
+        assert_eq!(rr.next_ready(), None);
+        // Re-registering after total drain starts a fresh rotation.
+        rr.register(9);
+        rr.mark_ready(9);
+        assert_eq!(rr.next_ready(), Some(9));
+    }
+
+    #[test]
+    fn unready_sessions_are_skipped_without_losing_their_turn() {
+        let mut rr = RoundRobin::new();
+        for sid in [1, 2, 3] {
+            rr.register(sid);
+        }
+        rr.mark_ready(2);
+        assert_eq!(rr.next_ready(), Some(2));
+        // Cursor now past 2: when 1 and 3 arm, 3 goes first (order
+        // position after the cursor), then 1 wraps around.
+        rr.mark_ready(1);
+        rr.mark_ready(3);
+        assert_eq!(rr.next_ready(), Some(3));
+        assert_eq!(rr.next_ready(), Some(1));
+    }
+}

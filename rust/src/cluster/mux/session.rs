@@ -1,0 +1,462 @@
+//! Per-client session state machine: assemble and validate complete
+//! distinct-lane batches, decoupled from all I/O.
+//!
+//! This is the PR-5 serial relay's validation logic lifted into a pure
+//! machine: the serve loop feeds it decoded client frames and it
+//! answers with [`Step`]s — keep reading, dispatch this [`Batch`], or
+//! say goodbye — plus a violation message when the client misbehaves.
+//! Batch-completeness is what makes multiplexing safe: nothing is
+//! dispatchable until every lane's piece arrived and validated, so a
+//! client that streams half a batch and dies (or repeats a lane, or
+//! mixes operators within a round) never strands a worker inside a
+//! collective its peers won't join.
+//!
+//! The machine is strictly request-response: while a batch is being
+//! dispatched (between [`Step::Ready`] and the serve loop's
+//! `config_dispatched`/`round_dispatched` call) any further frame is a
+//! violation. Compliant clients ([`crate::comm::remote`]) block on the
+//! batch's acks before sending more, so only a pipelining hand-rolled
+//! client can hit this.
+
+use crate::cluster::proto::{
+    op_code_width, ConfigureMsg, CtrlMsg, ValuesMsg, VAL_STAGE_DOWN, VAL_STAGE_UP,
+};
+
+/// A complete, validated, dispatchable unit of client work.
+#[derive(Debug)]
+pub enum Batch {
+    /// One CONFIGURE per lane (client job ids; the relay rewrites them
+    /// to the pool job id it allocates).
+    Config(Vec<ConfigureMsg>),
+    /// One VALUES per lane, all same `(seq, stage, op)`.
+    Round { seq: u32, stage: u8, op: u8, batch: Vec<ValuesMsg> },
+}
+
+/// What the serve loop should do after feeding one frame.
+#[derive(Debug)]
+pub enum Step {
+    /// Batch still assembling (or a keepalive): keep reading.
+    None,
+    /// A complete validated batch: hand it to the scheduler.
+    Ready(Batch),
+    /// Clean goodbye: end the session, releasing its pool state.
+    Goodbye,
+}
+
+/// Which batch is awaiting its dispatch acknowledgement.
+#[derive(Debug, Clone, Copy)]
+enum InFlight {
+    Config,
+    Round { seq: u32, stage: u8, op: u8 },
+}
+
+/// Per-session protocol state (see module docs).
+#[derive(Debug)]
+pub struct SessionSm {
+    world: usize,
+    /// The client's own config counter for the batch being assembled.
+    client_job: Option<u32>,
+    /// The pool job id whose scatter state the workers currently hold
+    /// for this session — kept through reconfigures until the new
+    /// config is dispatched, so the serve loop always knows what to
+    /// RELEASE.
+    live_pool_job: Option<u32>,
+    /// Whether `live_pool_job` is configured and accepting rounds.
+    configured: bool,
+    cfg_batch: Vec<Option<ConfigureMsg>>,
+    /// Per-lane outbound index counts of the live config (payload
+    /// size-check for FULL/DOWN rounds).
+    out_lens: Vec<usize>,
+    /// The round being assembled: one VALUES per lane, all same
+    /// `(seq, stage, op)` — the op is part of the key so a
+    /// mixed-operator round can never reach the workers (all three ops
+    /// share the 4-byte width, so size checks alone would not catch
+    /// it).
+    round: Option<(u32, u8, u8)>,
+    val_batch: Vec<Option<ValuesMsg>>,
+    /// After a DOWN half the client owes the matching UP half; the
+    /// serve loop records each lane's up-set size from the Bottom
+    /// RESULTs so even a hand-rolled client cannot feed the allgather a
+    /// mis-sized payload.
+    pending_up: Option<(u32, u8)>,
+    up_lens: Vec<usize>,
+    in_flight: Option<InFlight>,
+}
+
+impl SessionSm {
+    pub fn new(world: usize) -> Self {
+        Self {
+            world,
+            client_job: None,
+            live_pool_job: None,
+            configured: false,
+            cfg_batch: Vec::new(),
+            out_lens: Vec::new(),
+            round: None,
+            val_batch: Vec::new(),
+            pending_up: None,
+            up_lens: vec![0; world],
+            in_flight: None,
+        }
+    }
+
+    /// The pool job whose worker-side state this session owns (to
+    /// RELEASE on reconfigure or session end), if any.
+    pub fn pool_job(&self) -> Option<u32> {
+        self.live_pool_job
+    }
+
+    /// Feed one decoded client frame; `Err` is a protocol violation
+    /// (the message to FAIL the client with).
+    pub fn on_msg(&mut self, msg: CtrlMsg) -> Result<Step, String> {
+        // A goodbye is honored even mid-batch: the client is leaving
+        // and nothing half-assembled ever reached a worker.
+        if matches!(msg, CtrlMsg::Shutdown) {
+            return Ok(Step::Goodbye);
+        }
+        // Bare keepalive: refreshes the idle clock (the serve loop
+        // timestamps every frame), nothing to assemble.
+        if matches!(msg, CtrlMsg::Heartbeat { .. }) {
+            return Ok(Step::None);
+        }
+        if self.in_flight.is_some() {
+            return Err(
+                "client frame while a batch is being dispatched: the relay is strictly \
+                 request-response — await the batch's acknowledgement first"
+                    .to_string(),
+            );
+        }
+        match msg {
+            CtrlMsg::Configure(c) => self.on_configure(c),
+            CtrlMsg::Values(v) => self.on_values(v),
+            other => Err(format!("unexpected client message {other:?}")),
+        }
+    }
+
+    fn on_configure(&mut self, c: ConfigureMsg) -> Result<Step, String> {
+        if self.round.is_some() {
+            return Err("CONFIGURE mid-round: finish the in-flight allreduce first".to_string());
+        }
+        if self.client_job != Some(c.job) {
+            // New sparsity pattern: start a fresh batch (a
+            // half-streamed previous batch is simply discarded —
+            // nothing of it ever reached a worker). An abandoned bottom
+            // collective is abandoned too; the workers' old config
+            // stays live (and RELEASEable) until the new one lands.
+            self.client_job = Some(c.job);
+            self.configured = false;
+            self.pending_up = None;
+            self.cfg_batch = (0..self.world).map(|_| None).collect();
+        }
+        let lane = c.lane as usize;
+        if lane >= self.world {
+            return Err(format!("CONFIGURE lane {} out of range ({} lanes)", c.lane, self.world));
+        }
+        if c.index_range < 1 {
+            return Err(format!("CONFIGURE index range must be >= 1 (got {})", c.index_range));
+        }
+        if self.cfg_batch[lane].replace(c).is_some() {
+            return Err(format!("duplicate CONFIGURE for lane {lane}"));
+        }
+        if self.cfg_batch.iter().all(|s| s.is_some()) {
+            let batch: Vec<ConfigureMsg> =
+                self.cfg_batch.iter_mut().map(|s| s.take().expect("full batch")).collect();
+            self.out_lens = batch.iter().map(|m| m.outbound.len()).collect();
+            self.in_flight = Some(InFlight::Config);
+            return Ok(Step::Ready(Batch::Config(batch)));
+        }
+        Ok(Step::None)
+    }
+
+    /// The config batch reached the workers and barriered: rounds for
+    /// `pool_job` are now acceptable.
+    pub fn config_dispatched(&mut self, pool_job: u32) {
+        debug_assert!(matches!(self.in_flight, Some(InFlight::Config)));
+        self.live_pool_job = Some(pool_job);
+        self.configured = true;
+        self.in_flight = None;
+    }
+
+    fn on_values(&mut self, v: ValuesMsg) -> Result<Step, String> {
+        if !self.configured || Some(v.job) != self.live_pool_job {
+            return Err(format!(
+                "VALUES for collective {} but the live config is {:?}",
+                v.job,
+                if self.configured { self.live_pool_job } else { None }
+            ));
+        }
+        match self.round {
+            None => {
+                self.round = Some((v.seq, v.stage, v.op));
+                self.val_batch = (0..self.world).map(|_| None).collect();
+            }
+            Some((s, st, op)) if s == v.seq && st == v.stage && op == v.op => {}
+            Some((s, st, op)) => {
+                return Err(format!(
+                    "VALUES round ({}, stage {}, op {}) while round ({s}, stage {st}, \
+                     op {op}) is incomplete",
+                    v.seq, v.stage, v.op
+                ));
+            }
+        }
+        let lane = v.lane as usize;
+        if lane >= self.world {
+            return Err(format!("VALUES lane {} out of range ({} lanes)", v.lane, self.world));
+        }
+        let Some(width) = op_code_width(v.op) else {
+            return Err(format!("unknown reduce-op code {}", v.op));
+        };
+        // Stage sequencing + payload sizing: FULL/DOWN payloads must
+        // hold exactly the configured outbound count and may only start
+        // when no bottom is half-done; an UP half must complete the
+        // pending DOWN (same seq and op) and match the up-set sizes
+        // recorded from its Bottom RESULTs.
+        match (v.stage, self.pending_up) {
+            (VAL_STAGE_UP, Some((s, op))) if v.seq == s && v.op == op => {
+                if v.payload.len() != self.up_lens[lane] * width {
+                    return Err(format!(
+                        "lane {lane}: {} payload bytes but the bottom up set has {} \
+                         indices (×{width} bytes)",
+                        v.payload.len(),
+                        self.up_lens[lane]
+                    ));
+                }
+            }
+            (VAL_STAGE_UP, Some((s, op))) => {
+                return Err(format!(
+                    "UP half (seq {}, op {}) does not complete the pending DOWN half \
+                     (seq {s}, op {op})",
+                    v.seq, v.op
+                ));
+            }
+            (VAL_STAGE_UP, None) => {
+                return Err("UP half without a preceding DOWN half".to_string());
+            }
+            (_, Some((s, _))) => {
+                return Err(format!(
+                    "a DOWN half (seq {s}) awaits its UP half; reconfigure to abandon it"
+                ));
+            }
+            (_, None) => {
+                if v.payload.len() != self.out_lens[lane] * width {
+                    return Err(format!(
+                        "lane {lane}: {} payload bytes but the configured outbound set \
+                         has {} indices (×{width} bytes)",
+                        v.payload.len(),
+                        self.out_lens[lane]
+                    ));
+                }
+            }
+        }
+        if self.val_batch[lane].replace(v).is_some() {
+            return Err(format!("duplicate VALUES for lane {lane}"));
+        }
+        if self.val_batch.iter().all(|s| s.is_some()) {
+            let (seq, stage, op) = self.round.expect("round in flight");
+            let batch: Vec<ValuesMsg> =
+                self.val_batch.iter_mut().map(|s| s.take().expect("full batch")).collect();
+            self.in_flight = Some(InFlight::Round { seq, stage, op });
+            return Ok(Step::Ready(Batch::Round { seq, stage, op, batch }));
+        }
+        Ok(Step::None)
+    }
+
+    /// Record one lane's bottom up-set size (from a Bottom RESULT the
+    /// serve loop is relaying) — the size-check oracle for the UP half.
+    pub fn record_up_len(&mut self, lane: usize, len: usize) {
+        if let Some(l) = self.up_lens.get_mut(lane) {
+            *l = len;
+        }
+    }
+
+    /// The round's results were drained: arm the UP-half debt if this
+    /// was a DOWN half, and accept the next round.
+    pub fn round_dispatched(&mut self) {
+        let Some(InFlight::Round { seq, stage, op }) = self.in_flight else {
+            debug_assert!(false, "round_dispatched without an in-flight round");
+            return;
+        };
+        self.pending_up = if stage == VAL_STAGE_DOWN { Some((seq, op)) } else { None };
+        self.round = None;
+        self.in_flight = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::proto::{
+        OP_CODE_MAX_F32, OP_CODE_OR_U32, OP_CODE_SUM_F32, VAL_STAGE_FULL,
+    };
+
+    fn cfg(job: u32, lane: u32, out_len: usize) -> ConfigureMsg {
+        ConfigureMsg {
+            job,
+            lane,
+            index_range: 16,
+            send_threads: 1,
+            outbound: (0..out_len as i64).collect(),
+            inbound: vec![0],
+        }
+    }
+
+    fn vals(job: u32, seq: u32, lane: u32, op: u8, stage: u8, n: usize) -> ValuesMsg {
+        ValuesMsg { job, seq, lane, op, stage, payload: vec![0u8; n * 4] }
+    }
+
+    fn ready(step: Step) -> Batch {
+        match step {
+            Step::Ready(b) => b,
+            other => panic!("expected Ready, got {other:?}"),
+        }
+    }
+
+    /// The happy path: assemble a config batch, dispatch, run two FULL
+    /// rounds; each batch completes only on its last lane.
+    #[test]
+    fn config_then_rounds_assemble_lane_by_lane() {
+        let mut sm = SessionSm::new(2);
+        assert!(matches!(sm.on_msg(CtrlMsg::Configure(cfg(0, 0, 3))).unwrap(), Step::None));
+        let b = ready(sm.on_msg(CtrlMsg::Configure(cfg(0, 1, 2))).unwrap());
+        match b {
+            Batch::Config(ms) => {
+                assert_eq!(ms.len(), 2);
+                assert_eq!(ms[0].lane, 0);
+                assert_eq!(ms[1].lane, 1);
+            }
+            other => panic!("expected a config batch, got {other:?}"),
+        }
+        // Request-response: frames while the batch dispatches violate.
+        assert!(sm.on_msg(CtrlMsg::Values(vals(7, 0, 0, OP_CODE_SUM_F32, VAL_STAGE_FULL, 3))).is_err());
+        sm.config_dispatched(7);
+        assert_eq!(sm.pool_job(), Some(7));
+
+        for seq in 0..2u32 {
+            let s = sm
+                .on_msg(CtrlMsg::Values(vals(7, seq, 0, OP_CODE_SUM_F32, VAL_STAGE_FULL, 3)))
+                .unwrap();
+            assert!(matches!(s, Step::None));
+            let b = ready(
+                sm.on_msg(CtrlMsg::Values(vals(7, seq, 1, OP_CODE_SUM_F32, VAL_STAGE_FULL, 2)))
+                    .unwrap(),
+            );
+            match b {
+                Batch::Round { seq: s, stage, op, batch } => {
+                    assert_eq!((s, stage, op), (seq, VAL_STAGE_FULL, OP_CODE_SUM_F32));
+                    assert_eq!(batch.len(), 2);
+                }
+                other => panic!("expected a round batch, got {other:?}"),
+            }
+            sm.round_dispatched();
+        }
+    }
+
+    #[test]
+    fn malformed_configs_are_violations() {
+        let mut sm = SessionSm::new(2);
+        assert!(sm.on_msg(CtrlMsg::Configure(cfg(0, 5, 1))).is_err(), "lane out of range");
+        let mut bad = cfg(1, 0, 1);
+        bad.index_range = 0;
+        assert!(sm.on_msg(CtrlMsg::Configure(bad)).is_err(), "bad index range");
+        let mut sm = SessionSm::new(2);
+        sm.on_msg(CtrlMsg::Configure(cfg(0, 0, 1))).unwrap();
+        assert!(sm.on_msg(CtrlMsg::Configure(cfg(0, 0, 1))).is_err(), "duplicate lane");
+    }
+
+    #[test]
+    fn rounds_are_validated_against_the_live_config() {
+        let mut sm = SessionSm::new(2);
+        // VALUES before any config is a violation.
+        assert!(sm
+            .on_msg(CtrlMsg::Values(vals(0, 0, 0, OP_CODE_SUM_F32, VAL_STAGE_FULL, 1)))
+            .is_err());
+        sm.on_msg(CtrlMsg::Configure(cfg(0, 0, 3))).unwrap();
+        ready(sm.on_msg(CtrlMsg::Configure(cfg(0, 1, 2))).unwrap());
+        sm.config_dispatched(7);
+        // Wrong pool job.
+        assert!(sm
+            .on_msg(CtrlMsg::Values(vals(9, 0, 0, OP_CODE_SUM_F32, VAL_STAGE_FULL, 3)))
+            .is_err());
+        // Unknown op code.
+        assert!(sm.on_msg(CtrlMsg::Values(vals(7, 0, 0, 99, VAL_STAGE_FULL, 3))).is_err());
+        // Payload size must match the configured outbound count.
+        assert!(sm
+            .on_msg(CtrlMsg::Values(vals(7, 0, 0, OP_CODE_SUM_F32, VAL_STAGE_FULL, 2)))
+            .is_err());
+        sm.on_msg(CtrlMsg::Values(vals(7, 0, 0, OP_CODE_SUM_F32, VAL_STAGE_FULL, 3))).unwrap();
+        // A mixed-operator round can never assemble.
+        assert!(sm
+            .on_msg(CtrlMsg::Values(vals(7, 0, 1, OP_CODE_MAX_F32, VAL_STAGE_FULL, 2)))
+            .is_err());
+        // Duplicate lane within the round.
+        assert!(sm
+            .on_msg(CtrlMsg::Values(vals(7, 0, 0, OP_CODE_SUM_F32, VAL_STAGE_FULL, 3)))
+            .is_err());
+    }
+
+    #[test]
+    fn bottom_halves_sequence_and_size_check() {
+        let mut sm = SessionSm::new(1);
+        sm.on_msg(CtrlMsg::Configure(cfg(0, 0, 2))).unwrap();
+        sm.config_dispatched(3);
+        // UP before any DOWN is a violation.
+        assert!(sm
+            .on_msg(CtrlMsg::Values(vals(3, 0, 0, OP_CODE_OR_U32, VAL_STAGE_UP, 1)))
+            .is_err());
+        ready(sm.on_msg(CtrlMsg::Values(vals(3, 0, 0, OP_CODE_OR_U32, VAL_STAGE_DOWN, 2))).unwrap());
+        sm.record_up_len(0, 5);
+        sm.round_dispatched();
+        // A FULL round cannot start while the UP half is owed.
+        assert!(sm
+            .on_msg(CtrlMsg::Values(vals(3, 1, 0, OP_CODE_OR_U32, VAL_STAGE_FULL, 2)))
+            .is_err());
+        // The UP half must match seq+op and the recorded up-set size.
+        assert!(sm
+            .on_msg(CtrlMsg::Values(vals(3, 1, 0, OP_CODE_OR_U32, VAL_STAGE_UP, 5)))
+            .is_err());
+        assert!(sm
+            .on_msg(CtrlMsg::Values(vals(3, 0, 0, OP_CODE_OR_U32, VAL_STAGE_UP, 4)))
+            .is_err());
+        ready(sm.on_msg(CtrlMsg::Values(vals(3, 0, 0, OP_CODE_OR_U32, VAL_STAGE_UP, 5))).unwrap());
+        sm.round_dispatched();
+        // Debt cleared: FULL rounds flow again.
+        ready(sm.on_msg(CtrlMsg::Values(vals(3, 1, 0, OP_CODE_OR_U32, VAL_STAGE_FULL, 2))).unwrap());
+    }
+
+    /// Reconfiguring keeps the OLD pool job visible until the new
+    /// config is dispatched — the serve loop reads it to RELEASE the
+    /// workers' old scatter state, so an abandoned half-streamed
+    /// reconfigure can never leak it.
+    #[test]
+    fn reconfigure_tracks_the_releasable_pool_job() {
+        let mut sm = SessionSm::new(2);
+        sm.on_msg(CtrlMsg::Configure(cfg(0, 0, 1))).unwrap();
+        ready(sm.on_msg(CtrlMsg::Configure(cfg(0, 1, 1))).unwrap());
+        sm.config_dispatched(7);
+        // New client config, half-streamed: old pool job still owned.
+        sm.on_msg(CtrlMsg::Configure(cfg(1, 0, 2))).unwrap();
+        assert_eq!(sm.pool_job(), Some(7));
+        // Old config no longer accepts rounds mid-reconfigure.
+        assert!(sm
+            .on_msg(CtrlMsg::Values(vals(7, 5, 0, OP_CODE_SUM_F32, VAL_STAGE_FULL, 1)))
+            .is_err());
+        ready(sm.on_msg(CtrlMsg::Configure(cfg(1, 1, 2))).unwrap());
+        assert_eq!(sm.pool_job(), Some(7), "released by the serve loop, not the SM");
+        sm.config_dispatched(8);
+        assert_eq!(sm.pool_job(), Some(8));
+    }
+
+    #[test]
+    fn goodbye_and_keepalive() {
+        let mut sm = SessionSm::new(2);
+        assert!(matches!(
+            sm.on_msg(CtrlMsg::Heartbeat { nonce: 1, rtt_us: 0 }).unwrap(),
+            Step::None
+        ));
+        assert!(matches!(sm.on_msg(CtrlMsg::Shutdown).unwrap(), Step::Goodbye));
+        // Goodbye is honored even with a batch mid-dispatch.
+        let mut sm = SessionSm::new(1);
+        sm.on_msg(CtrlMsg::Configure(cfg(0, 0, 1))).unwrap();
+        assert!(matches!(sm.on_msg(CtrlMsg::Shutdown).unwrap(), Step::Goodbye));
+    }
+}

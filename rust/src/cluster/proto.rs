@@ -139,6 +139,12 @@ pub enum CtrlMsg {
     /// client → coordinator → worker: one lane's sparsity pattern for
     /// the app-agnostic generic collective engine (remote `configure`).
     Configure(ConfigureMsg),
+    /// coordinator → worker: drop collective config `job` — the serve
+    /// plane's reconfigure-in-place/eviction path. The worker frees the
+    /// config's protocol handle (and with it the scatter state built
+    /// during its config phase) without touching the fabric or any
+    /// other live config.
+    Release { job: u32 },
     /// client → coordinator → worker: one lane's sparse values for one
     /// collective round (remote `allreduce`).
     Values(ValuesMsg),
@@ -301,6 +307,7 @@ const OP_JOB: u32 = 10;
 const OP_CONFIGURE: u32 = 11;
 const OP_VALUES: u32 = 12;
 const OP_RESULT: u32 = 13;
+const OP_RELEASE: u32 = 14;
 
 // --- body codec ----------------------------------------------------------
 
@@ -522,6 +529,10 @@ pub fn encode(msg: &CtrlMsg) -> (u32, Vec<u8>) {
             e.bytes(&r.payload);
             OP_RESULT
         }
+        CtrlMsg::Release { job } => {
+            e.u32(*job);
+            OP_RELEASE
+        }
     };
     (op, e.0)
 }
@@ -558,6 +569,7 @@ pub fn decode(opcode: u32, payload: &[u8]) -> std::io::Result<CtrlMsg> {
             feats_per_ex: d.u32()?,
         }),
         OP_CONFIG_DONE => CtrlMsg::ConfigDone { job: d.u32()? },
+        OP_RELEASE => CtrlMsg::Release { job: d.u32()? },
         OP_START => CtrlMsg::Start { job: d.u32()? },
         OP_HEARTBEAT => CtrlMsg::Heartbeat { nonce: d.u64()?, rtt_us: d.u64()? },
         OP_HEARTBEAT_ACK => CtrlMsg::HeartbeatAck { nonce: d.u64()? },
@@ -740,6 +752,7 @@ mod tests {
             CtrlMsg::Configure(sample_configure()),
             CtrlMsg::Values(sample_values()),
             CtrlMsg::Result(sample_result()),
+            CtrlMsg::Release { job: 5 },
         ]
     }
 
@@ -759,6 +772,7 @@ mod tests {
             CtrlMsg::Configure(sample_configure()),
             CtrlMsg::Values(sample_values()),
             CtrlMsg::Result(sample_result()),
+            CtrlMsg::Release { job: 5 },
         ] {
             let (op, payload) = encode(&sample);
             assert!(decode(op, &payload[..payload.len() - 1]).is_err(), "truncated {op}");

@@ -1,354 +1,596 @@
 //! Remote collective ingress: serve client sessions against a live
-//! worker pool (`sar serve`).
+//! worker pool (`sar serve`) — multi-tenant.
 //!
 //! The serve plane is what turns the pool from "runs the three baked-in
 //! apps" into a *service*: a client process ([`crate::comm::remote`])
 //! dials the pool's client port, streams its sparsity pattern and then
 //! per-round sparse values, and reduced results stream back — the
-//! paper's primitive offered over the wire, app-agnostic.
+//! paper's primitive offered over the wire, app-agnostic. Since the
+//! serve plane multiplexes, N clients share one pool concurrently:
 //!
 //! ```text
-//!  client                    coordinator (this relay)        workers
-//!    | --- CONFIGURE ×M ------> |  rewrite job id, scatter --->|  config phase
-//!    | <-- CONFIG_DONE -------- |<-- CONFIG_DONE ×M barrier ---|  (data plane)
-//!    | --- VALUES ×M ---------> |  forward lane-wise --------->|  reduce
-//!    | <-- RESULT ×M ---------- |<-- RESULT ×M ----------------|
-//!    |        (repeat VALUES/RESULT; re-CONFIGURE at will)     |
+//!  clients (N)            relay (this module)              workers
+//!    | -- CONFIGURE ×M -->  per-session state machine  ------>|
+//!    | <-- CONFIG_DONE ---  assembles COMPLETE batches <------|
+//!    | -- VALUES ×M ----->  round-robin scheduler      ------>|
+//!    | <-- RESULT ×M -----  dispatches one batch at a  <------|
+//!    |                      time, drains its results         |
 //! ```
 //!
-//! One client is served at a time (collectives occupy the whole pool);
-//! the ingress stays sparse — only the client's own index sets and
+//! Division of labour: [`super::mux`] holds every policy decision
+//! (admission, batch validation, fairness, idle tracking) as pure
+//! unit-tested state; this module owns the I/O — an accept thread, one
+//! reader thread per client, and the mux loop that the readers feed
+//! through a channel. Each client session maps to its own pool job id,
+//! so tag spaces never alias; batches are dispatched whole and their
+//! results fully drained before the next batch (workers are
+//! single-threaded and protocol handles buffer per-handle, so the relay
+//! is the only serializer left — see the mux module docs).
+//!
+//! `--sessions` is a LIVE limit: arrivals past it wait in a bounded
+//! queue (unanswered until admitted — the client blocks in its own
+//! handshake timeout), and past the queue are refused with a readable
+//! FAILED. A session idle past the keepalive is evicted and its
+//! scatter state freed on the workers (the RELEASE path); a client
+//! protocol violation ends only that session. A *pool* failure (dead
+//! worker, barrier timeout) fails every session and returns — without
+//! replication there is no way to finish any collective.
+//!
+//! The ingress stays sparse — only each client's own index sets and
 //! values cross it, never dense vectors (cf. partition-aware message
-//! reduction, Yan et al. 1503.00626). The relay is strictly
-//! request-response AND batch-buffered: a config's CONFIGUREs and a
-//! round's VALUES are collected into a complete distinct-lane batch —
-//! validated (lane range, duplicates, payload sizes against the
-//! configured index counts) — before ANYTHING is forwarded to a
-//! worker, then the round's M RESULTs are drained back to the client.
-//! A half-streamed or malformed batch therefore ends only the client's
-//! session; no worker ever enters a collective its peers won't join.
-//! The UP half of a bottom collective is validated too: the relay
-//! records each lane's up-set size from the Bottom RESULTs it relays,
-//! so a mis-sized allgather payload is rejected at the ingress.
+//! reduction, Yan et al. 1503.00626).
 
 use super::launch::Session;
+use super::mux::{Admission, Batch, Offer, Registry, RoundRobin, Step};
 use super::proto::{
-    op_code_width, recv_ctrl, send_ctrl, ConfigureMsg, CtrlMsg, ValuesMsg, WorkerPlan, COORD,
-    RES_STAGE_BOTTOM, VAL_STAGE_DOWN, VAL_STAGE_UP,
+    recv_ctrl, send_ctrl, CtrlMsg, WorkerPlan, COORD, RES_STAGE_BOTTOM,
 };
 use anyhow::{Context, Result};
-use std::net::{TcpListener, TcpStream};
-use std::sync::Mutex;
+use std::collections::HashMap;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
-/// Serve collective clients against the pool, one at a time: accept a
-/// connection, answer its configs and rounds until it disconnects, then
-/// accept the next. `max_sessions` bounds how many clients are served
-/// (`None` = until the listener fails); returns the number served.
-///
-/// A client protocol violation ends that client's session (with a
-/// FAILED answer) but keeps the pool serving; a *pool* failure (dead
-/// worker, barrier timeout) is returned — without replication there is
-/// no way to finish any collective, so the operator must relaunch.
+/// Multi-tenant serve-plane knobs (the `sar serve` flags).
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    /// Live session limit (`--sessions`).
+    pub max_live: usize,
+    /// Wait-queue depth past the live limit (`--queue`).
+    pub queue_depth: usize,
+    /// Idle eviction threshold (`--keepalive-secs`).
+    pub keepalive: Duration,
+    /// Serve this many sessions in total, then return once the last
+    /// one ends (`--total-sessions`; `None` = serve until the process
+    /// is killed). The shutdown/CI hook.
+    pub total: Option<usize>,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        Self {
+            max_live: 4,
+            queue_depth: 16,
+            keepalive: Duration::from_secs(120),
+            total: None,
+        }
+    }
+}
+
+/// What the serve plane did, for logs, tests and `sar serve`'s exit
+/// line.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeStats {
+    /// Sessions admitted and since ended (any way: done, violated,
+    /// evicted, disconnected).
+    pub served: usize,
+    /// Sessions evicted by the keepalive sweep.
+    pub evicted: usize,
+    /// Arrivals refused because the wait queue was full (or the
+    /// session budget was already spent).
+    pub rejected: usize,
+    /// High-water mark of concurrently live sessions.
+    pub peak_live: usize,
+}
+
+/// Backwards-compatible serial-looking entry: serve `max_sessions`
+/// clients (default knobs otherwise), returning how many were served.
 pub fn serve_clients(
     session: &mut Session,
     listener: &TcpListener,
     max_sessions: Option<usize>,
 ) -> Result<usize> {
-    let mut served = 0usize;
-    while max_sessions.map(|n| served < n).unwrap_or(true) {
-        let (stream, peer) = listener.accept().context("accepting collective client")?;
-        // Best effort: a socket that dies between accept and setsockopt
-        // is a per-client event, surfaced at the handshake send.
-        let _ = stream.set_nodelay(true);
-        log::info!("collective client connected from {peer}");
-        let outcome = serve_one_client(session, stream);
-        session.collective_end();
-        served += 1;
-        match outcome {
-            Ok(()) => log::info!("collective client {peer} done"),
-            Err(ClientEnd::Client(e)) => {
-                log::warn!("client {peer} ended with a protocol error: {e:#}");
-            }
-            Err(ClientEnd::Pool(e)) => {
-                return Err(e.context(format!("pool failed serving client {peer}")));
-            }
-        }
-    }
-    Ok(served)
+    let opts = ServeOpts { total: max_sessions, ..ServeOpts::default() };
+    Ok(serve_mux(session, listener, &opts)?.served)
 }
 
-/// Why a client session ended early: the client misbehaved (pool still
-/// healthy) or the pool itself failed (fatal for the serve loop).
-enum ClientEnd {
+/// Events the accept and reader threads feed the mux loop.
+enum MuxEvent {
+    /// A new connection arrived.
+    Incoming(TcpStream, SocketAddr),
+    /// A client frame decoded.
+    Frame(u64, CtrlMsg),
+    /// A client frame arrived but doesn't decode (protocol violation).
+    Bad(u64, String),
+    /// The client connection ended (EOF/reset) — its reader exited.
+    Gone(u64),
+    /// The listener itself failed (fatal).
+    AcceptFailed(String),
+}
+
+/// Per-session connection state the registry carries for the serve
+/// loop.
+struct Conn {
+    peer: SocketAddr,
+    wr: Mutex<TcpStream>,
+    reader: Option<JoinHandle<()>>,
+}
+
+/// Serve collective clients against the pool, multiplexed: up to
+/// `opts.max_live` concurrent sessions, a bounded wait queue behind
+/// them, round-robin batch dispatch, and keepalive eviction. Returns
+/// when the `opts.total` session budget is spent (or errors when the
+/// listener or the pool fails).
+pub fn serve_mux(
+    session: &mut Session,
+    listener: &TcpListener,
+    opts: &ServeOpts,
+) -> Result<ServeStats> {
+    let (tx, rx) = channel::<MuxEvent>();
+    let stop = Arc::new(AtomicBool::new(false));
+    let accept_handle = spawn_acceptor(listener, tx.clone(), stop.clone())?;
+
+    let mut mux = Mux {
+        session,
+        world: 0,
+        keepalive: opts.keepalive,
+        total: opts.total,
+        tx,
+        admission: Admission::new(opts.max_live, opts.queue_depth),
+        registry: Registry::new(),
+        sched: RoundRobin::new(),
+        batches: HashMap::new(),
+        stats: ServeStats::default(),
+        started: 0,
+    };
+    mux.world = mux.session.world();
+
+    // Sweep often enough that evictions land promptly relative to the
+    // keepalive, without spinning.
+    let tick = (opts.keepalive / 4).clamp(Duration::from_millis(10), Duration::from_secs(1));
+    let result = mux.run(&rx, tick);
+
+    stop.store(true, Ordering::Relaxed);
+    let _ = accept_handle.join();
+    // Refuse anything still parked in the wait queue.
+    while let Some((stream, peer)) = mux.admission.dequeue() {
+        log::info!("refusing queued client {peer}: serve loop exiting");
+        refuse(stream, "the pool's serve loop is exiting");
+    }
+    result.map(|()| mux.stats)
+}
+
+/// Accept thread: nonblocking poll so it can notice the stop flag (a
+/// blocked `accept` would pin the thread past the serve loop's exit).
+fn spawn_acceptor(
+    listener: &TcpListener,
+    tx: Sender<MuxEvent>,
+    stop: Arc<AtomicBool>,
+) -> Result<JoinHandle<()>> {
+    let listener = listener.try_clone().context("cloning the client listener")?;
+    listener.set_nonblocking(true).context("setting the client listener nonblocking")?;
+    Ok(std::thread::spawn(move || loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                // Hand the stream back to blocking mode: accepted
+                // sockets inherit the listener's nonblocking flag on
+                // some platforms.
+                let _ = stream.set_nonblocking(false);
+                if tx.send(MuxEvent::Incoming(stream, peer)).is_err() {
+                    return;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            Err(e) => {
+                let _ = tx.send(MuxEvent::AcceptFailed(e.to_string()));
+                return;
+            }
+        }
+    }))
+}
+
+/// Per-client reader thread: decode frames off the socket into the mux
+/// channel until the connection ends (the mux evicts by shutting the
+/// socket down, which lands here as an error → `Gone`).
+fn spawn_reader(sid: u64, mut rd: TcpStream, tx: Sender<MuxEvent>) -> JoinHandle<()> {
+    std::thread::spawn(move || loop {
+        match recv_ctrl(&mut rd) {
+            Ok((_, msg)) => {
+                if tx.send(MuxEvent::Frame(sid, msg)).is_err() {
+                    return;
+                }
+            }
+            // A frame that ARRIVED but doesn't decode (unknown opcode,
+            // oversized payload, truncated body) is a protocol
+            // violation — report it so the mux can answer FAILED on the
+            // still-writable half instead of a bare reset.
+            Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
+                let _ = tx.send(MuxEvent::Bad(sid, e.to_string()));
+                return;
+            }
+            Err(_) => {
+                let _ = tx.send(MuxEvent::Gone(sid));
+                return;
+            }
+        }
+    })
+}
+
+/// Best-effort FAILED + drop, for connections never admitted.
+fn refuse(stream: TcpStream, why: &str) {
+    let wr = Mutex::new(stream);
+    let _ = send_ctrl(&wr, COORD, &CtrlMsg::Failed { error: why.to_string() });
+}
+
+/// Why a dispatched batch failed.
+enum DispatchErr {
+    /// The client's connection failed mid-ack: end that session only.
     Client(anyhow::Error),
+    /// The pool failed: fatal for the whole serve loop.
     Pool(anyhow::Error),
 }
 
-/// Send FAILED to the client (best effort) and record a client-side end.
-fn client_fail(wr: &Mutex<TcpStream>, msg: String) -> ClientEnd {
-    let _ = send_ctrl(wr, COORD, &CtrlMsg::Failed { error: msg.clone() });
-    ClientEnd::Client(anyhow::anyhow!(msg))
+/// The mux loop's state: the pool session plus every policy object.
+struct Mux<'a> {
+    session: &'a mut Session,
+    world: usize,
+    keepalive: Duration,
+    total: Option<usize>,
+    /// Kept so readers' sends never see a closed channel while the
+    /// loop runs (and for spawning new readers).
+    tx: Sender<MuxEvent>,
+    admission: Admission<(TcpStream, SocketAddr)>,
+    registry: Registry<Conn>,
+    sched: RoundRobin,
+    /// Complete validated batches awaiting dispatch, per session.
+    batches: HashMap<u64, Batch>,
+    stats: ServeStats,
+    /// Sessions ever admitted (the `total` budget meter).
+    started: usize,
 }
 
-/// Send FAILED to the client (best effort) and record a pool failure.
-fn pool_fail(wr: &Mutex<TcpStream>, e: anyhow::Error) -> ClientEnd {
-    let _ = send_ctrl(wr, COORD, &CtrlMsg::Failed { error: format!("{e:#}") });
-    ClientEnd::Pool(e)
-}
-
-fn serve_one_client(session: &mut Session, stream: TcpStream) -> Result<(), ClientEnd> {
-    let world = session.world();
-    let plan = {
-        let opts = session.launch_opts();
-        WorkerPlan {
-            node: u32::MAX, // "you are a client": shape only, no identity
-            world: world as u32,
-            replication: opts.replication as u32,
-            degrees: opts.degrees.iter().map(|&k| k as u32).collect(),
-            addrs: Vec::new(),
-            data_timeout_ms: opts.data_timeout.as_millis() as u64,
+impl Mux<'_> {
+    fn run(&mut self, rx: &Receiver<MuxEvent>, tick: Duration) -> Result<()> {
+        loop {
+            if let Some(total) = self.total {
+                if self.started >= total && self.registry.is_empty() {
+                    return Ok(());
+                }
+            }
+            match rx.recv_timeout(tick) {
+                Ok(MuxEvent::Incoming(stream, peer)) => self.on_incoming(stream, peer),
+                Ok(MuxEvent::Frame(sid, msg)) => self.on_frame(sid, msg)?,
+                Ok(MuxEvent::Bad(sid, err)) => {
+                    self.fail_client(sid, format!("undecodable client frame: {err}"));
+                }
+                Ok(MuxEvent::Gone(sid)) => {
+                    if self.registry.get(sid).is_some() {
+                        log::info!("client session {sid} disconnected");
+                        self.end_session(sid);
+                    }
+                }
+                Ok(MuxEvent::AcceptFailed(e)) => {
+                    let err = anyhow::anyhow!(e).context("accepting collective client");
+                    self.fail_all(&err);
+                    return Err(err);
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => {
+                    // Unreachable while we hold `tx`; treat as a clean
+                    // stop rather than spinning.
+                    return Ok(());
+                }
+            }
+            self.sweep_idle();
+            self.dispatch_ready()?;
         }
-    };
-    let mut rd = stream
-        .try_clone()
-        .map_err(|e| ClientEnd::Client(anyhow::Error::from(e).context("cloning client stream")))?;
-    let wr = Mutex::new(stream);
-    send_ctrl(&wr, COORD, &CtrlMsg::Plan(plan)).map_err(|e| {
-        ClientEnd::Client(anyhow::Error::from(e).context("sending the pool-shape handshake"))
-    })?;
+    }
 
-    // Per-config state: the client's own config counter maps to a
-    // pool-unique job id (pools interleave collectives with app jobs,
-    // so client counters cannot tag worker messages directly). Batches
-    // are buffered lane-slotted and forwarded only once COMPLETE, so a
-    // client that streams half a batch and dies — or repeats a lane —
-    // never strands a worker inside a collective its peers won't join.
-    let mut client_job: Option<u32> = None;
-    let mut pool_job: Option<u32> = None;
-    // The live config's per-lane outbound index counts (payload
-    // size-check for FULL/DOWN rounds).
-    let mut out_lens: Vec<usize> = Vec::new();
-    let mut configured = false;
-    let mut cfg_batch: Vec<Option<ConfigureMsg>> = Vec::new();
-    // Per-round state: one VALUES per lane, all same (seq, stage, op) —
-    // the op is part of the key so a mixed-operator round can never
-    // reach the workers (all three ops share the 4-byte width, so size
-    // checks alone would not catch it).
-    let mut round: Option<(u32, u8, u8)> = None;
-    let mut val_batch: Vec<Option<ValuesMsg>> = Vec::new();
-    // After a DOWN half the client owes the matching UP half; the relay
-    // records each lane's up-set size from the Bottom RESULTs so even a
-    // hand-rolled client cannot feed the allgather a mis-sized payload.
-    let mut pending_up: Option<(u32, u8)> = None;
-    let mut up_lens: Vec<usize> = vec![0; world];
-
-    loop {
-        let msg = match recv_ctrl(&mut rd) {
-            Ok((_, m)) => m,
-            // A frame that ARRIVED but doesn't decode (unknown opcode,
-            // oversized payload, truncated body) is a protocol
-            // violation — answer FAILED on the still-writable half so
-            // the client sees the cause instead of a bare reset.
-            Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
-                return Err(client_fail(&wr, format!("undecodable client frame: {e}")));
+    /// Admission: live slot, wait queue, or refusal.
+    fn on_incoming(&mut self, stream: TcpStream, peer: SocketAddr) {
+        if let Some(total) = self.total {
+            if self.started >= total {
+                log::info!("refusing client {peer}: session budget ({total}) spent");
+                self.stats.rejected += 1;
+                refuse(stream, "this pool's session budget is spent");
+                return;
             }
-            // Client gone (EOF/reset): the session is over.
-            Err(_) => return Ok(()),
+        }
+        match self.admission.offer((stream, peer)) {
+            Offer::Admitted((stream, peer)) => self.start_session(stream, peer),
+            Offer::Queued { depth } => {
+                log::info!(
+                    "client {peer} queued at depth {depth} ({} live sessions)",
+                    self.admission.live()
+                );
+            }
+            Offer::Rejected((stream, peer)) => {
+                log::warn!("refusing client {peer}: wait queue full");
+                self.stats.rejected += 1;
+                refuse(
+                    stream,
+                    "pool busy: the session limit is reached and the wait queue is full",
+                );
+            }
+        }
+    }
+
+    /// Handshake + register an admitted connection as a live session.
+    fn start_session(&mut self, stream: TcpStream, peer: SocketAddr) {
+        self.started += 1;
+        // Best effort: a socket that dies between accept and setsockopt
+        // is a per-client event, surfaced at the handshake send.
+        let _ = stream.set_nodelay(true);
+        let plan = {
+            let o = self.session.launch_opts();
+            WorkerPlan {
+                node: u32::MAX, // "you are a client": shape only, no identity
+                world: self.world as u32,
+                replication: o.replication as u32,
+                degrees: o.degrees.iter().map(|&k| k as u32).collect(),
+                addrs: Vec::new(),
+                data_timeout_ms: o.data_timeout.as_millis() as u64,
+            }
         };
-        match msg {
-            CtrlMsg::Configure(c) => {
-                if round.is_some() {
-                    return Err(client_fail(
-                        &wr,
-                        "CONFIGURE mid-round: finish the in-flight allreduce first".to_string(),
-                    ));
+        let rd = match stream.try_clone() {
+            Ok(rd) => rd,
+            Err(e) => {
+                log::warn!("client {peer} lost before handshake: {e}");
+                self.session_slot_freed();
+                return;
+            }
+        };
+        let wr = Mutex::new(stream);
+        if let Err(e) = send_ctrl(&wr, COORD, &CtrlMsg::Plan(plan)) {
+            log::warn!("client {peer} lost during handshake: {e}");
+            self.session_slot_freed();
+            return;
+        }
+        let now = Instant::now();
+        let sid =
+            self.registry.admit(Conn { peer, wr, reader: None }, self.world, now);
+        let reader = spawn_reader(sid, rd, self.tx.clone());
+        if let Some(e) = self.registry.get_mut(sid) {
+            e.conn.reader = Some(reader);
+        }
+        self.sched.register(sid);
+        self.stats.peak_live = self.stats.peak_live.max(self.registry.len());
+        log::info!("client session {sid} connected from {peer} ({} live)", self.registry.len());
+    }
+
+    /// One client frame through the session's state machine.
+    fn on_frame(&mut self, sid: u64, msg: CtrlMsg) -> Result<()> {
+        let now = Instant::now();
+        let Some(entry) = self.registry.get_mut(sid) else {
+            return Ok(()); // session already ended; late frame
+        };
+        entry.last_activity = now;
+        match entry.sm.on_msg(msg) {
+            Ok(Step::None) => {}
+            Ok(Step::Ready(batch)) => {
+                self.batches.insert(sid, batch);
+                self.sched.mark_ready(sid);
+            }
+            Ok(Step::Goodbye) => {
+                log::info!("client session {sid} said goodbye");
+                self.end_session(sid);
+            }
+            Err(violation) => self.fail_client(sid, violation),
+        }
+        Ok(())
+    }
+
+    /// Dispatch every ready batch, rotating fairly: one complete batch
+    /// pool-wide at a time, its results fully drained before the next
+    /// (the relay is the only serializer left — see the mux docs).
+    fn dispatch_ready(&mut self) -> Result<()> {
+        while let Some(sid) = self.sched.next_ready() {
+            let Some(batch) = self.batches.remove(&sid) else {
+                continue;
+            };
+            match self.dispatch(sid, batch) {
+                Ok(()) => self.registry.touch(sid, Instant::now()),
+                Err(DispatchErr::Client(e)) => {
+                    log::warn!("client session {sid} lost mid-dispatch: {e:#}");
+                    self.end_session(sid);
                 }
-                if client_job != Some(c.job) {
-                    // New sparsity pattern: start a fresh batch (a
-                    // half-streamed previous batch is simply discarded —
-                    // nothing of it ever reached a worker). An abandoned
-                    // bottom collective is abandoned too: workers
-                    // rebuild their handles on CONFIGURE.
-                    client_job = Some(c.job);
-                    pool_job = None;
-                    configured = false;
-                    pending_up = None;
-                    cfg_batch = (0..world).map(|_| None).collect();
-                }
-                let lane = c.lane as usize;
-                if lane >= world {
-                    return Err(client_fail(
-                        &wr,
-                        format!("CONFIGURE lane {} out of range ({world} lanes)", c.lane),
-                    ));
-                }
-                if c.index_range < 1 {
-                    return Err(client_fail(
-                        &wr,
-                        format!("CONFIGURE index range must be >= 1 (got {})", c.index_range),
-                    ));
-                }
-                if cfg_batch[lane].replace(c).is_some() {
-                    return Err(client_fail(
-                        &wr,
-                        format!("duplicate CONFIGURE for lane {lane}"),
-                    ));
-                }
-                if cfg_batch.iter().all(|s| s.is_some()) {
-                    // Complete distinct-lane batch: only now touch the
-                    // pool.
-                    let pj = session.collective_begin().map_err(|e| pool_fail(&wr, e))?;
-                    pool_job = Some(pj);
-                    out_lens = cfg_batch
-                        .iter()
-                        .map(|s| s.as_ref().expect("full batch").outbound.len())
-                        .collect();
-                    for slot in cfg_batch.iter_mut() {
-                        let mut m = slot.take().expect("full batch");
-                        m.job = pj;
-                        session.collective_configure(m).map_err(|e| pool_fail(&wr, e))?;
-                    }
-                    session.collective_config_barrier().map_err(|e| pool_fail(&wr, e))?;
-                    configured = true;
-                    send_ctrl(&wr, COORD, &CtrlMsg::ConfigDone { job: pj }).map_err(|e| {
-                        ClientEnd::Client(
-                            anyhow::Error::from(e).context("acking the client's config"),
-                        )
-                    })?;
+                Err(DispatchErr::Pool(e)) => {
+                    let err = e.context(format!("pool failed serving client session {sid}"));
+                    self.fail_all(&err);
+                    return Err(err);
                 }
             }
-            CtrlMsg::Values(v) => {
-                if !configured || Some(v.job) != pool_job {
-                    return Err(client_fail(
-                        &wr,
-                        format!(
-                            "VALUES for collective {} but the live config is {:?}",
-                            v.job, pool_job
-                        ),
-                    ));
-                }
-                match round {
-                    None => {
-                        round = Some((v.seq, v.stage, v.op));
-                        val_batch = (0..world).map(|_| None).collect();
+        }
+        Ok(())
+    }
+
+    fn dispatch(&mut self, sid: u64, batch: Batch) -> Result<(), DispatchErr> {
+        match batch {
+            Batch::Config(msgs) => self.dispatch_config(sid, msgs),
+            Batch::Round { seq, stage, op, batch } => {
+                self.dispatch_round(sid, seq, stage, op, batch)
+            }
+        }
+    }
+
+    /// Forward a complete config batch: release the session's previous
+    /// pool job (reconfigure-in-place — the workers free the old
+    /// scatter state before building the new), allocate the new pool
+    /// job, rewrite the client's job ids onto it, barrier, and ack.
+    fn dispatch_config(
+        &mut self,
+        sid: u64,
+        msgs: Vec<super::proto::ConfigureMsg>,
+    ) -> Result<(), DispatchErr> {
+        let Some(entry) = self.registry.get_mut(sid) else {
+            return Ok(());
+        };
+        if let Some(old) = entry.sm.pool_job() {
+            self.session.collective_release(old);
+        }
+        let pj = self.session.collective_begin().map_err(DispatchErr::Pool)?;
+        for mut m in msgs {
+            m.job = pj;
+            self.session.collective_configure(m).map_err(DispatchErr::Pool)?;
+        }
+        self.session.collective_config_barrier(pj).map_err(DispatchErr::Pool)?;
+        entry.sm.config_dispatched(pj);
+        send_ctrl(&entry.conn.wr, COORD, &CtrlMsg::ConfigDone { job: pj }).map_err(|e| {
+            DispatchErr::Client(anyhow::Error::from(e).context("acking the client's config"))
+        })?;
+        Ok(())
+    }
+
+    /// Forward a complete round lane-wise, drain its `world` RESULTs,
+    /// then relay them back (any lane order — the client buffers).
+    /// Results are drained BEFORE relaying: even if the client dies
+    /// mid-relay, the pool job's inbox is left empty for the release.
+    fn dispatch_round(
+        &mut self,
+        sid: u64,
+        seq: u32,
+        stage: u8,
+        op: u8,
+        batch: Vec<super::proto::ValuesMsg>,
+    ) -> Result<(), DispatchErr> {
+        let Some(entry) = self.registry.get_mut(sid) else {
+            return Ok(());
+        };
+        let pj = entry.sm.pool_job().expect("round batches only assemble configured");
+        log::debug!("session {sid}: round {seq} (stage {stage}, op {op}) → pool job {pj}");
+        for m in batch {
+            self.session.collective_values(m).map_err(DispatchErr::Pool)?;
+        }
+        let mut results = Vec::with_capacity(self.world);
+        for _ in 0..self.world {
+            let r = self.session.collective_next_result(pj).map_err(DispatchErr::Pool)?;
+            if r.stage == RES_STAGE_BOTTOM {
+                entry.sm.record_up_len(r.lane as usize, r.up_idx.len());
+            }
+            results.push(r);
+        }
+        entry.sm.round_dispatched();
+        for r in results {
+            send_ctrl(&entry.conn.wr, COORD, &CtrlMsg::Result(r)).map_err(|e| {
+                DispatchErr::Client(anyhow::Error::from(e).context("relaying RESULT to client"))
+            })?;
+        }
+        Ok(())
+    }
+
+    /// Evict every session idle past the keepalive, freeing its worker
+    /// state.
+    fn sweep_idle(&mut self) {
+        let now = Instant::now();
+        for sid in self.registry.idle(now, self.keepalive) {
+            let peer = self.registry.get(sid).map(|e| e.conn.peer.to_string());
+            log::warn!(
+                "evicting client session {sid} ({}) — idle past the {:?} keepalive",
+                peer.as_deref().unwrap_or("?"),
+                self.keepalive
+            );
+            self.stats.evicted += 1;
+            self.fail_client(
+                sid,
+                format!("evicted: session idle past the {:?} keepalive", self.keepalive),
+            );
+        }
+    }
+
+    /// Protocol violation (or eviction): answer FAILED best-effort and
+    /// end the session.
+    fn fail_client(&mut self, sid: u64, msg: String) {
+        if let Some(entry) = self.registry.get(sid) {
+            log::warn!("client session {sid} ({}): {msg}", entry.conn.peer);
+            let _ = send_ctrl(&entry.conn.wr, COORD, &CtrlMsg::Failed { error: msg });
+            self.end_session(sid);
+        }
+    }
+
+    /// Pool failure: tell every live session best-effort, then reap
+    /// them (their worker state dies with the pool).
+    fn fail_all(&mut self, err: &anyhow::Error) {
+        let sids = self.registry.sids();
+        log::error!("pool failure fails {} live session(s): {err:#}", sids.len());
+        for sid in sids {
+            if let Some(entry) = self.registry.get(sid) {
+                let _ = send_ctrl(
+                    &entry.conn.wr,
+                    COORD,
+                    &CtrlMsg::Failed { error: format!("{err:#}") },
+                );
+            }
+            self.end_session(sid);
+        }
+    }
+
+    /// End one session every way sessions end: release its worker
+    /// state, drop it from the rotation, close its socket (which makes
+    /// its reader exit), and free its admission slot.
+    fn end_session(&mut self, sid: u64) {
+        let Some(mut entry) = self.registry.remove(sid) else {
+            return;
+        };
+        self.sched.remove(sid);
+        self.batches.remove(&sid);
+        if let Some(pj) = entry.sm.pool_job() {
+            self.session.collective_release(pj);
+        }
+        if let Ok(s) = entry.conn.wr.lock() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        if let Some(h) = entry.conn.reader.take() {
+            let _ = h.join();
+        }
+        log::info!(
+            "client session {sid} ({}) ended ({} still live, {} collective config(s) on the pool)",
+            entry.conn.peer,
+            self.registry.len(),
+            self.session.collectives_live()
+        );
+        self.session_slot_freed();
+    }
+
+    /// Account a finished session and promote the wait queue (or drain
+    /// it with refusals once the session budget is spent).
+    fn session_slot_freed(&mut self) {
+        self.stats.served += 1;
+        self.admission.release();
+        loop {
+            if let Some(total) = self.total {
+                if self.started >= total {
+                    while let Some((stream, peer)) = self.admission.dequeue() {
+                        log::info!("refusing queued client {peer}: session budget spent");
+                        self.stats.rejected += 1;
+                        refuse(stream, "this pool's session budget is spent");
                     }
-                    Some((s, st, op)) if s == v.seq && st == v.stage && op == v.op => {}
-                    Some((s, st, op)) => {
-                        return Err(client_fail(
-                            &wr,
-                            format!(
-                                "VALUES round ({}, stage {}, op {}) while round ({s}, \
-                                 stage {st}, op {op}) is incomplete",
-                                v.seq, v.stage, v.op
-                            ),
-                        ));
-                    }
-                }
-                let lane = v.lane as usize;
-                if lane >= world {
-                    return Err(client_fail(
-                        &wr,
-                        format!("VALUES lane {} out of range ({world} lanes)", v.lane),
-                    ));
-                }
-                let Some(width) = op_code_width(v.op) else {
-                    return Err(client_fail(&wr, format!("unknown reduce-op code {}", v.op)));
-                };
-                // Stage sequencing + payload sizing: FULL/DOWN payloads
-                // must hold exactly the configured outbound count and
-                // may only start when no bottom is half-done; an UP half
-                // must complete the pending DOWN (same seq and op) and
-                // match the up-set sizes recorded from its Bottom
-                // RESULTs.
-                match (v.stage, pending_up) {
-                    (VAL_STAGE_UP, Some((s, op))) if v.seq == s && v.op == op => {
-                        if v.payload.len() != up_lens[lane] * width {
-                            return Err(client_fail(
-                                &wr,
-                                format!(
-                                    "lane {lane}: {} payload bytes but the bottom up set \
-                                     has {} indices (×{width} bytes)",
-                                    v.payload.len(),
-                                    up_lens[lane]
-                                ),
-                            ));
-                        }
-                    }
-                    (VAL_STAGE_UP, Some((s, op))) => {
-                        return Err(client_fail(
-                            &wr,
-                            format!(
-                                "UP half (seq {}, op {}) does not complete the pending \
-                                 DOWN half (seq {s}, op {op})",
-                                v.seq, v.op
-                            ),
-                        ));
-                    }
-                    (VAL_STAGE_UP, None) => {
-                        return Err(client_fail(
-                            &wr,
-                            "UP half without a preceding DOWN half".to_string(),
-                        ));
-                    }
-                    (_, Some((s, _))) => {
-                        return Err(client_fail(
-                            &wr,
-                            format!(
-                                "a DOWN half (seq {s}) awaits its UP half; reconfigure to \
-                                 abandon it"
-                            ),
-                        ));
-                    }
-                    (_, None) => {
-                        if v.payload.len() != out_lens[lane] * width {
-                            return Err(client_fail(
-                                &wr,
-                                format!(
-                                    "lane {lane}: {} payload bytes but the configured \
-                                     outbound set has {} indices (×{width} bytes)",
-                                    v.payload.len(),
-                                    out_lens[lane]
-                                ),
-                            ));
-                        }
-                    }
-                }
-                if val_batch[lane].replace(v).is_some() {
-                    return Err(client_fail(&wr, format!("duplicate VALUES for lane {lane}")));
-                }
-                if val_batch.iter().all(|s| s.is_some()) {
-                    // Complete round: forward lane-wise, then drain the
-                    // round's results back (any lane order — the client
-                    // buffers).
-                    let (seq, stage, op) = round.expect("round in flight");
-                    for slot in val_batch.iter_mut() {
-                        let m = slot.take().expect("full batch");
-                        session.collective_values(m).map_err(|e| pool_fail(&wr, e))?;
-                    }
-                    for _ in 0..world {
-                        let r =
-                            session.collective_next_result().map_err(|e| pool_fail(&wr, e))?;
-                        if r.stage == RES_STAGE_BOTTOM {
-                            if let Some(l) = up_lens.get_mut(r.lane as usize) {
-                                *l = r.up_idx.len();
-                            }
-                        }
-                        send_ctrl(&wr, COORD, &CtrlMsg::Result(r)).map_err(|e| {
-                            ClientEnd::Client(
-                                anyhow::Error::from(e).context("relaying RESULT to client"),
-                            )
-                        })?;
-                    }
-                    pending_up =
-                        if stage == VAL_STAGE_DOWN { Some((seq, op)) } else { None };
-                    round = None;
+                    return;
                 }
             }
-            // A polite goodbye (the client API sends none today, but a
-            // raw client may).
-            CtrlMsg::Shutdown => return Ok(()),
-            other => {
-                return Err(client_fail(&wr, format!("unexpected client message {other:?}")));
+            match self.admission.promote() {
+                Some((stream, peer)) => {
+                    log::info!("promoting queued client {peer} into a live slot");
+                    self.start_session(stream, peer);
+                }
+                None => return,
             }
         }
     }
@@ -358,26 +600,47 @@ fn serve_one_client(session: &mut Session, stream: TcpStream) -> Result<(), Clie
 mod tests {
     use super::*;
 
-    // The end-to-end serve-plane behaviour (real workers, real client)
-    // lives in tests/remote.rs as tier-2 `mp_` tests; here we only pin
-    // the pure pieces.
+    // The end-to-end serve-plane behaviour (real workers, concurrent
+    // real clients, keepalive eviction) lives in tests/remote.rs as
+    // tier-2 `mp_` tests; here we pin the pure pieces that don't need
+    // a pool.
 
     #[test]
-    fn client_fail_is_client_end() {
+    fn serve_opts_defaults_are_sane() {
+        let o = ServeOpts::default();
+        assert!(o.max_live >= 1);
+        assert!(o.keepalive > Duration::ZERO);
+        assert!(o.total.is_none());
+    }
+
+    #[test]
+    fn refuse_answers_failed_on_the_socket() {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
         let client = std::thread::spawn(move || {
-            let s = TcpStream::connect(addr).unwrap();
-            // Keep the socket open long enough for the send to land.
-            std::thread::sleep(std::time::Duration::from_millis(50));
-            drop(s);
+            let mut s = TcpStream::connect(addr).unwrap();
+            match recv_ctrl(&mut s).unwrap() {
+                (src, CtrlMsg::Failed { error }) => {
+                    assert_eq!(src, COORD);
+                    assert!(error.contains("busy"), "got: {error}");
+                }
+                other => panic!("expected FAILED, got {other:?}"),
+            }
         });
         let (s, _) = listener.accept().unwrap();
-        let wr = Mutex::new(s);
-        match client_fail(&wr, "bad client".to_string()) {
-            ClientEnd::Client(e) => assert!(format!("{e}").contains("bad client")),
-            ClientEnd::Pool(_) => panic!("client_fail must not be a pool failure"),
-        }
+        refuse(s, "pool busy: the session limit is reached and the wait queue is full");
         client.join().unwrap();
+    }
+
+    /// The acceptor notices the stop flag instead of pinning its
+    /// thread in a blocked accept.
+    #[test]
+    fn acceptor_stops_on_flag() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let (tx, _rx) = channel();
+        let stop = Arc::new(AtomicBool::new(false));
+        let h = spawn_acceptor(&listener, tx, stop.clone()).unwrap();
+        stop.store(true, Ordering::Relaxed);
+        h.join().expect("acceptor thread exits");
     }
 }

@@ -428,8 +428,16 @@ fn build_engine(
     }
 }
 
-/// Pool service loop: build the data fabric once, then run every job
-/// the coordinator ships until SHUTDOWN (or the coordinator vanishes).
+/// Pool service loop: build the data fabric once, then serve app jobs,
+/// generic collective configs and their rounds until SHUTDOWN (or the
+/// coordinator vanishes).
+///
+/// Generic collective state is held by a [`GenericEngine`]: the
+/// multi-tenant serve plane keeps MANY configs live at once (one per
+/// multiplexed client session), so CONFIGURE no longer captures the
+/// loop — every control message is handled here, and RELEASE frees one
+/// config's protocol handle (and its scatter state) without touching
+/// the fabric or any other live config.
 fn serve_pool(
     node: usize,
     plan: &WorkerPlan,
@@ -451,20 +459,29 @@ fn serve_pool(
     let net = TcpNet::from_addrs(node, listener, addrs).context("building data fabric")?;
     let timeout = Duration::from_millis(plan.data_timeout_ms.max(1));
 
-    let mut pending: Option<CtrlMsg> = None;
+    let mut engine = GenericEngine::new(node, degrees.clone(), net.clone(), timeout);
     loop {
-        let msg = match pending.take() {
-            Some(m) => m,
-            None => match ctrl_msgs.recv() {
-                Ok(Ok(msg)) => msg,
-                // Coordinator gone while idle between jobs: a clean
-                // release, same as SHUTDOWN (crashed launches must not
-                // strand pools).
-                Ok(Err(_)) | Err(_) => return Ok(()),
-            },
+        let msg = match ctrl_msgs.recv() {
+            Ok(Ok(msg)) => msg,
+            // Coordinator gone while idle between jobs: a clean
+            // release, same as SHUTDOWN (crashed launches must not
+            // strand pools).
+            Ok(Err(_)) | Err(_) => return Ok(()),
         };
         match msg {
             CtrlMsg::Job(job) => {
+                if !engine.is_empty() {
+                    // The coordinator refuses app jobs while collective
+                    // sessions are live; if one arrives anyway, the
+                    // stale handles would steal the job's data-plane
+                    // traffic — drop them first.
+                    log::warn!(
+                        "app job {} arrived with {} live collective config(s); dropping them",
+                        job.job,
+                        engine.live()
+                    );
+                    engine.clear();
+                }
                 log::info!(
                     "job {} `{}` ({}) — iters {}, dataset {}",
                     job.job,
@@ -487,104 +504,164 @@ fn serve_pool(
                 send_ctrl(ctrl_wr, node, &CtrlMsg::Report(report)).context("sending REPORT")?;
             }
             CtrlMsg::Configure(c) => {
-                // App-agnostic generic collective engine: a remote
-                // client streamed a sparsity pattern; serve its rounds
-                // until a non-collective message takes over.
-                match serve_generic(
-                    node,
-                    replication,
-                    &degrees,
-                    c,
-                    net.clone(),
-                    timeout,
-                    ctrl_wr,
-                    ctrl_msgs,
-                )? {
-                    Some(next) => pending = Some(next),
-                    None => return Ok(()),
+                if replication > 1 {
+                    bail!(
+                        "the generic collective engine runs on replication-1 pools \
+                         (this pool replicates ×{replication})"
+                    );
+                }
+                let job = engine.configure(c)?;
+                send_ctrl(ctrl_wr, node, &CtrlMsg::ConfigDone { job })
+                    .context("sending CONFIG_DONE")?;
+            }
+            CtrlMsg::Values(v) => {
+                let r = engine
+                    .round(&v)
+                    .with_context(|| format!("collective round {} (stage {})", v.seq, v.stage))?;
+                let out = CtrlMsg::Result(r);
+                send_ctrl(ctrl_wr, node, &out).context("sending RESULT")?;
+                // The payload buffer just crossed the wire; reclaim its
+                // capacity for the next round's encode.
+                if let CtrlMsg::Result(r) = out {
+                    engine.reclaim_wire(r.payload);
                 }
             }
+            CtrlMsg::Release { job } => engine.release(job),
             CtrlMsg::Shutdown => return Ok(()),
-            other => log::warn!("unexpected control message while idle: {other:?}"),
+            other => log::warn!("unexpected control message while serving: {other:?}"),
         }
     }
 }
 
-/// Serve the app-agnostic generic collective engine for one remote
-/// config (and any reconfigures that follow it): build a protocol
-/// handle for the streamed sparsity pattern over the pool's long-lived
-/// fabric, vote CONFIG_DONE, then answer VALUES rounds with RESULTs —
-/// no `JobPlan` app tag anywhere, so ANY client workload runs
-/// distributed without touching this file. Returns the first
-/// non-collective control message (handed back to the pool loop), or
-/// `None` when the control channel died.
-#[allow(clippy::too_many_arguments)]
-fn serve_generic(
+/// Reusable scratch buffers for the generic engine's round path: one
+/// decode buffer per value type plus the wire-encode buffer. In steady
+/// state (same pattern, same operator, round after round) no buffer
+/// reallocates — see `wire::{encode_values_into, decode_values_into}`.
+#[derive(Default)]
+struct Scratch {
+    f32s: Vec<f32>,
+    u32s: Vec<u32>,
+    wire: Vec<u8>,
+}
+
+/// Selects a value type's decode slot in [`Scratch`] (f32 for
+/// SumF32/MaxF32, u32 for OrU32).
+trait ScratchVals: Sized {
+    fn slot(scratch: &mut Scratch) -> &mut Vec<Self>;
+}
+
+impl ScratchVals for f32 {
+    fn slot(scratch: &mut Scratch) -> &mut Vec<f32> {
+        &mut scratch.f32s
+    }
+}
+
+impl ScratchVals for u32 {
+    fn slot(scratch: &mut Scratch) -> &mut Vec<u32> {
+        &mut scratch.u32s
+    }
+}
+
+/// One live generic collective config: the protocol handle built from a
+/// client's streamed sparsity pattern (it owns the scatter state the
+/// config phase computed) and the outbound length its rounds must match.
+struct LiveConfig {
+    handle: NodeHandle<TcpNet>,
+    out_len: usize,
+}
+
+/// The worker half of the multi-tenant serve plane: every live remote
+/// collective config keyed by pool job id, sharing the pool's one
+/// fabric. The relay serializes rounds (one complete batch pool-wide at
+/// a time), so at most one handle is mid-reduce at any instant — the
+/// map only multiplexes *configured state*, which is exactly what lets
+/// N client sessions hold their scatter sets concurrently without N
+/// config phases per round.
+struct GenericEngine {
     node: usize,
-    replication: usize,
-    degrees: &[usize],
-    first: ConfigureMsg,
+    degrees: Vec<usize>,
     net: Arc<TcpNet>,
     timeout: Duration,
-    ctrl_wr: &Mutex<TcpStream>,
-    ctrl_msgs: &Receiver<std::io::Result<CtrlMsg>>,
-) -> Result<Option<CtrlMsg>> {
-    if replication > 1 {
-        bail!(
-            "the generic collective engine runs on replication-1 pools \
-             (this pool replicates ×{replication})"
-        );
+    configs: HashMap<u32, LiveConfig>,
+    scratch: Scratch,
+}
+
+impl GenericEngine {
+    fn new(node: usize, degrees: Vec<usize>, net: Arc<TcpNet>, timeout: Duration) -> Self {
+        Self { node, degrees, net, timeout, configs: HashMap::new(), scratch: Scratch::default() }
     }
-    let mut cfg = first;
-    loop {
-        if cfg.lane as usize != node {
-            bail!("CONFIGURE for lane {} delivered to worker {node}", cfg.lane);
+
+    fn is_empty(&self) -> bool {
+        self.configs.is_empty()
+    }
+
+    fn live(&self) -> usize {
+        self.configs.len()
+    }
+
+    fn clear(&mut self) {
+        self.configs.clear();
+    }
+
+    /// Build (or rebuild) the protocol handle for one streamed config
+    /// and run its config phase; returns the pool job id to vote
+    /// CONFIG_DONE for.
+    fn configure(&mut self, cfg: ConfigureMsg) -> Result<u32> {
+        if cfg.lane as usize != self.node {
+            bail!("CONFIGURE for lane {} delivered to worker {}", cfg.lane, self.node);
         }
         if cfg.index_range < 1 {
             bail!("CONFIGURE index range must be >= 1 (got {})", cfg.index_range);
         }
-        let topo = Butterfly::new(degrees.to_vec(), cfg.index_range);
+        let job = cfg.job;
+        let topo = Butterfly::new(self.degrees.clone(), cfg.index_range);
         let mut handle =
-            NodeHandle::new(topo, node, net.clone(), cfg.send_threads.max(1) as usize);
-        handle.set_timeout(timeout);
-        // Same tag scoping as app jobs: a late packet from the previous
-        // config (or job) must not alias this config's tags.
-        handle.set_seq_base(cfg.job.wrapping_shl(16));
+            NodeHandle::new(topo, self.node, self.net.clone(), cfg.send_threads.max(1) as usize);
+        handle.set_timeout(self.timeout);
+        // Job-scoped tag space: with many configs live on one fabric, a
+        // packet from config A must never alias config B's tags (and a
+        // late packet from a released config must not alias anything).
+        handle.set_seq_base(job.wrapping_shl(16));
         let out_len = cfg.outbound.len();
         handle
             .config(IndexSet::from_unsorted(cfg.outbound), IndexSet::from_unsorted(cfg.inbound))
-            .with_context(|| format!("generic config {} phase", cfg.job))?;
-        send_ctrl(ctrl_wr, node, &CtrlMsg::ConfigDone { job: cfg.job })
-            .context("sending CONFIG_DONE")?;
+            .with_context(|| format!("generic config {job} phase"))?;
         log::info!(
-            "generic collective config {} ready ({out_len} outbound indices, range {})",
-            cfg.job,
-            cfg.index_range
+            "generic collective config {job} ready ({out_len} outbound indices, range {}; \
+             {} config(s) live)",
+            cfg.index_range,
+            self.configs.len() + 1
         );
-        loop {
-            let msg = match ctrl_msgs.recv() {
-                Ok(Ok(m)) => m,
-                Ok(Err(_)) | Err(_) => return Ok(None),
-            };
-            match msg {
-                CtrlMsg::Values(v) if v.job == cfg.job => {
-                    let r = generic_round(&mut handle, &v, out_len).with_context(|| {
-                        format!("collective round {} (stage {})", v.seq, v.stage)
-                    })?;
-                    send_ctrl(ctrl_wr, node, &CtrlMsg::Result(r)).context("sending RESULT")?;
-                }
-                CtrlMsg::Values(v) => {
-                    bail!("VALUES for collective {} while serving {}", v.job, cfg.job)
-                }
-                // New sparsity pattern (e.g. SGD's per-step feature
-                // sets): rebuild the handle, keep the fabric.
-                CtrlMsg::Configure(next) => {
-                    cfg = next;
-                    break;
-                }
-                other => return Ok(Some(other)),
-            }
+        self.configs.insert(job, LiveConfig { handle, out_len });
+        Ok(job)
+    }
+
+    /// Run one collective round against the live config its VALUES
+    /// names.
+    fn round(&mut self, v: &ValuesMsg) -> Result<ResultMsg> {
+        let cfg = self
+            .configs
+            .get_mut(&v.job)
+            .with_context(|| format!("VALUES for collective {} but that config is not live", v.job))?;
+        generic_round(&mut cfg.handle, v, cfg.out_len, &mut self.scratch)
+    }
+
+    /// Drop one config's protocol handle — and with it the scatter
+    /// state its config phase built. Idempotent: the serve plane may
+    /// race an eviction against a client's own goodbye.
+    fn release(&mut self, job: u32) {
+        if self.configs.remove(&job).is_some() {
+            log::info!(
+                "released collective config {job} ({} config(s) still live)",
+                self.configs.len()
+            );
         }
+    }
+
+    /// Return a RESULT payload buffer's capacity to the scratch pool
+    /// once the message has been sent.
+    fn reclaim_wire(&mut self, buf: Vec<u8>) {
+        self.scratch.wire = buf;
     }
 }
 
@@ -595,11 +672,12 @@ fn generic_round(
     handle: &mut NodeHandle<TcpNet>,
     v: &ValuesMsg,
     out_len: usize,
+    scratch: &mut Scratch,
 ) -> Result<ResultMsg> {
     match v.op {
-        OP_CODE_SUM_F32 => typed_round::<SumF32>(handle, v, out_len),
-        OP_CODE_OR_U32 => typed_round::<OrU32>(handle, v, out_len),
-        OP_CODE_MAX_F32 => typed_round::<MaxF32>(handle, v, out_len),
+        OP_CODE_SUM_F32 => typed_round::<SumF32>(handle, v, out_len, scratch),
+        OP_CODE_OR_U32 => typed_round::<OrU32>(handle, v, out_len, scratch),
+        OP_CODE_MAX_F32 => typed_round::<MaxF32>(handle, v, out_len, scratch),
         other => bail!("unknown reduce-op code {other}"),
     }
 }
@@ -608,8 +686,16 @@ fn typed_round<R: ReduceOp>(
     handle: &mut NodeHandle<TcpNet>,
     v: &ValuesMsg,
     out_len: usize,
-) -> Result<ResultMsg> {
-    let vals = wire::decode_values::<R>(&v.payload).context("decoding round values")?;
+    scratch: &mut Scratch,
+) -> Result<ResultMsg>
+where
+    R::T: ScratchVals,
+{
+    // Decode into the recycled buffer (its capacity came from last
+    // round's reduce output), then hand it to the protocol — which
+    // consumes it — and recycle the protocol's output after encoding.
+    let mut vals = std::mem::take(<R::T as ScratchVals>::slot(scratch));
+    wire::decode_values_into::<R>(&v.payload, &mut vals).context("decoding round values")?;
     let base = ResultMsg {
         job: v.job,
         seq: v.seq,
@@ -625,18 +711,24 @@ fn typed_round<R: ReduceOp>(
                 bail!("{} values but the configured outbound set has {out_len}", vals.len());
             }
             let out = handle.reduce::<R>(vals).context("reduce")?;
-            Ok(ResultMsg { payload: wire::encode_values::<R>(&out), ..base })
+            let mut payload = std::mem::take(&mut scratch.wire);
+            wire::encode_values_into::<R>(&out, &mut payload);
+            *<R::T as ScratchVals>::slot(scratch) = out;
+            Ok(ResultMsg { payload, ..base })
         }
         VAL_STAGE_DOWN => {
             if vals.len() != out_len {
                 bail!("{} values but the configured outbound set has {out_len}", vals.len());
             }
             let bottom = handle.reduce_down_half::<R>(vals).context("scatter-reduce half")?;
+            let mut payload = std::mem::take(&mut scratch.wire);
+            wire::encode_values_into::<R>(&bottom, &mut payload);
+            *<R::T as ScratchVals>::slot(scratch) = bottom;
             Ok(ResultMsg {
                 stage: RES_STAGE_BOTTOM,
                 down_idx: handle.protocol().bottom_down_set().as_slice().to_vec(),
                 up_idx: handle.protocol().bottom_up_set().as_slice().to_vec(),
-                payload: wire::encode_values::<R>(&bottom),
+                payload,
                 ..base
             })
         }
@@ -646,7 +738,10 @@ fn typed_round<R: ReduceOp>(
                 bail!("{} bottom values but the up set has {want}", vals.len());
             }
             let out = handle.reduce_up_half::<R>(vals).context("allgather half")?;
-            Ok(ResultMsg { payload: wire::encode_values::<R>(&out), ..base })
+            let mut payload = std::mem::take(&mut scratch.wire);
+            wire::encode_values_into::<R>(&out, &mut payload);
+            *<R::T as ScratchVals>::slot(scratch) = out;
+            Ok(ResultMsg { payload, ..base })
         }
         other => bail!("unknown collective stage {other}"),
     }

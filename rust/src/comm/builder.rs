@@ -99,7 +99,10 @@ impl CommBuilder {
     /// Connect to a separately launched worker pool (`sar serve`'s
     /// client address) instead of spawning one: the session's
     /// `configure`/`allreduce` run remotely against the pool's generic
-    /// collective engine. Implies [`ExecMode::MultiProcess`].
+    /// collective engine. Implies [`ExecMode::MultiProcess`]. The serve
+    /// plane is multi-tenant — up to its `--sessions` limit of clients
+    /// share the pool concurrently (arrivals past it queue), so many
+    /// builders may point at one pool at once.
     pub fn pool(mut self, addr: impl Into<String>) -> Self {
         self.pool = Some(addr.into());
         self

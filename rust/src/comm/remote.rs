@@ -24,6 +24,14 @@
 //! Only index sets and sparse values ever cross the ingress — the
 //! client never ships a dense vector, keeping the client→pool link as
 //! sparse as the data-plane links inside the pool.
+//!
+//! The serve plane is multi-tenant (see [`crate::cluster::mux`]): many
+//! `RemoteSession`s share one pool concurrently, each with its own
+//! job-scoped worker state. A session past the pool's live limit waits
+//! in the pool's admission queue — visible here as a slow handshake —
+//! and an idle session can be evicted by the pool's keepalive, which
+//! surfaces as a FAILED answer on the next call. Dropping the session
+//! sends a polite goodbye so the pool frees its state immediately.
 
 use crate::cluster::proto::{
     recv_ctrl, reduce_op_code, send_ctrl, ConfigureMsg, CtrlMsg, ResultMsg, ValuesMsg, CLIENT,
@@ -55,6 +63,21 @@ pub struct RemoteSession {
     job: Option<u32>,
     /// Collective round counter within the live config.
     seq: u32,
+    /// Recycled VALUES-payload encode buffer: in steady state (same
+    /// pattern round after round) no per-round wire allocation happens
+    /// on the client either — the counterpart of the generic engine's
+    /// worker-side scratch.
+    wire_buf: Vec<u8>,
+}
+
+impl Drop for RemoteSession {
+    fn drop(&mut self) {
+        // Polite goodbye: the multi-tenant serve plane ends the session
+        // (freeing its admission slot and its workers' scatter state)
+        // on receipt, instead of waiting for the connection teardown to
+        // surface. Best-effort — the socket may already be gone.
+        let _ = send_ctrl(&self.wr, CLIENT, &CtrlMsg::Shutdown);
+    }
 }
 
 impl RemoteSession {
@@ -98,6 +121,7 @@ impl RemoteSession {
             cfg_seq: 0,
             job: None,
             seq: 0,
+            wire_buf: Vec::new(),
         })
     }
 
@@ -233,16 +257,23 @@ impl RemoteSession {
             "this reduce operator has no remote wire encoding (SumF32 | OrU32 | MaxF32)",
         )?;
         for (lane, v) in values.into_iter().enumerate() {
+            // Encode into the recycled buffer and reclaim it after the
+            // frame is flushed — zero steady-state wire allocations.
+            let mut payload = std::mem::take(&mut self.wire_buf);
+            wire::encode_values_into::<R>(&v, &mut payload);
             let msg = CtrlMsg::Values(ValuesMsg {
                 job,
                 seq: self.seq,
                 lane: lane as u32,
                 op,
                 stage,
-                payload: wire::encode_values::<R>(&v),
+                payload,
             });
             send_ctrl(&self.wr, CLIENT, &msg)
                 .with_context(|| format!("sending lane {lane}'s values"))?;
+            if let CtrlMsg::Values(m) = msg {
+                self.wire_buf = m.payload;
+            }
         }
         Ok(())
     }

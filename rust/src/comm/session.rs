@@ -23,7 +23,10 @@
 //!   `sar serve`-launched pool (`CommBuilder::pool(addr)`): the raw
 //!   two-phase lifecycle works exactly like the in-process modes, with
 //!   each lane's collective executed by a pool worker and only index
-//!   sets / sparse values crossing the ingress.
+//!   sets / sparse values crossing the ingress. The pool multiplexes
+//!   sessions (see [`crate::cluster::mux`]), so several remote
+//!   sessions — from one process or many — share it concurrently;
+//!   dropping the session hands its slot to the next queued client.
 
 use super::remote::RemoteSession;
 use super::ExecMode;

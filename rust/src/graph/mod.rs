@@ -20,8 +20,8 @@ pub use csr::Csr;
 pub use datasets::{DatasetPreset, DatasetSpec};
 pub use gen::{generate_power_law, generation_count, zipf_alpha_fit, GraphGenParams};
 pub use shard::{
-    load_all_shards, load_edge_list, load_shard, load_snap_edge_list, shard_graph, ShardManifest,
-    ShardMeta, ShardReader, MANIFEST_FILE,
+    load_all_shards, load_edge_list, load_matrix_market, load_shard, load_snap_edge_list,
+    shard_graph, ShardManifest, ShardMeta, ShardReader, MANIFEST_FILE,
 };
 
 /// An edge list graph over vertices `0..vertices`.

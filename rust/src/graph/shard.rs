@@ -653,6 +653,167 @@ pub fn load_snap_edge_list(path: &Path) -> Result<EdgeList> {
     Ok(g)
 }
 
+/// Load a Matrix Market coordinate file (`.mtx`) for `sar shard --from`:
+/// the sparse-matrix exchange format SuiteSparse and the SNAP mirrors
+/// publish. The banner must read `%%MatrixMarket matrix coordinate
+/// <real|integer|pattern> <general|symmetric>`; `%` comment lines are
+/// skipped, the `rows cols nnz` size line is enforced against the actual
+/// entry count, and 1-based coordinates become 0-based directed edges
+/// (values, if present, are ignored — sharding consumes structure only).
+/// A `symmetric` matrix stores each off-diagonal entry once; its mirror
+/// edge is materialized so the edge list really is the full graph. The
+/// same converter hygiene as [`load_snap_edge_list`] then applies:
+/// duplicates collapsed, edge order canonicalized by sorting, so the
+/// shard set — and every checksum derived from it — is independent of
+/// the file's entry order. Vertex count = max(rows, cols).
+pub fn load_matrix_market(path: &Path) -> Result<EdgeList> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading Matrix Market file {}", path.display()))?;
+    let mut lines = text.lines().enumerate();
+
+    let banner = match lines.next() {
+        Some((_, b)) => b.trim(),
+        None => bail!("{}: empty file", path.display()),
+    };
+    let banner_lc = banner.to_ascii_lowercase();
+    let head: Vec<&str> = banner_lc.split_whitespace().collect();
+    if head.len() < 5 || head[0] != "%%matrixmarket" || head[1] != "matrix" {
+        bail!(
+            "{}: not a Matrix Market file (expected a `%%MatrixMarket matrix \
+             coordinate …` banner, got `{banner}`)",
+            path.display()
+        );
+    }
+    if head[2] != "coordinate" {
+        bail!(
+            "{}: only the sparse `coordinate` format converts to an edge list \
+             (this file stores a dense `{}` matrix)",
+            path.display(),
+            head[2]
+        );
+    }
+    let has_value = match head[3] {
+        "pattern" => false,
+        "real" | "integer" => true,
+        other => bail!(
+            "{}: unsupported field type `{other}` (real, integer, and pattern \
+             carry graph structure)",
+            path.display()
+        ),
+    };
+    let symmetric = match head[4] {
+        "general" => false,
+        "symmetric" => true,
+        other => bail!(
+            "{}: unsupported symmetry `{other}` (general and symmetric are \
+             supported)",
+            path.display()
+        ),
+    };
+
+    let mut dims: Option<(i64, i64, usize)> = None;
+    let mut entries = 0usize;
+    let mut edges: Vec<(i64, i64)> = Vec::new();
+    for (lineno, raw) in lines {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('%') {
+            continue;
+        }
+        let at = lineno + 1;
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        let (rows, cols, nnz) = match dims {
+            Some(d) => d,
+            None => {
+                // First non-comment line after the banner: `rows cols nnz`.
+                if toks.len() != 3 {
+                    bail!(
+                        "{}:{at}: expected `rows cols nnz` size line, got `{line}`",
+                        path.display()
+                    );
+                }
+                let rows: i64 = toks[0].parse().with_context(|| {
+                    format!("{}:{at}: bad row count `{}`", path.display(), toks[0])
+                })?;
+                let cols: i64 = toks[1].parse().with_context(|| {
+                    format!("{}:{at}: bad column count `{}`", path.display(), toks[1])
+                })?;
+                let nnz: usize = toks[2].parse().with_context(|| {
+                    format!("{}:{at}: bad entry count `{}`", path.display(), toks[2])
+                })?;
+                if rows < 1 || cols < 1 {
+                    bail!("{}:{at}: matrix dimensions must be positive", path.display());
+                }
+                if symmetric && rows != cols {
+                    bail!(
+                        "{}:{at}: a symmetric matrix must be square (got {rows}x{cols})",
+                        path.display()
+                    );
+                }
+                edges.reserve(if symmetric { nnz.saturating_mul(2) } else { nnz });
+                dims = Some((rows, cols, nnz));
+                continue;
+            }
+        };
+        let want = if has_value { 3 } else { 2 };
+        if toks.len() != want {
+            bail!(
+                "{}:{at}: expected `{}`, got `{line}`",
+                path.display(),
+                if has_value { "row col value" } else { "row col" }
+            );
+        }
+        let u: i64 = toks[0]
+            .parse()
+            .with_context(|| format!("{}:{at}: bad row index `{}`", path.display(), toks[0]))?;
+        let v: i64 = toks[1]
+            .parse()
+            .with_context(|| format!("{}:{at}: bad column index `{}`", path.display(), toks[1]))?;
+        if u < 1 || u > rows || v < 1 || v > cols {
+            bail!(
+                "{}:{at}: entry ({u}, {v}) falls outside the declared {rows}x{cols} \
+                 matrix (Matrix Market coordinates are 1-based)",
+                path.display()
+            );
+        }
+        entries += 1;
+        if entries > nnz {
+            bail!(
+                "{}:{at}: more entries than the {nnz} the size line declares",
+                path.display()
+            );
+        }
+        edges.push((u - 1, v - 1));
+        if symmetric && u != v {
+            edges.push((v - 1, u - 1));
+        }
+    }
+    let (rows, cols, nnz) = match dims {
+        Some(d) => d,
+        None => bail!("{}: missing the `rows cols nnz` size line", path.display()),
+    };
+    if entries != nnz {
+        bail!(
+            "{}: size line declares {nnz} entries but the file holds {entries}",
+            path.display()
+        );
+    }
+    if edges.is_empty() {
+        bail!("{}: matrix holds no entries", path.display());
+    }
+    let before = edges.len();
+    edges.sort_unstable();
+    edges.dedup();
+    if edges.len() < before {
+        log::info!(
+            "collapsed {} duplicate entries from {} ({} edges remain)",
+            before - edges.len(),
+            path.display(),
+            edges.len()
+        );
+    }
+    Ok(EdgeList { vertices: rows.max(cols), edges })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -900,6 +1061,107 @@ mod tests {
         let (m2, shards) = load_all_shards(&out).unwrap();
         assert_eq!(m2.digest(), manifest.digest());
         assert_eq!(shards.iter().map(|s| s.nnz()).sum::<usize>(), g.edges.len());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Satellite (`sar shard --from *.mtx`): a general coordinate matrix
+    /// converts 1-based entries to 0-based edges with values ignored,
+    /// duplicates collapsed, and canonical order — entry order in the
+    /// file must not matter.
+    #[test]
+    fn matrix_market_general_converts() {
+        let dir = tmp_dir("mtx-general");
+        let path = dir.join("g.mtx");
+        std::fs::write(
+            &path,
+            "%%MatrixMarket matrix coordinate real general\n\
+             % a comment between banner and size line\n\
+             4 4 6\n\
+             1 2 0.5\n\
+             2 3 1.0e-3\n\
+             4 1 2\n\
+             1 2 0.5\n\
+             3 3 7\n\
+             2 1 1\n",
+        )
+        .unwrap();
+        let g = load_matrix_market(&path).unwrap();
+        assert_eq!(g.vertices, 4);
+        assert_eq!(g.edges, vec![(0, 1), (1, 0), (1, 2), (2, 2), (3, 0)]);
+        // same entries, shuffled order → identical edge list
+        std::fs::write(
+            &path,
+            "%%MatrixMarket matrix coordinate real general\n\
+             4 4 6\n\
+             3 3 7\n2 1 1\n1 2 0.5\n4 1 2\n2 3 1.0e-3\n1 2 0.5\n",
+        )
+        .unwrap();
+        let g2 = load_matrix_market(&path).unwrap();
+        assert_eq!(g2.edges, g.edges);
+        assert_eq!(g2.vertices, g.vertices);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// A symmetric pattern matrix stores each off-diagonal entry once;
+    /// the converter must materialize the mirror edge and leave the
+    /// diagonal unduplicated.
+    #[test]
+    fn matrix_market_symmetric_mirrors_off_diagonal() {
+        let dir = tmp_dir("mtx-sym");
+        let path = dir.join("s.mtx");
+        std::fs::write(
+            &path,
+            "%%MatrixMarket matrix coordinate pattern symmetric\n\
+             3 3 3\n\
+             2 1\n\
+             3 1\n\
+             2 2\n",
+        )
+        .unwrap();
+        let g = load_matrix_market(&path).unwrap();
+        assert_eq!(g.vertices, 3);
+        assert_eq!(g.edges, vec![(0, 1), (0, 2), (1, 0), (1, 1), (2, 0)]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Malformed `.mtx` inputs fail with readable errors instead of
+    /// silently sharding a wrong graph.
+    #[test]
+    fn matrix_market_rejects_malformed_files() {
+        let dir = tmp_dir("mtx-bad");
+        let write = |name: &str, body: &str| {
+            let p = dir.join(name);
+            std::fs::write(&p, body).unwrap();
+            p
+        };
+        // dense array format has no entry coordinates to shard
+        let p = write("array.mtx", "%%MatrixMarket matrix array real general\n2 2\n1\n0\n0\n1\n");
+        let err = format!("{:#}", load_matrix_market(&p).unwrap_err());
+        assert!(err.contains("coordinate"), "got {err}");
+        // size line promises more entries than the file holds
+        let p = write(
+            "short.mtx",
+            "%%MatrixMarket matrix coordinate real general\n3 3 3\n1 2 1\n2 3 1\n",
+        );
+        let err = format!("{:#}", load_matrix_market(&p).unwrap_err());
+        assert!(err.contains("declares 3"), "got {err}");
+        // entry outside the declared dimensions (also catches 0-based files)
+        let p = write(
+            "range.mtx",
+            "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1\n0 1 1\n",
+        );
+        let err = format!("{:#}", load_matrix_market(&p).unwrap_err());
+        assert!(err.contains("1-based"), "got {err}");
+        // symmetric storage only makes sense for a square matrix
+        let p = write(
+            "rect.mtx",
+            "%%MatrixMarket matrix coordinate pattern symmetric\n2 3 1\n1 2\n",
+        );
+        let err = format!("{:#}", load_matrix_market(&p).unwrap_err());
+        assert!(err.contains("square"), "got {err}");
+        // a banner from some other format is not quietly half-parsed
+        let p = write("plain.mtx", "0 1\n1 2\n");
+        assert!(load_matrix_market(&p).is_err());
         std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -9,7 +9,8 @@ use sparse_allreduce::cluster::{self, ClusterRun, LaunchOpts, WorkerOpts};
 use sparse_allreduce::comm::{CommBuilder, ExecMode, JobOutcome, JobSpec};
 use sparse_allreduce::config::{validate_world, RunConfig};
 use sparse_allreduce::graph::{
-    load_edge_list, load_snap_edge_list, shard_graph, DatasetPreset, DatasetSpec, ShardManifest,
+    load_edge_list, load_matrix_market, load_snap_edge_list, shard_graph, DatasetPreset,
+    DatasetSpec, ShardManifest,
 };
 use sparse_allreduce::partition::Strategy;
 use sparse_allreduce::runtime::{Runtime, XlaGradEngine};
@@ -47,6 +48,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "worker" => cmd_worker(args),
         "launch" => cmd_launch(args),
         "serve" => cmd_serve(args),
+        "serve-bench" => cmd_serve_bench(args),
         "config-check" => cmd_config_check(args),
         other => bail!("unknown command `{other}`\n\n{USAGE}"),
     }
@@ -253,14 +255,23 @@ fn cmd_shard(args: &Args) -> Result<()> {
         );
     }
     let (graph, source, scale) = if let Some(path) = file_input {
-        // `--edges` shards the file as-is; `--from` is the SNAP-style
-        // converter (ROADMAP PR 2 follow-up): `#` header comments
-        // skipped, tab/space separation, duplicate edges collapsed,
-        // edge order canonicalized for determinism.
-        let snap = args.flag("from").is_some();
+        // `--edges` shards the file as-is; `--from` is the converter
+        // door: `.mtx` runs the Matrix Market coordinate parser
+        // (symmetric mirroring, 1-based → 0-based), anything else the
+        // SNAP-style edge-list cleanup. Both collapse duplicates and
+        // canonicalize edge order for determinism.
+        let convert = args.flag("from").is_some();
         let path = PathBuf::from(path);
-        let graph =
-            if snap { load_snap_edge_list(&path)? } else { load_edge_list(&path)? };
+        let mtx = path
+            .extension()
+            .map_or(false, |e| e.eq_ignore_ascii_case("mtx"));
+        let graph = if convert && mtx {
+            load_matrix_market(&path)?
+        } else if convert {
+            load_snap_edge_list(&path)?
+        } else {
+            load_edge_list(&path)?
+        };
         let name = path
             .file_name()
             .map(|n| n.to_string_lossy().into_owned())
@@ -758,15 +769,20 @@ fn print_launch_run(cfg: &RunConfig, run: &ClusterRun) {
 }
 
 /// `sar serve`: launch (or join) a worker pool and serve remote
-/// collective clients against it — the app-agnostic door. Clients
-/// connect with `CommBuilder::pool(addr)` (or any `sar` client verb's
-/// `--pool` flag), stream their sparsity pattern and per-round sparse
-/// values, and get reduced results back; the pool never learns an app
-/// name.
+/// collective clients against it — the app-agnostic door, multi-tenant.
+/// Clients connect with `CommBuilder::pool(addr)` (or any `sar` client
+/// verb's `--pool` flag), stream their sparsity pattern and per-round
+/// sparse values, and get reduced results back; the pool never learns
+/// an app name. Up to `--sessions` clients are served concurrently;
+/// arrivals past the limit wait in a bounded queue, idle sessions are
+/// evicted on the keepalive.
 fn cmd_serve(args: &Args) -> Result<()> {
     args.expect_known(
         "serve",
-        &["degrees", "threads", "bind", "client-bind", "sessions", "bin", "no-spawn"],
+        &[
+            "degrees", "threads", "bind", "client-bind", "sessions", "queue",
+            "keepalive-secs", "total-sessions", "bin", "no-spawn",
+        ],
     )?;
     let opts = LaunchOpts {
         degrees: args.degrees_flag("degrees", &[2, 2])?,
@@ -774,9 +790,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         bind: args.flag("bind").unwrap_or("127.0.0.1:0").to_string(),
         ..LaunchOpts::default()
     };
-    let sessions = match args.flag("sessions") {
-        Some(_) => Some(args.usize_flag("sessions", 1)?),
-        None => None,
+    let serve_opts = cluster::ServeOpts {
+        max_live: args.usize_flag("sessions", cluster::ServeOpts::default().max_live)?,
+        queue_depth: args.usize_flag("queue", cluster::ServeOpts::default().queue_depth)?,
+        keepalive: std::time::Duration::from_secs(args.u64_flag("keepalive-secs", 120)?.max(1)),
+        total: match args.flag("total-sessions") {
+            Some(_) => Some(args.usize_flag("total-sessions", 0)?),
+            None => None,
+        },
     };
     let client_bind = args.flag("client-bind").unwrap_or("127.0.0.1:0");
     let client_listener = std::net::TcpListener::bind(client_bind)
@@ -804,16 +825,242 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let (session, procs) = cluster::spawn_session(&bin, opts)?;
         (session, Some(procs))
     };
-    println!("pool of {world} workers ready; serving collective clients at {client_addr}");
+    println!(
+        "pool of {world} workers ready; serving up to {} concurrent collective \
+         client(s) at {client_addr} (queue {}, keepalive {:?})",
+        serve_opts.max_live, serve_opts.queue_depth, serve_opts.keepalive
+    );
     println!("connect with:  sar pagerank --pool {client_addr} --degrees <pool schedule>");
 
-    let served = cluster::serve_clients(&mut session, &client_listener, sessions);
+    let stats = cluster::serve_mux(&mut session, &client_listener, &serve_opts);
     session.shutdown();
     if let Some(mut procs) = procs {
         procs.wait_all();
     }
-    let served = served?;
-    println!("served {served} client session(s); pool released");
+    let stats = stats?;
+    println!(
+        "served {} client session(s) (peak {} concurrent, {} evicted, {} rejected); \
+         pool released",
+        stats.served, stats.peak_live, stats.evicted, stats.rejected
+    );
+    Ok(())
+}
+
+/// Deterministic sparsity patterns for one serve-bench client: every
+/// lane scatters/gathers a fixed-size pseudo-random index set, seeded by
+/// `salt` so the two clients exercise distinct patterns.
+fn serve_bench_patterns(
+    world: usize,
+    range: i64,
+    per_lane: usize,
+    salt: u64,
+) -> (Vec<sparse_allreduce::sparse::IndexSet>, Vec<sparse_allreduce::sparse::IndexSet>) {
+    let mut state = salt.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(0x1234_5678);
+    let mut next = |m: i64| {
+        state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        ((state >> 33) as i64).rem_euclid(m)
+    };
+    let mut lanes = |_| {
+        (0..world)
+            .map(|_| {
+                let idx: Vec<i64> = (0..per_lane).map(|_| next(range)).collect();
+                sparse_allreduce::sparse::IndexSet::from_unsorted(idx)
+            })
+            .collect::<Vec<_>>()
+    };
+    (lanes(0), lanes(1))
+}
+
+/// One complete serve-bench client lifecycle: open a session (lockstep
+/// oracle when `pool` is None, remote otherwise), configure, run
+/// `rounds` SumF32 allreduces, and fold every reduced value into a
+/// checksum.
+fn serve_bench_client(
+    degrees: &[usize],
+    pool: Option<&str>,
+    range: i64,
+    rounds: usize,
+    salt: u64,
+    threads: usize,
+) -> Result<f64> {
+    let mut b = CommBuilder::new(degrees.to_vec()).send_threads(threads);
+    if let Some(addr) = pool {
+        b = b.mode(ExecMode::MultiProcess).pool(addr);
+    }
+    let mut sess = b.build(range)?;
+    let world: usize = degrees.iter().product();
+    let (out, inb) = serve_bench_patterns(world, range, 24, salt);
+    let mut cfg = sess.configure(out.clone(), inb)?;
+    let mut sum = 0f64;
+    for round in 0..rounds {
+        let mut vals: Vec<Vec<f32>> = out
+            .iter()
+            .enumerate()
+            .map(|(n, s)| {
+                (0..s.len())
+                    .map(|i| ((n * 31 + i * 7 + round * 3 + salt as usize) % 17) as f32 * 0.25)
+                    .collect()
+            })
+            .collect();
+        cfg.allreduce::<sparse_allreduce::sparse::SumF32>(&mut vals)?;
+        for lane in &vals {
+            for v in lane {
+                sum += f64::from(*v);
+            }
+        }
+    }
+    Ok(sum)
+}
+
+/// Warmup + timed iterations of one serve-bench phase.
+fn serve_bench_timed<F: FnMut() -> Result<()>>(
+    opts: &BenchOpts,
+    mut f: F,
+) -> Result<sparse_allreduce::util::Summary> {
+    for _ in 0..opts.warmup_iters {
+        f()?;
+    }
+    let mut samples = Vec::with_capacity(opts.measure_iters);
+    for _ in 0..opts.measure_iters {
+        let t = std::time::Instant::now();
+        f()?;
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    Ok(sparse_allreduce::util::Summary::of(&samples))
+}
+
+/// `sar serve-bench`: measure the tentpole's headline — two clients
+/// served serially vs multiplexed on one pool — validating every
+/// client's checksum against the lockstep oracle, and emit the
+/// `BENCH_6.json` trajectory row.
+fn cmd_serve_bench(args: &Args) -> Result<()> {
+    args.expect_known("serve-bench", &["degrees", "threads", "rounds", "out", "bin", "fast"])?;
+    let degrees = args.degrees_flag("degrees", &[2, 2])?;
+    let threads = args.usize_flag("threads", 2)?;
+    let rounds = args.usize_flag("rounds", 16)?;
+    let range: i64 = 4096;
+    let out_path = PathBuf::from(args.flag("out").unwrap_or("BENCH_6.json"));
+    let bopts = if args.has_switch("fast") { BenchOpts::fast() } else { BenchOpts::default() };
+
+    // Lockstep oracles, one per client workload.
+    let want_a = serve_bench_client(&degrees, None, range, rounds, 1, threads)?;
+    let want_b = serve_bench_client(&degrees, None, range, rounds, 2, threads)?;
+
+    let bin = match args.flag("bin") {
+        Some(b) => PathBuf::from(b),
+        None => cluster::sar_binary()?,
+    };
+    let lopts = LaunchOpts {
+        degrees: degrees.clone(),
+        send_threads: threads,
+        ..LaunchOpts::default()
+    };
+    let (mut session, mut procs) = cluster::spawn_session(&bin, lopts)?;
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")
+        .context("binding the serve-bench client listener")?;
+    let addr = sparse_allreduce::transport::advertised_addr(&listener)?.to_string();
+    let iters = bopts.warmup_iters + bopts.measure_iters;
+    // Two sessions per serial iteration + two per multiplexed iteration.
+    let serve_opts = cluster::ServeOpts {
+        max_live: 2,
+        queue_depth: 4,
+        keepalive: std::time::Duration::from_secs(120),
+        total: Some(iters * 4),
+    };
+    let serve = std::thread::spawn(move || {
+        let stats = cluster::serve_mux(&mut session, &listener, &serve_opts);
+        session.shutdown();
+        procs.wait_all();
+        stats
+    });
+
+    println!(
+        "serve-bench: 2 clients x {rounds} rounds over [0, {range}) on a {} pool \
+         ({} warmup + {} measured iterations per case)",
+        degrees.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("x"),
+        bopts.warmup_iters,
+        bopts.measure_iters
+    );
+    let run_client = |salt: u64, want: f64| -> Result<()> {
+        let got = serve_bench_client(&degrees, Some(&addr), range, rounds, salt, threads)?;
+        if (got - want).abs() > 1e-9 {
+            bail!("client {salt} checksum {got} diverged from the lockstep oracle {want}");
+        }
+        Ok(())
+    };
+    let serial = serve_bench_timed(&bopts, || {
+        run_client(1, want_a)?;
+        run_client(2, want_b)
+    })?;
+    println!("  two clients, serial:      p50 {}", human_duration(serial.p50));
+    let multiplexed = serve_bench_timed(&bopts, || {
+        let handles: Vec<_> = [(1u64, want_a), (2u64, want_b)]
+            .into_iter()
+            .map(|(salt, want)| {
+                let degrees = degrees.clone();
+                let addr = addr.clone();
+                std::thread::spawn(move || -> Result<()> {
+                    let got =
+                        serve_bench_client(&degrees, Some(&addr), range, rounds, salt, threads)?;
+                    if (got - want).abs() > 1e-9 {
+                        bail!(
+                            "client {salt} checksum {got} diverged from the lockstep \
+                             oracle {want}"
+                        );
+                    }
+                    Ok(())
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().map_err(|_| anyhow::anyhow!("a concurrent bench client panicked"))??;
+        }
+        Ok(())
+    })?;
+    println!("  two clients, multiplexed: p50 {}", human_duration(multiplexed.p50));
+
+    let stats = serve
+        .join()
+        .map_err(|_| anyhow::anyhow!("the serve thread panicked"))?
+        .context("the serve loop failed")?;
+    let speedup = if multiplexed.p50 > 0.0 { serial.p50 / multiplexed.p50 } else { 0.0 };
+    println!(
+        "  serial/multiplexed p50 ratio {speedup:.2} (served {}, peak {} concurrent)",
+        stats.served, stats.peak_live
+    );
+
+    use sparse_allreduce::bench::{json_f64, summary_json};
+    let json = format!(
+        "{{\n  \"bench\": 6,\n  \"experiment\": \"multi-tenant serve plane: two clients \
+         serial vs multiplexed on one pool\",\n  \"degrees\": [{}],\n  \"rounds\": {rounds},\n  \
+         \"index_range\": {range},\n  \"clients\": 2,\n  \"bench_opts\": \
+         {{\"warmup_iters\":{},\"measure_iters\":{}}},\n  \"rows\": [\n    \
+         {{\"case\":\"two_clients_serial\",\"secs\":{}}},\n    \
+         {{\"case\":\"two_clients_multiplexed\",\"secs\":{}}}\n  ],\n  \
+         \"serial_over_multiplexed_p50\": {},\n  \"serve_stats\": {{\"served\":{},\
+         \"evicted\":{},\"rejected\":{},\"peak_live\":{}}},\n  \
+         \"checksums_match_lockstep\": true,\n  \"regenerate\": \"sar serve-bench --out \
+         BENCH_6.json\"\n}}\n",
+        degrees.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(","),
+        bopts.warmup_iters,
+        bopts.measure_iters,
+        summary_json(&serial),
+        summary_json(&multiplexed),
+        json_f64(speedup),
+        stats.served,
+        stats.evicted,
+        stats.rejected,
+        stats.peak_live
+    );
+    if let Some(dir) = out_path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+        }
+    }
+    std::fs::write(&out_path, json)
+        .with_context(|| format!("writing {}", out_path.display()))?;
+    println!("wrote {}", out_path.display());
     Ok(())
 }
 

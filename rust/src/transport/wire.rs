@@ -97,6 +97,30 @@ pub fn decode_values<R: ReduceOp>(buf: &[u8]) -> std::io::Result<Vec<R::T>> {
     Ok(values_from_bytes::<R>(buf))
 }
 
+/// Serialize a value segment into a caller-owned buffer, reusing its
+/// capacity — the steady-state path of the serve plane's generic engine
+/// and `RemoteSession`, which encode one segment per lane every round
+/// and must not reallocate per round.
+pub fn encode_values_into<R: ReduceOp>(vals: &[R::T], out: &mut Vec<u8>) {
+    out.clear();
+    out.reserve(vals.len() * R::WIDTH);
+    for &v in vals {
+        R::to_bytes(v, out);
+    }
+}
+
+/// Deserialize a value segment into a caller-owned buffer, reusing its
+/// capacity (the counterpart of [`encode_values_into`]).
+pub fn decode_values_into<R: ReduceOp>(buf: &[u8], out: &mut Vec<R::T>) -> std::io::Result<()> {
+    if buf.len() % R::WIDTH != 0 {
+        return Err(corrupt("ragged value buffer"));
+    }
+    out.clear();
+    out.reserve(buf.len() / R::WIDTH);
+    out.extend(buf.chunks_exact(R::WIDTH).map(R::from_bytes));
+    Ok(())
+}
+
 /// Build an envelope for a config part.
 pub fn config_envelope(src: NodeId, tag: Tag, part: &ConfigPart) -> Envelope {
     Envelope { src, tag, payload: encode_config_part(part) }
@@ -142,6 +166,30 @@ mod tests {
         let vals = vec![1.5f32, -2.25, 0.0];
         let enc = encode_values::<SumF32>(&vals);
         assert_eq!(decode_values::<SumF32>(&enc).unwrap(), vals);
+    }
+
+    /// The `_into` variants round-trip like the allocating ones AND
+    /// reuse the caller's buffer: across rounds with same-size payloads
+    /// neither buffer reallocates (pointer-stable capacity).
+    #[test]
+    fn values_into_roundtrip_reuses_capacity() {
+        let mut wire = Vec::new();
+        let mut vals: Vec<f32> = Vec::new();
+        encode_values_into::<SumF32>(&[1.0f32, -2.5, 3.25], &mut wire);
+        assert_eq!(wire, encode_values::<SumF32>(&[1.0f32, -2.5, 3.25]));
+        decode_values_into::<SumF32>(&wire, &mut vals).unwrap();
+        assert_eq!(vals, vec![1.0f32, -2.5, 3.25]);
+        let (wp, vp) = (wire.as_ptr(), vals.as_ptr());
+        for round in 0..8 {
+            let input = [round as f32, 0.5, -1.0];
+            encode_values_into::<SumF32>(&input, &mut wire);
+            decode_values_into::<SumF32>(&wire, &mut vals).unwrap();
+            assert_eq!(vals, input);
+            assert_eq!(wire.as_ptr(), wp, "wire buffer reallocated on round {round}");
+            assert_eq!(vals.as_ptr(), vp, "value buffer reallocated on round {round}");
+        }
+        // Ragged input is rejected without clobbering semantics.
+        assert!(decode_values_into::<SumF32>(&wire[..5], &mut vals).is_err());
     }
 
     #[test]

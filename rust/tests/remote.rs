@@ -9,31 +9,44 @@
 //! tagged `mp_` so CI gates them into the tier-2 job
 //! (`cargo test --test remote mp_`).
 
-use sparse_allreduce::cluster::{serve_clients, spawn_session, LaunchOpts};
+use sparse_allreduce::cluster::{serve_mux, spawn_session, LaunchOpts, ServeOpts, ServeStats};
 use sparse_allreduce::comm::{CommBuilder, ExecMode, JobSpec};
 use sparse_allreduce::sparse::{IndexSet, MaxF32, OrU32, SumF32};
 use std::net::TcpListener;
 use std::path::Path;
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
 
 fn sar_bin() -> &'static Path {
     Path::new(env!("CARGO_BIN_EXE_sar"))
 }
 
-/// Spawn a 4-worker replication-1 pool and serve `sessions` collective
-/// clients against it on a background thread; returns the client
-/// address and the serve thread (joins once the clients are done,
-/// releasing and reaping the pool).
-fn serve_pool(sessions: usize) -> (String, std::thread::JoinHandle<()>) {
+/// Spawn a 4-worker replication-1 pool and serve collective clients
+/// against it under `sopts` on a background thread; returns the client
+/// address and the serve thread (joins once the session budget is
+/// spent, releasing and reaping the pool, yielding the serve stats).
+fn serve_pool_opts(sopts: ServeOpts) -> (String, std::thread::JoinHandle<ServeStats>) {
     let opts = LaunchOpts { degrees: vec![2, 2], send_threads: 2, ..LaunchOpts::default() };
     let (mut session, mut procs) = spawn_session(sar_bin(), opts).expect("pool bring-up failed");
     let listener = TcpListener::bind("127.0.0.1:0").expect("binding client listener");
     let addr = listener.local_addr().unwrap().to_string();
     let handle = std::thread::spawn(move || {
-        serve_clients(&mut session, &listener, Some(sessions)).expect("serve loop failed");
+        let stats = serve_mux(&mut session, &listener, &sopts).expect("serve loop failed");
         session.shutdown();
         procs.wait_all();
+        stats
     });
     (addr, handle)
+}
+
+/// The original serial-looking helper: a pool that serves `sessions`
+/// sessions in total, then exits (the multi-tenant defaults otherwise).
+fn serve_pool(sessions: usize) -> (String, std::thread::JoinHandle<ServeStats>) {
+    serve_pool_opts(ServeOpts {
+        max_live: sessions.max(1),
+        total: Some(sessions),
+        ..ServeOpts::default()
+    })
 }
 
 fn remote_session(addr: &str) -> sparse_allreduce::comm::Session {
@@ -220,4 +233,172 @@ fn mp_remote_schedule_mismatch_is_rejected() {
     // The failed client still consumed its serve slot (the connection
     // opened and closed), so the pool shuts down cleanly.
     serve.join().expect("serve thread");
+}
+
+/// Tentpole acceptance: three clients share one pool CONCURRENTLY,
+/// each with its own sparsity pattern and reduce operator, rounds
+/// interleaving freely — and one of them disconnects mid-stream. Every
+/// surviving round's result equals the lockstep oracle, and after the
+/// disconnect the pool still serves a fresh client (the dropped
+/// session's worker state was released, not leaked).
+#[test]
+fn mp_remote_interleaved_clients_survive_a_mid_stream_disconnect() {
+    let sopts = ServeOpts { max_live: 3, total: Some(4), ..ServeOpts::default() };
+    let (addr, serve) = serve_pool_opts(sopts);
+
+    // All three clients configure, then a barrier releases their rounds
+    // together so the relay genuinely interleaves their batches.
+    let start = Arc::new(Barrier::new(3));
+    let mut clients = Vec::new();
+    for k in 0..3u32 {
+        let addr = addr.clone();
+        let start = start.clone();
+        clients.push(std::thread::spawn(move || {
+            let base = i64::from(k) * 3;
+            let out = sets(vec![vec![base + 1, 5], vec![5, base + 9], vec![base + 2], vec![]]);
+            let inb = sets(vec![
+                vec![5],
+                vec![base + 1, base + 2],
+                vec![base + 9],
+                vec![5, base + 9],
+            ]);
+            let mut remote = remote_session(&addr);
+            let mut lock = CommBuilder::new(vec![2, 2]).build(64).unwrap();
+            let mut rc = remote
+                .configure(out.clone(), inb.clone())
+                .unwrap_or_else(|e| panic!("client {k} remote configure: {e:#}"));
+            let mut lc = lock.configure(out, inb).unwrap();
+            start.wait();
+            // Client 2 runs ONE round and then drops mid-stream (its
+            // config still live on the workers); 0 and 1 keep going.
+            let rounds = if k == 2 { 1 } else { 4 };
+            for round in 0..rounds {
+                match k {
+                    0 => {
+                        let mk = || {
+                            let r = round as f32;
+                            vec![
+                                vec![1.0 + r, 10.0 * (r + 1.0)],
+                                vec![20.0, 3.0 + r],
+                                vec![7.0 * (r + 1.0)],
+                                vec![],
+                            ]
+                        };
+                        let (mut a, mut b) = (mk(), mk());
+                        rc.allreduce::<SumF32>(&mut a)
+                            .unwrap_or_else(|e| panic!("client 0 round {round}: {e:#}"));
+                        lc.allreduce::<SumF32>(&mut b).unwrap();
+                        assert_eq!(a, b, "client 0 (SumF32) round {round}");
+                    }
+                    1 => {
+                        let mk = || {
+                            let r = round as u32;
+                            vec![
+                                vec![1u32 << (r % 8), 3],
+                                vec![5, 1 << (r % 4)],
+                                vec![r + 1],
+                                vec![],
+                            ]
+                        };
+                        let (mut a, mut b) = (mk(), mk());
+                        rc.allreduce::<OrU32>(&mut a)
+                            .unwrap_or_else(|e| panic!("client 1 round {round}: {e:#}"));
+                        lc.allreduce::<OrU32>(&mut b).unwrap();
+                        assert_eq!(a, b, "client 1 (OrU32) round {round}");
+                    }
+                    _ => {
+                        let mk = || vec![vec![1.5f32, -2.0], vec![0.5, 3.0], vec![7.0], vec![]];
+                        let (mut a, mut b) = (mk(), mk());
+                        rc.allreduce::<MaxF32>(&mut a)
+                            .unwrap_or_else(|e| panic!("client 2 round {round}: {e:#}"));
+                        lc.allreduce::<MaxF32>(&mut b).unwrap();
+                        assert_eq!(a, b, "client 2 (MaxF32) round {round}");
+                    }
+                }
+            }
+        }));
+    }
+    for (k, c) in clients.into_iter().enumerate() {
+        c.join().unwrap_or_else(|_| panic!("client thread {k} panicked"));
+    }
+
+    // A fourth client after the disconnect: the pool is healthy and the
+    // dropped session's state is gone, not wedging anything.
+    {
+        let mut remote = remote_session(&addr);
+        let mut lock = CommBuilder::new(vec![2, 2]).build(64).unwrap();
+        let out = sets(vec![vec![1, 5], vec![5, 9], vec![2], vec![]]);
+        let inb = sets(vec![vec![5], vec![1, 2], vec![9], vec![5, 9]]);
+        let mut rc = remote.configure(out.clone(), inb.clone()).expect("post-disconnect client");
+        let mut lc = lock.configure(out, inb).unwrap();
+        let mk = || vec![vec![1.0f32, 10.0], vec![20.0, 3.0], vec![7.0], vec![]];
+        let (mut a, mut b) = (mk(), mk());
+        rc.allreduce::<SumF32>(&mut a).expect("post-disconnect allreduce");
+        lc.allreduce::<SumF32>(&mut b).unwrap();
+        assert_eq!(a, b, "post-disconnect client");
+    }
+
+    let stats = serve.join().expect("serve thread");
+    assert_eq!(stats.served, 4, "stats: {stats:?}");
+    assert_eq!(stats.peak_live, 3, "all three clients should have been live at once");
+    assert_eq!(stats.evicted, 0, "no keepalive eviction in this test");
+}
+
+/// Keepalive acceptance: with ONE live slot, an idle client is evicted
+/// on the keepalive and a queued client is promoted into the freed
+/// slot. The promoted client configuring + reducing successfully at the
+/// session limit is the proof the evicted session's scatter state was
+/// released on the workers.
+#[test]
+fn mp_remote_keepalive_evicts_idle_session_and_frees_its_slot() {
+    let sopts = ServeOpts {
+        max_live: 1,
+        queue_depth: 4,
+        keepalive: Duration::from_millis(1500),
+        total: Some(2),
+    };
+    let (addr, serve) = serve_pool_opts(sopts);
+
+    // Client A takes the only live slot and does real work.
+    let mut a = remote_session(&addr);
+    let out = sets(vec![vec![1, 5], vec![5, 9], vec![2], vec![]]);
+    let inb = sets(vec![vec![5], vec![1, 2], vec![9], vec![5, 9]]);
+    let mut rc = a.configure(out.clone(), inb.clone()).expect("client A configure");
+    let mut vals = vec![vec![1.0f32, 10.0], vec![20.0, 3.0], vec![7.0], vec![]];
+    rc.allreduce::<SumF32>(&mut vals).expect("client A allreduce");
+
+    // Client B arrives while A holds the slot: it parks in the wait
+    // queue (its handshake stays unanswered until it is promoted).
+    let b = std::thread::spawn({
+        let addr = addr.clone();
+        move || {
+            let mut b = remote_session(&addr);
+            let mut lock = CommBuilder::new(vec![2, 2]).build(64).unwrap();
+            let out = sets(vec![vec![3], vec![3], vec![7], vec![]]);
+            let inb = sets(vec![vec![3, 7], vec![3], vec![3], vec![7]]);
+            let mut rc =
+                b.configure(out.clone(), inb.clone()).expect("client B configure at the limit");
+            let mut lc = lock.configure(out, inb).unwrap();
+            let mk = || vec![vec![2.0f32], vec![3.0], vec![1.0], vec![]];
+            let (mut x, mut y) = (mk(), mk());
+            rc.allreduce::<SumF32>(&mut x).expect("client B allreduce");
+            lc.allreduce::<SumF32>(&mut y).unwrap();
+            assert_eq!(x, y, "promoted client matches lockstep");
+        }
+    });
+
+    // A goes idle past the keepalive: the sweep evicts it, promoting B.
+    std::thread::sleep(Duration::from_millis(3000));
+    // Depending on timing the evicted client sees the FAILED eviction
+    // notice or the closed socket; either way the session is unusable.
+    let mut vals = vec![vec![1.0f32, 10.0], vec![20.0, 3.0], vec![7.0], vec![]];
+    let err = rc.allreduce::<SumF32>(&mut vals).unwrap_err();
+    eprintln!("evicted client's next call failed as expected: {err:#}");
+
+    b.join().expect("client B thread");
+    drop(a);
+    let stats = serve.join().expect("serve thread");
+    assert_eq!(stats.served, 2, "stats: {stats:?}");
+    assert_eq!(stats.evicted, 1, "client A should have been evicted: {stats:?}");
+    assert_eq!(stats.peak_live, 1, "only one session may be live at a time");
 }

@@ -341,9 +341,9 @@ with the job name so multi-job output is attributable.
                    with --degrees; also settable as `[tune] profile`
                    in --file configs)",
         "serve" => "\
-USAGE: sar serve [--degrees 2x2] [--threads t] [--bind addr]
-                 [--client-bind addr] [--sessions n] [--queue n]
-                 [--keepalive-secs s] [--total-sessions n]
+USAGE: sar serve [--degrees 2x2] [--replication r] [--threads t]
+                 [--bind addr] [--client-bind addr] [--sessions n]
+                 [--queue n] [--keepalive-secs s] [--total-sessions n]
                  [--no-spawn] [--bin path]
 
 Serve remote collective clients against a worker pool: launch (or, with
@@ -359,9 +359,15 @@ the limit wait in a bounded queue, complete rounds dispatch round-robin
 across sessions, and a session idle past the keepalive is evicted with
 its worker state released. Clients connect with
 `CommBuilder::pool(addr)` or the `--pool` flag of sar
-pagerank/diameter/sgd. Replication is not supported (collectives need
-every lane; launch a replication-1 pool).
+pagerank/diameter/sgd.
+With --replication r the pool runs r workers per logical lane (paper
+§V): every lane's CONFIGURE/VALUES fans out to all its replicas, the
+first RESULT per lane wins, and a worker death mid-round is masked —
+client sessions keep running, with identical results, as long as every
+lane keeps one live replica. Replicas are placed on distinct hosts when
+the joined workers' addresses allow it.
   --degrees kxk       butterfly degree schedule over the pool [2x2]
+  --replication r     workers per logical lane (fault masking) [1]
   --threads t         sender threads per worker               [4]
   --bind a            worker control-plane bind address       [127.0.0.1:0]
   --client-bind a     client-facing bind address              [127.0.0.1:0]

@@ -20,7 +20,7 @@ use super::proto::{
 };
 use crate::comm::{AppKind, JobSpec};
 use crate::config::{validate_world, RunConfig};
-use crate::fault::{FailureDetector, ReplicaMap};
+use crate::fault::{FailureDetector, Health, ReplicaMap};
 use crate::graph::ShardManifest;
 use crate::metrics::{IterTiming, RunMetrics};
 use crate::util::Summary;
@@ -228,6 +228,60 @@ pub(super) fn resolve_job_shards(spec: &JobSpec, degrees: &[usize]) -> Result<(S
     Ok((abs.to_string_lossy().into_owned(), manifest.digest()))
 }
 
+/// The host part of a `host:port` data-plane address (placement key).
+fn addr_host(addr: &str) -> &str {
+    addr.rsplit_once(':').map(|(h, _)| h).unwrap_or(addr)
+}
+
+/// Assign JOINed workers to physical node ids so the `r` replicas of
+/// each logical node land on *distinct hosts* when the address mix
+/// allows it (ROADMAP PR 2 follow-up). Physical id `p` hosts logical
+/// `p % logical`, so logical `l`'s slots are `l, l+logical, …`; the
+/// greedy pass fills the slots replica-row by replica-row, picking for
+/// each slot the earliest-joined unassigned worker whose host the
+/// slot's logical group does not use yet, falling back to plain arrival
+/// order when none qualifies (e.g. a single-host pool — which also
+/// makes this the identity permutation for replication-1 pools).
+/// Returns `slots[p] = JOIN arrival index`.
+pub(crate) fn assign_replica_slots(data_addrs: &[String], logical: usize, r: usize) -> Vec<usize> {
+    let world = logical * r;
+    assert_eq!(data_addrs.len(), world);
+    let mut used = vec![false; world];
+    let mut slots = vec![0usize; world];
+    let mut group_hosts: Vec<Vec<&str>> = vec![Vec::new(); logical];
+    for rho in 0..r {
+        for l in 0..logical {
+            let pick = (0..world)
+                .find(|&i| !used[i] && !group_hosts[l].contains(&addr_host(&data_addrs[i])))
+                .or_else(|| (0..world).find(|&i| !used[i]))
+                .expect("one slot per joined worker");
+            used[pick] = true;
+            group_hosts[l].push(addr_host(&data_addrs[pick]));
+            slots[l + rho * logical] = pick;
+        }
+    }
+    slots
+}
+
+/// Launch-time placement validation: logical groups whose replicas
+/// share a host even though the pool's address mix offers enough
+/// distinct hosts to spread them (0 = as spread as addresses allow).
+pub(crate) fn colocated_groups(data_addrs: &[String], map: &ReplicaMap) -> usize {
+    let mut all_hosts: Vec<&str> = data_addrs.iter().map(|a| addr_host(a)).collect();
+    all_hosts.sort_unstable();
+    all_hosts.dedup();
+    let spreadable = map.r.min(all_hosts.len());
+    (0..map.logical)
+        .filter(|&l| {
+            let mut hosts: Vec<&str> =
+                map.replicas(l).map(|p| addr_host(&data_addrs[p])).collect();
+            hosts.sort_unstable();
+            hosts.dedup();
+            hosts.len() < spreadable
+        })
+        .count()
+}
+
 /// Per-worker control-plane round-trip-time accumulator — the
 /// coordinator's straggler signal (ROADMAP PR 1 follow-up). Workers
 /// measure the HEARTBEAT → HEARTBEAT_ACK round trip and report it on
@@ -334,6 +388,9 @@ pub struct ClusterRun {
     pub config_secs: f64,
     /// Workers that died or failed during the run.
     pub dead: Vec<usize>,
+    /// Graded per-worker health at collect time (staleness + hard
+    /// evidence + RTT straggler signal), index-aligned with `per_node`.
+    pub health: Vec<Health>,
     /// Per-worker control heartbeat round-trip summaries (straggler
     /// signal; empty summary = no measurements from that worker).
     pub rtt_per_worker: Vec<Summary>,
@@ -388,6 +445,10 @@ pub struct Session {
     failures: Vec<(usize, String)>,
     started_at: Option<Instant>,
     shutdown_sent: bool,
+    /// Last time the RTT straggler verdict was fed into the detector
+    /// (the feed is throttled — summarizing every ring per call would
+    /// tax the round hot path for a signal that drifts slowly).
+    straggler_fed_at: Option<Instant>,
 }
 
 impl Coordinator {
@@ -463,6 +524,34 @@ impl Coordinator {
                 Err(e) => {
                     log::warn!("failed reading JOIN from {peer}: {e} — dropping connection");
                 }
+            }
+        }
+
+        // Replica placement: permute JOIN arrival order into node ids so
+        // the replicas of each logical node land on distinct hosts when
+        // the address mix allows, then validate and report the outcome.
+        let slots = assign_replica_slots(&data_addrs, opts.logical(), opts.replication);
+        let mut conn_slots: Vec<Option<TcpStream>> = conns.into_iter().map(Some).collect();
+        let conns: Vec<TcpStream> = slots
+            .iter()
+            .map(|&i| conn_slots[i].take().expect("each joiner fills one slot"))
+            .collect();
+        let data_addrs: Vec<String> = slots.iter().map(|&i| data_addrs[i].clone()).collect();
+        if opts.replication > 1 {
+            let map = ReplicaMap::new(opts.logical(), opts.replication);
+            let colocated = colocated_groups(&data_addrs, &map);
+            if colocated > 0 {
+                log::warn!(
+                    "replica placement: {colocated}/{} logical group(s) share a host \
+                     despite the address mix — a single host failure can extinguish them",
+                    map.logical
+                );
+            } else {
+                log::info!(
+                    "replica placement: every logical group spread as widely as the \
+                     {} joined address(es) allow",
+                    world
+                );
             }
         }
 
@@ -549,6 +638,7 @@ impl Coordinator {
             failures: Vec::new(),
             started_at: None,
             shutdown_sent: false,
+            straggler_fed_at: None,
             opts,
         })
     }
@@ -567,6 +657,27 @@ impl Session {
     /// Control-plane RTT accumulator (straggler signal).
     pub fn rtt(&self) -> &RttTracker {
         &self.rtt
+    }
+
+    /// Feed the latest nonce'd-RTT straggler verdict into the failure
+    /// detector's Suspect signal, throttled to every 500 ms.
+    fn refresh_straggler(&mut self) {
+        let now = Instant::now();
+        let due = self
+            .straggler_fed_at
+            .map_or(true, |t| now.duration_since(t) >= Duration::from_millis(500));
+        if due {
+            self.straggler_fed_at = Some(now);
+            self.detector.set_straggler(self.rtt.straggler().map(|(w, _)| w));
+        }
+    }
+
+    /// Graded per-worker health (Normal/Suspect/Unhealthy), combining
+    /// heartbeat staleness, hard death evidence, and the RTT straggler
+    /// signal — index-aligned with physical node ids.
+    pub fn health(&mut self) -> Vec<Health> {
+        self.refresh_straggler();
+        self.detector.grades()
     }
 
     /// Drain one pending control event (if any) into session state.
@@ -822,6 +933,7 @@ impl Session {
         }
         let wall_secs = started_at.elapsed().as_secs_f64();
         let dead = self.detector.hard_dead();
+        let health = self.health();
 
         let mut checksum = 0f64;
         for l in 0..self.map.logical {
@@ -860,6 +972,7 @@ impl Session {
             wall_secs,
             config_secs,
             dead,
+            health,
             rtt_per_worker: self.rtt.summaries(),
             rtt: self.rtt.aggregate(),
         })
@@ -894,16 +1007,10 @@ impl Session {
     /// job id and its own barrier/inbox state. Any number of collective
     /// configs may be live at once (one per multiplexed client
     /// session) — what stays exclusive is app jobs, which own the whole
-    /// pool. Requires a replication-1 pool (the generic engine has no
-    /// replica story — ROADMAP PR 5 follow-up).
+    /// pool. On a replicated pool the config's CONFIGURE/VALUES fan out
+    /// to every replica of each lane and the RESULTs race (§V), so one
+    /// worker death is masked instead of killing the session.
     pub fn collective_begin(&mut self) -> Result<u32> {
-        if self.opts.replication > 1 {
-            bail!(
-                "remote collective sessions need a replication-1 pool \
-                 (this pool replicates ×{})",
-                self.opts.replication
-            );
-        }
         if self.current_job.is_some() && !self.collected {
             bail!(
                 "job `{}` is still in flight; collect it before serving collectives",
@@ -920,26 +1027,56 @@ impl Session {
         Ok(job)
     }
 
-    /// Forward one lane's CONFIGURE to its worker (lane = physical
-    /// worker on the replication-1 pools collectives run on).
+    /// Fan one logical lane's control message out to every live replica
+    /// of that lane, healthiest first — Suspect replicas receive their
+    /// copy last, so the §V first-wins race is biased toward healthy
+    /// workers and a straggler's results are not the ones awaited.
+    /// A replica whose send fails is marked dead; the call only fails
+    /// when the lane's entire replica group is gone (the one §V
+    /// condition under which the collective cannot complete).
+    fn fan_out_lane(&mut self, lane: usize, msg: &CtrlMsg, what: &str) -> Result<()> {
+        self.refresh_straggler();
+        let mut replicas: Vec<usize> =
+            self.map.replicas(lane).filter(|&p| !self.detector.is_hard_dead(p)).collect();
+        replicas.sort_by_key(|&p| self.detector.grade(p));
+        let mut sent = 0usize;
+        for p in replicas {
+            match send_ctrl(&self.writers[p], COORD, msg) {
+                Ok(()) => sent += 1,
+                Err(e) => {
+                    log::warn!("{what} to worker {p} (lane {lane}) failed: {e}");
+                    self.detector.mark_dead(p);
+                }
+            }
+        }
+        if sent == 0 {
+            bail!(
+                "lane {lane} lost all {} replica(s){}",
+                self.map.r,
+                self.failure_summary()
+            );
+        }
+        Ok(())
+    }
+
+    /// Forward one logical lane's CONFIGURE to every live replica of
+    /// that lane (one worker on replication-1 pools).
     pub fn collective_configure(&mut self, msg: ConfigureMsg) -> Result<()> {
         if !self.collectives.contains_key(&msg.job) {
             bail!("CONFIGURE for collective {} but that config is not live", msg.job);
         }
         let lane = msg.lane as usize;
-        if lane >= self.writers.len() {
-            bail!("CONFIGURE names lane {lane} but the pool has {} workers", self.writers.len());
+        if lane >= self.map.logical {
+            bail!("CONFIGURE names lane {lane} but the pool has {} lanes", self.map.logical);
         }
-        if self.detector.is_hard_dead(lane) {
-            bail!("lane {lane}'s worker is dead{}", self.failure_summary());
-        }
-        send_ctrl(&self.writers[lane], COORD, &CtrlMsg::Configure(msg))
-            .with_context(|| format!("sending CONFIGURE to worker {lane}"))
+        self.fan_out_lane(lane, &CtrlMsg::Configure(msg), "CONFIGURE")
     }
 
-    /// Barrier until every worker voted CONFIG_DONE for collective
-    /// config `job` (collectives need the full world: there is no
-    /// replica to absorb a dead lane).
+    /// Barrier until collective config `job` is configured: every
+    /// worker either voted CONFIG_DONE or is hard-dead, and every
+    /// logical lane kept at least one live configured replica — the §V
+    /// quorum under which a dead replica is absorbed instead of failing
+    /// the session.
     pub fn collective_config_barrier(&mut self, job: u32) -> Result<()> {
         if !self.collectives.contains_key(&job) {
             bail!("no collective config {job} begun");
@@ -949,14 +1086,23 @@ impl Session {
             self.pump(Duration::from_millis(20));
             let world = self.world();
             let state = self.collectives.get(&job).expect("checked above");
-            if (0..world).all(|w| state.config_done[w]) {
+            let settled =
+                (0..world).all(|w| state.config_done[w] || self.detector.is_hard_dead(w));
+            if settled {
+                for l in 0..self.map.logical {
+                    let covered = self
+                        .map
+                        .replicas(l)
+                        .any(|p| state.config_done[p] && !self.detector.is_hard_dead(p));
+                    if !covered {
+                        bail!(
+                            "collective config barrier failed: lane {l} has no live \
+                             configured replica{}",
+                            self.failure_summary()
+                        );
+                    }
+                }
                 return Ok(());
-            }
-            if (0..world).any(|w| self.detector.is_hard_dead(w)) {
-                bail!(
-                    "a worker died during the collective config phase{}",
-                    self.failure_summary()
-                );
             }
             if Instant::now() > deadline {
                 bail!("collective config barrier timed out{}", self.failure_summary());
@@ -964,25 +1110,28 @@ impl Session {
         }
     }
 
-    /// Forward one lane's VALUES to its worker.
+    /// Forward one logical lane's VALUES to every live replica of that
+    /// lane (healthiest first — see [`Session::fan_out_lane`]).
     pub fn collective_values(&mut self, msg: ValuesMsg) -> Result<()> {
         if !self.collectives.contains_key(&msg.job) {
             bail!("VALUES for collective {} but that config is not live", msg.job);
         }
         let lane = msg.lane as usize;
-        if lane >= self.writers.len() {
-            bail!("VALUES names lane {lane} but the pool has {} workers", self.writers.len());
+        if lane >= self.map.logical {
+            bail!("VALUES names lane {lane} but the pool has {} lanes", self.map.logical);
         }
-        if self.detector.is_hard_dead(lane) {
-            bail!("lane {lane}'s worker is dead{}", self.failure_summary());
-        }
-        send_ctrl(&self.writers[lane], COORD, &CtrlMsg::Values(msg))
-            .with_context(|| format!("sending VALUES to worker {lane}"))
+        self.fan_out_lane(lane, &CtrlMsg::Values(msg), "VALUES")
     }
 
     /// Pump until the next RESULT of collective config `job` arrives
-    /// (arrival order; the client buffers by lane). Other live configs'
-    /// RESULTs land in their own inboxes meanwhile.
+    /// (arrival order; the serve relay dedups replica copies and the
+    /// client buffers by lane). Other live configs' RESULTs land in
+    /// their own inboxes meanwhile. A worker death mid-collective is
+    /// the coordinated-handoff path: because every round already fanned
+    /// out to all replicas, the surviving replicas' copies of the
+    /// in-flight round are racing to this inbox — so the handoff is
+    /// "stop waiting for the dead replica", and only a whole extinct
+    /// replica group fails the session.
     pub fn collective_next_result(&mut self, job: u32) -> Result<ResultMsg> {
         if !self.collectives.contains_key(&job) {
             bail!("no collective config {job} begun");
@@ -994,8 +1143,14 @@ impl Session {
             {
                 return Ok(r);
             }
-            if (0..self.world()).any(|w| self.detector.is_hard_dead(w)) {
-                bail!("a worker died mid-collective{}", self.failure_summary());
+            for l in 0..self.map.logical {
+                if self.detector.group_extinct_hard(&self.map, l) {
+                    bail!(
+                        "lane {l} lost all {} replica(s) mid-collective{}",
+                        self.map.r,
+                        self.failure_summary()
+                    );
+                }
             }
             self.pump(Duration::from_millis(20));
             if Instant::now() > deadline {
@@ -1193,6 +1348,61 @@ mod tests {
         let s = rtt.aggregate();
         assert_eq!(s.n, RTT_SAMPLE_CAP, "window stays bounded");
         assert!(s.p50 >= 50e-3, "recent degradation must dominate, got p50 {}", s.p50);
+    }
+
+    fn addrs(hosts: &[&str]) -> Vec<String> {
+        hosts.iter().enumerate().map(|(i, h)| format!("{h}:{}", 9000 + i)).collect()
+    }
+
+    /// Tentpole layer 3: with two hosts and replication 2, every
+    /// logical node's two replicas must land on different hosts — no
+    /// matter how the JOIN arrival order interleaves the hosts.
+    #[test]
+    fn replica_placement_spreads_groups_across_hosts() {
+        // 2 logical × 2 replicas; arrivals pair up the hosts badly.
+        let a = addrs(&["hostA", "hostA", "hostB", "hostB"]);
+        let map = ReplicaMap::new(2, 2);
+        let slots = assign_replica_slots(&a, 2, 2);
+        let mut sorted = slots.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3], "a permutation of the joiners");
+        let placed: Vec<String> = slots.iter().map(|&i| a[i].clone()).collect();
+        assert_eq!(colocated_groups(&placed, &map), 0, "placement {placed:?}");
+        for l in 0..2 {
+            let hosts: Vec<&str> =
+                map.replicas(l).map(|p| addr_host(&placed[p])).collect();
+            assert_ne!(hosts[0], hosts[1], "logical {l} colocated: {placed:?}");
+        }
+    }
+
+    /// A single-host pool (every tier-2 test) can't spread replicas;
+    /// placement must fall back to arrival order — the identity
+    /// permutation — and the validator must not flag it (there is
+    /// nothing better to do with one host).
+    #[test]
+    fn replica_placement_single_host_is_identity_and_unflagged() {
+        let a = addrs(&["127.0.0.1"; 8]);
+        assert_eq!(assign_replica_slots(&a, 4, 2), (0..8).collect::<Vec<_>>());
+        assert_eq!(colocated_groups(&a, &ReplicaMap::new(4, 2)), 0);
+        // Replication-1 pools are identity too (nothing to spread).
+        let b = addrs(&["hostA", "hostB", "hostC", "hostD"]);
+        assert_eq!(assign_replica_slots(&b, 4, 1), vec![0, 1, 2, 3]);
+    }
+
+    /// The validator flags groups that share a host when the address
+    /// mix could have spread them — and the greedy assignment repairs
+    /// exactly that arrangement.
+    #[test]
+    fn colocated_groups_flags_wasted_spread() {
+        let map = ReplicaMap::new(2, 2);
+        // Arrival order A,B,A,B puts logical 0 on {0, 2} = A,A and
+        // logical 1 on {1, 3} = B,B: both groups colocated while two
+        // hosts sit right there.
+        let a = addrs(&["hostA", "hostB", "hostA", "hostB"]);
+        assert_eq!(colocated_groups(&a, &map), 2);
+        let slots = assign_replica_slots(&a, 2, 2);
+        let placed: Vec<String> = slots.iter().map(|&i| a[i].clone()).collect();
+        assert_eq!(colocated_groups(&placed, &map), 0, "placement {placed:?}");
     }
 
     #[test]

@@ -106,6 +106,14 @@ impl SessionSm {
         self.live_pool_job
     }
 
+    /// Whether a batch is between [`Step::Ready`] and its dispatch
+    /// acknowledgement. The serve loop's keepalive sweep consults this:
+    /// a session whose batch is mid-dispatch is busy, not idle, and
+    /// must not be evicted out from under the dispatch.
+    pub fn dispatching(&self) -> bool {
+        self.in_flight.is_some()
+    }
+
     /// Feed one decoded client frame; `Err` is a protocol violation
     /// (the message to FAIL the client with).
     pub fn on_msg(&mut self, msg: CtrlMsg) -> Result<Step, String> {

@@ -71,6 +71,15 @@ pub const RES_STAGE_FINAL: u8 = 0;
 /// [`VAL_STAGE_UP`] round).
 pub const RES_STAGE_BOTTOM: u8 = 1;
 
+/// [`CtrlMsg::PoolHealth`] grade: fresh heartbeats, no straggler signal.
+pub const HEALTH_NORMAL: u32 = 0;
+/// [`CtrlMsg::PoolHealth`] grade: stale-ish heartbeats or the RTT
+/// straggler — deprioritized, still served.
+pub const HEALTH_SUSPECT: u32 = 1;
+/// [`CtrlMsg::PoolHealth`] grade: presumed dead; its replicas (if any)
+/// carry its lanes.
+pub const HEALTH_UNHEALTHY: u32 = 2;
+
 /// Wire code for a reduce operator on the remote collective plane
 /// (`None` for operators without a remote encoding — the plane ships
 /// exactly the three ops the paper exercises).
@@ -150,6 +159,12 @@ pub enum CtrlMsg {
     Values(ValuesMsg),
     /// worker → coordinator → client: one lane's round outcome.
     Result(ResultMsg),
+    /// coordinator → client: advisory per-worker health census, one
+    /// grade per physical worker ([`HEALTH_NORMAL`] | [`HEALTH_SUSPECT`]
+    /// | [`HEALTH_UNHEALTHY`]), sent alongside the config ack. Clients
+    /// absorb it transparently ([`crate::comm::remote`] keeps the last
+    /// census); it never changes the collective protocol.
+    PoolHealth { grades: Vec<u32> },
 }
 
 /// One lane's config-phase input on the remote collective plane: the
@@ -308,6 +323,7 @@ const OP_CONFIGURE: u32 = 11;
 const OP_VALUES: u32 = 12;
 const OP_RESULT: u32 = 13;
 const OP_RELEASE: u32 = 14;
+const OP_POOL_HEALTH: u32 = 15;
 
 // --- body codec ----------------------------------------------------------
 
@@ -533,6 +549,10 @@ pub fn encode(msg: &CtrlMsg) -> (u32, Vec<u8>) {
             e.u32(*job);
             OP_RELEASE
         }
+        CtrlMsg::PoolHealth { grades } => {
+            e.u32s(grades);
+            OP_POOL_HEALTH
+        }
     };
     (op, e.0)
 }
@@ -623,6 +643,13 @@ pub fn decode(opcode: u32, payload: &[u8]) -> std::io::Result<CtrlMsg> {
                 return Err(bad(format!("unknown result stage {}", r.stage)));
             }
             CtrlMsg::Result(r)
+        }
+        OP_POOL_HEALTH => {
+            let grades = d.u32s()?;
+            if let Some(&g) = grades.iter().find(|&&g| g > HEALTH_UNHEALTHY) {
+                return Err(bad(format!("unknown health grade {g}")));
+            }
+            CtrlMsg::PoolHealth { grades }
         }
         other => return Err(bad(format!("unknown control opcode {other}"))),
     };
@@ -753,6 +780,9 @@ mod tests {
             CtrlMsg::Values(sample_values()),
             CtrlMsg::Result(sample_result()),
             CtrlMsg::Release { job: 5 },
+            CtrlMsg::PoolHealth {
+                grades: vec![HEALTH_NORMAL, HEALTH_SUSPECT, HEALTH_UNHEALTHY, HEALTH_NORMAL],
+            },
         ]
     }
 
@@ -811,6 +841,12 @@ mod tests {
         payload[20] = 0xFF;
         payload[21] = 0xFF;
         assert!(decode(op, &payload).is_err(), "lying length prefix must be rejected");
+        // health grade past the known grades
+        let (op, mut payload) =
+            encode(&CtrlMsg::PoolHealth { grades: vec![HEALTH_NORMAL, HEALTH_SUSPECT] });
+        payload[8] = HEALTH_UNHEALTHY as u8 + 1;
+        let err = decode(op, &payload).unwrap_err();
+        assert!(err.to_string().contains("health grade"), "got: {err}");
     }
 
     #[test]

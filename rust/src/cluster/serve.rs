@@ -31,10 +31,18 @@
 //! queue (unanswered until admitted — the client blocks in its own
 //! handshake timeout), and past the queue are refused with a readable
 //! FAILED. A session idle past the keepalive is evicted and its
-//! scatter state freed on the workers (the RELEASE path); a client
-//! protocol violation ends only that session. A *pool* failure (dead
-//! worker, barrier timeout) fails every session and returns — without
-//! replication there is no way to finish any collective.
+//! scatter state freed on the workers (the RELEASE path) — but a
+//! session with a batch mid-dispatch is busy, never idle; a client
+//! protocol violation ends only that session.
+//!
+//! On a replicated pool (`--replication r`) each logical lane's
+//! CONFIGURE/VALUES fan out to all `r` replicas and the relay keeps
+//! the FIRST result per lane (paper §V packet racing), so a worker
+//! death mid-round is masked: surviving replicas finish the session's
+//! in-flight rounds and the slower copies are discarded. A *pool*
+//! failure — some lane losing ALL its replicas, or a barrier timeout —
+//! fails every session and returns, because then no collective can
+//! finish.
 //!
 //! The ingress stays sparse — only each client's own index sets and
 //! values cross it, never dense vectors (cf. partition-aware message
@@ -43,8 +51,10 @@
 use super::launch::Session;
 use super::mux::{Admission, Batch, Offer, Registry, RoundRobin, Step};
 use super::proto::{
-    recv_ctrl, send_ctrl, CtrlMsg, WorkerPlan, COORD, RES_STAGE_BOTTOM,
+    recv_ctrl, send_ctrl, CtrlMsg, ResultMsg, WorkerPlan, COORD, RES_STAGE_BOTTOM,
+    RES_STAGE_FINAL, VAL_STAGE_DOWN,
 };
+use crate::fault::Health;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
@@ -53,6 +63,12 @@ use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// Bound on the best-effort FAILED write to a client being ended: the
+/// peer is often exactly the party that stopped reading, and an
+/// unbounded blocking write into its full socket buffer would wedge
+/// the whole mux loop.
+const FAILED_WRITE_TIMEOUT: Duration = Duration::from_secs(5);
 
 /// Multi-tenant serve-plane knobs (the `sar serve` flags).
 #[derive(Clone, Debug)]
@@ -94,6 +110,9 @@ pub struct ServeStats {
     pub rejected: usize,
     /// High-water mark of concurrently live sessions.
     pub peak_live: usize,
+    /// Worker health census at serve exit, indexed by grade:
+    /// `[normal, suspect, unhealthy]` (see [`crate::fault::Health`]).
+    pub health: [usize; 3],
 }
 
 /// Backwards-compatible serial-looking entry: serve `max_sessions`
@@ -145,7 +164,7 @@ pub fn serve_mux(
 
     let mut mux = Mux {
         session,
-        world: 0,
+        lanes: 0,
         keepalive: opts.keepalive,
         total: opts.total,
         tx,
@@ -156,7 +175,10 @@ pub fn serve_mux(
         stats: ServeStats::default(),
         started: 0,
     };
-    mux.world = mux.session.world();
+    // Clients speak in LOGICAL lanes: on a replicated pool a batch has
+    // one CONFIGURE/VALUES per lane, and the relay fans each out to
+    // the lane's replicas.
+    mux.lanes = mux.session.launch_opts().logical();
 
     // Sweep often enough that evictions land promptly relative to the
     // keepalive, without spinning.
@@ -170,7 +192,12 @@ pub fn serve_mux(
         log::info!("refusing queued client {peer}: serve loop exiting");
         refuse(stream, "the pool's serve loop is exiting");
     }
-    result.map(|()| mux.stats)
+    result.map(|()| {
+        for g in mux.session.health() {
+            mux.stats.health[g as usize] += 1;
+        }
+        mux.stats
+    })
 }
 
 /// Accept thread: nonblocking poll so it can notice the stop flag (a
@@ -240,6 +267,16 @@ fn refuse(stream: TcpStream, why: &str) {
     let _ = send_ctrl(&wr, COORD, &CtrlMsg::Failed { error: why.to_string() });
 }
 
+/// The keepalive sweep's verdict on one candidate, pure for testing:
+/// an idle-by-clock session whose complete batch awaits dispatch (the
+/// scheduler may already have picked it) or whose batch is between
+/// `Step::Ready` and its acknowledgement is busy, not idle — evicting
+/// it would RELEASE worker state the in-flight dispatch is about to
+/// touch.
+fn evictable(idle_by_clock: bool, batch_pending: bool, dispatching: bool) -> bool {
+    idle_by_clock && !batch_pending && !dispatching
+}
+
 /// Why a dispatched batch failed.
 enum DispatchErr {
     /// The client's connection failed mid-ack: end that session only.
@@ -251,7 +288,9 @@ enum DispatchErr {
 /// The mux loop's state: the pool session plus every policy object.
 struct Mux<'a> {
     session: &'a mut Session,
-    world: usize,
+    /// Logical lane count (= workers ÷ replication): the batch width
+    /// clients must fill and the result count each round owes them.
+    lanes: usize,
     keepalive: Duration,
     total: Option<usize>,
     /// Kept so readers' sends never see a closed channel while the
@@ -336,14 +375,19 @@ impl Mux<'_> {
     /// Handshake + register an admitted connection as a live session.
     fn start_session(&mut self, stream: TcpStream, peer: SocketAddr) {
         self.started += 1;
-        // Best effort: a socket that dies between accept and setsockopt
-        // is a per-client event, surfaced at the handshake send.
-        let _ = stream.set_nodelay(true);
+        // A socket that cannot take options here is a client already
+        // gone — skip the session instead of carrying a Nagle'd
+        // connection into the latency-sensitive round relay.
+        if let Err(e) = stream.set_nodelay(true) {
+            log::warn!("client {peer} lost before handshake (set_nodelay): {e}");
+            self.session_slot_freed();
+            return;
+        }
         let plan = {
             let o = self.session.launch_opts();
             WorkerPlan {
                 node: u32::MAX, // "you are a client": shape only, no identity
-                world: self.world as u32,
+                world: o.world() as u32,
                 replication: o.replication as u32,
                 degrees: o.degrees.iter().map(|&k| k as u32).collect(),
                 addrs: Vec::new(),
@@ -366,7 +410,7 @@ impl Mux<'_> {
         }
         let now = Instant::now();
         let sid =
-            self.registry.admit(Conn { peer, wr, reader: None }, self.world, now);
+            self.registry.admit(Conn { peer, wr, reader: None }, self.lanes, now);
         let reader = spawn_reader(sid, rd, self.tx.clone());
         if let Some(e) = self.registry.get_mut(sid) {
             e.conn.reader = Some(reader);
@@ -406,6 +450,11 @@ impl Mux<'_> {
             let Some(batch) = self.batches.remove(&sid) else {
                 continue;
             };
+            // Dispatch counts as activity from the moment the batch is
+            // picked, not only once it completes: a round whose drain
+            // eats most of the keepalive must not leave the session's
+            // idle clock running toward eviction.
+            self.registry.touch(sid, Instant::now());
             match self.dispatch(sid, batch) {
                 Ok(()) => self.registry.touch(sid, Instant::now()),
                 Err(DispatchErr::Client(e)) => {
@@ -456,13 +505,25 @@ impl Mux<'_> {
         send_ctrl(&entry.conn.wr, COORD, &CtrlMsg::ConfigDone { job: pj }).map_err(|e| {
             DispatchErr::Client(anyhow::Error::from(e).context("acking the client's config"))
         })?;
+        // Advisory per-worker health census rides behind the ack
+        // (clients absorb it transparently); best-effort — advice must
+        // never fail a session.
+        let grades = self.session.health().iter().map(|&g| g as u32).collect();
+        let _ = send_ctrl(&entry.conn.wr, COORD, &CtrlMsg::PoolHealth { grades });
         Ok(())
     }
 
-    /// Forward a complete round lane-wise, drain its `world` RESULTs,
+    /// Forward a complete round lane-wise (each lane's VALUES fans out
+    /// to all its replicas), keep the FIRST result per logical lane,
     /// then relay them back (any lane order — the client buffers).
     /// Results are drained BEFORE relaying: even if the client dies
     /// mid-relay, the pool job's inbox is left empty for the release.
+    ///
+    /// The first-wins collection is the serve plane's failover: a
+    /// replica that dies mid-round is simply outraced by its
+    /// survivors, and the slower copies of already-answered lanes are
+    /// discarded here (or on the next round's drain, by their stale
+    /// round key).
     fn dispatch_round(
         &mut self,
         sid: u64,
@@ -479,16 +540,32 @@ impl Mux<'_> {
         for m in batch {
             self.session.collective_values(m).map_err(DispatchErr::Pool)?;
         }
-        let mut results = Vec::with_capacity(self.world);
-        for _ in 0..self.world {
+        let want = if stage == VAL_STAGE_DOWN { RES_STAGE_BOTTOM } else { RES_STAGE_FINAL };
+        let mut results: Vec<Option<ResultMsg>> = (0..self.lanes).map(|_| None).collect();
+        let mut have = 0usize;
+        while have < self.lanes {
             let r = self.session.collective_next_result(pj).map_err(DispatchErr::Pool)?;
-            if r.stage == RES_STAGE_BOTTOM {
-                entry.sm.record_up_len(r.lane as usize, r.up_idx.len());
+            let lane = r.lane as usize;
+            if r.seq != seq || r.stage != want || lane >= self.lanes {
+                log::debug!(
+                    "session {sid}: dropping stale RESULT (round {}, stage {}, lane {lane})",
+                    r.seq,
+                    r.stage
+                );
+                continue;
             }
-            results.push(r);
+            if results[lane].is_some() {
+                log::debug!("session {sid}: lane {lane} already answered; replica copy dropped");
+                continue;
+            }
+            if r.stage == RES_STAGE_BOTTOM {
+                entry.sm.record_up_len(lane, r.up_idx.len());
+            }
+            results[lane] = Some(r);
+            have += 1;
         }
         entry.sm.round_dispatched();
-        for r in results {
+        for r in results.into_iter().flatten() {
             send_ctrl(&entry.conn.wr, COORD, &CtrlMsg::Result(r)).map_err(|e| {
                 DispatchErr::Client(anyhow::Error::from(e).context("relaying RESULT to client"))
             })?;
@@ -497,10 +574,15 @@ impl Mux<'_> {
     }
 
     /// Evict every session idle past the keepalive, freeing its worker
-    /// state.
+    /// state. A session with work in flight is busy, never idle — see
+    /// [`evictable`].
     fn sweep_idle(&mut self) {
         let now = Instant::now();
         for sid in self.registry.idle(now, self.keepalive) {
+            let dispatching = self.registry.get(sid).is_some_and(|e| e.sm.dispatching());
+            if !evictable(true, self.batches.contains_key(&sid), dispatching) {
+                continue;
+            }
             let peer = self.registry.get(sid).map(|e| e.conn.peer.to_string());
             log::warn!(
                 "evicting client session {sid} ({}) — idle past the {:?} keepalive",
@@ -515,11 +597,15 @@ impl Mux<'_> {
         }
     }
 
-    /// Protocol violation (or eviction): answer FAILED best-effort and
-    /// end the session.
+    /// Protocol violation (or eviction): answer FAILED best-effort —
+    /// bounded by [`FAILED_WRITE_TIMEOUT`], since the peer may be the
+    /// very client that stopped reading — and end the session.
     fn fail_client(&mut self, sid: u64, msg: String) {
         if let Some(entry) = self.registry.get(sid) {
             log::warn!("client session {sid} ({}): {msg}", entry.conn.peer);
+            if let Ok(s) = entry.conn.wr.lock() {
+                let _ = s.set_write_timeout(Some(FAILED_WRITE_TIMEOUT));
+            }
             let _ = send_ctrl(&entry.conn.wr, COORD, &CtrlMsg::Failed { error: msg });
             self.end_session(sid);
         }
@@ -630,6 +716,51 @@ mod tests {
         let (s, _) = listener.accept().unwrap();
         refuse(s, "pool busy: the session limit is reached and the wait queue is full");
         client.join().unwrap();
+    }
+
+    /// Regression (eviction/dispatch race): a session whose complete
+    /// batch is awaiting dispatch — or mid-dispatch — must survive the
+    /// keepalive sweep even when its idle clock says stale; eviction
+    /// would RELEASE the pool job the dispatch is about to drive.
+    #[test]
+    fn eviction_skips_sessions_with_work_in_flight() {
+        use crate::cluster::mux::SessionSm;
+        use crate::cluster::proto::ConfigureMsg;
+
+        // The pure verdict: only truly-quiescent idle sessions evict.
+        assert!(evictable(true, false, false));
+        assert!(!evictable(true, true, false), "batch awaiting dispatch");
+        assert!(!evictable(true, false, true), "batch mid-dispatch");
+        assert!(!evictable(false, false, false), "not idle at all");
+
+        // And the state machine exposes the mid-dispatch window the
+        // sweep consults: set from Step::Ready until the dispatch ack.
+        let mut sm = SessionSm::new(1);
+        assert!(!sm.dispatching());
+        let step = sm
+            .on_msg(CtrlMsg::Configure(ConfigureMsg {
+                job: 0,
+                lane: 0,
+                index_range: 4,
+                send_threads: 1,
+                outbound: vec![0],
+                inbound: vec![0],
+            }))
+            .unwrap();
+        assert!(matches!(step, Step::Ready(_)));
+        assert!(sm.dispatching(), "between Ready and the ack");
+        sm.config_dispatched(7);
+        assert!(!sm.dispatching(), "acked: the sweep may consider it again");
+    }
+
+    #[test]
+    fn serve_stats_health_census_starts_empty() {
+        let s = ServeStats::default();
+        assert_eq!(s.health, [0, 0, 0]);
+        // Grades index the census: Normal/Suspect/Unhealthy → 0/1/2.
+        assert_eq!(Health::Normal as usize, 0);
+        assert_eq!(Health::Suspect as usize, 1);
+        assert_eq!(Health::Unhealthy as usize, 2);
     }
 
     /// The acceptor notices the stop flag instead of pinning its

@@ -47,7 +47,7 @@ use super::proto::{
     WorkerReport, OP_CODE_MAX_F32, OP_CODE_OR_U32, OP_CODE_SUM_F32, RES_STAGE_BOTTOM,
     RES_STAGE_FINAL, VAL_STAGE_DOWN, VAL_STAGE_FULL, VAL_STAGE_UP,
 };
-use crate::allreduce::NodeHandle;
+use crate::allreduce::{NodeHandle, NodeProtocol};
 use crate::apps::diameter::{DiameterConfig, DiameterNode};
 use crate::apps::pagerank::{self, PageRankShards};
 use crate::apps::sgd::{NativeGradEngine, SgdConfig, SgdNode, SynthData};
@@ -459,7 +459,8 @@ fn serve_pool(
     let net = TcpNet::from_addrs(node, listener, addrs).context("building data fabric")?;
     let timeout = Duration::from_millis(plan.data_timeout_ms.max(1));
 
-    let mut engine = GenericEngine::new(node, degrees.clone(), net.clone(), timeout);
+    let mut engine =
+        GenericEngine::new(node, logical, replication, degrees.clone(), net.clone(), timeout);
     loop {
         let msg = match ctrl_msgs.recv() {
             Ok(Ok(msg)) => msg,
@@ -504,12 +505,6 @@ fn serve_pool(
                 send_ctrl(ctrl_wr, node, &CtrlMsg::Report(report)).context("sending REPORT")?;
             }
             CtrlMsg::Configure(c) => {
-                if replication > 1 {
-                    bail!(
-                        "the generic collective engine runs on replication-1 pools \
-                         (this pool replicates ×{replication})"
-                    );
-                }
                 let job = engine.configure(c)?;
                 send_ctrl(ctrl_wr, node, &CtrlMsg::ConfigDone { job })
                     .context("sending CONFIG_DONE")?;
@@ -562,11 +557,65 @@ impl ScratchVals for u32 {
     }
 }
 
+/// The generic engine's protocol driver: plain on replication-1 pools,
+/// the §V fan-out/racing driver when the pool replicates. An enum (not
+/// the object-safe [`Collective`] trait) because the round path needs
+/// the *generic* `reduce::<R>` / split-half methods plus the protocol's
+/// bottom sets — generics aren't object-safe, and the match below is
+/// the entire cost.
+enum GenericHandle {
+    Plain(NodeHandle<TcpNet>),
+    Replicated(ReplicatedHandle<TcpNet>),
+}
+
+impl GenericHandle {
+    fn protocol(&self) -> &NodeProtocol {
+        match self {
+            GenericHandle::Plain(h) => h.protocol(),
+            GenericHandle::Replicated(h) => h.protocol(),
+        }
+    }
+
+    fn config(&mut self, outbound: IndexSet, inbound: IndexSet) -> Result<(), TransportError> {
+        match self {
+            GenericHandle::Plain(h) => h.config(outbound, inbound),
+            GenericHandle::Replicated(h) => h.config(outbound, inbound),
+        }
+    }
+
+    fn reduce<R: ReduceOp>(&mut self, values: Vec<R::T>) -> Result<Vec<R::T>, TransportError> {
+        match self {
+            GenericHandle::Plain(h) => h.reduce::<R>(values),
+            GenericHandle::Replicated(h) => h.reduce::<R>(values),
+        }
+    }
+
+    fn reduce_down_half<R: ReduceOp>(
+        &mut self,
+        values: Vec<R::T>,
+    ) -> Result<Vec<R::T>, TransportError> {
+        match self {
+            GenericHandle::Plain(h) => h.reduce_down_half::<R>(values),
+            GenericHandle::Replicated(h) => h.reduce_down_half::<R>(values),
+        }
+    }
+
+    fn reduce_up_half<R: ReduceOp>(
+        &mut self,
+        values: Vec<R::T>,
+    ) -> Result<Vec<R::T>, TransportError> {
+        match self {
+            GenericHandle::Plain(h) => h.reduce_up_half::<R>(values),
+            GenericHandle::Replicated(h) => h.reduce_up_half::<R>(values),
+        }
+    }
+}
+
 /// One live generic collective config: the protocol handle built from a
 /// client's streamed sparsity pattern (it owns the scatter state the
 /// config phase computed) and the outbound length its rounds must match.
 struct LiveConfig {
-    handle: NodeHandle<TcpNet>,
+    handle: GenericHandle,
     out_len: usize,
 }
 
@@ -579,6 +628,8 @@ struct LiveConfig {
 /// config phases per round.
 struct GenericEngine {
     node: usize,
+    logical: usize,
+    replication: usize,
     degrees: Vec<usize>,
     net: Arc<TcpNet>,
     timeout: Duration,
@@ -587,8 +638,24 @@ struct GenericEngine {
 }
 
 impl GenericEngine {
-    fn new(node: usize, degrees: Vec<usize>, net: Arc<TcpNet>, timeout: Duration) -> Self {
-        Self { node, degrees, net, timeout, configs: HashMap::new(), scratch: Scratch::default() }
+    fn new(
+        node: usize,
+        logical: usize,
+        replication: usize,
+        degrees: Vec<usize>,
+        net: Arc<TcpNet>,
+        timeout: Duration,
+    ) -> Self {
+        Self {
+            node,
+            logical,
+            replication,
+            degrees,
+            net,
+            timeout,
+            configs: HashMap::new(),
+            scratch: Scratch::default(),
+        }
     }
 
     fn is_empty(&self) -> bool {
@@ -607,21 +674,38 @@ impl GenericEngine {
     /// and run its config phase; returns the pool job id to vote
     /// CONFIG_DONE for.
     fn configure(&mut self, cfg: ConfigureMsg) -> Result<u32> {
-        if cfg.lane as usize != self.node {
-            bail!("CONFIGURE for lane {} delivered to worker {}", cfg.lane, self.node);
+        // With replication the coordinator fans a lane's CONFIGURE out to
+        // every replica; each replica serves its *logical* lane.
+        let lane = self.node % self.logical;
+        if cfg.lane as usize != lane {
+            bail!(
+                "CONFIGURE for lane {} delivered to worker {} (logical lane {lane})",
+                cfg.lane,
+                self.node
+            );
         }
         if cfg.index_range < 1 {
             bail!("CONFIGURE index range must be >= 1 (got {})", cfg.index_range);
         }
         let job = cfg.job;
         let topo = Butterfly::new(self.degrees.clone(), cfg.index_range);
-        let mut handle =
-            NodeHandle::new(topo, self.node, self.net.clone(), cfg.send_threads.max(1) as usize);
-        handle.set_timeout(self.timeout);
+        let send_threads = cfg.send_threads.max(1) as usize;
         // Job-scoped tag space: with many configs live on one fabric, a
         // packet from config A must never alias config B's tags (and a
         // late packet from a released config must not alias anything).
-        handle.set_seq_base(job.wrapping_shl(16));
+        let seq_base = job.wrapping_shl(16);
+        let mut handle = if self.replication == 1 {
+            let mut h = NodeHandle::new(topo, self.node, self.net.clone(), send_threads);
+            h.set_timeout(self.timeout);
+            h.set_seq_base(seq_base);
+            GenericHandle::Plain(h)
+        } else {
+            let map = ReplicaMap::new(self.logical, self.replication);
+            let mut h = ReplicatedHandle::new(topo, map, self.node, self.net.clone(), send_threads);
+            h.set_timeout(self.timeout);
+            h.set_seq_base(seq_base);
+            GenericHandle::Replicated(h)
+        };
         let out_len = cfg.outbound.len();
         handle
             .config(IndexSet::from_unsorted(cfg.outbound), IndexSet::from_unsorted(cfg.inbound))
@@ -669,7 +753,7 @@ impl GenericEngine {
 /// single point where the remote plane's three operators funnel into
 /// the protocol's generic `reduce::<R>` path.
 fn generic_round(
-    handle: &mut NodeHandle<TcpNet>,
+    handle: &mut GenericHandle,
     v: &ValuesMsg,
     out_len: usize,
     scratch: &mut Scratch,
@@ -683,7 +767,7 @@ fn generic_round(
 }
 
 fn typed_round<R: ReduceOp>(
-    handle: &mut NodeHandle<TcpNet>,
+    handle: &mut GenericHandle,
     v: &ValuesMsg,
     out_len: usize,
     scratch: &mut Scratch,

@@ -44,9 +44,18 @@ use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
 use std::sync::Mutex;
 use std::time::Duration;
 
-/// How long a client read may block before the pool is presumed gone
-/// (matches the coordinator's default phase deadline).
-const READ_TIMEOUT: Duration = Duration::from_secs(120);
+/// How long a single client read may block. An expiry is NOT fatal:
+/// the pool may legitimately be slow — a straggling replica, a deep
+/// admission queue, another tenant's long round — so expiries are
+/// retried up to [`READ_RETRIES`] times per message before the
+/// session gives up with a readable error.
+const READ_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Read-timeout expiries tolerated per message. Total patience
+/// (`READ_RETRIES × READ_TIMEOUT`) matches the coordinator's default
+/// 120 s phase deadline, so a pool that is going to answer at all
+/// answers within it.
+const READ_RETRIES: u32 = 4;
 
 /// A live connection to a `sar serve` pool's client port (see module
 /// docs). Obtained via `CommBuilder::pool(addr)` + `build(range)`,
@@ -68,6 +77,9 @@ pub struct RemoteSession {
     /// on the client either — the counterpart of the generic engine's
     /// worker-side scratch.
     wire_buf: Vec<u8>,
+    /// The pool's last advisory health census (one grade per physical
+    /// worker; empty until the first census arrives).
+    pool_health: Vec<u32>,
 }
 
 impl Drop for RemoteSession {
@@ -93,7 +105,35 @@ impl RemoteSession {
         stream.set_nodelay(true)?;
         let mut rd = stream.try_clone().context("cloning the pool stream")?;
         rd.set_read_timeout(Some(READ_TIMEOUT))?;
-        let (_, msg) = recv_ctrl(&mut rd).context("reading the pool-shape handshake")?;
+        // The handshake is where a queued admission waits: keep the
+        // same patience as any other read (the pool answers the
+        // moment a live slot frees up).
+        let mut expiries = 0u32;
+        let msg = loop {
+            match recv_ctrl(&mut rd) {
+                Ok((_, m)) => break m,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    expiries += 1;
+                    if expiries >= READ_RETRIES {
+                        bail!(
+                            "no handshake from the pool at {addr} in {:?} — full \
+                             admission queue, or not a `sar serve` client port?",
+                            READ_TIMEOUT * expiries
+                        );
+                    }
+                    log::info!("pool handshake pending (admission queue?); waiting");
+                }
+                Err(e) => {
+                    return Err(anyhow::Error::from(e)
+                        .context("reading the pool-shape handshake"));
+                }
+            }
+        };
         let plan = match msg {
             CtrlMsg::Plan(p) => p,
             other => bail!(
@@ -101,14 +141,14 @@ impl RemoteSession {
                  a `sar serve` client port?"
             ),
         };
+        let degrees: Vec<usize> = plan.degrees.iter().map(|&k| k as usize).collect();
         if plan.replication > 1 {
-            bail!(
-                "pool at {addr} replicates ×{}; the remote collective plane needs a \
-                 replication-1 pool",
+            log::info!(
+                "pool at {addr} replicates ×{}: worker deaths are masked while every \
+                 lane keeps a live replica (paper §V)",
                 plan.replication
             );
         }
-        let degrees: Vec<usize> = plan.degrees.iter().map(|&k| k as usize).collect();
         log::info!(
             "connected to pool at {addr}: {} workers, schedule {degrees:?}",
             plan.world
@@ -122,6 +162,7 @@ impl RemoteSession {
             job: None,
             seq: 0,
             wire_buf: Vec::new(),
+            pool_health: Vec::new(),
         })
     }
 
@@ -130,19 +171,55 @@ impl RemoteSession {
         &self.degrees
     }
 
-    /// Logical lanes (= pool workers on a replication-1 pool).
+    /// Logical lanes (= pool workers ÷ replication): the batch width
+    /// this session speaks in.
     pub fn lanes(&self) -> usize {
         self.degrees.iter().product()
     }
 
-    /// Read the next pool message; a FAILED answer becomes a readable
-    /// error carrying the pool's cause.
+    /// The pool's last advisory health census: one grade per physical
+    /// worker (`HEALTH_NORMAL` | `HEALTH_SUSPECT` | `HEALTH_UNHEALTHY`
+    /// in [`crate::cluster::proto`]), empty until the pool's first
+    /// census arrives (it rides behind each config ack).
+    pub fn pool_health(&self) -> &[u32] {
+        &self.pool_health
+    }
+
+    /// Read the next pool message. A FAILED answer becomes a readable
+    /// error carrying the pool's cause; an advisory health census is
+    /// absorbed; a read timeout is retried — the pool may just be slow
+    /// (a straggling replica, another tenant's long round) — and only
+    /// repeated expiry becomes an error.
     fn recv(&mut self) -> Result<CtrlMsg> {
-        let (_, msg) = recv_ctrl(&mut self.rd).context("reading from the pool")?;
-        if let CtrlMsg::Failed { error } = msg {
-            bail!("pool reported failure: {error}");
+        let mut expiries = 0u32;
+        loop {
+            match recv_ctrl(&mut self.rd) {
+                Ok((_, CtrlMsg::Failed { error })) => bail!("pool reported failure: {error}"),
+                Ok((_, CtrlMsg::PoolHealth { grades })) => self.pool_health = grades,
+                Ok((_, msg)) => return Ok(msg),
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    expiries += 1;
+                    if expiries >= READ_RETRIES {
+                        bail!(
+                            "pool is straggling: no answer in {:?} ({expiries} read \
+                             timeouts) — still connected, but stuck or overloaded",
+                            READ_TIMEOUT * expiries
+                        );
+                    }
+                    log::warn!(
+                        "pool read timed out (attempt {expiries}/{READ_RETRIES}); retrying"
+                    );
+                }
+                Err(e) => {
+                    return Err(anyhow::Error::from(e).context("reading from the pool"));
+                }
+            }
         }
-        Ok(msg)
     }
 
     /// Stream a sparsity pattern to the pool (one CONFIGURE per lane)

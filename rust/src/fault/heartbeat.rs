@@ -17,9 +17,35 @@ use super::ReplicaMap;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
+/// Graded worker health (VR-style `HealthDetector`, not binary
+/// dead/alive). `Normal` workers are in full standing; `Suspect`
+/// workers are deprioritized but still participate (their results are
+/// not awaited first); `Unhealthy` workers trigger handoff of any
+/// in-flight work to surviving replicas. Ordered so `max()` over
+/// signals yields the worst grade.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Health {
+    Normal,
+    Suspect,
+    Unhealthy,
+}
+
+impl std::fmt::Display for Health {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Health::Normal => "normal",
+            Health::Suspect => "suspect",
+            Health::Unhealthy => "unhealthy",
+        })
+    }
+}
+
 struct WorkerState {
     last_beat: Instant,
     dead: bool,
+    /// Externally-fed soft signal: the nonce'd RTT readout flagged this
+    /// worker as a straggler. Reversible, like staleness.
+    straggler: bool,
 }
 
 /// Tracks per-worker liveness from heartbeats and connection EOFs.
@@ -35,7 +61,9 @@ impl FailureDetector {
         Self {
             timeout,
             workers: Mutex::new(
-                (0..workers).map(|_| WorkerState { last_beat: now, dead: false }).collect(),
+                (0..workers)
+                    .map(|_| WorkerState { last_beat: now, dead: false, straggler: false })
+                    .collect(),
             ),
         }
     }
@@ -76,6 +104,45 @@ impl FailureDetector {
     pub fn hard_dead(&self) -> Vec<usize> {
         let w = self.workers.lock().expect("detector poisoned");
         w.iter().enumerate().filter(|(_, s)| s.dead).map(|(i, _)| i).collect()
+    }
+
+    /// Feed the nonce'd RTT straggler readout: `straggler` is the one
+    /// worker (if any) whose heartbeat RTT is an outlier. The flag is a
+    /// soft, reversible signal — it can only raise a worker to Suspect,
+    /// never to Unhealthy — and each call replaces the previous verdict.
+    pub fn set_straggler(&self, straggler: Option<usize>) {
+        let mut w = self.workers.lock().expect("detector poisoned");
+        for (i, s) in w.iter_mut().enumerate() {
+            s.straggler = straggler == Some(i);
+        }
+    }
+
+    /// Graded health verdict for one worker. `Unhealthy` = hard
+    /// evidence or silence past the full heartbeat window (the old
+    /// binary "dead"); `Suspect` = staleness past half the window, or
+    /// the RTT straggler flag; `Normal` otherwise. Suspect is
+    /// reversible by construction — a beat or a clean RTT restores
+    /// Normal — while Unhealthy-by-evidence is sticky.
+    pub fn grade(&self, worker: usize) -> Health {
+        let w = self.workers.lock().expect("detector poisoned");
+        Self::grade_state(&w[worker], self.timeout)
+    }
+
+    /// Graded health for every worker, index-aligned.
+    pub fn grades(&self) -> Vec<Health> {
+        let w = self.workers.lock().expect("detector poisoned");
+        w.iter().map(|s| Self::grade_state(s, self.timeout)).collect()
+    }
+
+    fn grade_state(s: &WorkerState, timeout: Duration) -> Health {
+        let stale = s.last_beat.elapsed();
+        if s.dead || stale > timeout {
+            Health::Unhealthy
+        } else if s.straggler || stale > timeout / 2 {
+            Health::Suspect
+        } else {
+            Health::Normal
+        }
     }
 
     pub fn dead(&self) -> Vec<usize> {
@@ -235,5 +302,44 @@ mod tests {
         let d = FailureDetector::new(4, Duration::from_secs(60));
         d.mark_dead(3);
         assert_eq!(d.check_quorum(&map), Err(3));
+    }
+
+    /// Graded health: staleness walks a worker Normal → Suspect (past
+    /// half the window) → Unhealthy (past the full window), a beat walks
+    /// it back, and hard evidence pins Unhealthy regardless of beats.
+    #[test]
+    fn health_grades_follow_staleness_and_evidence() {
+        let d = FailureDetector::new(2, Duration::from_millis(400));
+        assert_eq!(d.grades(), vec![Health::Normal, Health::Normal]);
+        std::thread::sleep(Duration::from_millis(250));
+        // Past half the window but under the full one.
+        assert_eq!(d.grade(0), Health::Suspect);
+        d.beat(0);
+        assert_eq!(d.grade(0), Health::Normal, "a beat restores Normal");
+        std::thread::sleep(Duration::from_millis(600));
+        assert_eq!(d.grade(0), Health::Unhealthy, "silent past the window");
+        d.beat(0);
+        assert_eq!(d.grade(0), Health::Normal, "staleness is reversible");
+        d.mark_dead(1);
+        d.beat(1);
+        assert_eq!(d.grade(1), Health::Unhealthy, "hard evidence is sticky");
+    }
+
+    /// The RTT straggler flag raises exactly one worker to Suspect and
+    /// each readout replaces the last — a worker that stops straggling
+    /// (or a `None` readout) drops back to Normal. The flag never
+    /// escalates past Suspect on its own.
+    #[test]
+    fn rtt_straggler_is_suspect_and_reversible() {
+        let d = FailureDetector::new(3, Duration::from_secs(60));
+        d.set_straggler(Some(1));
+        assert_eq!(d.grades(), vec![Health::Normal, Health::Suspect, Health::Normal]);
+        assert!(!d.is_dead(1), "suspect is not dead");
+        d.set_straggler(Some(2));
+        assert_eq!(d.grades(), vec![Health::Normal, Health::Normal, Health::Suspect]);
+        d.set_straggler(None);
+        assert_eq!(d.grades(), vec![Health::Normal; 3]);
+        // Ordering supports worst-of aggregation.
+        assert!(Health::Normal < Health::Suspect && Health::Suspect < Health::Unhealthy);
     }
 }

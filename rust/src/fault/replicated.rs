@@ -94,6 +94,10 @@ impl<T: Transport + 'static> ReplicatedHandle<T> {
         self.proto.node()
     }
 
+    pub fn protocol(&self) -> &NodeProtocol {
+        &self.proto
+    }
+
     pub fn set_timeout(&mut self, timeout: Duration) {
         self.timeout = timeout;
     }
@@ -190,9 +194,8 @@ impl<T: Transport + 'static> ReplicatedHandle<T> {
         Ok(())
     }
 
-    /// Run one reduce.
-    pub fn reduce<R: ReduceOp>(&mut self, values: Vec<R::T>) -> Result<Vec<R::T>, TransportError> {
-        self.seq += 1;
+    /// The scatter-reduce sweep down the butterfly.
+    fn reduce_down<R: ReduceOp>(&mut self, values: Vec<R::T>) -> Result<Vec<R::T>, TransportError> {
         let layers = self.proto.topology().layers();
         let mut current = values;
         for layer in 0..layers {
@@ -209,7 +212,13 @@ impl<T: Transport + 'static> ReplicatedHandle<T> {
             let refs: Vec<&[R::T]> = decoded.iter().map(|v| v.as_slice()).collect();
             current = self.proto.reduce_down_absorb::<R>(layer, &refs);
         }
-        current = self.proto.apply_final_map::<R>(&current);
+        Ok(current)
+    }
+
+    /// The allgather sweep back up the butterfly.
+    fn reduce_up<R: ReduceOp>(&mut self, values: Vec<R::T>) -> Result<Vec<R::T>, TransportError> {
+        let layers = self.proto.topology().layers();
+        let mut current = values;
         for layer in (0..layers).rev() {
             let segs = self.proto.reduce_up_outgoing::<R>(layer, &current);
             let my_slot = self.proto.slot(layer);
@@ -224,6 +233,41 @@ impl<T: Transport + 'static> ReplicatedHandle<T> {
             current = self.proto.reduce_up_absorb::<R>(layer, &decoded);
         }
         Ok(current)
+    }
+
+    /// Run one reduce.
+    pub fn reduce<R: ReduceOp>(&mut self, values: Vec<R::T>) -> Result<Vec<R::T>, TransportError> {
+        self.seq += 1;
+        let bottom = self.reduce_down::<R>(values)?;
+        let projected = self.proto.apply_final_map::<R>(&bottom);
+        self.reduce_up::<R>(projected)
+    }
+
+    /// The scatter-reduce half of one collective, mirroring
+    /// [`crate::allreduce::NodeHandle::reduce_down_half`] for the remote
+    /// collective plane: advances the sequence, runs the down sweep, and
+    /// returns this logical node's fully-reduced bottom range (aligned
+    /// with `protocol().bottom_down_set()`). The handle is left
+    /// mid-collective — the caller MUST follow with
+    /// [`ReplicatedHandle::reduce_up_half`].
+    pub fn reduce_down_half<R: ReduceOp>(
+        &mut self,
+        values: Vec<R::T>,
+    ) -> Result<Vec<R::T>, TransportError> {
+        self.seq += 1;
+        self.reduce_down::<R>(values)
+    }
+
+    /// The allgather half completing a
+    /// [`ReplicatedHandle::reduce_down_half`]: `values` must hold one
+    /// entry per `protocol().bottom_up_set()` index; returns values
+    /// aligned with the inbound set. Does NOT advance the sequence —
+    /// both halves belong to one collective.
+    pub fn reduce_up_half<R: ReduceOp>(
+        &mut self,
+        values: Vec<R::T>,
+    ) -> Result<Vec<R::T>, TransportError> {
+        self.reduce_up::<R>(values)
     }
 }
 
@@ -365,6 +409,49 @@ mod tests {
     fn survives_one_dead_node() {
         // kill physical 5 (replica 1 of logical 1 in a 4-logical r=2 map)
         run_with_dead(Butterfly::new(vec![2, 2], 256), 2, vec![5], 32);
+    }
+
+    /// The replicated generic serve engine drives the two halves
+    /// separately (for `allreduce_with_bottom`); down-half + final map
+    /// + up-half must equal one `reduce()` even with a dead replica.
+    #[test]
+    fn split_halves_match_whole_reduce_with_a_dead_replica() {
+        let topo = Butterfly::new(vec![2, 2], 256);
+        let logical = topo.machines();
+        let map = ReplicaMap::new(logical, 2);
+        let (outs, ins) = random_inputs(logical, topo.index_range(), 36);
+        let want = reference(&topo, &outs, &ins);
+        let transport = Arc::new(MemTransport::new(map.physical()));
+        let outs = Arc::new(outs);
+        let ins = Arc::new(ins);
+        let (o2, i2) = (outs.clone(), ins.clone());
+        let results = run_replicated_cluster(
+            &topo,
+            map,
+            transport,
+            4,
+            &[6], // replica 1 of logical 2
+            move |mut h: ReplicatedHandle<MemTransport>| {
+                let l = h.logical();
+                h.config(
+                    IndexSet::from_sorted(o2[l].0.clone()),
+                    IndexSet::from_sorted(i2[l].clone()),
+                )
+                .unwrap();
+                let bottom = h.reduce_down_half::<SumF32>(o2[l].1.clone()).unwrap();
+                let projected = h.protocol().apply_final_map::<SumF32>(&bottom);
+                h.reduce_up_half::<SumF32>(projected).unwrap()
+            },
+        );
+        for (phys, res) in results.iter().enumerate() {
+            if let Some(got) = res {
+                let l = map.logical_of(phys);
+                assert_eq!(got.len(), want[l].len());
+                for (g, w) in got.iter().zip(&want[l]) {
+                    assert!((g - w).abs() < 1e-4, "phys {phys} logical {l}");
+                }
+            }
+        }
     }
 
     #[test]

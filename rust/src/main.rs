@@ -766,6 +766,18 @@ fn print_launch_run(cfg: &RunConfig, run: &ClusterRun) {
     if !run.dead.is_empty() {
         println!("[{tag}]   dead workers (masked by replication): {:?}", run.dead);
     }
+    // Graded health at collect time: only the off-normal workers are
+    // worth a line — a quiet pool prints nothing here.
+    let graded: Vec<String> = run
+        .health
+        .iter()
+        .enumerate()
+        .filter(|(_, h)| **h != sparse_allreduce::fault::Health::Normal)
+        .map(|(w, h)| format!("{w}:{h}"))
+        .collect();
+    if !graded.is_empty() {
+        println!("[{tag}]   worker health: {} (others normal)", graded.join(" "));
+    }
 }
 
 /// `sar serve`: launch (or join) a worker pool and serve remote
@@ -780,12 +792,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     args.expect_known(
         "serve",
         &[
-            "degrees", "threads", "bind", "client-bind", "sessions", "queue",
-            "keepalive-secs", "total-sessions", "bin", "no-spawn",
+            "degrees", "replication", "threads", "bind", "client-bind", "sessions",
+            "queue", "keepalive-secs", "total-sessions", "bin", "no-spawn",
         ],
     )?;
     let opts = LaunchOpts {
         degrees: args.degrees_flag("degrees", &[2, 2])?,
+        replication: args.usize_flag("replication", 1)?,
         send_threads: args.usize_flag("threads", 4)?,
         bind: args.flag("bind").unwrap_or("127.0.0.1:0").to_string(),
         ..LaunchOpts::default()
@@ -805,6 +818,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let client_addr = sparse_allreduce::transport::advertised_addr(&client_listener)
         .context("deriving the client address")?;
     let world = opts.world();
+    let replication = opts.replication;
 
     let (mut session, procs) = if args.has_switch("no-spawn") {
         let coord = cluster::Coordinator::bind(&opts.bind)?;
@@ -826,8 +840,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         (session, Some(procs))
     };
     println!(
-        "pool of {world} workers ready; serving up to {} concurrent collective \
-         client(s) at {client_addr} (queue {}, keepalive {:?})",
+        "pool of {world} workers (replication {replication}) ready; serving up to {} \
+         concurrent collective client(s) at {client_addr} (queue {}, keepalive {:?})",
         serve_opts.max_live, serve_opts.queue_depth, serve_opts.keepalive
     );
     println!("connect with:  sar pagerank --pool {client_addr} --degrees <pool schedule>");
@@ -840,8 +854,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let stats = stats?;
     println!(
         "served {} client session(s) (peak {} concurrent, {} evicted, {} rejected); \
-         pool released",
-        stats.served, stats.peak_live, stats.evicted, stats.rejected
+         worker health {} normal / {} suspect / {} unhealthy; pool released",
+        stats.served,
+        stats.peak_live,
+        stats.evicted,
+        stats.rejected,
+        stats.health[0],
+        stats.health[1],
+        stats.health[2]
     );
     Ok(())
 }

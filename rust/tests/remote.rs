@@ -9,12 +9,14 @@
 //! tagged `mp_` so CI gates them into the tier-2 job
 //! (`cargo test --test remote mp_`).
 
-use sparse_allreduce::cluster::{serve_mux, spawn_session, LaunchOpts, ServeOpts, ServeStats};
+use sparse_allreduce::cluster::{
+    serve_mux, spawn_session, LaunchOpts, LocalProcs, ServeOpts, ServeStats,
+};
 use sparse_allreduce::comm::{CommBuilder, ExecMode, JobSpec};
 use sparse_allreduce::sparse::{IndexSet, MaxF32, OrU32, SumF32};
 use std::net::TcpListener;
 use std::path::Path;
-use std::sync::{Arc, Barrier};
+use std::sync::{Arc, Barrier, Mutex};
 use std::time::Duration;
 
 fn sar_bin() -> &'static Path {
@@ -47,6 +49,35 @@ fn serve_pool(sessions: usize) -> (String, std::thread::JoinHandle<ServeStats>) 
         total: Some(sessions),
         ..ServeOpts::default()
     })
+}
+
+/// Like [`serve_pool_opts`] but replicated: degrees [2,2] (4 logical
+/// lanes) × `replication` workers, with the worker process table handed
+/// back so tests can fail-stop workers mid-session (paper §V).
+fn serve_pool_replicated(
+    replication: usize,
+    sopts: ServeOpts,
+) -> (String, Arc<Mutex<LocalProcs>>, std::thread::JoinHandle<ServeStats>) {
+    let opts = LaunchOpts {
+        degrees: vec![2, 2],
+        replication,
+        send_threads: 2,
+        ..LaunchOpts::default()
+    };
+    let (mut session, procs) = spawn_session(sar_bin(), opts).expect("pool bring-up failed");
+    let procs = Arc::new(Mutex::new(procs));
+    let listener = TcpListener::bind("127.0.0.1:0").expect("binding client listener");
+    let addr = listener.local_addr().unwrap().to_string();
+    let handle = std::thread::spawn({
+        let procs = procs.clone();
+        move || {
+            let stats = serve_mux(&mut session, &listener, &sopts).expect("serve loop failed");
+            session.shutdown();
+            procs.lock().unwrap().wait_all();
+            stats
+        }
+    });
+    (addr, procs, handle)
 }
 
 fn remote_session(addr: &str) -> sparse_allreduce::comm::Session {
@@ -342,6 +373,83 @@ fn mp_remote_interleaved_clients_survive_a_mid_stream_disconnect() {
     assert_eq!(stats.served, 4, "stats: {stats:?}");
     assert_eq!(stats.peak_live, 3, "all three clients should have been live at once");
     assert_eq!(stats.evicted, 0, "no keepalive eviction in this test");
+}
+
+/// Fault-tolerance acceptance (the PR-7 tentpole): on a replication-2
+/// pool a `--pool` client SURVIVES the SIGKILL of one worker
+/// mid-stream. The dead replica's lanes are carried by its survivor —
+/// the coordinator fans each lane's VALUES out to all replicas and the
+/// first RESULT per lane wins (paper §V packet racing) — so every
+/// round's result still equals the lockstep oracle, a reconfigure on
+/// the degraded pool still works, and the worker's death shows up as
+/// an `unhealthy` grade in the serve stats' health census.
+#[test]
+fn mp_remote_client_survives_worker_death_on_replicated_pool() {
+    let sopts = ServeOpts { max_live: 1, total: Some(1), ..ServeOpts::default() };
+    let (addr, procs, serve) = serve_pool_replicated(2, sopts);
+
+    {
+        let mut remote = remote_session(&addr);
+        let mut lock = CommBuilder::new(vec![2, 2]).build(64).unwrap();
+        let out = sets(vec![vec![1, 5], vec![5, 9], vec![2], vec![]]);
+        let inb = sets(vec![vec![5], vec![1, 2], vec![9], vec![5, 9]]);
+        {
+            let mut rc = remote.configure(out.clone(), inb.clone()).expect("remote configure");
+            let mut lc = lock.configure(out, inb).unwrap();
+
+            // Fail-stop physical worker 6 — lane 2's second replica —
+            // while the round stream is in flight.
+            let killer = std::thread::spawn({
+                let procs = procs.clone();
+                move || {
+                    std::thread::sleep(Duration::from_millis(150));
+                    procs.lock().unwrap().kill(6).expect("killing worker 6");
+                }
+            });
+            for round in 0..6 {
+                let mk = || {
+                    let r = round as f32;
+                    vec![
+                        vec![1.0 + r, 10.0 * (r + 1.0)],
+                        vec![20.0, 3.0 + r],
+                        vec![7.0 * (r + 1.0)],
+                        vec![],
+                    ]
+                };
+                let (mut a, mut b) = (mk(), mk());
+                rc.allreduce::<SumF32>(&mut a)
+                    .unwrap_or_else(|e| panic!("round {round} with a dead replica: {e:#}"));
+                lc.allreduce::<SumF32>(&mut b).unwrap();
+                assert_eq!(a, b, "round {round} must match lockstep despite the kill");
+                // Pace the stream so the kill lands between rounds
+                // mid-session, not after the last one.
+                std::thread::sleep(Duration::from_millis(60));
+            }
+            killer.join().expect("killer thread");
+        }
+
+        // A reconfigure on the degraded pool: fresh scatter state is
+        // built on the survivors (the dead replica is skipped, its
+        // lane's barrier vote carried by the live copy).
+        let out2 = sets(vec![vec![3], vec![3], vec![7], vec![]]);
+        let inb2 = sets(vec![vec![3, 7], vec![3], vec![3], vec![7]]);
+        let mut rc =
+            remote.configure(out2.clone(), inb2.clone()).expect("post-kill reconfigure");
+        let mut lock2 = CommBuilder::new(vec![2, 2]).build(64).unwrap();
+        let mut lc2 = lock2.configure(out2, inb2).unwrap();
+        let mut a = vec![vec![2.0f32], vec![3.0], vec![1.0], vec![]];
+        let mut b = a.clone();
+        rc.allreduce::<SumF32>(&mut a).expect("post-kill allreduce");
+        lc2.allreduce::<SumF32>(&mut b).unwrap();
+        assert_eq!(a, b, "post-kill reconfigure round");
+    }
+
+    let stats = serve.join().expect("serve thread");
+    assert_eq!(stats.served, 1, "stats: {stats:?}");
+    assert!(
+        stats.health[2] >= 1,
+        "the killed worker must grade unhealthy in the census: {stats:?}"
+    );
 }
 
 /// Keepalive acceptance: with ONE live slot, an idle client is evicted

@@ -145,6 +145,8 @@ COMMANDS:
   launch        coordinate a worker pool: one JOIN, N jobs
   serve         serve remote collective clients against a worker pool
   serve-bench   measure serial vs multiplexed client serving (BENCH_6)
+  replan        re-plan a serving pool's degree schedule in place
+  replan-bench  measure stale vs re-planned schedules (BENCH_8)
   config-check  validate a cluster config file
   help          show usage (`sar help <command>` for one command)
 
@@ -312,7 +314,7 @@ run the config phase and reduce iterations, report metrics.
   --heartbeat-ms n control heartbeat interval            [100]",
         "launch" => "\
 USAGE: sar launch [--jobs pagerank,diameter,...] [--workers n]
-                  [--degrees 2x2] [--tune-profile tune.toml]
+                  [--degrees 2x2] [--tune-profile tune.toml] [--elastic]
                   [--replication r] [--iters n]
                   [--dataset d] [--scale f] [--seed s] [--threads t]
                   [--bind addr] [--file cfg.toml] [--no-spawn] [--bin path]
@@ -339,9 +341,16 @@ with the job name so multi-job output is attributable.
   --tune-profile p use the degree schedule + cost model from a
                    digest-verified `sar tune` profile (conflicts
                    with --degrees; also settable as `[tune] profile`
-                   in --file configs)",
+                   in --file configs); the launch report prints
+                   whether the profile stayed fresh against the live
+                   pool view or drifted STALE
+  --elastic        re-plan the degree schedule from the live pool view
+                   between jobs (per-host calibration, graded health,
+                   straggler streaks) — the lane count never changes,
+                   so workers are never re-JOINed",
         "serve" => "\
-USAGE: sar serve [--degrees 2x2] [--replication r] [--threads t]
+USAGE: sar serve [--degrees 2x2] [--tune-profile tune.toml]
+                 [--replication r] [--threads t]
                  [--bind addr] [--client-bind addr] [--sessions n]
                  [--queue n] [--keepalive-secs s] [--total-sessions n]
                  [--no-spawn] [--bin path]
@@ -378,7 +387,11 @@ the joined workers' addresses allow it.
                       (default: serve until killed)
   --no-spawn          wait for externally-started workers instead of
                       forking them locally
-  --bin path          sar binary to spawn local workers from  [current exe]",
+  --bin path          sar binary to spawn local workers from  [current exe]
+  --tune-profile p    take the degree schedule from a digest-verified
+                      `sar tune` profile (conflicts with --degrees) and
+                      track its freshness against the live pool view —
+                      the exit line reports when it drifted STALE",
         "serve-bench" => "\
 USAGE: sar serve-bench [--degrees 2x2] [--threads t] [--rounds n]
                        [--out BENCH_6.json] [--bin path] [--fast]
@@ -395,6 +408,40 @@ trajectory row (BENCH_6.json).
   --out path       bench trajectory output                 [BENCH_6.json]
   --bin path       sar binary to spawn pool workers from   [current exe]
   --fast           CI smoke mode: fewer iterations",
+        "replan" => "\
+USAGE: sar replan --pool host:port [--degrees 2x2]
+
+Re-plan a serving pool's degree schedule in place (elastic control
+plane): connect to a `sar serve` pool's client port and request a
+REPLAN. The serve plane waits for a quiescent point (no client session
+holding collective state), walks the REPLAN → REPLAN_DONE barrier on
+the workers, and later sessions run the new schedule — the workers
+never re-JOIN, because degrees shape each job's butterflies, not the
+once-built TCP fabric. The adopted schedule is printed on success.
+  --pool addr    the pool's client port (required)
+  --degrees kxk  schedule to adopt; its product must keep the pool's
+                 logical lane count. Omit to re-plan automatically from
+                 the live pool view: per-host calibration constants
+                 (workers microbench themselves at startup), graded
+                 health, and RTT straggler streaks — consistent
+                 stragglers shrink the planned degrees",
+        "replan-bench" => "\
+USAGE: sar replan-bench [--lanes n] [--rounds n] [--mbytes f]
+                        [--out BENCH_8.json] [--fast]
+
+Measure the elastic control plane's headline: per-round allreduce time
+on a pool with one skewed (high-setup, straggling) host, under the
+stale uniform schedule vs the schedule re-planned from the live view
+(the straggler-penalized cost fold picks smaller degrees). Runs
+in-process over a delay-modelled transport so the skew is
+deterministic; checksums validate against the lockstep oracle before
+any timing is recorded. Emits the machine-readable trajectory row
+(BENCH_8.json).
+  --lanes n    logical lanes in the modelled pool      [4]
+  --rounds n   timed allreduce rounds per schedule     [12]
+  --mbytes f   per-node sparse payload in MiB          [4]
+  --out path   bench trajectory output                 [BENCH_8.json]
+  --fast       CI smoke mode: fewer rounds",
         "config-check" => "\
 USAGE: sar config-check --file <path>
 
@@ -460,7 +507,7 @@ mod tests {
     fn every_command_has_usage() {
         for cmd in [
             "info", "plan", "tune", "shard", "pagerank", "diameter", "sgd", "train", "worker",
-            "launch", "serve", "serve-bench", "config-check", "help",
+            "launch", "serve", "serve-bench", "replan", "replan-bench", "config-check", "help",
         ] {
             assert!(usage_for(cmd).is_some(), "missing usage for {cmd}");
             assert!(USAGE.contains(cmd), "top-level usage missing {cmd}");

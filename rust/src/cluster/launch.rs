@@ -20,9 +20,13 @@ use super::proto::{
 };
 use crate::comm::{AppKind, JobSpec};
 use crate::config::{validate_world, RunConfig};
+use crate::control::view::drift_line;
+use crate::control::{plan_for_view, profile_drift, HostConstants, PoolView, ReplanParams};
 use crate::fault::{FailureDetector, Health, ReplicaMap};
 use crate::graph::ShardManifest;
 use crate::metrics::{IterTiming, RunMetrics};
+use crate::simnet::CostModel;
+use crate::tune::TuneProfile;
 use crate::util::Summary;
 use anyhow::{bail, Context, Result};
 use std::collections::{HashMap, VecDeque};
@@ -63,6 +67,14 @@ pub struct LaunchOpts {
     /// job derived from the legacy fields above (the historical
     /// single-job launch).
     pub jobs: Vec<JobSpec>,
+    /// The tuning profile that shaped this launch (degrees, cost
+    /// constants), kept so the live pool can report the profile stale
+    /// when its view drifts. `None` when no profile drove the launch.
+    pub tune: Option<TuneProfile>,
+    /// Elastic mode (`sar launch --elastic`): re-plan the degree
+    /// schedule from the live pool view between jobs, so later jobs run
+    /// under per-host calibrated, straggler-penalized degrees.
+    pub elastic: bool,
 }
 
 impl Default for LaunchOpts {
@@ -81,6 +93,8 @@ impl Default for LaunchOpts {
             phase_deadline: Duration::from_secs(120),
             shards: None,
             jobs: Vec::new(),
+            tune: None,
+            elastic: false,
         }
     }
 }
@@ -298,6 +312,18 @@ pub struct RttTracker {
 /// most recent window rather than freezing on the run's first samples.
 const RTT_SAMPLE_CAP: usize = 4096;
 
+/// Samples the *straggler verdict* looks at — a short recent window,
+/// not the whole retained ring, so a worker whose host recovers drops
+/// its straggler flag within ~3 s of heartbeats instead of dragging
+/// minutes of stale slow samples behind it.
+const RTT_RECENT_WINDOW: usize = 32;
+
+/// A worker is a straggler only when its recent median RTT exceeds the
+/// pool's median-of-medians by this factor. Relative, not absolute: a
+/// uniformly slow (or uniformly fast) pool has no straggler, and a
+/// single sampled worker can never be its own outlier.
+const RTT_STRAGGLER_RATIO: f64 = 3.0;
+
 #[derive(Clone, Default)]
 struct RttRing {
     buf: Vec<f64>,
@@ -313,6 +339,46 @@ impl RttRing {
             self.buf[self.next] = secs;
             self.next = (self.next + 1) % RTT_SAMPLE_CAP;
         }
+    }
+
+    /// The newest `k` samples (fewer while the ring is filling).
+    fn recent(&self, k: usize) -> Vec<f64> {
+        let n = self.buf.len().min(k);
+        if self.buf.len() < RTT_SAMPLE_CAP {
+            self.buf[self.buf.len() - n..].to_vec()
+        } else {
+            // `next` is the overwrite cursor = oldest sample; the
+            // newest n sit just behind it, wrapping.
+            (0..n)
+                .map(|i| self.buf[(self.next + RTT_SAMPLE_CAP - n + i) % RTT_SAMPLE_CAP])
+                .collect()
+        }
+    }
+}
+
+/// Median of a non-empty slice — the *lower* median for even counts,
+/// so in a two-worker pool the baseline is the faster worker rather
+/// than the candidate straggler itself. RTT samples are validated
+/// finite on record, so the comparison is total.
+fn rtt_median(vals: &mut [f64]) -> f64 {
+    vals.sort_by(|a, b| a.partial_cmp(b).expect("rtt samples finite"));
+    vals[(vals.len() - 1) / 2]
+}
+
+/// The relative-outlier test shared by the live tracker and post-run
+/// reporting: among `(worker, median)` pairs, the worst median is a
+/// straggler only if it exceeds [`RTT_STRAGGLER_RATIO`] × the pool's
+/// median-of-medians.
+fn rtt_outlier(medians: &[(usize, f64)]) -> Option<(usize, f64)> {
+    let &(w, worst) = medians
+        .iter()
+        .max_by(|a, b| a.1.partial_cmp(&b.1).expect("rtt medians finite"))?;
+    let mut all: Vec<f64> = medians.iter().map(|&(_, m)| m).collect();
+    let baseline = rtt_median(&mut all);
+    if worst > RTT_STRAGGLER_RATIO * baseline {
+        Some((w, worst))
+    } else {
+        None
     }
 }
 
@@ -347,23 +413,38 @@ impl RttTracker {
         Summary::of(&all)
     }
 
-    /// The worker with the highest median RTT, with that median —
-    /// `None` until at least one worker has samples.
+    /// The straggling worker with its recent median RTT, or `None` when
+    /// no worker stands out. The verdict is *recent* (last
+    /// [`RTT_RECENT_WINDOW`] samples, so a recovered host sheds the
+    /// flag) and *relative* (see [`rtt_outlier`] — a pool where every
+    /// worker keeps pace has no straggler, however slow the wire).
     pub fn straggler(&self) -> Option<(usize, f64)> {
-        let per_worker = self.summaries();
-        rtt_straggler(&per_worker).map(|(w, s)| (w, s.p50))
+        let s = self.samples.lock().expect("rtt tracker poisoned");
+        let medians: Vec<(usize, f64)> = s
+            .iter()
+            .enumerate()
+            .filter(|(_, w)| !w.buf.is_empty())
+            .map(|(i, w)| {
+                let mut recent = w.recent(RTT_RECENT_WINDOW);
+                (i, rtt_median(&mut recent))
+            })
+            .collect();
+        rtt_outlier(&medians)
     }
 }
 
-/// The worker with the highest median RTT among workers that have any
-/// samples — shared by the live [`RttTracker`] view and post-run
-/// [`ClusterRun::rtt_per_worker`] reporting.
+/// The worker whose median RTT is a relative outlier among workers that
+/// have any samples ([`rtt_outlier`] over whole-run medians) — the
+/// post-run [`ClusterRun::rtt_per_worker`] reporting twin of the live
+/// [`RttTracker::straggler`] verdict.
 pub fn rtt_straggler(per_worker: &[Summary]) -> Option<(usize, &Summary)> {
-    per_worker
+    let medians: Vec<(usize, f64)> = per_worker
         .iter()
         .enumerate()
         .filter(|(_, s)| s.n > 0)
-        .max_by(|a, b| a.1.p50.partial_cmp(&b.1.p50).expect("rtt p50 comparable"))
+        .map(|(i, s)| (i, s.p50))
+        .collect();
+    rtt_outlier(&medians).map(|(w, _)| (w, &per_worker[w]))
 }
 
 /// Aggregated outcome of one distributed job.
@@ -396,6 +477,12 @@ pub struct ClusterRun {
     pub rtt_per_worker: Vec<Summary>,
     /// All RTT samples pooled across workers.
     pub rtt: Summary,
+    /// Live-vs-profile drift verdict (`None` when no tuning profile
+    /// drove this pool; otherwise the fresh/STALE line with reasons).
+    pub staleness: Option<String>,
+    /// The degree schedule this job actually ran under — differs
+    /// across jobs on an elastic pool that re-planned between them.
+    pub degrees: Vec<usize>,
 }
 
 /// Control listener, pre-join.
@@ -449,6 +536,16 @@ pub struct Session {
     /// (the feed is throttled — summarizing every ring per call would
     /// tax the round hot path for a signal that drifts slowly).
     straggler_fed_at: Option<Instant>,
+    /// Per-host calibration constants reported by workers' on-host
+    /// microbenches (reader threads fill this in, like heartbeats).
+    calibrations: Arc<Mutex<Vec<Option<HostConstants>>>>,
+    /// Monotonic re-plan epoch source.
+    replan_seq: u32,
+    /// The re-plan barrier currently collecting votes (if any).
+    replan_epoch: Option<u32>,
+    replan_votes: Vec<bool>,
+    /// Completed re-plans on this pool.
+    replan_count: u32,
 }
 
 impl Coordinator {
@@ -557,6 +654,8 @@ impl Coordinator {
 
         let detector = Arc::new(FailureDetector::new(world, opts.heartbeat_timeout));
         let rtt = Arc::new(RttTracker::new(world));
+        let calibrations: Arc<Mutex<Vec<Option<HostConstants>>>> =
+            Arc::new(Mutex::new(vec![None; world]));
         let (tx, events) = channel();
         let mut writers = Vec::with_capacity(world);
         for (w, stream) in conns.into_iter().enumerate() {
@@ -566,6 +665,7 @@ impl Coordinator {
             let tx = tx.clone();
             let detector = detector.clone();
             let rtt = rtt.clone();
+            let calibrations = calibrations.clone();
             std::thread::spawn(move || {
                 let mut stream = stream;
                 loop {
@@ -586,6 +686,31 @@ impl Coordinator {
                                         COORD,
                                         &CtrlMsg::HeartbeatAck { nonce },
                                     );
+                                }
+                                // On-host calibration constants land in
+                                // the shared view like heartbeats do —
+                                // never through the job pump, so they
+                                // arrive even mid-collective.
+                                CtrlMsg::Calibration {
+                                    node: _,
+                                    transport,
+                                    setup_secs,
+                                    bandwidth_bps,
+                                } => {
+                                    let mut cal = calibrations
+                                        .lock()
+                                        .expect("calibrations poisoned");
+                                    if let Some(slot) = cal.get_mut(w) {
+                                        *slot = Some(HostConstants {
+                                            transport,
+                                            model: CostModel {
+                                                setup_secs,
+                                                bandwidth_bps,
+                                                outlier_prob: 0.0,
+                                                outlier_mean_secs: 0.0,
+                                            },
+                                        });
+                                    }
                                 }
                                 msg => {
                                     if tx.send((w, Event::Msg(msg))).is_err() {
@@ -639,6 +764,11 @@ impl Coordinator {
             started_at: None,
             shutdown_sent: false,
             straggler_fed_at: None,
+            calibrations,
+            replan_seq: 0,
+            replan_epoch: None,
+            replan_votes: vec![false; world],
+            replan_count: 0,
             opts,
         })
     }
@@ -680,6 +810,156 @@ impl Session {
         self.detector.grades()
     }
 
+    /// The degree schedule the pool currently runs (updated in place by
+    /// [`Session::replan`]).
+    pub fn degrees(&self) -> &[usize] {
+        &self.opts.degrees
+    }
+
+    /// Completed re-plans on this pool.
+    pub fn replans(&self) -> u32 {
+        self.replan_count
+    }
+
+    /// The live fingerprint the elastic control plane plans against:
+    /// topology, graded health, straggler streaks, and every per-host
+    /// calibration report received so far.
+    pub fn pool_view(&mut self) -> PoolView {
+        self.refresh_straggler();
+        PoolView {
+            world: self.world(),
+            replication: self.opts.replication,
+            degrees: self.opts.degrees.clone(),
+            grades: self.detector.grades(),
+            straggler_streaks: self.detector.streaks(),
+            host_constants: self.calibrations.lock().expect("calibrations poisoned").clone(),
+            transport: "tcp".to_string(),
+        }
+    }
+
+    /// Live-vs-profile drift verdict for the launch report: `None` when
+    /// no tuning profile drove this pool, otherwise the one-line
+    /// fresh/STALE verdict with every independent staleness reason.
+    pub fn staleness(&mut self) -> Option<String> {
+        let profile = self.opts.tune.clone()?;
+        let view = self.pool_view();
+        Some(drift_line(&profile_drift(&profile, &view)))
+    }
+
+    /// Boolean form of [`Self::staleness`] for stats counters: `None`
+    /// when no profile drove the pool, `Some(true)` when it has
+    /// drifted.
+    pub fn profile_is_stale(&mut self) -> Option<bool> {
+        let profile = self.opts.tune.clone()?;
+        let view = self.pool_view();
+        Some(!profile_drift(&profile, &view).is_empty())
+    }
+
+    /// Swap the pool's degree schedule in place — the elastic control
+    /// plane's tentpole move. The schedule must preserve the logical
+    /// lane count: degrees only shape the per-job butterflies, never
+    /// the once-built TCP fabric, so no worker re-JOINs. Requires an
+    /// idle pool (between jobs, no live collective sessions), then
+    /// walks a REPLAN → REPLAN_DONE barrier so no job can start against
+    /// a half-adopted schedule.
+    pub fn replan(&mut self, degrees: Vec<usize>) -> Result<()> {
+        if degrees.is_empty() || degrees.contains(&0) {
+            bail!("re-plan degrees must be non-empty and positive, got {degrees:?}");
+        }
+        let product: usize = degrees.iter().product();
+        if product != self.opts.logical() {
+            bail!(
+                "re-plan degrees {:?} (product {product}) must preserve the pool's {} \
+                 logical lane(s); changing the lane count needs a re-JOIN, not a re-plan",
+                degrees,
+                self.opts.logical()
+            );
+        }
+        if !self.collectives.is_empty() {
+            bail!(
+                "{} remote collective session(s) are live on this pool; re-plan at a \
+                 quiescent point",
+                self.collectives.len()
+            );
+        }
+        if self.current_job.is_some() {
+            if !self.collected {
+                bail!("job `{}` is still in flight; re-plan between jobs", self.current_name);
+            }
+            self.quiesce()?;
+        }
+        let epoch = self.replan_seq;
+        self.replan_seq += 1;
+        self.replan_epoch = Some(epoch);
+        for v in self.replan_votes.iter_mut() {
+            *v = false;
+        }
+        let msg =
+            CtrlMsg::Replan { epoch, degrees: degrees.iter().map(|&k| k as u32).collect() };
+        for (w, writer) in self.writers.iter().enumerate() {
+            if self.detector.is_hard_dead(w) {
+                continue;
+            }
+            if let Err(e) = send_ctrl(writer, COORD, &msg) {
+                log::warn!("REPLAN to worker {w} failed: {e}");
+                self.detector.mark_dead(w);
+            }
+        }
+        let deadline = Instant::now() + self.opts.phase_deadline;
+        loop {
+            self.pump(Duration::from_millis(20));
+            let settled = (0..self.world())
+                .all(|w| self.replan_votes[w] || self.detector.is_hard_dead(w));
+            if settled {
+                for l in 0..self.map.logical {
+                    let covered = self
+                        .map
+                        .replicas(l)
+                        .any(|p| self.replan_votes[p] && !self.detector.is_hard_dead(p));
+                    if !covered {
+                        self.shutdown_all();
+                        bail!(
+                            "re-plan barrier failed: lane {l} has no live re-planned \
+                             replica{}",
+                            self.failure_summary()
+                        );
+                    }
+                }
+                break;
+            }
+            if Instant::now() > deadline {
+                self.shutdown_all();
+                bail!("re-plan barrier timed out{}", self.failure_summary());
+            }
+        }
+        self.replan_epoch = None;
+        log::info!(
+            "pool re-planned: degrees {:?} -> {degrees:?} (epoch {epoch}, no re-JOIN)",
+            self.opts.degrees
+        );
+        self.opts.degrees = degrees;
+        self.replan_count += 1;
+        Ok(())
+    }
+
+    /// Re-plan from the live view: fold the per-host calibration
+    /// constants and health grades through the §IV-B planner
+    /// ([`plan_for_view`]) and adopt the result if it differs from the
+    /// current schedule. Returns the planned schedule either way.
+    pub fn replan_auto(&mut self) -> Result<Vec<usize>> {
+        let view = self.pool_view();
+        let planned = plan_for_view(&view, &ReplanParams::default());
+        if planned != self.opts.degrees {
+            self.replan(planned.clone())?;
+        } else {
+            log::info!(
+                "re-plan: live view confirms current degrees {:?}",
+                self.opts.degrees
+            );
+        }
+        Ok(planned)
+    }
+
     /// Drain one pending control event (if any) into session state.
     /// Per-job messages tagged with a stale job id are logged and
     /// dropped — a slow worker's late report must not corrupt the
@@ -710,6 +990,13 @@ impl Session {
                     log::warn!("stale RESULT (collective {}) from worker {w}", r.job);
                 }
             }
+            Ok((w, Event::Msg(CtrlMsg::ReplanDone { epoch, node: _ }))) => {
+                if Some(epoch) == self.replan_epoch {
+                    self.replan_votes[w] = true;
+                } else {
+                    log::warn!("stale REPLAN_DONE (epoch {epoch}) from worker {w}");
+                }
+            }
             Ok((w, Event::Msg(CtrlMsg::Failed { error }))) => {
                 log::warn!("worker {w} failed: {error}");
                 self.detector.mark_dead(w);
@@ -734,6 +1021,32 @@ impl Session {
                 .collect::<Vec<_>>()
                 .join("; ");
             format!(" ({list})")
+        }
+    }
+
+    /// Quiesce the pool after a collected job: collect_job returns once
+    /// each *logical* node reported (§V fast path), so a slow replica
+    /// may still be mid-reduce on the previous job. Its old protocol
+    /// handle would consume — and then discard — the next job's config
+    /// traffic, wedging that replica. Wait until every live worker
+    /// reported (dead workers excepted) before anything that changes
+    /// the pool's data-plane behavior.
+    fn quiesce(&mut self) -> Result<()> {
+        let deadline = Instant::now() + self.opts.phase_deadline;
+        loop {
+            let settled = (0..self.world())
+                .all(|w| self.reports[w].is_some() || self.detector.is_hard_dead(w));
+            if settled {
+                return Ok(());
+            }
+            self.pump(Duration::from_millis(20));
+            if Instant::now() > deadline {
+                self.shutdown_all();
+                bail!(
+                    "pool quiesce timed out waiting for previous-job reports{}",
+                    self.failure_summary()
+                );
+            }
         }
     }
 
@@ -762,29 +1075,7 @@ impl Session {
                     self.current_name
                 );
             }
-            // Quiesce the pool: collect_job returns once each *logical*
-            // node reported (§V fast path), so a slow replica may still
-            // be mid-reduce on the previous job. Its old protocol
-            // handle would consume — and then discard — the NEXT job's
-            // config traffic, wedging that replica. Wait until every
-            // live worker reported (dead workers excepted) before any
-            // new data-plane messages can start flowing.
-            let deadline = Instant::now() + self.opts.phase_deadline;
-            loop {
-                let settled = (0..self.world())
-                    .all(|w| self.reports[w].is_some() || self.detector.is_hard_dead(w));
-                if settled {
-                    break;
-                }
-                self.pump(Duration::from_millis(20));
-                if Instant::now() > deadline {
-                    self.shutdown_all();
-                    bail!(
-                        "pool quiesce timed out waiting for previous-job reports{}",
-                        self.failure_summary()
-                    );
-                }
-            }
+            self.quiesce()?;
         }
         let (shard_dir, manifest_digest) = resolve_job_shards(spec, &self.opts.degrees)?;
         let job_id = self.job_seq;
@@ -962,6 +1253,7 @@ impl Session {
         // (the next submit quiesces on it).
         self.started_at = None;
         self.collected = true;
+        let staleness = self.staleness();
         Ok(ClusterRun {
             job: self.current_name.clone(),
             world: self.world(),
@@ -975,6 +1267,8 @@ impl Session {
             health,
             rtt_per_worker: self.rtt.summaries(),
             rtt: self.rtt.aggregate(),
+            staleness,
+            degrees: self.opts.degrees.clone(),
         })
     }
 
@@ -1328,8 +1622,50 @@ mod tests {
         rtt.record(0, -1.0);
         rtt.record(7, 1.0);
         assert!(rtt.straggler().is_none());
+        // One sampled worker is its own baseline — never an outlier.
         rtt.record(1, 0.5e-3);
+        assert!(rtt.straggler().is_none(), "a lone worker cannot straggle behind itself");
+        // A peer provides the baseline; now worker 1 stands out.
+        rtt.record(0, 0.1e-3);
         assert_eq!(rtt.straggler(), Some((1, 0.5e-3)));
+    }
+
+    /// Satellite bugfix: the straggler verdict must *recover*. A worker
+    /// flagged off a burst of slow heartbeats sheds the flag once its
+    /// recent window refills with healthy samples — and feeding the
+    /// recovered verdict into the failure detector returns its grade to
+    /// Normal instead of pinning Suspect forever.
+    #[test]
+    fn rtt_straggler_flag_recovers_with_the_window() {
+        let rtt = RttTracker::new(2);
+        let d = FailureDetector::new(2, Duration::from_secs(60));
+        for _ in 0..RTT_RECENT_WINDOW {
+            rtt.record(0, 0.2e-3);
+            rtt.record(1, 30e-3); // worker 1's host is overloaded
+        }
+        let (w, _) = rtt.straggler().expect("slow worker must be flagged");
+        assert_eq!(w, 1);
+        d.set_straggler(Some(1));
+        assert_eq!(d.grade(1), Health::Suspect);
+        // The host recovers: one healthy window of samples later the
+        // old slow burst no longer drives the verdict, even though it
+        // is still inside the big retained ring.
+        for _ in 0..RTT_RECENT_WINDOW {
+            rtt.record(0, 0.2e-3);
+            rtt.record(1, 0.25e-3);
+        }
+        assert!(rtt.straggler().is_none(), "recovered worker must shed the flag");
+        d.set_straggler(rtt.straggler().map(|(w, _)| w));
+        assert_eq!(d.grade(1), Health::Normal, "recovered worker returns to Normal");
+        // The relative test also refuses to invent a straggler in a
+        // uniformly slow pool.
+        let slow = RttTracker::new(3);
+        for w in 0..3 {
+            for _ in 0..8 {
+                slow.record(w, 25e-3);
+            }
+        }
+        assert!(slow.straggler().is_none(), "no outlier in a uniform pool");
     }
 
     /// Satellite: the sample window is a ring — a worker that turns slow

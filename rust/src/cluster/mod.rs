@@ -49,6 +49,17 @@
 //! keepalive eviction), each session holding its own job-scoped worker
 //! config that a RELEASE frees without touching the fabric.
 //!
+//! Between jobs the pool is **elastic** (see [`crate::control`]): the
+//! coordinator can walk a REPLAN → REPLAN_DONE barrier that swaps the
+//! degree schedule in place — degrees shape each job's butterflies,
+//! never the once-built TCP fabric, so no worker re-JOINs. The new
+//! schedule comes from planning against the live pool view
+//! ([`crate::control::PoolView`]): per-host CALIBRATION reports
+//! (workers microbench
+//! themselves right after PLAN), graded health, and RTT straggler
+//! streaks. `sar replan` drives the same cycle on a serving pool at a
+//! quiescent point, through the client port.
+//!
 //! Failure handling: heartbeats and control-connection EOFs feed a
 //! [`crate::fault::FailureDetector`]. With `replication > 1` a dead
 //! worker is masked by the replicated driver's packet racing (paper §V)

@@ -165,6 +165,26 @@ pub enum CtrlMsg {
     /// absorb it transparently ([`crate::comm::remote`] keeps the last
     /// census); it never changes the collective protocol.
     PoolHealth { grades: Vec<u32> },
+    /// coordinator → worker: adopt a new butterfly degree schedule over
+    /// the *same* logical lanes (product must equal the pool's logical
+    /// count, so the once-built data fabric and lane assignment are
+    /// untouched — no re-JOIN). Also client → coordinator: an admin
+    /// request to re-plan the pool at its next quiescent point (empty
+    /// `degrees` = derive the schedule from the live [`PoolView`]
+    /// (crate::control) instead of taking it verbatim). `epoch` tags the
+    /// replan cycle for the ack barrier.
+    Replan { epoch: u32, degrees: Vec<u32> },
+    /// worker → coordinator: replan `epoch` applied to the local engine
+    /// (barrier vote). Also coordinator → client: admin ack carrying the
+    /// adopted schedule in a follow-up report line.
+    ReplanDone { epoch: u32, node: u32 },
+    /// worker → coordinator: the worker's on-host echo-microbench
+    /// calibration ([`crate::tune::calibrate`] run worker-side), fitted
+    /// into per-host cost constants. Sent once after bring-up from a
+    /// background thread; the coordinator folds each host's constants
+    /// into its live pool view so re-planning uses measured numbers
+    /// instead of the 2013-EC2 fallback.
+    Calibration { node: u32, transport: String, setup_secs: f64, bandwidth_bps: f64 },
 }
 
 /// One lane's config-phase input on the remote collective plane: the
@@ -324,6 +344,9 @@ const OP_VALUES: u32 = 12;
 const OP_RESULT: u32 = 13;
 const OP_RELEASE: u32 = 14;
 const OP_POOL_HEALTH: u32 = 15;
+const OP_REPLAN: u32 = 16;
+const OP_REPLAN_DONE: u32 = 17;
+const OP_CALIBRATION: u32 = 18;
 
 // --- body codec ----------------------------------------------------------
 
@@ -553,6 +576,23 @@ pub fn encode(msg: &CtrlMsg) -> (u32, Vec<u8>) {
             e.u32s(grades);
             OP_POOL_HEALTH
         }
+        CtrlMsg::Replan { epoch, degrees } => {
+            e.u32(*epoch);
+            e.u32s(degrees);
+            OP_REPLAN
+        }
+        CtrlMsg::ReplanDone { epoch, node } => {
+            e.u32(*epoch);
+            e.u32(*node);
+            OP_REPLAN_DONE
+        }
+        CtrlMsg::Calibration { node, transport, setup_secs, bandwidth_bps } => {
+            e.u32(*node);
+            e.str(transport);
+            e.f64(*setup_secs);
+            e.f64(*bandwidth_bps);
+            OP_CALIBRATION
+        }
     };
     (op, e.0)
 }
@@ -650,6 +690,34 @@ pub fn decode(opcode: u32, payload: &[u8]) -> std::io::Result<CtrlMsg> {
                 return Err(bad(format!("unknown health grade {g}")));
             }
             CtrlMsg::PoolHealth { grades }
+        }
+        OP_REPLAN => {
+            let m = CtrlMsg::Replan { epoch: d.u32()?, degrees: d.u32s()? };
+            if let CtrlMsg::Replan { degrees, .. } = &m {
+                if degrees.contains(&0) {
+                    return Err(bad("replan degree 0"));
+                }
+            }
+            m
+        }
+        OP_REPLAN_DONE => CtrlMsg::ReplanDone { epoch: d.u32()?, node: d.u32()? },
+        OP_CALIBRATION => {
+            let m = CtrlMsg::Calibration {
+                node: d.u32()?,
+                transport: d.str()?,
+                setup_secs: d.f64()?,
+                bandwidth_bps: d.f64()?,
+            };
+            if let CtrlMsg::Calibration { setup_secs, bandwidth_bps, .. } = &m {
+                if !setup_secs.is_finite()
+                    || !bandwidth_bps.is_finite()
+                    || *setup_secs < 0.0
+                    || *bandwidth_bps <= 0.0
+                {
+                    return Err(bad("unphysical calibration constants"));
+                }
+            }
+            m
         }
         other => return Err(bad(format!("unknown control opcode {other}"))),
     };
@@ -783,6 +851,15 @@ mod tests {
             CtrlMsg::PoolHealth {
                 grades: vec![HEALTH_NORMAL, HEALTH_SUSPECT, HEALTH_UNHEALTHY, HEALTH_NORMAL],
             },
+            CtrlMsg::Replan { epoch: 3, degrees: vec![4, 1] },
+            CtrlMsg::Replan { epoch: 4, degrees: vec![] },
+            CtrlMsg::ReplanDone { epoch: 3, node: 2 },
+            CtrlMsg::Calibration {
+                node: 1,
+                transport: "mem".into(),
+                setup_secs: 1.25e-5,
+                bandwidth_bps: 6.0e9,
+            },
         ]
     }
 
@@ -847,6 +924,23 @@ mod tests {
         payload[8] = HEALTH_UNHEALTHY as u8 + 1;
         let err = decode(op, &payload).unwrap_err();
         assert!(err.to_string().contains("health grade"), "got: {err}");
+        // a replan carrying a zero degree can never cover the lanes
+        let (op, mut payload) = encode(&CtrlMsg::Replan { epoch: 1, degrees: vec![2, 2] });
+        // layout: epoch(4) len(4) then the first degree at offset 8
+        payload[8] = 0;
+        let err = decode(op, &payload).unwrap_err();
+        assert!(err.to_string().contains("degree 0"), "got: {err}");
+        // calibration constants must be physical (finite, bandwidth > 0)
+        let (op, mut payload) = encode(&CtrlMsg::Calibration {
+            node: 0,
+            transport: "mem".into(),
+            setup_secs: 1e-5,
+            bandwidth_bps: 1e9,
+        });
+        let off = payload.len() - 8;
+        payload[off..].copy_from_slice(&f64::NAN.to_le_bytes());
+        let err = decode(op, &payload).unwrap_err();
+        assert!(err.to_string().contains("unphysical"), "got: {err}");
     }
 
     #[test]

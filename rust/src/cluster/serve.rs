@@ -113,6 +113,12 @@ pub struct ServeStats {
     /// Worker health census at serve exit, indexed by grade:
     /// `[normal, suspect, unhealthy]` (see [`crate::fault::Health`]).
     pub health: [usize; 3],
+    /// Completed re-plans on the pool while serving (`sar replan`
+    /// admin requests adopted at quiescent points).
+    pub replans: u32,
+    /// Whether the pool's tuning profile had drifted stale by serve
+    /// exit (`false` when no profile drove the pool).
+    pub stale: bool,
 }
 
 /// Backwards-compatible serial-looking entry: serve `max_sessions`
@@ -174,6 +180,7 @@ pub fn serve_mux(
         batches: HashMap::new(),
         stats: ServeStats::default(),
         started: 0,
+        pending_replan: Vec::new(),
     };
     // Clients speak in LOGICAL lanes: on a replicated pool a batch has
     // one CONFIGURE/VALUES per lane, and the relay fans each out to
@@ -196,6 +203,8 @@ pub fn serve_mux(
         for g in mux.session.health() {
             mux.stats.health[g as usize] += 1;
         }
+        mux.stats.replans = mux.session.replans();
+        mux.stats.stale = mux.session.profile_is_stale().unwrap_or(false);
         mux.stats
     })
 }
@@ -304,6 +313,10 @@ struct Mux<'a> {
     stats: ServeStats,
     /// Sessions ever admitted (the `total` budget meter).
     started: usize,
+    /// Admin re-plan requests (`sar replan`) waiting for the pool to
+    /// go quiescent: `(sid, requested degrees)` — empty degrees means
+    /// "plan from the live view".
+    pending_replan: Vec<(u64, Vec<usize>)>,
 }
 
 impl Mux<'_> {
@@ -321,7 +334,13 @@ impl Mux<'_> {
                     self.fail_client(sid, format!("undecodable client frame: {err}"));
                 }
                 Ok(MuxEvent::Gone(sid)) => {
-                    if self.registry.get(sid).is_some() {
+                    if self.pending_replan.iter().any(|&(s, _)| s == sid) {
+                        // An admin that hung up keeps its request: the
+                        // re-plan was asked for, so it still happens —
+                        // only the ack has nowhere to go.
+                        log::info!("admin session {sid} disconnected; its re-plan stays pending");
+                        self.end_admin(sid, None);
+                    } else if self.registry.get(sid).is_some() {
                         log::info!("client session {sid} disconnected");
                         self.end_session(sid);
                     }
@@ -340,6 +359,7 @@ impl Mux<'_> {
             }
             self.sweep_idle();
             self.dispatch_ready()?;
+            self.try_replan()?;
         }
     }
 
@@ -423,6 +443,21 @@ impl Mux<'_> {
     /// One client frame through the session's state machine.
     fn on_frame(&mut self, sid: u64, msg: CtrlMsg) -> Result<()> {
         let now = Instant::now();
+        // Admin plane: a REPLAN frame from a session that holds no pool
+        // state turns the connection into a re-plan request (`sar
+        // replan`), never entering the client state machine. A session
+        // that already configured a collective does NOT get to re-plan
+        // the pool out from under everyone — that's a violation.
+        if let CtrlMsg::Replan { degrees, .. } = &msg {
+            let fresh =
+                self.registry.get(sid).is_some_and(|e| e.sm.pool_job().is_none());
+            if fresh {
+                let want = degrees.iter().map(|&k| k as usize).collect();
+                return self.on_admin_replan(sid, want);
+            }
+            self.fail_client(sid, "REPLAN on a configured client session".to_string());
+            return Ok(());
+        }
         let Some(entry) = self.registry.get_mut(sid) else {
             return Ok(()); // session already ended; late frame
         };
@@ -573,6 +608,125 @@ impl Mux<'_> {
         Ok(())
     }
 
+    /// An admitted connection's REPLAN frame: validate the requested
+    /// schedule up front (so a later failure can only mean the pool
+    /// died), refund the session budget — admin requests are control
+    /// traffic, not served sessions — and park the request until the
+    /// pool is quiescent.
+    fn on_admin_replan(&mut self, sid: u64, want: Vec<usize>) -> Result<()> {
+        let peer = self
+            .registry
+            .get(sid)
+            .map(|e| e.conn.peer.to_string())
+            .unwrap_or_else(|| "?".to_string());
+        self.started = self.started.saturating_sub(1);
+        if !want.is_empty() && want.iter().product::<usize>() != self.lanes {
+            let err = format!(
+                "re-plan degrees {want:?} must keep the pool's {} logical lane(s); \
+                 changing the lane count needs a new pool, not a re-plan",
+                self.lanes
+            );
+            log::warn!("admin re-plan from {peer} rejected: {err}");
+            self.end_admin(sid, Some(&CtrlMsg::Failed { error: err }));
+            return Ok(());
+        }
+        log::info!(
+            "admin re-plan request from {peer}: {} (runs once the pool is quiescent)",
+            if want.is_empty() {
+                "auto, from the live pool view".to_string()
+            } else {
+                format!("degrees {want:?}")
+            }
+        );
+        self.pending_replan.push((sid, want));
+        self.try_replan()
+    }
+
+    /// Run pending admin re-plans once the pool is quiescent: no live
+    /// session besides the requesters themselves. Client sessions keep
+    /// priority — a waiting admin just sits (kept off the keepalive
+    /// sweep's radar) until they finish or evict.
+    fn try_replan(&mut self) -> Result<()> {
+        if self.pending_replan.is_empty() {
+            return Ok(());
+        }
+        let now = Instant::now();
+        let pending: Vec<u64> = self.pending_replan.iter().map(|&(s, _)| s).collect();
+        if self.registry.sids().iter().any(|s| !pending.contains(s)) {
+            for &sid in &pending {
+                self.registry.touch(sid, now);
+            }
+            return Ok(());
+        }
+        while !self.pending_replan.is_empty() {
+            let (sid, want) = self.pending_replan.remove(0);
+            let outcome = if want.is_empty() {
+                self.session.replan_auto().map(|_| ())
+            } else {
+                self.session.replan(want)
+            };
+            match outcome {
+                Ok(()) => {
+                    self.stats.replans = self.session.replans();
+                    let adopted: Vec<u32> =
+                        self.session.degrees().iter().map(|&k| k as u32).collect();
+                    log::info!(
+                        "admin re-plan done: the pool now runs degrees {:?}",
+                        self.session.degrees()
+                    );
+                    // Ack with the adopted schedule so `sar replan` can
+                    // print what the pool actually runs now (an auto
+                    // request may keep the old schedule unchanged).
+                    self.end_admin(
+                        sid,
+                        Some(&CtrlMsg::Replan {
+                            epoch: self.session.replans(),
+                            degrees: adopted,
+                        }),
+                    );
+                }
+                Err(e) => {
+                    // The request was validated on arrival, so failing
+                    // here means the re-plan barrier failed and the
+                    // pool shut down — fatal for the serve loop.
+                    let err = e.context("re-planning the serving pool");
+                    self.end_admin(sid, Some(&CtrlMsg::Failed { error: format!("{err:#}") }));
+                    self.fail_all(&err);
+                    return Err(err);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// End an admin connection: optional final reply (bounded — the
+    /// admin may already be gone), close, and free the admission slot
+    /// WITHOUT counting a served session.
+    fn end_admin(&mut self, sid: u64, reply: Option<&CtrlMsg>) {
+        self.pending_replan.retain(|&(s, _)| s != sid);
+        if let Some(entry) = self.registry.get(sid) {
+            if let Ok(s) = entry.conn.wr.lock() {
+                let _ = s.set_write_timeout(Some(FAILED_WRITE_TIMEOUT));
+            }
+            if let Some(msg) = reply {
+                let _ = send_ctrl(&entry.conn.wr, COORD, msg);
+            }
+        }
+        let Some(mut entry) = self.registry.remove(sid) else {
+            return;
+        };
+        self.sched.remove(sid);
+        self.batches.remove(&sid);
+        if let Ok(s) = entry.conn.wr.lock() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        if let Some(h) = entry.conn.reader.take() {
+            let _ = h.join();
+        }
+        log::info!("admin session {sid} ({}) closed", entry.conn.peer);
+        self.free_slot();
+    }
+
     /// Evict every session idle past the keepalive, freeing its worker
     /// state. A session with work in flight is busy, never idle — see
     /// [`evictable`].
@@ -659,6 +813,14 @@ impl Mux<'_> {
     /// it with refusals once the session budget is spent).
     fn session_slot_freed(&mut self) {
         self.stats.served += 1;
+        self.free_slot();
+    }
+
+    /// Release a live slot and promote the wait queue (or drain it with
+    /// refusals once the session budget is spent) — shared by ended
+    /// client sessions and closed admin connections, which free their
+    /// slot without counting as served.
+    fn free_slot(&mut self) {
         self.admission.release();
         loop {
             if let Some(total) = self.total {
@@ -757,6 +919,8 @@ mod tests {
     fn serve_stats_health_census_starts_empty() {
         let s = ServeStats::default();
         assert_eq!(s.health, [0, 0, 0]);
+        assert_eq!(s.replans, 0);
+        assert!(!s.stale, "no profile drove the pool: not stale");
         // Grades index the census: Normal/Suspect/Unhealthy → 0/1/2.
         assert_eq!(Health::Normal as usize, 0);
         assert_eq!(Health::Suspect as usize, 1);

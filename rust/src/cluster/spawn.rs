@@ -153,9 +153,20 @@ pub fn launch_local(bin: &Path, opts: LaunchOpts) -> Result<ClusterRun> {
 /// workers are released only after the last report.
 pub fn launch_local_jobs(bin: &Path, opts: LaunchOpts) -> Result<Vec<ClusterRun>> {
     let jobs = opts.job_list();
+    let elastic = opts.elastic;
     let (mut session, mut procs) = spawn_session(bin, opts)?;
     let mut runs = Vec::with_capacity(jobs.len());
-    for job in &jobs {
+    for (i, job) in jobs.iter().enumerate() {
+        // Elastic mode: between jobs (never before the first — the
+        // view has no evidence yet), re-plan the schedule against the
+        // live pool view so the next job runs under per-host
+        // calibrated, straggler-penalized degrees.
+        if elastic && i > 0 {
+            let planned = session
+                .replan_auto()
+                .with_context(|| format!("elastic re-plan before job `{}`", job.name))?;
+            log::info!("elastic re-plan before job `{}`: degrees {planned:?}", job.name);
+        }
         runs.push(
             session
                 .run_job(job)

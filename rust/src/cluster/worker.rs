@@ -176,6 +176,43 @@ pub fn run_worker(opts: &WorkerOpts) -> Result<()> {
         plan.replication,
     );
 
+    // On-host calibration, off the bring-up critical path: the echo
+    // microbench over the in-process mem transport fits THIS host's
+    // cost constants (CPU + memory pressure show up in setup time), and
+    // the constants travel back on the control connection so the
+    // coordinator's pool view plans against measured per-host floors
+    // instead of one offline profile. Best-effort: a host whose fit
+    // fails simply stays uncalibrated in the view.
+    {
+        let wr = ctrl_wr.clone();
+        let cal_node = plan.node;
+        std::thread::spawn(move || {
+            let sizes = [4 << 10, 64 << 10, 512 << 10];
+            let cal = crate::tune::calibrate_mem(&sizes, &crate::bench::BenchOpts::fast());
+            match cal.fitted {
+                Some(model) => {
+                    log::info!(
+                        "on-host calibration ({}): setup {:.1} us, bandwidth {:.2} GB/s",
+                        cal.transport,
+                        model.setup_secs * 1e6,
+                        model.bandwidth_bps / 1e9
+                    );
+                    let _ = send_ctrl(
+                        &wr,
+                        cal_node as usize,
+                        &CtrlMsg::Calibration {
+                            node: cal_node,
+                            transport: cal.transport,
+                            setup_secs: model.setup_secs,
+                            bandwidth_bps: model.bandwidth_bps,
+                        },
+                    );
+                }
+                None => log::warn!("on-host calibration fit failed; host stays uncalibrated"),
+            }
+        });
+    }
+
     // Heartbeat for the rest of the process lifetime; a send failure
     // means the coordinator is gone and the beat thread just stops.
     // Each beat is nonce-stamped into the pending table (timestamped
@@ -450,7 +487,7 @@ fn serve_pool(
         bail!("bad plan: node {node}, world {world}, {} addresses", plan.addrs.len());
     }
     let replication = (plan.replication.max(1)) as usize;
-    let degrees: Vec<usize> = plan.degrees.iter().map(|&k| k as usize).collect();
+    let mut degrees: Vec<usize> = plan.degrees.iter().map(|&k| k as usize).collect();
     validate_world(&degrees, replication, world)?;
     let logical = world / replication;
 
@@ -522,6 +559,42 @@ fn serve_pool(
                 }
             }
             CtrlMsg::Release { job } => engine.release(job),
+            CtrlMsg::Replan { epoch, degrees: planned } => {
+                let nd: Vec<usize> = planned.iter().map(|&k| k as usize).collect();
+                let product: usize = nd.iter().product();
+                if product != logical {
+                    // The coordinator validates before sending, so this
+                    // is a protocol violation: refuse loudly (FAILED
+                    // marks this worker dead up there) rather than
+                    // diverge from the pool's lane count.
+                    let error = format!(
+                        "REPLAN degrees {nd:?} (product {product}) do not preserve the \
+                         pool's {logical} logical lane(s)"
+                    );
+                    log::warn!("rejecting re-plan epoch {epoch}: {error}");
+                    send_ctrl(ctrl_wr, node, &CtrlMsg::Failed { error })
+                        .context("sending FAILED")?;
+                    continue;
+                }
+                if !engine.is_empty() {
+                    // Live configs hold butterflies shaped by the old
+                    // schedule; the coordinator only re-plans quiescent
+                    // pools, so any leftovers here are already orphaned.
+                    log::warn!(
+                        "re-plan with {} live collective config(s); dropping them",
+                        engine.live()
+                    );
+                    engine.clear();
+                }
+                log::info!(
+                    "re-plan epoch {epoch}: degrees {degrees:?} -> {nd:?} \
+                     (fabric untouched, no re-JOIN)"
+                );
+                degrees = nd.clone();
+                engine.set_degrees(nd);
+                send_ctrl(ctrl_wr, node, &CtrlMsg::ReplanDone { epoch, node: node as u32 })
+                    .context("sending REPLAN_DONE")?;
+            }
             CtrlMsg::Shutdown => return Ok(()),
             other => log::warn!("unexpected control message while serving: {other:?}"),
         }
@@ -668,6 +741,14 @@ impl GenericEngine {
 
     fn clear(&mut self) {
         self.configs.clear();
+    }
+
+    /// Adopt a re-planned degree schedule: every configure from here on
+    /// builds its butterfly from the new degrees. Only called with the
+    /// engine drained — already-built configs keep old-schedule scatter
+    /// state, which is exactly what a re-plan must not leave behind.
+    fn set_degrees(&mut self, degrees: Vec<usize>) {
+        self.degrees = degrees;
     }
 
     /// Build (or rebuild) the protocol handle for one streamed config

@@ -47,6 +47,7 @@ pub struct CommBuilder {
     bind: String,
     worker_bin: Option<PathBuf>,
     delay: Option<(CostModel, u64, f64)>,
+    node_delays: Vec<(usize, CostModel)>,
     pool: Option<String>,
 }
 
@@ -63,6 +64,7 @@ impl CommBuilder {
             bind: "127.0.0.1:0".to_string(),
             worker_bin: None,
             delay: None,
+            node_delays: Vec::new(),
             pool: None,
         }
     }
@@ -116,6 +118,15 @@ impl CommBuilder {
         self
     }
 
+    /// Override the injected cost model for messages sent BY `node`,
+    /// on top of [`CommBuilder::delay`]'s base model: a heterogeneous
+    /// pool with one slow host, deterministically — the elastic
+    /// control plane's re-plan bench setup.
+    pub fn delay_node(mut self, node: usize, cost: CostModel) -> Self {
+        self.node_delays.push((node, cost));
+        self
+    }
+
     pub fn exec_mode(&self) -> ExecMode {
         self.mode
     }
@@ -143,6 +154,9 @@ impl CommBuilder {
         }
         if self.delay.is_some() && self.mode != ExecMode::Threaded {
             bail!("cost-model delay injection needs the threaded mode");
+        }
+        if !self.node_delays.is_empty() && self.delay.is_none() {
+            bail!("per-node delay overrides need a base model: call .delay(...) first");
         }
         if self.pool.is_some() {
             if self.mode != ExecMode::MultiProcess {
@@ -203,6 +217,7 @@ impl CommBuilder {
                 self.send_threads,
                 index_range,
                 self.delay,
+                &self.node_delays,
             ),
             ExecMode::MultiProcess => match &self.pool {
                 Some(addr) => {
@@ -270,6 +285,13 @@ mod tests {
             .build(16)
             .unwrap_err();
         assert!(format!("{err:#}").contains("threaded"), "got {err:#}");
+        // a per-node override without a base model is a readable error
+        let err = CommBuilder::new(vec![2])
+            .mode(ExecMode::Threaded)
+            .delay_node(1, CostModel::ideal(1e9))
+            .build(16)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("base model"), "got {err:#}");
         // in-process sessions need a positive index range
         assert!(CommBuilder::new(vec![2]).build(0).is_err());
     }

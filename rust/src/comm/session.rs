@@ -209,6 +209,7 @@ impl Session {
         send_threads: usize,
         index_range: i64,
         delay: Option<(CostModel, u64, f64)>,
+        node_delays: &[(usize, CostModel)],
     ) -> Result<Session> {
         if index_range < 1 {
             bail!("index range must be >= 1 (got {index_range})");
@@ -225,10 +226,14 @@ impl Session {
             ExecMode::Threaded => {
                 let transport = match delay {
                     None => LaneTransport::Mem(MemTransport::new(m)),
-                    Some((cost, seed, scale)) => LaneTransport::Delay(
-                        DelayTransport::new(MemTransport::new(m), cost, seed)
-                            .with_time_scale(scale),
-                    ),
+                    Some((cost, seed, scale)) => {
+                        let mut t = DelayTransport::new(MemTransport::new(m), cost, seed)
+                            .with_time_scale(scale);
+                        for &(node, cost) in node_delays {
+                            t = t.with_node_cost(node, cost);
+                        }
+                        LaneTransport::Delay(t)
+                    }
                 };
                 Backend::Threaded(ThreadedLanes::spawn(&topo, Arc::new(transport), send_threads))
             }

@@ -1,0 +1,38 @@
+//! Elastic control plane: the online re-plan/re-tune loop (ROADMAP
+//! item 4).
+//!
+//! The paper derives the optimum heterogeneous-degree butterfly from
+//! measured machine constants and data statistics — but `sar tune` does
+//! that derivation exactly once, offline, and the profile goes silently
+//! stale when the pool it describes changes. This module turns the
+//! one-shot autotuner into a living part of the cluster plane, with
+//! four cooperating pieces:
+//!
+//! 1. **Drift detection** ([`view`]): the coordinator maintains a
+//!    [`PoolView`] fingerprint of the live pool — world, replication,
+//!    per-lane health grade, and per-host fitted cost constants — and
+//!    [`profile_drift`] compares it against the view baked into
+//!    `tune.toml`/the `WorkerPlan`. A drifted profile is *reported
+//!    stale* (launch report, `ServeStats`) instead of silently driving
+//!    2013-shaped degrees.
+//! 2. **Between-job re-plan** ([`replan`]): [`plan_for_view`] re-runs
+//!    the §IV-B planner against the live view, and the cluster plane's
+//!    `CtrlMsg::Replan` cycle swaps the degree schedule on a running
+//!    pool between jobs (and between serve-plane sessions at a
+//!    quiescent point) without re-JOINing a single worker — the degrees
+//!    only shape per-job butterflies, never the once-built TCP fabric.
+//! 3. **On-worker calibration**: workers run the echo microbench
+//!    host-side at bring-up and ship `CostModel::fit` constants back in
+//!    a `CtrlMsg::Calibration`; the coordinator folds them into the
+//!    view so re-planning uses each host's measured floor.
+//! 4. **Straggler-aware assignment**: the nonce'd-RTT health grades
+//!    feed the fold — a consistently-Suspect host's constants are
+//!    penalized, raising the effective packet floor and shrinking the
+//!    butterfly degrees the pool re-plans to (Yan et al.'s
+//!    shift-work-off-stragglers direction, PAPERS.md).
+
+pub mod replan;
+pub mod view;
+
+pub use replan::{plan_for_view, ReplanParams, CONSISTENT_STREAK};
+pub use view::{profile_drift, Drift, HostConstants, PoolView};

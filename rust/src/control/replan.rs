@@ -1,0 +1,201 @@
+//! Re-planning a live pool's degree schedule from its [`PoolView`].
+//!
+//! The §IV-B planner ([`crate::topology::plan_degrees_curve`]) needs a
+//! packet floor and a compression curve. Offline, `sar tune` measures
+//! both once; here the floor comes from the pool's *live* per-host
+//! calibration constants, folded worst-host-wins, with
+//! consistently-straggling hosts penalized so the schedule shifts work
+//! off them: a penalized setup cost raises the effective floor, and a
+//! higher floor makes the greedy planner pick *smaller* butterfly
+//! degrees (fewer, larger packets per layer) — exactly the adjustment
+//! the paper prescribes when per-message overhead grows.
+
+use super::view::PoolView;
+use crate::fault::Health;
+use crate::simnet::CostModel;
+use crate::topology::{plan_degrees_curve, PlannerParams};
+
+/// Consecutive RTT-straggler readouts after which a host counts as
+/// *consistently* slow and its constants are penalized in the fold.
+/// One slow heartbeat never re-shapes the pool.
+pub const CONSISTENT_STREAK: u32 = 3;
+
+/// Knobs for deriving a schedule from a live view.
+#[derive(Clone, Debug)]
+pub struct ReplanParams {
+    /// Per-node sparse payload entering layer 0, bytes.
+    pub bytes_per_node: f64,
+    /// Measured per-layer compression curve (empty = the planner's
+    /// constant default).
+    pub compression: Vec<f64>,
+    /// Efficiency fraction defining the packet floor (`sar tune` uses
+    /// 0.6).
+    pub floor_frac: f64,
+    /// Multiplier on a consistently-straggling host's setup cost before
+    /// the worst-host fold.
+    pub straggler_penalty: f64,
+    /// Model used when no live host has reported calibration constants.
+    pub fallback: CostModel,
+}
+
+impl Default for ReplanParams {
+    fn default() -> Self {
+        Self {
+            bytes_per_node: 16.0 * 1024.0 * 1024.0,
+            compression: Vec::new(),
+            floor_frac: 0.6,
+            straggler_penalty: 4.0,
+            fallback: CostModel::ec2_2013(),
+        }
+    }
+}
+
+/// Fold the view's live per-host constants into one planning model:
+/// worst setup and worst bandwidth across hosts (a butterfly layer is
+/// only as fast as its slowest lane), with consistently-straggling
+/// hosts' setup costs inflated by the penalty first. Falls back to
+/// `params.fallback` when no live host has calibrated.
+pub fn folded_model(view: &PoolView, params: &ReplanParams) -> CostModel {
+    let mut folded: Option<CostModel> = None;
+    for (w, model) in view.live_models() {
+        let consistent = view.straggler_streaks.get(w).copied().unwrap_or(0)
+            >= CONSISTENT_STREAK
+            || view.grades.get(w).copied().unwrap_or(Health::Normal) == Health::Suspect;
+        let setup =
+            if consistent { model.setup_secs * params.straggler_penalty } else { model.setup_secs };
+        let f = folded.get_or_insert(CostModel {
+            setup_secs: setup,
+            bandwidth_bps: model.bandwidth_bps,
+            outlier_prob: 0.0,
+            outlier_mean_secs: 0.0,
+        });
+        f.setup_secs = f.setup_secs.max(setup);
+        f.bandwidth_bps = f.bandwidth_bps.min(model.bandwidth_bps);
+    }
+    folded.unwrap_or(params.fallback)
+}
+
+/// Derive the degree schedule the live pool should run: fold the
+/// per-host constants, turn them into a packet floor, and run the
+/// greedy §IV-B planner over the pool's logical lanes. The product
+/// always equals `view.logical()`, so adopting the result never needs
+/// a re-JOIN.
+pub fn plan_for_view(view: &PoolView, params: &ReplanParams) -> Vec<usize> {
+    let model = folded_model(view, params);
+    let planner = PlannerParams {
+        bytes_per_node: params.bytes_per_node,
+        packet_floor: model.floor_bytes(params.floor_frac),
+        compression: 0.7,
+    };
+    plan_degrees_curve(view.logical(), &planner, &params.compression)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::control::view::HostConstants;
+
+    fn host(setup: f64, bandwidth: f64) -> Option<HostConstants> {
+        Some(HostConstants {
+            transport: "mem".into(),
+            model: CostModel {
+                setup_secs: setup,
+                bandwidth_bps: bandwidth,
+                outlier_prob: 0.0,
+                outlier_mean_secs: 0.0,
+            },
+        })
+    }
+
+    fn view4() -> PoolView {
+        PoolView {
+            world: 4,
+            replication: 1,
+            degrees: vec![2, 2],
+            grades: vec![Health::Normal; 4],
+            straggler_streaks: vec![0; 4],
+            host_constants: vec![None; 4],
+            transport: "tcp".into(),
+        }
+    }
+
+    /// The fold is worst-host-wins on both constants, and the fallback
+    /// fires only when nobody has calibrated.
+    #[test]
+    fn fold_takes_the_worst_live_host() {
+        let params = ReplanParams::default();
+        let mut view = view4();
+        assert_eq!(folded_model(&view, &params), params.fallback);
+        view.host_constants[0] = host(1e-4, 2e9);
+        view.host_constants[2] = host(5e-4, 1e9);
+        let m = folded_model(&view, &params);
+        assert_eq!(m.setup_secs, 5e-4);
+        assert_eq!(m.bandwidth_bps, 1e9);
+        // An Unhealthy host's constants drop out of the fold.
+        view.grades[2] = Health::Unhealthy;
+        let m = folded_model(&view, &params);
+        assert_eq!(m.setup_secs, 1e-4);
+        assert_eq!(m.bandwidth_bps, 2e9);
+    }
+
+    /// The headline behavior: a consistently-straggling host raises the
+    /// folded floor and the planner answers with *smaller* degrees,
+    /// while a single slow readout (streak below the threshold) changes
+    /// nothing.
+    #[test]
+    fn consistent_straggler_shrinks_the_planned_degrees() {
+        // 4 MiB/node, floor ~1 MiB healthy: bytes/4 ≥ floor → plan [4].
+        let params = ReplanParams {
+            bytes_per_node: 4.0 * 1024.0 * 1024.0,
+            straggler_penalty: 4.0,
+            ..ReplanParams::default()
+        };
+        let mut view = view4();
+        for c in view.host_constants.iter_mut() {
+            // floor(0.6) = setup · bw · 1.5 ≈ 0.98 MiB
+            *c = host(6.5e-4, 1.05e9);
+        }
+        assert_eq!(plan_for_view(&view, &params), vec![4]);
+        // One slow heartbeat: streak 1 < CONSISTENT_STREAK, same plan.
+        view.straggler_streaks[3] = 1;
+        assert_eq!(plan_for_view(&view, &params), vec![4]);
+        // Consistent straggler: 4x setup → floor ~3.9 MiB; bytes/4 and
+        // bytes/2 both violate it → binary butterfly.
+        view.straggler_streaks[3] = CONSISTENT_STREAK;
+        let d = plan_for_view(&view, &params);
+        assert_eq!(d, vec![2, 2], "penalized floor must shrink the degrees");
+        assert_eq!(d.iter().product::<usize>(), view.logical(), "no re-JOIN: lanes preserved");
+    }
+
+    /// A Suspect grade (the detector's own verdict) penalizes the host
+    /// even before the streak counter accumulates.
+    #[test]
+    fn suspect_grade_is_penalized_like_a_streak() {
+        let params = ReplanParams::default();
+        let mut view = view4();
+        view.host_constants[1] = host(1e-4, 1e9);
+        view.grades[1] = Health::Suspect;
+        let m = folded_model(&view, &params);
+        assert_eq!(m.setup_secs, 4e-4, "suspect host's setup must be penalized");
+    }
+
+    /// Replication plans over logical lanes, not physical workers.
+    #[test]
+    fn replicated_view_plans_logical_lanes() {
+        let view = PoolView {
+            world: 8,
+            replication: 2,
+            degrees: vec![2, 2],
+            grades: vec![Health::Normal; 8],
+            straggler_streaks: vec![0; 8],
+            host_constants: vec![None; 8],
+            transport: "tcp".into(),
+        };
+        let params = ReplanParams {
+            bytes_per_node: 256.0 * 1024.0 * 1024.0,
+            ..ReplanParams::default()
+        };
+        let d = plan_for_view(&view, &params);
+        assert_eq!(d.iter().product::<usize>(), 4, "8 workers / 2 replicas = 4 lanes");
+    }
+}

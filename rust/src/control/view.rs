@@ -1,0 +1,316 @@
+//! The coordinator's live fingerprint of a worker pool, and drift
+//! detection against the tuning profile that planned it.
+
+use crate::fault::Health;
+use crate::simnet::CostModel;
+use crate::tune::TuneProfile;
+use std::fmt;
+
+/// One host's measured cost constants, as reported by the worker's
+/// on-host calibration (`CtrlMsg::Calibration`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostConstants {
+    /// Transport the worker calibrated on (`mem` for the on-host echo
+    /// microbench).
+    pub transport: String,
+    pub model: CostModel,
+}
+
+/// A live snapshot of a running pool: everything the elastic control
+/// loop plans against. Built by the coordinator (`Session::pool_view`)
+/// from its own plan, the failure detector's grades, the RTT straggler
+/// streaks, and the per-host calibration reports.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PoolView {
+    /// Physical worker count (`logical × replication`).
+    pub world: usize,
+    pub replication: usize,
+    /// The degree schedule the pool currently runs.
+    pub degrees: Vec<usize>,
+    /// Graded health, one per physical worker.
+    pub grades: Vec<Health>,
+    /// Consecutive RTT-straggler readouts, one per physical worker
+    /// (reset to 0 whenever the readout names someone else).
+    pub straggler_streaks: Vec<u32>,
+    /// Per-host calibration constants (`None` until the worker's
+    /// background calibration reports, or when its fit failed).
+    pub host_constants: Vec<Option<HostConstants>>,
+    /// Wire the pool's data plane runs on (`tcp` for multi-process
+    /// pools, `mem` for in-process drivers).
+    pub transport: String,
+}
+
+impl PoolView {
+    /// Logical lane count — the invariant a re-plan must preserve.
+    pub fn logical(&self) -> usize {
+        self.world / self.replication.max(1)
+    }
+
+    /// How many hosts have reported calibration constants.
+    pub fn calibrated_hosts(&self) -> usize {
+        self.host_constants.iter().filter(|c| c.is_some()).count()
+    }
+
+    /// Worst measured floor across live calibrated hosts at `frac`
+    /// efficiency — the number the §IV-B planner needs. `None` until at
+    /// least one live host has reported.
+    pub fn worst_live_floor(&self, frac: f64) -> Option<f64> {
+        self.live_models()
+            .map(|(_, m)| m.floor_bytes(frac))
+            .fold(None, |acc, f| Some(acc.map_or(f, |a: f64| a.max(f))))
+    }
+
+    /// Calibrated cost models of workers not graded Unhealthy.
+    pub fn live_models(&self) -> impl Iterator<Item = (usize, CostModel)> + '_ {
+        self.host_constants.iter().enumerate().filter_map(|(w, c)| {
+            let c = c.as_ref()?;
+            if self.grades.get(w).copied().unwrap_or(Health::Normal) == Health::Unhealthy {
+                None
+            } else {
+                Some((w, c.model))
+            }
+        })
+    }
+}
+
+impl fmt::Display for PoolView {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let sched =
+            self.degrees.iter().map(|k| k.to_string()).collect::<Vec<_>>().join("x");
+        let degraded = self.grades.iter().filter(|&&g| g != Health::Normal).count();
+        write!(
+            f,
+            "world {} (x{} replication), degrees {sched}, {} degraded, {}/{} calibrated",
+            self.world,
+            self.replication,
+            degraded,
+            self.calibrated_hosts(),
+            self.world
+        )
+    }
+}
+
+/// One way the live pool has drifted from the view a tuning profile was
+/// derived under. A non-empty drift list marks the profile stale.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Drift {
+    /// The profile plans a different logical world than the pool runs.
+    World { profile: usize, live: usize },
+    /// The profile's constants were calibrated on a different transport
+    /// than the pool's data plane.
+    Transport { profile: String, live: String },
+    /// Workers have degraded past Normal since the profile was fitted.
+    Health { suspect: usize, unhealthy: usize },
+    /// The worst live measured packet floor disagrees with the
+    /// profile's by more than the tolerated ratio.
+    PacketFloor { profile: f64, live: f64 },
+}
+
+impl fmt::Display for Drift {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Drift::World { profile, live } => {
+                write!(f, "world changed (profile {profile}, live {live})")
+            }
+            Drift::Transport { profile, live } => {
+                write!(f, "transport changed (profile `{profile}`, pool `{live}`)")
+            }
+            Drift::Health { suspect, unhealthy } => {
+                write!(f, "{suspect} suspect / {unhealthy} unhealthy workers")
+            }
+            Drift::PacketFloor { profile, live } => {
+                write!(f, "packet floor drifted (profile {profile:.0} B, measured {live:.0} B)")
+            }
+        }
+    }
+}
+
+/// Allowed ratio between the profile's packet floor and the worst live
+/// measured one before the profile counts as drifted. Generous: host
+/// microbenches are noisy, and a factor-of-a-few disagreement barely
+/// moves the greedy planner.
+pub const FLOOR_DRIFT_RATIO: f64 = 8.0;
+
+/// Compare the live pool view against the view a profile was tuned
+/// under. Empty = fresh; each entry is one independent staleness
+/// reason, printable as the launch report's staleness line.
+pub fn profile_drift(profile: &TuneProfile, view: &PoolView) -> Vec<Drift> {
+    let mut drifts = Vec::new();
+    if profile.world != view.logical() {
+        drifts.push(Drift::World { profile: profile.world, live: view.logical() });
+    }
+    // An unrecorded transport (legacy profile) cannot prove a mismatch;
+    // the hard mem-on-tcp case is the one the tune satellite rejects.
+    let compatible = match (profile.transport.as_str(), view.transport.as_str()) {
+        ("", _) => true,
+        ("tcp-loopback", "tcp") | ("mem", "mem") => true,
+        (p, l) => p == l,
+    };
+    if !compatible {
+        drifts.push(Drift::Transport {
+            profile: profile.transport.clone(),
+            live: view.transport.clone(),
+        });
+    }
+    let suspect = view.grades.iter().filter(|&&g| g == Health::Suspect).count();
+    let unhealthy = view.grades.iter().filter(|&&g| g == Health::Unhealthy).count();
+    if suspect + unhealthy > 0 {
+        drifts.push(Drift::Health { suspect, unhealthy });
+    }
+    if let Some(live_floor) = view.worst_live_floor(0.6) {
+        let ratio = live_floor / profile.packet_floor.max(f64::MIN_POSITIVE);
+        if !(1.0 / FLOOR_DRIFT_RATIO..=FLOOR_DRIFT_RATIO).contains(&ratio) {
+            drifts.push(Drift::PacketFloor { profile: profile.packet_floor, live: live_floor });
+        }
+    }
+    drifts
+}
+
+/// Render a drift list as the one-line staleness verdict the launch
+/// report and serve exit line print.
+pub fn drift_line(drifts: &[Drift]) -> String {
+    if drifts.is_empty() {
+        "tune profile fresh (matches live pool view)".to_string()
+    } else {
+        let reasons = drifts.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("; ");
+        format!("tune profile STALE: {reasons}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tune::profile::TUNE_FORMAT;
+
+    fn fresh_profile() -> TuneProfile {
+        TuneProfile {
+            format: TUNE_FORMAT,
+            world: 4,
+            degrees: vec![2, 2],
+            cost: CostModel {
+                setup_secs: 1e-4,
+                bandwidth_bps: 1e9,
+                outlier_prob: 0.0,
+                outlier_mean_secs: 0.0,
+            },
+            transport: "tcp-loopback".into(),
+            packet_floor: 150_000.0,
+            compression: vec![0.7],
+            dataset: "twitter".into(),
+            scale: 0.01,
+            seed: 42,
+        }
+    }
+
+    fn matching_view() -> PoolView {
+        PoolView {
+            world: 4,
+            replication: 1,
+            degrees: vec![2, 2],
+            grades: vec![Health::Normal; 4],
+            straggler_streaks: vec![0; 4],
+            host_constants: vec![None; 4],
+            transport: "tcp".into(),
+        }
+    }
+
+    #[test]
+    fn matching_view_is_fresh() {
+        let drifts = profile_drift(&fresh_profile(), &matching_view());
+        assert_eq!(drifts, Vec::new());
+        assert!(drift_line(&drifts).contains("fresh"));
+    }
+
+    #[test]
+    fn world_and_transport_drift_are_detected() {
+        let mut view = matching_view();
+        view.world = 8;
+        view.replication = 1;
+        let drifts = profile_drift(&fresh_profile(), &view);
+        assert_eq!(drifts, vec![Drift::World { profile: 4, live: 8 }]);
+        assert!(drift_line(&drifts).contains("STALE"), "{}", drift_line(&drifts));
+
+        // Replication does not change the logical world the profile
+        // plans: 4 lanes x 2 replicas still matches a world-4 profile.
+        let mut replicated = matching_view();
+        replicated.world = 8;
+        replicated.replication = 2;
+        replicated.grades = vec![Health::Normal; 8];
+        replicated.straggler_streaks = vec![0; 8];
+        replicated.host_constants = vec![None; 8];
+        assert_eq!(profile_drift(&fresh_profile(), &replicated), Vec::new());
+
+        let mem = TuneProfile { transport: "mem".into(), ..fresh_profile() };
+        let drifts = profile_drift(&mem, &matching_view());
+        assert_eq!(
+            drifts,
+            vec![Drift::Transport { profile: "mem".into(), live: "tcp".into() }]
+        );
+        // Legacy profiles (no transport recorded) cannot prove mismatch.
+        let legacy = TuneProfile { transport: String::new(), ..fresh_profile() };
+        assert_eq!(profile_drift(&legacy, &matching_view()), Vec::new());
+    }
+
+    #[test]
+    fn degraded_health_marks_the_profile_stale() {
+        let mut view = matching_view();
+        view.grades[1] = Health::Suspect;
+        view.grades[3] = Health::Unhealthy;
+        let drifts = profile_drift(&fresh_profile(), &view);
+        assert_eq!(drifts, vec![Drift::Health { suspect: 1, unhealthy: 1 }]);
+        let line = drift_line(&drifts);
+        assert!(line.contains("1 suspect") && line.contains("1 unhealthy"), "{line}");
+    }
+
+    #[test]
+    fn measured_floor_drift_marks_the_profile_stale() {
+        let mut view = matching_view();
+        // Host 2 measured a floor ~67x the profile's: drifted.
+        view.host_constants[2] = Some(HostConstants {
+            transport: "mem".into(),
+            model: CostModel {
+                setup_secs: 1e-2,
+                bandwidth_bps: 1e9,
+                ..CostModel::ideal(1e9)
+            },
+        });
+        let drifts = profile_drift(&fresh_profile(), &view);
+        assert_eq!(drifts.len(), 1, "{drifts:?}");
+        assert!(matches!(drifts[0], Drift::PacketFloor { .. }), "{drifts:?}");
+        // A floor within the tolerance band is NOT drift.
+        view.host_constants[2] = Some(HostConstants {
+            transport: "mem".into(),
+            model: CostModel {
+                setup_secs: 1e-4,
+                bandwidth_bps: 1e9,
+                ..CostModel::ideal(1e9)
+            },
+        });
+        assert_eq!(profile_drift(&fresh_profile(), &view), Vec::new());
+        // ...and an Unhealthy host's constants are ignored entirely.
+        view.host_constants[2] = Some(HostConstants {
+            transport: "mem".into(),
+            model: CostModel {
+                setup_secs: 10.0,
+                bandwidth_bps: 1e9,
+                ..CostModel::ideal(1e9)
+            },
+        });
+        view.grades[2] = Health::Unhealthy;
+        let drifts = profile_drift(&fresh_profile(), &view);
+        assert_eq!(drifts, vec![Drift::Health { suspect: 0, unhealthy: 1 }]);
+    }
+
+    #[test]
+    fn view_accessors() {
+        let mut view = matching_view();
+        view.host_constants[0] = Some(HostConstants {
+            transport: "mem".into(),
+            model: CostModel::ideal(1e9),
+        });
+        assert_eq!(view.logical(), 4);
+        assert_eq!(view.calibrated_hosts(), 1);
+        let line = format!("{view}");
+        assert!(line.contains("world 4") && line.contains("1/4 calibrated"), "{line}");
+    }
+}

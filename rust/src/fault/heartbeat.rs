@@ -46,6 +46,11 @@ struct WorkerState {
     /// Externally-fed soft signal: the nonce'd RTT readout flagged this
     /// worker as a straggler. Reversible, like staleness.
     straggler: bool,
+    /// Consecutive readouts that flagged this worker (reset to 0 when a
+    /// readout names someone else or nobody). The elastic re-planner
+    /// penalizes only *consistent* stragglers, so one slow heartbeat
+    /// never re-shapes the pool.
+    straggler_streak: u32,
 }
 
 /// Tracks per-worker liveness from heartbeats and connection EOFs.
@@ -62,7 +67,12 @@ impl FailureDetector {
             timeout,
             workers: Mutex::new(
                 (0..workers)
-                    .map(|_| WorkerState { last_beat: now, dead: false, straggler: false })
+                    .map(|_| WorkerState {
+                        last_beat: now,
+                        dead: false,
+                        straggler: false,
+                        straggler_streak: 0,
+                    })
                     .collect(),
             ),
         }
@@ -114,7 +124,19 @@ impl FailureDetector {
         let mut w = self.workers.lock().expect("detector poisoned");
         for (i, s) in w.iter_mut().enumerate() {
             s.straggler = straggler == Some(i);
+            if s.straggler {
+                s.straggler_streak = s.straggler_streak.saturating_add(1);
+            } else {
+                s.straggler_streak = 0;
+            }
         }
+    }
+
+    /// Consecutive-straggler streaks, index-aligned with workers. Feeds
+    /// the elastic re-planner's consistently-slow penalty.
+    pub fn streaks(&self) -> Vec<u32> {
+        let w = self.workers.lock().expect("detector poisoned");
+        w.iter().map(|s| s.straggler_streak).collect()
     }
 
     /// Graded health verdict for one worker. `Unhealthy` = hard
@@ -341,5 +363,25 @@ mod tests {
         assert_eq!(d.grades(), vec![Health::Normal; 3]);
         // Ordering supports worst-of aggregation.
         assert!(Health::Normal < Health::Suspect && Health::Suspect < Health::Unhealthy);
+    }
+
+    /// Streaks count *consecutive* flags only: repeated readouts naming
+    /// the same worker accumulate, and any readout naming someone else
+    /// (or nobody) resets the count — so the re-planner's
+    /// consistently-slow penalty cannot fire off scattered one-offs.
+    #[test]
+    fn straggler_streaks_accumulate_and_reset() {
+        let d = FailureDetector::new(3, Duration::from_secs(60));
+        assert_eq!(d.streaks(), vec![0, 0, 0]);
+        d.set_straggler(Some(1));
+        d.set_straggler(Some(1));
+        d.set_straggler(Some(1));
+        assert_eq!(d.streaks(), vec![0, 3, 0]);
+        // A readout naming a different worker resets 1 and starts 2.
+        d.set_straggler(Some(2));
+        assert_eq!(d.streaks(), vec![0, 0, 1]);
+        // A clean readout resets everyone.
+        d.set_straggler(None);
+        assert_eq!(d.streaks(), vec![0, 0, 0]);
     }
 }

@@ -28,6 +28,7 @@ pub mod cli;
 pub mod cluster;
 pub mod comm;
 pub mod config;
+pub mod control;
 pub mod coordinator;
 pub mod fault;
 pub mod graph;

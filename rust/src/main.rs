@@ -49,6 +49,8 @@ fn dispatch(args: &Args) -> Result<()> {
         "launch" => cmd_launch(args),
         "serve" => cmd_serve(args),
         "serve-bench" => cmd_serve_bench(args),
+        "replan" => cmd_replan(args),
+        "replan-bench" => cmd_replan_bench(args),
         "config-check" => cmd_config_check(args),
         other => bail!("unknown command `{other}`\n\n{USAGE}"),
     }
@@ -353,7 +355,15 @@ fn cmd_pagerank(args: &Args) -> Result<()> {
         cfg.tune_profile = Some(p.to_string());
     }
     if let Some(p) = cfg.tune_profile.clone() {
-        let prof = tune::apply_profile(&mut cfg, Path::new(&p))?;
+        // A distributed run consumes the profile over TCP, so its
+        // calibration transport must be compatible; in-process modes
+        // keep the unchecked path (a TCP-calibrated profile in-process
+        // is merely pessimistic, not wrong).
+        let prof = if mode == ExecMode::MultiProcess {
+            tune::apply_profile_checked(&mut cfg, Path::new(&p), "tcp")?
+        } else {
+            tune::apply_profile(&mut cfg, Path::new(&p))?
+        };
         log::info!("applied tuning profile {p}: schedule {:?}", prof.degrees);
     }
     // ONE source of truth for the graph: every mode's driver derives it
@@ -601,7 +611,7 @@ fn cmd_launch(args: &Args) -> Result<()> {
         "launch",
         &[
             "jobs", "workers", "degrees", "replication", "iters", "dataset", "scale", "seed",
-            "threads", "bind", "file", "no-spawn", "bin", "shards", "tune-profile",
+            "threads", "bind", "file", "no-spawn", "bin", "shards", "tune-profile", "elastic",
         ],
     )?;
     let mut cfg = match args.flag("file") {
@@ -640,14 +650,19 @@ fn cmd_launch(args: &Args) -> Result<()> {
         );
     }
     // Applied after every CLI override so the digest-verified profile's
-    // schedule + cost model are what actually reach the WorkerPlan.
+    // schedule + cost model are what actually reach the WorkerPlan. The
+    // transport gate rejects mem-calibrated constants driving this TCP
+    // pool; the applied profile rides into LaunchOpts so the live pool
+    // can report it stale when its view drifts.
+    let mut applied_profile = None;
     if let Some(p) = cfg.tune_profile.clone() {
-        let prof = tune::apply_profile(&mut cfg, Path::new(&p))?;
+        let prof = tune::apply_profile_checked(&mut cfg, Path::new(&p), "tcp")?;
         println!(
             "tuned schedule {:?} from {p} (digest {:016x})",
             prof.degrees,
             prof.digest()
         );
+        applied_profile = Some(prof);
     }
 
     // CLI overrides may contradict a worker count pinned in the file;
@@ -657,6 +672,8 @@ fn cmd_launch(args: &Args) -> Result<()> {
     }
 
     let mut opts = LaunchOpts::from_run_config(&cfg);
+    opts.tune = applied_profile;
+    opts.elastic = args.has_switch("elastic");
     if let Some(bind) = args.flag("bind") {
         opts.bind = bind.to_string();
     }
@@ -688,9 +705,16 @@ fn cmd_launch(args: &Args) -> Result<()> {
         };
         println!("waiting for {world} workers; start each with:");
         println!("  sar worker --coordinator {shown}");
+        let elastic = args.has_switch("elastic");
         let mut session = coord.accept(opts)?;
         let mut runs = Vec::with_capacity(jobs.len());
-        for job in &jobs {
+        for (i, job) in jobs.iter().enumerate() {
+            if elastic && i > 0 {
+                let planned = session
+                    .replan_auto()
+                    .with_context(|| format!("elastic re-plan before job `{}`", job.name))?;
+                println!("elastic re-plan before `{}`: degrees {planned:?}", job.name);
+            }
             runs.push(session.run_job(job)?);
         }
         session.shutdown();
@@ -715,11 +739,13 @@ fn cmd_launch(args: &Args) -> Result<()> {
 /// multi-job output is attributable.
 fn print_launch_run(cfg: &RunConfig, run: &ClusterRun) {
     let tag = &run.job;
+    // The run's own schedule, not the launch flags': an elastic pool
+    // may have re-planned between jobs.
     println!(
         "[{tag}] {} iters on {} workers ({:?}, replication {}) in {}",
         cfg.iters,
         run.world,
-        cfg.degrees,
+        run.degrees,
         run.replication,
         human_duration(run.wall_secs)
     );
@@ -763,6 +789,12 @@ fn print_launch_run(cfg: &RunConfig, run: &ClusterRun) {
             }
         }
     }
+    // Live-vs-profile drift: when a tuning profile drove this pool, say
+    // whether the live view still matches it (fresh) or has drifted
+    // (STALE, with every reason) — never silently apply stale tuning.
+    if let Some(line) = &run.staleness {
+        println!("[{tag}]   {line}");
+    }
     if !run.dead.is_empty() {
         println!("[{tag}]   dead workers (masked by replication): {:?}", run.dead);
     }
@@ -793,16 +825,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "serve",
         &[
             "degrees", "replication", "threads", "bind", "client-bind", "sessions",
-            "queue", "keepalive-secs", "total-sessions", "bin", "no-spawn",
+            "queue", "keepalive-secs", "total-sessions", "bin", "no-spawn", "tune-profile",
         ],
     )?;
-    let opts = LaunchOpts {
+    let mut opts = LaunchOpts {
         degrees: args.degrees_flag("degrees", &[2, 2])?,
         replication: args.usize_flag("replication", 1)?,
         send_threads: args.usize_flag("threads", 4)?,
         bind: args.flag("bind").unwrap_or("127.0.0.1:0").to_string(),
         ..LaunchOpts::default()
     };
+    if let Some(p) = args.flag("tune-profile") {
+        if args.flag("degrees").is_some() {
+            bail!("--degrees and --tune-profile both choose the schedule; pass only one");
+        }
+        // The profile's transport gate runs against TCP (this is a real
+        // pool); its schedule becomes the pool's, and the profile rides
+        // into the session so `sar serve` can report it stale when the
+        // live view drifts.
+        let mut rc = RunConfig { degrees: opts.degrees.clone(), ..RunConfig::default() };
+        let prof = tune::apply_profile_checked(&mut rc, Path::new(p), "tcp")?;
+        println!("tuned schedule {:?} from {p} (digest {:016x})", prof.degrees, prof.digest());
+        opts.degrees = rc.degrees;
+        opts.tune = Some(prof);
+    }
     let serve_opts = cluster::ServeOpts {
         max_live: args.usize_flag("sessions", cluster::ServeOpts::default().max_live)?,
         queue_depth: args.usize_flag("queue", cluster::ServeOpts::default().queue_depth)?,
@@ -853,15 +899,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let stats = stats?;
     println!(
-        "served {} client session(s) (peak {} concurrent, {} evicted, {} rejected); \
-         worker health {} normal / {} suspect / {} unhealthy; pool released",
+        "served {} client session(s) (peak {} concurrent, {} evicted, {} rejected, \
+         {} re-plan(s)); worker health {} normal / {} suspect / {} unhealthy{}; pool released",
         stats.served,
         stats.peak_live,
         stats.evicted,
         stats.rejected,
+        stats.replans,
         stats.health[0],
         stats.health[1],
-        stats.health[2]
+        stats.health[2],
+        if stats.stale { "; tune profile STALE against the live view" } else { "" }
     );
     Ok(())
 }
@@ -1080,6 +1128,211 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     }
     std::fs::write(&out_path, json)
         .with_context(|| format!("writing {}", out_path.display()))?;
+    println!("wrote {}", out_path.display());
+    Ok(())
+}
+
+/// `sar replan`: ask a serving pool to re-plan its degree schedule in
+/// place (the elastic control plane's admin door). Connects to the
+/// pool's client port, absorbs the Plan handshake, sends the REPLAN
+/// request, and prints the schedule the pool adopted. The serve plane
+/// defers the re-plan to a quiescent point, so this can wait behind
+/// live client sessions.
+fn cmd_replan(args: &Args) -> Result<()> {
+    use sparse_allreduce::cluster::proto::{recv_ctrl, send_ctrl, CtrlMsg, CLIENT};
+    args.expect_known("replan", &["pool", "degrees"])?;
+    let addr = args
+        .flag("pool")
+        .ok_or_else(|| anyhow::anyhow!("--pool required\n\n{}", usage_for("replan").unwrap()))?;
+    let want: Vec<u32> = match args.flag("degrees") {
+        Some(v) => sparse_allreduce::cli::parse_degrees(v)?.iter().map(|&k| k as u32).collect(),
+        None => Vec::new(),
+    };
+    let stream = std::net::TcpStream::connect(addr)
+        .with_context(|| format!("connecting to the pool at {addr}"))?;
+    stream.set_nodelay(true)?;
+    // The re-plan runs once the pool is quiescent; wait generously, but
+    // never forever.
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(120)))?;
+    let mut rd = stream.try_clone().context("cloning the pool connection")?;
+    let wr = std::sync::Mutex::new(stream);
+    let (_, handshake) = recv_ctrl(&mut rd).context("reading the pool's handshake")?;
+    let current = match handshake {
+        CtrlMsg::Plan(plan) => plan.degrees,
+        CtrlMsg::Failed { error } => bail!("pool at {addr} refused the connection: {error}"),
+        other => bail!("unexpected handshake frame from the pool: {other:?}"),
+    };
+    println!(
+        "pool at {addr} runs degrees {current:?}; requesting {}",
+        if want.is_empty() {
+            "an automatic re-plan from the live pool view".to_string()
+        } else {
+            format!("degrees {want:?}")
+        }
+    );
+    send_ctrl(&wr, CLIENT, &CtrlMsg::Replan { epoch: 0, degrees: want })
+        .context("sending the REPLAN request")?;
+    match recv_ctrl(&mut rd).context("waiting for the pool's re-plan answer")?.1 {
+        CtrlMsg::Replan { epoch, degrees } => {
+            println!(
+                "pool re-planned (re-plan #{epoch}): now runs degrees {:?}",
+                degrees.iter().map(|&k| k as usize).collect::<Vec<_>>()
+            );
+            Ok(())
+        }
+        CtrlMsg::Failed { error } => bail!("pool rejected the re-plan: {error}"),
+        other => bail!("unexpected re-plan answer from the pool: {other:?}"),
+    }
+}
+
+/// One re-plan-bench case: a threaded in-process session over the given
+/// schedule, optionally with the simnet cost model injected and one
+/// skewed (slow) sender, running `rounds` SumF32 allreduces. Returns
+/// the fold-everything checksum and the per-round wall-time summary.
+fn replan_bench_run(
+    degrees: &[usize],
+    skew: Option<(sparse_allreduce::simnet::CostModel, usize, sparse_allreduce::simnet::CostModel)>,
+    range: i64,
+    rounds: usize,
+) -> Result<(f64, sparse_allreduce::util::Summary)> {
+    let mut b = CommBuilder::new(degrees.to_vec()).send_threads(1);
+    if let Some((base, slow_node, slow)) = skew {
+        b = b.mode(ExecMode::Threaded).delay(base, 7, 1.0).delay_node(slow_node, slow);
+    }
+    let mut sess = b.build(range)?;
+    let world: usize = degrees.iter().product();
+    let (out, inb) = serve_bench_patterns(world, range, 24, 5);
+    let mut cfg = sess.configure(out.clone(), inb)?;
+    let mut sum = 0f64;
+    let mut samples = Vec::with_capacity(rounds);
+    for round in 0..rounds {
+        let mut vals: Vec<Vec<f32>> = out
+            .iter()
+            .enumerate()
+            .map(|(n, s)| {
+                (0..s.len())
+                    .map(|i| ((n * 31 + i * 7 + round * 3 + 5) % 17) as f32 * 0.25)
+                    .collect()
+            })
+            .collect();
+        let t = std::time::Instant::now();
+        cfg.allreduce::<sparse_allreduce::sparse::SumF32>(&mut vals)?;
+        samples.push(t.elapsed().as_secs_f64());
+        for lane in &vals {
+            for v in lane {
+                sum += f64::from(*v);
+            }
+        }
+    }
+    Ok((sum, sparse_allreduce::util::Summary::of(&samples)))
+}
+
+/// `sar replan-bench`: the elastic control plane's headline — per-round
+/// allreduce time on a pool with one consistently straggling host,
+/// under the stale uniform schedule vs the schedule re-planned from the
+/// live view (the straggler-penalized cost fold picks smaller
+/// degrees). Deterministic: the skew is a simnet cost-model override on
+/// one sender, and both cases' checksums must match the lockstep oracle
+/// before any timing is recorded. Emits the `BENCH_8.json` row.
+fn cmd_replan_bench(args: &Args) -> Result<()> {
+    use sparse_allreduce::control::{
+        plan_for_view, HostConstants, PoolView, ReplanParams, CONSISTENT_STREAK,
+    };
+    use sparse_allreduce::fault::Health;
+    use sparse_allreduce::simnet::CostModel;
+
+    args.expect_known("replan-bench", &["lanes", "rounds", "mbytes", "out", "fast"])?;
+    let lanes = args.usize_flag("lanes", 4)?.max(2);
+    let fast = args.has_switch("fast");
+    let rounds = args.usize_flag("rounds", if fast { 6 } else { 12 })?.max(1);
+    let mbytes = args.f64_flag("mbytes", 4.0)?;
+    let out_path = PathBuf::from(args.flag("out").unwrap_or("BENCH_8.json"));
+    let range: i64 = 4096;
+
+    // The modelled pool: every host calibrated alike, but the last one
+    // is a consistent straggler (its RTT grade flagged it repeatedly).
+    let slow_node = lanes - 1;
+    let host = CostModel {
+        setup_secs: 6.5e-4,
+        bandwidth_bps: 1.05e9,
+        outlier_prob: 0.0,
+        outlier_mean_secs: 0.0,
+    };
+    let constants: Vec<Option<HostConstants>> = (0..lanes)
+        .map(|_| Some(HostConstants { transport: "mem".to_string(), model: host }))
+        .collect();
+    let view = |streak: u32, grade: Health| PoolView {
+        world: lanes,
+        replication: 1,
+        degrees: vec![lanes],
+        grades: (0..lanes).map(|w| if w == slow_node { grade } else { Health::Normal }).collect(),
+        straggler_streaks: (0..lanes).map(|w| if w == slow_node { streak } else { 0 }).collect(),
+        host_constants: constants.clone(),
+        transport: "mem".to_string(),
+    };
+    let params = ReplanParams {
+        bytes_per_node: mbytes * 1024.0 * 1024.0,
+        ..ReplanParams::default()
+    };
+    // "Stale" = what a profile tuned before the straggler surfaced
+    // would still prescribe; "re-planned" = the live view's verdict.
+    let stale = plan_for_view(&view(0, Health::Normal), &params);
+    let replanned = plan_for_view(&view(CONSISTENT_STREAK, Health::Suspect), &params);
+    if stale == replanned {
+        log::warn!(
+            "the straggler penalty did not change the schedule ({stale:?}); the two \
+             bench cases coincide"
+        );
+    }
+    // The skewed wire: the straggler's sends pay a much larger setup
+    // cost than its peers' — exactly what its calibration would show.
+    let skew = CostModel { setup_secs: host.setup_secs * 8.0, ..host };
+    println!(
+        "replan-bench: {lanes} lanes, {rounds} rounds over [0, {range}); node {slow_node} \
+         straggles (setup x8); stale schedule {stale:?} vs re-planned {replanned:?}"
+    );
+    let (want, _) = replan_bench_run(&stale, None, range, rounds)?;
+    let (sum_stale, t_stale) =
+        replan_bench_run(&stale, Some((host, slow_node, skew)), range, rounds)?;
+    let (sum_replan, t_replan) =
+        replan_bench_run(&replanned, Some((host, slow_node, skew)), range, rounds)?;
+    for (case, got) in [("stale", sum_stale), ("re-planned", sum_replan)] {
+        if (got - want).abs() > 1e-9 {
+            bail!("the {case} schedule's checksum {got} diverged from the lockstep oracle {want}");
+        }
+    }
+    println!("  stale schedule      {stale:?}: p50 {}/round", human_duration(t_stale.p50));
+    println!("  re-planned schedule {replanned:?}: p50 {}/round", human_duration(t_replan.p50));
+    let ratio = if t_replan.p50 > 0.0 { t_stale.p50 / t_replan.p50 } else { 0.0 };
+    println!("  stale/re-planned p50 ratio {ratio:.2} (checksums match the lockstep oracle)");
+
+    use sparse_allreduce::bench::{json_f64, summary_json};
+    let fmt_degrees =
+        |d: &[usize]| d.iter().map(|k| k.to_string()).collect::<Vec<_>>().join(",");
+    let json = format!(
+        "{{\n  \"bench\": 8,\n  \"experiment\": \"elastic re-plan: per-round allreduce time \
+         under the stale vs re-planned schedule on a pool with one straggling host\",\n  \
+         \"lanes\": {lanes},\n  \"rounds\": {rounds},\n  \"index_range\": {range},\n  \
+         \"mbytes_per_node\": {},\n  \"slow_node\": {slow_node},\n  \"setup_skew\": 8.0,\n  \
+         \"rows\": [\n    {{\"case\":\"stale_schedule\",\"degrees\":[{}],\"secs\":{}}},\n    \
+         {{\"case\":\"replanned_schedule\",\"degrees\":[{}],\"secs\":{}}}\n  ],\n  \
+         \"stale_over_replanned_p50\": {},\n  \"schedules_differ\": {},\n  \
+         \"checksums_match_lockstep\": true,\n  \"regenerate\": \"sar replan-bench --out \
+         BENCH_8.json\"\n}}\n",
+        json_f64(mbytes),
+        fmt_degrees(&stale),
+        summary_json(&t_stale),
+        fmt_degrees(&replanned),
+        summary_json(&t_replan),
+        json_f64(ratio),
+        stale != replanned
+    );
+    if let Some(dir) = out_path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+        }
+    }
+    std::fs::write(&out_path, json).with_context(|| format!("writing {}", out_path.display()))?;
     println!("wrote {}", out_path.display());
     Ok(())
 }

@@ -17,6 +17,11 @@ use std::time::Duration;
 pub struct DelayTransport<T: Transport> {
     inner: T,
     cost: CostModel,
+    /// Per-sender cost overrides (indexed by `Envelope::src`): model a
+    /// heterogeneous pool where one host is slower than its peers —
+    /// the elastic control plane's re-plan bench skews exactly one
+    /// node this way.
+    node_costs: Vec<Option<CostModel>>,
     rng: Mutex<Pcg32>,
     /// Scale factor applied to simulated delays (shrink for fast tests).
     pub time_scale: f64,
@@ -24,11 +29,27 @@ pub struct DelayTransport<T: Transport> {
 
 impl<T: Transport> DelayTransport<T> {
     pub fn new(inner: T, cost: CostModel, seed: u64) -> Self {
-        Self { inner, cost, rng: Mutex::new(Pcg32::new(seed)), time_scale: 1.0 }
+        Self {
+            inner,
+            cost,
+            node_costs: Vec::new(),
+            rng: Mutex::new(Pcg32::new(seed)),
+            time_scale: 1.0,
+        }
     }
 
     pub fn with_time_scale(mut self, scale: f64) -> Self {
         self.time_scale = scale;
+        self
+    }
+
+    /// Override the cost model for messages SENT by `node` (other
+    /// senders keep the base model).
+    pub fn with_node_cost(mut self, node: NodeId, cost: CostModel) -> Self {
+        if self.node_costs.len() <= node {
+            self.node_costs.resize(node + 1, None);
+        }
+        self.node_costs[node] = Some(cost);
         self
     }
 
@@ -44,9 +65,11 @@ impl<T: Transport> Transport for DelayTransport<T> {
 
     fn send(&self, dst: NodeId, env: Envelope) -> Result<(), TransportError> {
         let bytes = self.wire_bytes(&env);
+        let cost =
+            self.node_costs.get(env.src).and_then(|c| c.as_ref()).unwrap_or(&self.cost);
         let secs = {
             let mut rng = self.rng.lock().expect("rng poisoned");
-            self.cost.message_time(bytes, &mut rng)
+            cost.message_time(bytes, &mut rng)
         };
         let scaled = secs * self.time_scale;
         if scaled > 0.0 {
@@ -81,6 +104,26 @@ mod tests {
         t.send(1, env).unwrap();
         assert!(start.elapsed() >= Duration::from_millis(4), "delay not applied");
         assert!(t.recv(1, Duration::from_millis(50)).is_ok());
+    }
+
+    /// A per-node override skews only its own sender: the slow host's
+    /// sends pay its cost model, a peer's sends still pay the base.
+    #[test]
+    fn node_cost_override_skews_one_sender() {
+        let base = CostModel { setup_secs: 0.0, ..CostModel::ideal(1e12) };
+        let slow = CostModel { setup_secs: 0.02, ..CostModel::ideal(1e12) };
+        let t = DelayTransport::new(MemTransport::new(3), base, 1).with_node_cost(1, slow);
+        let env = |src| Envelope {
+            src,
+            tag: Tag::new(0, Phase::ReduceDown, 0),
+            payload: vec![0; 8],
+        };
+        let start = Instant::now();
+        t.send(2, env(0)).unwrap();
+        assert!(start.elapsed() < Duration::from_millis(15), "base sender stayed fast");
+        let start = Instant::now();
+        t.send(2, env(1)).unwrap();
+        assert!(start.elapsed() >= Duration::from_millis(15), "skewed sender pays its model");
     }
 
     #[test]

@@ -201,6 +201,7 @@ pub fn run_tune(opts: &TuneOpts) -> Result<TuneOutcome> {
         world,
         degrees: best.degrees.clone(),
         cost: model,
+        transport: model_source.clone(),
         packet_floor: model.floor_bytes(0.6),
         compression: if best.compressions.is_empty() {
             vec![sweep::aggregate_compression(&evals)]
@@ -281,4 +282,55 @@ pub fn apply_profile(cfg: &mut crate::config::RunConfig, path: &Path) -> Result<
         .with_context(|| format!("loading tuning profile {}", path.display()))?;
     prof.apply(cfg)?;
     Ok(prof)
+}
+
+/// [`apply_profile`] plus a transport-compatibility gate for consumers
+/// that know what wire their pool runs on (`"tcp"` for multi-process
+/// pools, `"mem"` for in-process modes). A mem-calibrated profile's
+/// constants are effectively memcpy throughput — its packet floor is
+/// orders of magnitude below a TCP pool's, so the schedule it blesses
+/// is wrong for the real wire and the profile is rejected rather than
+/// silently applied.
+pub fn apply_profile_checked(
+    cfg: &mut crate::config::RunConfig,
+    path: &Path,
+    pool_transport: &str,
+) -> Result<TuneProfile> {
+    let prof = TuneProfile::load(path)
+        .with_context(|| format!("loading tuning profile {}", path.display()))?;
+    check_profile_transport(&prof, pool_transport)?;
+    prof.apply(cfg)?;
+    Ok(prof)
+}
+
+/// Reject or warn when a profile's calibration transport disagrees with
+/// the transport the consuming pool runs (`pool_transport`: `"tcp"` |
+/// `"mem"`). Hard mismatches (mem constants driving a TCP pool) are
+/// errors; soft ones (unrecorded transport on legacy profiles, the
+/// ec2-2013 fallback, or pessimistic TCP constants applied in-process)
+/// only warn.
+pub fn check_profile_transport(prof: &TuneProfile, pool_transport: &str) -> Result<()> {
+    match (prof.transport.as_str(), pool_transport) {
+        ("mem", "tcp") => bail!(
+            "tuning profile was calibrated on the in-process `mem` transport but this \
+             pool runs TCP: its packet floor ({:.0} bytes) reflects memcpy, not the \
+             wire — re-run `sar tune` on a machine with loopback sockets available",
+            prof.packet_floor
+        ),
+        ("tcp-loopback", "tcp") | ("mem", "mem") => Ok(()),
+        ("", _) => {
+            log::warn!(
+                "tuning profile records no calibration transport (written before the \
+                 field existed); cannot verify it matches this {pool_transport} pool"
+            );
+            Ok(())
+        }
+        (other, _) => {
+            log::warn!(
+                "tuning profile calibrated on `{other}` applied to a {pool_transport} \
+                 pool; constants may not reflect this wire"
+            );
+            Ok(())
+        }
+    }
 }

@@ -1,0 +1,97 @@
+//! Elastic control plane acceptance: a live pool re-plans its degree
+//! schedule between jobs — no re-JOIN, no worker restart — and every
+//! job's checksum still matches the lockstep oracle (checksums are
+//! degree-schedule invariant).
+//!
+//! These tests fork real `sar worker` subprocesses, so they carry the
+//! `mp_` prefix and run in CI's tier-2 job
+//! (`cargo test --test elastic mp_`).
+
+use sparse_allreduce::cluster::{spawn_session, LaunchOpts};
+use sparse_allreduce::comm::{CommBuilder, ExecMode, JobSpec};
+use std::path::Path;
+
+fn sar_bin() -> &'static Path {
+    Path::new(env!("CARGO_BIN_EXE_sar"))
+}
+
+fn tiny_pagerank() -> JobSpec {
+    JobSpec { scale: 0.002, iters: 5, seed: 42, ..JobSpec::pagerank() }
+}
+
+fn lockstep_oracle(spec: &JobSpec) -> f64 {
+    CommBuilder::new(vec![2, 2])
+        .mode(ExecMode::Lockstep)
+        .send_threads(2)
+        .submit(spec)
+        .unwrap_or_else(|e| panic!("lockstep {} failed: {e:#}", spec.name))
+        .checksum
+}
+
+/// Acceptance: run a job on a 4-worker pool, re-plan the pool to a
+/// DIFFERENT degree schedule with the same lane count, run the job
+/// again. Both runs match the lockstep oracle, the second run reports
+/// the new schedule, and the SAME worker pids answered both jobs — the
+/// re-plan reshaped the butterfly without a re-JOIN.
+#[test]
+fn mp_replan_between_jobs_keeps_checksums_and_pids() {
+    let spec = tiny_pagerank();
+    let want = lockstep_oracle(&spec);
+
+    let opts = LaunchOpts { degrees: vec![2, 2], send_threads: 2, ..LaunchOpts::default() };
+    let (mut session, mut procs) = spawn_session(sar_bin(), opts).expect("pool bring-up failed");
+    let run1 = session.run_job(&spec).expect("job under the original schedule failed");
+
+    // Same lane count (2x2 = 4 = product of [4]), different shape.
+    session.replan(vec![4]).expect("re-plan failed");
+    assert_eq!(session.degrees(), &[4], "the session must adopt the new schedule");
+    assert_eq!(session.replans(), 1, "one completed re-plan");
+
+    let run2 = session.run_job(&spec).expect("job under the re-planned schedule failed");
+    session.shutdown();
+    procs.wait_all();
+
+    for (label, run) in [("original", &run1), ("re-planned", &run2)] {
+        assert!(
+            (run.checksum - want).abs() < 1e-9,
+            "{label} schedule: pool checksum {} != lockstep {want}",
+            run.checksum
+        );
+        assert_eq!(run.dead, Vec::<usize>::new(), "{label} run lost workers");
+    }
+    // Each run reports the schedule it actually executed under.
+    assert_eq!(run1.degrees, vec![2, 2]);
+    assert_eq!(run2.degrees, vec![4]);
+    // No re-JOIN: the identical OS pids answered both jobs.
+    assert!(run1.pids.iter().all(|p| p.is_some()), "all workers report pids");
+    assert_eq!(run1.pids, run2.pids, "a re-plan must never restart workers");
+}
+
+/// A re-plan that changes the logical lane count is rejected up front —
+/// that needs a new pool, not a re-plan — and the pool stays usable.
+#[test]
+fn mp_replan_rejects_lane_count_changes() {
+    let spec = tiny_pagerank();
+    let want = lockstep_oracle(&spec);
+
+    let opts = LaunchOpts { degrees: vec![2, 2], send_threads: 2, ..LaunchOpts::default() };
+    let (mut session, mut procs) = spawn_session(sar_bin(), opts).expect("pool bring-up failed");
+
+    let err = session.replan(vec![2]).expect_err("shrinking the pool must be rejected");
+    assert!(
+        format!("{err:#}").contains("lane"),
+        "the rejection must name the lane-count invariant, got: {err:#}"
+    );
+    assert_eq!(session.degrees(), &[2, 2], "a rejected re-plan changes nothing");
+    assert_eq!(session.replans(), 0);
+
+    // The pool is still fully serviceable after the rejection.
+    let run = session.run_job(&spec).expect("job after a rejected re-plan failed");
+    session.shutdown();
+    procs.wait_all();
+    assert!(
+        (run.checksum - want).abs() < 1e-9,
+        "pool checksum {} != lockstep {want}",
+        run.checksum
+    );
+}

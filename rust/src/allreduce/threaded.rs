@@ -8,12 +8,51 @@
 //! different groups may legitimately be a layer apart.
 
 use super::protocol::{ConfigPart, NodeProtocol, Phase};
+use crate::obs::{self, Span};
 use crate::sparse::{IndexSet, ReduceOp};
 use crate::topology::{Butterfly, NodeId};
 use crate::transport::{wire, Envelope, SenderPool, Tag, Transport, TransportError};
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Duration;
+
+/// Pre-resolved handles into the global obs registry, one set per
+/// [`NodeHandle`] (resolution takes the registry mutex — construction
+/// only; the per-round path is relaxed atomics on these handles, and
+/// nothing at all past one load under `--no-obs`). Phase histograms
+/// follow the paper's round anatomy: `phase.scatter` is the config
+/// phase building the scatter state, `phase.reduce`/`phase.gather` the
+/// down/up sweeps, `phase.merge` the bottom projection between them,
+/// and `phase.wire` one layer's whole exchange (send + await).
+struct NodeObs {
+    scatter: Arc<obs::Histogram>,
+    reduce: Arc<obs::Histogram>,
+    gather: Arc<obs::Histogram>,
+    merge: Arc<obs::Histogram>,
+    wire: Arc<obs::Histogram>,
+    bytes_out: Arc<obs::Counter>,
+    bytes_in: Arc<obs::Counter>,
+    /// Per-layer splits of the byte counters, indexed by layer.
+    layer_out: Vec<Arc<obs::Counter>>,
+    layer_in: Vec<Arc<obs::Counter>>,
+}
+
+impl NodeObs {
+    fn new(layers: usize) -> Self {
+        let r = obs::global();
+        Self {
+            scatter: r.histogram("phase.scatter"),
+            reduce: r.histogram("phase.reduce"),
+            gather: r.histogram("phase.gather"),
+            merge: r.histogram("phase.merge"),
+            wire: r.histogram("phase.wire"),
+            bytes_out: r.counter("net.bytes_out"),
+            bytes_in: r.counter("net.bytes_in"),
+            layer_out: (0..layers).map(|l| r.counter(&format!("net.l{l}.bytes_out"))).collect(),
+            layer_in: (0..layers).map(|l| r.counter(&format!("net.l{l}.bytes_in"))).collect(),
+        }
+    }
+}
 
 /// Per-node endpoint for running collectives over a transport.
 pub struct NodeHandle<T: Transport> {
@@ -23,10 +62,12 @@ pub struct NodeHandle<T: Transport> {
     pending: HashMap<(Tag, NodeId), Vec<u8>>,
     seq: u32,
     timeout: Duration,
+    obs: NodeObs,
 }
 
 impl<T: Transport + 'static> NodeHandle<T> {
     pub fn new(topo: Butterfly, node: NodeId, transport: Arc<T>, send_threads: usize) -> Self {
+        let layers = topo.layers();
         Self {
             proto: NodeProtocol::new(topo, node),
             transport,
@@ -34,6 +75,7 @@ impl<T: Transport + 'static> NodeHandle<T> {
             pending: HashMap::new(),
             seq: 0,
             timeout: Duration::from_secs(30),
+            obs: NodeObs::new(layers),
         }
     }
 
@@ -83,29 +125,43 @@ impl<T: Transport + 'static> NodeHandle<T> {
         outgoing: Vec<Vec<u8>>,
         own: Vec<u8>,
     ) -> Result<Vec<Vec<u8>>, TransportError> {
+        let span = Span::start(&self.obs.wire);
         let tag = Tag::new(self.seq, phase, layer);
         let group = self.proto.group(layer);
         let my_slot = self.proto.slot(layer);
         debug_assert_eq!(outgoing.len(), group.len());
+        let mut sent = 0u64;
         for (j, payload) in outgoing.into_iter().enumerate() {
             if j == my_slot {
                 continue;
             }
+            sent += payload.len() as u64;
             let env = Envelope { src: self.proto.node(), tag, payload };
             self.pool.send(&self.transport, group[j], env);
         }
         let mut got: Vec<Vec<u8>> = vec![Vec::new(); group.len()];
+        let mut received = 0u64;
         for (j, &src) in group.iter().enumerate() {
             if j == my_slot {
                 got[j] = own.clone();
             } else {
                 got[j] = self.await_msg(tag, src)?;
+                received += got[j].len() as u64;
             }
         }
         let errs = self.pool.wait();
         if let Some(e) = errs.into_iter().next() {
             return Err(e);
         }
+        self.obs.bytes_out.add(sent);
+        self.obs.bytes_in.add(received);
+        if let Some(c) = self.obs.layer_out.get(layer) {
+            c.add(sent);
+        }
+        if let Some(c) = self.obs.layer_in.get(layer) {
+            c.add(received);
+        }
+        span.finish();
         Ok(got)
     }
 
@@ -116,6 +172,7 @@ impl<T: Transport + 'static> NodeHandle<T> {
         inbound: IndexSet,
     ) -> Result<(), TransportError> {
         self.seq += 1;
+        let _span = Span::start(&self.obs.scatter);
         self.proto.begin_config(outbound, inbound);
         for layer in 0..self.proto.topology().layers() {
             let parts = self.proto.config_outgoing(layer);
@@ -137,6 +194,7 @@ impl<T: Transport + 'static> NodeHandle<T> {
     /// The scatter-reduce sweep down the layers; returns this node's
     /// fully-reduced bottom range (aligned with `bottom_down_set`).
     fn reduce_down<R: ReduceOp>(&mut self, values: Vec<R::T>) -> Result<Vec<R::T>, TransportError> {
+        let _span = Span::start(&self.obs.reduce);
         let layers = self.proto.topology().layers();
         let mut current = values;
         for layer in 0..layers {
@@ -159,6 +217,7 @@ impl<T: Transport + 'static> NodeHandle<T> {
 
     /// The allgather sweep back up; `values` aligned with `bottom_up_set`.
     fn reduce_up<R: ReduceOp>(&mut self, values: Vec<R::T>) -> Result<Vec<R::T>, TransportError> {
+        let _span = Span::start(&self.obs.gather);
         let layers = self.proto.topology().layers();
         let mut current = values;
         for layer in (0..layers).rev() {
@@ -183,7 +242,9 @@ impl<T: Transport + 'static> NodeHandle<T> {
     pub fn reduce<R: ReduceOp>(&mut self, values: Vec<R::T>) -> Result<Vec<R::T>, TransportError> {
         self.seq += 1;
         let bottom = self.reduce_down::<R>(values)?;
+        let merge = Span::start(&self.obs.merge);
         let projected = self.proto.apply_final_map::<R>(&bottom);
+        merge.finish();
         self.reduce_up::<R>(projected)
     }
 
@@ -234,7 +295,9 @@ impl<T: Transport + 'static> NodeHandle<T> {
     {
         self.seq += 1;
         let reduced = self.reduce_down::<R>(values)?;
+        let merge = Span::start(&self.obs.merge);
         let out = bottom(self.proto.bottom_down_set(), &reduced, self.proto.bottom_up_set());
+        merge.finish();
         assert_eq!(
             out.len(),
             self.proto.bottom_up_set().len(),

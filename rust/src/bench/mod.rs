@@ -126,9 +126,9 @@ pub fn section(experiment: &str, description: &str) {
     println!("{description}\n");
 }
 
-/// Print a markdown table (convenience wrapper over `metrics::Table`).
+/// Print a markdown table (convenience wrapper over `obs::Table`).
 pub fn print_table(header: &[&str], rows: &[Vec<String>]) {
-    let mut t = crate::metrics::Table::new(header);
+    let mut t = crate::obs::Table::new(header);
     for r in rows {
         t.row(r.clone());
     }

@@ -147,6 +147,8 @@ COMMANDS:
   serve-bench   measure serial vs multiplexed client serving (BENCH_6)
   replan        re-plan a serving pool's degree schedule in place
   replan-bench  measure stale vs re-planned schedules (BENCH_8)
+  stat          pull a serving pool's merged obs snapshot
+  obs-bench     measure instrumentation overhead (BENCH_9)
   config-check  validate a cluster config file
   help          show usage (`sar help <command>` for one command)
 
@@ -353,7 +355,7 @@ USAGE: sar serve [--degrees 2x2] [--tune-profile tune.toml]
                  [--replication r] [--threads t]
                  [--bind addr] [--client-bind addr] [--sessions n]
                  [--queue n] [--keepalive-secs s] [--total-sessions n]
-                 [--no-spawn] [--bin path]
+                 [--stats-every s] [--no-obs] [--no-spawn] [--bin path]
 
 Serve remote collective clients against a worker pool: launch (or, with
 --no-spawn, wait for) the workers, then accept client sessions on the
@@ -385,6 +387,12 @@ the joined workers' addresses allow it.
   --keepalive-secs s  evict sessions idle this long           [120]
   --total-sessions n  serve n sessions in total, then release the pool
                       (default: serve until killed)
+  --stats-every s     print a serve-plane stat line every s seconds
+                      (served/live/queued/evicted/rejected/rounds and
+                      the dispatch p50); `sar stat --pool` pulls the
+                      full cluster snapshot on demand
+  --no-obs            disable this process's metric recording (workers
+                      keep their own registries)
   --no-spawn          wait for externally-started workers instead of
                       forking them locally
   --bin path          sar binary to spawn local workers from  [current exe]
@@ -441,6 +449,35 @@ any timing is recorded. Emits the machine-readable trajectory row
   --rounds n   timed allreduce rounds per schedule     [12]
   --mbytes f   per-node sparse payload in MiB          [4]
   --out path   bench trajectory output                 [BENCH_8.json]
+  --fast       CI smoke mode: fewer rounds",
+        "stat" => "\
+USAGE: sar stat --pool host:port [--json]
+
+Pull the cluster-wide observability snapshot off a `sar serve` pool:
+connect to the pool's client port (the same admin door `sar replan`
+uses) and request STATS. The coordinator pulls every live worker's
+metric registry over the control plane — per-round phase latencies
+(scatter/reduce/gather/merge/wire), bytes in/out per layer, engine
+round counts — folds in its own serve-plane census (admissions,
+rejections, evictions, queue depth, dispatch latency, per-session
+round counts), and answers with the merged rollup.
+  --pool addr  the pool's client port (required)
+  --json       print the raw JSON rollup (workers/serve/cluster keys;
+               histograms carry count, sum_us, mean/p50/p99 seconds,
+               and the 26 log2-microsecond buckets) instead of the
+               human table",
+        "obs-bench" => "\
+USAGE: sar obs-bench [--lanes n] [--rounds n] [--out BENCH_9.json] [--fast]
+
+Measure the observability plane's overhead: per-round threaded
+allreduce time with the obs registry recording (spans + counters on
+the scatter/reduce/gather/merge/wire paths) vs disabled (the --no-obs
+gate). Both cases' checksums are validated against the lockstep oracle
+before any timing is reported. Emits the machine-readable trajectory
+row (BENCH_9.json).
+  --lanes n    logical lanes (threaded, one thread each) [4]
+  --rounds n   timed allreduce rounds per case           [48]
+  --out path   bench trajectory output                   [BENCH_9.json]
   --fast       CI smoke mode: fewer rounds",
         "config-check" => "\
 USAGE: sar config-check --file <path>
@@ -507,7 +544,8 @@ mod tests {
     fn every_command_has_usage() {
         for cmd in [
             "info", "plan", "tune", "shard", "pagerank", "diameter", "sgd", "train", "worker",
-            "launch", "serve", "serve-bench", "replan", "replan-bench", "config-check", "help",
+            "launch", "serve", "serve-bench", "replan", "replan-bench", "stat", "obs-bench",
+            "config-check", "help",
         ] {
             assert!(usage_for(cmd).is_some(), "missing usage for {cmd}");
             assert!(USAGE.contains(cmd), "top-level usage missing {cmd}");

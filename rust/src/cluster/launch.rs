@@ -15,8 +15,8 @@
 //! a readable quorum error — instead of a hang.
 
 use super::proto::{
-    recv_ctrl, send_ctrl, ConfigureMsg, CtrlMsg, JobPlan, ResultMsg, ValuesMsg, WorkerPlan,
-    WorkerReport, COORD,
+    recv_ctrl, send_ctrl, ConfigureMsg, CtrlMsg, JobPlan, ResultMsg, StatsMsg, ValuesMsg,
+    WorkerPlan, WorkerReport, COORD,
 };
 use crate::comm::{AppKind, JobSpec};
 use crate::config::{validate_world, RunConfig};
@@ -24,7 +24,7 @@ use crate::control::view::drift_line;
 use crate::control::{plan_for_view, profile_drift, HostConstants, PoolView, ReplanParams};
 use crate::fault::{FailureDetector, Health, ReplicaMap};
 use crate::graph::ShardManifest;
-use crate::metrics::{IterTiming, RunMetrics};
+use crate::obs::{self, IterTiming, RunMetrics, Snapshot};
 use crate::simnet::CostModel;
 use crate::tune::TuneProfile;
 use crate::util::Summary;
@@ -546,6 +546,9 @@ pub struct Session {
     replan_votes: Vec<bool>,
     /// Completed re-plans on this pool.
     replan_count: u32,
+    /// Per-worker obs snapshots collected by the current stat pull
+    /// ([`Session::pull_stats`]), index-aligned with physical node ids.
+    stats_inbox: Vec<Option<Snapshot>>,
 }
 
 impl Coordinator {
@@ -769,6 +772,7 @@ impl Coordinator {
             replan_epoch: None,
             replan_votes: vec![false; world],
             replan_count: 0,
+            stats_inbox: (0..world).map(|_| None).collect(),
             opts,
         })
     }
@@ -939,7 +943,49 @@ impl Session {
         );
         self.opts.degrees = degrees;
         self.replan_count += 1;
+        obs::global().counter("control.replans").inc();
         Ok(())
+    }
+
+    /// Pull every live worker's obs registry census over the control
+    /// plane (the coordinator leg of `sar stat`): broadcast a STATS
+    /// request, collect one snapshot per worker under a short deadline
+    /// (a stat pull is interactive — it must not hold the serve loop
+    /// for a full control phase), and return them tagged by physical
+    /// node id. Dead workers are simply absent from the result; a
+    /// timeout is an error but never shuts the pool down.
+    pub fn pull_stats(&mut self) -> Result<Vec<(u32, Snapshot)>> {
+        for s in self.stats_inbox.iter_mut() {
+            *s = None;
+        }
+        let msg = CtrlMsg::Stats(StatsMsg::request());
+        for (w, writer) in self.writers.iter().enumerate() {
+            if self.detector.is_hard_dead(w) {
+                continue;
+            }
+            if let Err(e) = send_ctrl(writer, COORD, &msg) {
+                log::warn!("STATS request to worker {w} failed: {e}");
+                self.detector.mark_dead(w);
+            }
+        }
+        let deadline = Instant::now() + self.opts.phase_deadline.min(Duration::from_secs(10));
+        loop {
+            let settled = (0..self.world())
+                .all(|w| self.stats_inbox[w].is_some() || self.detector.is_hard_dead(w));
+            if settled {
+                break;
+            }
+            if Instant::now() > deadline {
+                bail!("stat pull timed out{}", self.failure_summary());
+            }
+            self.pump(Duration::from_millis(20));
+        }
+        Ok(self
+            .stats_inbox
+            .iter_mut()
+            .enumerate()
+            .filter_map(|(w, s)| s.take().map(|snap| (w as u32, snap)))
+            .collect())
     }
 
     /// Re-plan from the live view: fold the per-host calibration
@@ -995,6 +1041,21 @@ impl Session {
                     self.replan_votes[w] = true;
                 } else {
                     log::warn!("stale REPLAN_DONE (epoch {epoch}) from worker {w}");
+                }
+            }
+            Ok((w, Event::Msg(CtrlMsg::Stats(s)))) => {
+                // The reader index is authoritative for placement; the
+                // wire id only cross-checks (a request sentinel here
+                // means a confused worker — drop it).
+                if s.is_request() {
+                    log::warn!("worker {w} sent a STATS request; ignoring");
+                } else {
+                    if s.node != w as u32 {
+                        log::warn!("worker {w} reported stats as node {}", s.node);
+                    }
+                    if let Some(slot) = self.stats_inbox.get_mut(w) {
+                        *slot = Some(s.snap);
+                    }
                 }
             }
             Ok((w, Event::Msg(CtrlMsg::Failed { error }))) => {

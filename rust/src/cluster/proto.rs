@@ -28,6 +28,7 @@
 //!
 //! See [`super`] for the full state machine these messages drive.
 
+use crate::obs::{HistSnapshot, Snapshot};
 use crate::sparse::{MaxF32, OrU32, ReduceOp, SumF32};
 use crate::topology::NodeId;
 use crate::transport::wire::{decode_header, encode_header, HEADER_BYTES};
@@ -185,6 +186,50 @@ pub enum CtrlMsg {
     /// into its live pool view so re-planning uses measured numbers
     /// instead of the 2013-EC2 fallback.
     Calibration { node: u32, transport: String, setup_secs: f64, bandwidth_bps: f64 },
+    /// Cluster stat pull (`sar stat`), one message for every leg:
+    /// client → coordinator as a first-frame admin request
+    /// ([`StatsMsg::is_request`], like the admin [`CtrlMsg::Replan`]);
+    /// coordinator → worker to pull that worker's registry census;
+    /// worker → coordinator carrying its [`crate::obs::Snapshot`]; and
+    /// coordinator → client carrying the merged
+    /// [`crate::obs::ClusterStats`] in its flat `w<n>/`-prefixed form.
+    Stats(StatsMsg),
+}
+
+/// [`StatsMsg::node`] sentinel marking a stats *pull request* (empty
+/// snapshot) rather than a node's reply.
+pub const STATS_REQUEST: u32 = u32::MAX;
+
+/// [`StatsMsg::node`] sentinel on the coordinator → client leg: the
+/// snapshot is the merged cluster rollup ([`crate::obs::ClusterStats`]
+/// flattened), not any single node's census. Distinct from
+/// [`STATS_REQUEST`] (`u32::MAX`) and from [`CLIENT`]'s numeric value
+/// (`u32::MAX - 1`) so no leg of the pull can be misread as another.
+pub const STATS_ROLLUP: u32 = u32::MAX - 2;
+
+/// One hop of the cluster stat pull: a registry census
+/// ([`crate::obs::Snapshot`]) tagged with whose it is. Histogram sample
+/// counts are not wired — the decoder re-derives them from the bucket
+/// counts, so a snapshot whose count disagrees with its buckets cannot
+/// be represented on the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StatsMsg {
+    /// Replying worker's physical node id, [`STATS_REQUEST`] for a pull
+    /// request, or [`STATS_ROLLUP`] when the coordinator replies with
+    /// the merged flat rollup.
+    pub node: u32,
+    pub snap: Snapshot,
+}
+
+impl StatsMsg {
+    /// The client/coordinator pull request (empty snapshot).
+    pub fn request() -> Self {
+        Self { node: STATS_REQUEST, snap: Snapshot::default() }
+    }
+
+    pub fn is_request(&self) -> bool {
+        self.node == STATS_REQUEST
+    }
 }
 
 /// One lane's config-phase input on the remote collective plane: the
@@ -347,6 +392,7 @@ const OP_POOL_HEALTH: u32 = 15;
 const OP_REPLAN: u32 = 16;
 const OP_REPLAN_DONE: u32 = 17;
 const OP_CALIBRATION: u32 = 18;
+const OP_STATS: u32 = 19;
 
 // --- body codec ----------------------------------------------------------
 
@@ -593,6 +639,30 @@ pub fn encode(msg: &CtrlMsg) -> (u32, Vec<u8>) {
             e.f64(*bandwidth_bps);
             OP_CALIBRATION
         }
+        CtrlMsg::Stats(s) => {
+            e.u32(s.node);
+            e.u32(s.snap.counters.len() as u32);
+            for (name, v) in &s.snap.counters {
+                e.str(name);
+                e.u64(*v);
+            }
+            e.u32(s.snap.gauges.len() as u32);
+            for (name, v) in &s.snap.gauges {
+                e.str(name);
+                e.i64(*v);
+            }
+            e.u32(s.snap.hists.len() as u32);
+            for h in &s.snap.hists {
+                e.str(&h.name);
+                e.u64(h.sum_us);
+                // count is NOT wired: decode re-derives it from the
+                // buckets, so count/buckets can never disagree.
+                for b in &h.buckets {
+                    e.u64(*b);
+                }
+            }
+            OP_STATS
+        }
     };
     (op, e.0)
 }
@@ -719,6 +789,51 @@ pub fn decode(opcode: u32, payload: &[u8]) -> std::io::Result<CtrlMsg> {
             }
             m
         }
+        OP_STATS => {
+            let node = d.u32()?;
+            let mut snap = Snapshot::default();
+            let nc = d.u32()? as usize;
+            for _ in 0..nc {
+                let name = d.str()?;
+                if name.is_empty() {
+                    return Err(bad("empty metric name"));
+                }
+                let v = d.u64()?;
+                snap.counters.push((name, v));
+            }
+            let ng = d.u32()? as usize;
+            for _ in 0..ng {
+                let name = d.str()?;
+                if name.is_empty() {
+                    return Err(bad("empty metric name"));
+                }
+                let v = d.i64()?;
+                snap.gauges.push((name, v));
+            }
+            let nh = d.u32()? as usize;
+            for _ in 0..nh {
+                let name = d.str()?;
+                if name.is_empty() {
+                    return Err(bad("empty metric name"));
+                }
+                let mut h = HistSnapshot::empty(&name);
+                h.sum_us = d.u64()?;
+                let mut count = 0u64;
+                for b in h.buckets.iter_mut() {
+                    *b = d.u64()?;
+                    count = count
+                        .checked_add(*b)
+                        .ok_or_else(|| bad("histogram bucket counts overflow"))?;
+                }
+                h.count = count;
+                snap.hists.push(h);
+            }
+            let m = StatsMsg { node, snap };
+            if m.is_request() && !m.snap.is_empty() {
+                return Err(bad("stats request carrying a snapshot"));
+            }
+            CtrlMsg::Stats(m)
+        }
         other => return Err(bad(format!("unknown control opcode {other}"))),
     };
     d.finish()?;
@@ -824,6 +939,20 @@ mod tests {
         }
     }
 
+    fn sample_stats() -> StatsMsg {
+        let mut snap = Snapshot::default();
+        snap.counters.push(("net.bytes_out".into(), 123_456));
+        snap.counters.push(("serve.admitted".into(), 3));
+        snap.gauges.push(("serve.queued".into(), -1));
+        let mut h = HistSnapshot::empty("phase.reduce");
+        h.buckets[4] = 2;
+        h.buckets[9] = 1;
+        h.count = 3;
+        h.sum_us = 561;
+        snap.hists.push(h);
+        StatsMsg { node: 2, snap }
+    }
+
     fn all_variants() -> Vec<CtrlMsg> {
         vec![
             CtrlMsg::Join { data_addr: "10.0.0.7:41234".into() },
@@ -860,6 +989,8 @@ mod tests {
                 setup_secs: 1.25e-5,
                 bandwidth_bps: 6.0e9,
             },
+            CtrlMsg::Stats(StatsMsg::request()),
+            CtrlMsg::Stats(sample_stats()),
         ]
     }
 
@@ -880,6 +1011,7 @@ mod tests {
             CtrlMsg::Values(sample_values()),
             CtrlMsg::Result(sample_result()),
             CtrlMsg::Release { job: 5 },
+            CtrlMsg::Stats(sample_stats()),
         ] {
             let (op, payload) = encode(&sample);
             assert!(decode(op, &payload[..payload.len() - 1]).is_err(), "truncated {op}");
@@ -941,6 +1073,59 @@ mod tests {
         payload[off..].copy_from_slice(&f64::NAN.to_le_bytes());
         let err = decode(op, &payload).unwrap_err();
         assert!(err.to_string().contains("unphysical"), "got: {err}");
+    }
+
+    /// Satellite: opcode 19 corruption is rejected at decode time,
+    /// matching the 16–18 convention — empty metric names, a pull
+    /// request smuggling a snapshot, and bucket counts whose sum
+    /// overflows are all errors, never panics or silently-wrong stats.
+    #[test]
+    fn stats_corruption_rejected() {
+        // Empty metric name.
+        let mut e = Enc::default();
+        e.u32(2); // node
+        e.u32(1); // one counter
+        e.str("");
+        e.u64(5);
+        e.u32(0); // gauges
+        e.u32(0); // hists
+        let err = decode(OP_STATS, &e.0).unwrap_err();
+        assert!(err.to_string().contains("empty metric name"), "got: {err}");
+        // A pull request must not carry a snapshot: a corrupted node id
+        // cannot turn a loaded reply into a "request".
+        let mut loaded = sample_stats();
+        loaded.node = STATS_REQUEST;
+        let (op, payload) = encode(&CtrlMsg::Stats(loaded));
+        let err = decode(op, &payload).unwrap_err();
+        assert!(err.to_string().contains("request carrying"), "got: {err}");
+        // Bucket counts whose sum overflows u64.
+        let mut e = Enc::default();
+        e.u32(2); // node
+        e.u32(0); // counters
+        e.u32(0); // gauges
+        e.u32(1); // one hist
+        e.str("phase.reduce");
+        e.u64(0); // sum_us
+        e.u64(u64::MAX);
+        e.u64(1);
+        for _ in 2..crate::obs::HIST_BUCKETS {
+            e.u64(0);
+        }
+        let err = decode(OP_STATS, &e.0).unwrap_err();
+        assert!(err.to_string().contains("overflow"), "got: {err}");
+        // The derived count always equals the bucket sum after a
+        // roundtrip, even if the in-memory count field lied.
+        let mut lying = sample_stats();
+        lying.snap.hists[0].count = 999;
+        let (op, payload) = encode(&CtrlMsg::Stats(lying));
+        match decode(op, &payload).unwrap() {
+            CtrlMsg::Stats(s) => {
+                let h = &s.snap.hists[0];
+                assert_eq!(h.count, h.buckets.iter().sum::<u64>());
+                assert_eq!(h.count, 3);
+            }
+            other => panic!("wrong variant: {other:?}"),
+        }
     }
 
     #[test]

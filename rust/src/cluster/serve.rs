@@ -51,11 +51,12 @@
 use super::launch::Session;
 use super::mux::{Admission, Batch, Offer, Registry, RoundRobin, Step};
 use super::proto::{
-    recv_ctrl, send_ctrl, CtrlMsg, ResultMsg, WorkerPlan, COORD, RES_STAGE_BOTTOM,
-    RES_STAGE_FINAL, VAL_STAGE_DOWN,
+    recv_ctrl, send_ctrl, CtrlMsg, ResultMsg, StatsMsg, WorkerPlan, CLIENT, COORD,
+    RES_STAGE_BOTTOM, RES_STAGE_FINAL, STATS_ROLLUP, VAL_STAGE_DOWN,
 };
 use crate::fault::Health;
-use anyhow::{Context, Result};
+use crate::obs::{self, ClusterStats, Span};
+use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -83,6 +84,14 @@ pub struct ServeOpts {
     /// one ends (`--total-sessions`; `None` = serve until the process
     /// is killed). The shutdown/CI hook.
     pub total: Option<usize>,
+    /// Print a periodic serve-plane stat line every this often
+    /// (`--stats-every n` seconds; `None` = quiet).
+    pub stats_every: Option<Duration>,
+    /// Record serve-plane metrics into this registry instead of the
+    /// process-global one. `sar serve` leaves this `None`; tests that
+    /// run several pools inside one process set it so their counters
+    /// never cross-pollute (and so exact assertions don't flake).
+    pub registry: Option<Arc<obs::Registry>>,
 }
 
 impl Default for ServeOpts {
@@ -92,6 +101,8 @@ impl Default for ServeOpts {
             queue_depth: 16,
             keepalive: Duration::from_secs(120),
             total: None,
+            stats_every: None,
+            registry: None,
         }
     }
 }
@@ -181,6 +192,11 @@ pub fn serve_mux(
         stats: ServeStats::default(),
         started: 0,
         pending_replan: Vec::new(),
+        obs: ServeObs::new(opts.registry.as_deref().unwrap_or_else(|| obs::global())),
+        obs_registry: opts.registry.clone(),
+        rounds_by_session: HashMap::new(),
+        stats_every: opts.stats_every,
+        last_stats: Instant::now(),
     };
     // Clients speak in LOGICAL lanes: on a replicated pool a batch has
     // one CONFIGURE/VALUES per lane, and the relay fans each out to
@@ -270,6 +286,35 @@ fn spawn_reader(sid: u64, mut rd: TcpStream, tx: Sender<MuxEvent>) -> JoinHandle
     })
 }
 
+/// Client leg of `sar stat`: dial a pool's client port, present the
+/// admin STATS request as the first frame (the same door `sar replan`
+/// uses), and decode the merged rollup the coordinator answers with.
+/// Shared by the CLI and the tier-2 serve-plane tests.
+pub fn pull_cluster_stats(addr: &str) -> Result<ClusterStats> {
+    let stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting to the pool at {addr}"))?;
+    stream.set_nodelay(true)?;
+    // The pull itself is immediate on the pool side; the wait only
+    // covers queueing behind live sessions' dispatches.
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    let mut rd = stream.try_clone().context("cloning the pool connection")?;
+    let wr = Mutex::new(stream);
+    let (_, handshake) = recv_ctrl(&mut rd).context("reading the pool's handshake")?;
+    match handshake {
+        CtrlMsg::Plan(_) => {}
+        CtrlMsg::Failed { error } => bail!("pool at {addr} refused the connection: {error}"),
+        other => bail!("unexpected handshake frame from the pool: {other:?}"),
+    }
+    send_ctrl(&wr, CLIENT, &CtrlMsg::Stats(StatsMsg::request()))
+        .context("sending the STATS request")?;
+    match recv_ctrl(&mut rd).context("waiting for the pool's stat answer")?.1 {
+        CtrlMsg::Stats(s) if s.node == STATS_ROLLUP => Ok(ClusterStats::from_flat(&s.snap)),
+        CtrlMsg::Stats(s) => bail!("stat answer tagged {} instead of the rollup", s.node),
+        CtrlMsg::Failed { error } => bail!("pool rejected the stat pull: {error}"),
+        other => bail!("unexpected stat answer from the pool: {other:?}"),
+    }
+}
+
 /// Best-effort FAILED + drop, for connections never admitted.
 fn refuse(stream: TcpStream, why: &str) {
     let wr = Mutex::new(stream);
@@ -292,6 +337,45 @@ enum DispatchErr {
     Client(anyhow::Error),
     /// The pool failed: fatal for the whole serve loop.
     Pool(anyhow::Error),
+}
+
+/// Pre-resolved serve-plane metric handles: resolving a name takes the
+/// obs registry mutex, so the mux loop looks each one up once and then
+/// only touches atomics. These mirror the [`ServeStats`] counters
+/// one-for-one (incremented at the same sites), which is what lets
+/// `sar stat` and the serve loop's own exit summary agree.
+struct ServeObs {
+    admitted: Arc<obs::Counter>,
+    rejected: Arc<obs::Counter>,
+    evicted: Arc<obs::Counter>,
+    served: Arc<obs::Counter>,
+    /// Rounds dispatched pool-wide.
+    rounds: Arc<obs::Counter>,
+    live: Arc<obs::Gauge>,
+    queued: Arc<obs::Gauge>,
+    /// Batch dispatch latency (pick → results drained → acked).
+    dispatch: Arc<obs::Histogram>,
+    /// Per-session round counts, recorded once per ENDED session with
+    /// the raw count as the sample value: `count` = sessions ended,
+    /// `sum_us` = total rounds across them (the field name is a lie
+    /// here — these are counts, not microseconds).
+    session_rounds: Arc<obs::Histogram>,
+}
+
+impl ServeObs {
+    fn new(r: &obs::Registry) -> Self {
+        Self {
+            admitted: r.counter("serve.admitted"),
+            rejected: r.counter("serve.rejected"),
+            evicted: r.counter("serve.evicted"),
+            served: r.counter("serve.served"),
+            rounds: r.counter("serve.rounds"),
+            live: r.gauge("serve.live"),
+            queued: r.gauge("serve.queued"),
+            dispatch: r.histogram("serve.dispatch"),
+            session_rounds: r.histogram("serve.session_rounds"),
+        }
+    }
 }
 
 /// The mux loop's state: the pool session plus every policy object.
@@ -317,6 +401,16 @@ struct Mux<'a> {
     /// go quiescent: `(sid, requested degrees)` — empty degrees means
     /// "plan from the live view".
     pending_replan: Vec<(u64, Vec<usize>)>,
+    obs: ServeObs,
+    /// The pool-local metric registry when [`ServeOpts::registry`] set
+    /// one (`None` = the handles in `obs` live in the global registry).
+    obs_registry: Option<Arc<obs::Registry>>,
+    /// Rounds dispatched per live session, folded into
+    /// `serve.session_rounds` when the session ends.
+    rounds_by_session: HashMap<u64, u64>,
+    /// `--stats-every` period and the last time a line was printed.
+    stats_every: Option<Duration>,
+    last_stats: Instant,
 }
 
 impl Mux<'_> {
@@ -360,7 +454,37 @@ impl Mux<'_> {
             self.sweep_idle();
             self.dispatch_ready()?;
             self.try_replan()?;
+            self.refresh_gauges();
+            self.maybe_print_stats();
         }
+    }
+
+    fn refresh_gauges(&mut self) {
+        self.obs.live.set(self.registry.len() as i64);
+        self.obs.queued.set(self.admission.queued() as i64);
+    }
+
+    /// `--stats-every n`: one compact serve-plane line per period, on
+    /// stdout so a CI grep (or an operator tail) can watch the pool
+    /// without dialing `sar stat`.
+    fn maybe_print_stats(&mut self) {
+        let Some(every) = self.stats_every else {
+            return;
+        };
+        if self.last_stats.elapsed() < every {
+            return;
+        }
+        self.last_stats = Instant::now();
+        let p50 = self.obs.dispatch.snapshot("serve.dispatch").quantile_secs(0.5) * 1e3;
+        println!(
+            "[stats] served={} live={} queued={} evicted={} rejected={} rounds={} dispatch_p50={p50:.2}ms",
+            self.stats.served,
+            self.registry.len(),
+            self.admission.queued(),
+            self.stats.evicted,
+            self.stats.rejected,
+            self.obs.rounds.get(),
+        );
     }
 
     /// Admission: live slot, wait queue, or refusal.
@@ -369,6 +493,7 @@ impl Mux<'_> {
             if self.started >= total {
                 log::info!("refusing client {peer}: session budget ({total}) spent");
                 self.stats.rejected += 1;
+                self.obs.rejected.inc();
                 refuse(stream, "this pool's session budget is spent");
                 return;
             }
@@ -384,6 +509,7 @@ impl Mux<'_> {
             Offer::Rejected((stream, peer)) => {
                 log::warn!("refusing client {peer}: wait queue full");
                 self.stats.rejected += 1;
+                self.obs.rejected.inc();
                 refuse(
                     stream,
                     "pool busy: the session limit is reached and the wait queue is full",
@@ -395,6 +521,7 @@ impl Mux<'_> {
     /// Handshake + register an admitted connection as a live session.
     fn start_session(&mut self, stream: TcpStream, peer: SocketAddr) {
         self.started += 1;
+        self.obs.admitted.inc();
         // A socket that cannot take options here is a client already
         // gone — skip the session instead of carrying a Nagle'd
         // connection into the latency-sensitive round relay.
@@ -458,6 +585,20 @@ impl Mux<'_> {
             self.fail_client(sid, "REPLAN on a configured client session".to_string());
             return Ok(());
         }
+        // Same admin door for STATS: a pull request from a fresh
+        // session answers with the merged cluster rollup and closes.
+        // Anything else wearing the opcode (a reply where only requests
+        // make sense, or a pull from a configured client) is a
+        // violation.
+        if let CtrlMsg::Stats(s) = &msg {
+            let fresh =
+                self.registry.get(sid).is_some_and(|e| e.sm.pool_job().is_none());
+            if fresh && s.is_request() {
+                return self.on_admin_stats(sid);
+            }
+            self.fail_client(sid, "STATS is an admin request on a fresh connection".to_string());
+            return Ok(());
+        }
         let Some(entry) = self.registry.get_mut(sid) else {
             return Ok(()); // session already ended; late frame
         };
@@ -490,13 +631,24 @@ impl Mux<'_> {
             // eats most of the keepalive must not leave the session's
             // idle clock running toward eviction.
             self.registry.touch(sid, Instant::now());
+            let is_round = matches!(batch, Batch::Round { .. });
+            let span = Span::start(&self.obs.dispatch);
             match self.dispatch(sid, batch) {
-                Ok(()) => self.registry.touch(sid, Instant::now()),
+                Ok(()) => {
+                    span.finish();
+                    if is_round {
+                        self.obs.rounds.inc();
+                        *self.rounds_by_session.entry(sid).or_insert(0) += 1;
+                    }
+                    self.registry.touch(sid, Instant::now());
+                }
                 Err(DispatchErr::Client(e)) => {
+                    span.cancel();
                     log::warn!("client session {sid} lost mid-dispatch: {e:#}");
                     self.end_session(sid);
                 }
                 Err(DispatchErr::Pool(e)) => {
+                    span.cancel();
                     let err = e.context(format!("pool failed serving client session {sid}"));
                     self.fail_all(&err);
                     return Err(err);
@@ -642,6 +794,40 @@ impl Mux<'_> {
         self.try_replan()
     }
 
+    /// An admitted connection's STATS pull (`sar stat`): collect every
+    /// worker's registry census over the control plane, fold in the
+    /// serve plane's own registry, and answer with the flat rollup.
+    /// Stat pulls are control traffic — refund the session budget like
+    /// [`Self::on_admin_replan`]. Unlike a re-plan the pull runs
+    /// immediately: the mux loop is the pool's only dispatcher, so no
+    /// round can be in flight while it is here handling this frame,
+    /// and idle workers answer a STATS request between batches.
+    fn on_admin_stats(&mut self, sid: u64) -> Result<()> {
+        let peer = self
+            .registry
+            .get(sid)
+            .map(|e| e.conn.peer.to_string())
+            .unwrap_or_else(|| "?".to_string());
+        self.started = self.started.saturating_sub(1);
+        log::info!("admin stat pull from {peer}");
+        self.refresh_gauges();
+        let serve_reg = self.obs_registry.as_deref().unwrap_or_else(|| obs::global());
+        let reply = match self.session.pull_stats() {
+            Ok(workers) => {
+                let cluster = ClusterStats { workers, serve: serve_reg.snapshot() };
+                CtrlMsg::Stats(StatsMsg { node: STATS_ROLLUP, snap: cluster.to_flat() })
+            }
+            // A failed pull is an admin-visible error, not a pool
+            // failure: the workers may just be slow — the pool keeps
+            // serving.
+            Err(e) => CtrlMsg::Failed {
+                error: format!("{:#}", e.context("pulling worker stat snapshots")),
+            },
+        };
+        self.end_admin(sid, Some(&reply));
+        Ok(())
+    }
+
     /// Run pending admin re-plans once the pool is quiescent: no live
     /// session besides the requesters themselves. Client sessions keep
     /// priority — a waiting admin just sits (kept off the keepalive
@@ -715,6 +901,7 @@ impl Mux<'_> {
         let Some(mut entry) = self.registry.remove(sid) else {
             return;
         };
+        self.rounds_by_session.remove(&sid);
         self.sched.remove(sid);
         self.batches.remove(&sid);
         if let Ok(s) = entry.conn.wr.lock() {
@@ -744,6 +931,7 @@ impl Mux<'_> {
                 self.keepalive
             );
             self.stats.evicted += 1;
+            self.obs.evicted.inc();
             self.fail_client(
                 sid,
                 format!("evicted: session idle past the {:?} keepalive", self.keepalive),
@@ -789,6 +977,9 @@ impl Mux<'_> {
         let Some(mut entry) = self.registry.remove(sid) else {
             return;
         };
+        // One sample per ended session, value = its round count (see
+        // the ServeObs field docs).
+        self.obs.session_rounds.record_us(self.rounds_by_session.remove(&sid).unwrap_or(0));
         self.sched.remove(sid);
         self.batches.remove(&sid);
         if let Some(pj) = entry.sm.pool_job() {
@@ -813,6 +1004,7 @@ impl Mux<'_> {
     /// it with refusals once the session budget is spent).
     fn session_slot_freed(&mut self) {
         self.stats.served += 1;
+        self.obs.served.inc();
         self.free_slot();
     }
 
@@ -828,6 +1020,7 @@ impl Mux<'_> {
                     while let Some((stream, peer)) = self.admission.dequeue() {
                         log::info!("refusing queued client {peer}: session budget spent");
                         self.stats.rejected += 1;
+                        self.obs.rejected.inc();
                         refuse(stream, "this pool's session budget is spent");
                     }
                     return;
@@ -859,6 +1052,8 @@ mod tests {
         assert!(o.max_live >= 1);
         assert!(o.keepalive > Duration::ZERO);
         assert!(o.total.is_none());
+        assert!(o.stats_every.is_none(), "periodic stat lines are opt-in");
+        assert!(o.registry.is_none(), "production records into the global registry");
     }
 
     #[test]

@@ -43,9 +43,9 @@
 //! control plane in either path.
 
 use super::proto::{
-    recv_ctrl, send_ctrl, ConfigureMsg, CtrlMsg, JobPlan, ResultMsg, ValuesMsg, WorkerPlan,
-    WorkerReport, OP_CODE_MAX_F32, OP_CODE_OR_U32, OP_CODE_SUM_F32, RES_STAGE_BOTTOM,
-    RES_STAGE_FINAL, VAL_STAGE_DOWN, VAL_STAGE_FULL, VAL_STAGE_UP,
+    recv_ctrl, send_ctrl, ConfigureMsg, CtrlMsg, JobPlan, ResultMsg, StatsMsg, ValuesMsg,
+    WorkerPlan, WorkerReport, OP_CODE_MAX_F32, OP_CODE_OR_U32, OP_CODE_SUM_F32,
+    RES_STAGE_BOTTOM, RES_STAGE_FINAL, VAL_STAGE_DOWN, VAL_STAGE_FULL, VAL_STAGE_UP,
 };
 use crate::allreduce::{NodeHandle, NodeProtocol};
 use crate::apps::diameter::{DiameterConfig, DiameterNode};
@@ -55,7 +55,7 @@ use crate::comm::job::SGD_ZIPF_ALPHA;
 use crate::config::validate_world;
 use crate::fault::{ReplicaMap, ReplicatedHandle};
 use crate::graph::{load_shard, Csr, DatasetPreset, DatasetSpec, ShardManifest};
-use crate::metrics::RunMetrics;
+use crate::obs::{self, RunMetrics};
 use crate::sparse::{IndexSet, MaxF32, OrU32, ReduceOp, SumF32};
 use crate::topology::Butterfly;
 use crate::transport::{
@@ -595,6 +595,13 @@ fn serve_pool(
                 send_ctrl(ctrl_wr, node, &CtrlMsg::ReplanDone { epoch, node: node as u32 })
                     .context("sending REPLAN_DONE")?;
             }
+            CtrlMsg::Stats(s) if s.is_request() => {
+                // The coordinator's stat pull: answer with this
+                // process's registry census (phase histograms, wire
+                // byte counters, round latencies).
+                let reply = StatsMsg { node: node as u32, snap: obs::global().snapshot() };
+                send_ctrl(ctrl_wr, node, &CtrlMsg::Stats(reply)).context("sending STATS")?;
+            }
             CtrlMsg::Shutdown => return Ok(()),
             other => log::warn!("unexpected control message while serving: {other:?}"),
         }
@@ -708,6 +715,11 @@ struct GenericEngine {
     timeout: Duration,
     configs: HashMap<u32, LiveConfig>,
     scratch: Scratch,
+    /// Pre-resolved obs handles (name resolution takes the registry
+    /// mutex — cold path only): per-round latency distribution and the
+    /// lifetime round count this engine has served.
+    round_hist: Arc<obs::Histogram>,
+    rounds: Arc<obs::Counter>,
 }
 
 impl GenericEngine {
@@ -728,6 +740,8 @@ impl GenericEngine {
             timeout,
             configs: HashMap::new(),
             scratch: Scratch::default(),
+            round_hist: obs::global().histogram("worker.round"),
+            rounds: obs::global().counter("worker.rounds"),
         }
     }
 
@@ -808,7 +822,14 @@ impl GenericEngine {
             .configs
             .get_mut(&v.job)
             .with_context(|| format!("VALUES for collective {} but that config is not live", v.job))?;
-        generic_round(&mut cfg.handle, v, cfg.out_len, &mut self.scratch)
+        let span = obs::Span::start(&self.round_hist);
+        let out = generic_round(&mut cfg.handle, v, cfg.out_len, &mut self.scratch);
+        if out.is_err() {
+            // A failed round's timing would pollute the distribution.
+            span.cancel();
+        }
+        self.rounds.inc();
+        out
     }
 
     /// Drop one config's protocol handle — and with it the scatter

@@ -8,7 +8,7 @@
 //! over the `cluster` control plane (`CtrlMsg::Job`), where each worker
 //! runs the identical per-node loop from `apps::`.
 
-use crate::metrics::RunMetrics;
+use crate::obs::RunMetrics;
 use anyhow::{bail, Context, Result};
 use std::path::PathBuf;
 

@@ -37,11 +37,12 @@ use crate::cluster::proto::{
     recv_ctrl, reduce_op_code, send_ctrl, ConfigureMsg, CtrlMsg, ResultMsg, ValuesMsg, CLIENT,
     RES_STAGE_BOTTOM, RES_STAGE_FINAL, VAL_STAGE_DOWN, VAL_STAGE_FULL, VAL_STAGE_UP,
 };
+use crate::obs::{self, Span};
 use crate::sparse::{IndexSet, ReduceOp};
 use crate::transport::{connect_with_retry, wire, RetryPolicy};
 use anyhow::{bail, Context, Result};
 use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// How long a single client read may block. An expiry is NOT fatal:
@@ -80,6 +81,10 @@ pub struct RemoteSession {
     /// The pool's last advisory health census (one grade per physical
     /// worker; empty until the first census arrives).
     pool_health: Vec<u32>,
+    /// Pre-resolved obs handles: client-observed round RTT (send of the
+    /// first VALUES to the last RESULT) and read-timeout retries.
+    rtt_hist: Arc<obs::Histogram>,
+    retries: Arc<obs::Counter>,
 }
 
 impl Drop for RemoteSession {
@@ -163,6 +168,8 @@ impl RemoteSession {
             seq: 0,
             wire_buf: Vec::new(),
             pool_health: Vec::new(),
+            rtt_hist: obs::global().histogram("client.round_rtt"),
+            retries: obs::global().counter("client.retries"),
         })
     }
 
@@ -204,6 +211,7 @@ impl RemoteSession {
                     ) =>
                 {
                     expiries += 1;
+                    self.retries.inc();
                     if expiries >= READ_RETRIES {
                         bail!(
                             "pool is straggling: no answer in {:?} ({expiries} read \
@@ -270,8 +278,10 @@ impl RemoteSession {
     /// inbound set come back.
     pub fn allreduce<R: ReduceOp>(&mut self, values: Vec<Vec<R::T>>) -> Result<Vec<Vec<R::T>>> {
         self.seq += 1;
+        let span = Span::start(&self.rtt_hist);
         self.send_round::<R>(VAL_STAGE_FULL, values)?;
         let results = self.collect_round(RES_STAGE_FINAL)?;
+        span.finish();
         decode_lane_values::<R>(results)
     }
 
@@ -296,6 +306,7 @@ impl RemoteSession {
             bail!("one bottom transform per lane required");
         }
         self.seq += 1;
+        let span = Span::start(&self.rtt_hist);
         self.send_round::<R>(VAL_STAGE_DOWN, values)?;
         let mids = self.collect_round(RES_STAGE_BOTTOM)?;
         let mut ups: Vec<Vec<R::T>> = Vec::with_capacity(mids.len());
@@ -324,6 +335,7 @@ impl RemoteSession {
         }
         self.send_round::<R>(VAL_STAGE_UP, ups)?;
         let results = self.collect_round(RES_STAGE_FINAL)?;
+        span.finish();
         decode_lane_values::<R>(results)
     }
 

@@ -16,7 +16,7 @@ use crate::apps::diameter::{diameter_checksum, DiameterConfig, DiameterNode};
 use crate::apps::pagerank::{self, PageRankShards};
 use crate::apps::sgd::{sgd_step, NativeGradEngine, SgdConfig, SgdNode, SynthData};
 use crate::graph::{Csr, DatasetPreset, DatasetSpec};
-use crate::metrics::RunMetrics;
+use crate::obs::RunMetrics;
 use crate::sparse::{IndexSet, OrU32, SumF32};
 use anyhow::{bail, Context, Result};
 use std::sync::Arc;

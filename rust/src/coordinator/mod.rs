@@ -29,7 +29,7 @@ use crate::apps::pagerank::{DistPageRank, PageRankConfig, PageRankShards};
 use crate::cluster::{self, ClusterRun};
 use crate::config::RunConfig;
 use crate::graph::EdgeList;
-use crate::metrics::RunMetrics;
+use crate::obs::RunMetrics;
 use crate::simnet::CostModel;
 use crate::sparse::SumF32;
 use crate::topology::Butterfly;

@@ -14,6 +14,7 @@
 //! collective still complete via failover?
 
 use super::ReplicaMap;
+use crate::obs;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
@@ -91,6 +92,12 @@ impl FailureDetector {
     /// Record hard evidence of death (control connection EOF/error).
     pub fn mark_dead(&self, worker: usize) {
         let mut w = self.workers.lock().expect("detector poisoned");
+        if !w[worker].dead {
+            // Count the transition, not every piece of corroborating
+            // evidence — a dead worker's EOF and its failed sends must
+            // not inflate the census.
+            obs::global().counter("fault.hard_dead").inc();
+        }
         w[worker].dead = true;
     }
 
@@ -123,7 +130,15 @@ impl FailureDetector {
     pub fn set_straggler(&self, straggler: Option<usize>) {
         let mut w = self.workers.lock().expect("detector poisoned");
         for (i, s) in w.iter_mut().enumerate() {
+            let was = s.straggler;
             s.straggler = straggler == Some(i);
+            // Edge-triggered counters (the feed is periodic — counting
+            // every readout would just measure the feed rate).
+            if s.straggler && !was {
+                obs::global().counter("fault.suspect_raised").inc();
+            } else if was && !s.straggler {
+                obs::global().counter("fault.suspect_cleared").inc();
+            }
             if s.straggler {
                 s.straggler_streak = s.straggler_streak.saturating_add(1);
             } else {

@@ -32,7 +32,7 @@ pub mod control;
 pub mod coordinator;
 pub mod fault;
 pub mod graph;
-pub mod metrics;
+pub mod obs;
 pub mod partition;
 pub mod runtime;
 pub mod simnet;

@@ -34,6 +34,14 @@ fn main() {
     }
 }
 
+/// The `--no-obs` gate, shared by every command that accepts it: turn
+/// the process-wide obs registry off before any handle records.
+fn apply_no_obs(args: &Args) {
+    if args.has_switch("no-obs") {
+        sparse_allreduce::obs::set_enabled(false);
+    }
+}
+
 fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand.as_str() {
         "" | "help" | "--help" => cmd_help(args),
@@ -51,6 +59,8 @@ fn dispatch(args: &Args) -> Result<()> {
         "serve-bench" => cmd_serve_bench(args),
         "replan" => cmd_replan(args),
         "replan-bench" => cmd_replan_bench(args),
+        "stat" => cmd_stat(args),
+        "obs-bench" => cmd_obs_bench(args),
         "config-check" => cmd_config_check(args),
         other => bail!("unknown command `{other}`\n\n{USAGE}"),
     }
@@ -326,9 +336,10 @@ fn cmd_pagerank(args: &Args) -> Result<()> {
         "pagerank",
         &[
             "mode", "distributed", "dataset", "scale", "degrees", "replication", "iters",
-            "threads", "seed", "bin", "shards", "tune-profile", "pool",
+            "threads", "seed", "bin", "shards", "tune-profile", "pool", "no-obs",
         ],
     )?;
+    apply_no_obs(args);
     let mode = resolve_mode(args, "threaded")?;
     let replication = args.usize_flag("replication", 1)?;
     if replication > 1 && mode != ExecMode::MultiProcess {
@@ -434,13 +445,22 @@ fn print_job_outcome(cfg: &RunConfig, mode: ExecMode, out: &JobOutcome) {
     if !out.dead.is_empty() {
         println!("  dead workers (masked by replication): {:?}", out.dead);
     }
+    // Per-lane config/compute/comm breakdown. Pool and mp runs used to
+    // collect this and drop it on the floor; in-process modes already
+    // show the aggregate above, so keep their output unchanged.
+    if mode == ExecMode::MultiProcess {
+        for (n, m) in out.per_node.iter().enumerate() {
+            println!("  lane {n}: {}", m.describe());
+        }
+    }
 }
 
 fn cmd_diameter(args: &Args) -> Result<()> {
     args.expect_known(
         "diameter",
-        &["mode", "dataset", "scale", "degrees", "sketches", "max-h", "seed", "pool"],
+        &["mode", "dataset", "scale", "degrees", "sketches", "max-h", "seed", "pool", "no-obs"],
     )?;
+    apply_no_obs(args);
     let mode = resolve_mode(args, "lockstep")?;
     let degrees = args.degrees_flag("degrees", &[4, 2])?;
     let dataset = args.flag("dataset").unwrap_or("twitter").to_string();
@@ -501,9 +521,10 @@ fn cmd_sgd(args: &Args) -> Result<()> {
         "sgd",
         &[
             "mode", "features", "classes", "steps", "degrees", "batch", "lr", "feats-per-ex",
-            "seed", "pool",
+            "seed", "pool", "no-obs",
         ],
     )?;
+    apply_no_obs(args);
     let mode = resolve_mode(args, "lockstep")?;
     let degrees = args.degrees_flag("degrees", &[2, 2])?;
     let spec = JobSpec {
@@ -826,8 +847,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         &[
             "degrees", "replication", "threads", "bind", "client-bind", "sessions",
             "queue", "keepalive-secs", "total-sessions", "bin", "no-spawn", "tune-profile",
+            "stats-every", "no-obs",
         ],
     )?;
+    apply_no_obs(args);
     let mut opts = LaunchOpts {
         degrees: args.degrees_flag("degrees", &[2, 2])?,
         replication: args.usize_flag("replication", 1)?,
@@ -857,6 +880,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Some(_) => Some(args.usize_flag("total-sessions", 0)?),
             None => None,
         },
+        stats_every: match args.flag("stats-every") {
+            Some(_) => Some(std::time::Duration::from_secs(
+                args.u64_flag("stats-every", 0)?.max(1),
+            )),
+            None => None,
+        },
+        ..cluster::ServeOpts::default()
     };
     let client_bind = args.flag("client-bind").unwrap_or("127.0.0.1:0");
     let client_listener = std::net::TcpListener::bind(client_bind)
@@ -1034,6 +1064,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         queue_depth: 4,
         keepalive: std::time::Duration::from_secs(120),
         total: Some(iters * 4),
+        ..cluster::ServeOpts::default()
     };
     let serve = std::thread::spawn(move || {
         let stats = cluster::serve_mux(&mut session, &listener, &serve_opts);
@@ -1326,6 +1357,125 @@ fn cmd_replan_bench(args: &Args) -> Result<()> {
         summary_json(&t_replan),
         json_f64(ratio),
         stale != replanned
+    );
+    if let Some(dir) = out_path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+        }
+    }
+    std::fs::write(&out_path, json).with_context(|| format!("writing {}", out_path.display()))?;
+    println!("wrote {}", out_path.display());
+    Ok(())
+}
+
+/// `sar stat`: pull the merged cluster obs snapshot off a serving
+/// pool's client port (the same admin door `sar replan` uses) and
+/// print it — human table by default, the raw JSON rollup with
+/// `--json`.
+fn cmd_stat(args: &Args) -> Result<()> {
+    args.expect_known("stat", &["pool", "json"])?;
+    let addr = args
+        .flag("pool")
+        .ok_or_else(|| anyhow::anyhow!("--pool required\n\n{}", usage_for("stat").unwrap()))?;
+    let stats = cluster::pull_cluster_stats(addr)
+        .with_context(|| format!("pulling stats from the pool at {addr}"))?;
+    if args.has_switch("json") {
+        println!("{}", stats.to_json());
+    } else {
+        print!("{}", stats.render());
+    }
+    Ok(())
+}
+
+/// One obs-bench case: an in-process session over the given schedule
+/// running `rounds` SumF32 allreduces (lockstep for the oracle,
+/// threaded for the timed cases — threaded exercises the instrumented
+/// phase/byte paths in `allreduce::threaded`). Returns the
+/// fold-everything checksum and the per-round wall-time summary.
+fn obs_bench_run(
+    degrees: &[usize],
+    threaded: bool,
+    range: i64,
+    rounds: usize,
+) -> Result<(f64, sparse_allreduce::util::Summary)> {
+    let mut b = CommBuilder::new(degrees.to_vec()).send_threads(1);
+    if threaded {
+        b = b.mode(ExecMode::Threaded);
+    }
+    let mut sess = b.build(range)?;
+    let world: usize = degrees.iter().product();
+    let (out, inb) = serve_bench_patterns(world, range, 24, 11);
+    let mut cfg = sess.configure(out.clone(), inb)?;
+    let mut sum = 0f64;
+    let mut samples = Vec::with_capacity(rounds);
+    for round in 0..rounds {
+        let mut vals: Vec<Vec<f32>> = out
+            .iter()
+            .enumerate()
+            .map(|(n, s)| {
+                (0..s.len())
+                    .map(|i| ((n * 31 + i * 7 + round * 3 + 11) % 17) as f32 * 0.25)
+                    .collect()
+            })
+            .collect();
+        let t = std::time::Instant::now();
+        cfg.allreduce::<sparse_allreduce::sparse::SumF32>(&mut vals)?;
+        samples.push(t.elapsed().as_secs_f64());
+        for lane in &vals {
+            for v in lane {
+                sum += f64::from(*v);
+            }
+        }
+    }
+    Ok((sum, sparse_allreduce::util::Summary::of(&samples)))
+}
+
+/// `sar obs-bench`: the observability plane's acceptance gate — per-round
+/// threaded allreduce time with the obs registry recording vs disabled
+/// (`--no-obs` equivalent). Both cases' checksums must match the
+/// lockstep oracle before any timing is reported. Emits the
+/// `BENCH_9.json` row.
+fn cmd_obs_bench(args: &Args) -> Result<()> {
+    args.expect_known("obs-bench", &["lanes", "rounds", "out", "fast"])?;
+    let fast = args.has_switch("fast");
+    let lanes = args.usize_flag("lanes", 4)?.max(2);
+    let rounds = args.usize_flag("rounds", if fast { 12 } else { 48 })?.max(1);
+    let out_path = PathBuf::from(args.flag("out").unwrap_or("BENCH_9.json"));
+    let range: i64 = 4096;
+    let degrees = vec![lanes];
+    println!(
+        "obs-bench: {lanes} lanes, {rounds} threaded rounds over [0, {range}); \
+         instrumented vs no-obs"
+    );
+    let (want, _) = obs_bench_run(&degrees, false, range, rounds)?;
+    sparse_allreduce::obs::set_enabled(true);
+    let (sum_on, t_on) = obs_bench_run(&degrees, true, range, rounds)?;
+    sparse_allreduce::obs::set_enabled(false);
+    let (sum_off, t_off) = obs_bench_run(&degrees, true, range, rounds)?;
+    sparse_allreduce::obs::set_enabled(true);
+    for (case, got) in [("instrumented", sum_on), ("no-obs", sum_off)] {
+        if (got - want).abs() > 1e-9 {
+            bail!("the {case} case's checksum {got} diverged from the lockstep oracle {want}");
+        }
+    }
+    println!("  instrumented: p50 {}/round", human_duration(t_on.p50));
+    println!("  no-obs:       p50 {}/round", human_duration(t_off.p50));
+    let ratio = if t_off.p50 > 0.0 { t_on.p50 / t_off.p50 } else { 0.0 };
+    println!("  instrumented/no-obs p50 ratio {ratio:.3} (checksums match the lockstep oracle)");
+
+    use sparse_allreduce::bench::{json_f64, summary_json};
+    let json = format!(
+        "{{\n  \"bench\": 9,\n  \"experiment\": \"observability plane: per-round threaded \
+         allreduce time with the obs registry recording vs disabled\",\n  \
+         \"lanes\": {lanes},\n  \"rounds\": {rounds},\n  \"index_range\": {range},\n  \
+         \"rows\": [\n    {{\"case\":\"instrumented\",\"secs\":{}}},\n    \
+         {{\"case\":\"no_obs\",\"secs\":{}}}\n  ],\n  \
+         \"instrumented_over_no_obs_p50\": {},\n  \
+         \"checksums_match_lockstep\": true,\n  \"regenerate\": \"sar obs-bench --out \
+         BENCH_9.json\"\n}}\n",
+        summary_json(&t_on),
+        summary_json(&t_off),
+        json_f64(ratio),
     );
     if let Some(dir) = out_path.parent() {
         if !dir.as_os_str().is_empty() {

@@ -1,0 +1,30 @@
+//! Observability plane.
+//!
+//! Three layers, smallest first:
+//!
+//! - [`registry`] — the process-wide metrics registry: named counters,
+//!   gauges, and fixed-bucket latency histograms behind atomics,
+//!   snapshot-able without stopping writers. Hot paths cache handles;
+//!   `--no-obs` flips one flag and every site degrades to a relaxed
+//!   load.
+//! - [`span`] — scoped timers over registry histograms; the per-round
+//!   scatter/reduce/gather/merge/wire phase timings are spans.
+//! - [`run`] — per-run report metrics (`RunMetrics`: config/compute/
+//!   comm breakdowns that travel inside job reports) and the markdown
+//!   [`Table`] the bench harness prints through.
+//! - [`stats`] — the cluster rollup: worker registry snapshots pulled
+//!   over `CtrlMsg::Stats` merged with serve-plane counters into a
+//!   [`ClusterStats`], rendered by `sar stat`.
+
+pub mod registry;
+pub mod run;
+pub mod span;
+pub mod stats;
+
+pub use registry::{
+    bucket_of, enabled, global, set_enabled, Counter, Gauge, HistSnapshot, Histogram,
+    Registry, Snapshot, HIST_BUCKETS,
+};
+pub use run::{IterTiming, RunMetrics, Table};
+pub use span::Span;
+pub use stats::{snapshot_json, ClusterStats};

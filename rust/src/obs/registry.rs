@@ -1,0 +1,453 @@
+//! Process-wide, lock-cheap metrics registry.
+//!
+//! Counters, gauges, and fixed-bucket histograms live behind plain
+//! atomics: the hot path (a round recording its latency, a transport
+//! counting bytes) is a handful of relaxed atomic ops on a pre-resolved
+//! handle — no lock, no allocation. The registry's mutex is only taken
+//! on the *cold* paths: resolving a name to a handle (done once per
+//! instrumentation site, the handle is then cached) and taking a
+//! [`Snapshot`] (reads every atomic without stopping writers, so a
+//! snapshot is a consistent-enough census: counters observed are
+//! monotone across snapshots, and a histogram's count is by
+//! construction the sum of its bucket counts).
+//!
+//! Each registry carries an enabled flag that every handle minted from
+//! it shares ([`set_enabled`], the `--no-obs` CLI switch): when off,
+//! recorded values are dropped after one relaxed load, and spans skip
+//! even their clock reads (see [`super::span`]).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+/// Histogram bucket count. Bucket `i` holds samples in
+/// `[2^i, 2^(i+1))` microseconds (bucket 0 additionally absorbs 0), so
+/// 26 buckets span 1 µs .. ~67 s; the last bucket absorbs overflow.
+pub const HIST_BUCKETS: usize = 26;
+
+/// The bucket a microsecond sample lands in (log2, clamped).
+pub fn bucket_of(us: u64) -> usize {
+    if us == 0 {
+        return 0;
+    }
+    ((63 - us.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+}
+
+/// A monotone event counter.
+#[derive(Debug)]
+pub struct Counter {
+    value: AtomicU64,
+    enabled: Arc<AtomicBool>,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        if self.enabled.load(Ordering::Relaxed) {
+            self.value.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-writer-wins level (queue depth, live sessions).
+#[derive(Debug)]
+pub struct Gauge {
+    value: AtomicI64,
+    enabled: Arc<AtomicBool>,
+}
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        if self.enabled.load(Ordering::Relaxed) {
+            self.value.store(v, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> i64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// A fixed-bucket log2 latency histogram (microsecond samples). The
+/// sample count is not stored separately — it IS the sum of the bucket
+/// counts, so a concurrent snapshot can never observe a count that
+/// disagrees with its buckets.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    sum_us: AtomicU64,
+    enabled: Arc<AtomicBool>,
+}
+
+impl Histogram {
+    /// Whether samples are currently being kept — the span layer checks
+    /// this BEFORE reading the clock, so a disabled process pays one
+    /// relaxed load per would-be span.
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn record_us(&self, us: u64) {
+        if self.is_enabled() {
+            self.buckets[bucket_of(us)].fetch_add(1, Ordering::Relaxed);
+            self.sum_us.fetch_add(us, Ordering::Relaxed);
+        }
+    }
+
+    pub fn record(&self, d: Duration) {
+        self.record_us(d.as_micros() as u64);
+    }
+
+    pub fn snapshot(&self, name: &str) -> HistSnapshot {
+        let buckets: Vec<u64> =
+            self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let count = buckets.iter().sum();
+        HistSnapshot {
+            name: name.to_string(),
+            buckets,
+            count,
+            sum_us: self.sum_us.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// One histogram's state at snapshot time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistSnapshot {
+    pub name: String,
+    /// `HIST_BUCKETS` log2-microsecond bucket counts.
+    pub buckets: Vec<u64>,
+    /// Total samples (= sum of `buckets`).
+    pub count: u64,
+    /// Sum of all recorded samples, microseconds.
+    pub sum_us: u64,
+}
+
+impl HistSnapshot {
+    /// An empty histogram under `name` (merge identity).
+    pub fn empty(name: &str) -> Self {
+        Self { name: name.to_string(), buckets: vec![0; HIST_BUCKETS], count: 0, sum_us: 0 }
+    }
+
+    /// Mean sample in seconds (0 when empty).
+    pub fn mean_secs(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64 / 1e6
+        }
+    }
+
+    /// Approximate quantile in seconds from the bucket midpoints
+    /// (`q` in [0, 1]; 0 when empty).
+    pub fn quantile_secs(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((self.count as f64 * q).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                // Midpoint of [2^i, 2^(i+1)) µs; bucket 0 spans [0, 2).
+                let lo = if i == 0 { 0.0 } else { (1u64 << i) as f64 };
+                let hi = (1u64 << (i + 1)) as f64;
+                return (lo + hi) / 2.0 / 1e6;
+            }
+        }
+        0.0
+    }
+
+    /// Fold another snapshot of the same metric into this one.
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (b, o) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+    }
+}
+
+/// A point-in-time census of every registered metric, sorted by name.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Snapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, i64)>,
+    pub hists: Vec<HistSnapshot>,
+}
+
+impl Snapshot {
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.hists.is_empty()
+    }
+
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(n, _)| n == name).map(|&(_, v)| v)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<i64> {
+        self.gauges.iter().find(|(n, _)| n == name).map(|&(_, v)| v)
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&HistSnapshot> {
+        self.hists.iter().find(|h| h.name == name)
+    }
+}
+
+/// One metric namespace. [`global`] is the process-wide instance every
+/// instrumentation site records into; tests build private ones so their
+/// counts (and enabled flags) never interfere.
+pub struct Registry {
+    enabled: Arc<AtomicBool>,
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    hists: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl std::fmt::Debug for Registry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // The maps are behind mutexes and the handles are just atomics;
+        // a structural dump is noise. Identify the registry, not its
+        // contents — `snapshot()` is the readable view.
+        f.debug_struct("Registry").field("enabled", &self.enabled()).finish_non_exhaustive()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self {
+            enabled: Arc::new(AtomicBool::new(true)),
+            counters: Mutex::new(BTreeMap::new()),
+            gauges: Mutex::new(BTreeMap::new()),
+            hists: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Flip recording on/off for every handle minted from this
+    /// registry (past and future).
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Resolve (registering on first use) a counter. Cold path: cache
+    /// the returned handle at the instrumentation site.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.counters.lock().expect("obs registry poisoned");
+        m.entry(name.to_string())
+            .or_insert_with(|| {
+                Arc::new(Counter { value: AtomicU64::new(0), enabled: self.enabled.clone() })
+            })
+            .clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.gauges.lock().expect("obs registry poisoned");
+        m.entry(name.to_string())
+            .or_insert_with(|| {
+                Arc::new(Gauge { value: AtomicI64::new(0), enabled: self.enabled.clone() })
+            })
+            .clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut m = self.hists.lock().expect("obs registry poisoned");
+        m.entry(name.to_string())
+            .or_insert_with(|| {
+                Arc::new(Histogram {
+                    buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+                    sum_us: AtomicU64::new(0),
+                    enabled: self.enabled.clone(),
+                })
+            })
+            .clone()
+    }
+
+    /// Census every metric without stopping writers.
+    pub fn snapshot(&self) -> Snapshot {
+        let counters = self
+            .counters
+            .lock()
+            .expect("obs registry poisoned")
+            .iter()
+            .map(|(n, c)| (n.clone(), c.get()))
+            .collect();
+        let gauges = self
+            .gauges
+            .lock()
+            .expect("obs registry poisoned")
+            .iter()
+            .map(|(n, g)| (n.clone(), g.get()))
+            .collect();
+        let hists = self
+            .hists
+            .lock()
+            .expect("obs registry poisoned")
+            .iter()
+            .map(|(n, h)| h.snapshot(n))
+            .collect();
+        Snapshot { counters, gauges, hists }
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+static GLOBAL: OnceLock<Registry> = OnceLock::new();
+
+/// The process-wide registry every instrumentation site records into.
+pub fn global() -> &'static Registry {
+    GLOBAL.get_or_init(Registry::new)
+}
+
+/// Whether process-wide instrumentation is live (the `--no-obs` gate).
+pub fn enabled() -> bool {
+    global().enabled()
+}
+
+/// Flip process-wide instrumentation on/off.
+pub fn set_enabled(on: bool) {
+    global().set_enabled(on);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_log2_and_clamped() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 1);
+        assert_eq!(bucket_of(1024), 10);
+        assert_eq!(bucket_of(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn counters_and_gauges_roundtrip() {
+        let r = Registry::new();
+        let c = r.counter("x");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // Same name resolves to the same metric.
+        assert_eq!(r.counter("x").get(), 5);
+        let g = r.gauge("depth");
+        g.set(7);
+        assert_eq!(r.gauge("depth").get(), 7);
+        let s = r.snapshot();
+        assert_eq!(s.counter("x"), Some(5));
+        assert_eq!(s.gauge("depth"), Some(7));
+    }
+
+    #[test]
+    fn histogram_count_equals_bucket_sum_and_quantiles_order() {
+        let r = Registry::new();
+        let h = r.histogram("lat");
+        for us in [1u64, 10, 100, 1000, 10_000, 100_000] {
+            h.record_us(us);
+        }
+        let s = r.snapshot();
+        let hs = s.hist("lat").unwrap();
+        assert_eq!(hs.count, 6);
+        assert_eq!(hs.count, hs.buckets.iter().sum::<u64>());
+        assert_eq!(hs.sum_us, 111_111);
+        assert!(hs.mean_secs() > 0.0);
+        let p50 = hs.quantile_secs(0.5);
+        let p99 = hs.quantile_secs(0.99);
+        assert!(p50 <= p99, "p50 {p50} vs p99 {p99}");
+        assert!(p99 >= 0.05, "largest sample 0.1s must pull p99 up, got {p99}");
+    }
+
+    #[test]
+    fn hist_merge_adds_bucketwise() {
+        let r = Registry::new();
+        let a_src = r.histogram("a");
+        a_src.record_us(3);
+        a_src.record_us(300);
+        let b_src = r.histogram("b");
+        b_src.record_us(3);
+        let mut a = a_src.snapshot("m");
+        let b = b_src.snapshot("m");
+        a.merge(&b);
+        assert_eq!(a.count, 3);
+        assert_eq!(a.sum_us, 306);
+        assert_eq!(a.count, a.buckets.iter().sum::<u64>());
+    }
+
+    /// Satellite: concurrent writers vs snapshot consistency. Snapshots
+    /// taken while writers hammer the registry must show monotone
+    /// counters and histograms whose count equals the sum of their
+    /// bucket counts — never a torn census.
+    #[test]
+    fn concurrent_writers_vs_snapshots() {
+        let r = Arc::new(Registry::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut writers = Vec::new();
+        for t in 0..4u64 {
+            let r = r.clone();
+            let stop = stop.clone();
+            writers.push(std::thread::spawn(move || {
+                let c = r.counter("events");
+                let h = r.histogram("lat");
+                let mut n = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    c.inc();
+                    h.record_us(1 + (n * 7 + t) % 100_000);
+                    n += 1;
+                }
+                n
+            }));
+        }
+        let mut last_counter = 0u64;
+        let mut last_hist = 0u64;
+        for _ in 0..50 {
+            let s = r.snapshot();
+            let c = s.counter("events").unwrap_or(0);
+            assert!(c >= last_counter, "counter went backwards: {c} < {last_counter}");
+            last_counter = c;
+            if let Some(h) = s.hist("lat") {
+                assert_eq!(h.count, h.buckets.iter().sum::<u64>(), "torn histogram");
+                assert!(h.count >= last_hist, "histogram count went backwards");
+                last_hist = h.count;
+            }
+            std::thread::yield_now();
+        }
+        stop.store(true, Ordering::Relaxed);
+        let total: u64 = writers.into_iter().map(|w| w.join().unwrap()).sum();
+        let s = r.snapshot();
+        assert_eq!(s.counter("events"), Some(total));
+        assert_eq!(s.hist("lat").unwrap().count, total);
+    }
+
+    #[test]
+    fn disabled_registry_drops_samples_cheaply() {
+        let r = Registry::new();
+        let c = r.counter("gated");
+        let h = r.histogram("gated_lat");
+        r.set_enabled(false);
+        assert!(!h.is_enabled());
+        c.inc();
+        h.record_us(10);
+        r.set_enabled(true);
+        assert_eq!(c.get(), 0, "disabled increments must be dropped");
+        assert_eq!(h.snapshot("gated_lat").count, 0);
+        c.inc();
+        assert_eq!(c.get(), 1);
+    }
+}

@@ -1,5 +1,10 @@
-//! Iteration metrics: timing breakdowns (compute vs communication) and
-//! table emitters for the experiment harness.
+//! Per-run iteration metrics (compute vs communication breakdowns) and
+//! the markdown table emitter the bench harness prints through.
+//!
+//! This is the report-side half of the observability plane: where the
+//! registry ([`super::registry`]) accumulates process-lifetime
+//! distributions, these records belong to ONE run and travel inside
+//! job reports (`WorkerReport`, `JobOutcome`, `ClusterRun`).
 
 use crate::util::{human_duration, Summary};
 use std::time::Duration;

@@ -1,0 +1,326 @@
+//! Cluster-wide stat rollup: per-worker registry snapshots pulled over
+//! the control plane, merged with the serve process's own counters into
+//! one [`ClusterStats`] — the payload behind `sar stat`.
+//!
+//! The wire form is a FLAT snapshot (one `CtrlMsg::Stats` frame):
+//! worker metrics are prefixed `w<node>/`, serve-plane metrics
+//! `serve/`. [`ClusterStats::to_flat`] / [`ClusterStats::from_flat`]
+//! are inverses, so the client reconstructs per-worker granularity
+//! from one frame.
+
+use super::registry::{HistSnapshot, Snapshot};
+
+/// The merged cluster snapshot: every worker's registry census plus
+/// the serve process's own.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ClusterStats {
+    /// `(physical node id, that worker's snapshot)`, ascending by node.
+    pub workers: Vec<(u32, Snapshot)>,
+    /// The serve/coordinator process's local metrics (admissions,
+    /// evictions, dispatch latency, ...).
+    pub serve: Snapshot,
+}
+
+fn prefixed(prefix: &str, snap: &Snapshot, into: &mut Snapshot) {
+    for (n, v) in &snap.counters {
+        into.counters.push((format!("{prefix}{n}"), *v));
+    }
+    for (n, v) in &snap.gauges {
+        into.gauges.push((format!("{prefix}{n}"), *v));
+    }
+    for h in &snap.hists {
+        let mut h = h.clone();
+        h.name = format!("{prefix}{}", h.name);
+        into.hists.push(h);
+    }
+}
+
+/// Split `w<digits>/rest` into `(node, rest)`.
+fn worker_prefix(name: &str) -> Option<(u32, &str)> {
+    let rest = name.strip_prefix('w')?;
+    let (digits, metric) = rest.split_once('/')?;
+    digits.parse().ok().map(|node| (node, metric))
+}
+
+impl ClusterStats {
+    /// One flat snapshot carrying the whole rollup (the wire form).
+    pub fn to_flat(&self) -> Snapshot {
+        let mut flat = Snapshot::default();
+        for (node, snap) in &self.workers {
+            prefixed(&format!("w{node}/"), snap, &mut flat);
+        }
+        prefixed("serve/", &self.serve, &mut flat);
+        flat
+    }
+
+    /// Rebuild the rollup from its flat wire form.
+    pub fn from_flat(flat: &Snapshot) -> ClusterStats {
+        let mut out = ClusterStats::default();
+        let mut worker_mut = |node: u32| -> usize {
+            match out.workers.iter().position(|(n, _)| *n == node) {
+                Some(i) => i,
+                None => {
+                    out.workers.push((node, Snapshot::default()));
+                    out.workers.sort_by_key(|(n, _)| *n);
+                    out.workers.iter().position(|(n, _)| *n == node).expect("just inserted")
+                }
+            }
+        };
+        for (name, v) in &flat.counters {
+            if let Some((node, metric)) = worker_prefix(name) {
+                let i = worker_mut(node);
+                out.workers[i].1.counters.push((metric.to_string(), *v));
+            } else {
+                let metric = name.strip_prefix("serve/").unwrap_or(name);
+                out.serve.counters.push((metric.to_string(), *v));
+            }
+        }
+        for (name, v) in &flat.gauges {
+            if let Some((node, metric)) = worker_prefix(name) {
+                let i = worker_mut(node);
+                out.workers[i].1.gauges.push((metric.to_string(), *v));
+            } else {
+                let metric = name.strip_prefix("serve/").unwrap_or(name);
+                out.serve.gauges.push((metric.to_string(), *v));
+            }
+        }
+        for h in &flat.hists {
+            if let Some((node, metric)) = worker_prefix(&h.name) {
+                let i = worker_mut(node);
+                let mut h = h.clone();
+                h.name = metric.to_string();
+                out.workers[i].1.hists.push(h);
+            } else {
+                let mut h = h.clone();
+                h.name = h.name.strip_prefix("serve/").unwrap_or(&h.name).to_string();
+                out.serve.hists.push(h);
+            }
+        }
+        out
+    }
+
+    /// Pool-wide totals: worker counters summed, worker histograms
+    /// merged bucket-wise, by metric name (gauges are per-process
+    /// levels and do not meaningfully sum — the max is kept).
+    pub fn merged(&self) -> Snapshot {
+        let mut m = Snapshot::default();
+        for (_, snap) in &self.workers {
+            for (n, v) in &snap.counters {
+                match m.counters.iter_mut().find(|(mn, _)| mn == n) {
+                    Some((_, mv)) => *mv += v,
+                    None => m.counters.push((n.clone(), *v)),
+                }
+            }
+            for (n, v) in &snap.gauges {
+                match m.gauges.iter_mut().find(|(mn, _)| mn == n) {
+                    Some((_, mv)) => *mv = (*mv).max(*v),
+                    None => m.gauges.push((n.clone(), *v)),
+                }
+            }
+            for h in &snap.hists {
+                match m.hists.iter_mut().find(|mh| mh.name == h.name) {
+                    Some(mh) => mh.merge(h),
+                    None => m.hists.push(h.clone()),
+                }
+            }
+        }
+        m.counters.sort();
+        m.gauges.sort();
+        m.hists.sort_by(|a, b| a.name.cmp(&b.name));
+        m
+    }
+
+    /// Human-readable report: serve-plane counters, pool-wide merged
+    /// histograms, then one line per worker phase histogram.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("cluster stats ({} worker(s))\n", self.workers.len()));
+        if !self.serve.is_empty() {
+            out.push_str("serve plane:\n");
+            for (n, v) in &self.serve.counters {
+                out.push_str(&format!("  {n:<28} {v}\n"));
+            }
+            for (n, v) in &self.serve.gauges {
+                out.push_str(&format!("  {n:<28} {v}\n"));
+            }
+            for h in &self.serve.hists {
+                out.push_str(&format!("  {}\n", hist_line(h)));
+            }
+        }
+        let merged = self.merged();
+        if !merged.is_empty() {
+            out.push_str("pool (all workers merged):\n");
+            for (n, v) in &merged.counters {
+                out.push_str(&format!("  {n:<28} {v}\n"));
+            }
+            for h in &merged.hists {
+                out.push_str(&format!("  {}\n", hist_line(h)));
+            }
+        }
+        for (node, snap) in &self.workers {
+            if snap.hists.iter().any(|h| h.count > 0) {
+                out.push_str(&format!("worker {node}:\n"));
+                for h in &snap.hists {
+                    if h.count > 0 {
+                        out.push_str(&format!("  {}\n", hist_line(h)));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Machine form (`sar stat --json`): see README "Observability" for
+    /// the schema. Hand-emitted (no serde in the vendor set).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n  \"workers\": {");
+        for (i, (node, snap)) in self.workers.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\n    \"{node}\": {}", snapshot_json(snap, 4)));
+        }
+        out.push_str("\n  },\n  \"serve\": ");
+        out.push_str(&snapshot_json(&self.serve, 2));
+        out.push_str(",\n  \"cluster\": ");
+        out.push_str(&snapshot_json(&self.merged(), 2));
+        out.push_str("\n}\n");
+        out
+    }
+}
+
+fn hist_line(h: &HistSnapshot) -> String {
+    format!(
+        "{:<28} count={} mean={:.3}ms p50={:.3}ms p99={:.3}ms",
+        h.name,
+        h.count,
+        h.mean_secs() * 1e3,
+        h.quantile_secs(0.5) * 1e3,
+        h.quantile_secs(0.99) * 1e3
+    )
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// One snapshot as a JSON object (counters/gauges as maps, histograms
+/// as objects with derived stats plus the raw buckets).
+pub fn snapshot_json(s: &Snapshot, indent: usize) -> String {
+    let pad = " ".repeat(indent);
+    let inner = " ".repeat(indent + 2);
+    let mut out = String::from("{");
+    out.push_str(&format!("\n{inner}\"counters\": {{"));
+    for (i, (n, v)) in s.counters.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(" \"{}\": {v}", json_escape(n)));
+    }
+    out.push_str(" },");
+    out.push_str(&format!("\n{inner}\"gauges\": {{"));
+    for (i, (n, v)) in s.gauges.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(" \"{}\": {v}", json_escape(n)));
+    }
+    out.push_str(" },");
+    out.push_str(&format!("\n{inner}\"hists\": {{"));
+    for (i, h) in s.hists.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let buckets =
+            h.buckets.iter().map(|b| b.to_string()).collect::<Vec<_>>().join(",");
+        out.push_str(&format!(
+            "\n{inner}  \"{}\": {{ \"count\": {}, \"sum_us\": {}, \"mean_secs\": {}, \
+             \"p50_secs\": {}, \"p99_secs\": {}, \"buckets\": [{buckets}] }}",
+            json_escape(&h.name),
+            h.count,
+            h.sum_us,
+            h.mean_secs(),
+            h.quantile_secs(0.5),
+            h.quantile_secs(0.99),
+        ));
+    }
+    if s.hists.is_empty() {
+        out.push_str(" }");
+    } else {
+        out.push_str(&format!("\n{inner}}}"));
+    }
+    out.push_str(&format!("\n{pad}}}"));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::registry::Registry;
+
+    fn sample_stats() -> ClusterStats {
+        let w0 = Registry::new();
+        w0.counter("net.bytes_out").add(100);
+        w0.histogram("phase.reduce").record_us(500);
+        w0.histogram("phase.reduce").record_us(700);
+        let w1 = Registry::new();
+        w1.counter("net.bytes_out").add(40);
+        w1.histogram("phase.reduce").record_us(900);
+        let serve = Registry::new();
+        serve.counter("serve.admitted").add(2);
+        serve.gauge("serve.live").set(1);
+        ClusterStats {
+            workers: vec![(0, w0.snapshot()), (1, w1.snapshot())],
+            serve: serve.snapshot(),
+        }
+    }
+
+    #[test]
+    fn flat_roundtrip_preserves_structure() {
+        let stats = sample_stats();
+        let flat = stats.to_flat();
+        assert!(flat.counter("w0/net.bytes_out").is_some());
+        assert!(flat.counter("serve/serve.admitted").is_some());
+        let back = ClusterStats::from_flat(&flat);
+        assert_eq!(back, stats);
+    }
+
+    #[test]
+    fn merged_sums_counters_and_histograms() {
+        let m = sample_stats().merged();
+        assert_eq!(m.counter("net.bytes_out"), Some(140));
+        let h = m.hist("phase.reduce").unwrap();
+        assert_eq!(h.count, 3);
+        assert_eq!(h.sum_us, 2100);
+        assert_eq!(h.count, h.buckets.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn render_and_json_are_well_formed() {
+        let stats = sample_stats();
+        let text = stats.render();
+        assert!(text.contains("serve.admitted"), "{text}");
+        assert!(text.contains("worker 0:"), "{text}");
+        let json = stats.to_json();
+        assert!(json.contains("\"workers\""), "{json}");
+        assert!(json.contains("\"phase.reduce\""), "{json}");
+        // Brace/bracket balance is a cheap well-formedness check given
+        // no JSON parser in the vendor set.
+        for (open, close) in [('{', '}'), ('[', ']')] {
+            let o = json.matches(open).count();
+            let c = json.matches(close).count();
+            assert_eq!(o, c, "unbalanced {open}{close} in {json}");
+        }
+    }
+
+    #[test]
+    fn from_flat_tolerates_unprefixed_names() {
+        let mut flat = Snapshot::default();
+        flat.counters.push(("loose".into(), 3));
+        flat.counters.push(("wXYZ/none".into(), 4)); // not a worker prefix
+        let back = ClusterStats::from_flat(&flat);
+        assert!(back.workers.is_empty());
+        assert_eq!(back.serve.counter("loose"), Some(3));
+        assert_eq!(back.serve.counter("wXYZ/none"), Some(4));
+    }
+}

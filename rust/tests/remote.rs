@@ -10,8 +10,9 @@
 //! (`cargo test --test remote mp_`).
 
 use sparse_allreduce::cluster::{
-    serve_mux, spawn_session, LaunchOpts, LocalProcs, ServeOpts, ServeStats,
+    pull_cluster_stats, serve_mux, spawn_session, LaunchOpts, LocalProcs, ServeOpts, ServeStats,
 };
+use sparse_allreduce::obs;
 use sparse_allreduce::comm::{CommBuilder, ExecMode, JobSpec};
 use sparse_allreduce::sparse::{IndexSet, MaxF32, OrU32, SumF32};
 use std::net::TcpListener;
@@ -464,6 +465,7 @@ fn mp_remote_keepalive_evicts_idle_session_and_frees_its_slot() {
         queue_depth: 4,
         keepalive: Duration::from_millis(1500),
         total: Some(2),
+        ..ServeOpts::default()
     };
     let (addr, serve) = serve_pool_opts(sopts);
 
@@ -509,4 +511,87 @@ fn mp_remote_keepalive_evicts_idle_session_and_frees_its_slot() {
     assert_eq!(stats.served, 2, "stats: {stats:?}");
     assert_eq!(stats.evicted, 1, "client A should have been evicted: {stats:?}");
     assert_eq!(stats.peak_live, 1, "only one session may be live at a time");
+}
+
+/// Observability acceptance (`sar stat`): after a scripted two-client
+/// run, a stat pull through the client port returns a merged rollup
+/// whose serve-plane counters agree with the serve loop's own
+/// [`ServeStats`], and whose per-worker censuses carry exactly the
+/// engine rounds the clients drove. The pool records into a private
+/// registry ([`ServeOpts::registry`]) so serve tests running
+/// concurrently in this process can't skew the exact counts.
+#[test]
+fn mp_stat_pull_agrees_with_serve_stats_after_scripted_run() {
+    let sopts = ServeOpts {
+        max_live: 2,
+        total: Some(3),
+        registry: Some(Arc::new(obs::Registry::new())),
+        ..ServeOpts::default()
+    };
+    let (addr, serve) = serve_pool_opts(sopts);
+
+    // The scripted run: client A drives two rounds, client B one.
+    let out = sets(vec![vec![1, 5], vec![5, 9], vec![2], vec![]]);
+    let inb = sets(vec![vec![5], vec![1, 2], vec![9], vec![5, 9]]);
+    for rounds in [2usize, 1] {
+        let mut client = remote_session(&addr);
+        let mut rc = client.configure(out.clone(), inb.clone()).expect("configure");
+        for _ in 0..rounds {
+            let mut v = vec![vec![1.0f32, 10.0], vec![20.0, 3.0], vec![7.0], vec![]];
+            rc.allreduce::<SumF32>(&mut v).expect("allreduce");
+        }
+    }
+    // Both clients dropped; give the mux loop a beat to process the
+    // disconnects — the Gone events (reader threads) race the stat
+    // connection's accept, and the counts below assume both sessions
+    // ended before the pull.
+    std::thread::sleep(Duration::from_millis(500));
+
+    let pulled = pull_cluster_stats(&addr).expect("stat pull");
+
+    // Worker censuses: one per pool worker, each having run one engine
+    // round per client round (2 + 1).
+    assert_eq!(pulled.workers.len(), 4, "one census per worker");
+    for (node, snap) in &pulled.workers {
+        assert_eq!(snap.counter("worker.rounds"), Some(3), "worker {node} rounds");
+        let h = snap.hist("worker.round").expect("worker round histogram");
+        assert_eq!(h.count, 3, "worker {node} round latency samples");
+        assert!(h.sum_us > 0, "worker {node} round latencies can't all be zero");
+    }
+    let merged = pulled.merged();
+    assert_eq!(merged.counter("worker.rounds"), Some(12), "4 workers x 3 rounds");
+
+    // Serve-plane counters at pull time: the two ended clients, plus
+    // the stat pull itself as the third admission (budget-refunded,
+    // but admitted — and still live while the snapshot is taken).
+    let s = &pulled.serve;
+    assert_eq!(s.counter("serve.served"), Some(2), "snapshot: {s:?}");
+    assert_eq!(s.counter("serve.admitted"), Some(3), "A, B and the stat admin");
+    assert_eq!(s.counter("serve.rounds"), Some(3), "2 + 1 dispatched rounds");
+    assert_eq!(s.gauge("serve.live"), Some(1), "the stat admin itself");
+    assert_eq!(s.gauge("serve.queued"), Some(0));
+    let sess = s.hist("serve.session_rounds").expect("session-round histogram");
+    assert_eq!((sess.count, sess.sum_us), (2, 3), "two sessions, three rounds total");
+    let d = s.hist("serve.dispatch").expect("dispatch histogram");
+    assert_eq!(d.count, 5, "2 config + 3 round batches dispatched");
+
+    // Spend the remaining budget so the serve loop exits, then check
+    // the pulled numbers against the loop's own exit stats: exactly one
+    // more session ran after the pull, nothing was evicted or rejected
+    // either side of it.
+    {
+        let mut client = remote_session(&addr);
+        let mut rc = client.configure(out, inb).expect("third configure");
+        let mut v = vec![vec![1.0f32, 10.0], vec![20.0, 3.0], vec![7.0], vec![]];
+        rc.allreduce::<SumF32>(&mut v).expect("third allreduce");
+    }
+    let stats = serve.join().expect("serve thread");
+    assert_eq!(stats.served, 3, "stats: {stats:?}");
+    assert_eq!(
+        s.counter("serve.served"),
+        Some(stats.served as u64 - 1),
+        "the pull preceded the third session"
+    );
+    assert_eq!(s.counter("serve.evicted"), Some(stats.evicted as u64));
+    assert_eq!(s.counter("serve.rejected"), Some(stats.rejected as u64));
 }

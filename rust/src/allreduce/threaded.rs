@@ -8,6 +8,7 @@
 //! different groups may legitimately be a layer apart.
 
 use super::protocol::{ConfigPart, NodeProtocol, Phase};
+use crate::obs::trace::{self, TraceTags};
 use crate::obs::{self, Span};
 use crate::sparse::{IndexSet, ReduceOp};
 use crate::topology::{Butterfly, NodeId};
@@ -100,6 +101,19 @@ impl<T: Transport + 'static> NodeHandle<T> {
         self.seq = base;
     }
 
+    /// Trace tags for the current collective: the job id rides the
+    /// high half of the sequence space (see [`NodeHandle::set_seq_base`],
+    /// `job << 16`), the round counter within the job the low half.
+    fn ttags(&self, layer: usize) -> TraceTags {
+        TraceTags {
+            job: self.seq >> 16,
+            round: self.seq & 0xFFFF,
+            node: self.proto.node() as u32,
+            layer: layer as u32,
+            ..Default::default()
+        }
+    }
+
     /// Wait for the message `(tag, src)`, pulling from the pending buffer
     /// or the transport.
     fn await_msg(&mut self, tag: Tag, src: NodeId) -> Result<Vec<u8>, TransportError> {
@@ -126,6 +140,7 @@ impl<T: Transport + 'static> NodeHandle<T> {
         own: Vec<u8>,
     ) -> Result<Vec<Vec<u8>>, TransportError> {
         let span = Span::start(&self.obs.wire);
+        let tring = trace::ring();
         let tag = Tag::new(self.seq, phase, layer);
         let group = self.proto.group(layer);
         let my_slot = self.proto.slot(layer);
@@ -136,6 +151,14 @@ impl<T: Transport + 'static> NodeHandle<T> {
                 continue;
             }
             sent += payload.len() as u64;
+            tring.flow_send(
+                "net.edge",
+                TraceTags {
+                    peer: group[j] as u32,
+                    bytes: payload.len() as u64,
+                    ..self.ttags(layer)
+                },
+            );
             let env = Envelope { src: self.proto.node(), tag, payload };
             self.pool.send(&self.transport, group[j], env);
         }
@@ -147,6 +170,14 @@ impl<T: Transport + 'static> NodeHandle<T> {
             } else {
                 got[j] = self.await_msg(tag, src)?;
                 received += got[j].len() as u64;
+                tring.flow_recv(
+                    "net.edge",
+                    TraceTags {
+                        peer: src as u32,
+                        bytes: got[j].len() as u64,
+                        ..self.ttags(layer)
+                    },
+                );
             }
         }
         let errs = self.pool.wait();
@@ -173,8 +204,10 @@ impl<T: Transport + 'static> NodeHandle<T> {
     ) -> Result<(), TransportError> {
         self.seq += 1;
         let _span = Span::start(&self.obs.scatter);
+        let _tspan = trace::ring().span("config", self.ttags(0));
         self.proto.begin_config(outbound, inbound);
         for layer in 0..self.proto.topology().layers() {
+            let _lspan = trace::ring().span("layer.config", self.ttags(layer));
             let parts = self.proto.config_outgoing(layer);
             let my_slot = self.proto.slot(layer);
             let own = wire::encode_config_part(&parts[my_slot]);
@@ -198,6 +231,7 @@ impl<T: Transport + 'static> NodeHandle<T> {
         let layers = self.proto.topology().layers();
         let mut current = values;
         for layer in 0..layers {
+            let _lspan = trace::ring().span("layer.reduce", self.ttags(layer));
             let segs = self.proto.reduce_down_outgoing::<R>(layer, &current);
             let my_slot = self.proto.slot(layer);
             let own = wire::encode_values::<R>(segs[my_slot]);
@@ -221,6 +255,7 @@ impl<T: Transport + 'static> NodeHandle<T> {
         let layers = self.proto.topology().layers();
         let mut current = values;
         for layer in (0..layers).rev() {
+            let _lspan = trace::ring().span("layer.gather", self.ttags(layer));
             let segs = self.proto.reduce_up_outgoing::<R>(layer, &current);
             let my_slot = self.proto.slot(layer);
             let own = wire::encode_values::<R>(&segs[my_slot]);
@@ -241,9 +276,12 @@ impl<T: Transport + 'static> NodeHandle<T> {
     /// index set; returns values aligned with the inbound set.
     pub fn reduce<R: ReduceOp>(&mut self, values: Vec<R::T>) -> Result<Vec<R::T>, TransportError> {
         self.seq += 1;
+        let _tspan = trace::ring().span("round", self.ttags(0));
         let bottom = self.reduce_down::<R>(values)?;
         let merge = Span::start(&self.obs.merge);
+        let tmerge = trace::ring().span("merge", self.ttags(0));
         let projected = self.proto.apply_final_map::<R>(&bottom);
+        tmerge.finish();
         merge.finish();
         self.reduce_up::<R>(projected)
     }
@@ -294,9 +332,12 @@ impl<T: Transport + 'static> NodeHandle<T> {
         F: FnOnce(&IndexSet, &[R::T], &IndexSet) -> Vec<R::T>,
     {
         self.seq += 1;
+        let _tspan = trace::ring().span("round", self.ttags(0));
         let reduced = self.reduce_down::<R>(values)?;
         let merge = Span::start(&self.obs.merge);
+        let tmerge = trace::ring().span("merge", self.ttags(0));
         let out = bottom(self.proto.bottom_down_set(), &reduced, self.proto.bottom_up_set());
+        tmerge.finish();
         merge.finish();
         assert_eq!(
             out.len(),

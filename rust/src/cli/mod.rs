@@ -149,6 +149,9 @@ COMMANDS:
   replan-bench  measure stale vs re-planned schedules (BENCH_8)
   stat          pull a serving pool's merged obs snapshot
   obs-bench     measure instrumentation overhead (BENCH_9)
+  trace         pull a pool's cross-worker round trace (Chrome JSON +
+                critical-path report)
+  trace-bench   measure trace-recording overhead (BENCH_10)
   config-check  validate a cluster config file
   help          show usage (`sar help <command>` for one command)
 
@@ -320,7 +323,7 @@ USAGE: sar launch [--jobs pagerank,diameter,...] [--workers n]
                   [--replication r] [--iters n]
                   [--dataset d] [--scale f] [--seed s] [--threads t]
                   [--bind addr] [--file cfg.toml] [--no-spawn] [--bin path]
-                  [--shards dir]
+                  [--shards dir] [--no-obs]
 
 Coordinate a worker pool: gather worker JOINs once, then run each job
 through its own CONFIG barrier → START → REPORT cycle on the same
@@ -349,7 +352,9 @@ with the job name so multi-job output is attributable.
   --elastic        re-plan the degree schedule from the live pool view
                    between jobs (per-host calibration, graded health,
                    straggler streaks) — the lane count never changes,
-                   so workers are never re-JOINed",
+                   so workers are never re-JOINed
+  --no-obs         disable metric + trace recording pool-wide (the flag
+                   rides the worker plan to every spawned worker)",
         "serve" => "\
 USAGE: sar serve [--degrees 2x2] [--tune-profile tune.toml]
                  [--replication r] [--threads t]
@@ -391,8 +396,10 @@ the joined workers' addresses allow it.
                       (served/live/queued/evicted/rejected/rounds and
                       the dispatch p50); `sar stat --pool` pulls the
                       full cluster snapshot on demand
-  --no-obs            disable this process's metric recording (workers
-                      keep their own registries)
+  --no-obs            disable metric + trace recording POOL-WIDE: the
+                      flag rides the worker plan, so spawned workers
+                      record nothing either (`sar stat` then reads
+                      zeros and `sar trace` an empty timeline)
   --no-spawn          wait for externally-started workers instead of
                       forking them locally
   --bin path          sar binary to spawn local workers from  [current exe]
@@ -479,6 +486,41 @@ row (BENCH_9.json).
   --rounds n   timed allreduce rounds per case           [48]
   --out path   bench trajectory output                   [BENCH_9.json]
   --fast       CI smoke mode: fewer rounds",
+        "trace" => "\
+USAGE: sar trace --pool host:port [--out trace.json] [--tune-profile p]
+
+Pull the distributed round trace off a `sar serve` pool: connect to
+the pool's client port (the same admin door `sar stat` uses) and
+request TRACE. The coordinator pulls every worker's trace ring over
+the control plane — round/config container spans, per-butterfly-layer
+scatter/reduce/gather spans, per-wire-edge flow events with byte
+counts, worker-engine dispatch, serve-plane admission/dispatch/drain
+marks — re-bases each worker's timestamps onto its own clock (midpoint
+offset estimate, accurate to half the control round trip,
+drift-checked across pulls), and answers with one merged timeline.
+Writes Chrome trace-event JSON (load it in chrome://tracing or
+Perfetto: one track per worker plus the serve track) and prints a
+per-round critical-path report: the bounding lane's chain of phase
+spans, the slowest (lane, layer) span, and each layer's achieved wire
+bandwidth — compared against the fitted cost model when a tuning
+profile is given.
+  --pool addr      the pool's client port (required)
+  --out path       Chrome trace JSON output               [trace.json]
+  --tune-profile p compare each layer's achieved bandwidth against a
+                   digest-verified `sar tune` profile's fitted model",
+        "trace-bench" => "\
+USAGE: sar trace-bench [--lanes n] [--rounds n] [--out BENCH_10.json] [--fast]
+
+Measure the trace plane's overhead: per-round threaded allreduce time
+with trace recording on (container + layer spans and one flow event
+per wire edge, into the per-process ring) vs fully disabled (the
+--no-obs gate). Both cases' checksums are validated against the
+lockstep oracle before any timing is reported. Emits the
+machine-readable trajectory row (BENCH_10.json).
+  --lanes n    logical lanes (threaded, one thread each) [4]
+  --rounds n   timed allreduce rounds per case           [48]
+  --out path   bench trajectory output                   [BENCH_10.json]
+  --fast       CI smoke mode: fewer rounds",
         "config-check" => "\
 USAGE: sar config-check --file <path>
 
@@ -545,7 +587,7 @@ mod tests {
         for cmd in [
             "info", "plan", "tune", "shard", "pagerank", "diameter", "sgd", "train", "worker",
             "launch", "serve", "serve-bench", "replan", "replan-bench", "stat", "obs-bench",
-            "config-check", "help",
+            "trace", "trace-bench", "config-check", "help",
         ] {
             assert!(usage_for(cmd).is_some(), "missing usage for {cmd}");
             assert!(USAGE.contains(cmd), "top-level usage missing {cmd}");

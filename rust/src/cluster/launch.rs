@@ -15,15 +15,16 @@
 //! a readable quorum error — instead of a hang.
 
 use super::proto::{
-    recv_ctrl, send_ctrl, ConfigureMsg, CtrlMsg, JobPlan, ResultMsg, StatsMsg, ValuesMsg,
-    WorkerPlan, WorkerReport, COORD,
+    recv_ctrl, send_ctrl, ConfigureMsg, CtrlMsg, JobPlan, ResultMsg, StatsMsg, TraceMsg,
+    ValuesMsg, WorkerPlan, WorkerReport, COORD,
 };
 use crate::comm::{AppKind, JobSpec};
 use crate::config::{validate_world, RunConfig};
 use crate::control::view::drift_line;
 use crate::control::{plan_for_view, profile_drift, HostConstants, PoolView, ReplanParams};
-use crate::fault::{FailureDetector, Health, ReplicaMap};
+use crate::fault::{ClockAlign, FailureDetector, Health, ReplicaMap};
 use crate::graph::ShardManifest;
+use crate::obs::trace::{self, TraceEvent};
 use crate::obs::{self, IterTiming, RunMetrics, Snapshot};
 use crate::simnet::CostModel;
 use crate::tune::TuneProfile;
@@ -75,6 +76,10 @@ pub struct LaunchOpts {
     /// schedule from the live pool view between jobs, so later jobs run
     /// under per-host calibrated, straggler-penalized degrees.
     pub elastic: bool,
+    /// Observability (metrics + trace ring) across the pool. `false`
+    /// (`--no-obs`) rides the [`WorkerPlan`] to every spawned worker,
+    /// so the whole pool goes quiet, not just the coordinator process.
+    pub obs: bool,
 }
 
 impl Default for LaunchOpts {
@@ -95,6 +100,7 @@ impl Default for LaunchOpts {
             jobs: Vec::new(),
             tune: None,
             elastic: false,
+            obs: true,
         }
     }
 }
@@ -549,6 +555,12 @@ pub struct Session {
     /// Per-worker obs snapshots collected by the current stat pull
     /// ([`Session::pull_stats`]), index-aligned with physical node ids.
     stats_inbox: Vec<Option<Snapshot>>,
+    /// Per-worker trace replies collected by the current trace pull
+    /// ([`Session::pull_trace`]), each paired with the coordinator
+    /// trace-clock time its reply landed (the offset-estimate bracket).
+    trace_inbox: Vec<Option<(TraceMsg, u64)>>,
+    /// Per-worker clock-offset estimates, drift-checked across pulls.
+    clock_align: ClockAlign,
 }
 
 impl Coordinator {
@@ -742,6 +754,7 @@ impl Coordinator {
             degrees: opts.degrees.iter().map(|&k| k as u32).collect(),
             addrs: data_addrs,
             data_timeout_ms: opts.data_timeout.as_millis() as u64,
+            obs_enabled: opts.obs,
         };
         for (w, writer) in writers.iter().enumerate() {
             let plan = WorkerPlan { node: w as u32, ..plan_template.clone() };
@@ -773,6 +786,8 @@ impl Coordinator {
             replan_votes: vec![false; world],
             replan_count: 0,
             stats_inbox: (0..world).map(|_| None).collect(),
+            trace_inbox: (0..world).map(|_| None).collect(),
+            clock_align: ClockAlign::new(world),
             opts,
         })
     }
@@ -988,6 +1003,67 @@ impl Session {
             .collect())
     }
 
+    /// Pull every live worker's trace ring over the control plane (the
+    /// coordinator leg of `sar trace`) and merge the events — plus this
+    /// process's own ring (the serve plane's admission→dispatch→drain
+    /// markers live here) — into ONE timeline on the coordinator's
+    /// trace clock, sorted by timestamp.
+    ///
+    /// Clock alignment: each worker stamps its reply with its own trace
+    /// clock; bracketing that sample between the request broadcast and
+    /// the reply arrival (both on the coordinator clock) yields a
+    /// midpoint offset estimate good to half the round trip
+    /// ([`trace::estimate_offset_us`]), drift-checked across pulls by
+    /// the session's [`ClockAlign`]. Dead workers are simply absent; a
+    /// timeout is an error but never shuts the pool down.
+    pub fn pull_trace(&mut self) -> Result<Vec<TraceEvent>> {
+        for s in self.trace_inbox.iter_mut() {
+            *s = None;
+        }
+        let ring = trace::ring();
+        let sent_us = ring.now_us();
+        let msg = CtrlMsg::Trace(TraceMsg::request());
+        for (w, writer) in self.writers.iter().enumerate() {
+            if self.detector.is_hard_dead(w) {
+                continue;
+            }
+            if let Err(e) = send_ctrl(writer, COORD, &msg) {
+                log::warn!("TRACE request to worker {w} failed: {e}");
+                self.detector.mark_dead(w);
+            }
+        }
+        let deadline = Instant::now() + self.opts.phase_deadline.min(Duration::from_secs(10));
+        loop {
+            let settled = (0..self.world())
+                .all(|w| self.trace_inbox[w].is_some() || self.detector.is_hard_dead(w));
+            if settled {
+                break;
+            }
+            if Instant::now() > deadline {
+                bail!("trace pull timed out{}", self.failure_summary());
+            }
+            self.pump(Duration::from_millis(20));
+        }
+        let mut merged = ring.snapshot();
+        for w in 0..self.world() {
+            let Some((t, recv_us)) = self.trace_inbox[w].take() else { continue };
+            let estimate = trace::estimate_offset_us(sent_us, recv_us, t.clock_us);
+            let rtt_us = recv_us.saturating_sub(sent_us);
+            if let Some(drift) = self.clock_align.update(w, estimate, rtt_us / 2 + 1) {
+                log::warn!(
+                    "worker {w} trace clock drifted {drift} µs between pulls; \
+                     re-anchoring on the fresh estimate"
+                );
+            }
+            let offset = self.clock_align.offset_us(w).unwrap_or(estimate);
+            let mut events = t.events;
+            trace::rebase(&mut events, offset);
+            merged.extend(events);
+        }
+        merged.sort_by_key(|e| e.ts_us);
+        Ok(merged)
+    }
+
     /// Re-plan from the live view: fold the per-host calibration
     /// constants and health grades through the §IV-B planner
     /// ([`plan_for_view`]) and adopt the result if it differs from the
@@ -1055,6 +1131,20 @@ impl Session {
                     }
                     if let Some(slot) = self.stats_inbox.get_mut(w) {
                         *slot = Some(s.snap);
+                    }
+                }
+            }
+            Ok((w, Event::Msg(CtrlMsg::Trace(t)))) => {
+                // Same placement discipline as Stats: the reader index
+                // is authoritative, the wire id only cross-checks.
+                if t.is_request() {
+                    log::warn!("worker {w} sent a TRACE request; ignoring");
+                } else {
+                    if t.node != w as u32 {
+                        log::warn!("worker {w} reported a trace as node {}", t.node);
+                    }
+                    if let Some(slot) = self.trace_inbox.get_mut(w) {
+                        *slot = Some((t, trace::ring().now_us()));
                     }
                 }
             }

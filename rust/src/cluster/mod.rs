@@ -88,8 +88,12 @@ pub mod spawn;
 pub mod worker;
 
 pub use launch::{rtt_straggler, ClusterRun, Coordinator, LaunchOpts, RttTracker, Session};
-pub use proto::{ConfigureMsg, CtrlMsg, JobPlan, ResultMsg, ValuesMsg, WorkerPlan, WorkerReport};
-pub use serve::{pull_cluster_stats, serve_clients, serve_mux, ServeOpts, ServeStats};
+pub use proto::{
+    ConfigureMsg, CtrlMsg, JobPlan, ResultMsg, TraceMsg, ValuesMsg, WorkerPlan, WorkerReport,
+};
+pub use serve::{
+    pull_cluster_stats, pull_cluster_trace, serve_clients, serve_mux, ServeOpts, ServeStats,
+};
 pub use spawn::{
     default_degrees, launch_local, launch_local_jobs, sar_binary, spawn_local, spawn_session,
     spawn_workers, LocalProcs, MAX_LOCAL_WORKERS,

@@ -28,6 +28,7 @@
 //!
 //! See [`super`] for the full state machine these messages drive.
 
+use crate::obs::trace::{TraceEvent, TraceTags, KIND_MAX};
 use crate::obs::{HistSnapshot, Snapshot};
 use crate::sparse::{MaxF32, OrU32, ReduceOp, SumF32};
 use crate::topology::NodeId;
@@ -194,6 +195,15 @@ pub enum CtrlMsg {
     /// coordinator → client carrying the merged
     /// [`crate::obs::ClusterStats`] in its flat `w<n>/`-prefixed form.
     Stats(StatsMsg),
+    /// Distributed trace pull (`sar trace`), one message for every leg
+    /// exactly like [`CtrlMsg::Stats`]: client → coordinator as a
+    /// first-frame admin request ([`TraceMsg::is_request`]);
+    /// coordinator → worker to pull that worker's event ring; worker →
+    /// coordinator carrying its ring snapshot plus its trace-clock
+    /// sample (`clock_us`, the clock-alignment anchor); coordinator →
+    /// client carrying the merged coordinator-timebase timeline
+    /// ([`TRACE_ROLLUP`]).
+    Trace(TraceMsg),
 }
 
 /// [`StatsMsg::node`] sentinel marking a stats *pull request* (empty
@@ -229,6 +239,45 @@ impl StatsMsg {
 
     pub fn is_request(&self) -> bool {
         self.node == STATS_REQUEST
+    }
+}
+
+/// [`TraceMsg::node`] sentinel marking a trace *pull request* (no
+/// events, zero clock) rather than a node's reply.
+pub const TRACE_REQUEST: u32 = u32::MAX;
+
+/// [`TraceMsg::node`] sentinel on the coordinator → client leg: the
+/// events are the merged, clock-aligned cluster timeline, not any
+/// single node's ring. Same value spacing as [`STATS_ROLLUP`] so no leg
+/// of the pull can be misread as another (or as [`CLIENT`]).
+pub const TRACE_ROLLUP: u32 = u32::MAX - 2;
+
+/// One hop of the distributed trace pull: a ring snapshot
+/// ([`crate::obs::trace::TraceRing::snapshot`]) tagged with whose it is
+/// plus the replier's trace-clock sample, taken while building the
+/// reply — the coordinator brackets it between its request send and
+/// reply receive to estimate the worker's clock offset
+/// ([`crate::obs::trace::estimate_offset_us`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceMsg {
+    /// Replying worker's physical node id, [`TRACE_REQUEST`] for a pull
+    /// request, or [`TRACE_ROLLUP`] for the merged rollup reply.
+    pub node: u32,
+    /// The replier's trace clock (µs since its ring epoch) at reply
+    /// time; 0 on requests and rollups (the rollup is already on the
+    /// coordinator timebase).
+    pub clock_us: u64,
+    pub events: Vec<TraceEvent>,
+}
+
+impl TraceMsg {
+    /// The client/coordinator pull request (empty).
+    pub fn request() -> Self {
+        Self { node: TRACE_REQUEST, clock_us: 0, events: Vec::new() }
+    }
+
+    pub fn is_request(&self) -> bool {
+        self.node == TRACE_REQUEST
     }
 }
 
@@ -314,6 +363,11 @@ pub struct WorkerPlan {
     /// Data-plane receive timeout; bounds how long a worker waits on a
     /// dead peer before reporting failure instead of hanging.
     pub data_timeout_ms: u64,
+    /// Whether the pool runs with observability (metrics registry +
+    /// trace ring). `false` propagates `--no-obs` to every spawned
+    /// worker: each disables its own registry on PLAN receipt, so a
+    /// census or trace pulled from the pool is empty/zeroed.
+    pub obs_enabled: bool,
 }
 
 /// Per-job descriptor: the app, its reduce-op implied by the app, the
@@ -393,6 +447,7 @@ const OP_REPLAN: u32 = 16;
 const OP_REPLAN_DONE: u32 = 17;
 const OP_CALIBRATION: u32 = 18;
 const OP_STATS: u32 = 19;
+const OP_TRACE: u32 = 20;
 
 // --- body codec ----------------------------------------------------------
 
@@ -533,6 +588,7 @@ pub fn encode(msg: &CtrlMsg) -> (u32, Vec<u8>) {
             e.u32s(&p.degrees);
             e.strs(&p.addrs);
             e.u64(p.data_timeout_ms);
+            e.u32(p.obs_enabled as u32);
             OP_PLAN
         }
         CtrlMsg::Job(j) => {
@@ -663,6 +719,24 @@ pub fn encode(msg: &CtrlMsg) -> (u32, Vec<u8>) {
             }
             OP_STATS
         }
+        CtrlMsg::Trace(t) => {
+            e.u32(t.node);
+            e.u64(t.clock_us);
+            e.u32(t.events.len() as u32);
+            for ev in &t.events {
+                e.str(&ev.name);
+                e.u8(ev.kind);
+                e.u64(ev.ts_us);
+                e.u64(ev.dur_us);
+                e.u32(ev.tags.job);
+                e.u32(ev.tags.round);
+                e.u32(ev.tags.node);
+                e.u32(ev.tags.layer);
+                e.u32(ev.tags.peer);
+                e.u64(ev.tags.bytes);
+            }
+            OP_TRACE
+        }
     };
     (op, e.0)
 }
@@ -672,14 +746,22 @@ pub fn decode(opcode: u32, payload: &[u8]) -> std::io::Result<CtrlMsg> {
     let mut d = Dec::new(payload);
     let msg = match opcode {
         OP_JOIN => CtrlMsg::Join { data_addr: d.str()? },
-        OP_PLAN => CtrlMsg::Plan(WorkerPlan {
-            node: d.u32()?,
-            world: d.u32()?,
-            replication: d.u32()?,
-            degrees: d.u32s()?,
-            addrs: d.strs()?,
-            data_timeout_ms: d.u64()?,
-        }),
+        OP_PLAN => {
+            let p = WorkerPlan {
+                node: d.u32()?,
+                world: d.u32()?,
+                replication: d.u32()?,
+                degrees: d.u32s()?,
+                addrs: d.strs()?,
+                data_timeout_ms: d.u64()?,
+                obs_enabled: match d.u32()? {
+                    0 => false,
+                    1 => true,
+                    other => return Err(bad(format!("non-boolean obs flag {other}"))),
+                },
+            };
+            CtrlMsg::Plan(p)
+        }
         OP_JOB => CtrlMsg::Job(JobPlan {
             job: d.u32()?,
             name: d.str()?,
@@ -834,6 +916,41 @@ pub fn decode(opcode: u32, payload: &[u8]) -> std::io::Result<CtrlMsg> {
             }
             CtrlMsg::Stats(m)
         }
+        OP_TRACE => {
+            let node = d.u32()?;
+            let clock_us = d.u64()?;
+            let n = d.u32()? as usize;
+            let mut events = Vec::new();
+            for _ in 0..n {
+                let name = d.str()?;
+                if name.is_empty() {
+                    return Err(bad("empty trace event name"));
+                }
+                let kind = d.u8()?;
+                if kind > KIND_MAX {
+                    return Err(bad(format!("unknown trace event kind {kind}")));
+                }
+                events.push(TraceEvent {
+                    name,
+                    kind,
+                    ts_us: d.u64()?,
+                    dur_us: d.u64()?,
+                    tags: TraceTags {
+                        job: d.u32()?,
+                        round: d.u32()?,
+                        node: d.u32()?,
+                        layer: d.u32()?,
+                        peer: d.u32()?,
+                        bytes: d.u64()?,
+                    },
+                });
+            }
+            let m = TraceMsg { node, clock_us, events };
+            if m.is_request() && (m.clock_us != 0 || !m.events.is_empty()) {
+                return Err(bad("trace request carrying events"));
+            }
+            CtrlMsg::Trace(m)
+        }
         other => return Err(bad(format!("unknown control opcode {other}"))),
     };
     d.finish()?;
@@ -881,6 +998,7 @@ mod tests {
             degrees: vec![2, 2],
             addrs: (0..8).map(|i| format!("127.0.0.1:{}", 9000 + i)).collect(),
             data_timeout_ms: 10_000,
+            obs_enabled: true,
         }
     }
 
@@ -953,6 +1071,30 @@ mod tests {
         StatsMsg { node: 2, snap }
     }
 
+    fn sample_trace() -> TraceMsg {
+        use crate::obs::trace::{KIND_FLOW_SEND, KIND_SPAN};
+        TraceMsg {
+            node: 2,
+            clock_us: 987_654_321,
+            events: vec![
+                TraceEvent {
+                    name: "round".into(),
+                    kind: KIND_SPAN,
+                    ts_us: 1_000,
+                    dur_us: 250,
+                    tags: TraceTags { job: 5, round: 3, node: 2, layer: 0, peer: 0, bytes: 0 },
+                },
+                TraceEvent {
+                    name: "net.edge".into(),
+                    kind: KIND_FLOW_SEND,
+                    ts_us: 1_010,
+                    dur_us: 0,
+                    tags: TraceTags { job: 5, round: 3, node: 2, layer: 1, peer: 6, bytes: 4096 },
+                },
+            ],
+        }
+    }
+
     fn all_variants() -> Vec<CtrlMsg> {
         vec![
             CtrlMsg::Join { data_addr: "10.0.0.7:41234".into() },
@@ -991,6 +1133,8 @@ mod tests {
             },
             CtrlMsg::Stats(StatsMsg::request()),
             CtrlMsg::Stats(sample_stats()),
+            CtrlMsg::Trace(TraceMsg::request()),
+            CtrlMsg::Trace(sample_trace()),
         ]
     }
 
@@ -1012,6 +1156,7 @@ mod tests {
             CtrlMsg::Result(sample_result()),
             CtrlMsg::Release { job: 5 },
             CtrlMsg::Stats(sample_stats()),
+            CtrlMsg::Trace(sample_trace()),
         ] {
             let (op, payload) = encode(&sample);
             assert!(decode(op, &payload[..payload.len() - 1]).is_err(), "truncated {op}");
@@ -1126,6 +1271,49 @@ mod tests {
             }
             other => panic!("wrong variant: {other:?}"),
         }
+    }
+
+    /// Satellite: opcode 20 corruption is rejected at decode time,
+    /// matching the 16–19 convention — unknown event kinds, empty event
+    /// names, and a pull request smuggling events are all errors, never
+    /// panics or a silently wrong timeline.
+    #[test]
+    fn trace_corruption_rejected() {
+        // Kind byte past the known kinds. Layout: node(4) clock(8)
+        // count(4) name_len(4) "round"(5) then the kind byte.
+        let (op, mut payload) = encode(&CtrlMsg::Trace(sample_trace()));
+        payload[25] = KIND_MAX + 1;
+        let err = decode(op, &payload).unwrap_err();
+        assert!(err.to_string().contains("trace event kind"), "got: {err}");
+        // Empty event name.
+        let mut e = Enc::default();
+        e.u32(2); // node
+        e.u64(0); // clock
+        e.u32(1); // one event
+        e.str("");
+        let err = decode(OP_TRACE, &e.0).unwrap_err();
+        assert!(err.to_string().contains("empty trace event name"), "got: {err}");
+        // A pull request must not carry events: a corrupted node id
+        // cannot turn a loaded reply into a "request".
+        let mut loaded = sample_trace();
+        loaded.node = TRACE_REQUEST;
+        let (op, payload) = encode(&CtrlMsg::Trace(loaded));
+        let err = decode(op, &payload).unwrap_err();
+        assert!(err.to_string().contains("request carrying"), "got: {err}");
+        // ...nor a clock sample.
+        let (op, payload) =
+            encode(&CtrlMsg::Trace(TraceMsg { clock_us: 7, ..TraceMsg::request() }));
+        assert!(decode(op, &payload).is_err());
+        // An event-count prefix lying about the payload is truncation.
+        let (op, mut payload) = encode(&CtrlMsg::Trace(sample_trace()));
+        payload[12] = 0xFF;
+        assert!(decode(op, &payload).is_err(), "lying event count must be rejected");
+        // The plan's obs flag must be an actual boolean (last 4 bytes).
+        let (op, mut payload) = encode(&CtrlMsg::Plan(sample_plan()));
+        let off = payload.len() - 4;
+        payload[off..].copy_from_slice(&2u32.to_le_bytes());
+        let err = decode(op, &payload).unwrap_err();
+        assert!(err.to_string().contains("obs flag"), "got: {err}");
     }
 
     #[test]

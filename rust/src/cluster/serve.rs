@@ -51,10 +51,11 @@
 use super::launch::Session;
 use super::mux::{Admission, Batch, Offer, Registry, RoundRobin, Step};
 use super::proto::{
-    recv_ctrl, send_ctrl, CtrlMsg, ResultMsg, StatsMsg, WorkerPlan, CLIENT, COORD,
-    RES_STAGE_BOTTOM, RES_STAGE_FINAL, STATS_ROLLUP, VAL_STAGE_DOWN,
+    recv_ctrl, send_ctrl, CtrlMsg, ResultMsg, StatsMsg, TraceMsg, WorkerPlan, CLIENT, COORD,
+    RES_STAGE_BOTTOM, RES_STAGE_FINAL, STATS_ROLLUP, TRACE_ROLLUP, VAL_STAGE_DOWN,
 };
 use crate::fault::Health;
+use crate::obs::trace::{self, TraceEvent, TraceTags, SERVE_NODE};
 use crate::obs::{self, ClusterStats, Span};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
@@ -315,6 +316,37 @@ pub fn pull_cluster_stats(addr: &str) -> Result<ClusterStats> {
     }
 }
 
+/// Client leg of `sar trace`: dial a pool's client port, present the
+/// admin TRACE request as the first frame (the same door `sar stat`
+/// and `sar replan` use), and decode the merged cross-worker timeline
+/// the coordinator answers with — already re-based onto the
+/// coordinator's trace clock, ready for the Chrome export and the
+/// critical-path fold.
+pub fn pull_cluster_trace(addr: &str) -> Result<Vec<TraceEvent>> {
+    let stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting to the pool at {addr}"))?;
+    stream.set_nodelay(true)?;
+    // Rings are a few MiB per worker at most; the wait mostly covers
+    // queueing behind live sessions' dispatches.
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    let mut rd = stream.try_clone().context("cloning the pool connection")?;
+    let wr = Mutex::new(stream);
+    let (_, handshake) = recv_ctrl(&mut rd).context("reading the pool's handshake")?;
+    match handshake {
+        CtrlMsg::Plan(_) => {}
+        CtrlMsg::Failed { error } => bail!("pool at {addr} refused the connection: {error}"),
+        other => bail!("unexpected handshake frame from the pool: {other:?}"),
+    }
+    send_ctrl(&wr, CLIENT, &CtrlMsg::Trace(TraceMsg::request()))
+        .context("sending the TRACE request")?;
+    match recv_ctrl(&mut rd).context("waiting for the pool's trace answer")?.1 {
+        CtrlMsg::Trace(t) if t.node == TRACE_ROLLUP => Ok(t.events),
+        CtrlMsg::Trace(t) => bail!("trace answer tagged {} instead of the rollup", t.node),
+        CtrlMsg::Failed { error } => bail!("pool rejected the trace pull: {error}"),
+        other => bail!("unexpected trace answer from the pool: {other:?}"),
+    }
+}
+
 /// Best-effort FAILED + drop, for connections never admitted.
 fn refuse(stream: TcpStream, why: &str) {
     let wr = Mutex::new(stream);
@@ -539,6 +571,7 @@ impl Mux<'_> {
                 degrees: o.degrees.iter().map(|&k| k as u32).collect(),
                 addrs: Vec::new(),
                 data_timeout_ms: o.data_timeout.as_millis() as u64,
+                obs_enabled: o.obs,
             }
         };
         let rd = match stream.try_clone() {
@@ -564,6 +597,7 @@ impl Mux<'_> {
         }
         self.sched.register(sid);
         self.stats.peak_live = self.stats.peak_live.max(self.registry.len());
+        trace::ring().instant("serve.admit", TraceTags { node: SERVE_NODE, ..Default::default() });
         log::info!("client session {sid} connected from {peer} ({} live)", self.registry.len());
     }
 
@@ -599,6 +633,17 @@ impl Mux<'_> {
             self.fail_client(sid, "STATS is an admin request on a fresh connection".to_string());
             return Ok(());
         }
+        // And TRACE (`sar trace`): the ring pull rides the same admin
+        // door as the stat pull, with the same fresh-session guard.
+        if let CtrlMsg::Trace(t) = &msg {
+            let fresh =
+                self.registry.get(sid).is_some_and(|e| e.sm.pool_job().is_none());
+            if fresh && t.is_request() {
+                return self.on_admin_trace(sid);
+            }
+            self.fail_client(sid, "TRACE is an admin request on a fresh connection".to_string());
+            return Ok(());
+        }
         let Some(entry) = self.registry.get_mut(sid) else {
             return Ok(()); // session already ended; late frame
         };
@@ -632,10 +677,21 @@ impl Mux<'_> {
             // idle clock running toward eviction.
             self.registry.touch(sid, Instant::now());
             let is_round = matches!(batch, Batch::Round { .. });
+            let ttags = TraceTags {
+                job: self.registry.get(sid).and_then(|e| e.sm.pool_job()).unwrap_or(0),
+                round: match &batch {
+                    Batch::Round { seq, .. } => *seq,
+                    Batch::Config(_) => 0,
+                },
+                node: SERVE_NODE,
+                ..Default::default()
+            };
+            trace::ring().instant("serve.dispatch", ttags);
             let span = Span::start(&self.obs.dispatch);
             match self.dispatch(sid, batch) {
                 Ok(()) => {
                     span.finish();
+                    trace::ring().instant("serve.drain", ttags);
                     if is_round {
                         self.obs.rounds.inc();
                         *self.rounds_by_session.entry(sid).or_insert(0) += 1;
@@ -822,6 +878,37 @@ impl Mux<'_> {
             // serving.
             Err(e) => CtrlMsg::Failed {
                 error: format!("{:#}", e.context("pulling worker stat snapshots")),
+            },
+        };
+        self.end_admin(sid, Some(&reply));
+        Ok(())
+    }
+
+    /// An admitted connection's TRACE pull (`sar trace`): broadcast
+    /// the ring pull to every worker, re-base each reply onto the
+    /// coordinator's trace clock (midpoint offset, drift-checked —
+    /// see [`Session::pull_trace`]), merge in this process's own ring
+    /// (the serve-plane instants record here), and answer with the
+    /// rollup. One timebase by then, hence `clock_us: 0`. Trace pulls
+    /// are control traffic — refund the session budget like
+    /// [`Self::on_admin_stats`], and like it the pull runs
+    /// immediately: no round is in flight while the mux loop is here.
+    fn on_admin_trace(&mut self, sid: u64) -> Result<()> {
+        let peer = self
+            .registry
+            .get(sid)
+            .map(|e| e.conn.peer.to_string())
+            .unwrap_or_else(|| "?".to_string());
+        self.started = self.started.saturating_sub(1);
+        log::info!("admin trace pull from {peer}");
+        let reply = match self.session.pull_trace() {
+            Ok(events) => {
+                CtrlMsg::Trace(TraceMsg { node: TRACE_ROLLUP, clock_us: 0, events })
+            }
+            // A failed pull is admin-visible, not a pool failure — the
+            // pool keeps serving (same stance as the stat pull).
+            Err(e) => CtrlMsg::Failed {
+                error: format!("{:#}", e.context("pulling worker trace rings")),
             },
         };
         self.end_admin(sid, Some(&reply));

@@ -43,8 +43,8 @@
 //! control plane in either path.
 
 use super::proto::{
-    recv_ctrl, send_ctrl, ConfigureMsg, CtrlMsg, JobPlan, ResultMsg, StatsMsg, ValuesMsg,
-    WorkerPlan, WorkerReport, OP_CODE_MAX_F32, OP_CODE_OR_U32, OP_CODE_SUM_F32,
+    recv_ctrl, send_ctrl, ConfigureMsg, CtrlMsg, JobPlan, ResultMsg, StatsMsg, TraceMsg,
+    ValuesMsg, WorkerPlan, WorkerReport, OP_CODE_MAX_F32, OP_CODE_OR_U32, OP_CODE_SUM_F32,
     RES_STAGE_BOTTOM, RES_STAGE_FINAL, VAL_STAGE_DOWN, VAL_STAGE_FULL, VAL_STAGE_UP,
 };
 use crate::allreduce::{NodeHandle, NodeProtocol};
@@ -55,6 +55,7 @@ use crate::comm::job::SGD_ZIPF_ALPHA;
 use crate::config::validate_world;
 use crate::fault::{ReplicaMap, ReplicatedHandle};
 use crate::graph::{load_shard, Csr, DatasetPreset, DatasetSpec, ShardManifest};
+use crate::obs::trace::{self, TraceTags};
 use crate::obs::{self, RunMetrics};
 use crate::sparse::{IndexSet, MaxF32, OrU32, ReduceOp, SumF32};
 use crate::topology::Butterfly;
@@ -168,6 +169,12 @@ pub fn run_worker(opts: &WorkerOpts) -> Result<()> {
         CtrlMsg::Plan(p) => p,
         other => bail!("expected PLAN, got {other:?}"),
     };
+    if !plan.obs_enabled {
+        // `--no-obs` at the launcher reaches every worker through the
+        // plan: one store silences both the metrics registry and the
+        // trace ring for this whole process.
+        obs::set_enabled(false);
+    }
     let node = plan.node as usize;
     log::info!(
         "plan: node {node}/{} degrees {:?} replication {}",
@@ -602,6 +609,19 @@ fn serve_pool(
                 let reply = StatsMsg { node: node as u32, snap: obs::global().snapshot() };
                 send_ctrl(ctrl_wr, node, &CtrlMsg::Stats(reply)).context("sending STATS")?;
             }
+            CtrlMsg::Trace(t) if t.is_request() => {
+                // The coordinator's trace pull: ship this process's ring
+                // with a clock sample so the puller can re-base our
+                // timestamps onto its own timebase (midpoint estimate,
+                // see `obs::trace::estimate_offset_us`).
+                let ring = trace::ring();
+                let reply = TraceMsg {
+                    node: node as u32,
+                    clock_us: ring.now_us(),
+                    events: ring.snapshot(),
+                };
+                send_ctrl(ctrl_wr, node, &CtrlMsg::Trace(reply)).context("sending TRACE")?;
+            }
             CtrlMsg::Shutdown => return Ok(()),
             other => log::warn!("unexpected control message while serving: {other:?}"),
         }
@@ -823,10 +843,20 @@ impl GenericEngine {
             .get_mut(&v.job)
             .with_context(|| format!("VALUES for collective {} but that config is not live", v.job))?;
         let span = obs::Span::start(&self.round_hist);
+        let tspan = trace::ring().span(
+            "worker.round",
+            TraceTags {
+                job: v.job,
+                round: v.seq,
+                node: self.node as u32,
+                ..Default::default()
+            },
+        );
         let out = generic_round(&mut cfg.handle, v, cfg.out_len, &mut self.scratch);
         if out.is_err() {
             // A failed round's timing would pollute the distribution.
             span.cancel();
+            tspan.cancel();
         }
         self.rounds.inc();
         out

@@ -37,6 +37,7 @@ use crate::cluster::proto::{
     recv_ctrl, reduce_op_code, send_ctrl, ConfigureMsg, CtrlMsg, ResultMsg, ValuesMsg, CLIENT,
     RES_STAGE_BOTTOM, RES_STAGE_FINAL, VAL_STAGE_DOWN, VAL_STAGE_FULL, VAL_STAGE_UP,
 };
+use crate::obs::trace::{self, TraceTags};
 use crate::obs::{self, Span};
 use crate::sparse::{IndexSet, ReduceOp};
 use crate::transport::{connect_with_retry, wire, RetryPolicy};
@@ -279,8 +280,10 @@ impl RemoteSession {
     pub fn allreduce<R: ReduceOp>(&mut self, values: Vec<Vec<R::T>>) -> Result<Vec<Vec<R::T>>> {
         self.seq += 1;
         let span = Span::start(&self.rtt_hist);
+        let tspan = trace::ring().span("client.round", self.ttags());
         self.send_round::<R>(VAL_STAGE_FULL, values)?;
         let results = self.collect_round(RES_STAGE_FINAL)?;
+        tspan.finish();
         span.finish();
         decode_lane_values::<R>(results)
     }
@@ -307,6 +310,7 @@ impl RemoteSession {
         }
         self.seq += 1;
         let span = Span::start(&self.rtt_hist);
+        let tspan = trace::ring().span("client.round", self.ttags());
         self.send_round::<R>(VAL_STAGE_DOWN, values)?;
         let mids = self.collect_round(RES_STAGE_BOTTOM)?;
         let mut ups: Vec<Vec<R::T>> = Vec::with_capacity(mids.len());
@@ -335,8 +339,22 @@ impl RemoteSession {
         }
         self.send_round::<R>(VAL_STAGE_UP, ups)?;
         let results = self.collect_round(RES_STAGE_FINAL)?;
+        tspan.finish();
         span.finish();
         decode_lane_values::<R>(results)
+    }
+
+    /// Trace tags for the current round, in the client process's ring:
+    /// the POOL job id (so client spans line up with the pool's own
+    /// `worker.round` spans when both traces are inspected), this
+    /// session's round counter, and the serve-relay pseudo-node.
+    fn ttags(&self) -> TraceTags {
+        TraceTags {
+            job: self.job.unwrap_or(0),
+            round: self.seq,
+            node: trace::SERVE_NODE,
+            ..Default::default()
+        }
     }
 
     /// Stream one VALUES per lane for the current round.

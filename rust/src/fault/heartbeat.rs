@@ -221,6 +221,70 @@ impl FailureDetector {
     }
 }
 
+/// Per-worker clock alignment for the trace pull, drift-checked across
+/// pulls. Each TRACE reply yields a midpoint offset estimate
+/// ([`crate::obs::trace::estimate_offset_us`]) whose error is bounded
+/// by half the request round trip; this tracker keeps the
+/// tightest-uncertainty estimate per worker and flags *drift* — a fresh
+/// estimate disagreeing with the kept one by more than their combined
+/// uncertainty plus a drift allowance — which on a fail-stop cluster
+/// means a worker's clock is slewing and its merged timeline should be
+/// read with that much slack. The uncertainty fed in is the same
+/// nonce'd heartbeat RTT the straggler readout uses, so no extra
+/// measurement traffic exists just for tracing.
+pub struct ClockAlign {
+    /// Per worker: best (offset_us, uncertainty_us) seen so far.
+    offsets: Vec<Option<(i64, u64)>>,
+}
+
+impl ClockAlign {
+    pub fn new(workers: usize) -> Self {
+        Self { offsets: vec![None; workers] }
+    }
+
+    /// Fold one fresh estimate in. `uncertainty_us` is half the round
+    /// trip that bracketed the estimate (RTT/2). Returns the drift in
+    /// µs if the fresh estimate disagrees with the kept one beyond
+    /// their combined uncertainty (+ [`Self::DRIFT_SLACK_US`] for
+    /// timer-resolution noise); the kept estimate still updates when
+    /// the fresh one is tighter, so a genuinely slewing clock keeps
+    /// being tracked rather than pinned to a stale offset.
+    pub fn update(&mut self, worker: usize, offset_us: i64, uncertainty_us: u64) -> Option<i64> {
+        let fresh = (offset_us, uncertainty_us);
+        let drift = match self.offsets[worker] {
+            Some((kept_off, kept_unc)) => {
+                let gap = (offset_us - kept_off).abs();
+                let budget = kept_unc
+                    .saturating_add(uncertainty_us)
+                    .saturating_add(Self::DRIFT_SLACK_US);
+                (gap as u64 > budget).then_some(offset_us - kept_off)
+            }
+            None => None,
+        };
+        match self.offsets[worker] {
+            // Keep the tighter estimate — unless drift fired, in which
+            // case the newest reading is the truth going forward.
+            Some((_, kept_unc)) if drift.is_none() && kept_unc <= uncertainty_us => {}
+            _ => self.offsets[worker] = Some(fresh),
+        }
+        drift
+    }
+
+    /// Allowance for scheduling/timer noise on top of the RTT bound.
+    pub const DRIFT_SLACK_US: u64 = 1_000;
+
+    /// The kept offset for `worker` (µs; worker timestamps map onto the
+    /// coordinator timebase as `ts − offset`).
+    pub fn offset_us(&self, worker: usize) -> Option<i64> {
+        self.offsets.get(worker).copied().flatten().map(|(o, _)| o)
+    }
+
+    /// The kept uncertainty for `worker` (µs).
+    pub fn uncertainty_us(&self, worker: usize) -> Option<u64> {
+        self.offsets.get(worker).copied().flatten().map(|(_, u)| u)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -378,6 +442,37 @@ mod tests {
         assert_eq!(d.grades(), vec![Health::Normal; 3]);
         // Ordering supports worst-of aggregation.
         assert!(Health::Normal < Health::Suspect && Health::Suspect < Health::Unhealthy);
+    }
+
+    /// Satellite: clock-offset tracking across trace pulls. Known
+    /// injected offsets are recovered within RTT/2 (the estimator's
+    /// bound, tested end to end in `obs::trace`); here the drift check:
+    /// agreeing estimates never flag, the tighter uncertainty wins, and
+    /// an estimate outside the combined uncertainty reports its drift.
+    #[test]
+    fn clock_align_keeps_tight_estimates_and_flags_drift() {
+        let mut a = ClockAlign::new(2);
+        assert_eq!(a.offset_us(0), None);
+        // First estimate is kept verbatim.
+        assert_eq!(a.update(0, 10_000, 2_000), None);
+        assert_eq!(a.offset_us(0), Some(10_000));
+        assert_eq!(a.uncertainty_us(0), Some(2_000));
+        // A compatible, tighter estimate replaces it.
+        assert_eq!(a.update(0, 10_500, 400), None);
+        assert_eq!(a.offset_us(0), Some(10_500));
+        assert_eq!(a.uncertainty_us(0), Some(400));
+        // A compatible but looser estimate does not.
+        assert_eq!(a.update(0, 10_300, 3_000), None);
+        assert_eq!(a.offset_us(0), Some(10_500));
+        // An estimate outside combined uncertainty + slack is drift —
+        // reported, and adopted as the new truth.
+        let drift = a.update(0, 20_000, 400).expect("drift must be flagged");
+        assert_eq!(drift, 20_000 - 10_500);
+        assert_eq!(a.offset_us(0), Some(20_000));
+        // Worker 1 is independent.
+        assert_eq!(a.update(1, -5_000, 100), None);
+        assert_eq!(a.offset_us(1), Some(-5_000));
+        assert_eq!(a.offset_us(0), Some(20_000));
     }
 
     /// Streaks count *consecutive* flags only: repeated readouts naming

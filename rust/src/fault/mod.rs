@@ -16,7 +16,7 @@
 pub mod heartbeat;
 pub mod replicated;
 
-pub use heartbeat::{FailureDetector, Health};
+pub use heartbeat::{ClockAlign, FailureDetector, Health};
 pub use replicated::{run_replicated_cluster, ReplicaMap, ReplicatedHandle};
 
 use crate::util::Pcg32;

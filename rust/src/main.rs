@@ -61,6 +61,8 @@ fn dispatch(args: &Args) -> Result<()> {
         "replan-bench" => cmd_replan_bench(args),
         "stat" => cmd_stat(args),
         "obs-bench" => cmd_obs_bench(args),
+        "trace" => cmd_trace(args),
+        "trace-bench" => cmd_trace_bench(args),
         "config-check" => cmd_config_check(args),
         other => bail!("unknown command `{other}`\n\n{USAGE}"),
     }
@@ -633,8 +635,10 @@ fn cmd_launch(args: &Args) -> Result<()> {
         &[
             "jobs", "workers", "degrees", "replication", "iters", "dataset", "scale", "seed",
             "threads", "bind", "file", "no-spawn", "bin", "shards", "tune-profile", "elastic",
+            "no-obs",
         ],
     )?;
+    apply_no_obs(args);
     let mut cfg = match args.flag("file") {
         Some(path) => RunConfig::from_toml(&std::fs::read_to_string(path)?)?,
         None => RunConfig { degrees: vec![2, 2], ..RunConfig::default() },
@@ -695,6 +699,10 @@ fn cmd_launch(args: &Args) -> Result<()> {
     let mut opts = LaunchOpts::from_run_config(&cfg);
     opts.tune = applied_profile;
     opts.elastic = args.has_switch("elastic");
+    // `--no-obs` rides the worker plan: every spawned (or joining)
+    // worker silences its own registry + trace ring, not just this
+    // coordinator process.
+    opts.obs = !args.has_switch("no-obs");
     if let Some(bind) = args.flag("bind") {
         opts.bind = bind.to_string();
     }
@@ -856,6 +864,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         replication: args.usize_flag("replication", 1)?,
         send_threads: args.usize_flag("threads", 4)?,
         bind: args.flag("bind").unwrap_or("127.0.0.1:0").to_string(),
+        // Pool-wide: the flag reaches every worker through the plan,
+        // not just this serve process.
+        obs: !args.has_switch("no-obs"),
         ..LaunchOpts::default()
     };
     if let Some(p) = args.flag("tune-profile") {
@@ -1473,6 +1484,164 @@ fn cmd_obs_bench(args: &Args) -> Result<()> {
          \"instrumented_over_no_obs_p50\": {},\n  \
          \"checksums_match_lockstep\": true,\n  \"regenerate\": \"sar obs-bench --out \
          BENCH_9.json\"\n}}\n",
+        summary_json(&t_on),
+        summary_json(&t_off),
+        json_f64(ratio),
+    );
+    if let Some(dir) = out_path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+        }
+    }
+    std::fs::write(&out_path, json).with_context(|| format!("writing {}", out_path.display()))?;
+    println!("wrote {}", out_path.display());
+    Ok(())
+}
+
+/// `sar trace`: pull every worker's trace ring off a serving pool's
+/// client port (the same admin door `sar stat` uses), merge the
+/// clock-rebased per-worker timelines, write a Chrome trace-event file,
+/// and print a per-round critical-path report — which lane bounded each
+/// round, its chain of phase spans, the slowest span anywhere, and
+/// per-layer achieved wire bandwidth (compared against a tuning
+/// profile's fitted model when `--tune-profile` names one).
+fn cmd_trace(args: &Args) -> Result<()> {
+    use sparse_allreduce::obs::trace::{chrome_trace_json, critical_paths, SERVE_NODE};
+    args.expect_known("trace", &["pool", "out", "tune-profile"])?;
+    let addr = args
+        .flag("pool")
+        .ok_or_else(|| anyhow::anyhow!("--pool required\n\n{}", usage_for("trace").unwrap()))?;
+    let model = match args.flag("tune-profile") {
+        Some(p) => Some(tune::TuneProfile::load(Path::new(p))?.cost),
+        None => None,
+    };
+    let events = cluster::pull_cluster_trace(addr)
+        .with_context(|| format!("pulling the trace off the pool at {addr}"))?;
+    if events.is_empty() {
+        bail!(
+            "the pool at {addr} returned an empty trace: run a job through it first \
+             (e.g. `sar pagerank --pool {addr}`), or the pool was started with --no-obs"
+        );
+    }
+    let out_path = PathBuf::from(args.flag("out").unwrap_or("trace.json"));
+    std::fs::write(&out_path, chrome_trace_json(&events))
+        .with_context(|| format!("writing {}", out_path.display()))?;
+    let workers: std::collections::BTreeSet<u32> =
+        events.iter().map(|e| e.tags.node).filter(|&n| n != SERVE_NODE).collect();
+    println!(
+        "pulled {} events across {} worker lane(s); wrote {} — open it at \
+         chrome://tracing or https://ui.perfetto.dev",
+        events.len(),
+        workers.len(),
+        out_path.display()
+    );
+
+    let paths = critical_paths(&events);
+    if paths.is_empty() {
+        println!("no complete round spans in the trace (only instants/flows); nothing to fold");
+        return Ok(());
+    }
+    let us = |v: u64| human_duration(v as f64 / 1e6);
+    for p in &paths {
+        println!(
+            "job {} round {}: wall {} (timeline extent {}), bounded by lane {}",
+            p.job,
+            p.round,
+            us(p.wall_us),
+            us(p.extent_us),
+            p.node
+        );
+        if !p.chain.is_empty() {
+            let cover = if p.wall_us > 0 {
+                p.chain_us as f64 / p.wall_us as f64 * 100.0
+            } else {
+                0.0
+            };
+            let chain = p
+                .chain
+                .iter()
+                .map(|e| format!("{} {}", e.name, us(e.dur_us)))
+                .collect::<Vec<_>>()
+                .join(" -> ");
+            println!(
+                "  critical path ({} spans, {cover:.0}% of wall): {chain}",
+                p.chain.len()
+            );
+        }
+        if let Some((node, layer, name, dur)) = &p.slowest {
+            println!("  slowest span: `{name}` on lane {node}, layer {layer} ({})", us(*dur));
+        }
+        for lb in &p.layers {
+            let vs_model = match &model {
+                Some(m) if m.bandwidth_bps > 0.0 => format!(
+                    " ({:.0}% of the profile's {}/s)",
+                    lb.achieved_bps() / m.bandwidth_bps * 100.0,
+                    human_bytes(m.bandwidth_bps as u64)
+                ),
+                _ => String::new(),
+            };
+            println!(
+                "  layer {}: {} sent over {} of open layer span, {}/s achieved{vs_model}",
+                lb.layer,
+                human_bytes(lb.bytes),
+                us(lb.span_us),
+                human_bytes(lb.achieved_bps() as u64)
+            );
+        }
+    }
+    Ok(())
+}
+
+/// `sar trace-bench`: the tracing layer's acceptance gate — per-round
+/// threaded allreduce time with the trace ring (and obs registry; one
+/// flag gates both) recording vs disabled. Both cases' checksums must
+/// match the lockstep oracle before any timing is reported. Emits the
+/// `BENCH_10.json` row.
+fn cmd_trace_bench(args: &Args) -> Result<()> {
+    args.expect_known("trace-bench", &["lanes", "rounds", "out", "fast"])?;
+    let fast = args.has_switch("fast");
+    let lanes = args.usize_flag("lanes", 4)?.max(2);
+    let rounds = args.usize_flag("rounds", if fast { 12 } else { 48 })?.max(1);
+    let out_path = PathBuf::from(args.flag("out").unwrap_or("BENCH_10.json"));
+    let range: i64 = 4096;
+    let degrees = vec![lanes];
+    println!(
+        "trace-bench: {lanes} lanes, {rounds} threaded rounds over [0, {range}); \
+         traced vs no-obs"
+    );
+    let (want, _) = obs_bench_run(&degrees, false, range, rounds)?;
+    let ring = sparse_allreduce::obs::trace::ring();
+    sparse_allreduce::obs::set_enabled(true);
+    let before = ring.recorded();
+    let (sum_on, t_on) = obs_bench_run(&degrees, true, range, rounds)?;
+    let traced_events = ring.recorded() - before;
+    sparse_allreduce::obs::set_enabled(false);
+    let (sum_off, t_off) = obs_bench_run(&degrees, true, range, rounds)?;
+    sparse_allreduce::obs::set_enabled(true);
+    for (case, got) in [("traced", sum_on), ("no-obs", sum_off)] {
+        if (got - want).abs() > 1e-9 {
+            bail!("the {case} case's checksum {got} diverged from the lockstep oracle {want}");
+        }
+    }
+    if traced_events == 0 {
+        bail!("the traced case recorded no trace events; the ring gate is wired wrong");
+    }
+    println!("  traced: p50 {}/round ({traced_events} events)", human_duration(t_on.p50));
+    println!("  no-obs: p50 {}/round", human_duration(t_off.p50));
+    let ratio = if t_off.p50 > 0.0 { t_on.p50 / t_off.p50 } else { 0.0 };
+    println!("  traced/no-obs p50 ratio {ratio:.3} (checksums match the lockstep oracle)");
+
+    use sparse_allreduce::bench::{json_f64, summary_json};
+    let json = format!(
+        "{{\n  \"bench\": 10,\n  \"experiment\": \"distributed tracing: per-round threaded \
+         allreduce time with the trace ring recording vs disabled\",\n  \
+         \"lanes\": {lanes},\n  \"rounds\": {rounds},\n  \"index_range\": {range},\n  \
+         \"trace_events_recorded\": {traced_events},\n  \
+         \"rows\": [\n    {{\"case\":\"traced\",\"secs\":{}}},\n    \
+         {{\"case\":\"no_obs\",\"secs\":{}}}\n  ],\n  \
+         \"traced_over_no_obs_p50\": {},\n  \
+         \"checksums_match_lockstep\": true,\n  \"regenerate\": \"sar trace-bench --out \
+         BENCH_10.json\"\n}}\n",
         summary_json(&t_on),
         summary_json(&t_off),
         json_f64(ratio),

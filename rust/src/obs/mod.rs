@@ -15,11 +15,17 @@
 //! - [`stats`] — the cluster rollup: worker registry snapshots pulled
 //!   over `CtrlMsg::Stats` merged with serve-plane counters into a
 //!   [`ClusterStats`], rendered by `sar stat`.
+//! - [`trace`] — the event plane: a lock-cheap per-process ring of
+//!   timestamped (job, round, node, layer)-tagged events, pulled over
+//!   `CtrlMsg::Trace`, clock-aligned, and merged into the cross-worker
+//!   timeline `sar trace` exports as Chrome trace JSON with a
+//!   critical-path report.
 
 pub mod registry;
 pub mod run;
 pub mod span;
 pub mod stats;
+pub mod trace;
 
 pub use registry::{
     bucket_of, enabled, global, set_enabled, Counter, Gauge, HistSnapshot, Histogram,

@@ -146,8 +146,12 @@ impl HistSnapshot {
         }
     }
 
-    /// Approximate quantile in seconds from the bucket midpoints
-    /// (`q` in [0, 1]; 0 when empty).
+    /// Approximate quantile in seconds, linearly interpolated within
+    /// the log2 bucket the target rank lands in (`q` in [0, 1]; 0 when
+    /// empty). The target is the `ceil(count·q)`-th sample; within its
+    /// bucket the samples are assumed evenly spread over
+    /// `[2^i, 2^(i+1))` µs, so the answer is exact when they are and
+    /// off by at most the bucket width when they are not.
     pub fn quantile_secs(&self, q: f64) -> f64 {
         if self.count == 0 {
             return 0.0;
@@ -155,13 +159,17 @@ impl HistSnapshot {
         let target = ((self.count as f64 * q).ceil() as u64).clamp(1, self.count);
         let mut seen = 0u64;
         for (i, &c) in self.buckets.iter().enumerate() {
-            seen += c;
-            if seen >= target {
-                // Midpoint of [2^i, 2^(i+1)) µs; bucket 0 spans [0, 2).
+            if c == 0 {
+                continue;
+            }
+            if seen + c >= target {
+                // Bucket i spans [2^i, 2^(i+1)) µs; bucket 0 spans [0, 2).
                 let lo = if i == 0 { 0.0 } else { (1u64 << i) as f64 };
                 let hi = (1u64 << (i + 1)) as f64;
-                return (lo + hi) / 2.0 / 1e6;
+                let frac = (target - seen) as f64 / c as f64;
+                return (lo + frac * (hi - lo)) / 1e6;
             }
+            seen += c;
         }
         0.0
     }
@@ -239,6 +247,13 @@ impl Registry {
 
     pub fn enabled(&self) -> bool {
         self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// The shared enabled flag every handle minted from this registry
+    /// carries. The trace ring ([`super::trace`]) gates through the
+    /// SAME flag, so `--no-obs` silences metrics and traces together.
+    pub fn enabled_flag(&self) -> Arc<AtomicBool> {
+        self.enabled.clone()
     }
 
     /// Resolve (registering on first use) a counter. Cold path: cache
@@ -372,6 +387,38 @@ mod tests {
         let p99 = hs.quantile_secs(0.99);
         assert!(p50 <= p99, "p50 {p50} vs p99 {p99}");
         assert!(p99 >= 0.05, "largest sample 0.1s must pull p99 up, got {p99}");
+    }
+
+    /// Satellite (PR 10): quantiles interpolate *within* buckets, so on
+    /// synthetic data evenly spread over one bucket the approximation
+    /// is exact — not the bucket midpoint regardless of rank.
+    #[test]
+    fn quantiles_interpolate_within_buckets() {
+        let r = Registry::new();
+        let h = r.histogram("lat");
+        // Four samples, all in bucket 6 ([64, 128) µs). Interpolation
+        // places rank k of 4 at lo + (k/4)·width exactly.
+        for _ in 0..4 {
+            h.record_us(64);
+        }
+        let s = h.snapshot("lat");
+        assert!((s.quantile_secs(0.25) - 80e-6).abs() < 1e-12, "{}", s.quantile_secs(0.25));
+        assert!((s.quantile_secs(0.5) - 96e-6).abs() < 1e-12, "{}", s.quantile_secs(0.5));
+        assert!((s.quantile_secs(1.0) - 128e-6).abs() < 1e-12, "{}", s.quantile_secs(1.0));
+        // Across buckets: 9 samples in bucket 0, 1 in bucket 10 — p90
+        // is the 9th sample (top of bucket 0), p99/p100 the big one.
+        let h2 = r.histogram("lat2");
+        for _ in 0..9 {
+            h2.record_us(1);
+        }
+        h2.record_us(1024);
+        let s2 = h2.snapshot("lat2");
+        assert!((s2.quantile_secs(0.9) - 2e-6 * (9.0 / 9.0)).abs() < 1e-12);
+        let p99 = s2.quantile_secs(0.99);
+        assert!((1024e-6..=2048e-6).contains(&p99), "p99 {p99}");
+        // Ordering holds through the interpolation.
+        assert!(s2.quantile_secs(0.5) <= s2.quantile_secs(0.9));
+        assert!(s2.quantile_secs(0.9) <= p99);
     }
 
     #[test]

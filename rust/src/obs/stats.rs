@@ -191,11 +191,12 @@ impl ClusterStats {
 
 fn hist_line(h: &HistSnapshot) -> String {
     format!(
-        "{:<28} count={} mean={:.3}ms p50={:.3}ms p99={:.3}ms",
+        "{:<28} count={} mean={:.3}ms p50={:.3}ms p90={:.3}ms p99={:.3}ms",
         h.name,
         h.count,
         h.mean_secs() * 1e3,
         h.quantile_secs(0.5) * 1e3,
+        h.quantile_secs(0.9) * 1e3,
         h.quantile_secs(0.99) * 1e3
     )
 }
@@ -235,12 +236,13 @@ pub fn snapshot_json(s: &Snapshot, indent: usize) -> String {
             h.buckets.iter().map(|b| b.to_string()).collect::<Vec<_>>().join(",");
         out.push_str(&format!(
             "\n{inner}  \"{}\": {{ \"count\": {}, \"sum_us\": {}, \"mean_secs\": {}, \
-             \"p50_secs\": {}, \"p99_secs\": {}, \"buckets\": [{buckets}] }}",
+             \"p50_secs\": {}, \"p90_secs\": {}, \"p99_secs\": {}, \"buckets\": [{buckets}] }}",
             json_escape(&h.name),
             h.count,
             h.sum_us,
             h.mean_secs(),
             h.quantile_secs(0.5),
+            h.quantile_secs(0.9),
             h.quantile_secs(0.99),
         ));
     }
@@ -310,6 +312,24 @@ mod tests {
             let o = json.matches(open).count();
             let c = json.matches(close).count();
             assert_eq!(o, c, "unbalanced {open}{close} in {json}");
+        }
+    }
+
+    /// Satellite (PR 10): the human table and the JSON both carry the
+    /// interpolated p50/p90/p99 triple.
+    #[test]
+    fn render_and_json_carry_p90() {
+        let stats = sample_stats();
+        let text = stats.render();
+        assert!(text.contains("p90="), "{text}");
+        let json = stats.to_json();
+        assert!(json.contains("\"p90_secs\""), "{json}");
+        // The quantiles stay ordered in whatever the rollup carries.
+        for (_, snap) in &stats.workers {
+            for h in &snap.hists {
+                assert!(h.quantile_secs(0.5) <= h.quantile_secs(0.9));
+                assert!(h.quantile_secs(0.9) <= h.quantile_secs(0.99));
+            }
         }
     }
 

@@ -1,0 +1,748 @@
+//! Distributed round tracing: a per-process ring buffer of timestamped
+//! trace events, merged cluster-wide into one timeline by `sar trace`.
+//!
+//! Where [`super::registry`] answers "how long do rounds take on
+//! average", this layer answers the question ROADMAP item 2 actually
+//! asks: *which worker, layer, and phase bounded the wall clock of a
+//! given round*. Every instrumentation site records into the
+//! process-wide [`ring`] — round start/end, one span per butterfly
+//! layer of the scatter-reduce and allgather sweeps, one flow event
+//! per wire edge with its byte count, worker-engine dispatch, and the
+//! serve plane's admission→dispatch→drain — tagged with
+//! `(job, round, node, layer)`.
+//!
+//! The ring shares the registry's `enabled` gate (`--no-obs`): a
+//! disabled record is one relaxed load, and trace spans skip their
+//! clock reads entirely, exactly like [`super::span::Span`]. Recording
+//! when enabled is an atomic cursor bump plus one uncontended per-slot
+//! mutex store — no allocation (event names are `&'static str`), no
+//! global lock, and wraparound simply overwrites the oldest slot, so a
+//! hot loop can never grow the ring.
+//!
+//! The coordinator pulls every worker's ring over control opcode 20
+//! (TRACE, see `cluster::proto`), aligns the worker clocks onto its own
+//! timebase ([`estimate_offset_us`]: the reply's worker-clock sample
+//! against the request→reply midpoint, accurate to half the control
+//! round trip, drift-checked across pulls by `fault::ClockAlign`), and
+//! merges everything into one timeline — exported as Chrome trace-event
+//! JSON ([`chrome_trace_json`]: one track per worker, spans as complete
+//! events, wire edges as flow events) and folded into a per-round
+//! critical-path report ([`critical_paths`]).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// A timed phase (Chrome "complete" event; `dur_us` is meaningful).
+pub const KIND_SPAN: u8 = 0;
+/// A point-in-time marker (admission, eviction, dispatch).
+pub const KIND_INSTANT: u8 = 1;
+/// The send half of one wire edge (`peer` = destination, `bytes` sent).
+pub const KIND_FLOW_SEND: u8 = 2;
+/// The receive half of one wire edge (`peer` = source, `bytes` read).
+pub const KIND_FLOW_RECV: u8 = 3;
+/// Largest valid kind (wire decode validation).
+pub const KIND_MAX: u8 = KIND_FLOW_RECV;
+
+/// `node` tag for events recorded by the serve/coordinator process
+/// itself (admission, dispatch, drain) rather than a pool worker.
+pub const SERVE_NODE: u32 = u32::MAX;
+
+/// The tag tuple every trace event carries. `round` is the collective
+/// sequence number within `job`; `layer` the butterfly layer (0 for
+/// whole-round events); `peer` the far end of a wire edge (0 unless the
+/// event is a flow); `bytes` the payload size where one applies.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TraceTags {
+    pub job: u32,
+    pub round: u32,
+    pub node: u32,
+    pub layer: u32,
+    pub peer: u32,
+    pub bytes: u64,
+}
+
+/// One merged-timeline trace event — the owned form that crosses the
+/// wire (opcode 20) and feeds the Chrome export and the critical-path
+/// fold. Inside the ring the name stays `&'static str`; it is
+/// materialized only at snapshot time.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    pub name: String,
+    pub kind: u8,
+    /// Microseconds on the recording process's trace clock (re-based
+    /// onto the coordinator's timebase by the merge).
+    pub ts_us: u64,
+    /// Span duration (0 for instants and flows).
+    pub dur_us: u64,
+    pub tags: TraceTags,
+}
+
+/// Ring slot payload: copy-cheap, allocation-free.
+#[derive(Clone, Copy)]
+struct Slot {
+    name: &'static str,
+    kind: u8,
+    ts_us: u64,
+    dur_us: u64,
+    tags: TraceTags,
+}
+
+/// Default ring capacity: 64 Ki events ≈ a few thousand traced rounds
+/// per worker before wraparound, a few MiB of memory.
+pub const DEFAULT_TRACE_CAP: usize = 1 << 16;
+
+/// A fixed-capacity, lock-cheap ring of trace events. Writers claim a
+/// slot with one atomic `fetch_add` and store through that slot's own
+/// mutex (uncontended except when wraparound laps a concurrent writer),
+/// so concurrent recording scales; [`TraceRing::snapshot`] walks the
+/// slots without stopping writers. Recording is gated on the same
+/// enabled flag as the metrics registry.
+pub struct TraceRing {
+    enabled: Arc<AtomicBool>,
+    epoch: Instant,
+    next: AtomicU64,
+    slots: Box<[Mutex<Option<Slot>>]>,
+}
+
+impl TraceRing {
+    /// A ring gated on `enabled` (share the registry's flag so
+    /// `--no-obs` silences both planes with one store).
+    pub fn new(enabled: Arc<AtomicBool>) -> Self {
+        Self::with_capacity(DEFAULT_TRACE_CAP, enabled)
+    }
+
+    pub fn with_capacity(cap: usize, enabled: Arc<AtomicBool>) -> Self {
+        let cap = cap.max(1);
+        Self {
+            enabled,
+            epoch: Instant::now(),
+            next: AtomicU64::new(0),
+            slots: (0..cap).map(|_| Mutex::new(None)).collect(),
+        }
+    }
+
+    /// Whether events are currently kept — spans check this BEFORE
+    /// reading the clock (the `--no-obs` fast path).
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Microseconds since this ring's epoch — the process's trace
+    /// clock. Workers report this in their TRACE replies so the
+    /// coordinator can re-base their events onto its own clock.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros().min(u64::MAX as u128) as u64
+    }
+
+    /// Record one event (dropped after one relaxed load when disabled).
+    pub fn record(&self, kind: u8, name: &'static str, ts_us: u64, dur_us: u64, tags: TraceTags) {
+        if !self.is_enabled() {
+            return;
+        }
+        let idx = (self.next.fetch_add(1, Ordering::Relaxed) % self.slots.len() as u64) as usize;
+        *self.slots[idx].lock().expect("trace slot poisoned") =
+            Some(Slot { name, kind, ts_us, dur_us, tags });
+    }
+
+    /// A point-in-time marker at "now".
+    pub fn instant(&self, name: &'static str, tags: TraceTags) {
+        if self.is_enabled() {
+            self.record(KIND_INSTANT, name, self.now_us(), 0, tags);
+        }
+    }
+
+    /// The send half of a wire edge (`tags.peer` = destination).
+    pub fn flow_send(&self, name: &'static str, tags: TraceTags) {
+        if self.is_enabled() {
+            self.record(KIND_FLOW_SEND, name, self.now_us(), 0, tags);
+        }
+    }
+
+    /// The receive half of a wire edge (`tags.peer` = source).
+    pub fn flow_recv(&self, name: &'static str, tags: TraceTags) {
+        if self.is_enabled() {
+            self.record(KIND_FLOW_RECV, name, self.now_us(), 0, tags);
+        }
+    }
+
+    /// Open a scoped span; records on drop/finish. Inert — no clock
+    /// read — when the ring is disabled.
+    pub fn span(&self, name: &'static str, tags: TraceTags) -> TraceSpan<'_> {
+        if self.is_enabled() {
+            TraceSpan { live: Some((self, name, tags, self.now_us())) }
+        } else {
+            TraceSpan { live: None }
+        }
+    }
+
+    /// The retained events, oldest first (approximate order under
+    /// concurrent writers; callers sort the merged timeline by
+    /// timestamp anyway). Does not stop writers.
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        let cap = self.slots.len() as u64;
+        let total = self.next.load(Ordering::Relaxed);
+        let (start, n) =
+            if total <= cap { (0, total as usize) } else { (total % cap, cap as usize) };
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let idx = ((start + i as u64) % cap) as usize;
+            if let Some(s) = *self.slots[idx].lock().expect("trace slot poisoned") {
+                out.push(TraceEvent {
+                    name: s.name.to_string(),
+                    kind: s.kind,
+                    ts_us: s.ts_us,
+                    dur_us: s.dur_us,
+                    tags: s.tags,
+                });
+            }
+        }
+        out
+    }
+
+    /// Events recorded so far (monotone; may exceed capacity).
+    pub fn recorded(&self) -> u64 {
+        self.next.load(Ordering::Relaxed)
+    }
+
+    /// Drop every retained event (benches isolate runs with this).
+    pub fn clear(&self) {
+        for s in self.slots.iter() {
+            *s.lock().expect("trace slot poisoned") = None;
+        }
+        self.next.store(0, Ordering::Relaxed);
+    }
+}
+
+/// A scoped trace span: claims the start timestamp on construction,
+/// records a [`KIND_SPAN`] event on drop. Inert when the ring is
+/// disabled (no clock reads — one relaxed load total).
+pub struct TraceSpan<'a> {
+    live: Option<(&'a TraceRing, &'static str, TraceTags, u64)>,
+}
+
+impl TraceSpan<'_> {
+    /// End the span (otherwise drop does it).
+    pub fn finish(self) {}
+
+    /// Abandon without recording (failed phase).
+    pub fn cancel(mut self) {
+        self.live = None;
+    }
+
+    /// Attach a byte count learned mid-span (e.g. after the sends).
+    pub fn set_bytes(&mut self, bytes: u64) {
+        if let Some((_, _, tags, _)) = self.live.as_mut() {
+            tags.bytes = bytes;
+        }
+    }
+}
+
+impl Drop for TraceSpan<'_> {
+    fn drop(&mut self) {
+        if let Some((ring, name, tags, t0)) = self.live.take() {
+            let now = ring.now_us();
+            ring.record(KIND_SPAN, name, t0, now.saturating_sub(t0), tags);
+        }
+    }
+}
+
+static GLOBAL_RING: OnceLock<TraceRing> = OnceLock::new();
+
+/// The process-wide trace ring every instrumentation site records
+/// into, gated on the global registry's enabled flag.
+pub fn ring() -> &'static TraceRing {
+    GLOBAL_RING.get_or_init(|| TraceRing::new(super::registry::global().enabled_flag()))
+}
+
+// --- clock alignment --------------------------------------------------
+
+/// Midpoint clock-offset estimate: the worker sampled its trace clock
+/// (`worker_clock_us`) somewhere between the coordinator sending the
+/// request (`req_sent_us`) and receiving the reply (`reply_recv_us`),
+/// both on the coordinator's trace clock. Assuming symmetric paths the
+/// sample corresponds to the midpoint, so
+/// `offset = worker_clock − midpoint` and a worker timestamp `t` maps
+/// onto the coordinator timebase as `t − offset`. The error is bounded
+/// by half the request→reply round trip — which is why the nonce'd
+/// heartbeat RTTs are the right uncertainty to drift-check against
+/// (see `fault::ClockAlign`).
+pub fn estimate_offset_us(req_sent_us: u64, reply_recv_us: u64, worker_clock_us: u64) -> i64 {
+    let mid = (req_sent_us / 2) + (reply_recv_us / 2) + (req_sent_us % 2 + reply_recv_us % 2) / 2;
+    worker_clock_us as i64 - mid as i64
+}
+
+/// Re-base one worker's events onto the coordinator timebase.
+pub fn rebase(events: &mut [TraceEvent], offset_us: i64) {
+    for e in events.iter_mut() {
+        e.ts_us = (e.ts_us as i64 - offset_us).max(0) as u64;
+    }
+}
+
+// --- Chrome trace export ----------------------------------------------
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Stable id pairing the two halves of a wire edge: the send event
+/// hashes `(job, round, layer, node→peer)`, the receive event hashes
+/// the same arrow from its own perspective `(peer→node)`.
+fn flow_id(job: u32, round: u32, layer: u32, src: u32, dst: u32) -> u64 {
+    // FNV-1a over the five tag words — no hasher dependency needed.
+    let mut h: u64 = 0xcbf29ce484222325;
+    for w in [job, round, layer, src, dst] {
+        for b in w.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+/// Render a merged timeline as Chrome trace-event JSON (the object
+/// form, loadable in chrome://tracing and Perfetto): one track (tid)
+/// per worker under one pid, spans as complete events (`ph:"X"`), wire
+/// edges as flow events (`ph:"s"`/`ph:"f"` paired by [`flow_id`]),
+/// instants as `ph:"i"`.
+pub fn chrome_trace_json(events: &[TraceEvent]) -> String {
+    let mut out = String::from("{\"traceEvents\":[\n");
+    // Track-name metadata: one per distinct node, so the viewer labels
+    // rows "worker N" / "serve" instead of raw tids.
+    let mut nodes: Vec<u32> = events.iter().map(|e| e.tags.node).collect();
+    nodes.sort_unstable();
+    nodes.dedup();
+    let mut first = true;
+    for &n in &nodes {
+        let label = if n == SERVE_NODE { "serve".to_string() } else { format!("worker {n}") };
+        if !first {
+            out.push_str(",\n");
+        }
+        first = false;
+        out.push_str(&format!(
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":0,\"tid\":{n},\
+             \"args\":{{\"name\":\"{label}\"}}}}"
+        ));
+    }
+    for e in events {
+        let t = &e.tags;
+        let args = format!(
+            "{{\"job\":{},\"round\":{},\"layer\":{},\"bytes\":{}}}",
+            t.job, t.round, t.layer, t.bytes
+        );
+        let common = format!(
+            "\"name\":\"{}\",\"pid\":0,\"tid\":{},\"ts\":{},\"args\":{args}",
+            json_escape(&e.name),
+            t.node,
+            e.ts_us
+        );
+        if !first {
+            out.push_str(",\n");
+        }
+        first = false;
+        match e.kind {
+            KIND_SPAN => {
+                out.push_str(&format!(
+                    "{{{common},\"cat\":\"phase\",\"ph\":\"X\",\"dur\":{}}}",
+                    e.dur_us
+                ));
+            }
+            KIND_FLOW_SEND => {
+                let id = flow_id(t.job, t.round, t.layer, t.node, t.peer);
+                out.push_str(&format!(
+                    "{{{common},\"cat\":\"wire\",\"ph\":\"s\",\"id\":{id}}}"
+                ));
+            }
+            KIND_FLOW_RECV => {
+                let id = flow_id(t.job, t.round, t.layer, t.peer, t.node);
+                out.push_str(&format!(
+                    "{{{common},\"cat\":\"wire\",\"ph\":\"f\",\"bp\":\"e\",\"id\":{id}}}"
+                ));
+            }
+            _ => {
+                out.push_str(&format!("{{{common},\"cat\":\"mark\",\"ph\":\"i\",\"s\":\"t\"}}"));
+            }
+        }
+    }
+    out.push_str("\n],\"displayTimeUnit\":\"ms\"}\n");
+    out
+}
+
+// --- critical-path analysis -------------------------------------------
+
+/// Container spans delimit a whole round on one node; the spans *inside*
+/// them (per-layer wire sweeps, the bottom merge) form the chain the
+/// critical-path fold sums.
+const CONTAINER_NAMES: [&str; 3] = ["round", "config", "worker.round"];
+
+/// Achieved wire throughput of one butterfly layer across a traced
+/// round set: bytes sent while its layer spans were open.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerBandwidth {
+    pub layer: u32,
+    /// Bytes sent at this layer (flow-send events, all nodes).
+    pub bytes: u64,
+    /// Total open layer-span time across nodes, µs.
+    pub span_us: u64,
+}
+
+impl LayerBandwidth {
+    /// Mean per-node send throughput, bytes/second.
+    pub fn achieved_bps(&self) -> f64 {
+        if self.span_us == 0 {
+            0.0
+        } else {
+            self.bytes as f64 * 1e6 / self.span_us as f64
+        }
+    }
+}
+
+/// The critical-path fold of one traced round.
+#[derive(Clone, Debug)]
+pub struct RoundPath {
+    pub job: u32,
+    pub round: u32,
+    /// The round's measured wall clock: the longest per-node container
+    /// span (every node blocks on the slowest, so this IS the round
+    /// time), falling back to the merged-timeline extent.
+    pub wall_us: u64,
+    /// The merged-timeline extent (first start → last end) — differs
+    /// from `wall_us` by cross-worker start skew.
+    pub extent_us: u64,
+    /// The lane (node) that bounded the round — the one whose
+    /// container span ended last.
+    pub node: u32,
+    /// That lane's chain of phase spans, in time order.
+    pub chain: Vec<TraceEvent>,
+    /// Sum of the chain's span durations.
+    pub chain_us: u64,
+    /// The slowest `(node, layer, phase, dur_us)` span in the round.
+    pub slowest: Option<(u32, u32, String, u64)>,
+    /// Per-layer achieved bandwidth over this round.
+    pub layers: Vec<LayerBandwidth>,
+}
+
+/// Fold a merged timeline into one [`RoundPath`] per traced round,
+/// ordered by `(job, round)`. Rounds with no container span (e.g. only
+/// serve-plane instants) are skipped.
+pub fn critical_paths(events: &[TraceEvent]) -> Vec<RoundPath> {
+    let mut keys: Vec<(u32, u32)> = events
+        .iter()
+        .filter(|e| e.kind == KIND_SPAN && CONTAINER_NAMES.contains(&e.name.as_str()))
+        .map(|e| (e.tags.job, e.tags.round))
+        .collect();
+    keys.sort_unstable();
+    keys.dedup();
+    keys.iter().map(|&(job, round)| round_path(events, job, round)).collect()
+}
+
+fn round_path(events: &[TraceEvent], job: u32, round: u32) -> RoundPath {
+    let in_round =
+        |e: &&TraceEvent| e.tags.job == job && e.tags.round == round;
+    let containers: Vec<&TraceEvent> = events
+        .iter()
+        .filter(in_round)
+        .filter(|e| e.kind == KIND_SPAN && CONTAINER_NAMES.contains(&e.name.as_str()))
+        .collect();
+    // The bounding lane: the container span that ended last. Wall is
+    // the longest container (the round can't finish before it).
+    let bounding = containers
+        .iter()
+        .max_by_key(|e| e.ts_us + e.dur_us)
+        .expect("round_path called for a round with a container span");
+    let wall_us = containers.iter().map(|e| e.dur_us).max().unwrap_or(0);
+    let lo = events.iter().filter(in_round).map(|e| e.ts_us).min().unwrap_or(0);
+    let hi =
+        events.iter().filter(in_round).map(|e| e.ts_us + e.dur_us).max().unwrap_or(0);
+    let node = bounding.tags.node;
+    let mut chain: Vec<TraceEvent> = events
+        .iter()
+        .filter(in_round)
+        .filter(|e| {
+            e.kind == KIND_SPAN
+                && e.tags.node == node
+                && !CONTAINER_NAMES.contains(&e.name.as_str())
+        })
+        .cloned()
+        .collect();
+    chain.sort_by_key(|e| e.ts_us);
+    let chain_us = chain.iter().map(|e| e.dur_us).sum();
+    let slowest = events
+        .iter()
+        .filter(in_round)
+        .filter(|e| e.kind == KIND_SPAN && !CONTAINER_NAMES.contains(&e.name.as_str()))
+        .max_by_key(|e| e.dur_us)
+        .map(|e| (e.tags.node, e.tags.layer, e.name.clone(), e.dur_us));
+    let mut layers: Vec<LayerBandwidth> = Vec::new();
+    for e in events.iter().filter(in_round) {
+        let l = e.tags.layer;
+        let idx = match layers.iter().position(|lb| lb.layer == l) {
+            Some(i) => i,
+            None => {
+                layers.push(LayerBandwidth { layer: l, bytes: 0, span_us: 0 });
+                layers.len() - 1
+            }
+        };
+        let slot = &mut layers[idx];
+        match e.kind {
+            KIND_FLOW_SEND => slot.bytes += e.tags.bytes,
+            KIND_SPAN if e.name.starts_with("layer.") => slot.span_us += e.dur_us,
+            _ => {}
+        }
+    }
+    layers.retain(|lb| lb.bytes > 0 || lb.span_us > 0);
+    layers.sort_by_key(|lb| lb.layer);
+    RoundPath {
+        job,
+        round,
+        wall_us,
+        extent_us: hi.saturating_sub(lo),
+        node,
+        chain,
+        chain_us,
+        slowest,
+        layers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_ring(cap: usize) -> TraceRing {
+        TraceRing::with_capacity(cap, Arc::new(AtomicBool::new(true)))
+    }
+
+    fn tags(job: u32, round: u32, node: u32, layer: u32) -> TraceTags {
+        TraceTags { job, round, node, layer, peer: 0, bytes: 0 }
+    }
+
+    #[test]
+    fn ring_records_and_snapshots_in_order() {
+        let r = test_ring(8);
+        r.record(KIND_SPAN, "a", 10, 5, tags(1, 1, 0, 0));
+        r.instant("b", tags(1, 1, 0, 0));
+        let snap = r.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].name, "a");
+        assert_eq!(snap[0].dur_us, 5);
+        assert_eq!(snap[1].kind, KIND_INSTANT);
+        assert_eq!(r.recorded(), 2);
+        r.clear();
+        assert!(r.snapshot().is_empty());
+    }
+
+    #[test]
+    fn ring_wraps_keeping_the_newest() {
+        let r = test_ring(4);
+        for i in 0..10u64 {
+            r.record(KIND_SPAN, "e", i, 1, tags(0, 0, 0, 0));
+        }
+        let snap = r.snapshot();
+        assert_eq!(snap.len(), 4, "capacity bounds retention");
+        let ts: Vec<u64> = snap.iter().map(|e| e.ts_us).collect();
+        assert_eq!(ts, vec![6, 7, 8, 9], "oldest-first, newest retained");
+    }
+
+    /// Satellite: wraparound under concurrent writers — the ring stays
+    /// bounded, never tears an event, and retains exactly `cap` of the
+    /// most recent records.
+    #[test]
+    fn ring_wraparound_under_concurrent_writers() {
+        let r = Arc::new(test_ring(64));
+        let mut handles = Vec::new();
+        for t in 0..4u32 {
+            let r = r.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000u64 {
+                    r.record(KIND_SPAN, "w", i, t as u64 + 1, tags(t, i as u32, t, 0));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("writer");
+        }
+        assert_eq!(r.recorded(), 4000);
+        let snap = r.snapshot();
+        assert_eq!(snap.len(), 64, "bounded by capacity");
+        for e in &snap {
+            // No torn slots: every event is one writer's coherent record
+            // (its dur encodes the writer id that wrote the whole slot).
+            assert_eq!(e.tags.job, e.dur_us as u32 - 1, "torn slot: {e:?}");
+        }
+    }
+
+    #[test]
+    fn disabled_ring_is_inert_and_spans_skip_clocks() {
+        let enabled = Arc::new(AtomicBool::new(true));
+        let r = TraceRing::with_capacity(8, enabled.clone());
+        enabled.store(false, Ordering::Relaxed);
+        r.record(KIND_SPAN, "x", 1, 1, TraceTags::default());
+        r.instant("y", TraceTags::default());
+        {
+            let s = r.span("z", TraceTags::default());
+            assert!(s.live.is_none(), "disabled span must not read the clock");
+        }
+        assert_eq!(r.recorded(), 0);
+        enabled.store(true, Ordering::Relaxed);
+        {
+            let mut s = r.span("z", TraceTags::default());
+            s.set_bytes(42);
+        }
+        let snap = r.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].tags.bytes, 42);
+    }
+
+    #[test]
+    fn span_cancel_does_not_record() {
+        let r = test_ring(8);
+        r.span("p", TraceTags::default()).cancel();
+        assert_eq!(r.recorded(), 0);
+        r.span("p", TraceTags::default()).finish();
+        assert_eq!(r.recorded(), 1);
+    }
+
+    /// Satellite: known injected offsets are recovered within RTT/2.
+    #[test]
+    fn offset_estimation_recovers_injected_offsets() {
+        for &offset in &[-500_000i64, -37, 0, 42, 1_000_000] {
+            for &rtt in &[0u64, 100, 5_000] {
+                // Coordinator sends at t0, worker samples its clock at
+                // some point inside the round trip, reply lands t0+rtt.
+                let t0 = 2_000_000u64;
+                for frac in [0u64, 25, 50, 75, 100] {
+                    let coord_at_sample = t0 + rtt * frac / 100;
+                    let worker_clock = (coord_at_sample as i64 + offset) as u64;
+                    let est = estimate_offset_us(t0, t0 + rtt, worker_clock);
+                    let err = (est - offset).abs();
+                    assert!(
+                        err <= (rtt / 2) as i64 + 1,
+                        "offset {offset} rtt {rtt} frac {frac}: est {est}, err {err}"
+                    );
+                }
+            }
+        }
+        // Re-basing maps worker timestamps onto the coordinator clock.
+        let mut evs = vec![TraceEvent {
+            name: "a".into(),
+            kind: KIND_SPAN,
+            ts_us: 1500,
+            dur_us: 10,
+            tags: TraceTags::default(),
+        }];
+        rebase(&mut evs, 1000);
+        assert_eq!(evs[0].ts_us, 500);
+        rebase(&mut evs, -250);
+        assert_eq!(evs[0].ts_us, 750);
+        // Never negative: clamped to the epoch.
+        rebase(&mut evs, 10_000);
+        assert_eq!(evs[0].ts_us, 0);
+    }
+
+    fn span_ev(name: &str, ts: u64, dur: u64, t: TraceTags) -> TraceEvent {
+        TraceEvent { name: name.into(), kind: KIND_SPAN, ts_us: ts, dur_us: dur, tags: t }
+    }
+
+    #[test]
+    fn critical_path_names_the_bounding_lane_and_sums_its_chain() {
+        let mut t0 = tags(1, 1, 0, 0);
+        let mut t1 = tags(1, 1, 1, 0);
+        let mut evs = vec![
+            // node 0: fast lane (round 100..150)
+            span_ev("round", 100, 50, t0),
+            span_ev("layer.reduce", 100, 20, t0),
+            span_ev("layer.gather", 125, 25, { t0.layer = 1; t0 }),
+            // node 1: slow lane (round 100..200) — bounds the round
+            span_ev("round", 100, 100, t1),
+            span_ev("layer.reduce", 100, 60, { t1.layer = 0; t1 }),
+            span_ev("merge", 160, 5, t1),
+            span_ev("layer.gather", 165, 35, { t1.layer = 1; t1 }),
+        ];
+        // Wire edges at layer 0 carrying bytes.
+        t0.layer = 0;
+        t0.peer = 1;
+        t0.bytes = 1000;
+        evs.push(TraceEvent {
+            name: "net.edge".into(),
+            kind: KIND_FLOW_SEND,
+            ts_us: 101,
+            dur_us: 0,
+            tags: t0,
+        });
+        let paths = critical_paths(&evs);
+        assert_eq!(paths.len(), 1);
+        let p = &paths[0];
+        assert_eq!((p.job, p.round), (1, 1));
+        assert_eq!(p.node, 1, "the lane whose round span ended last");
+        assert_eq!(p.wall_us, 100);
+        assert_eq!(p.extent_us, 100);
+        assert_eq!(p.chain.len(), 3);
+        assert_eq!(p.chain_us, 100, "chain sums to the bounding lane's wall");
+        let (n, l, ref name, d) = p.slowest.clone().expect("slowest span");
+        assert_eq!((n, l, name.as_str(), d), (1, 0, "layer.reduce", 60));
+        // Layer 0 saw 1000 bytes over 20+60 µs of open layer spans.
+        let l0 = p.layers.iter().find(|lb| lb.layer == 0).expect("layer 0");
+        assert_eq!((l0.bytes, l0.span_us), (1000, 80));
+        assert!((l0.achieved_bps() - 1000.0 * 1e6 / 80.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn chrome_export_is_balanced_and_tracks_every_node() {
+        let mut t = tags(1, 2, 0, 0);
+        let mut evs = vec![span_ev("round", 10, 5, t)];
+        t.node = 3;
+        t.peer = 0;
+        t.bytes = 64;
+        evs.push(TraceEvent {
+            name: "net.edge".into(),
+            kind: KIND_FLOW_SEND,
+            ts_us: 11,
+            dur_us: 0,
+            tags: t,
+        });
+        t.node = 0;
+        t.peer = 3;
+        evs.push(TraceEvent {
+            name: "net.edge".into(),
+            kind: KIND_FLOW_RECV,
+            ts_us: 12,
+            dur_us: 0,
+            tags: t,
+        });
+        t.node = SERVE_NODE;
+        evs.push(TraceEvent {
+            name: "serve.admit".into(),
+            kind: KIND_INSTANT,
+            ts_us: 1,
+            dur_us: 0,
+            tags: t,
+        });
+        let json = chrome_trace_json(&evs);
+        assert!(json.contains("\"traceEvents\""), "{json}");
+        assert!(json.contains("worker 0"), "{json}");
+        assert!(json.contains("worker 3"), "{json}");
+        assert!(json.contains("\"serve\""), "{json}");
+        assert!(json.contains("\"ph\":\"X\""), "{json}");
+        assert!(json.contains("\"ph\":\"s\""), "{json}");
+        assert!(json.contains("\"ph\":\"f\""), "{json}");
+        assert!(json.contains("\"ph\":\"i\""), "{json}");
+        // The send and its matching receive share one flow id.
+        let ids: Vec<&str> = json
+            .match_indices("\"id\":")
+            .map(|(i, _)| {
+                let rest = &json[i + 5..];
+                &rest[..rest.find(['}', ','].as_ref()).unwrap()]
+            })
+            .collect();
+        assert_eq!(ids.len(), 2);
+        assert_eq!(ids[0], ids[1], "send/recv halves must pair by id");
+        for (open, close) in [('{', '}'), ('[', ']')] {
+            assert_eq!(
+                json.matches(open).count(),
+                json.matches(close).count(),
+                "unbalanced {open}{close}"
+            );
+        }
+    }
+}

@@ -10,7 +10,8 @@
 //! (`cargo test --test remote mp_`).
 
 use sparse_allreduce::cluster::{
-    pull_cluster_stats, serve_mux, spawn_session, LaunchOpts, LocalProcs, ServeOpts, ServeStats,
+    pull_cluster_stats, pull_cluster_trace, serve_mux, spawn_session, LaunchOpts, LocalProcs,
+    ServeOpts, ServeStats,
 };
 use sparse_allreduce::obs;
 use sparse_allreduce::comm::{CommBuilder, ExecMode, JobSpec};
@@ -594,4 +595,171 @@ fn mp_stat_pull_agrees_with_serve_stats_after_scripted_run() {
     );
     assert_eq!(s.counter("serve.evicted"), Some(stats.evicted as u64));
     assert_eq!(s.counter("serve.rejected"), Some(stats.rejected as u64));
+}
+
+/// Tracing acceptance (the PR-10 tentpole): after a scripted client
+/// run, a trace pull through the client port returns one merged
+/// clock-rebased timeline covering EVERY worker lane — flow edges with
+/// wire byte counts, layer sweeps, serve-plane instants — and the
+/// critical-path fold accounts for each round's wall clock: the
+/// bounding lane's chain of phase spans sums to within 20% of the
+/// round time.
+#[test]
+fn mp_trace_pull_covers_every_worker_and_chain_accounts_for_wall() {
+    let sopts = ServeOpts { max_live: 1, total: Some(2), ..ServeOpts::default() };
+    let (addr, serve) = serve_pool_opts(sopts);
+
+    let out = sets(vec![vec![1, 5], vec![5, 9], vec![2], vec![]]);
+    let inb = sets(vec![vec![5], vec![1, 2], vec![9], vec![5, 9]]);
+    {
+        let mut client = remote_session(&addr);
+        let mut rc = client.configure(out, inb).expect("configure");
+        for _ in 0..3 {
+            let mut v = vec![vec![1.0f32, 10.0], vec![20.0, 3.0], vec![7.0], vec![]];
+            rc.allreduce::<SumF32>(&mut v).expect("allreduce");
+        }
+    }
+    // Let the mux process the disconnect so the trace admin can take
+    // the single live slot.
+    std::thread::sleep(Duration::from_millis(500));
+
+    let events = pull_cluster_trace(&addr).expect("trace pull");
+    for node in 0..4u32 {
+        assert!(
+            events.iter().any(|e| e.tags.node == node),
+            "worker lane {node} missing from the merged trace ({} events)",
+            events.len()
+        );
+    }
+    assert!(
+        events.iter().any(|e| e.name == "net.edge" && e.tags.bytes > 0),
+        "no flow edges with byte counts in the trace"
+    );
+    assert!(
+        events.iter().any(|e| e.name == "worker.round"),
+        "no worker round containers in the trace"
+    );
+    assert!(
+        events.iter().any(|e| e.name == "serve.dispatch"),
+        "the serve plane's dispatch instants are missing"
+    );
+
+    // The critical-path fold: every client round (config is round 0 —
+    // its container covers protocol build work outside the exchange
+    // spans, so it is exempt from the coverage bound).
+    let paths = sparse_allreduce::obs::trace::critical_paths(&events);
+    let rounds: Vec<_> = paths.iter().filter(|p| p.round > 0 && !p.chain.is_empty()).collect();
+    assert!(rounds.len() >= 3, "expected 3 traced rounds, got {}: {paths:?}", rounds.len());
+    let mut best = 0.0f64;
+    for p in &rounds {
+        assert!(p.wall_us > 0, "round {}/{} has no wall clock", p.job, p.round);
+        let cover = p.chain_us as f64 / p.wall_us as f64;
+        // The chain nests inside the bounding container, so it can
+        // never exceed the wall (1.01 absorbs µs-clock rounding); the
+        // lower bound is loose per round to ride out scheduler jitter.
+        assert!(
+            cover > 0.5 && cover < 1.01,
+            "round {}/{}: chain {}us vs wall {}us ({:.0}% coverage)",
+            p.job,
+            p.round,
+            p.chain_us,
+            p.wall_us,
+            cover * 100.0
+        );
+        best = best.max(cover);
+        assert!(
+            !p.layers.is_empty(),
+            "round {}/{} folded no per-layer bandwidth",
+            p.job,
+            p.round
+        );
+    }
+    assert!(
+        best > 0.8,
+        "no round's critical-path chain came within 20% of its wall clock (best {:.0}%)",
+        best * 100.0
+    );
+
+    // The trace admin refunded its budget slot; spend the remaining
+    // session so the serve loop exits.
+    {
+        let mut client = remote_session(&addr);
+        let out = sets(vec![vec![1, 5], vec![5, 9], vec![2], vec![]]);
+        let inb = sets(vec![vec![5], vec![1, 2], vec![9], vec![5, 9]]);
+        let mut rc = client.configure(out, inb).expect("budget-spending configure");
+        let mut v = vec![vec![1.0f32, 10.0], vec![20.0, 3.0], vec![7.0], vec![]];
+        rc.allreduce::<SumF32>(&mut v).expect("budget-spending allreduce");
+    }
+    serve.join().expect("serve thread");
+}
+
+/// `--no-obs` acceptance: the flag rides the worker plan, so a pool
+/// launched with `obs: false` runs whole client rounds while every
+/// worker's metric census stays empty and every worker's trace ring
+/// stays silent — near-zero observability cost where it matters.
+#[test]
+fn mp_no_obs_plan_silences_worker_census_and_trace() {
+    let opts = LaunchOpts {
+        degrees: vec![2, 2],
+        send_threads: 2,
+        obs: false,
+        ..LaunchOpts::default()
+    };
+    let (mut session, mut procs) = spawn_session(sar_bin(), opts).expect("pool bring-up failed");
+    let listener = TcpListener::bind("127.0.0.1:0").expect("binding client listener");
+    let addr = listener.local_addr().unwrap().to_string();
+    let sopts = ServeOpts { max_live: 1, total: Some(2), ..ServeOpts::default() };
+    let serve = std::thread::spawn(move || {
+        let stats = serve_mux(&mut session, &listener, &sopts).expect("serve loop failed");
+        session.shutdown();
+        procs.wait_all();
+        stats
+    });
+
+    // A real client round: work the workers would normally census.
+    {
+        let mut client = remote_session(&addr);
+        let out = sets(vec![vec![1, 5], vec![5, 9], vec![2], vec![]]);
+        let inb = sets(vec![vec![5], vec![1, 2], vec![9], vec![5, 9]]);
+        let mut rc = client.configure(out, inb).expect("configure");
+        let mut v = vec![vec![1.0f32, 10.0], vec![20.0, 3.0], vec![7.0], vec![]];
+        rc.allreduce::<SumF32>(&mut v).expect("allreduce");
+    }
+    std::thread::sleep(Duration::from_millis(500));
+
+    let pulled = pull_cluster_stats(&addr).expect("stat pull");
+    assert_eq!(pulled.workers.len(), 4, "one census per worker, even when silenced");
+    for (node, snap) in &pulled.workers {
+        assert_eq!(
+            snap.counter("worker.rounds").unwrap_or(0),
+            0,
+            "worker {node} censused a round despite --no-obs"
+        );
+        assert!(
+            snap.hist("worker.round").map_or(true, |h| h.count == 0),
+            "worker {node} recorded round latencies despite --no-obs"
+        );
+    }
+    std::thread::sleep(Duration::from_millis(200));
+    let events = pull_cluster_trace(&addr).expect("trace pull");
+    // The serve plane lives in THIS (instrumented) process; the plan
+    // only silences the workers — so worker-lane events specifically
+    // must be absent.
+    assert!(
+        !events.iter().any(|e| e.tags.node < 4),
+        "a --no-obs worker recorded trace events: {:?}",
+        events.iter().filter(|e| e.tags.node < 4).take(5).collect::<Vec<_>>()
+    );
+
+    // Both admin pulls refunded their budget slots; spend the second
+    // session so the serve loop exits.
+    {
+        let mut client = remote_session(&addr);
+        let out = sets(vec![vec![1, 5], vec![5, 9], vec![2], vec![]]);
+        let inb = sets(vec![vec![5], vec![1, 2], vec![9], vec![5, 9]]);
+        let mut rc = client.configure(out, inb).expect("budget-spending configure");
+        let mut v = vec![vec![1.0f32, 10.0], vec![20.0, 3.0], vec![7.0], vec![]];
+        rc.allreduce::<SumF32>(&mut v).expect("budget-spending allreduce");
+    }
+    serve.join().expect("serve thread");
 }
